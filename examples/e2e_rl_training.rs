@@ -1,0 +1,91 @@
+//! End-to-end validation driver (DESIGN.md "End-to-end validation"):
+//! trains a real transformer through the full three-layer stack —
+//! rust coordinator -> PJRT -> AOT-lowered JAX model -> Pallas attention —
+//! for a few hundred steps on the synthetic reasoning corpus, logging the
+//! loss curve, reward curve, and per-step update sparsity.
+//!
+//! Defaults run sparrow-s (~1.1M params) with 300 SFT + 60 RL steps in a
+//! few minutes on CPU; pass `--model sparrow-xl` (after
+//! `make artifacts MODELS=sparrow-xl`) for the ~116M-parameter version of
+//! the same pipeline. Results are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example e2e_rl_training -- --model sparrow-s --sft-steps 300 --rl-steps 60
+//! ```
+
+use sparrowrl::rt::{run_local, LocalRunConfig};
+use sparrowrl::trainer::Algorithm;
+use sparrowrl::util::cli::Args;
+use sparrowrl::util::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let model = args.str_or("model", "sparrow-s");
+    let mut cfg = LocalRunConfig::quick(&model);
+    cfg.sft_steps = args.parse_or("sft-steps", 300u64);
+    cfg.steps = args.parse_or("rl-steps", 60u64);
+    cfg.lr_sft = args.parse_or("lr-sft", 3e-3f32);
+    cfg.lr_rl = args.parse_or("lr-rl", 2e-5f32);
+    cfg.n_actors = args.parse_or("actors", 2usize);
+    cfg.max_new_tokens = args.parse_or("max-new", 8usize);
+    cfg.seed = args.parse_or("seed", 0u64);
+    cfg.algorithm = Algorithm::parse(&args.str_or("algorithm", "grpo")).unwrap();
+    cfg.verbose = true;
+
+    let spec = sparrowrl::config::model(&model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    println!(
+        "=== e2e RL training: {model} ({} params), {} SFT + {} RL steps, {} ===\n",
+        spec.total_params(),
+        cfg.sft_steps,
+        cfg.steps,
+        cfg.algorithm.name()
+    );
+    let report = run_local(&cfg)?;
+
+    println!("\n--- SFT loss curve (every 10th step) ---");
+    for (i, l) in report.sft_losses.iter().enumerate() {
+        if i % 10 == 0 || i + 1 == report.sft_losses.len() {
+            println!("sft {i:>4}: {l:.4}");
+        }
+    }
+    println!("\n--- RL phase ---");
+    println!("step, loss, mean_reward, rho_pct, payload");
+    for s in &report.steps {
+        println!(
+            "{:>4}, {:>8.4}, {:.3}, {:.4}, {}",
+            s.step,
+            s.loss,
+            s.mean_reward,
+            s.rho * 100.0,
+            fmt_bytes(s.payload_bytes)
+        );
+    }
+    let early: f32 = report
+        .steps
+        .iter()
+        .take((report.steps.len() / 4).max(1))
+        .map(|s| s.mean_reward)
+        .sum::<f32>()
+        / (report.steps.len() / 4).max(1) as f32;
+    println!(
+        "\nsummary: sft loss {:.3} -> {:.3}; reward {:.3} (first quarter) -> {:.3} (last quarter); \
+         mean rho {:.3}%; mean payload {} ({}x under dense); wall {:.1}s",
+        report.sft_losses.first().unwrap(),
+        report.sft_losses.last().unwrap(),
+        early,
+        report.mean_reward_last_quarter(),
+        report.mean_rho() * 100.0,
+        fmt_bytes(
+            report.steps.iter().map(|s| s.payload_bytes).sum::<u64>()
+                / report.steps.len().max(1) as u64
+        ),
+        spec.dense_bytes_bf16()
+            / (report.steps.iter().map(|s| s.payload_bytes).sum::<u64>()
+                / report.steps.len().max(1) as u64)
+                .max(1),
+        report.wall_s
+    );
+    Ok(())
+}

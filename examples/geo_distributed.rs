@@ -1,0 +1,84 @@
+//! Geo-distributed deployment study: the paper's §7.5 scenario as a
+//! simulated campaign — actors spread across 1-4 continents, all four
+//! systems, with a live Gantt of the winning configuration.
+//!
+//! ```bash
+//! cargo run --release --example geo_distributed [-- --model qwen3-8b --steps 7]
+//! ```
+
+use sparrowrl::config::{self, regions, GpuClass};
+use sparrowrl::data::Benchmark;
+use sparrowrl::sim::driver::{run, SimConfig};
+use sparrowrl::sim::{RegionSpec, System};
+use sparrowrl::util::cli::Args;
+use sparrowrl::util::{fmt_bytes, fmt_secs};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let model_name = args.str_or("model", "qwen3-8b");
+    let steps = args.parse_or("steps", 7u64);
+    let model = config::model(&model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
+
+    println!("=== SparrowRL geo-distributed study: {model_name}, {steps} steps ===\n");
+    let sites = [
+        ("1 region  (Canada)", vec![regions::CANADA]),
+        ("2 regions (+Japan)", vec![regions::CANADA, regions::JAPAN]),
+        ("3 regions (+Netherlands)", vec![regions::CANADA, regions::JAPAN, regions::NETHERLANDS]),
+        (
+            "4 regions (+Iceland)",
+            vec![regions::CANADA, regions::JAPAN, regions::NETHERLANDS, regions::ICELAND],
+        ),
+    ];
+    println!(
+        "{:<28} {:>14} {:>14} {:>14} {:>10}",
+        "deployment", "SparrowRL", "PrimeRL-Full", "Ideal-1DC", "Sp/Full"
+    );
+    for (label, regs) in &sites {
+        // 8 A100s spread round-robin across the regions.
+        let mut fleet: Vec<RegionSpec> =
+            regs.iter().map(|r| RegionSpec::new(*r, vec![])).collect();
+        let n_regions = fleet.len();
+        for i in 0..8 {
+            fleet[i % n_regions].gpus.push(GpuClass::A100);
+        }
+        let thr = |sys: System| {
+            let mut cfg =
+                SimConfig::paper_testbed(model.clone(), Benchmark::Gsm8k, sys, fleet.clone());
+            cfg.steps = steps;
+            run(&cfg).throughput()
+        };
+        let sp = thr(System::Sparrow);
+        let full = thr(System::PrimeRlFull);
+        let ideal = thr(System::IdealSingleDc);
+        println!(
+            "{:<28} {:>10.0} t/s {:>10.0} t/s {:>10.0} t/s {:>9.1}x",
+            label, sp, full, ideal,
+            sp / full
+        );
+    }
+
+    // Timeline of the 4-region SparrowRL run.
+    let mut fleet: Vec<RegionSpec> = [
+        regions::CANADA,
+        regions::JAPAN,
+        regions::NETHERLANDS,
+        regions::ICELAND,
+    ]
+    .iter()
+    .map(|r| RegionSpec::new(*r, vec![GpuClass::A100, GpuClass::A100]))
+    .collect();
+    fleet[0].gpus.push(GpuClass::A100);
+    let mut cfg =
+        SimConfig::paper_testbed(model.clone(), Benchmark::Gsm8k, System::Sparrow, fleet);
+    cfg.steps = 5;
+    let r = run(&cfg);
+    println!(
+        "\n4-region SparrowRL timeline ({} steps, total {}; delta payload {}/step):",
+        cfg.steps,
+        fmt_secs(r.total_time),
+        fmt_bytes(r.payload_bytes())
+    );
+    print!("{}", r.timeline.ascii_gantt(96));
+    Ok(())
+}

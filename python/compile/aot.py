@@ -1,0 +1,173 @@
+"""AOT pipeline: lower the L2/L1 JAX functions to HLO text artifacts.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. Lowering uses ``return_tuple=True``
+so the rust loader unwraps one output tuple.
+
+Artifacts per model (under ``artifacts/``):
+  {model}_policy_fwd.hlo.txt   bf16 params x7, tokens[Bg,T] -> logits
+  {model}_train_step.hlo.txt   f32 params/m/v x7, tokens[Bt,T], mask, adv,
+                               lr, t -> params'/m'/v' x7, loss
+  {model}_delta_diff.hlo.txt   bf16 old x7, new x7 -> mask[N] i8, nnz i32
+  manifest.txt                 shapes/hparams, key=value per line
+
+Usage: python -m compile.aot --out ../artifacts [--models a,b] [--force]
+"""
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .presets import PRESETS, TENSOR_ORDER, tensor_shapes
+
+DEFAULT_MODELS = ["sparrow-xs", "sparrow-s"]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def specs(preset, dtype):
+    return tuple(
+        jax.ShapeDtypeStruct(tensor_shapes(preset)[n], dtype) for n in TENSOR_ORDER
+    )
+
+
+def lower_policy_fwd(preset):
+    p_spec = specs(preset, jnp.bfloat16)
+    tok = jax.ShapeDtypeStruct((preset.b_gen, preset.max_seq), jnp.int32)
+
+    def fn(*args):
+        params = args[:7]
+        tokens = args[7]
+        return (M.policy_fwd(params, tokens, preset),)
+
+    return jax.jit(fn).lower(*p_spec, tok)
+
+
+def lower_train_step(preset):
+    p_spec = specs(preset, jnp.float32)
+    bt, t = preset.b_train, preset.max_seq
+    tok = jax.ShapeDtypeStruct((bt, t), jnp.int32)
+    msk = jax.ShapeDtypeStruct((bt, t), jnp.float32)
+    adv = jax.ShapeDtypeStruct((bt,), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    def fn(*args):
+        params, m, v = args[0:7], args[7:14], args[14:21]
+        tokens, mask, advs, lr, step_t = args[21:26]
+        new_p, new_m, new_v, loss = M.train_step(
+            params, m, v, tokens, mask, advs, lr, step_t, preset
+        )
+        return (*new_p, *new_m, *new_v, loss)
+
+    return jax.jit(fn).lower(
+        *p_spec, *p_spec, *p_spec, tok, msk, adv, scalar, scalar
+    )
+
+
+def lower_delta_diff(preset):
+    p_spec = specs(preset, jnp.bfloat16)
+
+    def fn(*args):
+        old, new = args[:7], args[7:14]
+        mask, nnz = M.delta_diff(old, new)
+        return (mask, nnz)
+
+    return jax.jit(fn).lower(*p_spec, *p_spec)
+
+
+def manifest_lines(preset):
+    shp = tensor_shapes(preset)
+    lines = [
+        f"model={preset.name}",
+        f"vocab={preset.vocab}",
+        f"d_model={preset.d_model}",
+        f"n_layers={preset.n_layers}",
+        f"n_heads={preset.n_heads}",
+        f"d_ff={preset.d_ff}",
+        f"max_seq={preset.max_seq}",
+        f"b_gen={preset.b_gen}",
+        f"b_train={preset.b_train}",
+        f"param_count={preset.param_count()}",
+    ]
+    for n in TENSOR_ORDER:
+        lines.append(f"shape.{n}={','.join(str(d) for d in shp[n])}")
+    return lines
+
+
+def inputs_fingerprint() -> str:
+    """Hash of the compile-path sources; drives incremental rebuilds."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _dirs, files in sorted(os.walk(here)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def build(out_dir: str, models, force: bool) -> int:
+    os.makedirs(out_dir, exist_ok=True)
+    stamp_path = os.path.join(out_dir, "STAMP")
+    fp = inputs_fingerprint() + ":" + ",".join(models)
+    if not force and os.path.exists(stamp_path):
+        with open(stamp_path) as f:
+            if f.read().strip() == fp:
+                print(f"artifacts up to date ({fp})")
+                return 0
+    manifest = [f"fingerprint={fp}"]
+    for name in models:
+        preset = PRESETS[name]
+        print(f"[{name}] lowering policy_fwd ...", flush=True)
+        jobs = [
+            ("policy_fwd", lower_policy_fwd),
+            ("train_step", lower_train_step),
+            ("delta_diff", lower_delta_diff),
+        ]
+        for kind, fn in jobs:
+            print(f"[{name}] lowering {kind} ...", flush=True)
+            text = to_hlo_text(fn(preset))
+            path = os.path.join(out_dir, f"{name}_{kind}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"[{name}] wrote {path} ({len(text) / 1e6:.2f} MB)")
+        manifest.extend(manifest_lines(preset))
+        manifest.append("")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    with open(stamp_path, "w") as f:
+        f.write(fp)
+    print(f"manifest + stamp written to {out_dir}")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(DEFAULT_MODELS))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    models = [m for m in args.models.split(",") if m]
+    for m in models:
+        if m not in PRESETS:
+            print(f"unknown model {m!r}; known: {sorted(PRESETS)}", file=sys.stderr)
+            return 2
+    return build(args.out, models, args.force)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

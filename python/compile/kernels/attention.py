@@ -1,0 +1,70 @@
+"""Pallas causal-attention kernel — the rollout-generation compute hot spot.
+
+Hardware adaptation (DESIGN.md §5): the CUDA flash-attention idiom (one
+threadblock per (batch, head), K/V tiles staged through shared memory) maps
+to TPU as one *grid point* per (batch, head) with the Q/K/V tiles resident
+in VMEM and the score matmuls shaped for the MXU. At the sequence lengths
+this repo serves (T <= 128, Dh <= 64) a whole (T, Dh) tile fits VMEM
+comfortably (3 inputs + scores + output: 4*T*Dh + T*T floats ~ 192 KiB at
+T=128, Dh=64, far under the ~16 MiB budget), so the kernel uses a
+single-tile layout with a stable softmax; BlockSpec carries the HBM->VMEM
+schedule that CUDA expresses with threadblocks/shared memory.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO that both pytest and the
+rust runtime execute. Real-TPU performance is *estimated* from the VMEM
+footprint and MXU-shape analysis in EXPERIMENTS.md §Perf.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref):
+    """One (batch, head) tile: scores -> causal mask -> softmax -> values."""
+    q = q_ref[0, 0]  # [T, Dh]
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    t, dh = q.shape
+    scale = 1.0 / (dh**0.5)
+    # MXU-shaped matmul: [T, Dh] x [Dh, T] -> [T, T].
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    # Causal mask from 2-D iotas (TPU requires >=2-D iota).
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    neg = jnp.finfo(jnp.float32).min
+    scores = jnp.where(rows >= cols, scores, neg)
+    # Numerically-stable softmax on the VPU lanes.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    w = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(w, v, preferred_element_type=jnp.float32)
+
+
+def causal_attention(q, k, v):
+    """Multi-head causal attention via Pallas.
+
+    q, k, v: [B, H, T, Dh] float32 -> [B, H, T, Dh] float32.
+
+    Grid: one program per (batch, head); BlockSpec stages that head's
+    (T, Dh) Q/K/V tiles into VMEM.
+    """
+    b, h, t, dh = q.shape
+    spec = pl.BlockSpec((1, 1, t, dh), lambda i, j: (i, j, 0, 0))
+    kernel = pl.pallas_call(
+        _attn_kernel,
+        grid=(b, h),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, t, dh), jnp.float32),
+        interpret=True,
+    )
+    return kernel(q, k, v)
+
+
+def vmem_footprint_bytes(t: int, dh: int) -> int:
+    """Estimated VMEM bytes per grid point (EXPERIMENTS.md §Perf)."""
+    tiles = 4 * t * dh  # q, k, v, o
+    scores = t * t * 2  # scores + weights buffers
+    return 4 * (tiles + scores)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest sweeps shapes/dtypes with
+hypothesis and asserts the Pallas (interpret-mode) kernels match these
+references to float tolerance (attention) or exactly (delta-diff).
+"""
+
+import jax.numpy as jnp
+
+
+def causal_attention_ref(q, k, v):
+    """Reference multi-head causal attention.
+
+    q, k, v: [B, H, T, Dh] float32. Returns [B, H, T, Dh].
+    """
+    *_, t, dh = q.shape
+    scale = 1.0 / (dh**0.5)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask[None, None, :, :], scores, -jnp.inf)
+    weights = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    weights = weights / weights.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", weights, v)
+
+
+def delta_mask_ref(old_bits, new_bits):
+    """Reference bitwise-change mask.
+
+    old_bits, new_bits: [N] uint16 (bf16 bit patterns). Returns [N] int8
+    with 1 where the stored pattern changed.
+    """
+    return (old_bits != new_bits).astype(jnp.int8)

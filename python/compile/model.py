@@ -1,0 +1,186 @@
+"""L2: the transformer policy and its RL train step, in JAX.
+
+Build-time only — this module is lowered once by ``aot.py`` into HLO text
+artifacts that the rust coordinator executes through PJRT; Python never
+runs on the request path.
+
+Parameters are a 7-tuple of fused tensors in ``presets.TENSOR_ORDER``
+(matching rust's ``ModelLayout::transformer`` exactly):
+
+    embed [V,D], final_norm [D], norms [L,2,D], qkv_proj [L,D,3D],
+    o_proj [L,D,D], gate_up_proj [L,D,2F], down_proj [L,F,D]
+
+Three entry points get lowered:
+
+* ``policy_fwd``  — bf16 params + tokens -> logits. Rollout actors call
+  this in the generation loop; attention runs through the Pallas kernel.
+* ``train_step``  — f32 master params + Adam state + (tokens, mask, adv)
+  -> updated params/state + loss. Algorithm-agnostic: GRPO/RLOO/OPO differ
+  only in how the coordinator computes ``adv`` (rust, trainer/algorithms).
+  With ``adv = 1`` and a full mask this is supervised NLL — the same
+  artifact pretrains and RL-finetunes.
+* ``delta_diff``  — two bf16 snapshots -> change mask (Pallas kernel).
+
+The sparsity mechanism (paper §3) is reproduced, not faked: the Trainer
+keeps f32 master weights, actors hold bf16 policies, and with post-training
+learning rates (~1e-6) most Adam updates are below the bf16 ulp of their
+element — only ~1% of stored values change per step.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import causal_attention
+from .kernels.delta_diff import delta_mask_padded
+from .kernels.ref import causal_attention_ref
+from .presets import PRESETS, TENSOR_ORDER, ModelPreset, tensor_shapes
+
+EPS_NORM = 1e-6
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def init_params(preset: ModelPreset, seed: int = 0):
+    """Gaussian init (sigma=0.02 except norms at 1.0), f32 master weights."""
+    shapes = tensor_shapes(preset)
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name in TENSOR_ORDER:
+        key, sub = jax.random.split(key)
+        if name in ("final_norm", "norms"):
+            out.append(jnp.ones(shapes[name], jnp.float32))
+        else:
+            out.append(jax.random.normal(sub, shapes[name], jnp.float32) * 0.02)
+    return tuple(out)
+
+
+def to_policy(params):
+    """Quantize master weights to the bf16 policy actors hold."""
+    return tuple(p.astype(jnp.bfloat16) for p in params)
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+def _rmsnorm(x, g):
+    return x * g * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS_NORM)
+
+
+def forward(params, tokens, preset: ModelPreset, use_pallas: bool):
+    """Transformer forward: tokens [B, T] int32 -> logits [B, T, V] f32.
+
+    ``use_pallas`` selects the Pallas attention kernel (inference path) or
+    the jnp reference (training path, which must be differentiable).
+    """
+    embed, final_norm, norms, qkv_proj, o_proj, gate_up_proj, down_proj = (
+        p.astype(jnp.float32) for p in params
+    )
+    b, t = tokens.shape
+    h_heads, dh = preset.n_heads, preset.head_dim
+    x = embed[tokens]  # [B, T, D]
+    attn_fn = causal_attention if use_pallas else causal_attention_ref
+    for l in range(preset.n_layers):
+        # Attention block (fused QKV, paper Fig 6 layout).
+        h = _rmsnorm(x, norms[l, 0])
+        qkv = h @ qkv_proj[l]  # [B, T, 3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(z):
+            return z.reshape(b, t, h_heads, dh).transpose(0, 2, 1, 3)
+
+        attn = attn_fn(heads(q), heads(k), heads(v))  # [B, H, T, Dh]
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, t, -1)
+        x = x + attn @ o_proj[l]
+        # SwiGLU MLP (fused Gate|Up).
+        h = _rmsnorm(x, norms[l, 1])
+        gu = h @ gate_up_proj[l]
+        g, u = jnp.split(gu, 2, axis=-1)
+        x = x + (jax.nn.silu(g) * u) @ down_proj[l]
+    x = _rmsnorm(x, final_norm)
+    return x @ embed.T  # weight-tied head, [B, T, V]
+
+
+def policy_fwd(params_bf16, tokens, preset: ModelPreset):
+    """Inference entry point (lowered with Pallas attention)."""
+    return forward(params_bf16, tokens, preset, use_pallas=True)
+
+
+# --------------------------------------------------------------------------
+# Training step
+# --------------------------------------------------------------------------
+
+def _pg_loss(params, tokens, gen_mask, adv, preset: ModelPreset):
+    """Token-level policy-gradient surrogate.
+
+    tokens   [B, T] int32   — prompt + generated (padded)
+    gen_mask [B, T] f32     — 1 on positions whose *prediction* is scored
+                              (i.e. mask[t] scores logits at t-1)
+    adv      [B]    f32     — per-sequence advantage (1.0 => supervised NLL)
+    """
+    logits = forward(params, tokens, preset, use_pallas=False)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    # Position t's logits predict token t+1.
+    pred = logp[:, :-1, :]
+    tgt = tokens[:, 1:]
+    tgt_logp = jnp.take_along_axis(pred, tgt[:, :, None], axis=-1)[..., 0]
+    w = gen_mask[:, 1:] * adv[:, None]
+    denom = jnp.maximum(gen_mask[:, 1:].sum(), 1.0)
+    return -(w * tgt_logp).sum() / denom
+
+
+def train_step(params, m_state, v_state, tokens, gen_mask, adv, lr, step_t,
+               preset: ModelPreset):
+    """One Adam update on the policy-gradient surrogate.
+
+    Returns (new_params, new_m, new_v, loss). ``step_t`` is the 1-based
+    Adam timestep (f32) for bias correction.
+    """
+    loss, grads = jax.value_and_grad(
+        lambda p: _pg_loss(p, tokens, gen_mask, adv, preset)
+    )(params)
+    b1t = 1.0 - ADAM_B1**step_t
+    b2t = 1.0 - ADAM_B2**step_t
+    new_params, new_m, new_v = [], [], []
+    for p, m, v, g in zip(params, m_state, v_state, grads):
+        m2 = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+        mhat = m2 / b1t
+        vhat = v2 / b2t
+        new_params.append(p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+        new_m.append(m2)
+        new_v.append(v2)
+    return tuple(new_params), tuple(new_m), tuple(new_v), loss
+
+
+# --------------------------------------------------------------------------
+# Delta diff (Pallas extraction kernel over the full fused layout)
+# --------------------------------------------------------------------------
+
+def delta_diff(old_policy, new_policy):
+    """Concatenated bitwise change mask over all fused tensors.
+
+    old_policy/new_policy: bf16 tuples in TENSOR_ORDER. Returns
+    (mask [N] int8, nnz i32) where N = total parameter count.
+    """
+    old_bits = jnp.concatenate(
+        [jax.lax.bitcast_convert_type(p, jnp.uint16).reshape(-1) for p in old_policy]
+    )
+    new_bits = jnp.concatenate(
+        [jax.lax.bitcast_convert_type(p, jnp.uint16).reshape(-1) for p in new_policy]
+    )
+    mask = delta_mask_padded(old_bits, new_bits)
+    return mask, mask.astype(jnp.int32).sum()
+
+
+# --------------------------------------------------------------------------
+# Convenience: preset lookup
+# --------------------------------------------------------------------------
+
+def preset(name: str) -> ModelPreset:
+    return PRESETS[name]

@@ -1,0 +1,65 @@
+"""Model presets shared between the L2 JAX model and the L3 rust runtime.
+
+These MUST stay in lock-step with ``rust/src/config/presets.rs`` — the rust
+side validates artifact shapes against the same table (via the emitted
+manifest) before serving them.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelPreset:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int
+    # AOT batch shapes (fixed at lowering time; the coordinator pads).
+    b_gen: int
+    b_train: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        v, d, l, f = self.vocab, self.d_model, self.n_layers, self.d_ff
+        return v * d + d + l * (2 * d) + l * d * 3 * d + l * d * d + l * d * 2 * f + l * f * d
+
+
+PRESETS = {
+    "sparrow-xs": ModelPreset("sparrow-xs", 256, 64, 2, 4, 256, 64, 8, 32),
+    "sparrow-s": ModelPreset("sparrow-s", 512, 128, 4, 8, 512, 64, 8, 32),
+    "sparrow-m": ModelPreset("sparrow-m", 1024, 256, 6, 8, 1024, 96, 8, 16),
+    "sparrow-l": ModelPreset("sparrow-l", 2048, 512, 8, 16, 2048, 128, 4, 8),
+    "sparrow-xl": ModelPreset("sparrow-xl", 4096, 768, 12, 12, 3072, 128, 4, 8),
+}
+
+# Fused tensor order — identical to rust ModelLayout::transformer.
+TENSOR_ORDER = (
+    "embed",
+    "final_norm",
+    "norms",
+    "qkv_proj",
+    "o_proj",
+    "gate_up_proj",
+    "down_proj",
+)
+
+
+def tensor_shapes(p: ModelPreset) -> dict:
+    """Fused tensor shapes, matching rust ModelLayout::transformer."""
+    v, d, l, f = p.vocab, p.d_model, p.n_layers, p.d_ff
+    return {
+        "embed": (v, d),
+        "final_norm": (d,),
+        "norms": (l, 2, d),
+        "qkv_proj": (l, d, 3 * d),
+        "o_proj": (l, d, d),
+        "gate_up_proj": (l, d, 2 * f),
+        "down_proj": (l, f, d),
+    }

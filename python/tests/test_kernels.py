@@ -1,0 +1,122 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes; attention must match the reference to float
+tolerance, delta-diff must match the bitwise oracle exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import causal_attention, vmem_footprint_bytes
+from compile.kernels.delta_diff import BLOCK, delta_mask, delta_mask_padded, pad_to_block
+from compile.kernels.ref import causal_attention_ref, delta_mask_ref
+
+
+def rand_qkv(rng, b, h, t, dh):
+    shape = (b, h, t, dh)
+    return (
+        jnp.asarray(rng.standard_normal(shape), jnp.float32),
+        jnp.asarray(rng.standard_normal(shape), jnp.float32),
+        jnp.asarray(rng.standard_normal(shape), jnp.float32),
+    )
+
+
+class TestAttention:
+    def test_matches_reference_basic(self):
+        rng = np.random.default_rng(0)
+        q, k, v = rand_qkv(rng, 2, 4, 16, 8)
+        np.testing.assert_allclose(
+            causal_attention(q, k, v), causal_attention_ref(q, k, v),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        h=st.integers(1, 4),
+        t=st.sampled_from([1, 2, 5, 16, 33, 64]),
+        dh=st.sampled_from([4, 8, 16, 32]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_reference_swept(self, b, h, t, dh, seed):
+        rng = np.random.default_rng(seed)
+        q, k, v = rand_qkv(rng, b, h, t, dh)
+        np.testing.assert_allclose(
+            causal_attention(q, k, v), causal_attention_ref(q, k, v),
+            rtol=2e-5, atol=2e-5,
+        )
+
+    def test_causality(self):
+        """Changing future K/V must not affect earlier outputs."""
+        rng = np.random.default_rng(1)
+        q, k, v = rand_qkv(rng, 1, 2, 8, 4)
+        out = causal_attention(q, k, v)
+        k2 = k.at[:, :, -1, :].set(99.0)
+        v2 = v.at[:, :, -1, :].set(-99.0)
+        out2 = causal_attention(q, k2, v2)
+        np.testing.assert_allclose(out[:, :, :-1], out2[:, :, :-1], rtol=1e-6)
+        assert not np.allclose(out[:, :, -1], out2[:, :, -1])
+
+    def test_softmax_rows_are_convex_combinations(self):
+        """Each output must lie within the [min, max] envelope of V."""
+        rng = np.random.default_rng(2)
+        q, k, v = rand_qkv(rng, 1, 1, 12, 4)
+        out = np.asarray(causal_attention(q, k, v))
+        vnp = np.asarray(v)
+        for t in range(12):
+            lo = vnp[0, 0, : t + 1].min(axis=0) - 1e-5
+            hi = vnp[0, 0, : t + 1].max(axis=0) + 1e-5
+            assert (out[0, 0, t] >= lo).all() and (out[0, 0, t] <= hi).all()
+
+    def test_first_position_is_v0(self):
+        rng = np.random.default_rng(3)
+        q, k, v = rand_qkv(rng, 2, 2, 6, 8)
+        out = causal_attention(q, k, v)
+        np.testing.assert_allclose(out[:, :, 0], v[:, :, 0], rtol=1e-6)
+
+    def test_vmem_footprint_under_budget(self):
+        # Largest served config: T=128, Dh=64.
+        assert vmem_footprint_bytes(128, 64) < 16 * 1024 * 1024
+
+
+class TestDeltaDiff:
+    def test_matches_reference_exactly(self):
+        rng = np.random.default_rng(0)
+        old = jnp.asarray(rng.integers(0, 2**16, BLOCK, dtype=np.uint16))
+        new = old.at[::7].set(0)
+        got = delta_mask(old, new)
+        want = delta_mask_ref(old, new)
+        np.testing.assert_array_equal(got, want)
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(1, 4 * BLOCK), seed=st.integers(0, 2**16))
+    def test_padded_any_length(self, n, seed):
+        rng = np.random.default_rng(seed)
+        old = jnp.asarray(rng.integers(0, 2**16, n, dtype=np.uint16))
+        flips = rng.integers(0, 2, n).astype(np.uint16)
+        new = old ^ jnp.asarray(flips)
+        got = delta_mask_padded(old, new)
+        np.testing.assert_array_equal(got, delta_mask_ref(old, new))
+        assert got.shape == (n,)
+
+    def test_identical_inputs_give_zero_mask(self):
+        x = jnp.arange(BLOCK, dtype=jnp.uint16)
+        assert int(delta_mask(x, x).sum()) == 0
+
+    def test_pad_to_block(self):
+        x = jnp.ones((10,), jnp.uint16)
+        y = pad_to_block(x, 16)
+        assert y.shape == (16,)
+        np.testing.assert_array_equal(y[:10], x)
+        assert int(y[10:].sum()) == 0
+        z = pad_to_block(jnp.ones((16,), jnp.uint16), 16)
+        assert z.shape == (16,)
+
+    def test_nan_payload_changes_detected(self):
+        """bf16 NaN bit-pattern changes are storage changes."""
+        old = pad_to_block(jnp.asarray([0x7FC0], jnp.uint16))  # quiet NaN
+        new = pad_to_block(jnp.asarray([0x7FC1], jnp.uint16))  # other NaN
+        assert int(delta_mask(old, new)[0]) == 1

@@ -1,0 +1,85 @@
+//! Hot-path benches: delta extraction scan, codec encode/decode, and
+//! scatter-assign apply — the per-step CPU costs of §5.1/§5.2.
+//! Targets (DESIGN.md §8): scan >= 1 GB/s/core, apply >= 2 GB/s.
+
+use sparrowrl::delta::{
+    apply_delta, decode_delta, encode_delta, extract_delta, naive, ApplyMode, ModelLayout,
+    ParamSet,
+};
+use sparrowrl::util::bench::Bencher;
+use sparrowrl::util::{prop, Bf16, Rng};
+
+fn perturbed(p: &ParamSet, rho: f64, rng: &mut Rng) -> ParamSet {
+    let mut q = p.clone();
+    for t in &mut q.tensors {
+        let n = t.len();
+        let k = ((n as f64 * rho) as usize).max(1);
+        for i in prop::sparse_indices(rng, n as u64, k.min(n)) {
+            let v = &mut t[i as usize];
+            *v = Bf16::from_bits(v.to_bits() ^ 0x0040);
+        }
+    }
+    q
+}
+
+fn main() {
+    let mut b = Bencher::new(2, 9);
+    let layout = ModelLayout::transformer("bench", 8192, 512, 8, 2048);
+    let mut rng = Rng::new(42);
+    println!(
+        "model: {} params ({} dense bf16)",
+        layout.total_params(),
+        sparrowrl::util::fmt_bytes(layout.dense_bytes_bf16())
+    );
+    let old = ParamSet::random(&layout, 0.02, &mut rng);
+    let new = perturbed(&old, 0.01, &mut rng);
+    let dense = layout.dense_bytes_bf16();
+
+    // Extraction scan (bit-compare + compact), the paper's ~5 s / 16 GB.
+    b.bench_bytes("extract_delta scan (rho=1%)", 2 * dense, || {
+        std::hint::black_box(extract_delta(&layout, &old, &new, 0, 1, ApplyMode::Assign));
+    });
+
+    b.bench_bytes("extract_delta_parallel (8 threads)", 2 * dense, || {
+        std::hint::black_box(sparrowrl::delta::extract_delta_parallel(
+            &layout, &old, &new, 0, 1, ApplyMode::Assign, 8,
+        ));
+    });
+
+    let delta = extract_delta(&layout, &old, &new, 0, 1, ApplyMode::Assign);
+    let bytes = encode_delta(&delta);
+    println!(
+        "delta: nnz={} payload={} ({}x under dense)",
+        delta.nnz(),
+        sparrowrl::util::fmt_bytes(bytes.len() as u64),
+        dense / bytes.len() as u64
+    );
+
+    b.bench_bytes("encode_delta (varint+hash)", bytes.len() as u64, || {
+        std::hint::black_box(encode_delta(&delta));
+    });
+    b.bench_bytes("decode_delta (verify+parse)", bytes.len() as u64, || {
+        std::hint::black_box(decode_delta(&bytes).unwrap());
+    });
+    b.bench_bytes("encode_naive (int32 baseline)", bytes.len() as u64, || {
+        std::hint::black_box(naive::encode_naive(&delta, &layout));
+    });
+
+    // Scatter-assign apply on actor-resident parameters.
+    let mut params = old.clone();
+    b.bench_bytes("apply_delta scatter-assign", delta.nnz() * 2, || {
+        apply_delta(&mut params, &delta);
+    });
+
+    // Density sweep: how codec rates move with rho (Figure 10's regime).
+    for rho in [0.001, 0.01, 0.03, 0.1] {
+        let new = perturbed(&old, rho, &mut rng);
+        let d = extract_delta(&layout, &old, &new, 0, 1, ApplyMode::Assign);
+        let enc = encode_delta(&d);
+        println!(
+            "rho={rho:<6} nnz={:<9} bytes/nnz={:.2}",
+            d.nnz(),
+            enc.len() as f64 / d.nnz() as f64
+        );
+    }
+}

@@ -1,0 +1,36 @@
+//! End-to-end benches: the discrete-event simulator itself (it must sweep
+//! Fig 8/12/13 campaigns in seconds) and one full paper-testbed run per
+//! system for the record.
+
+use sparrowrl::config::{self, regions, GpuClass};
+use sparrowrl::data::Benchmark;
+use sparrowrl::sim::driver::{run, SimConfig};
+use sparrowrl::sim::{RegionSpec, System};
+use sparrowrl::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new(2, 9);
+    let model = config::model("qwen3-8b").unwrap();
+    for sys in System::all() {
+        let fleet = vec![RegionSpec::new(regions::CANADA, vec![GpuClass::A100; 8])];
+        let mut cfg = SimConfig::paper_testbed(model.clone(), Benchmark::Gsm8k, sys, fleet);
+        cfg.steps = 7;
+        b.bench(&format!("sim 7-step run [{}]", sys.name()), || {
+            std::hint::black_box(run(&cfg));
+        });
+    }
+    // A full Figure-8-style campaign: 3 benchmarks x 3 models x 4 systems.
+    b.bench("fig8 campaign (36 runs)", || {
+        for bench in Benchmark::all() {
+            for m in config::paper_models() {
+                for sys in System::all() {
+                    let model = config::model(m).unwrap();
+                    let n = ((model.total_params() as f64 / 1.02e9).round() as usize).clamp(4, 16);
+                    let fleet = vec![RegionSpec::new(regions::CANADA, vec![GpuClass::A100; n])];
+                    let cfg = SimConfig::paper_testbed(model, bench, sys, fleet);
+                    std::hint::black_box(run(&cfg));
+                }
+            }
+        }
+    });
+}

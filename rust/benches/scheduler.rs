@@ -1,0 +1,33 @@
+//! Coordinator-logic benches: Algorithm-1 allocation and the Job Ledger's
+//! issue/submit/expire cycle at fleet scale.
+
+use sparrowrl::ledger::{JobLedger, LeasePolicy};
+use sparrowrl::scheduler::{Scheduler, SchedulerConfig, VersionState};
+use sparrowrl::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new(2, 11);
+
+    for n_actors in [8usize, 64, 512] {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        for i in 0..n_actors as u32 {
+            s.register(i, 1000.0 + i as f64);
+            s.observe_version(i, VersionState { active: 1, staged: None });
+        }
+        b.bench(&format!("allocate B=4096 across {n_actors} actors"), || {
+            std::hint::black_box(s.allocate(1, 4096));
+        });
+    }
+
+    let mut b2 = Bencher::new(2, 11);
+    b2.bench("ledger cycle: 4096 issue+submit+expire", || {
+        let mut l = JobLedger::new(LeasePolicy::default());
+        l.post(0..4096u64);
+        let h = [0u8; 32];
+        let got = l.issue(1, 1, h, 0.0, 4096);
+        for p in got {
+            l.submit(1, p, 1, h, 1.0).unwrap();
+        }
+        std::hint::black_box(l.expire(100.0));
+    });
+}

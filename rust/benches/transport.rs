@@ -1,0 +1,56 @@
+//! Transport benches: segmentation, striping, reassembly throughput, and
+//! relay forwarding — §5.2's per-checkpoint CPU overheads.
+
+use sparrowrl::transport::relay::RelayNode;
+use sparrowrl::transport::{split_into_segments, stripe_round_robin, Reassembler, Segment};
+use sparrowrl::util::bench::Bencher;
+use sparrowrl::util::Rng;
+
+fn main() {
+    let mut b = Bencher::new(2, 9);
+    // A ~64 MB pseudo-checkpoint (sparrow-xl scale delta).
+    let mut rng = Rng::new(1);
+    let bytes: Vec<u8> = (0..64 << 20).map(|_| rng.next_u64() as u8).collect();
+    let n = bytes.len() as u64;
+
+    b.bench_bytes("split_into_segments (1 MiB)", n, || {
+        std::hint::black_box(split_into_segments(1, &bytes, 1 << 20));
+    });
+
+    let segs = split_into_segments(1, &bytes, 1 << 20);
+    b.bench_bytes("stripe_round_robin (4 streams)", n, || {
+        std::hint::black_box(stripe_round_robin(segs.clone(), 4));
+    });
+
+    b.bench_bytes("segment wire framing", n, || {
+        let mut total = 0usize;
+        for s in &segs {
+            total += s.to_wire().len();
+        }
+        std::hint::black_box(total);
+    });
+
+    let wires: Vec<Vec<u8>> = segs.iter().map(|s| s.to_wire()).collect();
+    b.bench_bytes("segment parse + checksum", n, || {
+        for w in &wires {
+            std::hint::black_box(Segment::from_wire(w).unwrap());
+        }
+    });
+
+    b.bench_bytes("reassembly (in order)", n, || {
+        let mut r = Reassembler::new(1);
+        for s in &segs {
+            r.accept(s.clone()).unwrap();
+        }
+        std::hint::black_box(r.assemble().unwrap());
+    });
+
+    b.bench_bytes("relay forward to 3 peers", n, || {
+        let mut relay = RelayNode::new(1);
+        let mut peers = vec![Vec::new(), Vec::new(), Vec::new()];
+        for s in &segs {
+            relay.on_segment(s.clone(), &mut peers).unwrap();
+        }
+        std::hint::black_box(peers);
+    });
+}

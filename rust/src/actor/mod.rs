@@ -1,0 +1,290 @@
+//! Rollout Actor: staged delta activation over actor-resident parameters
+//! (paper §5.2 "Staged activation") plus the rollout generation loop
+//! (`rollout.rs`, PJRT-backed).
+//!
+//! Invariants enforced here:
+//! * rollouts are never served from a partially applied policy — deltas
+//!   stage in a side buffer and apply only at a safe point on Commit;
+//! * a delta applies only if its `base_version` equals the active version
+//!   (out-of-order / replayed deltas are rejected);
+//! * the active-version tag advances only after the scatter completes.
+
+pub mod rollout;
+
+use crate::delta::{apply_delta, DeltaCheckpoint, ModelLayout, ParamSet};
+use crate::transport::{Reassembler, Segment};
+use std::collections::BTreeMap;
+
+/// Outcome of a commit attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommitResult {
+    /// Applied; active version advanced.
+    Applied,
+    /// No fully staged delta for that version yet.
+    NotStaged,
+    /// Staged delta's base does not match the active version.
+    BaseMismatch { active: u64, base: u64 },
+    /// Decode/integrity failure (corrupt staging).
+    Corrupt,
+}
+
+/// The actor's policy state machine.
+pub struct PolicyState {
+    layout: ModelLayout,
+    params: ParamSet,
+    active_version: u64,
+    /// In-flight reassembly buffers, by version.
+    staging: BTreeMap<u64, Reassembler>,
+    /// Fully staged, hash-verified checkpoints awaiting Commit.
+    staged: BTreeMap<u64, DeltaCheckpoint>,
+    /// True while a generation batch is running (no safe point).
+    generating: bool,
+    applied: u64,
+}
+
+impl PolicyState {
+    pub fn new(layout: ModelLayout, params: ParamSet, version: u64) -> PolicyState {
+        PolicyState {
+            layout,
+            params,
+            active_version: version,
+            staging: BTreeMap::new(),
+            staged: BTreeMap::new(),
+            generating: false,
+            applied: 0,
+        }
+    }
+
+    pub fn active_version(&self) -> u64 {
+        self.active_version
+    }
+
+    pub fn params(&self) -> &ParamSet {
+        &self.params
+    }
+
+    pub fn highest_staged(&self) -> Option<u64> {
+        self.staged.keys().next_back().copied()
+    }
+
+    pub fn is_staged(&self, version: u64) -> bool {
+        self.staged.contains_key(&version)
+    }
+
+    pub fn set_generating(&mut self, generating: bool) {
+        self.generating = generating;
+    }
+
+    /// Ingest one transfer segment; reassembles and hash-verifies in the
+    /// background of generation. Returns true when `seg`'s version became
+    /// fully staged by this call.
+    pub fn on_segment(&mut self, seg: Segment) -> Result<bool, String> {
+        let v = seg.version;
+        if v <= self.active_version || self.staged.contains_key(&v) {
+            return Ok(false); // stale or already staged; drop quietly
+        }
+        let r = self.staging.entry(v).or_insert_with(|| Reassembler::new(v));
+        r.accept(seg).map_err(|e| format!("{e:?}"))?;
+        if r.is_complete() {
+            let r = self.staging.remove(&v).unwrap();
+            match r.into_checkpoint().unwrap() {
+                Ok(ckpt) => {
+                    self.staged.insert(v, ckpt);
+                    return Ok(true);
+                }
+                Err(e) => return Err(format!("staging hash verify failed: {e}")),
+            }
+        }
+        Ok(false)
+    }
+
+    /// Stage a checkpoint delivered whole (relay handoff / tests).
+    pub fn stage_checkpoint(&mut self, ckpt: DeltaCheckpoint) {
+        if ckpt.version > self.active_version {
+            self.staged.insert(ckpt.version, ckpt);
+        }
+    }
+
+    /// Commit `version`: apply the staged delta at a safe point. Refuses
+    /// mid-generation (caller retries at batch end) — callers treat a
+    /// `false` from `safe_point` as "wait".
+    pub fn commit(&mut self, version: u64) -> CommitResult {
+        assert!(!self.generating, "commit must happen at a safe point");
+        let Some(ckpt) = self.staged.get(&version) else {
+            return CommitResult::NotStaged;
+        };
+        if ckpt.base_version != self.active_version {
+            return CommitResult::BaseMismatch {
+                active: self.active_version,
+                base: ckpt.base_version,
+            };
+        }
+        let delta = match ckpt.open() {
+            Ok(d) => d,
+            Err(_) => return CommitResult::Corrupt,
+        };
+        if delta.validate(&self.layout).is_err() {
+            return CommitResult::Corrupt;
+        }
+        apply_delta(&mut self.params, &delta);
+        // Advance the tag only after the scatter completed (§5.2).
+        self.active_version = version;
+        self.applied += 1;
+        self.staged.remove(&version);
+        // Garbage-collect staging state that can never apply now.
+        self.staging.retain(|&v, _| v > version);
+        self.staged.retain(|&v, _| v > version);
+        CommitResult::Applied
+    }
+
+    /// Catch-up: apply every staged version that chains from the active
+    /// one (laggards "catch up asynchronously without blocking others").
+    pub fn commit_chain(&mut self) -> u64 {
+        let mut applied = 0;
+        while let Some((&v, _)) = self.staged.iter().next() {
+            if self.commit(v) == CommitResult::Applied {
+                applied += 1;
+            } else {
+                break;
+            }
+        }
+        applied
+    }
+
+    pub fn applied_count(&self) -> u64 {
+        self.applied
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::{extract_delta, ApplyMode};
+    use crate::transport::split_into_segments;
+    use crate::util::{Bf16, Rng};
+
+    fn setup() -> (ModelLayout, ParamSet) {
+        let l = ModelLayout::transformer("t", 64, 16, 2, 32);
+        let mut rng = Rng::new(1);
+        let p = ParamSet::random(&l, 0.02, &mut rng);
+        (l, p)
+    }
+
+    fn perturbed(p: &ParamSet, seed: u64) -> ParamSet {
+        let mut rng = Rng::new(seed);
+        let mut q = p.clone();
+        for t in &mut q.tensors {
+            for _ in 0..4 {
+                let i = rng.range(0, t.len());
+                t[i] = Bf16::from_bits(t[i].to_bits() ^ 0x0008);
+            }
+        }
+        q
+    }
+
+    fn ckpt(l: &ModelLayout, from: &ParamSet, to: &ParamSet, base: u64, v: u64) -> DeltaCheckpoint {
+        DeltaCheckpoint::seal(&extract_delta(l, from, to, base, v, ApplyMode::Assign))
+    }
+
+    #[test]
+    fn segment_staging_then_commit_reproduces_snapshot() {
+        let (l, p0) = setup();
+        let p1 = perturbed(&p0, 2);
+        let c = ckpt(&l, &p0, &p1, 0, 1);
+        let mut st = PolicyState::new(l, p0, 0);
+        let segs = split_into_segments(1, &c.bytes, 64);
+        let mut became_staged = false;
+        for s in segs {
+            became_staged |= st.on_segment(s).unwrap();
+        }
+        assert!(became_staged);
+        assert!(st.is_staged(1));
+        assert_eq!(st.active_version(), 0, "staging must not activate");
+        assert_eq!(st.commit(1), CommitResult::Applied);
+        assert_eq!(st.active_version(), 1);
+        assert_eq!(st.params(), &p1, "bit-exact after commit");
+    }
+
+    #[test]
+    fn commit_without_staging_is_refused() {
+        let (l, p0) = setup();
+        let mut st = PolicyState::new(l, p0, 0);
+        assert_eq!(st.commit(1), CommitResult::NotStaged);
+    }
+
+    #[test]
+    fn base_version_mismatch_rejected() {
+        let (l, p0) = setup();
+        let p1 = perturbed(&p0, 3);
+        let p2 = perturbed(&p1, 4);
+        // Delta 2 has base 1, but actor is still on 0.
+        let c2 = ckpt(&l, &p1, &p2, 1, 2);
+        let mut st = PolicyState::new(l, p0, 0);
+        st.stage_checkpoint(c2);
+        assert_eq!(
+            st.commit(2),
+            CommitResult::BaseMismatch { active: 0, base: 1 }
+        );
+        assert_eq!(st.active_version(), 0);
+    }
+
+    #[test]
+    fn laggard_catches_up_through_chained_commits() {
+        let (l, p0) = setup();
+        let p1 = perturbed(&p0, 5);
+        let p2 = perturbed(&p1, 6);
+        let c1 = ckpt(&l, &p0, &p1, 0, 1);
+        let c2 = ckpt(&l, &p1, &p2, 1, 2);
+        let mut st = PolicyState::new(l, p0.clone(), 0);
+        st.stage_checkpoint(c2);
+        st.stage_checkpoint(c1);
+        assert_eq!(st.commit_chain(), 2);
+        assert_eq!(st.active_version(), 2);
+        assert_eq!(st.params(), &p2);
+    }
+
+    #[test]
+    fn stale_segments_dropped_quietly() {
+        let (l, p0) = setup();
+        let p1 = perturbed(&p0, 7);
+        let c1 = ckpt(&l, &p0, &p1, 0, 1);
+        let mut st = PolicyState::new(l, p1.clone(), 1);
+        for s in split_into_segments(1, &c1.bytes, 64) {
+            assert_eq!(st.on_segment(s).unwrap(), false);
+        }
+        assert!(!st.is_staged(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "safe point")]
+    fn commit_mid_generation_panics() {
+        let (l, p0) = setup();
+        let p1 = perturbed(&p0, 8);
+        let c1 = ckpt(&l, &p0, &p1, 0, 1);
+        let mut st = PolicyState::new(l, p0, 0);
+        st.stage_checkpoint(c1);
+        st.set_generating(true);
+        st.commit(1);
+    }
+
+    #[test]
+    fn corrupt_staging_detected_at_segment_level() {
+        let (l, p0) = setup();
+        let p1 = perturbed(&p0, 9);
+        let c1 = ckpt(&l, &p0, &p1, 0, 1);
+        let mut st = PolicyState::new(l, p0, 0);
+        let mut segs = split_into_segments(1, &c1.bytes, 64);
+        // Corrupt one payload byte; reassembly completes but the sha check
+        // in into_checkpoint must fail -> error surfaces on last segment.
+        let n = segs.len();
+        segs[n / 2].payload[0] ^= 0xFF;
+        let mut failed = false;
+        for s in segs {
+            if st.on_segment(s).is_err() {
+                failed = true;
+            }
+        }
+        assert!(failed);
+        assert!(!st.is_staged(1));
+    }
+}

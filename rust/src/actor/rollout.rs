@@ -1,0 +1,162 @@
+//! Rollout generation: autoregressive sampling through the AOT policy
+//! artifact (the vLLM stand-in — PJRT executes the Pallas-attention
+//! forward; rust does sampling, stopping, and batching).
+
+use crate::data::{EOS, PAD};
+use crate::delta::ParamSet;
+use crate::runtime::Engines;
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Sampling configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SampleCfg {
+    /// 0.0 = greedy; otherwise softmax temperature.
+    pub temperature: f32,
+    pub max_new_tokens: usize,
+}
+
+impl Default for SampleCfg {
+    fn default() -> Self {
+        SampleCfg { temperature: 0.7, max_new_tokens: 16 }
+    }
+}
+
+/// Output of one generation call for one prompt row.
+#[derive(Clone, Debug)]
+pub struct Generation {
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+}
+
+/// Generate completions for up to `b_gen` prompts in one fixed-shape batch.
+///
+/// Prompts longer than `max_seq - 1` are truncated; generation stops per
+/// row at EOS or when the row fills. Rows beyond `prompts.len()` are
+/// padding and ignored.
+pub fn generate_batch(
+    eng: &Engines,
+    policy: &ParamSet,
+    prompts: &[Vec<i32>],
+    cfg: SampleCfg,
+    rng: &mut Rng,
+) -> Result<Vec<Generation>> {
+    let b = eng.manifest.b_gen;
+    let t = eng.manifest.max_seq;
+    let v = eng.manifest.vocab;
+    assert!(prompts.len() <= b, "{} prompts > b_gen {b}", prompts.len());
+    let mut tokens = vec![PAD; b * t];
+    let mut lens = vec![0usize; b];
+    for (r, p) in prompts.iter().enumerate() {
+        let l = p.len().min(t - 1);
+        tokens[r * t..r * t + l].copy_from_slice(&p[..l]);
+        lens[r] = l;
+    }
+    let prompt_lens = lens.clone();
+    let mut done = vec![false; b];
+    for r in prompts.len()..b {
+        done[r] = true;
+    }
+    for _ in 0..cfg.max_new_tokens {
+        if done.iter().all(|&d| d) {
+            break;
+        }
+        let logits = eng.policy_logits(policy, &tokens)?;
+        for r in 0..prompts.len() {
+            if done[r] || lens[r] >= t {
+                done[r] = true;
+                continue;
+            }
+            let pos = lens[r] - 1; // logits at the last filled position
+            let row = &logits[(r * t + pos) * v..(r * t + pos + 1) * v];
+            let next = sample_token(row, cfg.temperature, rng);
+            tokens[r * t + lens[r]] = next;
+            lens[r] += 1;
+            if next == EOS {
+                done[r] = true;
+            }
+        }
+    }
+    Ok((0..prompts.len())
+        .map(|r| Generation {
+            prompt_len: prompt_lens[r],
+            tokens: tokens[r * t..r * t + lens[r]].to_vec(),
+        })
+        .collect())
+}
+
+/// Sample one token id from a logit row.
+pub fn sample_token(logits: &[f32], temperature: f32, rng: &mut Rng) -> i32 {
+    if temperature <= 0.0 {
+        return argmax(logits);
+    }
+    // Stable softmax sampling at the given temperature.
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut cum = Vec::with_capacity(logits.len());
+    let mut total = 0.0f64;
+    for &x in logits {
+        total += (((x - max) / temperature) as f64).exp();
+        cum.push(total);
+    }
+    let u = rng.f64() * total;
+    match cum.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+        Ok(i) | Err(i) => (i.min(logits.len() - 1)) as i32,
+    }
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let mut rng = Rng::new(1);
+        let logits = [0.1f32, 3.0, -1.0, 2.9];
+        assert_eq!(sample_token(&logits, 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn low_temperature_concentrates_on_max() {
+        let mut rng = Rng::new(2);
+        let logits = [0.0f32, 5.0, 0.0, 0.0];
+        let hits = (0..200)
+            .filter(|_| sample_token(&logits, 0.3, &mut rng) == 1)
+            .count();
+        assert!(hits > 190, "{hits}");
+    }
+
+    #[test]
+    fn high_temperature_spreads_mass() {
+        let mut rng = Rng::new(3);
+        let logits = [1.0f32, 1.2, 0.9, 1.1];
+        let mut counts = [0usize; 4];
+        for _ in 0..4000 {
+            counts[sample_token(&logits, 5.0, &mut rng) as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 500), "{counts:?}");
+    }
+
+    #[test]
+    fn sampling_is_deterministic_given_seed() {
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin()).collect();
+        let a: Vec<i32> = {
+            let mut rng = Rng::new(42);
+            (0..32).map(|_| sample_token(&logits, 1.0, &mut rng)).collect()
+        };
+        let b: Vec<i32> = {
+            let mut rng = Rng::new(42);
+            (0..32).map(|_| sample_token(&logits, 1.0, &mut rng)).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

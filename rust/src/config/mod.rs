@@ -1,0 +1,216 @@
+//! Configuration: model presets, GPU classes, WAN region profiles, and
+//! cloud pricing — the knobs the paper's evaluation (§7) turns.
+//!
+//! Two kinds of model specs exist:
+//! * **Runnable** — the `sparrow-*` family with a full `ModelLayout`,
+//!   AOT-compiled to PJRT artifacts and executed for real.
+//! * **Analytic** — the paper's Qwen3-4B/8B/14B, used by the discrete-event
+//!   simulator (their compute happens on GPUs we do not have; §7's claims
+//!   depend only on sizes, durations, and link parameters).
+
+pub mod presets;
+
+pub use presets::*;
+
+use crate::delta::ModelLayout;
+
+/// A model the system can train/serve.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Full tensor layout for runnable models; analytic models carry a
+    /// synthetic layout with the right total size.
+    pub layout: ModelLayout,
+    /// Transformer hyperparameters (0 for purely analytic entries).
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    /// Whether artifacts can actually be built & executed for this model.
+    pub runnable: bool,
+    /// Expected per-step nonzero update ratio (measured for runnable
+    /// models; paper-reported for analytic models — Fig 3 / Table 4).
+    pub expected_rho: f64,
+}
+
+impl ModelSpec {
+    pub fn total_params(&self) -> u64 {
+        self.layout.total_params()
+    }
+
+    pub fn dense_bytes_bf16(&self) -> u64 {
+        self.layout.dense_bytes_bf16()
+    }
+}
+
+/// GPU class with the calibrated performance priors the scheduler and the
+/// simulator use (§7.1: H100 vs A100 differ 2-3x; §5.3's worked example
+/// uses 5000 vs 2500 tokens/s).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GpuClass {
+    H100,
+    A100,
+    L40,
+}
+
+impl GpuClass {
+    /// Rollout generation throughput prior, tokens/s per GPU (for a mid-
+    /// size ~8B policy; scaled by model size in the simulator).
+    pub fn rollout_tokens_per_s(self) -> f64 {
+        match self {
+            GpuClass::H100 => 5000.0,
+            GpuClass::A100 => 2500.0,
+            GpuClass::L40 => 1700.0,
+        }
+    }
+
+    /// Relative training speed (H100 = 1).
+    pub fn train_speed(self) -> f64 {
+        match self {
+            GpuClass::H100 => 1.0,
+            GpuClass::A100 => 0.45,
+            GpuClass::L40 => 0.30,
+        }
+    }
+
+    /// On-demand $/GPU/hr (Table 1/6 sources: Hyperbolic, Prime Intellect).
+    pub fn on_demand_per_hr(self) -> f64 {
+        match self {
+            GpuClass::H100 => 1.49,
+            GpuClass::A100 => 1.24,
+            GpuClass::L40 => 0.60,
+        }
+    }
+
+    /// Reserved RDMA-fabric $/GPU/hr (Table 6: 8xH100 cluster $19.92/hr).
+    pub fn reserved_rdma_per_hr(self) -> f64 {
+        match self {
+            GpuClass::H100 => 2.49,
+            GpuClass::A100 => 2.10,
+            GpuClass::L40 => 1.10,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GpuClass::H100 => "H100",
+            GpuClass::A100 => "A100",
+            GpuClass::L40 => "L40",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<GpuClass> {
+        match s.to_ascii_lowercase().as_str() {
+            "h100" => Some(GpuClass::H100),
+            "a100" => Some(GpuClass::A100),
+            "l40" => Some(GpuClass::L40),
+            _ => None,
+        }
+    }
+}
+
+/// WAN link profile from the Trainer (US) to a region — §7.1's testbed plus
+/// the §7.5 multi-DC regions. Bandwidth is the bottleneck capacity; `loss`
+/// feeds the Mathis single-TCP throughput ceiling.
+#[derive(Clone, Copy, Debug)]
+pub struct RegionProfile {
+    pub name: &'static str,
+    /// Bottleneck capacity, bits/s.
+    pub bandwidth_bps: f64,
+    /// Round-trip time, seconds.
+    pub rtt_s: f64,
+    /// Packet loss probability.
+    pub loss: f64,
+    /// Relative bandwidth jitter (std/mean) — cross-cloud links fluctuate
+    /// (paper: 500 Mbps - 1 Gbps measured on US-Canada).
+    pub jitter: f64,
+}
+
+impl RegionProfile {
+    pub const fn new(
+        name: &'static str,
+        bandwidth_bps: f64,
+        rtt_s: f64,
+        loss: f64,
+        jitter: f64,
+    ) -> Self {
+        RegionProfile { name, bandwidth_bps, rtt_s, loss, jitter }
+    }
+}
+
+/// The §7 testbed regions (calibrated to reproduce the paper's measured
+/// numbers: e.g. 202 MB over US-Canada single TCP = 4.71 s -> ~343 Mbps
+/// effective under loss, within the 0.5-1 Gbps fluctuating link).
+pub mod regions {
+    use super::RegionProfile;
+
+    // Loss rates are *residual* TCP-visible loss (what the Mathis ceiling
+    // sees), calibrated so the US-Canada link reproduces the paper's §7.3
+    // measurements: 202 MB single-stream = 4.71 s (~343 Mbps effective),
+    // 4 streams = 2.90 s (~557 Mbps) on a 0.5-1 Gbps fluctuating link.
+    pub const US_LOCAL: RegionProfile =
+        RegionProfile::new("us-local", 800e9, 0.000_05, 0.0, 0.0); // RDMA 800 Gbps
+    pub const CANADA: RegionProfile =
+        RegionProfile::new("canada", 0.75e9, 0.030, 1.3e-6, 0.18);
+    pub const JAPAN: RegionProfile =
+        RegionProfile::new("japan", 2.0e9, 0.150, 1.5e-6, 0.20);
+    pub const NETHERLANDS: RegionProfile =
+        RegionProfile::new("netherlands", 1.5e9, 0.090, 1.0e-6, 0.20);
+    pub const ICELAND: RegionProfile =
+        RegionProfile::new("iceland", 1.2e9, 0.120, 1.2e-6, 0.20);
+    pub const AUSTRALIA: RegionProfile =
+        RegionProfile::new("australia", 1.0e9, 0.200, 1.8e-6, 0.25);
+
+    pub fn by_name(name: &str) -> Option<RegionProfile> {
+        Some(match name.to_ascii_lowercase().as_str() {
+            "us-local" | "us" => US_LOCAL,
+            "canada" | "ca" => CANADA,
+            "japan" | "jp" => JAPAN,
+            "netherlands" | "nl" => NETHERLANDS,
+            "iceland" | "is" => ICELAND,
+            "australia" | "au" => AUSTRALIA,
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpu_priors_match_paper_ratios() {
+        // §5.3's worked example: H100 5000 tok/s vs A100 2500 splits
+        // a batch of 300 into 200/100.
+        let h = GpuClass::H100.rollout_tokens_per_s();
+        let a = GpuClass::A100.rollout_tokens_per_s();
+        assert_eq!(h / a, 2.0);
+        // 2-3x spread across the fleet (§2.3 C2).
+        let l = GpuClass::L40.rollout_tokens_per_s();
+        assert!(h / l > 2.0 && h / l < 3.5);
+    }
+
+    #[test]
+    fn table6_hourly_costs() {
+        // 4xH100 + 8xA100 on-demand = $15.88/hr; 8xH100 RDMA = $19.92/hr.
+        let sparrow_8b = 4.0 * GpuClass::H100.on_demand_per_hr()
+            + 8.0 * GpuClass::A100.on_demand_per_hr();
+        assert!((sparrow_8b - 15.88).abs() < 1e-9, "{sparrow_8b}");
+        let single_dc_8b = 8.0 * GpuClass::H100.reserved_rdma_per_hr();
+        assert!((single_dc_8b - 19.92).abs() < 1e-9);
+        // 14B rows: 6xH100 + 12xA100 = $23.82; 2x8xH100 = $39.84.
+        let sparrow_14b = 6.0 * GpuClass::H100.on_demand_per_hr()
+            + 12.0 * GpuClass::A100.on_demand_per_hr();
+        assert!((sparrow_14b - 23.82).abs() < 1e-9);
+        assert!((16.0 * GpuClass::H100.reserved_rdma_per_hr() - 39.84).abs() < 1e-9);
+    }
+
+    #[test]
+    fn region_lookup() {
+        assert_eq!(regions::by_name("canada").unwrap().name, "canada");
+        assert_eq!(regions::by_name("AU").unwrap().name, "australia");
+        assert!(regions::by_name("mars").is_none());
+    }
+}

@@ -1,0 +1,137 @@
+//! Model presets: the runnable `sparrow-*` family (trained/served for real
+//! through PJRT) and analytic Qwen3 descriptors for the simulator.
+
+use super::ModelSpec;
+use crate::delta::ModelLayout;
+
+/// Construct a runnable transformer spec.
+fn runnable(
+    name: &str,
+    vocab: usize,
+    d_model: usize,
+    n_layers: usize,
+    n_heads: usize,
+    d_ff: usize,
+    max_seq: usize,
+) -> ModelSpec {
+    ModelSpec {
+        name: name.to_string(),
+        layout: ModelLayout::transformer(name, vocab, d_model, n_layers, d_ff),
+        vocab,
+        d_model,
+        n_layers,
+        n_heads,
+        d_ff,
+        max_seq,
+        runnable: true,
+        expected_rho: 0.01, // refined by `sparrowrl exp fig3` measurements
+    }
+}
+
+/// Analytic model: layout sized to the published parameter count, never
+/// compiled. `rho` is the paper-reported per-step nonzero ratio.
+fn analytic(name: &str, params: u64, rho: f64) -> ModelSpec {
+    // One giant pseudo-tensor per billion params keeps index spaces <2^32.
+    let chunk: u64 = 1 << 30;
+    let mut tensors = Vec::new();
+    let mut left = params;
+    let mut i = 0;
+    while left > 0 {
+        let n = left.min(chunk);
+        tensors.push(crate::delta::TensorSpec::new(
+            &format!("blob{i}"),
+            &[n as usize],
+        ));
+        left -= n;
+        i += 1;
+    }
+    ModelSpec {
+        name: name.to_string(),
+        layout: ModelLayout::new(name, tensors),
+        vocab: 0,
+        d_model: 0,
+        n_layers: 0,
+        n_heads: 0,
+        d_ff: 0,
+        max_seq: 0,
+        runnable: false,
+        expected_rho: rho,
+    }
+}
+
+/// Look up a model preset by name.
+pub fn model(name: &str) -> Option<ModelSpec> {
+    Some(match name {
+        // --- runnable family (AOT-compiled, really executed) ---
+        // ~0.15M params: CI-size smoke model.
+        "sparrow-xs" => runnable("sparrow-xs", 256, 64, 2, 4, 256, 64),
+        // ~1.1M params: default for tests and quickstart.
+        "sparrow-s" => runnable("sparrow-s", 512, 128, 4, 8, 512, 64),
+        // ~6.6M params.
+        "sparrow-m" => runnable("sparrow-m", 1024, 256, 6, 8, 1024, 96),
+        // ~34.6M params.
+        "sparrow-l" => runnable("sparrow-l", 2048, 512, 8, 16, 2048, 128),
+        // ~116M params: the end-to-end validation model (~100M target).
+        "sparrow-xl" => runnable("sparrow-xl", 4096, 768, 12, 12, 3072, 128),
+
+        // --- analytic (paper models; Fig 3 / Table 4 rho values) ---
+        "qwen3-4b" => analytic("qwen3-4b", 4_020_000_000, 0.0112),
+        "qwen3-8b" => analytic("qwen3-8b", 8_190_000_000, 0.0096),
+        "qwen3-14b" => analytic("qwen3-14b", 14_800_000_000, 0.0100),
+        "llama3-8b" => analytic("llama3-8b", 8_030_000_000, 0.0256),
+        "glm4-9b" => analytic("glm4-9b", 9_400_000_000, 0.0199),
+        "qwen2.5-72b" => analytic("qwen2.5-72b", 72_700_000_000, 0.0185),
+        _ => return None,
+    })
+}
+
+/// All runnable presets, small to large.
+pub fn runnable_models() -> Vec<&'static str> {
+    vec!["sparrow-xs", "sparrow-s", "sparrow-m", "sparrow-l", "sparrow-xl"]
+}
+
+/// The paper's evaluated sizes (Fig 8/11/12).
+pub fn paper_models() -> Vec<&'static str> {
+    vec!["qwen3-4b", "qwen3-8b", "qwen3-14b"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runnable_sizes_span_smoke_to_100m() {
+        let xs = model("sparrow-xs").unwrap().total_params();
+        let xl = model("sparrow-xl").unwrap().total_params();
+        assert!(xs < 300_000, "xs={xs}");
+        assert!(
+            (90_000_000..150_000_000).contains(&xl),
+            "xl={xl} should be ~100M"
+        );
+    }
+
+    #[test]
+    fn analytic_sizes_match_paper() {
+        let m = model("qwen3-8b").unwrap();
+        assert!(!m.runnable);
+        assert_eq!(m.total_params(), 8_190_000_000);
+        // ~16 GB in bf16 (Table 2).
+        let gb = m.dense_bytes_bf16() as f64 / 1e9;
+        assert!((15.0..17.5).contains(&gb), "{gb} GB");
+        assert!((m.expected_rho - 0.0096).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unknown_model_is_none() {
+        assert!(model("gpt-17t").is_none());
+    }
+
+    #[test]
+    fn analytic_chunks_stay_below_u32_index_space() {
+        let m = model("qwen2.5-72b").unwrap();
+        for t in &m.layout.tensors {
+            assert!(t.numel() <= u32::MAX as u64);
+        }
+        assert_eq!(m.total_params(), 72_700_000_000);
+    }
+}

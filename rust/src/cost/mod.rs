@@ -1,0 +1,153 @@
+//! Cost model: deployment pricing and tokens-per-dollar (paper §7.7,
+//! Tables 1 and 6).
+//!
+//! Reserved RDMA clusters come in fixed 8-GPU blocks at a network premium
+//! with minimum commitments; cross-cloud capacity is per-GPU on-demand.
+//! Following the paper, tokens/$ uses *amortized* hourly rates (which
+//! favours SingleDC for short runs — the comparison is conservative).
+
+use crate::config::GpuClass;
+
+/// One homogeneous block of GPUs in a deployment.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuPool {
+    pub class: GpuClass,
+    pub count: usize,
+}
+
+/// How the GPUs are procured (drives pricing + connectivity).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Procurement {
+    /// On-demand cross-cloud VMs, standard networking, 1-hour billing.
+    OnDemandCrossCloud,
+    /// Reserved RDMA cluster, 8-GPU blocks, minimum commitment.
+    ReservedRdma,
+}
+
+/// A full deployment description.
+#[derive(Clone, Debug)]
+pub struct Deployment {
+    pub name: String,
+    pub pools: Vec<GpuPool>,
+    pub procurement: Procurement,
+}
+
+impl Deployment {
+    pub fn cross_cloud(name: &str, pools: Vec<GpuPool>) -> Deployment {
+        Deployment { name: name.into(), pools, procurement: Procurement::OnDemandCrossCloud }
+    }
+
+    /// Reserved RDMA cluster: `count` is rounded UP to 8-GPU blocks
+    /// (Table 6: "must round up to 2x8xH100").
+    pub fn reserved_rdma(name: &str, class: GpuClass, count: usize) -> Deployment {
+        let rounded = count.div_ceil(8) * 8;
+        Deployment {
+            name: name.into(),
+            pools: vec![GpuPool { class, count: rounded }],
+            procurement: Procurement::ReservedRdma,
+        }
+    }
+
+    pub fn gpu_count(&self) -> usize {
+        self.pools.iter().map(|p| p.count).sum()
+    }
+
+    /// Hourly cost in dollars.
+    pub fn cost_per_hr(&self) -> f64 {
+        self.pools
+            .iter()
+            .map(|p| {
+                let rate = match self.procurement {
+                    Procurement::OnDemandCrossCloud => p.class.on_demand_per_hr(),
+                    Procurement::ReservedRdma => p.class.reserved_rdma_per_hr(),
+                };
+                rate * p.count as f64
+            })
+            .sum()
+    }
+
+    /// Tokens per dollar given sustained throughput (tokens/s).
+    pub fn tokens_per_dollar(&self, tokens_per_s: f64) -> f64 {
+        tokens_per_s * 3600.0 / self.cost_per_hr()
+    }
+
+    /// Total cost of a run, honouring minimum commitments (Table 1:
+    /// reserved clusters bill at least `min_commit_hr` hours).
+    pub fn run_cost(&self, run_hours: f64) -> f64 {
+        let billed = match self.procurement {
+            Procurement::OnDemandCrossCloud => run_hours.max(1.0), // 1-hr billing
+            Procurement::ReservedRdma => run_hours.max(24.0),      // 24-hr min commit
+        };
+        billed * self.cost_per_hr()
+    }
+}
+
+/// The paper's Table 6 deployment pairs for a given model scale.
+pub fn table6_deployments(model: &str) -> Option<(Deployment, Deployment)> {
+    match model {
+        "qwen3-8b" => Some((
+            Deployment::cross_cloud(
+                "4xH100 + 8xA100 (cross-cloud on-demand)",
+                vec![
+                    GpuPool { class: GpuClass::H100, count: 4 },
+                    GpuPool { class: GpuClass::A100, count: 8 },
+                ],
+            ),
+            Deployment::reserved_rdma("1x8xH100 RDMA cluster (reserved)", GpuClass::H100, 8),
+        )),
+        "qwen3-14b" => Some((
+            Deployment::cross_cloud(
+                "6xH100 + 12xA100 (cross-cloud on-demand)",
+                vec![
+                    GpuPool { class: GpuClass::H100, count: 6 },
+                    GpuPool { class: GpuClass::A100, count: 12 },
+                ],
+            ),
+            Deployment::reserved_rdma("2x8xH100 RDMA cluster (reserved)", GpuClass::H100, 12),
+        )),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table6_hourly_rates() {
+        let (sparrow, single) = table6_deployments("qwen3-8b").unwrap();
+        assert!((sparrow.cost_per_hr() - 15.88).abs() < 1e-9);
+        assert!((single.cost_per_hr() - 19.92).abs() < 1e-9);
+        let (sparrow, single) = table6_deployments("qwen3-14b").unwrap();
+        assert!((sparrow.cost_per_hr() - 23.82).abs() < 1e-9);
+        assert!((single.cost_per_hr() - 39.84).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rdma_rounds_up_to_blocks() {
+        let d = Deployment::reserved_rdma("x", GpuClass::H100, 12);
+        assert_eq!(d.gpu_count(), 16);
+        let d = Deployment::reserved_rdma("x", GpuClass::H100, 8);
+        assert_eq!(d.gpu_count(), 8);
+    }
+
+    #[test]
+    fn tokens_per_dollar_matches_paper_magnitude() {
+        // Paper: ~15.9k tokens/s at $15.88/hr => ~3.60M tokens/$.
+        let (sparrow, _) = table6_deployments("qwen3-8b").unwrap();
+        let tpd = sparrow.tokens_per_dollar(15_900.0);
+        assert!((3.4e6..3.8e6).contains(&tpd), "{tpd}");
+    }
+
+    #[test]
+    fn minimum_commitments_inflate_short_runs() {
+        // Table 1's story: an exploratory 2-hour run on reserved RDMA
+        // bills 24 hours; on-demand bills 2.
+        let (sparrow, single) = table6_deployments("qwen3-8b").unwrap();
+        let on_demand = sparrow.run_cost(2.0);
+        let reserved = single.run_cost(2.0);
+        assert!((on_demand - 2.0 * 15.88).abs() < 1e-9);
+        assert!((reserved - 24.0 * 19.92).abs() < 1e-9);
+        assert!(reserved / on_demand > 10.0);
+    }
+}

@@ -1,0 +1,253 @@
+//! Synthetic verifiable-reasoning workload (stand-in for GSM8K / MATH /
+//! DeepScaleR — DESIGN.md §3): multi-digit addition posed as a token
+//! sequence with an exactly checkable answer, which is all GRPO-family
+//! algorithms need (a prompt distribution and a verifiable reward).
+//!
+//! Vocabulary (model vocab is always >= 16):
+//!   0 PAD · 1 BOS · 2 EOS · 3 '+' · 4 '=' · 5..14 digits 0-9
+
+use crate::util::Rng;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const PLUS: i32 = 3;
+pub const EQ: i32 = 4;
+pub const DIGIT0: i32 = 5;
+
+/// Difficulty presets named after the paper's benchmarks: operand digit
+/// counts (GSM8K-like = 2-digit, MATH-like = 3-digit, DeepScaleR-like =
+/// 4-digit, longer rollouts).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Benchmark {
+    Gsm8k,
+    Math,
+    DeepScaleR,
+}
+
+impl Benchmark {
+    pub fn digits(self) -> u32 {
+        match self {
+            Benchmark::Gsm8k => 2,
+            Benchmark::Math => 3,
+            Benchmark::DeepScaleR => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Benchmark::Gsm8k => "GSM8K",
+            Benchmark::Math => "MATH",
+            Benchmark::DeepScaleR => "DeepScaleR",
+        }
+    }
+
+    pub fn all() -> [Benchmark; 3] {
+        [Benchmark::Gsm8k, Benchmark::Math, Benchmark::DeepScaleR]
+    }
+
+    pub fn parse(s: &str) -> Option<Benchmark> {
+        match s.to_ascii_lowercase().as_str() {
+            "gsm8k" => Some(Benchmark::Gsm8k),
+            "math" => Some(Benchmark::Math),
+            "deepscaler" => Some(Benchmark::DeepScaleR),
+            _ => None,
+        }
+    }
+}
+
+/// One task instance: `a + b = ?`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Task {
+    pub id: u64,
+    pub a: u64,
+    pub b: u64,
+}
+
+impl Task {
+    /// Deterministic task for a prompt id (the ledger hands out ids; both
+    /// trainer and actors can reconstruct the task locally).
+    pub fn from_prompt_id(id: u64, bench: Benchmark) -> Task {
+        let mut rng = Rng::new(id ^ 0x5EED_5EED);
+        let hi = 10u64.pow(bench.digits());
+        Task { id, a: rng.below(hi), b: rng.below(hi) }
+    }
+
+    pub fn answer(&self) -> u64 {
+        self.a + self.b
+    }
+
+    /// Prompt tokens: BOS digits(a) '+' digits(b) '='.
+    pub fn prompt_tokens(&self) -> Vec<i32> {
+        let mut t = vec![BOS];
+        t.extend(digit_tokens(self.a));
+        t.push(PLUS);
+        t.extend(digit_tokens(self.b));
+        t.push(EQ);
+        t
+    }
+
+    /// Gold completion: digits of the sum then EOS.
+    pub fn answer_tokens(&self) -> Vec<i32> {
+        let mut t = digit_tokens(self.answer());
+        t.push(EOS);
+        t
+    }
+
+    /// Reward for a generated completion (tokens after '='): 1.0 for an
+    /// exact match (digits + EOS), else 0.1 per correct leading token,
+    /// capped below 1.0 — partial credit keeps early training off a
+    /// zero-gradient plateau.
+    pub fn reward(&self, generated: &[i32]) -> f32 {
+        let gold = self.answer_tokens();
+        let upto_eos: Vec<i32> = generated
+            .iter()
+            .copied()
+            .take_while(|&t| t != PAD)
+            .take(gold.len() + 4)
+            .collect();
+        if upto_eos == gold {
+            return 1.0;
+        }
+        let correct = gold
+            .iter()
+            .zip(upto_eos.iter())
+            .take_while(|(g, o)| g == o)
+            .count();
+        (0.1 * correct as f32).min(0.9)
+    }
+}
+
+pub fn digit_tokens(mut x: u64) -> Vec<i32> {
+    if x == 0 {
+        return vec![DIGIT0];
+    }
+    let mut digits = Vec::new();
+    while x > 0 {
+        digits.push(DIGIT0 + (x % 10) as i32);
+        x /= 10;
+    }
+    digits.reverse();
+    digits
+}
+
+/// Build a fixed-shape [batch, seq] token matrix + generation mask for the
+/// train-step artifact from (prompt, completion) pairs.
+pub struct PackedBatch {
+    pub tokens: Vec<i32>,
+    pub gen_mask: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+pub fn pack_batch(
+    pairs: &[(Vec<i32>, Vec<i32>)],
+    batch: usize,
+    seq: usize,
+) -> PackedBatch {
+    assert!(pairs.len() <= batch, "{} > {batch}", pairs.len());
+    let mut tokens = vec![PAD; batch * seq];
+    let mut gen_mask = vec![0.0f32; batch * seq];
+    for (r, (prompt, completion)) in pairs.iter().enumerate() {
+        let mut col = 0;
+        for &t in prompt.iter().take(seq) {
+            tokens[r * seq + col] = t;
+            col += 1;
+        }
+        for &t in completion.iter() {
+            if col >= seq {
+                break;
+            }
+            tokens[r * seq + col] = t;
+            gen_mask[r * seq + col] = 1.0;
+            col += 1;
+        }
+    }
+    PackedBatch { tokens, gen_mask, batch, seq }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_reconstruction_is_deterministic() {
+        let a = Task::from_prompt_id(42, Benchmark::Gsm8k);
+        let b = Task::from_prompt_id(42, Benchmark::Gsm8k);
+        assert_eq!(a, b);
+        let c = Task::from_prompt_id(43, Benchmark::Gsm8k);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn digit_tokenization() {
+        assert_eq!(digit_tokens(0), vec![DIGIT0]);
+        assert_eq!(digit_tokens(7), vec![DIGIT0 + 7]);
+        assert_eq!(digit_tokens(120), vec![DIGIT0 + 1, DIGIT0 + 2, DIGIT0]);
+    }
+
+    #[test]
+    fn prompt_and_answer_structure() {
+        let t = Task { id: 0, a: 12, b: 34 };
+        assert_eq!(
+            t.prompt_tokens(),
+            vec![BOS, DIGIT0 + 1, DIGIT0 + 2, PLUS, DIGIT0 + 3, DIGIT0 + 4, EQ]
+        );
+        assert_eq!(t.answer_tokens(), vec![DIGIT0 + 4, DIGIT0 + 6, EOS]);
+    }
+
+    #[test]
+    fn reward_exact_partial_and_zero() {
+        let t = Task { id: 0, a: 12, b: 34 }; // 46
+        let gold = t.answer_tokens();
+        assert_eq!(t.reward(&gold), 1.0);
+        // Correct first digit only.
+        let partial = vec![DIGIT0 + 4, DIGIT0 + 9, EOS];
+        assert!((t.reward(&partial) - 0.1).abs() < 1e-6);
+        // Nothing right.
+        assert_eq!(t.reward(&[DIGIT0 + 9]), 0.0);
+        // Trailing garbage after a full match is not exact.
+        let mut too_long = gold.clone();
+        too_long.push(DIGIT0);
+        assert!(t.reward(&too_long) < 1.0);
+    }
+
+    #[test]
+    fn benchmark_difficulty_scales_operands() {
+        for bench in Benchmark::all() {
+            let hi = 10u64.pow(bench.digits());
+            for id in 0..50 {
+                let t = Task::from_prompt_id(id, bench);
+                assert!(t.a < hi && t.b < hi);
+            }
+        }
+    }
+
+    #[test]
+    fn pack_batch_layout() {
+        let t = Task { id: 0, a: 3, b: 4 };
+        let pb = pack_batch(
+            &[(t.prompt_tokens(), t.answer_tokens())],
+            2,
+            16,
+        );
+        assert_eq!(pb.tokens.len(), 32);
+        assert_eq!(pb.tokens[0], BOS);
+        // Mask zero on prompt, one on completion.
+        let p_len = t.prompt_tokens().len();
+        assert_eq!(pb.gen_mask[p_len - 1], 0.0);
+        assert_eq!(pb.gen_mask[p_len], 1.0);
+        // Second row all padding.
+        assert!(pb.tokens[16..].iter().all(|&x| x == PAD));
+        assert!(pb.gen_mask[16..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn pack_batch_truncates_long_sequences() {
+        let prompt = vec![BOS; 10];
+        let completion = vec![DIGIT0; 20];
+        let pb = pack_batch(&[(prompt, completion)], 1, 16);
+        assert_eq!(pb.tokens.len(), 16);
+        assert_eq!(pb.gen_mask.iter().filter(|&&m| m > 0.0).count(), 6);
+    }
+}

@@ -1,0 +1,249 @@
+//! Versioned, immutable delta checkpoints and the Trainer's Checkpoint
+//! Store (§4, §5.1).
+//!
+//! Storage and network transfer share one abstraction: a checkpoint is a
+//! hashed byte artifact; "transfer" is the replication of that artifact.
+//! Partial failures therefore never leave ambiguous state — an actor either
+//! holds a hash-verified `D_v` or it does not.
+
+use super::encode::{decode_delta, delta_hash, encode_delta, DecodeError};
+use super::SparseDelta;
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// An immutable, hash-identified delta artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeltaCheckpoint {
+    pub version: u64,
+    pub base_version: u64,
+    pub bytes: Vec<u8>,
+    pub hash: [u8; 32],
+}
+
+impl DeltaCheckpoint {
+    /// Seal a sparse delta into its canonical artifact.
+    pub fn seal(delta: &SparseDelta) -> DeltaCheckpoint {
+        let bytes = encode_delta(delta);
+        let hash = delta_hash(&bytes).expect("encoded delta always carries a hash");
+        DeltaCheckpoint {
+            version: delta.version,
+            base_version: delta.base_version,
+            bytes,
+            hash,
+        }
+    }
+
+    /// Re-open the artifact, verifying integrity.
+    pub fn open(&self) -> Result<SparseDelta, DecodeError> {
+        decode_delta(&self.bytes)
+    }
+
+    /// Reconstruct from raw bytes (e.g. after network reassembly).
+    pub fn from_bytes(bytes: Vec<u8>) -> Result<DeltaCheckpoint, DecodeError> {
+        let d = decode_delta(&bytes)?;
+        let hash = delta_hash(&bytes).ok_or(DecodeError::Truncated)?;
+        Ok(DeltaCheckpoint {
+            version: d.version,
+            base_version: d.base_version,
+            bytes,
+            hash,
+        })
+    }
+
+    pub fn payload_bytes(&self) -> u64 {
+        self.bytes.len() as u64
+    }
+
+    pub fn short_hash(&self) -> String {
+        self.hash[..6].iter().map(|b| format!("{b:02x}")).collect()
+    }
+}
+
+/// The Trainer Hub's Checkpoint Store: versioned deltas plus optional
+/// on-disk persistence. Checkpoints are append-only; `gc_before` trims the
+/// history once all actors have advanced (one-step lag keeps this tiny).
+pub struct CheckpointStore {
+    dir: Option<PathBuf>,
+    by_version: BTreeMap<u64, DeltaCheckpoint>,
+}
+
+impl CheckpointStore {
+    /// Memory-only store (simulation and tests).
+    pub fn in_memory() -> CheckpointStore {
+        CheckpointStore { dir: None, by_version: BTreeMap::new() }
+    }
+
+    /// Store persisting artifacts as `<dir>/delta-v{N}.sprw`.
+    pub fn on_disk(dir: &Path) -> std::io::Result<CheckpointStore> {
+        std::fs::create_dir_all(dir)?;
+        Ok(CheckpointStore { dir: Some(dir.to_path_buf()), by_version: BTreeMap::new() })
+    }
+
+    /// Insert a sealed checkpoint. Re-inserting the same version must carry
+    /// the same hash (immutability); differing bytes are an error.
+    pub fn put(&mut self, ckpt: DeltaCheckpoint) -> std::io::Result<()> {
+        if let Some(existing) = self.by_version.get(&ckpt.version) {
+            if existing.hash != ckpt.hash {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::AlreadyExists,
+                    format!("version {} already sealed with a different hash", ckpt.version),
+                ));
+            }
+            return Ok(());
+        }
+        if let Some(dir) = &self.dir {
+            let path = dir.join(format!("delta-v{}.sprw", ckpt.version));
+            let tmp = dir.join(format!(".delta-v{}.tmp", ckpt.version));
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&ckpt.bytes)?;
+            f.sync_all()?;
+            std::fs::rename(&tmp, &path)?;
+        }
+        self.by_version.insert(ckpt.version, ckpt);
+        Ok(())
+    }
+
+    pub fn get(&self, version: u64) -> Option<&DeltaCheckpoint> {
+        self.by_version.get(&version)
+    }
+
+    pub fn latest_version(&self) -> Option<u64> {
+        self.by_version.keys().next_back().copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_version.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_version.is_empty()
+    }
+
+    /// Load any persisted checkpoints from disk (crash recovery).
+    pub fn recover(&mut self) -> std::io::Result<usize> {
+        let Some(dir) = self.dir.clone() else { return Ok(0) };
+        let mut n = 0;
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            let name = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
+            if !name.starts_with("delta-v") || !name.ends_with(".sprw") {
+                continue;
+            }
+            let bytes = std::fs::read(&path)?;
+            match DeltaCheckpoint::from_bytes(bytes) {
+                Ok(ckpt) => {
+                    self.by_version.entry(ckpt.version).or_insert(ckpt);
+                    n += 1;
+                }
+                Err(e) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        format!("{}: {e}", path.display()),
+                    ));
+                }
+            }
+        }
+        Ok(n)
+    }
+
+    /// Drop checkpoints with version < `min_version`.
+    pub fn gc_before(&mut self, min_version: u64) -> usize {
+        let drop: Vec<u64> = self
+            .by_version
+            .range(..min_version)
+            .map(|(&v, _)| v)
+            .collect();
+        for v in &drop {
+            if let Some(dir) = &self.dir {
+                let _ = std::fs::remove_file(dir.join(format!("delta-v{v}.sprw")));
+            }
+            self.by_version.remove(v);
+        }
+        drop.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::{extract_delta, ApplyMode, ModelLayout, ParamSet};
+    use crate::util::Rng;
+
+    fn ckpt(version: u64, seed: u64) -> DeltaCheckpoint {
+        let l = ModelLayout::transformer("t", 64, 16, 2, 32);
+        let mut rng = Rng::new(seed);
+        let old = ParamSet::random(&l, 0.02, &mut rng);
+        let mut new = old.clone();
+        let t0 = &mut new.tensors[0];
+        let i = rng.range(0, t0.len());
+        t0[i] = crate::util::Bf16::from_bits(t0[i].to_bits() ^ 1);
+        DeltaCheckpoint::seal(&extract_delta(&l, &old, &new, version - 1, version, ApplyMode::Assign))
+    }
+
+    #[test]
+    fn seal_open_round_trip() {
+        let c = ckpt(3, 1);
+        let d = c.open().unwrap();
+        assert_eq!(d.version, 3);
+        assert_eq!(d.base_version, 2);
+        assert_eq!(c.hash, super::super::encode::delta_hash(&c.bytes).unwrap());
+    }
+
+    #[test]
+    fn store_immutability_enforced() {
+        let mut s = CheckpointStore::in_memory();
+        let c1 = ckpt(1, 1);
+        let c1_different = ckpt(1, 99);
+        s.put(c1.clone()).unwrap();
+        assert!(s.put(c1.clone()).is_ok(), "idempotent re-put allowed");
+        assert!(s.put(c1_different).is_err(), "conflicting bytes rejected");
+        assert_eq!(s.latest_version(), Some(1));
+    }
+
+    #[test]
+    fn disk_persistence_and_recovery() {
+        let dir = std::env::temp_dir().join(format!("sprw-store-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let mut s = CheckpointStore::on_disk(&dir).unwrap();
+            s.put(ckpt(1, 1)).unwrap();
+            s.put(ckpt(2, 2)).unwrap();
+        }
+        let mut s2 = CheckpointStore::on_disk(&dir).unwrap();
+        assert_eq!(s2.recover().unwrap(), 2);
+        assert_eq!(s2.latest_version(), Some(2));
+        assert!(s2.get(1).unwrap().open().is_ok());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupted_disk_artifact_fails_recovery() {
+        let dir = std::env::temp_dir().join(format!("sprw-corrupt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let mut s = CheckpointStore::on_disk(&dir).unwrap();
+            s.put(ckpt(1, 1)).unwrap();
+        }
+        // Flip a byte in the stored artifact.
+        let path = dir.join("delta-v1.sprw");
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[10] ^= 0xFF;
+        std::fs::write(&path, bytes).unwrap();
+        let mut s2 = CheckpointStore::on_disk(&dir).unwrap();
+        assert!(s2.recover().is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn gc_trims_history() {
+        let mut s = CheckpointStore::in_memory();
+        for v in 1..=5 {
+            s.put(ckpt(v, v)).unwrap();
+        }
+        assert_eq!(s.gc_before(4), 3);
+        assert!(s.get(3).is_none());
+        assert!(s.get(4).is_some());
+        assert_eq!(s.len(), 2);
+    }
+}

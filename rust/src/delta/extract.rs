@@ -1,0 +1,308 @@
+//! Delta extraction (Trainer side) and application (Actor side).
+//!
+//! Extraction is the per-step CPU hot path the paper reports at ~5 s for a
+//! 16 GB model; see `rust/benches/encoding.rs` and EXPERIMENTS.md §Perf for
+//! our measured scan throughput. Application is a flat scatter over the
+//! actor-resident parameter storage (§5.1 "flat scatter-add"; we default to
+//! scatter-assign for provable bit-exactness, see delta/mod.rs).
+
+use super::{ApplyMode, ModelLayout, ParamSet, SparseDelta, TensorDelta};
+use crate::util::Bf16;
+
+/// Diff two bf16 snapshots into a sparse delta producing `version` on top
+/// of `base_version`. Comparison is on bit patterns, so -0.0 vs +0.0 and
+/// NaN payload changes are all captured — the delta is exactly "whatever
+/// changed in storage".
+pub fn extract_delta(
+    layout: &ModelLayout,
+    old: &ParamSet,
+    new: &ParamSet,
+    base_version: u64,
+    version: u64,
+    mode: ApplyMode,
+) -> SparseDelta {
+    assert_eq!(old.tensors.len(), new.tensors.len(), "snapshot arity");
+    let mut tensors = Vec::new();
+    for (tid, (o, n)) in old.tensors.iter().zip(&new.tensors).enumerate() {
+        assert_eq!(o.len(), n.len(), "tensor {tid} length");
+        let mut idx = Vec::new();
+        let mut vals = Vec::new();
+        scan_changed(o, n, |i| {
+            idx.push(i as u64);
+            vals.push(match mode {
+                ApplyMode::Assign => n[i],
+                ApplyMode::Add => Bf16::from_f32(n[i].to_f32() - o[i].to_f32()),
+            });
+        });
+        if !idx.is_empty() {
+            tensors.push(TensorDelta { tensor: tid as u32, idx, vals });
+        }
+    }
+    SparseDelta {
+        version,
+        base_version,
+        model_fp: layout.fingerprint(),
+        mode,
+        tensors,
+    }
+}
+
+/// Invoke `hit(i)` for every position where old[i] != new[i] (bitwise).
+/// Word-at-a-time comparison: four bf16 lanes per u64, branch only on the
+/// rare unequal word — this is what makes the dense scan ~memory-bound.
+#[inline]
+fn scan_changed<F: FnMut(usize)>(old: &[Bf16], new: &[Bf16], mut hit: F) {
+    let n = old.len();
+    let words = n / 4;
+    // Safety: Bf16 is a repr-transparent-sized u16; we only read.
+    let (op, np) = (old.as_ptr() as *const u64, new.as_ptr() as *const u64);
+    let mut i = 0usize;
+    // Alignment: Vec<Bf16> is 2-byte aligned; use unaligned reads.
+    while i < words {
+        let (a, b) = unsafe { ((op.add(i)).read_unaligned(), (np.add(i)).read_unaligned()) };
+        if a != b {
+            let base = i * 4;
+            let x = a ^ b;
+            if x & 0x0000_0000_0000_FFFF != 0 {
+                hit(base);
+            }
+            if x & 0x0000_0000_FFFF_0000 != 0 {
+                hit(base + 1);
+            }
+            if x & 0x0000_FFFF_0000_0000 != 0 {
+                hit(base + 2);
+            }
+            if x & 0xFFFF_0000_0000_0000 != 0 {
+                hit(base + 3);
+            }
+        }
+        i += 1;
+    }
+    for j in words * 4..n {
+        if old[j].to_bits() != new[j].to_bits() {
+            hit(j);
+        }
+    }
+}
+
+/// Parallel extraction: per-tensor scans fan out over `threads` OS
+/// threads (the fused layout gives natural independent shards). Falls
+/// back to the serial path for small models where spawn cost dominates.
+pub fn extract_delta_parallel(
+    layout: &ModelLayout,
+    old: &ParamSet,
+    new: &ParamSet,
+    base_version: u64,
+    version: u64,
+    mode: ApplyMode,
+    threads: usize,
+) -> SparseDelta {
+    let total = layout.total_params();
+    if threads <= 1 || total < 4_000_000 {
+        return extract_delta(layout, old, new, base_version, version, mode);
+    }
+    let n_tensors = old.tensors.len();
+    let results: Vec<Option<TensorDelta>> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(n_tensors);
+        for tid in 0..n_tensors {
+            let (o, n) = (&old.tensors[tid], &new.tensors[tid]);
+            handles.push(scope.spawn(move || {
+                let mut idx = Vec::new();
+                let mut vals = Vec::new();
+                scan_changed(o, n, |i| {
+                    idx.push(i as u64);
+                    vals.push(match mode {
+                        ApplyMode::Assign => n[i],
+                        ApplyMode::Add => Bf16::from_f32(n[i].to_f32() - o[i].to_f32()),
+                    });
+                });
+                (!idx.is_empty()).then_some(TensorDelta { tensor: tid as u32, idx, vals })
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    SparseDelta {
+        version,
+        base_version,
+        model_fp: layout.fingerprint(),
+        mode,
+        tensors: results.into_iter().flatten().collect(),
+    }
+}
+
+/// Apply a delta to actor-resident parameters in place.
+///
+/// Preconditions (the staged-activation protocol enforces these before
+/// calling): `delta.validate(layout)` passed and the actor's active version
+/// equals `delta.base_version`.
+pub fn apply_delta(params: &mut ParamSet, delta: &SparseDelta) {
+    for t in &delta.tensors {
+        let buf = &mut params.tensors[t.tensor as usize];
+        match delta.mode {
+            ApplyMode::Assign => {
+                for (&i, &v) in t.idx.iter().zip(&t.vals) {
+                    buf[i as usize] = v;
+                }
+            }
+            ApplyMode::Add => {
+                for (&i, &v) in t.idx.iter().zip(&t.vals) {
+                    let cur = buf[i as usize].to_f32();
+                    buf[i as usize] = Bf16::from_f32(cur + v.to_f32());
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    fn layout() -> ModelLayout {
+        ModelLayout::transformer("t", 128, 32, 2, 64)
+    }
+
+    fn perturb(p: &ParamSet, k_per_tensor: usize, rng: &mut Rng) -> ParamSet {
+        let mut q = p.clone();
+        for t in &mut q.tensors {
+            let n = t.len();
+            for _ in 0..k_per_tensor.min(n) {
+                let i = rng.range(0, n);
+                // Flip to a guaranteed-different value.
+                let old = t[i];
+                let mut v = Bf16::from_f32(rng.normal() as f32);
+                if v == old {
+                    v = Bf16::from_bits(old.to_bits() ^ 1);
+                }
+                t[i] = v;
+            }
+        }
+        q
+    }
+
+    #[test]
+    fn identical_snapshots_give_empty_delta() {
+        let l = layout();
+        let mut rng = Rng::new(1);
+        let p = ParamSet::random(&l, 0.02, &mut rng);
+        let d = extract_delta(&l, &p, &p, 0, 1, ApplyMode::Assign);
+        assert_eq!(d.nnz(), 0);
+        assert!(d.tensors.is_empty());
+    }
+
+    #[test]
+    fn assign_round_trip_is_bit_exact() {
+        let l = layout();
+        let mut rng = Rng::new(2);
+        let old = ParamSet::random(&l, 0.02, &mut rng);
+        let new = perturb(&old, 13, &mut rng);
+        let d = extract_delta(&l, &old, &new, 0, 1, ApplyMode::Assign);
+        d.validate(&l).unwrap();
+        let mut applied = old.clone();
+        apply_delta(&mut applied, &d);
+        assert_eq!(applied, new, "scatter-assign must reproduce the snapshot exactly");
+    }
+
+    #[test]
+    fn density_matches_perturbation() {
+        let l = layout();
+        let mut rng = Rng::new(3);
+        let old = ParamSet::random(&l, 0.02, &mut rng);
+        let new = perturb(&old, 5, &mut rng);
+        let d = extract_delta(&l, &old, &new, 0, 1, ApplyMode::Assign);
+        // At most 5 per tensor (collisions may reduce), never zero here.
+        assert!(d.nnz() >= 1 && d.nnz() <= 5 * l.tensors.len() as u64);
+        assert!(d.density(&l) < 0.05);
+    }
+
+    #[test]
+    fn scan_changed_hits_every_lane_and_tail() {
+        // Cover each of the 4 lanes in the word-at-a-time path + odd tail.
+        for n in [1usize, 3, 4, 5, 7, 8, 9, 64, 65, 66, 67] {
+            for pos in 0..n {
+                let old = vec![Bf16::from_f32(1.0); n];
+                let mut new = old.clone();
+                new[pos] = Bf16::from_f32(2.0);
+                let mut hits = Vec::new();
+                scan_changed(&old, &new, |i| hits.push(i));
+                assert_eq!(hits, vec![pos], "n={n} pos={pos}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_assign_round_trip_random_patterns() {
+        prop::check("extract/apply assign round trip", 40, |rng| {
+            let l = ModelLayout::new(
+                "p",
+                vec![super::super::TensorSpec::new("w", &[rng.range(1, 400)])],
+            );
+            let old = ParamSet::random(&l, 0.1, rng);
+            let mut new = old.clone();
+            let n = new.tensors[0].len();
+            let flips = rng.range(0, n.min(50) + 1);
+            for _ in 0..flips {
+                let i = rng.range(0, n);
+                new.tensors[0][i] = Bf16::from_bits(rng.next_u64() as u16);
+            }
+            let d = extract_delta(&l, &old, &new, 3, 4, ApplyMode::Assign);
+            d.validate(&l).unwrap();
+            let mut applied = old.clone();
+            apply_delta(&mut applied, &d);
+            // Compare bit patterns (PartialEq on Bf16 is bitwise).
+            assert_eq!(applied, new);
+        });
+    }
+
+    #[test]
+    fn add_mode_can_rerond_but_assign_cannot() {
+        // Construct the classic counterexample: old and new far apart in
+        // exponent so bf16(new - old) loses bits.
+        let l = ModelLayout::new("c", vec![super::super::TensorSpec::new("w", &[1])]);
+        let old = ParamSet { tensors: vec![vec![Bf16::from_f32(1024.0)]] };
+        let new = ParamSet { tensors: vec![vec![Bf16::from_f32(1025.0 + 1000.0)]] };
+        let da = extract_delta(&l, &old, &new, 0, 1, ApplyMode::Assign);
+        let mut pa = old.clone();
+        apply_delta(&mut pa, &da);
+        assert_eq!(pa, new);
+        // Additive mode is applied and *may* differ; we only require that
+        // the assign path is exact (documented deviation).
+        let dd = extract_delta(&l, &old, &new, 0, 1, ApplyMode::Add);
+        let mut pd = old.clone();
+        apply_delta(&mut pd, &dd);
+        let _ = pd; // no exactness requirement
+    }
+}
+
+#[cfg(test)]
+mod parallel_tests {
+    use super::*;
+    use crate::util::{Bf16, Rng};
+
+    #[test]
+    fn parallel_matches_serial() {
+        let l = ModelLayout::transformer("p", 512, 128, 4, 512);
+        let mut rng = Rng::new(7);
+        let old = ParamSet::random(&l, 0.02, &mut rng);
+        let mut new = old.clone();
+        for t in &mut new.tensors {
+            for _ in 0..50 {
+                let i = rng.range(0, t.len());
+                t[i] = Bf16::from_bits(t[i].to_bits() ^ 0x0011);
+            }
+        }
+        let serial = extract_delta(&l, &old, &new, 1, 2, ApplyMode::Assign);
+        let parallel = extract_delta_parallel(&l, &old, &new, 1, 2, ApplyMode::Assign, 8);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn single_thread_falls_back() {
+        let l = ModelLayout::transformer("p", 64, 16, 2, 32);
+        let mut rng = Rng::new(8);
+        let old = ParamSet::random(&l, 0.02, &mut rng);
+        let d = extract_delta_parallel(&l, &old, &old, 0, 1, ApplyMode::Assign, 16);
+        assert_eq!(d.nnz(), 0);
+    }
+}

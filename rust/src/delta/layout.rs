@@ -1,0 +1,173 @@
+//! Model parameter layout: the fixed, ordered list of *fused* tensors that
+//! both the L2 JAX model and the L3 coordinator agree on.
+//!
+//! Following §5.1, attention projections are written under fused inference
+//! names (Q‖K‖V -> `qkv_proj`, Gate‖Up -> `gate_up_proj`) by stacking the
+//! split blocks at deterministic offsets, so a delta addresses each fused
+//! tensor through a single flat 1-D index space.
+
+/// One fused parameter tensor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn new(name: &str, shape: &[usize]) -> Self {
+        TensorSpec { name: name.to_string(), shape: shape.to_vec() }
+    }
+
+    pub fn numel(&self) -> u64 {
+        self.shape.iter().map(|&d| d as u64).product()
+    }
+}
+
+/// Ordered fused-tensor layout of a model. Tensor ids are positions in
+/// `tensors`; a global flat index space concatenates tensors in order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelLayout {
+    pub model_id: String,
+    pub tensors: Vec<TensorSpec>,
+}
+
+impl ModelLayout {
+    pub fn new(model_id: &str, tensors: Vec<TensorSpec>) -> Self {
+        ModelLayout { model_id: model_id.to_string(), tensors }
+    }
+
+    /// Transformer layout mirroring the python model (model.py) exactly:
+    /// embed, final_norm, norms, qkv_proj, o_proj, gate_up_proj, down_proj.
+    pub fn transformer(
+        model_id: &str,
+        vocab: usize,
+        d_model: usize,
+        n_layers: usize,
+        d_ff: usize,
+    ) -> Self {
+        ModelLayout::new(
+            model_id,
+            vec![
+                TensorSpec::new("embed", &[vocab, d_model]),
+                TensorSpec::new("final_norm", &[d_model]),
+                TensorSpec::new("norms", &[n_layers, 2, d_model]),
+                // Q ‖ K ‖ V fused on the output dim (paper Fig 6).
+                TensorSpec::new("qkv_proj", &[n_layers, d_model, 3 * d_model]),
+                TensorSpec::new("o_proj", &[n_layers, d_model, d_model]),
+                // Gate ‖ Up fused on the output dim.
+                TensorSpec::new("gate_up_proj", &[n_layers, d_model, 2 * d_ff]),
+                TensorSpec::new("down_proj", &[n_layers, d_ff, d_model]),
+            ],
+        )
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    /// Dense bf16 footprint in bytes (what full-weight broadcast ships).
+    pub fn dense_bytes_bf16(&self) -> u64 {
+        self.total_params() * 2
+    }
+
+    /// Flat offset of tensor `i` in the global index space.
+    pub fn tensor_offset(&self, i: usize) -> u64 {
+        self.tensors[..i].iter().map(|t| t.numel()).sum()
+    }
+
+    /// Map a global flat index to (tensor id, intra-tensor index).
+    pub fn locate(&self, flat: u64) -> Option<(usize, u64)> {
+        let mut off = 0u64;
+        for (i, t) in self.tensors.iter().enumerate() {
+            let n = t.numel();
+            if flat < off + n {
+                return Some((i, flat - off));
+            }
+            off += n;
+        }
+        None
+    }
+
+    pub fn tensor_id(&self, name: &str) -> Option<usize> {
+        self.tensors.iter().position(|t| t.name == name)
+    }
+
+    /// Stable 64-bit id of the layout (model identity check on deltas).
+    pub fn fingerprint(&self) -> u64 {
+        // FNV-1a over the textual description; stable across runs/platforms.
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        eat(self.model_id.as_bytes());
+        for t in &self.tensors {
+            eat(t.name.as_bytes());
+            for &d in &t.shape {
+                eat(&(d as u64).to_le_bytes());
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> ModelLayout {
+        ModelLayout::transformer("t", 256, 64, 2, 256)
+    }
+
+    #[test]
+    fn transformer_param_count() {
+        let l = small();
+        // embed 256*64 + final_norm 64 + norms 2*2*64
+        // + qkv 2*64*192 + o 2*64*64 + gate_up 2*64*512 + down 2*256*64
+        let expect = 256 * 64 + 64 + 2 * 2 * 64 + 2 * 64 * 192 + 2 * 64 * 64
+            + 2 * 64 * 512 + 2 * 256 * 64;
+        assert_eq!(l.total_params(), expect as u64);
+        assert_eq!(l.dense_bytes_bf16(), 2 * expect as u64);
+    }
+
+    #[test]
+    fn offsets_partition_index_space() {
+        let l = small();
+        let mut off = 0;
+        for i in 0..l.tensors.len() {
+            assert_eq!(l.tensor_offset(i), off);
+            off += l.tensors[i].numel();
+        }
+        assert_eq!(off, l.total_params());
+    }
+
+    #[test]
+    fn locate_round_trips() {
+        let l = small();
+        for i in 0..l.tensors.len() {
+            let off = l.tensor_offset(i);
+            assert_eq!(l.locate(off), Some((i, 0)));
+            assert_eq!(l.locate(off + l.tensors[i].numel() - 1), Some((i, l.tensors[i].numel() - 1)));
+        }
+        assert_eq!(l.locate(l.total_params()), None);
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_shape() {
+        let a = small();
+        let b = ModelLayout::transformer("t", 256, 64, 2, 257);
+        let c = ModelLayout::transformer("u", 256, 64, 2, 256);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        assert_eq!(a.fingerprint(), small().fingerprint());
+    }
+
+    #[test]
+    fn fused_tensor_names_match_paper() {
+        let l = small();
+        assert!(l.tensor_id("qkv_proj").is_some());
+        assert!(l.tensor_id("gate_up_proj").is_some());
+    }
+}

@@ -1,0 +1,251 @@
+//! Lossless sparse delta checkpoints (paper §5.1).
+//!
+//! One RL step changes ~1% of parameter elements (§3). The Trainer diffs
+//! consecutive bf16 policy snapshots, keeps only changed elements, and
+//! encodes them as per-tensor (LEB128 gap-coded index, bf16 value) sections
+//! wrapped in a versioned, hashed, immutable artifact.
+//!
+//! Value semantics: by default SparrowRL stores the **new bf16 bit
+//! pattern** and applies it with scatter-*assign*. The paper describes
+//! scatter-add of deltas; with bf16 storage `old + (new-old)` re-rounds and
+//! is not always bit-exact, whereas assignment is lossless by construction
+//! at identical payload size (16 bits/value). An additive mode is provided
+//! for compatibility experiments (`ApplyMode::Add`).
+
+pub mod checkpoint;
+pub mod encode;
+pub mod extract;
+pub mod layout;
+pub mod naive;
+pub mod varint;
+
+pub use checkpoint::{CheckpointStore, DeltaCheckpoint};
+pub use encode::{decode_delta, encode_delta, DecodeError};
+pub use extract::{apply_delta, extract_delta, extract_delta_parallel};
+pub use layout::{ModelLayout, TensorSpec};
+
+use crate::util::Bf16;
+
+/// How delta values are applied to actor-resident parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ApplyMode {
+    /// Values are new bf16 bit patterns; apply by assignment (lossless).
+    Assign,
+    /// Values are bf16 differences; apply by addition (paper wording;
+    /// bit-exactness not guaranteed under bf16 re-rounding).
+    Add,
+}
+
+impl ApplyMode {
+    pub fn to_u8(self) -> u8 {
+        match self {
+            ApplyMode::Assign => 0,
+            ApplyMode::Add => 1,
+        }
+    }
+    pub fn from_u8(x: u8) -> Option<ApplyMode> {
+        match x {
+            0 => Some(ApplyMode::Assign),
+            1 => Some(ApplyMode::Add),
+            _ => None,
+        }
+    }
+}
+
+/// Sparse update for one fused tensor: sorted distinct flat indices and the
+/// matching values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorDelta {
+    pub tensor: u32,
+    pub idx: Vec<u64>,
+    pub vals: Vec<Bf16>,
+}
+
+impl TensorDelta {
+    pub fn nnz(&self) -> u64 {
+        debug_assert_eq!(self.idx.len(), self.vals.len());
+        self.idx.len() as u64
+    }
+}
+
+/// A full-model sparse delta: what one training step ships to every actor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseDelta {
+    /// Policy version this delta *produces*.
+    pub version: u64,
+    /// Version it must be applied on top of (acceptance predicate §5.2).
+    pub base_version: u64,
+    /// Fingerprint of the `ModelLayout` this delta addresses.
+    pub model_fp: u64,
+    pub mode: ApplyMode,
+    pub tensors: Vec<TensorDelta>,
+}
+
+impl SparseDelta {
+    pub fn nnz(&self) -> u64 {
+        self.tensors.iter().map(|t| t.nnz()).sum()
+    }
+
+    /// Element-wise nonzero ratio rho (paper Eq. 1).
+    pub fn density(&self, layout: &ModelLayout) -> f64 {
+        self.nnz() as f64 / layout.total_params() as f64
+    }
+
+    /// Sanity checks: sorted distinct indices, in-bounds, matching lengths.
+    pub fn validate(&self, layout: &ModelLayout) -> Result<(), String> {
+        if self.model_fp != layout.fingerprint() {
+            return Err("model fingerprint mismatch".into());
+        }
+        for t in &self.tensors {
+            let spec = layout
+                .tensors
+                .get(t.tensor as usize)
+                .ok_or_else(|| format!("tensor id {} out of range", t.tensor))?;
+            if t.idx.len() != t.vals.len() {
+                return Err(format!("{}: idx/vals length mismatch", spec.name));
+            }
+            let n = spec.numel();
+            let mut prev: Option<u64> = None;
+            for &i in &t.idx {
+                if i >= n {
+                    return Err(format!("{}: index {} >= numel {}", spec.name, i, n));
+                }
+                if let Some(p) = prev {
+                    if i <= p {
+                        return Err(format!("{}: indices not strictly increasing", spec.name));
+                    }
+                }
+                prev = Some(i);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A model's parameters as bf16 storage, one buffer per fused tensor —
+/// the actor-resident policy the deltas are applied to.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSet {
+    pub tensors: Vec<Vec<Bf16>>,
+}
+
+impl ParamSet {
+    pub fn zeros(layout: &ModelLayout) -> Self {
+        ParamSet {
+            tensors: layout
+                .tensors
+                .iter()
+                .map(|t| vec![Bf16::ZERO; t.numel() as usize])
+                .collect(),
+        }
+    }
+
+    /// Gaussian init quantized to bf16 (matches the model's init scale).
+    pub fn random(layout: &ModelLayout, scale: f32, rng: &mut crate::util::Rng) -> Self {
+        ParamSet {
+            tensors: layout
+                .tensors
+                .iter()
+                .map(|t| {
+                    (0..t.numel())
+                        .map(|_| Bf16::from_f32(rng.normal() as f32 * scale))
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+
+    /// Transformer-style init: Gaussian(0.02) weights, norm gains at 1.0
+    /// (mirrors `python/compile/model.py::init_params`).
+    pub fn transformer_init(layout: &ModelLayout, rng: &mut crate::util::Rng) -> Self {
+        ParamSet {
+            tensors: layout
+                .tensors
+                .iter()
+                .map(|t| {
+                    if t.name.contains("norm") {
+                        vec![Bf16::from_f32(1.0); t.numel() as usize]
+                    } else {
+                        (0..t.numel())
+                            .map(|_| Bf16::from_f32(rng.normal() as f32 * 0.02))
+                            .collect()
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.tensors.iter().map(|t| t.len() as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> ModelLayout {
+        ModelLayout::transformer("t", 64, 16, 2, 32)
+    }
+
+    #[test]
+    fn validate_accepts_well_formed() {
+        let l = layout();
+        let d = SparseDelta {
+            version: 2,
+            base_version: 1,
+            model_fp: l.fingerprint(),
+            mode: ApplyMode::Assign,
+            tensors: vec![TensorDelta {
+                tensor: 0,
+                idx: vec![0, 5, 9],
+                vals: vec![Bf16::from_f32(1.0); 3],
+            }],
+        };
+        assert!(d.validate(&l).is_ok());
+        assert_eq!(d.nnz(), 3);
+    }
+
+    #[test]
+    fn validate_rejects_unsorted_and_oob() {
+        let l = layout();
+        let mut d = SparseDelta {
+            version: 2,
+            base_version: 1,
+            model_fp: l.fingerprint(),
+            mode: ApplyMode::Assign,
+            tensors: vec![TensorDelta {
+                tensor: 0,
+                idx: vec![5, 5],
+                vals: vec![Bf16::ZERO; 2],
+            }],
+        };
+        assert!(d.validate(&l).is_err());
+        d.tensors[0].idx = vec![u64::MAX];
+        d.tensors[0].vals = vec![Bf16::ZERO];
+        assert!(d.validate(&l).is_err());
+        d.tensors[0].tensor = 99;
+        assert!(d.validate(&l).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_wrong_model() {
+        let l = layout();
+        let d = SparseDelta {
+            version: 1,
+            base_version: 0,
+            model_fp: 0xDEAD,
+            mode: ApplyMode::Assign,
+            tensors: vec![],
+        };
+        assert!(d.validate(&l).is_err());
+    }
+
+    #[test]
+    fn paramset_shapes_match_layout() {
+        let l = layout();
+        let p = ParamSet::zeros(&l);
+        assert_eq!(p.total_params(), l.total_params());
+        assert_eq!(p.tensors.len(), l.tensors.len());
+    }
+}

@@ -1,0 +1,199 @@
+//! Unsigned LEB128 variable-length integers (paper §5.1, Figure 6).
+//!
+//! Sorted nonzero indices are first delta-encoded (each index replaced by
+//! its gap from the predecessor) and the gaps — overwhelmingly < 128 at
+//! ~1% density — are stored as LEB128: 7 payload bits per byte, high bit
+//! set on all but the final byte. The paper's example: 198 = 0xC6 0x01
+//! (payload 70 + (1<<7)).
+
+/// Append the LEB128 encoding of `x` to `out`. Returns bytes written.
+#[inline]
+pub fn write_uleb128(out: &mut Vec<u8>, mut x: u64) -> usize {
+    let mut n = 0;
+    loop {
+        let byte = (x & 0x7F) as u8;
+        x >>= 7;
+        n += 1;
+        if x == 0 {
+            out.push(byte);
+            return n;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Decode one LEB128 value from `buf[pos..]`, advancing `pos`.
+/// Returns None on truncation or overlong/overflowing encodings.
+#[inline]
+pub fn read_uleb128(buf: &[u8], pos: &mut usize) -> Option<u64> {
+    let mut x: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let byte = *buf.get(*pos)?;
+        *pos += 1;
+        if shift == 63 && byte > 1 {
+            return None; // would overflow u64
+        }
+        x |= ((byte & 0x7F) as u64) << shift;
+        if byte & 0x80 == 0 {
+            return Some(x);
+        }
+        shift += 7;
+        if shift > 63 {
+            return None;
+        }
+    }
+}
+
+/// Size in bytes of the LEB128 encoding of `x`.
+#[inline]
+pub fn uleb128_len(x: u64) -> usize {
+    if x == 0 {
+        return 1;
+    }
+    (64 - x.leading_zeros() as usize).div_ceil(7)
+}
+
+/// Encode a *sorted, distinct* index array as first-index + gap LEB128s.
+/// Panics in debug builds if the input is not strictly increasing.
+pub fn encode_index_gaps(indices: &[u64], out: &mut Vec<u8>) {
+    let mut prev: Option<u64> = None;
+    for &i in indices {
+        match prev {
+            None => {
+                write_uleb128(out, i);
+            }
+            Some(p) => {
+                debug_assert!(i > p, "indices must be strictly increasing");
+                write_uleb128(out, i - p);
+            }
+        }
+        prev = Some(i);
+    }
+}
+
+/// Decode `count` gap-encoded indices from `buf[pos..]`.
+pub fn decode_index_gaps(buf: &[u8], pos: &mut usize, count: usize) -> Option<Vec<u64>> {
+    let mut out = Vec::with_capacity(count);
+    let mut acc: u64 = 0;
+    for k in 0..count {
+        let v = read_uleb128(buf, pos)?;
+        acc = if k == 0 { v } else { acc.checked_add(v)? };
+        out.push(acc);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn paper_example_198() {
+        let mut buf = Vec::new();
+        write_uleb128(&mut buf, 198);
+        assert_eq!(buf, vec![0xC6, 0x01]);
+        let mut pos = 0;
+        assert_eq!(read_uleb128(&buf, &mut pos), Some(198));
+        assert_eq!(pos, 2);
+    }
+
+    #[test]
+    fn single_byte_below_128() {
+        for x in 0..128u64 {
+            let mut buf = Vec::new();
+            assert_eq!(write_uleb128(&mut buf, x), 1);
+            assert_eq!(buf, vec![x as u8]);
+        }
+    }
+
+    #[test]
+    fn boundary_lengths() {
+        assert_eq!(uleb128_len(0), 1);
+        assert_eq!(uleb128_len(127), 1);
+        assert_eq!(uleb128_len(128), 2);
+        assert_eq!(uleb128_len(16383), 2);
+        assert_eq!(uleb128_len(16384), 3);
+        assert_eq!(uleb128_len(u64::MAX), 10);
+    }
+
+    #[test]
+    fn round_trip_extremes() {
+        for &x in &[0u64, 1, 127, 128, 255, 300, 1 << 20, u64::MAX - 1, u64::MAX] {
+            let mut buf = Vec::new();
+            let n = write_uleb128(&mut buf, x);
+            assert_eq!(n, uleb128_len(x));
+            let mut pos = 0;
+            assert_eq!(read_uleb128(&buf, &mut pos), Some(x), "x={x}");
+            assert_eq!(pos, n);
+        }
+    }
+
+    #[test]
+    fn truncated_input_rejected() {
+        let mut buf = Vec::new();
+        write_uleb128(&mut buf, 1 << 30);
+        buf.pop();
+        let mut pos = 0;
+        assert_eq!(read_uleb128(&buf, &mut pos), None);
+    }
+
+    #[test]
+    fn overflow_rejected() {
+        // 11 continuation bytes can never be a valid u64.
+        let buf = vec![0x80u8; 10];
+        let mut pos = 0;
+        assert_eq!(read_uleb128(&buf, &mut pos), None);
+        // 2^64 exactly (10 bytes, final byte 2) overflows.
+        let buf = [0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x02];
+        let mut pos = 0;
+        assert_eq!(read_uleb128(&buf, &mut pos), None);
+    }
+
+    #[test]
+    fn prop_round_trip_random_u64() {
+        prop::check("uleb128 round trip", 200, |rng| {
+            // Mix uniform and low-magnitude values (gap-like distribution).
+            let x = if rng.chance(0.5) { rng.below(256) } else { rng.next_u64() };
+            let mut buf = Vec::new();
+            write_uleb128(&mut buf, x);
+            let mut pos = 0;
+            assert_eq!(read_uleb128(&buf, &mut pos), Some(x));
+            assert_eq!(pos, buf.len());
+        });
+    }
+
+    #[test]
+    fn prop_gap_encoding_round_trip() {
+        prop::check("index gap round trip", 100, |rng| {
+            let n = rng.range(1, 100_000) as u64;
+            let k = rng.range(0, (n as usize).min(500) + 1);
+            let idx = prop::sparse_indices(rng, n, k);
+            let mut buf = Vec::new();
+            encode_index_gaps(&idx, &mut buf);
+            let mut pos = 0;
+            let dec = decode_index_gaps(&buf, &mut pos, k).unwrap();
+            assert_eq!(dec, idx);
+            assert_eq!(pos, buf.len());
+        });
+    }
+
+    #[test]
+    fn gap_encoding_much_smaller_than_fixed_width_at_1pct() {
+        // At ~1% density mean gap is ~100 < 128, so ~1 byte per index
+        // versus 4 bytes for int32 — the paper's Figure 10 claim.
+        let mut rng = crate::util::Rng::new(17);
+        let n = 1_000_000u64;
+        let idx = prop::sparse_indices(&mut rng, n, 10_000);
+        let mut buf = Vec::new();
+        encode_index_gaps(&idx, &mut buf);
+        let fixed = idx.len() * 4;
+        assert!(
+            buf.len() * 2 < fixed,
+            "varint {} vs int32 {}",
+            buf.len(),
+            fixed
+        );
+    }
+}

@@ -1,0 +1,177 @@
+//! Transfer-cost experiments: Table 2 (bandwidth barrier), Figure 10
+//! (encoding ablation), Figure 12 (tc-style bandwidth sweep).
+
+use super::print_table;
+use crate::config::{self, regions};
+use crate::data::Benchmark;
+use crate::delta::{encode_delta, naive, ApplyMode, SparseDelta, TensorDelta};
+use crate::netsim::Link;
+use crate::sim::compute::{delta_payload_bytes, naive_payload_bytes, ComputeModel};
+use crate::transport::plan::TransferPlan;
+use crate::util::cli::Args;
+use crate::util::{fmt_bytes, fmt_secs, prop, Bf16, Rng};
+use anyhow::Result;
+
+/// Table 2: full-model sync time for Qwen3-8B on HPC vs commodity links.
+pub fn table2(_args: &Args) -> Result<()> {
+    let model = config::model("qwen3-8b").unwrap();
+    let cm = ComputeModel::new(Benchmark::Gsm8k, 4);
+    let bytes = model.dense_bytes_bf16();
+    let cases = [
+        ("HPC fabric (RDMA)", Link::emulated(100e9, 0.000_05, 0.0)),
+        ("Commodity network", Link::emulated(1e9, 0.030, 0.0)),
+    ];
+    let mut rows = Vec::new();
+    for (name, link) in cases {
+        // Table 2 divides payload by line rate (saturating bulk transfer).
+        let t = link.startup_time() + bytes as f64 * 8.0 / link.capacity_bps;
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.0} s", cm.train_time(&model, crate::sim::compute::TRAIN_ANCHOR_TOKENS)),
+            "45 s".to_string(),
+            format!("{:.0} Gbps", link.capacity_bps / 1e9),
+            fmt_secs(t),
+        ]);
+    }
+    print_table(
+        "Table 2: full-model synchronization, Qwen3-8B (16 GB bf16)",
+        &["Network", "Trainer", "Actor", "BW", "Sync"],
+        &rows,
+    );
+    println!("(paper: 1.3 s on 100 Gbps RDMA; 128 s on 1 Gbps commodity)");
+    Ok(())
+}
+
+/// Build a real sparse delta at density `rho` over `n` elements and return
+/// measured (varint bytes, naive bytes) per nnz using the actual codecs.
+pub fn measured_bytes_per_nnz(n: u64, rho: f64, seed: u64) -> (f64, f64) {
+    let mut rng = Rng::new(seed);
+    let k = ((n as f64 * rho) as usize).max(1);
+    let layout = crate::delta::ModelLayout::new(
+        "sample",
+        vec![crate::delta::TensorSpec::new("w", &[n as usize])],
+    );
+    let idx = prop::sparse_indices(&mut rng, n, k);
+    let vals: Vec<Bf16> = (0..k).map(|_| Bf16::from_bits(rng.next_u64() as u16)).collect();
+    let d = SparseDelta {
+        version: 1,
+        base_version: 0,
+        model_fp: layout.fingerprint(),
+        mode: ApplyMode::Assign,
+        tensors: vec![TensorDelta { tensor: 0, idx, vals }],
+    };
+    let varint = encode_delta(&d).len() as f64 / k as f64;
+    let naive = naive::encode_naive(&d, &layout).len() as f64 / k as f64;
+    (varint, naive)
+}
+
+/// Figure 10: per-step delta encoding + transfer cost for Qwen3-8B over
+/// the US-Canada link. Payloads extrapolate the *measured* bytes/nnz of
+/// the real codec (sampled at 64M elements) to the 8B model.
+pub fn fig10(args: &Args) -> Result<()> {
+    let model = config::model("qwen3-8b").unwrap();
+    let rho = model.expected_rho;
+    let sample_n: u64 = args.parse_or("sample-elems", 1u64 << 26);
+    let (varint_per, naive_per) = measured_bytes_per_nnz(sample_n, rho, 7);
+    let nnz = model.total_params() as f64 * rho;
+    let varint_bytes = (nnz * varint_per) as u64;
+    let naive_bytes = (nnz * naive_per) as u64;
+    let link = Link::from_profile(&regions::CANADA);
+    let mut rng = Rng::new(0);
+    let single = TransferPlan::single_stream();
+    let multi = TransferPlan::sparrow_default();
+    let rows = vec![
+        (
+            "naive int32 (single stream)",
+            naive_bytes,
+            single.delivery_time(&link, naive_bytes, None, &mut rng),
+        ),
+        (
+            "varint delta (single stream)",
+            varint_bytes,
+            single.delivery_time(&link, varint_bytes, None, &mut rng),
+        ),
+        (
+            "varint delta + MS (4 streams)",
+            varint_bytes,
+            multi.delivery_time(&link, varint_bytes, None, &mut rng),
+        ),
+    ]
+    .into_iter()
+    .map(|(name, b, t)| vec![name.to_string(), fmt_bytes(b), fmt_secs(t)])
+    .collect::<Vec<_>>();
+    print_table(
+        &format!(
+            "Figure 10: per-step delta transfer, Qwen3-8B US-Canada (rho={:.2}%, codec measured at {} elems: {:.2} B/nnz varint, {:.2} B/nnz naive)",
+            rho * 100.0, sample_n, varint_per, naive_per
+        ),
+        &["Encoding", "Payload", "Transfer"],
+        &rows,
+    );
+    println!("(paper: 414 MB / 9.22 s naive; 202 MB / 4.71 s varint; 2.90 s +MS)");
+    Ok(())
+}
+
+/// Figure 12: per-step weight transfer time under emulated bandwidth
+/// (0.25-10 Gbps), Full vs Delta, for 4B/8B/14B.
+pub fn fig12(args: &Args) -> Result<()> {
+    let bws: Vec<f64> = args.list_or("bw", &[0.25, 0.5, 1.0, 2.5, 5.0, 10.0]);
+    let models = ["qwen3-4b", "qwen3-8b", "qwen3-14b"];
+    let mut rng = Rng::new(0);
+    let mut rows = Vec::new();
+    for name in models {
+        let model = config::model(name).unwrap();
+        let dense = model.dense_bytes_bf16();
+        let delta = delta_payload_bytes(&model, model.expected_rho);
+        for &gbps in &bws {
+            // tc-style emulation: clean link at the shaped rate, WAN RTT.
+            let link = Link::emulated(gbps * 1e9, 0.030, 0.0);
+            let t_full = TransferPlan::full_weight().delivery_time(&link, dense, None, &mut rng);
+            let t_delta =
+                TransferPlan::sparrow_default().delivery_time(&link, delta, None, &mut rng);
+            rows.push(vec![
+                name.to_string(),
+                format!("{gbps} Gbps"),
+                fmt_secs(t_full),
+                fmt_secs(t_delta),
+                format!("{:.0}x", t_full / t_delta),
+            ]);
+        }
+    }
+    print_table(
+        "Figure 12: per-step transfer time under emulated bandwidth (tc)",
+        &["Model", "BW", "Full", "Delta", "Reduction"],
+        &rows,
+    );
+    println!("(paper anchors: 8B Full 566 s @ 250 Mbps, 17.3 s @ 10 Gbps; Delta 0.25 s @ 10 Gbps)");
+    // Sanity anchor for the naive-payload comparison.
+    let m8 = config::model("qwen3-8b").unwrap();
+    println!(
+        "analytic payloads 8B: dense {} | varint {} | naive {}",
+        fmt_bytes(m8.dense_bytes_bf16()),
+        fmt_bytes(delta_payload_bytes(&m8, m8.expected_rho)),
+        fmt_bytes(naive_payload_bytes(&m8, m8.expected_rho)),
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measured_codec_rates_sane_at_one_percent() {
+        let (varint, naive) = measured_bytes_per_nnz(1 << 20, 0.01, 3);
+        // ~2B value + ~1.3B index (+framing) vs 6B fixed.
+        assert!((3.0..3.8).contains(&varint), "varint {varint:.2} B/nnz");
+        assert!((5.9..6.3).contains(&naive), "naive {naive:.2} B/nnz");
+    }
+
+    #[test]
+    fn experiments_run_clean() {
+        let args = Args::parse(vec!["--sample-elems".into(), "1048576".into()]);
+        table2(&args).unwrap();
+        fig10(&args).unwrap();
+        fig12(&args).unwrap();
+    }
+}

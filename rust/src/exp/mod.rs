@@ -1,0 +1,67 @@
+//! Experiment harness: one target per table/figure in the paper's §7
+//! (see DESIGN.md §4 for the index). Run via `sparrowrl exp <id>`.
+
+pub mod e2e;
+pub mod encoding;
+pub mod sparsity;
+
+use crate::util::cli::Args;
+use anyhow::{bail, Result};
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "table2", "fig3", "fig4", "table4", "fig8", "fig9", "fig10", "fig11",
+    "table5", "fig12", "fig13", "table6", "table7",
+];
+
+/// Dispatch one experiment by id.
+pub fn run(id: &str, args: &Args) -> Result<()> {
+    match id {
+        "table2" => encoding::table2(args),
+        "fig10" => encoding::fig10(args),
+        "fig12" => encoding::fig12(args),
+        "fig3" => sparsity::fig3(args),
+        "fig4" => sparsity::fig4(args),
+        "table4" => sparsity::table4(args),
+        "fig8" => e2e::fig8(args),
+        "fig9" => e2e::fig9(args),
+        "fig11" => e2e::fig11(args),
+        "fig13" => e2e::fig13(args),
+        "table5" => e2e::table5(args),
+        "table6" => e2e::table6(args),
+        "table7" => e2e::table7(args),
+        "all" => {
+            for id in ALL {
+                println!("\n################ {id} ################");
+                run(id, args)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?}; known: {ALL:?} or 'all'"),
+    }
+}
+
+/// Shared pretty-printer: a fixed-width table.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths.get(i).copied().unwrap_or(8)));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(&header.iter().map(|h| h.to_string()).collect::<Vec<_>>());
+    line(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>());
+    for row in rows {
+        line(row);
+    }
+}

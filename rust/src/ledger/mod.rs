@@ -1,0 +1,384 @@
+//! Job Ledger: prompt pool, time-bounded leases, and the result-acceptance
+//! predicate (paper §4, §5.4).
+//!
+//! Coordination is deliberately *implicit*: an actor claims prompts under a
+//! lease sized at 2-3x the median completion time; if it fails, is
+//! preempted, or is partitioned away, the lease expires and the prompts
+//! return to the pool for surviving actors — no global barrier, no failure
+//! detector. The Trainer accepts a result only if
+//!
+//!   (1) the lease is still valid        (t_r <= t_expire)
+//!   (2) the behaviour version matches   (v_r == v_job)
+//!   (3) the checkpoint hash matches     (h_r == h(v_job))
+//!
+//! which also prevents stale rollouts from poisoning training.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+pub type PromptId = u64;
+pub type ActorId = u32;
+
+/// Lease policy: duration = clamp(multiplier * median completion).
+#[derive(Clone, Copy, Debug)]
+pub struct LeasePolicy {
+    pub multiplier: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Default for LeasePolicy {
+    fn default() -> Self {
+        // Paper: "time-bounded lease (2-3x median completion time)".
+        LeasePolicy { multiplier: 2.5, min_s: 10.0, max_s: 1800.0 }
+    }
+}
+
+/// An outstanding claim on one prompt.
+#[derive(Clone, Debug)]
+pub struct Lease {
+    pub prompt: PromptId,
+    pub actor: ActorId,
+    pub issued_at: f64,
+    pub expires_at: f64,
+    /// Policy version the rollout must be generated on.
+    pub version: u64,
+    /// Integrity hash of that version's checkpoint.
+    pub hash: [u8; 32],
+}
+
+/// Why a submission was rejected (§5.4's predicate, itemized).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Reject {
+    UnknownLease,
+    WrongActor,
+    LeaseExpired,
+    VersionMismatch,
+    HashMismatch,
+}
+
+/// Ledger statistics (exported to metrics).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LedgerStats {
+    pub issued: u64,
+    pub completed: u64,
+    pub expired: u64,
+    pub rejected: u64,
+}
+
+/// The Trainer Hub's job ledger.
+pub struct JobLedger {
+    policy: LeasePolicy,
+    pending: VecDeque<PromptId>,
+    leases: HashMap<PromptId, Lease>,
+    /// Completion-time samples for the median estimate (bounded window).
+    samples: VecDeque<f64>,
+    stats: LedgerStats,
+    /// Expiry index: expiry time -> prompts (approximate, lazily cleaned).
+    expiry: BTreeMap<u64, Vec<PromptId>>,
+}
+
+impl JobLedger {
+    pub fn new(policy: LeasePolicy) -> JobLedger {
+        JobLedger {
+            policy,
+            pending: VecDeque::new(),
+            leases: HashMap::new(),
+            samples: VecDeque::new(),
+            stats: LedgerStats::default(),
+            expiry: BTreeMap::new(),
+        }
+    }
+
+    /// Add prompts to the pool.
+    pub fn post(&mut self, prompts: impl IntoIterator<Item = PromptId>) {
+        self.pending.extend(prompts);
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.leases.len()
+    }
+
+    pub fn stats(&self) -> LedgerStats {
+        self.stats
+    }
+
+    /// Current lease duration from the completion-time estimate.
+    pub fn lease_duration(&self) -> f64 {
+        let median = self.median_completion().unwrap_or(self.policy.min_s);
+        (self.policy.multiplier * median).clamp(self.policy.min_s, self.policy.max_s)
+    }
+
+    fn median_completion(&self) -> Option<f64> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut v: Vec<f64> = self.samples.iter().copied().collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(v[v.len() / 2])
+    }
+
+    /// Claim up to `n` prompts for `actor` running `version`/`hash`.
+    pub fn issue(
+        &mut self,
+        actor: ActorId,
+        version: u64,
+        hash: [u8; 32],
+        now: f64,
+        n: usize,
+    ) -> Vec<PromptId> {
+        let dur = self.lease_duration();
+        let mut out = Vec::with_capacity(n.min(self.pending.len()));
+        for _ in 0..n {
+            let Some(p) = self.pending.pop_front() else { break };
+            let lease = Lease {
+                prompt: p,
+                actor,
+                issued_at: now,
+                expires_at: now + dur,
+                version,
+                hash,
+            };
+            self.expiry
+                .entry((lease.expires_at * 1000.0) as u64)
+                .or_default()
+                .push(p);
+            self.leases.insert(p, lease);
+            self.stats.issued += 1;
+            out.push(p);
+        }
+        out
+    }
+
+    /// Submit a result: the acceptance predicate, verbatim.
+    pub fn submit(
+        &mut self,
+        actor: ActorId,
+        prompt: PromptId,
+        result_version: u64,
+        result_hash: [u8; 32],
+        now: f64,
+    ) -> Result<(), Reject> {
+        let lease = self.leases.get(&prompt).ok_or(Reject::UnknownLease)?;
+        if lease.actor != actor {
+            self.stats.rejected += 1;
+            return Err(Reject::WrongActor);
+        }
+        if now > lease.expires_at {
+            self.stats.rejected += 1;
+            return Err(Reject::LeaseExpired);
+        }
+        if lease.version != result_version {
+            self.stats.rejected += 1;
+            return Err(Reject::VersionMismatch);
+        }
+        if lease.hash != result_hash {
+            self.stats.rejected += 1;
+            return Err(Reject::HashMismatch);
+        }
+        let lease = self.leases.remove(&prompt).unwrap();
+        self.stats.completed += 1;
+        self.samples.push_back(now - lease.issued_at);
+        if self.samples.len() > 256 {
+            self.samples.pop_front();
+        }
+        Ok(())
+    }
+
+    /// Expire overdue leases, returning their prompts to the pool
+    /// (actor crash, preemption, and link partition all land here).
+    pub fn expire(&mut self, now: f64) -> Vec<PromptId> {
+        let cutoff = (now * 1000.0) as u64;
+        let keys: Vec<u64> = self.expiry.range(..=cutoff).map(|(&k, _)| k).collect();
+        let mut returned = Vec::new();
+        for k in keys {
+            for p in self.expiry.remove(&k).unwrap() {
+                // A lease may have completed already (lazily indexed).
+                if let Some(lease) = self.leases.get(&p) {
+                    if now > lease.expires_at {
+                        self.leases.remove(&p);
+                        self.pending.push_back(p);
+                        self.stats.expired += 1;
+                        returned.push(p);
+                    }
+                }
+            }
+        }
+        returned
+    }
+
+    /// Forcibly revoke every lease held by `actor` (explicit failure
+    /// signal, e.g. connection reset in the real runtime). Lease expiry
+    /// would catch this anyway; revocation just shortens the window.
+    pub fn revoke_actor(&mut self, actor: ActorId) -> Vec<PromptId> {
+        let prompts: Vec<PromptId> = self
+            .leases
+            .values()
+            .filter(|l| l.actor == actor)
+            .map(|l| l.prompt)
+            .collect();
+        for p in &prompts {
+            self.leases.remove(p);
+            self.pending.push_back(*p);
+            self.stats.expired += 1;
+        }
+        prompts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const H: [u8; 32] = [7u8; 32];
+
+    fn ledger() -> JobLedger {
+        let mut l = JobLedger::new(LeasePolicy { multiplier: 2.0, min_s: 10.0, max_s: 100.0 });
+        l.post(0..10);
+        l
+    }
+
+    #[test]
+    fn issue_claims_from_pool() {
+        let mut l = ledger();
+        let got = l.issue(1, 5, H, 0.0, 4);
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        assert_eq!(l.pending_len(), 6);
+        assert_eq!(l.outstanding(), 4);
+    }
+
+    #[test]
+    fn valid_submission_accepted() {
+        let mut l = ledger();
+        let p = l.issue(1, 5, H, 0.0, 1)[0];
+        assert!(l.submit(1, p, 5, H, 3.0).is_ok());
+        assert_eq!(l.stats().completed, 1);
+        assert_eq!(l.outstanding(), 0);
+    }
+
+    #[test]
+    fn predicate_rejects_each_violation() {
+        let mut l = ledger();
+        let p = l.issue(1, 5, H, 0.0, 1)[0];
+        assert_eq!(l.submit(2, p, 5, H, 1.0), Err(Reject::WrongActor));
+        assert_eq!(l.submit(1, p, 4, H, 1.0), Err(Reject::VersionMismatch));
+        assert_eq!(l.submit(1, p, 5, [0u8; 32], 1.0), Err(Reject::HashMismatch));
+        assert_eq!(l.submit(1, p, 5, H, 999.0), Err(Reject::LeaseExpired));
+        assert_eq!(l.submit(1, 42, 5, H, 1.0), Err(Reject::UnknownLease));
+        // Still claimable by expiry.
+        assert_eq!(l.outstanding(), 1);
+        assert_eq!(l.stats().rejected, 4);
+    }
+
+    #[test]
+    fn expiry_returns_prompts_to_pool() {
+        let mut l = ledger();
+        let got = l.issue(1, 5, H, 0.0, 3);
+        assert_eq!(l.pending_len(), 7);
+        // No samples yet: duration = multiplier * min_s = 20 s.
+        assert!(l.expire(19.0).is_empty(), "not yet due");
+        let returned = l.expire(21.0);
+        assert_eq!(returned.len(), 3);
+        assert_eq!(l.pending_len(), 10);
+        assert_eq!(l.outstanding(), 0);
+        // Expired prompts return to the back of the pool and are
+        // re-issuable to another actor.
+        let again = l.issue(2, 5, H, 22.0, 10);
+        assert_eq!(again.len(), 10);
+        assert!(got.iter().all(|p| again.contains(p)));
+    }
+
+    #[test]
+    fn completed_lease_not_expired_later() {
+        let mut l = ledger();
+        let p = l.issue(1, 5, H, 0.0, 1)[0];
+        l.submit(1, p, 5, H, 2.0).unwrap();
+        let returned = l.expire(50.0);
+        assert!(returned.is_empty());
+        assert_eq!(l.stats().expired, 0);
+    }
+
+    #[test]
+    fn lease_duration_tracks_median_completion() {
+        let mut l = ledger();
+        let base = l.lease_duration();
+        assert_eq!(base, 20.0); // multiplier * min_s with no samples
+        // Feed 8 s completions (inside the 20 s lease) -> duration 16 s.
+        let mut now = 0.0;
+        for i in 0..20 {
+            let p = l.issue(1, 5, H, now, 1);
+            if p.is_empty() {
+                l.post([100 + i]);
+                continue;
+            }
+            now += 8.0;
+            l.submit(1, p[0], 5, H, now).unwrap();
+        }
+        assert!((l.lease_duration() - 16.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn revoke_actor_reclaims_everything() {
+        let mut l = ledger();
+        l.issue(1, 5, H, 0.0, 4);
+        l.issue(2, 5, H, 0.0, 2);
+        let reclaimed = l.revoke_actor(1);
+        assert_eq!(reclaimed.len(), 4);
+        assert_eq!(l.outstanding(), 2);
+        assert_eq!(l.pending_len(), 8);
+    }
+
+    #[test]
+    fn no_double_assignment_of_live_lease() {
+        let mut l = ledger();
+        let a = l.issue(1, 5, H, 0.0, 10);
+        assert_eq!(a.len(), 10);
+        // Pool drained; nothing to issue while leases live.
+        assert!(l.issue(2, 5, H, 1.0, 5).is_empty());
+    }
+
+    #[test]
+    fn prop_ledger_conserves_prompts() {
+        crate::util::prop::check("ledger conservation", 25, |rng| {
+            let mut l = JobLedger::new(LeasePolicy { multiplier: 2.0, min_s: 5.0, max_s: 50.0 });
+            let total = rng.range(1, 50) as u64;
+            l.post(0..total);
+            let mut now = 0.0;
+            let mut completed = 0u64;
+            for _ in 0..200 {
+                now += rng.f64() * 3.0;
+                match rng.range(0, 3) {
+                    0 => {
+                        let actor = rng.range(1, 4) as ActorId;
+                        l.issue(actor, 1, H, now, rng.range(1, 5));
+                    }
+                    1 => {
+                        // Submit a random outstanding lease as its owner.
+                        let leases: Vec<(PromptId, ActorId, f64)> = l
+                            .leases
+                            .iter()
+                            .map(|(&p, le)| (p, le.actor, le.expires_at))
+                            .collect();
+                        if let Some(&(p, a, exp)) = leases.first() {
+                            if now <= exp {
+                                l.submit(a, p, 1, H, now).unwrap();
+                                completed += 1;
+                            }
+                        }
+                    }
+                    _ => {
+                        l.expire(now);
+                    }
+                }
+                // Invariant: every prompt is pending, leased, or completed.
+                assert_eq!(
+                    l.pending_len() as u64 + l.outstanding() as u64 + completed,
+                    total
+                );
+            }
+        });
+    }
+}

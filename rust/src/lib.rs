@@ -1,0 +1,35 @@
+//! # SparrowRL
+//!
+//! Reproduction of *"RL over Commodity Networks: Overcoming the Bandwidth
+//! Barrier with Lossless Sparse Deltas"* (CS.DC 2026) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: lossless
+//!   sparse delta checkpoints, streaming multi-stream transfer with relay
+//!   fanout, heterogeneity-aware scheduling, lease-based fault tolerance,
+//!   plus the substrates they need (WAN simulator, metrics, cost model,
+//!   synthetic workloads) and a PJRT runtime that executes the AOT-lowered
+//!   JAX/Pallas model on the request path without Python.
+//! * **L2** — `python/compile/model.py`: transformer policy fwd + RL train
+//!   step, lowered once to `artifacts/*.hlo.txt`.
+//! * **L1** — `python/compile/kernels/`: Pallas attention and delta-diff
+//!   kernels called from L2 (interpret mode on CPU).
+//!
+//! See DESIGN.md for the system inventory and the paper-experiment index.
+
+pub mod actor;
+pub mod config;
+pub mod cost;
+pub mod data;
+pub mod delta;
+pub mod exp;
+pub mod ledger;
+pub mod metrics;
+pub mod netsim;
+pub mod rt;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod trainer;
+pub mod transport;
+pub mod util;

@@ -1,0 +1,119 @@
+//! SparrowRL launcher CLI.
+//!
+//! ```text
+//! sparrowrl exp <id> [--flags]   reproduce a paper table/figure (or 'all')
+//! sparrowrl train [--flags]      run the real RL loop on PJRT artifacts
+//! sparrowrl sim [--flags]        one simulated geo-distributed run
+//! sparrowrl list                 list experiments and models
+//! ```
+
+use sparrowrl::config;
+use sparrowrl::data::Benchmark;
+use sparrowrl::exp;
+use sparrowrl::rt::{run_local, LocalRunConfig};
+use sparrowrl::sim::driver::{run as sim_run, SimConfig};
+use sparrowrl::sim::{RegionSpec, System};
+use sparrowrl::trainer::Algorithm;
+use sparrowrl::util::cli::Args;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage:\n  sparrowrl exp <{}|all> [--flags]\n  sparrowrl train [--model sparrow-xs] \
+         [--steps N] [--sft-steps N] [--algorithm grpo|rloo|opo] [--lr-rl X] [--actors N] [--seed S]\n  \
+         sparrowrl sim [--model qwen3-8b] [--system sparrow|full|ms|ideal] [--bench gsm8k|math|deepscaler] [--steps N]\n  \
+         sparrowrl list",
+        exp::ALL.join("|")
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    let result = match cmd {
+        "exp" => {
+            let Some(id) = args.positional.get(1).map(|s| s.to_string()) else { usage() };
+            exp::run(&id, &args)
+        }
+        "train" => cmd_train(&args),
+        "sim" => cmd_sim(&args),
+        "list" => {
+            println!("experiments: {}", exp::ALL.join(", "));
+            println!("runnable models: {}", config::runnable_models().join(", "));
+            println!("analytic models: {}", config::paper_models().join(", "));
+            Ok(())
+        }
+        _ => usage(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let model = args.str_or("model", "sparrow-xs");
+    let mut cfg = LocalRunConfig::quick(&model);
+    cfg.steps = args.parse_or("steps", 10u64);
+    cfg.sft_steps = args.parse_or("sft-steps", 50u64);
+    cfg.lr_sft = args.parse_or("lr-sft", 5e-3f32);
+    cfg.lr_rl = args.parse_or("lr-rl", 1e-6f32);
+    cfg.n_actors = args.parse_or("actors", 2usize);
+    cfg.seed = args.parse_or("seed", 0u64);
+    cfg.max_new_tokens = args.parse_or("max-new", 8usize);
+    cfg.algorithm = Algorithm::parse(&args.str_or("algorithm", "grpo"))
+        .ok_or_else(|| anyhow::anyhow!("bad --algorithm"))?;
+    cfg.bench = Benchmark::parse(&args.str_or("bench", "gsm8k"))
+        .ok_or_else(|| anyhow::anyhow!("bad --bench"))?;
+    cfg.verbose = true;
+    println!(
+        "training {model} with {} on {} ({} actors, {} SFT + {} RL steps)",
+        cfg.algorithm.name(),
+        cfg.bench.name(),
+        cfg.n_actors,
+        cfg.sft_steps,
+        cfg.steps
+    );
+    let report = run_local(&cfg)?;
+    println!(
+        "\ndone: {} versions, mean rho {:.3}%, wall {:.1}s",
+        report.final_version,
+        report.mean_rho() * 100.0,
+        report.wall_s
+    );
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> anyhow::Result<()> {
+    let model = config::model(&args.str_or("model", "qwen3-8b"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let system = match args.str_or("system", "sparrow").as_str() {
+        "sparrow" => System::Sparrow,
+        "full" => System::PrimeRlFull,
+        "ms" => System::PrimeRlMultiStream,
+        "ideal" => System::IdealSingleDc,
+        other => anyhow::bail!("unknown system {other}"),
+    };
+    let bench = Benchmark::parse(&args.str_or("bench", "gsm8k"))
+        .ok_or_else(|| anyhow::anyhow!("bad --bench"))?;
+    let n = args.parse_or("actors", 8usize);
+    let region = config::regions::by_name(&args.str_or("region", "canada"))
+        .ok_or_else(|| anyhow::anyhow!("unknown region"))?;
+    let fleet = vec![RegionSpec::new(region, vec![config::GpuClass::A100; n])];
+    let mut cfg = SimConfig::paper_testbed(model, bench, system, fleet);
+    cfg.steps = args.parse_or("steps", 7u64);
+    cfg.streams = args.parse_or("streams", 4usize);
+    let r = sim_run(&cfg);
+    println!(
+        "{}: {:.0} tokens/s, avg step {:.1}s, avg transfer {:.2}s, payload {}",
+        r.system.name(),
+        r.throughput(),
+        r.avg_step_time(),
+        r.avg_transfer_time(),
+        sparrowrl::util::fmt_bytes(r.payload_bytes()),
+    );
+    if args.flag("gantt") {
+        print!("{}", r.timeline.ascii_gantt(100));
+    }
+    Ok(())
+}

@@ -1,0 +1,203 @@
+//! Metrics: step timelines (the Figure 9 Gantt trace), throughput
+//! accounting, and JSONL export.
+
+use crate::util::jsonl::Json;
+
+/// What a span of time was spent on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    Rollout,
+    Train,
+    Extract,
+    Transfer,
+    Commit,
+    Idle,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Rollout => "rollout",
+            SpanKind::Train => "train",
+            SpanKind::Extract => "extract",
+            SpanKind::Transfer => "transfer",
+            SpanKind::Commit => "commit",
+            SpanKind::Idle => "idle",
+        }
+    }
+}
+
+/// One timeline span (entity = "trainer", "actor3", "relay:canada", ...).
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub entity: String,
+    pub kind: SpanKind,
+    pub start: f64,
+    pub end: f64,
+    pub step: u64,
+}
+
+/// Execution timeline for a run (Figure 9's raw data).
+#[derive(Default, Clone, Debug)]
+pub struct Timeline {
+    pub spans: Vec<Span>,
+}
+
+impl Timeline {
+    pub fn record(&mut self, entity: &str, kind: SpanKind, start: f64, end: f64, step: u64) {
+        debug_assert!(end >= start, "span ends before it starts");
+        self.spans.push(Span { entity: entity.to_string(), kind, start, end, step });
+    }
+
+    /// Total time an entity spent in `kind`.
+    pub fn total(&self, entity: &str, kind: SpanKind) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.entity == entity && s.kind == kind)
+            .map(|s| s.end - s.start)
+            .sum()
+    }
+
+    pub fn end_time(&self) -> f64 {
+        self.spans.iter().map(|s| s.end).fold(0.0, f64::max)
+    }
+
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for s in &self.spans {
+            let j = Json::obj()
+                .set("entity", s.entity.as_str())
+                .set("kind", s.kind.name())
+                .set("start", s.start)
+                .set("end", s.end)
+                .set("step", s.step);
+            out.push_str(&j.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render an ASCII Gantt chart (the Figure 9 view), `width` cols wide.
+    pub fn ascii_gantt(&self, width: usize) -> String {
+        let end = self.end_time().max(1e-9);
+        let mut entities: Vec<String> = self.spans.iter().map(|s| s.entity.clone()).collect();
+        entities.sort();
+        entities.dedup();
+        let mut out = String::new();
+        for e in &entities {
+            let mut row = vec![' '; width];
+            for s in self.spans.iter().filter(|s| &s.entity == e) {
+                let a = ((s.start / end) * width as f64) as usize;
+                let b = (((s.end / end) * width as f64).ceil() as usize).min(width);
+                let c = match s.kind {
+                    SpanKind::Rollout => 'R',
+                    SpanKind::Train => 'T',
+                    SpanKind::Extract => 'E',
+                    SpanKind::Transfer => '=',
+                    SpanKind::Commit => '|',
+                    SpanKind::Idle => '.',
+                };
+                for slot in row.iter_mut().take(b).skip(a.min(width)) {
+                    *slot = c;
+                }
+            }
+            out.push_str(&format!("{:<16} {}\n", e, row.iter().collect::<String>()));
+        }
+        out.push_str(&format!(
+            "{:<16} 0{}{:.0}s\n",
+            "",
+            " ".repeat(width.saturating_sub(6)),
+            end
+        ));
+        out
+    }
+}
+
+/// Token-throughput accumulator (the paper's primary metric: "average
+/// number of tokens processed per second across the entire system").
+#[derive(Default, Clone, Copy, Debug)]
+pub struct Throughput {
+    pub tokens: u64,
+    pub elapsed: f64,
+}
+
+impl Throughput {
+    pub fn add(&mut self, tokens: u64) {
+        self.tokens += tokens;
+    }
+
+    pub fn finish(&mut self, elapsed: f64) {
+        self.elapsed = elapsed;
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.elapsed <= 0.0 {
+            0.0
+        } else {
+            self.tokens as f64 / self.elapsed
+        }
+    }
+}
+
+/// Geometric mean (Table 6 aggregates throughput across benchmarks).
+pub fn geometric_mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.max(1e-12).ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_by_entity_and_kind() {
+        let mut t = Timeline::default();
+        t.record("trainer", SpanKind::Train, 0.0, 5.0, 1);
+        t.record("trainer", SpanKind::Extract, 5.0, 6.0, 1);
+        t.record("actor0", SpanKind::Rollout, 0.0, 8.0, 1);
+        t.record("trainer", SpanKind::Train, 8.0, 12.0, 2);
+        assert_eq!(t.total("trainer", SpanKind::Train), 9.0);
+        assert_eq!(t.total("actor0", SpanKind::Rollout), 8.0);
+        assert_eq!(t.end_time(), 12.0);
+    }
+
+    #[test]
+    fn jsonl_one_line_per_span() {
+        let mut t = Timeline::default();
+        t.record("a", SpanKind::Transfer, 0.0, 1.5, 3);
+        let s = t.to_jsonl();
+        assert_eq!(s.lines().count(), 1);
+        assert!(s.contains("\"kind\":\"transfer\""));
+        assert!(s.contains("\"step\":3"));
+    }
+
+    #[test]
+    fn gantt_renders_all_entities() {
+        let mut t = Timeline::default();
+        t.record("trainer", SpanKind::Train, 0.0, 4.0, 1);
+        t.record("actor0", SpanKind::Rollout, 1.0, 8.0, 1);
+        let g = t.ascii_gantt(40);
+        assert!(g.contains("trainer"));
+        assert!(g.contains("actor0"));
+        assert!(g.contains('T'));
+        assert!(g.contains('R'));
+    }
+
+    #[test]
+    fn throughput_math() {
+        let mut th = Throughput::default();
+        th.add(500);
+        th.add(1500);
+        th.finish(4.0);
+        assert_eq!(th.tokens_per_s(), 500.0);
+    }
+
+    #[test]
+    fn geometric_mean_basic() {
+        assert!((geometric_mean(&[1.0, 100.0]) - 10.0).abs() < 1e-9);
+        assert!((geometric_mean(&[5.0, 5.0, 5.0]) - 5.0).abs() < 1e-9);
+        assert_eq!(geometric_mean(&[]), 0.0);
+    }
+}

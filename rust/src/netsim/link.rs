@@ -1,0 +1,255 @@
+//! Analytic WAN link model.
+//!
+//! Effective throughput of one TCP stream on a lossy long-RTT path follows
+//! the Mathis et al. ceiling  `T = MSS·C / (RTT·√p)`; `S` parallel streams
+//! scale that ceiling until the path capacity (times a protocol-efficiency
+//! factor) caps it. Transfers additionally pay connection latency and a
+//! slow-start ramp. Cross-cloud capacity fluctuates (paper: 0.5–1 Gbps on
+//! US-Canada), modelled as a per-transfer multiplicative jitter factor.
+
+use crate::config::RegionProfile;
+use crate::util::Rng;
+
+/// TCP maximum segment size (bytes) used by the Mathis model.
+pub const MSS_BYTES: f64 = 1460.0;
+/// Mathis constant for delayed-ACK Reno-family flows.
+pub const MATHIS_C: f64 = 1.22;
+/// Fraction of raw capacity achievable by bulk TCP (framing + CC dynamics).
+pub const PROTOCOL_EFFICIENCY: f64 = 0.80;
+
+/// Options for a modelled transfer.
+#[derive(Clone, Copy, Debug)]
+pub struct TransferOpts {
+    /// Parallel TCP streams striped over (§5.2).
+    pub streams: usize,
+    /// Sample capacity jitter for this transfer (off = deterministic mean).
+    pub jittered: bool,
+}
+
+impl Default for TransferOpts {
+    fn default() -> Self {
+        TransferOpts { streams: 1, jittered: false }
+    }
+}
+
+/// A point-to-point WAN path between the Trainer and one region (or
+/// between a Relay and its peers).
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub name: String,
+    /// Nominal bottleneck capacity, bits/s.
+    pub capacity_bps: f64,
+    pub rtt_s: f64,
+    pub loss: f64,
+    pub jitter: f64,
+}
+
+impl Link {
+    pub fn from_profile(p: &RegionProfile) -> Link {
+        Link {
+            name: p.name.to_string(),
+            capacity_bps: p.bandwidth_bps,
+            rtt_s: p.rtt_s,
+            loss: p.loss,
+            jitter: p.jitter,
+        }
+    }
+
+    /// A clean link with explicit parameters (tc-style emulation, §7.4).
+    pub fn emulated(capacity_bps: f64, rtt_s: f64, loss: f64) -> Link {
+        Link {
+            name: format!("tc-{:.0}mbps", capacity_bps / 1e6),
+            capacity_bps,
+            rtt_s,
+            loss,
+            jitter: 0.0,
+        }
+    }
+
+    /// Mathis ceiling for a single TCP stream on this path, bits/s.
+    pub fn single_stream_ceiling_bps(&self) -> f64 {
+        if self.loss <= 0.0 {
+            return self.capacity_bps * PROTOCOL_EFFICIENCY;
+        }
+        let mathis = MSS_BYTES * 8.0 * MATHIS_C / (self.rtt_s * self.loss.sqrt());
+        mathis.min(self.capacity_bps * PROTOCOL_EFFICIENCY)
+    }
+
+    /// Aggregate effective throughput for `s` parallel streams, bits/s.
+    pub fn effective_bps(&self, s: usize) -> f64 {
+        let per_stream = self.single_stream_ceiling_bps();
+        (per_stream * s.max(1) as f64).min(self.capacity_bps * PROTOCOL_EFFICIENCY)
+    }
+
+    /// Capacity multiplier sampled for one transfer (cross-cloud
+    /// fluctuation). Mean 1.0, clamped to [0.5, 1.5].
+    pub fn jitter_factor(&self, rng: &mut Rng) -> f64 {
+        if self.jitter <= 0.0 {
+            return 1.0;
+        }
+        (1.0 + self.jitter * rng.normal()).clamp(0.5, 1.5)
+    }
+
+    /// Wall time to move `bytes` over this path as one blocking transfer.
+    pub fn transfer_time(&self, bytes: u64, opts: TransferOpts, rng: &mut Rng) -> f64 {
+        let jf = if opts.jittered { self.jitter_factor(rng) } else { 1.0 };
+        let bw = self.effective_bps(opts.streams) * jf;
+        self.startup_time() + bytes as f64 * 8.0 / bw
+    }
+
+    /// Handshake + slow-start ramp cost: one RTT handshake plus roughly
+    /// log2(BDP/IW) RTTs to open the window, capped for sanity.
+    pub fn startup_time(&self) -> f64 {
+        let bdp_segments =
+            (self.effective_bps(1) * self.rtt_s / (MSS_BYTES * 8.0)).max(1.0);
+        let ramp_rtts = (bdp_segments / 10.0).log2().clamp(0.0, 10.0);
+        self.rtt_s * (1.0 + ramp_rtts)
+    }
+
+    /// One-way propagation latency for small control messages (§2.3 C1's
+    /// "small control messages pay WAN RTT" cost).
+    pub fn control_delay(&self) -> f64 {
+        self.rtt_s / 2.0
+    }
+
+    /// Completion time of a transfer whose source *produces* the bytes at
+    /// `produce_bps` while segments of `segment_bytes` are forwarded
+    /// cut-through over the link (§5.2's pipelined extraction/transfer).
+    ///
+    /// Classic two-stage pipeline bound: with k segments of size s,
+    /// completion = startup + max( s/Re + B/Rn , B/Re + s/Rn ) where Re/Rn
+    /// are extract/network byte rates.
+    pub fn pipelined_time(
+        &self,
+        bytes: u64,
+        produce_bps: f64,
+        segment_bytes: u64,
+        opts: TransferOpts,
+        rng: &mut Rng,
+    ) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        let jf = if opts.jittered { self.jitter_factor(rng) } else { 1.0 };
+        let rn = self.effective_bps(opts.streams) * jf; // bits/s
+        let re = produce_bps;
+        let b = bytes as f64 * 8.0;
+        let s = (segment_bytes as f64 * 8.0).min(b);
+        let stage = (s / re + b / rn).max(b / re + s / rn);
+        self.startup_time() + stage
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::regions;
+
+    fn rng() -> Rng {
+        Rng::new(42)
+    }
+
+    #[test]
+    fn calibration_us_canada_single_stream() {
+        // Paper §7.3: 202 MB over US-Canada, single TCP = 4.71 s.
+        let link = Link::from_profile(&regions::CANADA);
+        let t = link.transfer_time(202_000_000, TransferOpts::default(), &mut rng());
+        assert!(
+            (3.8..5.8).contains(&t),
+            "single-stream 202MB took {t:.2} s (paper: 4.71 s)"
+        );
+    }
+
+    #[test]
+    fn calibration_us_canada_multi_stream() {
+        // Paper §7.3: 4 streams cut 4.71 s to 2.90 s.
+        let link = Link::from_profile(&regions::CANADA);
+        let t1 = link.transfer_time(202_000_000, TransferOpts { streams: 1, jittered: false }, &mut rng());
+        let t4 = link.transfer_time(202_000_000, TransferOpts { streams: 4, jittered: false }, &mut rng());
+        assert!((2.3..3.6).contains(&t4), "4-stream took {t4:.2} s (paper: 2.90 s)");
+        assert!(t4 < t1, "multi-stream must help");
+        let speedup = t1 / t4;
+        assert!((1.2..2.2).contains(&speedup), "speedup {speedup:.2}");
+    }
+
+    #[test]
+    fn full_weight_sync_matches_table2() {
+        // Table 2: 16 GB over 1 Gbps commodity link = 128 s; over 100 Gbps
+        // RDMA = 1.3 s.
+        let commodity = Link::emulated(1e9, 0.030, 0.0);
+        let t = commodity.transfer_time(16_000_000_000, TransferOpts { streams: 8, jittered: false }, &mut rng());
+        assert!((120.0..190.0).contains(&t), "commodity sync {t:.1} s (paper 128 s)");
+        let rdma = Link::emulated(100e9, 0.000_05, 0.0);
+        let t = rdma.transfer_time(16_000_000_000, TransferOpts { streams: 8, jittered: false }, &mut rng());
+        assert!((1.0..2.2).contains(&t), "rdma sync {t:.2} s (paper 1.3 s)");
+    }
+
+    #[test]
+    fn streams_saturate_at_capacity() {
+        let link = Link::from_profile(&regions::CANADA);
+        let e1 = link.effective_bps(1);
+        let e4 = link.effective_bps(4);
+        let e64 = link.effective_bps(64);
+        assert!(e4 > e1);
+        assert!(e64 <= link.capacity_bps * PROTOCOL_EFFICIENCY + 1.0);
+        assert_eq!(e64, link.effective_bps(1024));
+    }
+
+    #[test]
+    fn lossless_link_hits_protocol_efficiency() {
+        let link = Link::emulated(10e9, 0.001, 0.0);
+        assert!((link.effective_bps(1) - 8e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn long_rtt_punishes_single_stream_more() {
+        // Cross-continent paths motivate multi-stream (§5.2, Fig 11).
+        let near = Link::from_profile(&regions::CANADA);
+        let far = Link::from_profile(&regions::AUSTRALIA);
+        let near_ratio = near.effective_bps(8) / near.effective_bps(1);
+        let far_ratio = far.effective_bps(8) / far.effective_bps(1);
+        assert!(far_ratio > near_ratio, "far {far_ratio:.2} vs near {near_ratio:.2}");
+    }
+
+    #[test]
+    fn pipelining_overlaps_extraction_with_transfer() {
+        // Extraction at 3.2 GB/s of a 202 MB delta (paper ~5 s for 16 GB
+        // scan but the encode stream emits ~200 MB), link at ~550 Mbps:
+        // pipelined completion should be close to max(extract, transfer),
+        // far below their sum.
+        let link = Link::from_profile(&regions::CANADA);
+        let mut r = rng();
+        let bytes = 202_000_000u64;
+        let extract_bps = 0.4e9 * 8.0; // delta bytes produced per second
+        let opts = TransferOpts { streams: 4, jittered: false };
+        let serial = bytes as f64 * 8.0 / extract_bps
+            + link.transfer_time(bytes, opts, &mut r);
+        let pipelined = link.pipelined_time(bytes, extract_bps, 1 << 20, opts, &mut r);
+        assert!(pipelined < serial * 0.90, "pipelined {pipelined:.2} vs serial {serial:.2}");
+        let transfer_only = link.transfer_time(bytes, opts, &mut r);
+        assert!(pipelined >= transfer_only * 0.95);
+    }
+
+    #[test]
+    fn jitter_is_bounded_and_mean_preserving() {
+        let link = Link::from_profile(&regions::CANADA);
+        let mut r = rng();
+        let mut sum = 0.0;
+        for _ in 0..5000 {
+            let f = link.jitter_factor(&mut r);
+            assert!((0.5..=1.5).contains(&f));
+            sum += f;
+        }
+        let mean: f64 = sum / 5000.0;
+        assert!((mean - 1.0).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn zero_bytes_is_free_pipelined() {
+        let link = Link::from_profile(&regions::CANADA);
+        assert_eq!(
+            link.pipelined_time(0, 1e9, 1 << 20, TransferOpts::default(), &mut rng()),
+            0.0
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! WAN substrate: analytic link models + a small discrete-event queue.
+//!
+//! The paper's testbed is real cross-cloud WAN (US↔Canada/Japan/NL/Iceland/
+//! Australia) plus `tc`-emulated bandwidth sweeps (§7.4). We do not have a
+//! WAN, so this module *is* the substitution (DESIGN.md §3): links are
+//! parameterized by exactly the quantities `tc` controls — capacity, RTT,
+//! loss — plus a jitter term for cross-cloud fluctuation, and TCP behaviour
+//! is modelled with the Mathis throughput ceiling, which captures the two
+//! phenomena the paper exploits: a single stream under-utilizes a long-fat
+//! lossy pipe, and S parallel streams recover up to the capacity limit.
+
+pub mod event;
+pub mod link;
+
+pub use event::EventQueue;
+pub use link::{Link, TransferOpts};
+
+/// Simulated time in seconds.
+pub type SimTime = f64;

@@ -1,0 +1,12 @@
+//! Real runtime: the full SparrowRL loop on actual compute.
+//!
+//! `local` runs trainer + N rollout actors in one process against the AOT
+//! PJRT artifacts, with real delta checkpoints flowing trainer -> segments
+//! -> staged activation, the real Job Ledger (leases + acceptance
+//! predicate) and the real Algorithm-1 scheduler. `net` adds the
+//! TCP transport so the same loop runs across processes.
+
+pub mod local;
+pub mod net;
+
+pub use local::{run_local, LocalRunConfig, RunReport, StepLog};

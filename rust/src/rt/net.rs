@@ -1,0 +1,286 @@
+//! TCP transport for the distributed runtime: message framing, throttled
+//! writers (WAN emulation without root/tc), multi-stream segment push, and
+//! the actor-side receive loop.
+//!
+//! The wire protocol is deliberately tiny — length-prefixed frames with a
+//! one-byte tag — because the heavy lifting (segment framing, integrity,
+//! reassembly, staging) is already done by `transport` and `actor`.
+
+use crate::transport::Segment;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Control/data messages between Trainer Hub and Actors.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Actor introduces itself (actor id, gpu-class prior tokens/s).
+    Hello { actor: u32, prior_tau: f64 },
+    /// One delta-checkpoint segment.
+    Seg(Segment),
+    /// Commit a fully staged version (§5.2 staged activation).
+    Commit { version: u64 },
+    /// Actor acknowledges activation of `version` with the ckpt hash.
+    Activated { actor: u32, version: u64, hash: [u8; 32] },
+    /// Job: generate rollouts for `prompt_ids` on `version`.
+    Job { version: u64, prompt_ids: Vec<u64> },
+    /// One rollout result (prompt, behaviour version, reward, tokens).
+    RolloutResult {
+        actor: u32,
+        prompt_id: u64,
+        version: u64,
+        hash: [u8; 32],
+        reward: f32,
+        tokens: Vec<i32>,
+    },
+    /// Orderly shutdown.
+    Bye,
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_SEG: u8 = 2;
+const TAG_COMMIT: u8 = 3;
+const TAG_ACTIVATED: u8 = 4;
+const TAG_JOB: u8 = 5;
+const TAG_RESULT: u8 = 6;
+const TAG_BYE: u8 = 7;
+
+impl Msg {
+    /// Serialize to a length-prefixed frame: len u32 | tag u8 | body.
+    pub fn to_frame(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        let tag = match self {
+            Msg::Hello { actor, prior_tau } => {
+                body.extend_from_slice(&actor.to_le_bytes());
+                body.extend_from_slice(&prior_tau.to_le_bytes());
+                TAG_HELLO
+            }
+            Msg::Seg(seg) => {
+                body = seg.to_wire();
+                TAG_SEG
+            }
+            Msg::Commit { version } => {
+                body.extend_from_slice(&version.to_le_bytes());
+                TAG_COMMIT
+            }
+            Msg::Activated { actor, version, hash } => {
+                body.extend_from_slice(&actor.to_le_bytes());
+                body.extend_from_slice(&version.to_le_bytes());
+                body.extend_from_slice(hash);
+                TAG_ACTIVATED
+            }
+            Msg::Job { version, prompt_ids } => {
+                body.extend_from_slice(&version.to_le_bytes());
+                body.extend_from_slice(&(prompt_ids.len() as u32).to_le_bytes());
+                for p in prompt_ids {
+                    body.extend_from_slice(&p.to_le_bytes());
+                }
+                TAG_JOB
+            }
+            Msg::RolloutResult { actor, prompt_id, version, hash, reward, tokens } => {
+                body.extend_from_slice(&actor.to_le_bytes());
+                body.extend_from_slice(&prompt_id.to_le_bytes());
+                body.extend_from_slice(&version.to_le_bytes());
+                body.extend_from_slice(hash);
+                body.extend_from_slice(&reward.to_le_bytes());
+                body.extend_from_slice(&(tokens.len() as u32).to_le_bytes());
+                for t in tokens {
+                    body.extend_from_slice(&t.to_le_bytes());
+                }
+                TAG_RESULT
+            }
+            Msg::Bye => TAG_BYE,
+        };
+        let mut out = Vec::with_capacity(5 + body.len());
+        out.extend_from_slice(&(1 + body.len() as u32).to_le_bytes());
+        out.push(tag);
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Parse one frame body (after the length prefix was consumed).
+    pub fn from_tagged(buf: &[u8]) -> Result<Msg> {
+        let (&tag, body) = buf.split_first().context("empty frame")?;
+        let rd_u32 = |b: &[u8], at: usize| -> Result<u32> {
+            Ok(u32::from_le_bytes(b.get(at..at + 4).context("short")?.try_into()?))
+        };
+        let rd_u64 = |b: &[u8], at: usize| -> Result<u64> {
+            Ok(u64::from_le_bytes(b.get(at..at + 8).context("short")?.try_into()?))
+        };
+        Ok(match tag {
+            TAG_HELLO => Msg::Hello {
+                actor: rd_u32(body, 0)?,
+                prior_tau: f64::from_le_bytes(body.get(4..12).context("short")?.try_into()?),
+            },
+            TAG_SEG => {
+                let (seg, used) = Segment::from_wire(body).context("bad segment frame")?;
+                if used != body.len() {
+                    bail!("segment frame trailing bytes");
+                }
+                Msg::Seg(seg)
+            }
+            TAG_COMMIT => Msg::Commit { version: rd_u64(body, 0)? },
+            TAG_ACTIVATED => {
+                let mut hash = [0u8; 32];
+                hash.copy_from_slice(body.get(12..44).context("short")?);
+                Msg::Activated { actor: rd_u32(body, 0)?, version: rd_u64(body, 4)?, hash }
+            }
+            TAG_JOB => {
+                let version = rd_u64(body, 0)?;
+                let n = rd_u32(body, 8)? as usize;
+                let mut prompt_ids = Vec::with_capacity(n);
+                for i in 0..n {
+                    prompt_ids.push(rd_u64(body, 12 + i * 8)?);
+                }
+                Msg::Job { version, prompt_ids }
+            }
+            TAG_RESULT => {
+                let actor = rd_u32(body, 0)?;
+                let prompt_id = rd_u64(body, 4)?;
+                let version = rd_u64(body, 12)?;
+                let mut hash = [0u8; 32];
+                hash.copy_from_slice(body.get(20..52).context("short")?);
+                let reward = f32::from_le_bytes(body.get(52..56).context("short")?.try_into()?);
+                let n = rd_u32(body, 56)? as usize;
+                let mut tokens = Vec::with_capacity(n);
+                for i in 0..n {
+                    tokens.push(i32::from_le_bytes(
+                        body.get(60 + i * 4..64 + i * 4).context("short")?.try_into()?,
+                    ));
+                }
+                Msg::RolloutResult { actor, prompt_id, version, hash, reward, tokens }
+            }
+            TAG_BYE => Msg::Bye,
+            other => bail!("unknown tag {other}"),
+        })
+    }
+}
+
+/// Blocking frame reader.
+pub fn read_msg(stream: &mut TcpStream) -> Result<Msg> {
+    let mut len = [0u8; 4];
+    stream.read_exact(&mut len).context("read frame length")?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len == 0 || len > 256 << 20 {
+        bail!("bad frame length {len}");
+    }
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body).context("read frame body")?;
+    Msg::from_tagged(&body)
+}
+
+/// Blocking frame writer.
+pub fn write_msg(stream: &mut TcpStream, msg: &Msg) -> Result<()> {
+    stream.write_all(&msg.to_frame()).context("write frame")?;
+    Ok(())
+}
+
+/// Token-bucket write throttle: emulates a WAN link's bandwidth on a real
+/// socket (the loopback stand-in for the paper's `tc` shaping).
+pub struct Throttle {
+    bytes_per_s: f64,
+    window: Instant,
+    sent_in_window: f64,
+}
+
+impl Throttle {
+    pub fn new(bits_per_s: f64) -> Throttle {
+        Throttle { bytes_per_s: bits_per_s / 8.0, window: Instant::now(), sent_in_window: 0.0 }
+    }
+
+    /// Account `n` bytes, sleeping as needed to respect the rate.
+    pub fn pace(&mut self, n: usize) {
+        self.sent_in_window += n as f64;
+        let due = self.sent_in_window / self.bytes_per_s;
+        let elapsed = self.window.elapsed().as_secs_f64();
+        if due > elapsed {
+            std::thread::sleep(Duration::from_secs_f64(due - elapsed));
+        }
+        // Reset the window occasionally to avoid unbounded drift.
+        if elapsed > 5.0 {
+            self.window = Instant::now();
+            self.sent_in_window = 0.0;
+        }
+    }
+}
+
+/// Push a checkpoint's segments over `streams` sockets round-robin,
+/// pacing each socket at `bits_per_s / streams` (the per-stream share).
+pub fn push_segments_multistream(
+    sockets: &mut [TcpStream],
+    segments: &[Segment],
+    bits_per_s: Option<f64>,
+) -> Result<()> {
+    let s = sockets.len().max(1);
+    let mut throttles: Vec<Option<Throttle>> = (0..s)
+        .map(|_| bits_per_s.map(|b| Throttle::new(b / s as f64)))
+        .collect();
+    for seg in segments {
+        let si = crate::transport::stripe::stream_for(seg.seq, s);
+        let frame = Msg::Seg(seg.clone()).to_frame();
+        if let Some(t) = throttles[si].as_mut() {
+            t.pace(frame.len());
+        }
+        sockets[si].write_all(&frame).context("push segment")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(m: Msg) {
+        let frame = m.to_frame();
+        let len = u32::from_le_bytes(frame[0..4].try_into().unwrap()) as usize;
+        assert_eq!(len, frame.len() - 4);
+        let back = Msg::from_tagged(&frame[4..]).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn all_messages_round_trip() {
+        round_trip(Msg::Hello { actor: 3, prior_tau: 2500.0 });
+        round_trip(Msg::Seg(Segment {
+            version: 9,
+            seq: 2,
+            total: 5,
+            payload: vec![1, 2, 3],
+        }));
+        round_trip(Msg::Commit { version: 12 });
+        round_trip(Msg::Activated { actor: 1, version: 12, hash: [7u8; 32] });
+        round_trip(Msg::Job { version: 4, prompt_ids: vec![10, 20, 30] });
+        round_trip(Msg::RolloutResult {
+            actor: 2,
+            prompt_id: 77,
+            version: 4,
+            hash: [9u8; 32],
+            reward: 0.5,
+            tokens: vec![1, -2, 3],
+        });
+        round_trip(Msg::Bye);
+    }
+
+    #[test]
+    fn corrupt_segment_frame_rejected() {
+        let m = Msg::Seg(Segment { version: 1, seq: 0, total: 1, payload: vec![5; 64] });
+        let mut frame = m.to_frame();
+        let n = frame.len();
+        frame[n - 3] ^= 0xFF;
+        assert!(Msg::from_tagged(&frame[4..]).is_err());
+    }
+
+    #[test]
+    fn throttle_enforces_rate() {
+        // 8 Mbit/s = 1 MB/s; sending 200 KB should take ~0.2 s.
+        let mut t = Throttle::new(8e6);
+        let t0 = Instant::now();
+        for _ in 0..20 {
+            t.pace(10_000);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt > 0.15, "throttle too loose: {dt:.3}s");
+        assert!(dt < 0.6, "throttle too tight: {dt:.3}s");
+    }
+}

@@ -1,0 +1,189 @@
+//! Parse `artifacts/manifest.txt` (key=value lines emitted by aot.py) and
+//! cross-check it against the rust-side model presets.
+
+use crate::config::{self, ModelSpec};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Per-model artifact metadata.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub b_gen: usize,
+    pub b_train: usize,
+    pub param_count: u64,
+    shapes: Vec<(String, Vec<usize>)>,
+}
+
+impl Manifest {
+    /// Load the section for `model` from the manifest file.
+    pub fn load(path: &Path, model: &str) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text, model)
+    }
+
+    pub fn parse(text: &str, model: &str) -> Result<Manifest> {
+        // Sections are key=value runs separated by blank lines; find the
+        // one whose `model=` matches.
+        let mut sections: Vec<BTreeMap<String, String>> = vec![BTreeMap::new()];
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                sections.push(BTreeMap::new());
+                continue;
+            }
+            if let Some((k, v)) = line.split_once('=') {
+                sections.last_mut().unwrap().insert(k.to_string(), v.to_string());
+            }
+        }
+        let sec = sections
+            .into_iter()
+            .find(|s| s.get("model").map(|m| m == model).unwrap_or(false))
+            .with_context(|| format!("model {model} not in manifest"))?;
+        let get = |k: &str| -> Result<String> {
+            sec.get(k).cloned().with_context(|| format!("manifest key {k}"))
+        };
+        let num = |k: &str| -> Result<usize> {
+            get(k)?.parse().with_context(|| format!("manifest key {k} numeric"))
+        };
+        let mut shapes = Vec::new();
+        for (k, v) in &sec {
+            if let Some(name) = k.strip_prefix("shape.") {
+                let dims: Result<Vec<usize>, _> =
+                    v.split(',').map(|d| d.parse::<usize>()).collect();
+                shapes.push((name.to_string(), dims.context("shape dims")?));
+            }
+        }
+        let m = Manifest {
+            model: model.to_string(),
+            vocab: num("vocab")?,
+            d_model: num("d_model")?,
+            n_layers: num("n_layers")?,
+            n_heads: num("n_heads")?,
+            d_ff: num("d_ff")?,
+            max_seq: num("max_seq")?,
+            b_gen: num("b_gen")?,
+            b_train: num("b_train")?,
+            param_count: get("param_count")?.parse().context("param_count")?,
+            shapes,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Tensor shapes in the fused layout order (the order the artifacts'
+    /// parameters appear in).
+    pub fn tensor_shapes(&self) -> Vec<Vec<usize>> {
+        let spec = self.model_spec();
+        spec.layout
+            .tensors
+            .iter()
+            .map(|t| t.shape.clone())
+            .collect()
+    }
+
+    /// The rust-side preset this manifest must agree with.
+    pub fn model_spec(&self) -> ModelSpec {
+        config::model(&self.model).expect("validated in parse()")
+    }
+
+    fn validate(&self) -> Result<()> {
+        let Some(spec) = config::model(&self.model) else {
+            bail!("manifest model {} has no rust preset", self.model)
+        };
+        if !spec.runnable {
+            bail!("model {} is analytic-only", self.model);
+        }
+        let ok = spec.vocab == self.vocab
+            && spec.d_model == self.d_model
+            && spec.n_layers == self.n_layers
+            && spec.n_heads == self.n_heads
+            && spec.d_ff == self.d_ff
+            && spec.max_seq == self.max_seq
+            && spec.total_params() == self.param_count;
+        if !ok {
+            bail!(
+                "manifest/preset mismatch for {}: python says V={} D={} L={} H={} F={} T={} P={}, \
+                 rust says V={} D={} L={} H={} F={} T={} P={}",
+                self.model,
+                self.vocab, self.d_model, self.n_layers, self.n_heads, self.d_ff,
+                self.max_seq, self.param_count,
+                spec.vocab, spec.d_model, spec.n_layers, spec.n_heads, spec.d_ff,
+                spec.max_seq, spec.total_params(),
+            );
+        }
+        // Shapes from the manifest must match the layout tensor-for-tensor.
+        for t in &spec.layout.tensors {
+            let found = self.shapes.iter().find(|(n, _)| n == &t.name);
+            match found {
+                Some((_, dims)) if *dims == t.shape => {}
+                other => bail!("shape mismatch for {}: {:?}", t.name, other),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+fingerprint=abc:sparrow-xs
+model=sparrow-xs
+vocab=256
+d_model=64
+n_layers=2
+n_heads=4
+d_ff=256
+max_seq=64
+b_gen=8
+b_train=32
+param_count=147776
+shape.embed=256,64
+shape.final_norm=64
+shape.norms=2,2,64
+shape.qkv_proj=2,64,192
+shape.o_proj=2,64,64
+shape.gate_up_proj=2,64,512
+shape.down_proj=2,256,64
+";
+
+    #[test]
+    fn parses_and_validates_against_preset() {
+        let m = Manifest::parse(SAMPLE, "sparrow-xs").unwrap();
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.b_gen, 8);
+        assert_eq!(m.tensor_shapes()[0], vec![256, 64]);
+        assert_eq!(
+            m.param_count,
+            config::model("sparrow-xs").unwrap().total_params()
+        );
+    }
+
+    #[test]
+    fn missing_model_is_error() {
+        assert!(Manifest::parse(SAMPLE, "sparrow-s").is_err());
+    }
+
+    #[test]
+    fn mismatched_dims_rejected() {
+        let bad = SAMPLE.replace("d_model=64", "d_model=65");
+        let err = Manifest::parse(&bad, "sparrow-xs").unwrap_err().to_string();
+        assert!(err.contains("mismatch"), "{err}");
+    }
+
+    #[test]
+    fn mismatched_shape_rejected() {
+        let bad = SAMPLE.replace("shape.o_proj=2,64,64", "shape.o_proj=2,64,65");
+        assert!(Manifest::parse(&bad, "sparrow-xs").is_err());
+    }
+}

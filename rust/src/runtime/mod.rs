@@ -1,0 +1,223 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`) and execute
+//! them from the coordinator's request path — no Python anywhere.
+//!
+//! Pipeline (see /opt/xla-example/load_hlo and python/compile/aot.py):
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `PjRtClient::cpu().compile(..)` -> `execute(..)`. HLO *text* is the
+//! interchange format (xla_extension 0.5.1 rejects jax>=0.5 protos).
+
+pub mod manifest;
+pub mod params;
+
+pub use manifest::Manifest;
+pub use params::TrainState;
+
+use crate::delta::ParamSet;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Raw-byte views of typed slices (little-endian hosts; x86_64/aarch64).
+fn bytes_of<T: Copy>(xs: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(xs.as_ptr() as *const u8, std::mem::size_of_val(xs))
+    }
+}
+
+fn lit_bf16(dims: &[usize], data: &[crate::util::Bf16]) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::Bf16, dims, bytes_of(data))
+        .map_err(|e| anyhow!("bf16 literal: {e:?}"))
+}
+
+fn lit_f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes_of(data))
+        .map_err(|e| anyhow!("f32 literal: {e:?}"))
+}
+
+fn lit_i32(dims: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes_of(data))
+        .map_err(|e| anyhow!("i32 literal: {e:?}"))
+}
+
+fn lit_scalar_f32(x: f32) -> Result<xla::Literal> {
+    lit_f32(&[], &[x])
+}
+
+/// Read a literal's contents as f32 (converting if needed — bf16 -> f32 is
+/// exact, so this is lossless for policy outputs).
+fn read_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    let conv = lit
+        .convert(xla::PrimitiveType::F32)
+        .map_err(|e| anyhow!("convert: {e:?}"))?;
+    conv.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+}
+
+/// One compiled artifact.
+struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Artifact {
+    fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("{}: execute: {e:?}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: readback: {e:?}", self.name))?;
+        lit.to_tuple().map_err(|e| anyhow!("{}: untuple: {e:?}", self.name))
+    }
+}
+
+/// The runtime for one model: PJRT client + compiled entry points.
+pub struct Engines {
+    pub manifest: Manifest,
+    policy_fwd: Artifact,
+    train_step: Artifact,
+    delta_diff: Option<Artifact>,
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+}
+
+impl Engines {
+    /// Compile the model's artifacts from `dir` on the CPU PJRT client.
+    pub fn load(dir: &Path, model: &str) -> Result<Engines> {
+        let manifest = Manifest::load(&dir.join("manifest.txt"), model)
+            .with_context(|| format!("manifest for {model}"))?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let load = |kind: &str| -> Result<Artifact> {
+            let path: PathBuf = dir.join(format!("{model}_{kind}.hlo.txt"));
+            if !path.exists() {
+                bail!("missing artifact {} (run `make artifacts`)", path.display());
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("utf-8 path")?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+            Ok(Artifact { exe, name: format!("{model}_{kind}") })
+        };
+        let policy_fwd = load("policy_fwd")?;
+        let train_step = load("train_step")?;
+        let delta_diff = load("delta_diff").ok();
+        Ok(Engines { manifest, policy_fwd, train_step, delta_diff, client })
+    }
+
+    /// Rollout forward: bf16 policy + tokens [b_gen * max_seq] (row-major)
+    /// -> logits [b_gen * max_seq * vocab] f32.
+    pub fn policy_logits(&self, policy: &ParamSet, tokens: &[i32]) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        let (b, t) = (m.b_gen, m.max_seq);
+        if tokens.len() != b * t {
+            bail!("tokens len {} != b_gen*max_seq {}", tokens.len(), b * t);
+        }
+        let mut inputs = Vec::with_capacity(8);
+        for (shape, data) in m.tensor_shapes().iter().zip(&policy.tensors) {
+            inputs.push(lit_bf16(shape, data)?);
+        }
+        inputs.push(lit_i32(&[b, t], tokens)?);
+        let out = self.policy_fwd.run(&inputs)?;
+        read_f32(&out[0])
+    }
+
+    /// One optimizer step in place on `state`; returns the loss.
+    /// `tokens`/`mask` are [b_train * max_seq]; `adv` is [b_train].
+    pub fn train_step(
+        &self,
+        state: &mut TrainState,
+        tokens: &[i32],
+        mask: &[f32],
+        adv: &[f32],
+        lr: f32,
+    ) -> Result<f32> {
+        let m = &self.manifest;
+        let (b, t) = (m.b_train, m.max_seq);
+        if tokens.len() != b * t || mask.len() != b * t || adv.len() != b {
+            bail!("train batch shape mismatch");
+        }
+        let shapes = m.tensor_shapes();
+        let mut inputs = Vec::with_capacity(26);
+        for (shape, data) in shapes.iter().zip(&state.masters) {
+            inputs.push(lit_f32(shape, data)?);
+        }
+        for (shape, data) in shapes.iter().zip(&state.m) {
+            inputs.push(lit_f32(shape, data)?);
+        }
+        for (shape, data) in shapes.iter().zip(&state.v) {
+            inputs.push(lit_f32(shape, data)?);
+        }
+        inputs.push(lit_i32(&[b, t], tokens)?);
+        inputs.push(lit_f32(&[b, t], mask)?);
+        inputs.push(lit_f32(&[b], adv)?);
+        inputs.push(lit_scalar_f32(lr)?);
+        state.step += 1;
+        inputs.push(lit_scalar_f32(state.step as f32)?);
+        let out = self.train_step.run(&inputs)?;
+        if out.len() != 22 {
+            bail!("train_step returned {} outputs, want 22", out.len());
+        }
+        for (dst, lit) in state.masters.iter_mut().zip(&out[0..7]) {
+            *dst = read_f32(lit)?;
+        }
+        for (dst, lit) in state.m.iter_mut().zip(&out[7..14]) {
+            *dst = read_f32(lit)?;
+        }
+        for (dst, lit) in state.v.iter_mut().zip(&out[14..21]) {
+            *dst = read_f32(lit)?;
+        }
+        let loss = read_f32(&out[21])?;
+        Ok(loss[0])
+    }
+
+    /// Pallas delta-diff kernel: change mask + nnz between two policies.
+    pub fn delta_diff(&self, old: &ParamSet, new: &ParamSet) -> Result<(Vec<u8>, i64)> {
+        let art = self
+            .delta_diff
+            .as_ref()
+            .context("delta_diff artifact not loaded")?;
+        let shapes = self.manifest.tensor_shapes();
+        let mut inputs = Vec::with_capacity(14);
+        for (shape, data) in shapes.iter().zip(&old.tensors) {
+            inputs.push(lit_bf16(shape, data)?);
+        }
+        for (shape, data) in shapes.iter().zip(&new.tensors) {
+            inputs.push(lit_bf16(shape, data)?);
+        }
+        let out = art.run(&inputs)?;
+        let mask_f = read_f32(&out[0])?;
+        let nnz = read_f32(&out[1])?[0] as i64;
+        Ok((mask_f.into_iter().map(|x| x as u8).collect(), nnz))
+    }
+
+    pub fn has_delta_diff(&self) -> bool {
+        self.delta_diff.is_some()
+    }
+}
+
+/// Default artifacts directory: $SPARROW_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("SPARROW_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_of_views_little_endian() {
+        let xs = [1.0f32, -2.0];
+        let b = bytes_of(&xs);
+        assert_eq!(b.len(), 8);
+        assert_eq!(&b[0..4], &1.0f32.to_le_bytes());
+        assert_eq!(&b[4..8], &(-2.0f32).to_le_bytes());
+        let bf = [crate::util::Bf16::from_f32(1.0)];
+        assert_eq!(bytes_of(&bf), &0x3F80u16.to_le_bytes());
+    }
+}

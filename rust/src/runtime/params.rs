@@ -1,0 +1,83 @@
+//! Trainer-side host parameter state: f32 master weights + Adam moments,
+//! and quantization to the bf16 policy the actors serve.
+
+use crate::delta::{ModelLayout, ParamSet};
+use crate::util::{Bf16, Rng};
+
+/// f32 master weights + Adam state (mirrors the train-step artifact I/O).
+pub struct TrainState {
+    pub masters: Vec<Vec<f32>>,
+    pub m: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    /// 1-based Adam timestep (incremented by Engines::train_step).
+    pub step: u64,
+}
+
+impl TrainState {
+    /// Transformer init matching python's `init_params`: Gaussian(0.02)
+    /// weights, norm gains 1.0, zero moments.
+    pub fn init(layout: &ModelLayout, rng: &mut Rng) -> TrainState {
+        let masters: Vec<Vec<f32>> = layout
+            .tensors
+            .iter()
+            .map(|t| {
+                if t.name.contains("norm") {
+                    vec![1.0f32; t.numel() as usize]
+                } else {
+                    (0..t.numel()).map(|_| rng.normal() as f32 * 0.02).collect()
+                }
+            })
+            .collect();
+        let zeros: Vec<Vec<f32>> =
+            masters.iter().map(|t| vec![0.0f32; t.len()]).collect();
+        TrainState { masters, m: zeros.clone(), v: zeros, step: 0 }
+    }
+
+    /// Quantize the masters into the bf16 policy snapshot actors run.
+    pub fn to_policy(&self) -> ParamSet {
+        ParamSet {
+            tensors: self
+                .masters
+                .iter()
+                .map(|t| t.iter().map(|&x| Bf16::from_f32(x)).collect())
+                .collect(),
+        }
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.masters.iter().map(|t| t.len() as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_matches_layout_and_norms_are_one() {
+        let layout = ModelLayout::transformer("t", 64, 16, 2, 32);
+        let mut rng = Rng::new(3);
+        let st = TrainState::init(&layout, &mut rng);
+        assert_eq!(st.total_params(), layout.total_params());
+        let norms_id = layout.tensor_id("norms").unwrap();
+        assert!(st.masters[norms_id].iter().all(|&x| x == 1.0));
+        let fin = layout.tensor_id("final_norm").unwrap();
+        assert!(st.masters[fin].iter().all(|&x| x == 1.0));
+        let emb = layout.tensor_id("embed").unwrap();
+        assert!(st.masters[emb].iter().any(|&x| x != 0.0));
+        assert!(st.m.iter().flatten().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn policy_quantization_is_bf16_rounding() {
+        let layout = ModelLayout::transformer("t", 64, 16, 2, 32);
+        let mut rng = Rng::new(4);
+        let st = TrainState::init(&layout, &mut rng);
+        let pol = st.to_policy();
+        for (mt, pt) in st.masters.iter().zip(&pol.tensors) {
+            for (&mf, &pb) in mt.iter().zip(pt) {
+                assert_eq!(pb, Bf16::from_f32(mf));
+            }
+        }
+    }
+}

@@ -1,0 +1,339 @@
+//! Heterogeneity-aware job scheduling — the paper's Algorithm 1 (§5.3).
+//!
+//! Two mechanisms:
+//! * **Adaptive allocation**: each step's batch B splits across eligible
+//!   actors proportionally to EMA throughput estimates tau_a, so fast and
+//!   slow actors finish together.
+//! * **Version gating**: only actors on version v, or on v-1 with D_v
+//!   staged (they get a Commit first), receive work. Actors further behind
+//!   are excluded for the step and their tau decays by alpha so they
+//!   rejoin conservatively.
+
+use crate::util::Ema;
+use std::collections::BTreeMap;
+
+pub type ActorId = u32;
+
+/// Scheduler tunables (Algorithm 1's alpha/beta).
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// Exclusion decay on tau for left-behind actors.
+    pub alpha: f64,
+    /// EMA history weight on settlement.
+    pub beta: f64,
+    /// Prior tokens/s for actors with no observations.
+    pub default_tau: f64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { alpha: 0.5, beta: 0.7, default_tau: 2500.0 }
+    }
+}
+
+/// Version state the gate inspects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VersionState {
+    /// Currently active policy version.
+    pub active: u64,
+    /// Highest fully staged (but not yet committed) delta version.
+    pub staged: Option<u64>,
+}
+
+#[derive(Clone, Debug)]
+struct ActorEntry {
+    tau: Ema,
+    version: VersionState,
+    alive: bool,
+}
+
+/// One actor's share of a step's batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Assignment {
+    pub actor: ActorId,
+    pub requests: u64,
+    /// Actor is on v-1 with D_v staged: scheduler sends Commit(v) first.
+    pub needs_commit: bool,
+}
+
+/// The Algorithm-1 scheduler.
+pub struct Scheduler {
+    cfg: SchedulerConfig,
+    actors: BTreeMap<ActorId, ActorEntry>,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Scheduler {
+        Scheduler { cfg, actors: BTreeMap::new() }
+    }
+
+    /// Register an actor with a GPU-class prior (tokens/s).
+    pub fn register(&mut self, actor: ActorId, prior_tau: f64) {
+        self.actors.insert(
+            actor,
+            ActorEntry {
+                tau: Ema::with_initial(self.cfg.beta, prior_tau),
+                version: VersionState { active: 0, staged: None },
+                alive: true,
+            },
+        );
+    }
+
+    pub fn deregister(&mut self, actor: ActorId) {
+        if let Some(a) = self.actors.get_mut(&actor) {
+            a.alive = false;
+        }
+    }
+
+    pub fn set_alive(&mut self, actor: ActorId, alive: bool) {
+        if let Some(a) = self.actors.get_mut(&actor) {
+            a.alive = alive;
+        }
+    }
+
+    /// Update an actor's version state (on staging/commit notifications).
+    pub fn observe_version(&mut self, actor: ActorId, state: VersionState) {
+        if let Some(a) = self.actors.get_mut(&actor) {
+            a.version = state;
+        }
+    }
+
+    pub fn tau(&self, actor: ActorId) -> Option<f64> {
+        self.actors.get(&actor).and_then(|a| a.tau.get())
+    }
+
+    fn eligible(entry: &ActorEntry, v: u64) -> (bool, bool) {
+        if !entry.alive {
+            return (false, false);
+        }
+        let st = entry.version;
+        if st.active == v {
+            (true, false)
+        } else if st.active + 1 == v && st.staged == Some(v) {
+            // On v-1 with D_v staged: eligible, needs Commit(v).
+            (true, true)
+        } else {
+            (false, false)
+        }
+    }
+
+    /// Algorithm 1: split `batch` requests across eligible actors in
+    /// proportion to tau. Floors are topped up by largest fractional
+    /// remainder so the full batch is always assigned (avoiding the
+    /// paper's implicit rounding loss). Ineligible live actors decay.
+    pub fn allocate(&mut self, version: u64, batch: u64) -> Vec<Assignment> {
+        let cfg = self.cfg;
+        // Pass 1: eligible set + aggregate capacity T.
+        let mut elig: Vec<(ActorId, f64, bool)> = Vec::new();
+        let mut total_tau = 0.0;
+        for (&id, e) in self.actors.iter() {
+            let (ok, needs_commit) = Self::eligible(e, version);
+            if ok {
+                let t = e.tau.get_or(cfg.default_tau).max(1e-9);
+                total_tau += t;
+                elig.push((id, t, needs_commit));
+            }
+        }
+        // Decay excluded-but-alive actors (Algorithm 1 line 14).
+        for (&_id, e) in self.actors.iter_mut() {
+            let (ok, _) = Self::eligible(e, version);
+            if !ok && e.alive {
+                e.tau.scale(cfg.alpha);
+            }
+        }
+        if elig.is_empty() || batch == 0 {
+            return Vec::new();
+        }
+        // Pass 2: proportional floors + largest-remainder top-up.
+        let mut out: Vec<Assignment> = Vec::with_capacity(elig.len());
+        let mut fracs: Vec<(usize, f64)> = Vec::with_capacity(elig.len());
+        let mut assigned = 0u64;
+        for (i, &(actor, tau, needs_commit)) in elig.iter().enumerate() {
+            let exact = batch as f64 * tau / total_tau;
+            let share = exact.floor() as u64;
+            assigned += share;
+            fracs.push((i, exact - share as f64));
+            out.push(Assignment { actor, requests: share, needs_commit });
+        }
+        fracs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let mut left = batch - assigned;
+        for (i, _) in fracs {
+            if left == 0 {
+                break;
+            }
+            out[i].requests += 1;
+            left -= 1;
+        }
+        out.retain(|a| a.requests > 0);
+        out
+    }
+
+    /// Settlement (Algorithm 1 line 16): blend observed throughput.
+    pub fn settle(&mut self, actor: ActorId, tokens: u64, elapsed_s: f64) {
+        if elapsed_s <= 0.0 {
+            return;
+        }
+        if let Some(a) = self.actors.get_mut(&actor) {
+            a.tau.observe(tokens as f64 / elapsed_s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched() -> Scheduler {
+        Scheduler::new(SchedulerConfig { alpha: 0.5, beta: 0.7, default_tau: 1000.0 })
+    }
+
+    fn on_version(s: &mut Scheduler, actor: ActorId, v: u64) {
+        s.observe_version(actor, VersionState { active: v, staged: None });
+    }
+
+    #[test]
+    fn paper_worked_example_h100_a100_split() {
+        // §5.3: H100 at 5000 tok/s and A100 at 2500 split 300 -> 200/100.
+        let mut s = sched();
+        s.register(1, 5000.0);
+        s.register(2, 2500.0);
+        on_version(&mut s, 1, 3);
+        on_version(&mut s, 2, 3);
+        let alloc = s.allocate(3, 300);
+        assert_eq!(alloc.len(), 2);
+        assert_eq!(alloc[0], Assignment { actor: 1, requests: 200, needs_commit: false });
+        assert_eq!(alloc[1], Assignment { actor: 2, requests: 100, needs_commit: false });
+    }
+
+    #[test]
+    fn full_batch_always_assigned() {
+        let mut s = sched();
+        for id in 0..7 {
+            s.register(id, 1000.0 + id as f64 * 137.0);
+            on_version(&mut s, id, 1);
+        }
+        for batch in [1u64, 2, 3, 100, 301, 512] {
+            let total: u64 = s.allocate(1, batch).iter().map(|a| a.requests).sum();
+            assert_eq!(total, batch, "batch={batch}");
+        }
+    }
+
+    #[test]
+    fn version_gate_rules() {
+        let mut s = sched();
+        s.register(1, 1000.0); // on v: eligible
+        s.register(2, 1000.0); // on v-1 with staged v: eligible + commit
+        s.register(3, 1000.0); // on v-1, not staged: excluded
+        s.register(4, 1000.0); // two behind: excluded
+        on_version(&mut s, 1, 5);
+        s.observe_version(2, VersionState { active: 4, staged: Some(5) });
+        s.observe_version(3, VersionState { active: 4, staged: None });
+        s.observe_version(4, VersionState { active: 3, staged: Some(4) });
+        let alloc = s.allocate(5, 100);
+        let actors: Vec<ActorId> = alloc.iter().map(|a| a.actor).collect();
+        assert_eq!(actors, vec![1, 2]);
+        assert!(!alloc[0].needs_commit);
+        assert!(alloc[1].needs_commit);
+    }
+
+    #[test]
+    fn excluded_actor_tau_decays_and_recovers() {
+        let mut s = sched();
+        s.register(1, 4000.0);
+        s.register(2, 4000.0);
+        on_version(&mut s, 1, 2);
+        on_version(&mut s, 2, 0); // two behind
+        s.allocate(2, 100);
+        assert!((s.tau(2).unwrap() - 2000.0).abs() < 1e-9, "alpha decay applied");
+        assert!((s.tau(1).unwrap() - 4000.0).abs() < 1e-9);
+        // Rejoin: gets less than half of the batch at first.
+        on_version(&mut s, 2, 2);
+        let alloc = s.allocate(2, 90);
+        let a2 = alloc.iter().find(|a| a.actor == 2).unwrap().requests;
+        assert!(a2 < 45, "rejoining actor starts conservative: {a2}");
+        // Sustained performance recovers the share.
+        for _ in 0..20 {
+            s.settle(2, 40_000, 10.0);
+        }
+        assert!((s.tau(2).unwrap() - 4000.0).abs() < 100.0);
+    }
+
+    #[test]
+    fn settle_blends_with_beta() {
+        let mut s = sched();
+        s.register(1, 1000.0);
+        s.settle(1, 2000, 1.0); // observe 2000 tok/s
+        // beta=0.7: 0.7*1000 + 0.3*2000 = 1300
+        assert!((s.tau(1).unwrap() - 1300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slow_actor_share_shrinks_over_time() {
+        let mut s = sched();
+        s.register(1, 3000.0);
+        s.register(2, 3000.0);
+        on_version(&mut s, 1, 1);
+        on_version(&mut s, 2, 1);
+        // Actor 2 persistently runs at a third of its prior.
+        for _ in 0..15 {
+            s.settle(1, 30_000, 10.0);
+            s.settle(2, 10_000, 10.0);
+        }
+        let alloc = s.allocate(1, 400);
+        let a1 = alloc.iter().find(|a| a.actor == 1).unwrap().requests;
+        let a2 = alloc.iter().find(|a| a.actor == 2).unwrap().requests;
+        assert!(a1 >= 290 && a2 <= 110, "a1={a1} a2={a2}");
+    }
+
+    #[test]
+    fn dead_actor_gets_nothing() {
+        let mut s = sched();
+        s.register(1, 1000.0);
+        s.register(2, 1000.0);
+        on_version(&mut s, 1, 1);
+        on_version(&mut s, 2, 1);
+        s.deregister(2);
+        let alloc = s.allocate(1, 50);
+        assert_eq!(alloc.len(), 1);
+        assert_eq!(alloc[0].actor, 1);
+        assert_eq!(alloc[0].requests, 50);
+    }
+
+    #[test]
+    fn no_eligible_actors_returns_empty() {
+        let mut s = sched();
+        s.register(1, 1000.0);
+        on_version(&mut s, 1, 0);
+        assert!(s.allocate(7, 100).is_empty());
+    }
+
+    #[test]
+    fn prop_allocation_proportionality_and_exactness() {
+        crate::util::prop::check("allocation sums to B, roughly proportional", 30, |rng| {
+            let mut s = sched();
+            let n = rng.range(1, 12);
+            let mut taus = Vec::new();
+            for id in 0..n as u32 {
+                let tau = 500.0 + rng.f64() * 8000.0;
+                s.register(id, tau);
+                s.observe_version(id, VersionState { active: 9, staged: None });
+                taus.push(tau);
+            }
+            let batch = rng.range(0, 2000) as u64;
+            let alloc = s.allocate(9, batch);
+            let total: u64 = alloc.iter().map(|a| a.requests).sum();
+            assert_eq!(total, batch);
+            // Proportionality within 1 request of the exact share.
+            let tau_sum: f64 = taus.iter().sum();
+            for a in &alloc {
+                let exact = batch as f64 * taus[a.actor as usize] / tau_sum;
+                assert!(
+                    (a.requests as f64 - exact).abs() <= 1.0 + 1e-9,
+                    "actor {} got {} want ~{exact:.2}",
+                    a.actor,
+                    a.requests
+                );
+            }
+        });
+    }
+}

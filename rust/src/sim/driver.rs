@@ -1,0 +1,502 @@
+//! The step-structured simulation driver.
+//!
+//! Pipeline semantics follow the paper's one-step asynchronous RL (§2.1,
+//! Fig 7): the batch for step i is generated on the *stale* policy
+//! `pi_{i-1}` while the Trainer computes `pi_i` from batch i-1 and streams
+//! `delta_i` outward; actors activate `pi_i` at the end of their running
+//! batch. Batch i+1 therefore starts at
+//! `max(batch_i end, delta_i delivered) + commit delay`,
+//! so synchronization is hidden iff the train+transfer pipeline fits one
+//! generation window — exactly the deadline §5.2 describes. Entities and
+//! durations come from the calibrated `ComputeModel` and netsim links;
+//! batch splitting uses the real Algorithm-1 `Scheduler`.
+
+use super::compute::{delta_payload_bytes, ComputeModel};
+use super::{RegionSpec, System};
+use crate::config::{GpuClass, ModelSpec};
+use crate::data::Benchmark;
+use crate::metrics::{SpanKind, Timeline};
+use crate::netsim::Link;
+use crate::scheduler::{Scheduler, SchedulerConfig, VersionState};
+use crate::transport::plan::{intra_region_link, TransferPlan};
+use crate::util::Rng;
+
+/// An injected actor failure: the actor produces nothing at `step`; its
+/// prompts return via lease expiry and survivors redo them (§5.4).
+#[derive(Clone, Copy, Debug)]
+pub struct FailureEvent {
+    pub actor: usize,
+    pub step: u64,
+}
+
+/// Simulation configuration for one run.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub model: ModelSpec,
+    pub bench: Benchmark,
+    pub system: System,
+    pub regions: Vec<RegionSpec>,
+    pub trainer_gpus: usize,
+    /// Total rollouts per step, split across actors by the scheduler.
+    pub batch: u64,
+    pub steps: u64,
+    /// Parallel TCP streams for multi-stream plans.
+    pub streams: usize,
+    /// Heterogeneity-aware (Algorithm 1) vs uniform splitting (Table 7).
+    pub hetero_sched: bool,
+    /// Per-transfer link jitter sampling.
+    pub jittered: bool,
+    pub seed: u64,
+    pub failures: Vec<FailureEvent>,
+}
+
+impl SimConfig {
+    /// Fleet generation-window target used to size the default batch
+    /// (Table 2's ~45 s rollout window, less result-return headroom).
+    pub const TARGET_WINDOW_S: f64 = 40.0;
+
+    /// Capacity-matched defaults mirroring the §7.1 testbed: the batch is
+    /// sized so the fleet's generation window is ~75 s (G=512-scale groups
+    /// on the paper's 4/8/12-actor fleets), trainer GPUs scale 2/4/6-ish
+    /// with model size.
+    pub fn paper_testbed(
+        model: ModelSpec,
+        bench: Benchmark,
+        system: System,
+        regions: Vec<RegionSpec>,
+    ) -> SimConfig {
+        let trainer_gpus = (model.total_params() as f64 / 2.05e9).round().clamp(2.0, 8.0) as usize;
+        let cm = ComputeModel::new(bench, trainer_gpus);
+        let fleet_rate: f64 = regions
+            .iter()
+            .flat_map(|r| r.gpus.iter())
+            .map(|&g| cm.rollout_rate(g, &model))
+            .sum();
+        let batch = ((Self::TARGET_WINDOW_S * fleet_rate) / cm.gen_tokens_per_sample).round() as u64;
+        SimConfig {
+            model,
+            bench,
+            system,
+            regions,
+            trainer_gpus,
+            batch: batch.max(1),
+            steps: 7,
+            streams: 4,
+            hetero_sched: true,
+            jittered: false,
+            seed: 0,
+            failures: Vec::new(),
+        }
+    }
+}
+
+/// Per-step outcome.
+#[derive(Clone, Copy, Debug)]
+pub struct StepStat {
+    pub step: u64,
+    pub step_time: f64,
+    pub transfer_time: f64,
+    pub payload_bytes: u64,
+    pub rollout_window: f64,
+    pub train_time: f64,
+}
+
+/// Aggregate result of one simulated run.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub system: System,
+    pub steps: Vec<StepStat>,
+    pub total_time: f64,
+    pub total_gen_tokens: u64,
+    pub timeline: Timeline,
+}
+
+impl SimResult {
+    /// The paper's primary metric: tokens/s across the entire system.
+    pub fn throughput(&self) -> f64 {
+        self.total_gen_tokens as f64 / self.total_time.max(1e-9)
+    }
+
+    pub fn avg_step_time(&self) -> f64 {
+        self.steps.iter().map(|s| s.step_time).sum::<f64>() / self.steps.len().max(1) as f64
+    }
+
+    pub fn avg_transfer_time(&self) -> f64 {
+        self.steps.iter().map(|s| s.transfer_time).sum::<f64>() / self.steps.len().max(1) as f64
+    }
+
+    pub fn payload_bytes(&self) -> u64 {
+        self.steps.first().map(|s| s.payload_bytes).unwrap_or(0)
+    }
+}
+
+struct ActorSim {
+    region: usize,
+    gpu: GpuClass,
+    /// End of the actor's current batch.
+    batch_end: f64,
+    /// Earliest start for its *next* batch (delta committed).
+    next_start: f64,
+}
+
+/// Run the simulation.
+pub fn run(cfg: &SimConfig) -> SimResult {
+    let mut rng = Rng::new(cfg.seed);
+    let cm = ComputeModel::new(cfg.bench, cfg.trainer_gpus);
+    let dense_bytes = cfg.model.dense_bytes_bf16();
+    let rho = cfg.model.expected_rho;
+    let mut timeline = Timeline::default();
+
+    let rdma = Link::emulated(800e9, 0.000_05, 0.0);
+    let ideal = cfg.system == System::IdealSingleDc;
+    // Colocated actors fan out over NVLink-class fabric; WAN regions over
+    // a 10 Gbps provider LAN.
+    let intra = if ideal {
+        Link::emulated(7200e9, 0.000_01, 0.0) // NVLink 900 GB/s
+    } else {
+        intra_region_link()
+    };
+    let wan_links: Vec<Link> = cfg
+        .regions
+        .iter()
+        .map(|r| {
+            if ideal {
+                rdma.clone()
+            } else {
+                Link::from_profile(&r.profile)
+            }
+        })
+        .collect();
+
+    // Payload + plan per system. The PrimeRL baselines inherit PrimeRL's
+    // shardcast-style regional relay (one WAN copy per region) so the
+    // comparison isolates payload/streams/pipelining, matching §7.1.
+    let (payload, plan, pipelined_extract): (u64, TransferPlan, bool) = match cfg.system {
+        System::Sparrow => (
+            delta_payload_bytes(&cfg.model, rho),
+            TransferPlan {
+                streams: cfg.streams,
+                segment_bytes: 1 << 20,
+                pipelined: true,
+                jittered: cfg.jittered,
+            },
+            true,
+        ),
+        System::PrimeRlFull => (
+            dense_bytes,
+            TransferPlan { jittered: cfg.jittered, ..TransferPlan::full_weight() },
+            false,
+        ),
+        System::PrimeRlMultiStream => (
+            dense_bytes,
+            TransferPlan {
+                jittered: cfg.jittered,
+                ..TransferPlan::full_weight_multistream(cfg.streams)
+            },
+            false,
+        ),
+        System::IdealSingleDc => (dense_bytes, TransferPlan::full_weight_multistream(8), false),
+    };
+
+    let mut actors: Vec<ActorSim> = Vec::new();
+    for (ri, region) in cfg.regions.iter().enumerate() {
+        for &gpu in &region.gpus {
+            actors.push(ActorSim { region: ri, gpu, batch_end: 0.0, next_start: 0.0 });
+        }
+    }
+    let n = actors.len();
+    assert!(n > 0, "no actors configured");
+
+    let mut sched = Scheduler::new(SchedulerConfig::default());
+    for (i, a) in actors.iter().enumerate() {
+        sched.register(i as u32, cm.rollout_rate(a.gpu, &cfg.model));
+    }
+
+    let batch_tokens = cfg.batch as f64 * cm.gen_tokens_per_sample;
+    let train_time = cm.train_time(&cfg.model, batch_tokens);
+    let extract_time = cm.extract_time(&cfg.model);
+    let emit_bps = cm.extract_emit_bps(&cfg.model, payload);
+
+    let mut trainer_free = 0.0f64;
+    let mut last_frontier = 0.0f64;
+    // Rollouts of the previous window, feeding this window's train step
+    // (one-step asynchronous RL: train overlaps the next generation).
+    let mut collected_prev = 0.0f64;
+    let mut stats: Vec<StepStat> = Vec::new();
+    let mut total_gen_tokens = 0u64;
+
+    // Lease window for the failure path: 2.5x the median batch duration.
+    let lease_s = 2.5 * SimConfig::TARGET_WINDOW_S;
+
+    for step in 0..cfg.steps {
+        // --- split the batch ------------------------------------------
+        for i in 0..n {
+            sched.observe_version(i as u32, VersionState { active: step, staged: None });
+        }
+        let shares: Vec<(usize, u64)> = if cfg.hetero_sched {
+            sched
+                .allocate(step, cfg.batch)
+                .into_iter()
+                .map(|a| (a.actor as usize, a.requests))
+                .collect()
+        } else {
+            let per = cfg.batch / n as u64;
+            let mut v: Vec<(usize, u64)> = (0..n).map(|i| (i, per)).collect();
+            for k in 0..(cfg.batch - per * n as u64) as usize {
+                v[k % n].1 += 1;
+            }
+            v
+        };
+
+        // --- rollout phase (on the stale policy) -----------------------
+        let failed: Vec<usize> = cfg
+            .failures
+            .iter()
+            .filter(|f| f.step == step)
+            .map(|f| f.actor)
+            .collect();
+        let mut collected = 0.0f64;
+        let mut window = 0.0f64;
+        let mut redo_work = 0u64;
+        let mut redo_from = 0.0f64;
+        let mut surviving_rate = 0.0f64;
+        for &(ai, share) in &shares {
+            if share == 0 {
+                continue;
+            }
+            let a = &mut actors[ai];
+            let start = a.batch_end.max(a.next_start);
+            if failed.contains(&ai) {
+                redo_work += share;
+                redo_from = redo_from.max(start + lease_s);
+                a.batch_end = start + lease_s;
+                continue;
+            }
+            let dur = cm.rollout_time(a.gpu, &cfg.model, share);
+            let end = start + dur;
+            timeline.record(&format!("actor{ai:02}"), SpanKind::Rollout, start, end, step);
+            let res_bytes = share * cm.result_bytes_per_sample();
+            let res_t = wan_links[a.region].control_delay()
+                + res_bytes as f64 * 8.0 / wan_links[a.region].effective_bps(1);
+            a.batch_end = end;
+            collected = collected.max(end + res_t);
+            window = window.max(dur);
+            surviving_rate += cm.rollout_rate(a.gpu, &cfg.model);
+            sched.settle(ai as u32, (share as f64 * cm.gen_tokens_per_sample) as u64, dur);
+            total_gen_tokens += (share as f64 * cm.gen_tokens_per_sample) as u64;
+        }
+        if redo_work > 0 && surviving_rate > 0.0 {
+            // Lease expiry returns the failed prompts; survivors redo them
+            // in parallel, rate-sharing the remainder.
+            let redo_t = redo_work as f64 * cm.gen_tokens_per_sample / surviving_rate;
+            collected = collected.max(redo_from + redo_t);
+            total_gen_tokens += (redo_work as f64 * cm.gen_tokens_per_sample) as u64;
+        }
+
+        // --- train (consumes the *previous* window's rollouts, running
+        // concurrently with this window's generation) --------------------
+        let train_start = collected_prev.max(trainer_free);
+        let train_end = train_start + train_time;
+        timeline.record("trainer", SpanKind::Train, train_start, train_end, step);
+        trainer_free = train_end;
+        collected_prev = collected;
+
+        // --- extract + stream the new delta ------------------------------
+        let mut max_deliver = train_end;
+        for (ri, region) in cfg.regions.iter().enumerate() {
+            let wan = &wan_links[ri];
+            let members: Vec<usize> = actors
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| a.region == ri)
+                .map(|(i, _)| i)
+                .collect();
+            if members.is_empty() {
+                continue;
+            }
+            let produce = if pipelined_extract { Some(emit_bps) } else { None };
+            let deliver_at = if region.use_relay && members.len() > 1 {
+                train_end
+                    + plan.relay_fanout_time(wan, &intra, payload, members.len() - 1, produce, &mut rng)
+            } else {
+                train_end + plan.direct_fanout_time(wan, payload, members.len(), produce, &mut rng)
+            };
+            let deliver_at = deliver_at + wan.control_delay(); // Commit msg
+            for &ai in &members {
+                // Next batch starts once the running batch ends AND the
+                // new version is committed at a safe point.
+                actors[ai].next_start = actors[ai].batch_end.max(deliver_at);
+            }
+            max_deliver = max_deliver.max(deliver_at);
+        }
+        if pipelined_extract {
+            timeline.record(
+                "trainer",
+                SpanKind::Extract,
+                train_end,
+                train_end + extract_time,
+                step,
+            );
+        }
+        timeline.record("trainer", SpanKind::Transfer, train_end, max_deliver, step);
+
+        // Step cadence: growth of the "next window can start" frontier.
+        let frontier = actors
+            .iter()
+            .map(|a| a.next_start)
+            .fold(train_end, f64::max);
+        stats.push(StepStat {
+            step,
+            step_time: frontier - last_frontier,
+            transfer_time: max_deliver - train_end,
+            payload_bytes: payload,
+            rollout_window: window,
+            train_time,
+        });
+        last_frontier = frontier;
+    }
+
+    SimResult {
+        system: cfg.system,
+        steps: stats,
+        total_time: last_frontier,
+        total_gen_tokens,
+        timeline,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{self, regions};
+
+    fn paper_cfg(system: System, model: &str) -> SimConfig {
+        let model = config::model(model).unwrap();
+        // Actor count scales with model size (paper: 4/8/12 A100s).
+        let n_actors = (model.total_params() as f64 / 1.02e9).round() as usize;
+        let regions = vec![RegionSpec::new(
+            regions::CANADA,
+            vec![GpuClass::A100; n_actors.clamp(4, 16)],
+        )];
+        SimConfig::paper_testbed(model, Benchmark::Gsm8k, system, regions)
+    }
+
+    #[test]
+    fn sparrow_beats_full_broadcast_qwen3_8b() {
+        let sparrow = run(&paper_cfg(System::Sparrow, "qwen3-8b"));
+        let full = run(&paper_cfg(System::PrimeRlFull, "qwen3-8b"));
+        let speedup = sparrow.throughput() / full.throughput();
+        assert!(
+            (2.4..11.0).contains(&speedup),
+            "sparrow {:.0} vs full {:.0} tok/s (x{speedup:.2})",
+            sparrow.throughput(),
+            full.throughput()
+        );
+    }
+
+    #[test]
+    fn sparrow_close_to_ideal_single_dc() {
+        let sparrow = run(&paper_cfg(System::Sparrow, "qwen3-8b"));
+        let ideal = run(&paper_cfg(System::IdealSingleDc, "qwen3-8b"));
+        let gap = 1.0 - sparrow.throughput() / ideal.throughput();
+        assert!(
+            (-0.01..0.15).contains(&gap),
+            "gap to ideal {:.1}% (paper: 1.31-8.91%)",
+            gap * 100.0
+        );
+    }
+
+    #[test]
+    fn multistream_between_full_and_sparrow() {
+        let full = run(&paper_cfg(System::PrimeRlFull, "qwen3-8b")).throughput();
+        let ms = run(&paper_cfg(System::PrimeRlMultiStream, "qwen3-8b")).throughput();
+        let sparrow = run(&paper_cfg(System::Sparrow, "qwen3-8b")).throughput();
+        assert!(ms > full * 1.1, "multistream helps dense transfer");
+        assert!(sparrow > ms * 1.2, "sparse deltas beat dense multistream");
+    }
+
+    #[test]
+    fn gap_to_full_widens_with_model_scale() {
+        // Fig 8: 4B speedup 2.4-3.7x, 14B speedup 7.7-9.5x.
+        let ratio = |m: &str| {
+            run(&paper_cfg(System::Sparrow, m)).throughput()
+                / run(&paper_cfg(System::PrimeRlFull, m)).throughput()
+        };
+        let s4 = ratio("qwen3-4b");
+        let s14 = ratio("qwen3-14b");
+        assert!(s14 > 1.8 * s4, "4B x{s4:.1} vs 14B x{s14:.1}");
+        assert!((2.0..5.0).contains(&s4), "4B x{s4:.1} (paper 2.4-3.7)");
+        assert!((6.5..13.0).contains(&s14), "14B x{s14:.1} (paper 7.7-9.5)");
+    }
+
+    #[test]
+    fn failure_recovers_via_lease_redistribution() {
+        let mut cfg = paper_cfg(System::Sparrow, "qwen3-8b");
+        cfg.failures = vec![FailureEvent { actor: 0, step: 2 }];
+        let with_failure = run(&cfg);
+        let healthy = run(&paper_cfg(System::Sparrow, "qwen3-8b"));
+        assert_eq!(with_failure.total_gen_tokens, healthy.total_gen_tokens);
+        assert!(with_failure.total_time > healthy.total_time);
+        assert!(
+            with_failure.total_time
+                < healthy.total_time + 2.5 * SimConfig::TARGET_WINDOW_S + 90.0,
+            "failure overhead bounded by the lease window"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run(&paper_cfg(System::Sparrow, "qwen3-8b"));
+        let b = run(&paper_cfg(System::Sparrow, "qwen3-8b"));
+        assert_eq!(a.total_time, b.total_time);
+        assert_eq!(a.total_gen_tokens, b.total_gen_tokens);
+    }
+
+    #[test]
+    fn timeline_records_all_span_kinds() {
+        let r = run(&paper_cfg(System::Sparrow, "qwen3-8b"));
+        assert!(r.timeline.total("trainer", SpanKind::Train) > 0.0);
+        assert!(r.timeline.total("trainer", SpanKind::Transfer) > 0.0);
+        assert!(r.timeline.total("actor00", SpanKind::Rollout) > 0.0);
+    }
+
+    #[test]
+    fn hetero_scheduling_beats_uniform_on_mixed_pool() {
+        // Table 7's setting: mixed A100+L40 pool.
+        let model = config::model("qwen3-4b").unwrap();
+        let mk = |hetero: bool| {
+            let regions = vec![RegionSpec::new(
+                regions::CANADA,
+                vec![
+                    GpuClass::A100,
+                    GpuClass::A100,
+                    GpuClass::A100,
+                    GpuClass::A100,
+                    GpuClass::L40,
+                    GpuClass::L40,
+                    GpuClass::L40,
+                    GpuClass::L40,
+                ],
+            )];
+            let mut cfg = SimConfig::paper_testbed(
+                model.clone(),
+                Benchmark::Gsm8k,
+                System::Sparrow,
+                regions,
+            );
+            // Table 7's trainer (4xH100) keeps training off the critical
+            // path so the scheduling effect is visible.
+            cfg.trainer_gpus = 4;
+            cfg.hetero_sched = hetero;
+            cfg
+        };
+        let aware = run(&mk(true)).throughput();
+        let uniform = run(&mk(false)).throughput();
+        let gain = aware / uniform - 1.0;
+        assert!(
+            (0.10..0.50).contains(&gain),
+            "hetero gain {:.1}% (paper: 26.4-35.5%)",
+            gain * 100.0
+        );
+    }
+}

@@ -1,0 +1,74 @@
+//! End-to-end system simulator: the §7 geo-distributed testbed as a
+//! deterministic virtual-time model.
+//!
+//! The RL loop has a fixed pipeline structure (rollout ‖ train ‖ transfer
+//! under a one-step policy lag), so the simulator advances step-by-step
+//! computing entity completion times from the calibrated compute model
+//! (`compute.rs`) and the netsim link models, while reusing the *real*
+//! scheduler (Algorithm 1) for batch splitting. Systems differ only in the
+//! knobs the paper varies — payload (sparse vs dense), transfer plan
+//! (streams / pipelining / relay), and link fabric (WAN vs RDMA):
+//!
+//! | system               | payload      | plan                | fabric |
+//! |----------------------|--------------|---------------------|--------|
+//! | SparrowRL            | sparse delta | multi-stream + relay| WAN    |
+//! | PrimeRL-Full         | dense bf16   | single stream       | WAN    |
+//! | PrimeRL-MultiStream  | dense bf16   | S streams           | WAN    |
+//! | Ideal-SingleDC       | dense bf16   | RDMA broadcast      | RDMA   |
+
+pub mod compute;
+pub mod driver;
+
+pub use compute::ComputeModel;
+pub use driver::{SimConfig, SimResult, StepStat};
+
+use crate::config::RegionProfile;
+use crate::config::GpuClass;
+
+/// Which RL system is being simulated (§7.1 baselines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum System {
+    /// Sparse deltas, pipelined extraction, S streams, relay fanout.
+    Sparrow,
+    /// Dense full-weight broadcast over one TCP stream per actor.
+    PrimeRlFull,
+    /// Dense weights chunked over S parallel streams.
+    PrimeRlMultiStream,
+    /// Trainer + actors colocated on an RDMA fabric (upper bound).
+    IdealSingleDc,
+}
+
+impl System {
+    pub fn name(self) -> &'static str {
+        match self {
+            System::Sparrow => "SparrowRL",
+            System::PrimeRlFull => "PrimeRL-Full",
+            System::PrimeRlMultiStream => "PrimeRL-MS",
+            System::IdealSingleDc => "Ideal-SingleDC",
+        }
+    }
+
+    pub fn all() -> [System; 4] {
+        [
+            System::IdealSingleDc,
+            System::Sparrow,
+            System::PrimeRlMultiStream,
+            System::PrimeRlFull,
+        ]
+    }
+}
+
+/// One region of rollout actors and its WAN path from the Trainer.
+#[derive(Clone, Debug)]
+pub struct RegionSpec {
+    pub profile: RegionProfile,
+    pub gpus: Vec<GpuClass>,
+    /// Route deltas through a regional relay (vs direct per-actor send).
+    pub use_relay: bool,
+}
+
+impl RegionSpec {
+    pub fn new(profile: RegionProfile, gpus: Vec<GpuClass>) -> RegionSpec {
+        RegionSpec { profile, gpus, use_relay: true }
+    }
+}

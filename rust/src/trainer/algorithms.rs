@@ -1,0 +1,163 @@
+//! RL advantage estimators: GRPO, RLOO, and OPO (paper Table 4).
+//!
+//! SparrowRL "requires no modifications to the underlying RL algorithms":
+//! the train-step artifact consumes per-sequence advantages, and these
+//! estimators — the only place the three algorithms differ for our
+//! purposes — run in the coordinator over each prompt's rollout group.
+
+/// Which estimator turns group rewards into advantages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Group-normalized: (r - mean) / (std + eps)   [DeepSeekMath].
+    Grpo,
+    /// Leave-one-out baseline: r_i - mean(r_{j != i})   [Ahmadian et al.].
+    Rloo,
+    /// Optimal (length-weighted) reward baseline: r_i - sum(l r)/sum(l).
+    Opo,
+}
+
+impl Algorithm {
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Grpo => "GRPO",
+            Algorithm::Rloo => "RLOO",
+            Algorithm::Opo => "OPO",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s.to_ascii_lowercase().as_str() {
+            "grpo" => Some(Algorithm::Grpo),
+            "rloo" => Some(Algorithm::Rloo),
+            "opo" => Some(Algorithm::Opo),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Algorithm; 3] {
+        [Algorithm::Grpo, Algorithm::Rloo, Algorithm::Opo]
+    }
+
+    /// Advantages for one rollout group. `lengths` are generated-token
+    /// counts (OPO's baseline weights; ignored by GRPO/RLOO).
+    pub fn advantages(self, rewards: &[f32], lengths: &[usize]) -> Vec<f32> {
+        assert_eq!(rewards.len(), lengths.len());
+        let n = rewards.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if n == 1 {
+            // Degenerate group: no baseline is estimable.
+            return vec![0.0];
+        }
+        let mean = rewards.iter().sum::<f32>() / n as f32;
+        match self {
+            Algorithm::Grpo => {
+                let var = rewards.iter().map(|r| (r - mean) * (r - mean)).sum::<f32>()
+                    / n as f32;
+                let std = var.sqrt();
+                let denom = std + 1e-4;
+                rewards.iter().map(|r| (r - mean) / denom).collect()
+            }
+            Algorithm::Rloo => {
+                let sum: f32 = rewards.iter().sum();
+                rewards
+                    .iter()
+                    .map(|&r| {
+                        let loo_mean = (sum - r) / (n as f32 - 1.0);
+                        r - loo_mean
+                    })
+                    .collect()
+            }
+            Algorithm::Opo => {
+                let wsum: f32 = lengths.iter().map(|&l| l as f32).sum();
+                if wsum <= 0.0 {
+                    return rewards.iter().map(|&r| r - mean).collect();
+                }
+                let baseline = rewards
+                    .iter()
+                    .zip(lengths)
+                    .map(|(&r, &l)| r * l as f32)
+                    .sum::<f32>()
+                    / wsum;
+                rewards.iter().map(|&r| r - baseline).collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < 1e-5, "{a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn grpo_normalizes_to_zero_mean_unit_scale() {
+        let r = [1.0, 0.0, 1.0, 0.0];
+        let adv = Algorithm::Grpo.advantages(&r, &[4; 4]);
+        let mean: f32 = adv.iter().sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!(adv[0] > 0.9 && adv[1] < -0.9);
+    }
+
+    #[test]
+    fn grpo_uniform_rewards_give_zero_advantage() {
+        let adv = Algorithm::Grpo.advantages(&[0.5; 8], &[3; 8]);
+        assert!(adv.iter().all(|a| a.abs() < 1e-6));
+    }
+
+    #[test]
+    fn rloo_matches_hand_computation() {
+        let r = [1.0, 0.0, 0.5];
+        // baselines: (0+0.5)/2=0.25, (1+0.5)/2=0.75, (1+0)/2=0.5
+        close(
+            &Algorithm::Rloo.advantages(&r, &[1; 3]),
+            &[0.75, -0.75, 0.0],
+        );
+    }
+
+    #[test]
+    fn rloo_advantages_sum_to_zero() {
+        let r = [0.3, 0.9, 0.1, 0.6, 1.0];
+        let adv = Algorithm::Rloo.advantages(&r, &[2; 5]);
+        let s: f32 = adv.iter().sum();
+        assert!(s.abs() < 1e-5);
+    }
+
+    #[test]
+    fn opo_length_weighted_baseline() {
+        let r = [1.0, 0.0];
+        let l = [3usize, 1];
+        // baseline = (3*1 + 1*0)/4 = 0.75
+        close(&Algorithm::Opo.advantages(&r, &l), &[0.25, -0.75]);
+    }
+
+    #[test]
+    fn opo_equal_lengths_reduces_to_mean_baseline() {
+        let r = [1.0, 0.0, 0.5, 0.5];
+        let opo = Algorithm::Opo.advantages(&r, &[7; 4]);
+        let mean = 0.5;
+        let want: Vec<f32> = r.iter().map(|x| x - mean).collect();
+        close(&opo, &want);
+    }
+
+    #[test]
+    fn singleton_group_yields_zero() {
+        for alg in Algorithm::all() {
+            assert_eq!(alg.advantages(&[0.7], &[4]), vec![0.0]);
+        }
+    }
+
+    #[test]
+    fn empty_group_yields_empty() {
+        for alg in Algorithm::all() {
+            assert!(alg.advantages(&[], &[]).is_empty());
+        }
+    }
+}

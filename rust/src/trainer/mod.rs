@@ -1,0 +1,118 @@
+//! Trainer Hub: policy optimization, advantage estimation, and the delta
+//! extraction pipeline (paper §4's "Trainer Hub" tier).
+//!
+//! The compute itself (fwd/bwd/Adam) lives in the AOT train-step artifact
+//! executed through `runtime/`; this module owns everything around it:
+//! rollout grouping, the GRPO/RLOO/OPO estimators, and turning consecutive
+//! bf16 policy snapshots into sealed delta checkpoints.
+
+pub mod algorithms;
+
+pub use algorithms::Algorithm;
+
+use crate::delta::{extract_delta, ApplyMode, DeltaCheckpoint, ModelLayout, ParamSet};
+
+/// One completed rollout returned by an actor.
+#[derive(Clone, Debug)]
+pub struct Rollout {
+    pub prompt_id: u64,
+    pub actor: u32,
+    /// Policy version the rollout was generated on.
+    pub version: u64,
+    pub prompt_tokens: Vec<i32>,
+    pub generated_tokens: Vec<i32>,
+    pub reward: f32,
+}
+
+/// Group rollouts by prompt and compute per-sequence advantages
+/// (GRPO-family algorithms operate on per-prompt groups of size G).
+pub fn group_advantages(rollouts: &[Rollout], alg: Algorithm) -> Vec<f32> {
+    use std::collections::BTreeMap;
+    let mut groups: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+    for (i, r) in rollouts.iter().enumerate() {
+        groups.entry(r.prompt_id).or_default().push(i);
+    }
+    let mut adv = vec![0.0f32; rollouts.len()];
+    for idx in groups.values() {
+        let rewards: Vec<f32> = idx.iter().map(|&i| rollouts[i].reward).collect();
+        let lengths: Vec<usize> = idx
+            .iter()
+            .map(|&i| rollouts[i].generated_tokens.len())
+            .collect();
+        for (k, &i) in idx.iter().enumerate() {
+            adv[i] = alg.advantages(&rewards, &lengths)[k];
+        }
+    }
+    adv
+}
+
+/// Snapshot-diff the old/new bf16 policies into a sealed, versioned delta
+/// checkpoint (the paper's step-(4): encode + store).
+pub fn extract_checkpoint(
+    layout: &ModelLayout,
+    old_policy: &ParamSet,
+    new_policy: &ParamSet,
+    base_version: u64,
+    version: u64,
+) -> DeltaCheckpoint {
+    let delta = extract_delta(layout, old_policy, new_policy, base_version, version, ApplyMode::Assign);
+    DeltaCheckpoint::seal(&delta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rollout(prompt: u64, reward: f32, len: usize) -> Rollout {
+        Rollout {
+            prompt_id: prompt,
+            actor: 0,
+            version: 1,
+            prompt_tokens: vec![1],
+            generated_tokens: vec![5; len],
+            reward,
+        }
+    }
+
+    #[test]
+    fn advantages_are_computed_per_group() {
+        let rs = vec![
+            rollout(1, 1.0, 4),
+            rollout(1, 0.0, 4),
+            rollout(2, 0.5, 4),
+            rollout(2, 0.5, 4),
+        ];
+        let adv = group_advantages(&rs, Algorithm::Grpo);
+        // Group 1 has spread; group 2 is uniform -> zero advantage.
+        assert!(adv[0] > 0.0 && adv[1] < 0.0);
+        assert!(adv[2].abs() < 1e-6 && adv[3].abs() < 1e-6);
+    }
+
+    #[test]
+    fn interleaved_groups_map_back_correctly() {
+        let rs = vec![
+            rollout(9, 1.0, 2),
+            rollout(7, 0.0, 2),
+            rollout(9, 0.0, 2),
+            rollout(7, 1.0, 2),
+        ];
+        let adv = group_advantages(&rs, Algorithm::Rloo);
+        assert!(adv[0] > 0.0 && adv[2] < 0.0, "group 9 order kept");
+        assert!(adv[1] < 0.0 && adv[3] > 0.0, "group 7 order kept");
+    }
+
+    #[test]
+    fn extract_checkpoint_round_trips() {
+        use crate::util::{Bf16, Rng};
+        let layout = ModelLayout::transformer("t", 64, 16, 2, 32);
+        let mut rng = Rng::new(1);
+        let old = ParamSet::random(&layout, 0.02, &mut rng);
+        let mut new = old.clone();
+        new.tensors[0][3] = Bf16::from_bits(new.tensors[0][3].to_bits() ^ 1);
+        let ckpt = extract_checkpoint(&layout, &old, &new, 4, 5);
+        assert_eq!(ckpt.version, 5);
+        assert_eq!(ckpt.base_version, 4);
+        let d = ckpt.open().unwrap();
+        assert_eq!(d.nnz(), 1);
+    }
+}

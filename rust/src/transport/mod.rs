@@ -1,0 +1,25 @@
+//! Streaming delta transfer protocol (paper §5.2).
+//!
+//! A delta checkpoint is treated as a stream of independently transmitted,
+//! deterministically reassembled segments:
+//!
+//! * `segment`    — wire framing: (version, seq, total, payload, checksum);
+//! * `stripe`     — round-robin assignment of segments to S parallel
+//!                  streams, and per-stream serialization order;
+//! * `reassembly` — order/duplication-tolerant reconstruction with
+//!                  whole-artifact hash verification before commit;
+//! * `relay`      — two-tier fanout: Trainer → regional seed Actor → peers,
+//!                  forwarding segments on arrival (cut-through);
+//! * `plan`       — the analytic timing of all of the above over `netsim`
+//!                  links (used by the simulator and the experiments).
+
+pub mod plan;
+pub mod reassembly;
+pub mod relay;
+pub mod segment;
+pub mod stripe;
+
+pub use plan::TransferPlan;
+pub use reassembly::Reassembler;
+pub use segment::{split_into_segments, Segment, DEFAULT_SEGMENT_BYTES};
+pub use stripe::stripe_round_robin;

@@ -1,0 +1,230 @@
+//! Analytic timing of the streaming transfer protocol over `netsim` links.
+//!
+//! The discrete-event simulator and every transfer-time experiment
+//! (Table 2, Figures 10–13) price transfers through this one model so that
+//! baselines and SparrowRL differ only in the knobs the paper varies:
+//! payload size, stream count, pipelining, and relay fanout.
+
+use crate::netsim::{Link, TransferOpts};
+use crate::util::Rng;
+
+/// Default intra-region (same provider/datacenter LAN) path used for
+/// relay → peer fanout: 10 Gbps, 1 ms RTT, clean.
+pub fn intra_region_link() -> Link {
+    Link::emulated(10e9, 0.001, 0.0)
+}
+
+/// How a checkpoint (or dense weight blob) is moved.
+#[derive(Clone, Copy, Debug)]
+pub struct TransferPlan {
+    /// Parallel TCP streams (1 = the paper's single-stream baseline).
+    pub streams: usize,
+    /// Segment size for cut-through pipelining.
+    pub segment_bytes: u64,
+    /// Overlap source-side production (delta extraction) with transmission.
+    pub pipelined: bool,
+    /// Sample per-transfer link jitter.
+    pub jittered: bool,
+}
+
+impl TransferPlan {
+    pub fn sparrow_default() -> TransferPlan {
+        TransferPlan { streams: 4, segment_bytes: 1 << 20, pipelined: true, jittered: false }
+    }
+
+    pub fn single_stream() -> TransferPlan {
+        TransferPlan { streams: 1, segment_bytes: 1 << 20, pipelined: true, jittered: false }
+    }
+
+    /// Dense full-weight broadcast baseline (PrimeRL-Full): one blocking
+    /// stream, no extraction pipeline (weights already materialized).
+    pub fn full_weight() -> TransferPlan {
+        TransferPlan { streams: 1, segment_bytes: 1 << 22, pipelined: false, jittered: false }
+    }
+
+    /// PrimeRL-MultiStream baseline: chunked dense weights over multiple
+    /// parallel TCP streams, still blocking.
+    pub fn full_weight_multistream(streams: usize) -> TransferPlan {
+        TransferPlan { streams, segment_bytes: 1 << 22, pipelined: false, jittered: false }
+    }
+
+    fn opts(&self) -> TransferOpts {
+        TransferOpts { streams: self.streams, jittered: self.jittered }
+    }
+
+    /// Time to deliver `bytes` to one receiver. `produce_bps` is the
+    /// source-side production rate (delta extraction encode stream) used
+    /// when pipelining; `None` means the payload is already materialized.
+    pub fn delivery_time(
+        &self,
+        link: &Link,
+        bytes: u64,
+        produce_bps: Option<f64>,
+        rng: &mut Rng,
+    ) -> f64 {
+        match (self.pipelined, produce_bps) {
+            (true, Some(re)) => {
+                link.pipelined_time(bytes, re, self.segment_bytes, self.opts(), rng)
+            }
+            _ => {
+                let extract = produce_bps
+                    .map(|re| bytes as f64 * 8.0 / re)
+                    .unwrap_or(0.0);
+                extract + link.transfer_time(bytes, self.opts(), rng)
+            }
+        }
+    }
+
+    /// Deliver to `n` receivers in one region *without* a relay: every
+    /// copy crosses the WAN concurrently (one connection set per actor),
+    /// so the region ingress carries O(N) bytes — n*streams TCP flows
+    /// sharing the bottleneck (the paper's O(N) cross-region transfers).
+    pub fn direct_fanout_time(
+        &self,
+        wan: &Link,
+        bytes: u64,
+        n: usize,
+        produce_bps: Option<f64>,
+        rng: &mut Rng,
+    ) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        if n == 1 {
+            return self.delivery_time(wan, bytes, produce_bps, rng);
+        }
+        let jf = if self.jittered { wan.jitter_factor(rng) } else { 1.0 };
+        let per_stream = wan.single_stream_ceiling_bps();
+        let aggregate = (per_stream * (n * self.streams) as f64)
+            .min(wan.capacity_bps * crate::netsim::link::PROTOCOL_EFFICIENCY)
+            * jf;
+        let total_bits = n as f64 * bytes as f64 * 8.0;
+        let extract = produce_bps
+            .map(|re| {
+                if self.pipelined {
+                    // Cut-through: only the pipeline-fill cost is exposed.
+                    (self.segment_bytes.min(bytes) as f64 * 8.0 / re)
+                        .max(bytes as f64 * 8.0 / re - total_bits / aggregate)
+                } else {
+                    bytes as f64 * 8.0 / re
+                }
+            })
+            .unwrap_or(0.0);
+        wan.startup_time() + extract + total_bits / aggregate
+    }
+
+    /// Relay-based two-tier fanout (§5.2): one WAN copy to the seed actor,
+    /// which forwards segments on arrival over the intra-region path.
+    /// Cut-through means total ≈ WAN delivery + one segment's intra hop
+    /// (when the LAN is faster than the WAN, which it always is here).
+    pub fn relay_fanout_time(
+        &self,
+        wan: &Link,
+        intra: &Link,
+        bytes: u64,
+        n_peers: usize,
+        produce_bps: Option<f64>,
+        rng: &mut Rng,
+    ) -> f64 {
+        let wan_time = self.delivery_time(wan, bytes, produce_bps, rng);
+        if n_peers == 0 {
+            return wan_time;
+        }
+        // The relay re-streams to each peer; intra-region capacity is
+        // shared across peers. If intra fanout is slower than WAN arrival,
+        // it becomes the bottleneck stage of the pipeline.
+        let intra_bw = intra.effective_bps(self.streams);
+        let fanout_rate = intra_bw / n_peers as f64;
+        let wan_bw = wan.effective_bps(self.streams);
+        let seg = self.segment_bytes.min(bytes.max(1)) as f64 * 8.0;
+        let tail = if fanout_rate >= wan_bw {
+            // LAN drains as fast as the WAN fills: one extra segment hop.
+            intra.startup_time() + seg / fanout_rate
+        } else {
+            // LAN is the bottleneck: residual drain after WAN completes.
+            intra.startup_time()
+                + bytes as f64 * 8.0 * (1.0 / fanout_rate - 1.0 / wan_bw)
+                + seg / wan_bw
+        };
+        wan_time + tail
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::regions;
+
+    fn rng() -> Rng {
+        Rng::new(7)
+    }
+
+    #[test]
+    fn figure10_progression_naive_varint_multistream() {
+        // Fig 10 (US-Canada, Qwen3-8B): naive 414 MB @ 1 stream = 9.22 s,
+        // varint 202 MB @ 1 stream = 4.71 s, + multistream = 2.90 s.
+        let link = Link::from_profile(&regions::CANADA);
+        let mut r = rng();
+        let naive = TransferPlan::single_stream().delivery_time(&link, 414_000_000, None, &mut r);
+        let varint = TransferPlan::single_stream().delivery_time(&link, 202_000_000, None, &mut r);
+        let multi = TransferPlan::sparrow_default().delivery_time(&link, 202_000_000, None, &mut r);
+        assert!((7.5..11.5).contains(&naive), "naive {naive:.2} (paper 9.22)");
+        assert!((3.8..5.8).contains(&varint), "varint {varint:.2} (paper 4.71)");
+        assert!((2.2..3.6).contains(&multi), "multi {multi:.2} (paper 2.90)");
+        assert!(naive > varint && varint > multi);
+    }
+
+    #[test]
+    fn relay_beats_direct_fanout_for_many_peers() {
+        let wan = Link::from_profile(&regions::AUSTRALIA);
+        let intra = intra_region_link();
+        let plan = TransferPlan::sparrow_default();
+        let mut r = rng();
+        let bytes = 202_000_000;
+        let direct = plan.direct_fanout_time(&wan, bytes, 8, Some(3.2e9), &mut r);
+        let relay = plan.relay_fanout_time(&wan, &intra, bytes, 7, Some(3.2e9), &mut r);
+        assert!(
+            relay < direct * 0.75,
+            "relay {relay:.2} should be well under direct {direct:.2}"
+        );
+    }
+
+    #[test]
+    fn relay_tail_small_when_lan_fast() {
+        let wan = Link::from_profile(&regions::CANADA);
+        let intra = intra_region_link();
+        let plan = TransferPlan::sparrow_default();
+        let mut r = rng();
+        let alone = plan.delivery_time(&wan, 202_000_000, None, &mut r);
+        let with_peers = plan.relay_fanout_time(&wan, &intra, 202_000_000, 3, None, &mut r);
+        assert!(with_peers - alone < 0.5, "tail {:.3} s", with_peers - alone);
+    }
+
+    #[test]
+    fn pipelining_beats_blocking_extraction() {
+        let link = Link::from_profile(&regions::CANADA);
+        let mut r = rng();
+        let extract_bps = 0.3e9 * 8.0;
+        let mut plan = TransferPlan::sparrow_default();
+        let piped = plan.delivery_time(&link, 202_000_000, Some(extract_bps), &mut r);
+        plan.pipelined = false;
+        let blocking = plan.delivery_time(&link, 202_000_000, Some(extract_bps), &mut r);
+        assert!(piped < blocking, "{piped:.2} vs {blocking:.2}");
+    }
+
+    #[test]
+    fn direct_fanout_carries_o_n_bytes() {
+        // n receivers cost n copies across the ingress; concurrency lets
+        // the flows aggregate past one stream's ceiling but not past the
+        // link capacity, so time grows superlinearly vs a single delivery
+        // once capacity saturates.
+        let wan = Link::from_profile(&regions::CANADA);
+        let plan = TransferPlan::full_weight();
+        let mut r = rng();
+        let t1 = plan.direct_fanout_time(&wan, 1_000_000_000, 1, None, &mut r);
+        let t4 = plan.direct_fanout_time(&wan, 1_000_000_000, 4, None, &mut r);
+        let t8 = plan.direct_fanout_time(&wan, 1_000_000_000, 8, None, &mut r);
+        assert!(t4 > 1.8 * t1, "t1={t1:.1} t4={t4:.1}");
+        assert!(t8 > 1.8 * t4 - 1.0, "t4={t4:.1} t8={t8:.1}");
+    }
+}

@@ -1,0 +1,218 @@
+//! Deterministic reassembly of a segmented delta checkpoint (§5.2).
+//!
+//! Tolerates arbitrary arrival order and duplicates (relay retries);
+//! rejects cross-version mixing and inconsistent segment geometry. On
+//! completion the caller gets the raw byte stream; committing it as a
+//! `DeltaCheckpoint` re-verifies the embedded SHA-256 (the paper's
+//! "integrity verified against the delta checkpoint hash").
+
+use super::segment::Segment;
+use crate::delta::DeltaCheckpoint;
+
+/// Incremental reassembly buffer for one checkpoint version.
+pub struct Reassembler {
+    version: u64,
+    total: Option<u32>,
+    parts: Vec<Option<Vec<u8>>>,
+    received: usize,
+    bytes: usize,
+    duplicates: u64,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum AcceptError {
+    WrongVersion { expected: u64, got: u64 },
+    GeometryMismatch,
+    SeqOutOfRange,
+}
+
+impl Reassembler {
+    pub fn new(version: u64) -> Reassembler {
+        Reassembler {
+            version,
+            total: None,
+            parts: Vec::new(),
+            received: 0,
+            bytes: 0,
+            duplicates: 0,
+        }
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Fraction of segments received (staging progress metric).
+    pub fn progress(&self) -> f64 {
+        match self.total {
+            Some(t) if t > 0 => self.received as f64 / t as f64,
+            _ => 0.0,
+        }
+    }
+
+    pub fn bytes_staged(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn duplicates(&self) -> u64 {
+        self.duplicates
+    }
+
+    /// Accept one segment. Duplicate segments are counted and ignored.
+    pub fn accept(&mut self, seg: Segment) -> Result<(), AcceptError> {
+        if seg.version != self.version {
+            return Err(AcceptError::WrongVersion { expected: self.version, got: seg.version });
+        }
+        match self.total {
+            None => {
+                self.total = Some(seg.total);
+                self.parts = vec![None; seg.total as usize];
+            }
+            Some(t) if t != seg.total => return Err(AcceptError::GeometryMismatch),
+            _ => {}
+        }
+        let i = seg.seq as usize;
+        if i >= self.parts.len() {
+            return Err(AcceptError::SeqOutOfRange);
+        }
+        match &self.parts[i] {
+            Some(existing) => {
+                // Duplicate: must be byte-identical, else geometry lied.
+                if *existing != seg.payload {
+                    return Err(AcceptError::GeometryMismatch);
+                }
+                self.duplicates += 1;
+            }
+            None => {
+                self.bytes += seg.payload.len();
+                self.parts[i] = Some(seg.payload);
+                self.received += 1;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.total.map(|t| self.received == t as usize).unwrap_or(false)
+    }
+
+    /// Concatenate into the checkpoint byte stream (None until complete).
+    pub fn assemble(&self) -> Option<Vec<u8>> {
+        if !self.is_complete() {
+            return None;
+        }
+        let mut out = Vec::with_capacity(self.bytes);
+        for p in &self.parts {
+            out.extend_from_slice(p.as_ref().unwrap());
+        }
+        Some(out)
+    }
+
+    /// Assemble and hash-verify into a checkpoint artifact.
+    pub fn into_checkpoint(self) -> Option<Result<DeltaCheckpoint, crate::delta::DecodeError>> {
+        self.assemble().map(DeltaCheckpoint::from_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::{extract_delta, ApplyMode, ModelLayout, ParamSet};
+    use crate::transport::segment::split_into_segments;
+    use crate::util::{prop, Rng};
+
+    fn checkpoint(seed: u64) -> DeltaCheckpoint {
+        let l = ModelLayout::transformer("t", 128, 32, 2, 64);
+        let mut rng = Rng::new(seed);
+        let old = ParamSet::random(&l, 0.02, &mut rng);
+        let mut new = old.clone();
+        for t in &mut new.tensors {
+            for _ in 0..8 {
+                let i = rng.range(0, t.len());
+                t[i] = crate::util::Bf16::from_bits(t[i].to_bits() ^ 0x0020);
+            }
+        }
+        DeltaCheckpoint::seal(&extract_delta(&l, &old, &new, 0, 1, ApplyMode::Assign))
+    }
+
+    #[test]
+    fn in_order_reassembly() {
+        let c = checkpoint(1);
+        let segs = split_into_segments(c.version, &c.bytes, 64);
+        let mut r = Reassembler::new(c.version);
+        for s in segs {
+            r.accept(s).unwrap();
+        }
+        assert!(r.is_complete());
+        let back = r.into_checkpoint().unwrap().unwrap();
+        assert_eq!(back.bytes, c.bytes);
+        assert_eq!(back.hash, c.hash);
+    }
+
+    #[test]
+    fn out_of_order_and_duplicates_tolerated() {
+        let c = checkpoint(2);
+        let mut segs = split_into_segments(c.version, &c.bytes, 50);
+        let mut rng = Rng::new(3);
+        rng.shuffle(&mut segs);
+        // Duplicate a third of them.
+        let dups: Vec<_> = segs.iter().step_by(3).cloned().collect();
+        let mut r = Reassembler::new(c.version);
+        for s in segs.into_iter().chain(dups) {
+            r.accept(s).unwrap();
+        }
+        assert!(r.is_complete());
+        assert!(r.duplicates() > 0);
+        assert_eq!(r.assemble().unwrap(), c.bytes);
+    }
+
+    #[test]
+    fn cross_version_mixing_rejected() {
+        let c = checkpoint(4);
+        let segs = split_into_segments(c.version, &c.bytes, 64);
+        let mut r = Reassembler::new(99);
+        assert_eq!(
+            r.accept(segs[0].clone()),
+            Err(AcceptError::WrongVersion { expected: 99, got: c.version })
+        );
+    }
+
+    #[test]
+    fn geometry_mismatch_rejected() {
+        let c = checkpoint(5);
+        let a = split_into_segments(c.version, &c.bytes, 64);
+        let b = split_into_segments(c.version, &c.bytes, 128);
+        let mut r = Reassembler::new(c.version);
+        r.accept(a[0].clone()).unwrap();
+        assert_eq!(r.accept(b[0].clone()), Err(AcceptError::GeometryMismatch));
+    }
+
+    #[test]
+    fn incomplete_does_not_assemble() {
+        let c = checkpoint(6);
+        let segs = split_into_segments(c.version, &c.bytes, 64);
+        let mut r = Reassembler::new(c.version);
+        for s in segs.iter().take(segs.len() - 1) {
+            r.accept(s.clone()).unwrap();
+        }
+        assert!(!r.is_complete());
+        assert!(r.assemble().is_none());
+        assert!(r.progress() < 1.0);
+    }
+
+    #[test]
+    fn prop_any_permutation_reassembles_identically() {
+        prop::check("reassembly is permutation invariant", 30, |rng| {
+            let c = checkpoint(rng.next_u64());
+            let seg_size = rng.range(16, 200);
+            let mut segs = split_into_segments(c.version, &c.bytes, seg_size);
+            rng.shuffle(&mut segs);
+            let mut r = Reassembler::new(c.version);
+            for s in segs {
+                r.accept(s).unwrap();
+            }
+            let back = r.into_checkpoint().unwrap().unwrap();
+            assert_eq!(back.bytes, c.bytes);
+        });
+    }
+}

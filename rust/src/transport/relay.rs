@@ -1,0 +1,173 @@
+//! Relay node logic: regional seed actor that receives delta segments from
+//! the Trainer and forwards them to peer actors on arrival (§5.2
+//! "relay-based fanout" — cut-through, not store-and-forward).
+//!
+//! Transport-agnostic: the real runtime (`rt/`) plugs TCP writers in as
+//! `SegmentSink`s, tests plug in vectors. The relay also *stages the delta
+//! itself* (it is a dual-role node: rollout actor + regional proxy).
+
+use super::reassembly::{AcceptError, Reassembler};
+use super::segment::Segment;
+
+/// Receiver of forwarded segments (a peer actor connection).
+pub trait SegmentSink {
+    fn send_segment(&mut self, seg: &Segment) -> Result<(), String>;
+}
+
+impl SegmentSink for Vec<Segment> {
+    fn send_segment(&mut self, seg: &Segment) -> Result<(), String> {
+        self.push(seg.clone());
+        Ok(())
+    }
+}
+
+/// State machine of one relay for one checkpoint version.
+pub struct RelayNode {
+    reasm: Reassembler,
+    forwarded: u64,
+    forward_failures: u64,
+}
+
+impl RelayNode {
+    pub fn new(version: u64) -> RelayNode {
+        RelayNode { reasm: Reassembler::new(version), forwarded: 0, forward_failures: 0 }
+    }
+
+    pub fn version(&self) -> u64 {
+        self.reasm.version()
+    }
+
+    /// Handle one incoming segment: forward to every peer immediately
+    /// (cut-through), then stage locally. Duplicate segments are staged
+    /// (idempotently) but *not* re-forwarded, so retries cannot amplify.
+    pub fn on_segment<S: SegmentSink>(
+        &mut self,
+        seg: Segment,
+        peers: &mut [S],
+    ) -> Result<(), AcceptError> {
+        let dups_before = self.reasm.duplicates();
+        self.reasm.accept(seg.clone())?;
+        let is_dup = self.reasm.duplicates() > dups_before;
+        if !is_dup {
+            for p in peers.iter_mut() {
+                match p.send_segment(&seg) {
+                    Ok(()) => self.forwarded += 1,
+                    Err(_) => self.forward_failures += 1,
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn is_staged(&self) -> bool {
+        self.reasm.is_complete()
+    }
+
+    pub fn progress(&self) -> f64 {
+        self.reasm.progress()
+    }
+
+    pub fn forwarded(&self) -> u64 {
+        self.forwarded
+    }
+
+    pub fn forward_failures(&self) -> u64 {
+        self.forward_failures
+    }
+
+    /// Finish staging: produce the verified checkpoint bytes.
+    pub fn into_staged_bytes(self) -> Option<Vec<u8>> {
+        self.reasm.assemble()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::segment::split_into_segments;
+    use crate::util::Rng;
+
+    fn segments(version: u64, n_bytes: usize, seg: usize) -> Vec<Segment> {
+        let bytes: Vec<u8> = (0..n_bytes).map(|i| (i * 31) as u8).collect();
+        split_into_segments(version, &bytes, seg)
+    }
+
+    #[test]
+    fn forwards_each_segment_to_every_peer_once() {
+        let segs = segments(3, 1000, 100);
+        let mut relay = RelayNode::new(3);
+        let mut peers = vec![Vec::new(), Vec::new(), Vec::new()];
+        for s in &segs {
+            relay.on_segment(s.clone(), &mut peers).unwrap();
+        }
+        assert!(relay.is_staged());
+        assert_eq!(relay.forwarded(), (segs.len() * 3) as u64);
+        for p in &peers {
+            assert_eq!(p, &segs);
+        }
+    }
+
+    #[test]
+    fn duplicates_staged_but_not_reforwarded() {
+        let segs = segments(1, 500, 100);
+        let mut relay = RelayNode::new(1);
+        let mut peers = vec![Vec::new()];
+        for s in &segs {
+            relay.on_segment(s.clone(), &mut peers).unwrap();
+        }
+        // Retry the whole stream.
+        for s in &segs {
+            relay.on_segment(s.clone(), &mut peers).unwrap();
+        }
+        assert_eq!(peers[0].len(), segs.len(), "no duplicate forwarding");
+        assert!(relay.is_staged());
+    }
+
+    #[test]
+    fn peers_receive_out_of_order_stream_and_reassemble() {
+        let segs = {
+            let mut s = segments(9, 2000, 128);
+            Rng::new(5).shuffle(&mut s);
+            s
+        };
+        let mut relay = RelayNode::new(9);
+        let mut peers = vec![Vec::new()];
+        for s in &segs {
+            relay.on_segment(s.clone(), &mut peers).unwrap();
+        }
+        let mut peer_reasm = Reassembler::new(9);
+        for s in peers[0].drain(..) {
+            peer_reasm.accept(s).unwrap();
+        }
+        assert!(peer_reasm.is_complete());
+        assert_eq!(peer_reasm.assemble().unwrap(), relay.into_staged_bytes().unwrap());
+    }
+
+    #[test]
+    fn wrong_version_segments_rejected_not_forwarded() {
+        let mut relay = RelayNode::new(2);
+        let mut peers = vec![Vec::new()];
+        let seg = segments(7, 100, 100).remove(0);
+        assert!(relay.on_segment(seg, &mut peers).is_err());
+        assert!(peers[0].is_empty());
+    }
+
+    struct FailingSink;
+    impl SegmentSink for FailingSink {
+        fn send_segment(&mut self, _s: &Segment) -> Result<(), String> {
+            Err("broken pipe".into())
+        }
+    }
+
+    #[test]
+    fn peer_failure_does_not_stop_staging() {
+        let segs = segments(4, 800, 100);
+        let mut relay = RelayNode::new(4);
+        let mut peers = vec![FailingSink];
+        for s in &segs {
+            relay.on_segment(s.clone(), &mut peers).unwrap();
+        }
+        assert!(relay.is_staged(), "relay still stages despite dead peer");
+        assert_eq!(relay.forward_failures(), segs.len() as u64);
+    }
+}

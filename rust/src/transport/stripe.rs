@@ -1,0 +1,116 @@
+//! Round-robin segment striping across S parallel streams (§5.2).
+//!
+//! Striping serves two purposes the paper calls out: it lifts aggregate
+//! throughput past a single TCP stream's congestion-control ceiling, and a
+//! loss-induced stall on one stream delays only that stream's segments.
+//! Assignment must be a *deterministic function of seq* so a relay can
+//! re-stripe without coordination.
+
+use super::segment::Segment;
+
+/// Assign segment `seq` to one of `streams` streams.
+#[inline]
+pub fn stream_for(seq: u32, streams: usize) -> usize {
+    (seq as usize) % streams.max(1)
+}
+
+/// Partition segments into per-stream send queues, preserving seq order
+/// within each stream.
+pub fn stripe_round_robin(segments: Vec<Segment>, streams: usize) -> Vec<Vec<Segment>> {
+    let s = streams.max(1);
+    let mut queues: Vec<Vec<Segment>> = (0..s).map(|_| Vec::new()).collect();
+    for seg in segments {
+        queues[stream_for(seg.seq, s)].push(seg);
+    }
+    queues
+}
+
+/// Interleave per-stream queues back into arrival order assuming equal
+/// stream rates — the order a receiver would observe segments (test and
+/// simulation helper; reassembly does not depend on it).
+pub fn interleave_arrival_order(queues: &[Vec<Segment>]) -> Vec<Segment> {
+    let mut out = Vec::new();
+    let mut cursors = vec![0usize; queues.len()];
+    loop {
+        let mut progressed = false;
+        for (q, cur) in queues.iter().zip(cursors.iter_mut()) {
+            if *cur < q.len() {
+                out.push(q[*cur].clone());
+                *cur += 1;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            return out;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::segment::split_into_segments;
+    use crate::util::prop;
+
+    fn segs(n: usize) -> Vec<Segment> {
+        let bytes = vec![0u8; n * 10];
+        split_into_segments(1, &bytes, 10)
+    }
+
+    #[test]
+    fn round_robin_balances_counts() {
+        let queues = stripe_round_robin(segs(10), 4);
+        let counts: Vec<usize> = queues.iter().map(|q| q.len()).collect();
+        assert_eq!(counts, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn zero_streams_treated_as_one() {
+        let queues = stripe_round_robin(segs(5), 0);
+        assert_eq!(queues.len(), 1);
+        assert_eq!(queues[0].len(), 5);
+    }
+
+    #[test]
+    fn assignment_is_deterministic_in_seq() {
+        for seq in 0..100u32 {
+            assert_eq!(stream_for(seq, 4), (seq % 4) as usize);
+        }
+    }
+
+    #[test]
+    fn prop_striping_is_a_partition() {
+        prop::check("striping partitions segments exactly", 40, |rng| {
+            let n = rng.range(1, 200);
+            let s = rng.range(1, 9);
+            let original = segs(n);
+            let queues = stripe_round_robin(original.clone(), s);
+            // Every segment appears exactly once, on its assigned stream.
+            let mut seen = vec![false; n];
+            for (si, q) in queues.iter().enumerate() {
+                let mut last_seq = None;
+                for seg in q {
+                    assert_eq!(stream_for(seg.seq, s), si);
+                    assert!(!seen[seg.seq as usize]);
+                    seen[seg.seq as usize] = true;
+                    // seq order preserved within a stream
+                    if let Some(l) = last_seq {
+                        assert!(seg.seq > l);
+                    }
+                    last_seq = Some(seg.seq);
+                }
+            }
+            assert!(seen.into_iter().all(|x| x));
+        });
+    }
+
+    #[test]
+    fn interleave_emits_every_segment_once() {
+        let queues = stripe_round_robin(segs(11), 3);
+        let arr = interleave_arrival_order(&queues);
+        assert_eq!(arr.len(), 11);
+        let mut seqs: Vec<u32> = arr.iter().map(|s| s.seq).collect();
+        seqs.sort_unstable();
+        assert_eq!(seqs, (0..11).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,128 @@
+//! Minimal micro-benchmark harness (offline stand-in for criterion).
+//!
+//! `cargo bench` targets use `harness = false` and drive this directly.
+//! Each benchmark runs a warmup, then `reps` timed iterations, and reports
+//! min / median / mean / p95 wall time plus derived throughput.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub reps: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+    /// Optional bytes processed per iteration, for GB/s reporting.
+    pub bytes_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput_gbps(&self) -> Option<f64> {
+        self.bytes_per_iter
+            .map(|b| b as f64 / self.median.as_secs_f64() / 1e9)
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<44} reps={:<4} min={:>10.3?} med={:>10.3?} mean={:>10.3?} p95={:>10.3?}",
+            self.name, self.reps, self.min, self.median, self.mean, self.p95
+        );
+        if let Some(t) = self.throughput_gbps() {
+            s.push_str(&format!("  {:>8.3} GB/s", t));
+        }
+        s
+    }
+}
+
+/// Benchmark runner with uniform defaults.
+pub struct Bencher {
+    pub warmup: usize,
+    pub reps: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 3, reps: 15, results: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, reps: usize) -> Self {
+        Bencher { warmup, reps, results: Vec::new() }
+    }
+
+    /// Time `f` (which should return something cheap to drop; use
+    /// `std::hint::black_box` inside to defeat DCE).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.bench_bytes_opt(name, None, &mut f)
+    }
+
+    /// Time `f` and report GB/s against `bytes` per iteration.
+    pub fn bench_bytes<F: FnMut()>(&mut self, name: &str, bytes: u64, mut f: F) -> &BenchResult {
+        self.bench_bytes_opt(name, Some(bytes), &mut f)
+    }
+
+    fn bench_bytes_opt(
+        &mut self,
+        name: &str,
+        bytes: Option<u64>,
+        f: &mut dyn FnMut(),
+    ) -> &BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times: Vec<Duration> = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed());
+        }
+        times.sort_unstable();
+        let mean = times.iter().sum::<Duration>() / times.len() as u32;
+        let r = BenchResult {
+            name: name.to_string(),
+            reps: self.reps,
+            min: times[0],
+            median: times[times.len() / 2],
+            mean,
+            p95: times[(times.len() * 95 / 100).min(times.len() - 1)],
+            bytes_per_iter: bytes,
+        };
+        println!("{}", r.report());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_orders_stats() {
+        let mut b = Bencher::new(1, 5);
+        let r = b.bench("noop-ish", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.min <= r.median && r.median <= r.p95);
+        assert_eq!(r.reps, 5);
+    }
+
+    #[test]
+    fn throughput_derives_from_bytes() {
+        let mut b = Bencher::new(0, 3);
+        let buf = vec![1u8; 1 << 16];
+        let r = b.bench_bytes("sum-64k", buf.len() as u64, || {
+            std::hint::black_box(buf.iter().map(|&x| x as u64).sum::<u64>());
+        });
+        assert!(r.throughput_gbps().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,142 @@
+//! Minimal bfloat16 implementation (offline stand-in for the `half` crate).
+//!
+//! bf16 is the storage dtype for policy weights and delta values. The whole
+//! lossless-delta argument of the paper rests on bit-exact bf16 handling,
+//! so conversions here are defined purely on bit patterns:
+//!   f32 -> bf16 uses round-to-nearest-even on the dropped 16 bits (what
+//!   XLA/JAX do); bf16 -> f32 is exact (append 16 zero bits).
+
+/// A bfloat16 value stored as its raw bit pattern.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Default)]
+#[repr(transparent)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub const ZERO: Bf16 = Bf16(0);
+
+    /// Round-to-nearest-even conversion from f32 (matches XLA semantics,
+    /// including NaN preservation).
+    #[inline]
+    pub fn from_f32(x: f32) -> Bf16 {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // Quiet the NaN, keep the sign; never round a NaN to Inf.
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        // round-half-to-even on bit 16
+        let round_bit = 0x0000_8000u32;
+        let lsb = (bits >> 16) & 1;
+        let rounded = bits.wrapping_add(0x0000_7FFF + lsb);
+        let _ = round_bit;
+        Bf16((rounded >> 16) as u16)
+    }
+
+    /// Exact widening conversion.
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    #[inline]
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    #[inline]
+    pub fn from_bits(b: u16) -> Bf16 {
+        Bf16(b)
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7F80) == 0x7F80 && (self.0 & 0x007F) != 0
+    }
+}
+
+impl std::fmt::Debug for Bf16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}bf16", self.to_f32())
+    }
+}
+
+impl From<f32> for Bf16 {
+    fn from(x: f32) -> Self {
+        Bf16::from_f32(x)
+    }
+}
+
+impl From<Bf16> for f32 {
+    fn from(x: Bf16) -> f32 {
+        x.to_f32()
+    }
+}
+
+/// Quantize an f32 slice to bf16 bit patterns in place (returns a new vec).
+pub fn quantize_slice(xs: &[f32]) -> Vec<Bf16> {
+    xs.iter().map(|&x| Bf16::from_f32(x)).collect()
+}
+
+/// Widen a bf16 slice to f32.
+pub fn widen_slice(xs: &[Bf16]) -> Vec<f32> {
+    xs.iter().map(|x| x.to_f32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_round_trip() {
+        let tiny = (2.0f32).powi(-125); // bf16-exact small normal
+        for &x in &[0.0f32, 1.0, -1.0, 0.5, -0.5, 2.0, 256.0, tiny] {
+            let b = Bf16::from_f32(x);
+            assert_eq!(b.to_f32(), x, "{x} should be bf16-exact");
+        }
+    }
+
+    #[test]
+    fn widening_is_exact_for_all_finite_patterns() {
+        // Every bf16 bit pattern must survive bf16 -> f32 -> bf16 untouched.
+        for bits in 0..=u16::MAX {
+            let b = Bf16::from_bits(bits);
+            if b.is_nan() {
+                continue;
+            }
+            let round = Bf16::from_f32(b.to_f32());
+            assert_eq!(round.to_bits(), bits, "pattern {bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1.0 + 2^-9 is exactly halfway between bf16(1.0) and the next
+        // representable value; ties go to even (here: stays at 1.0).
+        let halfway = f32::from_bits(0x3F80_8000);
+        assert_eq!(Bf16::from_f32(halfway).to_bits(), 0x3F80);
+        // Just above halfway rounds up.
+        let above = f32::from_bits(0x3F80_8001);
+        assert_eq!(Bf16::from_f32(above).to_bits(), 0x3F81);
+        // Odd lsb ties round up to even.
+        let halfway_odd = f32::from_bits(0x3F81_8000);
+        assert_eq!(Bf16::from_f32(halfway_odd).to_bits(), 0x3F82);
+    }
+
+    #[test]
+    fn nan_stays_nan_inf_stays_inf() {
+        assert!(Bf16::from_f32(f32::NAN).is_nan());
+        assert_eq!(Bf16::from_f32(f32::INFINITY).to_f32(), f32::INFINITY);
+        assert_eq!(Bf16::from_f32(f32::NEG_INFINITY).to_f32(), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn small_update_vanishes_under_bf16() {
+        // The mechanism behind the paper's sparsity: sub-ulp updates do not
+        // change the stored bf16 value.
+        let w = 0.02f32;
+        let b0 = Bf16::from_f32(w);
+        let b1 = Bf16::from_f32(b0.to_f32() + 1e-8);
+        assert_eq!(b0, b1);
+        // ...while a large-enough update does.
+        let b2 = Bf16::from_f32(b0.to_f32() + 1e-3);
+        assert_ne!(b0, b2);
+    }
+}

@@ -1,0 +1,118 @@
+//! Minimal CLI argument parser (offline stand-in for clap).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments, with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.opts.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                panic!("--{name}: cannot parse {v:?}");
+            }),
+            None => default,
+        }
+    }
+
+    /// Comma-separated list option, e.g. `--sizes 4,8,14`.
+    pub fn list_or<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+    {
+        match self.get(name) {
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{name}: cannot parse element {s:?}"))
+                })
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn key_value_styles() {
+        let a = parse(&["--model", "sparrow-m", "--steps=7", "run"]);
+        assert_eq!(a.get("model"), Some("sparrow-m"));
+        assert_eq!(a.parse_or("steps", 0u32), 7);
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["--verbose", "--seed", "9"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.parse_or("seed", 0u64), 9);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["--bw", "0.25,1,10"]);
+        assert_eq!(a.list_or::<f64>("bw", &[]), vec![0.25, 1.0, 10.0]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.parse_or("streams", 4usize), 4);
+        assert_eq!(a.str_or("model", "sparrow-s"), "sparrow-s");
+        assert!(!a.flag("verbose"));
+    }
+}

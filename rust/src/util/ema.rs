@@ -1,0 +1,82 @@
+//! Exponential moving average, the scheduler's throughput estimator
+//! (Algorithm 1 line 16: tau_a <- beta*tau_a + (1-beta)*observed).
+
+#[derive(Clone, Copy, Debug)]
+pub struct Ema {
+    beta: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    /// `beta` is the weight on history; must be in [0, 1).
+    pub fn new(beta: f64) -> Self {
+        assert!((0.0..1.0).contains(&beta), "beta must be in [0,1)");
+        Ema { beta, value: None }
+    }
+
+    /// Seed with an initial estimate (e.g. a GPU-class prior).
+    pub fn with_initial(beta: f64, init: f64) -> Self {
+        let mut e = Ema::new(beta);
+        e.value = Some(init);
+        e
+    }
+
+    /// Blend in an observation; the first observation initializes.
+    pub fn observe(&mut self, x: f64) {
+        self.value = Some(match self.value {
+            None => x,
+            Some(v) => self.beta * v + (1.0 - self.beta) * x,
+        });
+    }
+
+    /// Multiplicative decay (Algorithm 1 line 14: exclusion penalty).
+    pub fn scale(&mut self, alpha: f64) {
+        if let Some(v) = self.value.as_mut() {
+            *v *= alpha;
+        }
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn get_or(&self, default: f64) -> f64 {
+        self.value.unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_observation_initializes() {
+        let mut e = Ema::new(0.8);
+        assert!(e.get().is_none());
+        e.observe(100.0);
+        assert_eq!(e.get(), Some(100.0));
+    }
+
+    #[test]
+    fn converges_to_constant_signal() {
+        let mut e = Ema::with_initial(0.5, 0.0);
+        for _ in 0..50 {
+            e.observe(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn blending_weights() {
+        let mut e = Ema::with_initial(0.75, 100.0);
+        e.observe(0.0);
+        assert!((e.get().unwrap() - 75.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scale_decays() {
+        let mut e = Ema::with_initial(0.9, 200.0);
+        e.scale(0.5);
+        assert_eq!(e.get(), Some(100.0));
+    }
+}

@@ -1,0 +1,67 @@
+//! Small self-contained utilities shared across the stack.
+//!
+//! The build environment is offline, so facilities usually pulled from
+//! crates.io (rand, half, serde, criterion, proptest) are implemented here
+//! in minimal, well-tested form.
+
+pub mod bench;
+pub mod bf16;
+pub mod cli;
+pub mod ema;
+pub mod jsonl;
+pub mod prop;
+pub mod rng;
+
+pub use bf16::Bf16;
+pub use ema::Ema;
+pub use rng::Rng;
+
+/// Format a byte count with binary-ish human units (as the paper does: MB).
+pub fn fmt_bytes(b: u64) -> String {
+    const MB: f64 = 1e6;
+    const GB: f64 = 1e9;
+    let bf = b as f64;
+    if bf >= GB {
+        format!("{:.2} GB", bf / GB)
+    } else if bf >= MB {
+        format!("{:.1} MB", bf / MB)
+    } else if bf >= 1e3 {
+        format!("{:.1} KB", bf / 1e3)
+    } else {
+        format!("{} B", b)
+    }
+}
+
+/// Format seconds compactly ("128 s", "4.71 s", "250 ms").
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{:.0} s", s)
+    } else if s >= 1.0 {
+        format!("{:.2} s", s)
+    } else if s >= 1e-3 {
+        format!("{:.0} ms", s * 1e3)
+    } else {
+        format!("{:.0} us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(12), "12 B");
+        assert_eq!(fmt_bytes(2_500), "2.5 KB");
+        assert_eq!(fmt_bytes(202_000_000), "202.0 MB");
+        assert_eq!(fmt_bytes(15_600_000_000), "15.60 GB");
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert_eq!(fmt_secs(128.0), "128 s");
+        assert_eq!(fmt_secs(4.71), "4.71 s");
+        assert_eq!(fmt_secs(0.25), "250 ms");
+        assert_eq!(fmt_secs(0.000_05), "50 us");
+    }
+}

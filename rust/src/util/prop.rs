@@ -1,0 +1,105 @@
+//! Tiny property-testing helper (offline stand-in for proptest).
+//!
+//! Runs a closure over `cases` RNG-derived inputs; on failure it reports the
+//! case index and seed so the exact input can be replayed:
+//!
+//! ```no_run
+//! use sparrowrl::util::prop;
+//! prop::check("reverse twice is identity", 100, |rng| {
+//!     let n = rng.range(0, 50);
+//!     let v: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+//!     let mut w = v.clone();
+//!     w.reverse();
+//!     w.reverse();
+//!     assert_eq!(v, w);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Base seed; override with SPARROW_PROP_SEED to replay CI failures.
+fn base_seed() -> u64 {
+    std::env::var("SPARROW_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `f` for `cases` independently-seeded inputs. Panics (propagating the
+/// inner assertion) with replay info on the first failing case.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: usize, mut f: F) {
+    let seed = base_seed();
+    for case in 0..cases {
+        let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay: SPARROW_PROP_SEED={seed})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Generate a sorted vector of `k` distinct u64 indices below `n` —
+/// the canonical "sparse update positions" generator.
+pub fn sparse_indices(rng: &mut Rng, n: u64, k: usize) -> Vec<u64> {
+    assert!((k as u64) <= n);
+    if n == 0 || k == 0 {
+        return Vec::new();
+    }
+    // For small density sample-and-dedup; for dense fall back to shuffle.
+    if (k as u64) * 4 < n {
+        let mut set = std::collections::BTreeSet::new();
+        while set.len() < k {
+            set.insert(rng.below(n));
+        }
+        set.into_iter().collect()
+    } else {
+        let mut all: Vec<u64> = (0..n).collect();
+        rng.shuffle(&mut all);
+        all.truncate(k);
+        all.sort_unstable();
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check("addition commutes", 50, |rng| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        check("always fails", 3, |_rng| {
+            assert!(false);
+        });
+    }
+
+    #[test]
+    fn sparse_indices_sorted_distinct_bounded() {
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let n = rng.range(1, 10_000) as u64;
+            let k = rng.range(0, (n as usize).min(200) + 1);
+            let idx = sparse_indices(&mut rng, n, k);
+            assert_eq!(idx.len(), k);
+            for w in idx.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            if let Some(&last) = idx.last() {
+                assert!(last < n);
+            }
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! Failure injection across the fault-tolerance machinery (§5.4):
+//! dropped/duplicated/reordered segments, actor crashes, relay crashes,
+//! link partitions — the invariant under test is always the same: no
+//! stale rollout is ever accepted, no prompt is lost, and surviving
+//! actors absorb orphaned work without global stalls.
+
+use sparrowrl::actor::{CommitResult, PolicyState};
+use sparrowrl::config::{regions, GpuClass};
+use sparrowrl::data::Benchmark;
+use sparrowrl::delta::{extract_delta, ApplyMode, DeltaCheckpoint, ModelLayout, ParamSet};
+use sparrowrl::ledger::{JobLedger, LeasePolicy, Reject};
+use sparrowrl::sim::{self, RegionSpec, SimConfig, System};
+use sparrowrl::transport::relay::RelayNode;
+use sparrowrl::transport::{split_into_segments, Reassembler, Segment};
+use sparrowrl::util::{prop, Bf16, Rng};
+
+fn setup_delta(seed: u64) -> (ModelLayout, ParamSet, ParamSet, DeltaCheckpoint) {
+    let layout = ModelLayout::transformer("t", 128, 32, 2, 64);
+    let mut rng = Rng::new(seed);
+    let p0 = ParamSet::random(&layout, 0.02, &mut rng);
+    let mut p1 = p0.clone();
+    for t in &mut p1.tensors {
+        for _ in 0..10 {
+            let i = rng.range(0, t.len());
+            t[i] = Bf16::from_bits(t[i].to_bits() ^ 0x0044);
+        }
+    }
+    let ckpt = DeltaCheckpoint::seal(&extract_delta(&layout, &p0, &p1, 0, 1, ApplyMode::Assign));
+    (layout, p0, p1, ckpt)
+}
+
+#[test]
+fn segment_loss_blocks_commit_retransmit_recovers() {
+    let (layout, p0, p1, ckpt) = setup_delta(1);
+    let segs = split_into_segments(1, &ckpt.bytes, 128);
+    let mut st = PolicyState::new(layout, p0, 0);
+    // Drop every 5th segment on "first transmission".
+    for (i, s) in segs.iter().enumerate() {
+        if i % 5 != 0 {
+            st.on_segment(s.clone()).unwrap();
+        }
+    }
+    assert!(!st.is_staged(1), "incomplete staging must not complete");
+    assert_eq!(st.commit(1), CommitResult::NotStaged, "commit refused");
+    // Retransmit everything (duplicates included) — idempotent recovery.
+    for s in &segs {
+        st.on_segment(s.clone()).unwrap();
+    }
+    assert!(st.is_staged(1));
+    assert_eq!(st.commit(1), CommitResult::Applied);
+    assert_eq!(st.params(), &p1);
+}
+
+#[test]
+fn prop_random_loss_duplication_reordering_never_corrupts() {
+    prop::check("chaotic transport never corrupts staging", 25, |rng| {
+        let (layout, p0, p1, ckpt) = setup_delta(rng.next_u64());
+        let segs = split_into_segments(1, &ckpt.bytes, 64 + rng.range(0, 200));
+        let mut st = PolicyState::new(layout, p0, 0);
+        // Build a chaotic schedule: each segment sent 0-3 times, shuffled.
+        let mut schedule: Vec<Segment> = Vec::new();
+        for s in &segs {
+            for _ in 0..rng.range(0, 4) {
+                schedule.push(s.clone());
+            }
+        }
+        rng.shuffle(&mut schedule);
+        for s in schedule {
+            st.on_segment(s).unwrap();
+        }
+        // Final pass guarantees completeness.
+        for s in &segs {
+            st.on_segment(s.clone()).unwrap();
+        }
+        assert!(st.is_staged(1));
+        assert_eq!(st.commit(1), CommitResult::Applied);
+        assert_eq!(st.params(), &p1, "bit-exact despite chaos");
+    });
+}
+
+#[test]
+fn relay_crash_peers_fetch_directly() {
+    let (_layout, _p0, _p1, ckpt) = setup_delta(3);
+    let segs = split_into_segments(1, &ckpt.bytes, 100);
+    // Relay forwards half the stream, then crashes.
+    let mut relay = RelayNode::new(1);
+    let mut peers: Vec<Vec<Segment>> = vec![Vec::new()];
+    for s in segs.iter().take(segs.len() / 2) {
+        relay.on_segment(s.clone(), &mut peers).unwrap();
+    }
+    drop(relay); // crash
+    // Peer falls back to fetching from the Trainer (§5.4): it already has
+    // the forwarded prefix; the direct path supplies the rest.
+    let mut reasm = Reassembler::new(1);
+    for s in peers[0].drain(..) {
+        reasm.accept(s).unwrap();
+    }
+    assert!(!reasm.is_complete());
+    for s in &segs {
+        reasm.accept(s.clone()).unwrap(); // direct fetch (dups tolerated)
+    }
+    assert!(reasm.is_complete());
+    let recovered = reasm.into_checkpoint().unwrap().unwrap();
+    assert_eq!(recovered.hash, ckpt.hash);
+}
+
+#[test]
+fn partitioned_actor_leases_expire_and_work_migrates() {
+    let mut ledger = JobLedger::new(LeasePolicy { multiplier: 2.0, min_s: 10.0, max_s: 60.0 });
+    ledger.post(0..20);
+    let h = [1u8; 32];
+    // Actor 1 (about to be partitioned) claims half the pool.
+    let claimed = ledger.issue(1, 5, h, 0.0, 10);
+    assert_eq!(claimed.len(), 10);
+    let claimed2 = ledger.issue(2, 5, h, 0.0, 10);
+    assert_eq!(claimed2.len(), 10);
+    // Actor 2 completes; actor 1 is partitioned (silent).
+    for p in &claimed2 {
+        ledger.submit(2, *p, 5, h, 5.0).unwrap();
+    }
+    // Lease expiry returns actor 1's prompts.
+    let returned = ledger.expire(25.0);
+    assert_eq!(returned.len(), 10);
+    // Actor 2 absorbs the orphaned work.
+    let migrated = ledger.issue(2, 5, h, 26.0, 10);
+    assert_eq!(migrated.len(), 10);
+    for p in &migrated {
+        ledger.submit(2, *p, 5, h, 30.0).unwrap();
+    }
+    assert_eq!(ledger.stats().completed, 20);
+    // The partitioned actor reconnects and submits its stale work: every
+    // submission is rejected (lease gone).
+    for p in &claimed {
+        assert_eq!(ledger.submit(1, *p, 5, h, 31.0), Err(Reject::UnknownLease));
+    }
+}
+
+#[test]
+fn stale_version_and_wrong_hash_rollouts_rejected() {
+    let mut ledger = JobLedger::new(LeasePolicy::default());
+    ledger.post([1, 2]);
+    let h5 = [5u8; 32];
+    let p = ledger.issue(1, 5, h5, 0.0, 2);
+    // Behaviour version mismatch (actor generated on v4).
+    assert_eq!(ledger.submit(1, p[0], 4, h5, 1.0), Err(Reject::VersionMismatch));
+    // Checkpoint hash mismatch (actor applied a corrupt/forked delta).
+    assert_eq!(ledger.submit(1, p[1], 5, [6u8; 32], 1.0), Err(Reject::HashMismatch));
+    assert_eq!(ledger.stats().completed, 0);
+}
+
+#[test]
+fn sim_actor_failures_at_every_step_still_complete() {
+    // Kill a different actor at every step; the batch must always
+    // complete with bounded slowdown and full token accounting.
+    let model = sparrowrl::config::model("qwen3-8b").unwrap();
+    let regions = vec![RegionSpec::new(regions::CANADA, vec![GpuClass::A100; 6])];
+    let mut cfg = SimConfig::paper_testbed(model, Benchmark::Gsm8k, System::Sparrow, regions);
+    cfg.steps = 5;
+    cfg.failures = (0..5)
+        .map(|s| sparrowrl::sim::driver::FailureEvent { actor: s as usize, step: s })
+        .collect();
+    let chaotic = sim::driver::run(&cfg);
+    cfg.failures.clear();
+    let healthy = sim::driver::run(&cfg);
+    assert_eq!(chaotic.total_gen_tokens, healthy.total_gen_tokens);
+    assert!(chaotic.total_time < healthy.total_time * 6.0, "no unbounded stall");
+}
+
+#[test]
+fn out_of_order_delta_versions_never_apply() {
+    let (layout, p0, p1, _c1) = setup_delta(7);
+    // Build v2 on top of v1, deliver v2 first.
+    let mut rng = Rng::new(17);
+    let mut p2 = p1.clone();
+    let t0 = &mut p2.tensors[0];
+    let i = rng.range(0, t0.len());
+    t0[i] = Bf16::from_bits(t0[i].to_bits() ^ 1);
+    let c1 = DeltaCheckpoint::seal(&extract_delta(&layout, &p0, &p1, 0, 1, ApplyMode::Assign));
+    let c2 = DeltaCheckpoint::seal(&extract_delta(&layout, &p1, &p2, 1, 2, ApplyMode::Assign));
+    let mut st = PolicyState::new(layout, p0, 0);
+    st.stage_checkpoint(c2.clone());
+    // v2 cannot apply on v0 (base mismatch).
+    assert!(matches!(st.commit(2), CommitResult::BaseMismatch { .. }));
+    // After v1 arrives, the chain applies in order.
+    st.stage_checkpoint(c1);
+    assert_eq!(st.commit_chain(), 2);
+    assert_eq!(st.active_version(), 2);
+    assert_eq!(st.params(), &p2);
+}

@@ -1,0 +1,145 @@
+//! Whole-system integration: the real runtime loop (PJRT compute + delta
+//! transfer + ledger + scheduler) and the TCP transport path.
+
+use sparrowrl::actor::{CommitResult, PolicyState};
+use sparrowrl::delta::{extract_delta, ApplyMode, DeltaCheckpoint, ModelLayout, ParamSet};
+use sparrowrl::rt::net::{push_segments_multistream, read_msg, write_msg, Msg};
+use sparrowrl::rt::{run_local, LocalRunConfig};
+use sparrowrl::transport::split_into_segments;
+use sparrowrl::util::{Bf16, Rng};
+use std::net::{TcpListener, TcpStream};
+
+fn artifacts_present(model: &str) -> bool {
+    let dir = sparrowrl::runtime::artifacts_dir();
+    let ok = dir.join(format!("{model}_policy_fwd.hlo.txt")).exists();
+    if !ok {
+        eprintln!("SKIP: artifacts for {model} missing; run `make artifacts`");
+    }
+    ok
+}
+
+#[test]
+fn local_rl_loop_end_to_end() {
+    if !artifacts_present("sparrow-xs") {
+        return;
+    }
+    let mut cfg = LocalRunConfig::quick("sparrow-xs");
+    cfg.steps = 3;
+    cfg.sft_steps = 10;
+    let report = run_local(&cfg).expect("local run");
+    assert_eq!(report.steps.len(), 3);
+    assert_eq!(report.final_version, 3);
+    // SFT losses must be finite and broadly decreasing.
+    assert!(report.sft_losses.iter().all(|l| l.is_finite()));
+    assert!(
+        report.sft_losses.last().unwrap() < report.sft_losses.first().unwrap(),
+        "sft: {:?}",
+        report.sft_losses
+    );
+    for s in &report.steps {
+        assert!(s.rho > 0.0 && s.rho < 0.5, "rho={}", s.rho);
+        assert!(s.payload_bytes > 0 && s.payload_bytes < s.dense_bytes);
+        assert!(s.gen_tokens > 0);
+        assert!((0.0..=1.0).contains(&s.mean_reward));
+    }
+}
+
+#[test]
+fn local_rl_loop_rl_at_small_lr_is_sparse() {
+    if !artifacts_present("sparrow-xs") {
+        return;
+    }
+    let mut cfg = LocalRunConfig::quick("sparrow-xs");
+    cfg.steps = 2;
+    cfg.sft_steps = 5;
+    cfg.lr_rl = 1e-6;
+    let report = run_local(&cfg).expect("local run");
+    // At post-training lr, the paper's regime: ~1% nonzero (allow slack
+    // for the tiny model).
+    assert!(report.mean_rho() < 0.08, "mean rho {:.4}", report.mean_rho());
+}
+
+/// Trainer-side: push a checkpoint over real TCP (4 parallel sockets),
+/// actor-side: reassemble, stage, commit, acknowledge. The full §5.2
+/// transfer path over actual sockets.
+#[test]
+fn tcp_multistream_transfer_stages_and_commits() {
+    let layout = ModelLayout::transformer("t", 256, 64, 2, 128);
+    let mut rng = Rng::new(9);
+    let p0 = ParamSet::random(&layout, 0.02, &mut rng);
+    let mut p1 = p0.clone();
+    for t in &mut p1.tensors {
+        for _ in 0..20 {
+            let i = rng.range(0, t.len());
+            t[i] = Bf16::from_bits(t[i].to_bits() ^ 0x0101);
+        }
+    }
+    let ckpt = DeltaCheckpoint::seal(&extract_delta(&layout, &p0, &p1, 0, 1, ApplyMode::Assign));
+    let segs = split_into_segments(1, &ckpt.bytes, 256);
+    let n_streams = 4usize;
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let expect_segments = segs.len();
+    let ckpt_version = ckpt.version;
+    let ckpt_hash = ckpt.hash;
+
+    // Actor thread: accept N segment streams + 1 control stream; read
+    // each stream to completion in its own thread (blocking I/O).
+    let actor = std::thread::spawn(move || {
+        let conns: Vec<TcpStream> =
+            (0..n_streams + 1).map(|_| listener.accept().unwrap().0).collect();
+        let mut conns = conns.into_iter();
+        let seg_handles: Vec<_> = (0..n_streams)
+            .map(|_| {
+                let mut c = conns.next().unwrap();
+                std::thread::spawn(move || {
+                    let mut segs = Vec::new();
+                    while let Ok(Msg::Seg(s)) = read_msg(&mut c) {
+                        segs.push(s);
+                    }
+                    segs
+                })
+            })
+            .collect();
+        let mut ctl = conns.next().unwrap();
+        let mut state = PolicyState::new(layout, p0, 0);
+        let mut got = 0usize;
+        for h in seg_handles {
+            for seg in h.join().unwrap() {
+                state.on_segment(seg).unwrap();
+                got += 1;
+            }
+        }
+        assert_eq!(got, expect_segments);
+        assert!(state.is_staged(ckpt_version));
+        match read_msg(&mut ctl).unwrap() {
+            Msg::Commit { version } => {
+                assert_eq!(version, ckpt_version);
+                assert_eq!(state.commit(version), CommitResult::Applied);
+                write_msg(&mut ctl, &Msg::Activated { actor: 0, version, hash: ckpt_hash })
+                    .unwrap();
+            }
+            other => panic!("expected Commit, got {other:?}"),
+        }
+        state
+    });
+
+    // Trainer side: open sockets, push striped segments (throttled), then
+    // close the segment sockets and commit over the control socket.
+    let mut streams: Vec<TcpStream> =
+        (0..n_streams).map(|_| TcpStream::connect(addr).unwrap()).collect();
+    let mut ctl = TcpStream::connect(addr).unwrap();
+    push_segments_multistream(&mut streams, &segs, Some(200e6)).unwrap();
+    drop(streams); // EOF lets the actor's reader threads finish
+    write_msg(&mut ctl, &Msg::Commit { version: ckpt_version }).unwrap();
+    match read_msg(&mut ctl).unwrap() {
+        Msg::Activated { version, hash, .. } => {
+            assert_eq!(version, ckpt_version);
+            assert_eq!(hash, ckpt_hash);
+        }
+        other => panic!("expected Activated, got {other:?}"),
+    }
+    let state = actor.join().unwrap();
+    assert_eq!(state.params(), &p1, "bit-exact across real TCP");
+}
