@@ -1,10 +1,17 @@
-//! Hot-path benches: delta extraction scan, codec encode/decode, and
-//! scatter-assign apply — the per-step CPU costs of §5.1/§5.2.
-//! Targets (DESIGN.md §8): scan >= 1 GB/s/core, apply >= 2 GB/s.
+//! Hot-path benches: delta extraction scan, codec encode/decode, the fused
+//! streaming pipeline, and scatter-assign apply — the per-step CPU costs of
+//! §5.1/§5.2. Targets (DESIGN.md §8): scan >= 1 GB/s/core, apply >= 2 GB/s,
+//! fused single-pass >= 1.5x the seed's extract_delta + encode_delta
+//! sequence at rho=1%.
+//!
+//! Emits `BENCH_encoding.json` (cwd) so the perf trajectory is tracked
+//! across PRs. Set `BENCH_QUICK=1` for a CI smoke run (small model, few
+//! reps).
 
 use sparrowrl::delta::{
-    apply_delta, decode_delta, encode_delta, extract_delta, naive, ApplyMode, ModelLayout,
-    ParamSet,
+    apply_delta, decode_delta, encode_delta, extract_delta, naive, ApplyMode,
+    DeltaStreamApplier, DeltaStreamDecoder, DeltaStreamEncoder, ModelLayout, ParamSet,
+    StreamConfig,
 };
 use sparrowrl::util::bench::Bencher;
 use sparrowrl::util::{prop, Bf16, Rng};
@@ -23,19 +30,25 @@ fn perturbed(p: &ParamSet, rho: f64, rng: &mut Rng) -> ParamSet {
 }
 
 fn main() {
-    let mut b = Bencher::new(2, 9);
-    let layout = ModelLayout::transformer("bench", 8192, 512, 8, 2048);
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let mut b = if quick { Bencher::new(1, 3) } else { Bencher::new(2, 9) };
+    let layout = if quick {
+        ModelLayout::transformer("bench-quick", 2048, 256, 4, 1024)
+    } else {
+        ModelLayout::transformer("bench", 8192, 512, 8, 2048)
+    };
     let mut rng = Rng::new(42);
     println!(
-        "model: {} params ({} dense bf16)",
+        "model: {} params ({} dense bf16){}",
         layout.total_params(),
-        sparrowrl::util::fmt_bytes(layout.dense_bytes_bf16())
+        sparrowrl::util::fmt_bytes(layout.dense_bytes_bf16()),
+        if quick { " [quick]" } else { "" }
     );
     let old = ParamSet::random(&layout, 0.02, &mut rng);
     let new = perturbed(&old, 0.01, &mut rng);
     let dense = layout.dense_bytes_bf16();
 
-    // Extraction scan (bit-compare + compact), the paper's ~5 s / 16 GB.
+    // ---- seed pipeline: three sequential full-materialization passes ----
     b.bench_bytes("extract_delta scan (rho=1%)", 2 * dense, || {
         std::hint::black_box(extract_delta(&layout, &old, &new, 0, 1, ApplyMode::Assign));
     });
@@ -58,8 +71,48 @@ fn main() {
     b.bench_bytes("encode_delta (varint+hash)", bytes.len() as u64, || {
         std::hint::black_box(encode_delta(&delta));
     });
+    // The seed's wire path, end to end: extract then encode (two passes).
+    let two_pass = b
+        .bench_bytes("extract + encode (seed two-pass)", 2 * dense, || {
+            let d = extract_delta(&layout, &old, &new, 0, 1, ApplyMode::Assign);
+            std::hint::black_box(encode_delta(&d));
+        })
+        .median;
+
+    // ---- fused streaming pipeline -------------------------------------
+    let enc = DeltaStreamEncoder::new(&layout, 0, 1, ApplyMode::Assign, StreamConfig::default());
+    let pool = enc.pool();
+    let fused = b
+        .bench_bytes("stream fused extract+encode+segment", 2 * dense, || {
+            enc.encode(&old, &new, |seg| {
+                pool.recycle(std::hint::black_box(seg).payload);
+            });
+        })
+        .median;
+    let fused_par = b
+        .bench_bytes("stream fused, parallel (8 threads)", 2 * dense, || {
+            enc.encode_parallel(&old, &new, 8, |seg| {
+                pool.recycle(std::hint::black_box(seg).payload);
+            });
+        })
+        .median;
+    let speedup = two_pass.as_secs_f64() / fused.as_secs_f64().max(1e-12);
+    println!(
+        "fused single-pass speedup vs seed two-pass: {speedup:.2}x (target >= 1.5x), \
+         parallel {:.2}x",
+        two_pass.as_secs_f64() / fused_par.as_secs_f64().max(1e-12)
+    );
+
     b.bench_bytes("decode_delta (verify+parse)", bytes.len() as u64, || {
         std::hint::black_box(decode_delta(&bytes).unwrap());
+    });
+    let (segs, _) = enc.encode_to_segments(&old, &new);
+    b.bench_bytes("stream decode (per-segment parse)", bytes.len() as u64, || {
+        let mut dec = DeltaStreamDecoder::new(1);
+        for s in &segs {
+            dec.push(s.clone()).unwrap();
+        }
+        std::hint::black_box(dec.into_staged().unwrap());
     });
     b.bench_bytes("encode_naive (int32 baseline)", bytes.len() as u64, || {
         std::hint::black_box(naive::encode_naive(&delta, &layout));
@@ -70,16 +123,31 @@ fn main() {
     b.bench_bytes("apply_delta scatter-assign", delta.nnz() * 2, || {
         apply_delta(&mut params, &delta);
     });
+    // Scatter-assign is idempotent, so one pre-cloned ParamSet can absorb
+    // the stream every iteration — the timed region is parse+scatter, not
+    // a dense-model memcpy.
+    let mut p_stream = old.clone();
+    b.bench_bytes("stream apply (per-segment scatter)", delta.nnz() * 2, || {
+        let mut ap = DeltaStreamApplier::new(1);
+        for s in &segs {
+            ap.push(s.clone(), &mut p_stream).unwrap();
+        }
+        std::hint::black_box(ap.applied_nnz());
+    });
 
     // Density sweep: how codec rates move with rho (Figure 10's regime).
     for rho in [0.001, 0.01, 0.03, 0.1] {
         let new = perturbed(&old, rho, &mut rng);
         let d = extract_delta(&layout, &old, &new, 0, 1, ApplyMode::Assign);
-        let enc = encode_delta(&d);
+        let enc_bytes = encode_delta(&d);
         println!(
             "rho={rho:<6} nnz={:<9} bytes/nnz={:.2}",
             d.nnz(),
-            enc.len() as f64 / d.nnz() as f64
+            enc_bytes.len() as f64 / d.nnz() as f64
         );
     }
+
+    let out = std::path::Path::new("BENCH_encoding.json");
+    b.write_json(out, "encoding", &[("fused_speedup_vs_two_pass", speedup)])
+        .expect("write BENCH_encoding.json");
 }

@@ -8,11 +8,20 @@
 //! * a delta applies only if its `base_version` equals the active version
 //!   (out-of-order / replayed deltas are rejected);
 //! * the active-version tag advances only after the scatter completes.
+//!
+//! Staging runs through the streaming decoder (`delta/stream.rs`): each
+//! arriving segment is parsed incrementally and its payload freed, so the
+//! actor never buffers the full checkpoint byte stream the way the old
+//! `Reassembler`-then-`decode_delta` path did, and Commit applies the
+//! already-parsed delta without a second decode pass. The hash check still
+//! happens before anything is staged: a delta enters `staged` only after
+//! its SHA-256 trailer verified.
 
 pub mod rollout;
 
+use crate::delta::stream::{DeltaStreamDecoder, StagedDelta};
 use crate::delta::{apply_delta, DeltaCheckpoint, ModelLayout, ParamSet};
-use crate::transport::{Reassembler, Segment};
+use crate::transport::Segment;
 use std::collections::BTreeMap;
 
 /// Outcome of a commit attempt.
@@ -33,10 +42,11 @@ pub struct PolicyState {
     layout: ModelLayout,
     params: ParamSet,
     active_version: u64,
-    /// In-flight reassembly buffers, by version.
-    staging: BTreeMap<u64, Reassembler>,
-    /// Fully staged, hash-verified checkpoints awaiting Commit.
-    staged: BTreeMap<u64, DeltaCheckpoint>,
+    /// In-flight streaming decoders, by version (segments parsed and
+    /// freed on arrival; working set is one partial section each).
+    staging: BTreeMap<u64, DeltaStreamDecoder>,
+    /// Fully received, hash-verified deltas awaiting Commit.
+    staged: BTreeMap<u64, StagedDelta>,
     /// True while a generation batch is running (no safe point).
     generating: bool,
     applied: u64,
@@ -75,33 +85,44 @@ impl PolicyState {
         self.generating = generating;
     }
 
-    /// Ingest one transfer segment; reassembles and hash-verifies in the
-    /// background of generation. Returns true when `seg`'s version became
-    /// fully staged by this call.
+    /// Ingest one transfer segment; the streaming decoder parses it (and
+    /// frees its payload) in the background of generation. Returns true
+    /// when `seg`'s version became fully staged by this call.
     pub fn on_segment(&mut self, seg: Segment) -> Result<bool, String> {
         let v = seg.version;
         if v <= self.active_version || self.staged.contains_key(&v) {
             return Ok(false); // stale or already staged; drop quietly
         }
-        let r = self.staging.entry(v).or_insert_with(|| Reassembler::new(v));
-        r.accept(seg).map_err(|e| format!("{e:?}"))?;
-        if r.is_complete() {
-            let r = self.staging.remove(&v).unwrap();
-            match r.into_checkpoint().unwrap() {
-                Ok(ckpt) => {
-                    self.staged.insert(v, ckpt);
-                    return Ok(true);
+        let d = self.staging.entry(v).or_insert_with(|| DeltaStreamDecoder::new(v));
+        match d.push(seg) {
+            Ok(true) => {
+                let dec = self.staging.remove(&v).unwrap();
+                let staged = dec.into_staged().expect("complete decoder yields a delta");
+                self.staged.insert(v, staged);
+                Ok(true)
+            }
+            Ok(false) => Ok(false),
+            Err(e) => {
+                // A poisoned decoder can never complete: discard it so a
+                // clean retransmit restages from scratch (the legacy
+                // Reassembler path recovered the same way).
+                if d.is_poisoned() {
+                    self.staging.remove(&v);
                 }
-                Err(e) => return Err(format!("staging hash verify failed: {e}")),
+                Err(format!("streaming staging failed: {e}"))
             }
         }
-        Ok(false)
     }
 
-    /// Stage a checkpoint delivered whole (relay handoff / tests).
+    /// Stage a checkpoint delivered whole (relay handoff / tests). The
+    /// artifact is decoded once here; corrupt artifacts are dropped (a
+    /// later Commit simply reports `NotStaged`).
     pub fn stage_checkpoint(&mut self, ckpt: DeltaCheckpoint) {
         if ckpt.version > self.active_version {
-            self.staged.insert(ckpt.version, ckpt);
+            if let Ok(delta) = ckpt.open() {
+                self.staged
+                    .insert(ckpt.version, StagedDelta { delta, hash: ckpt.hash });
+            }
         }
     }
 
@@ -110,23 +131,21 @@ impl PolicyState {
     /// `false` from `safe_point` as "wait".
     pub fn commit(&mut self, version: u64) -> CommitResult {
         assert!(!self.generating, "commit must happen at a safe point");
-        let Some(ckpt) = self.staged.get(&version) else {
+        let Some(staged) = self.staged.get(&version) else {
             return CommitResult::NotStaged;
         };
-        if ckpt.base_version != self.active_version {
+        if staged.delta.base_version != self.active_version {
             return CommitResult::BaseMismatch {
                 active: self.active_version,
-                base: ckpt.base_version,
+                base: staged.delta.base_version,
             };
         }
-        let delta = match ckpt.open() {
-            Ok(d) => d,
-            Err(_) => return CommitResult::Corrupt,
-        };
-        if delta.validate(&self.layout).is_err() {
+        // Already parsed and hash-verified at staging time; only the
+        // layout validation remains before the scatter.
+        if staged.delta.validate(&self.layout).is_err() {
             return CommitResult::Corrupt;
         }
-        apply_delta(&mut self.params, &delta);
+        apply_delta(&mut self.params, &staged.delta);
         // Advance the tag only after the scatter completed (§5.2).
         self.active_version = version;
         self.applied += 1;
@@ -265,6 +284,28 @@ mod tests {
         st.stage_checkpoint(c1);
         st.set_generating(true);
         st.commit(1);
+    }
+
+    #[test]
+    fn poisoned_staging_recovers_via_clean_retransmit() {
+        // A corrupt stream poisons its decoder; the decoder must be
+        // discarded so a full clean retransmit can restage the version
+        // (parity with the legacy Reassembler recovery path).
+        let (l, p0) = setup();
+        let p1 = perturbed(&p0, 11);
+        let c1 = ckpt(&l, &p0, &p1, 0, 1);
+        let mut st = PolicyState::new(l, p0, 0);
+        let segs = split_into_segments(1, &c1.bytes, 64);
+        let mut bad = segs[0].clone();
+        bad.payload[0] ^= 0xFF; // break the stream header magic
+        assert!(st.on_segment(bad).is_err());
+        assert!(!st.is_staged(1));
+        for s in &segs {
+            st.on_segment(s.clone()).unwrap();
+        }
+        assert!(st.is_staged(1));
+        assert_eq!(st.commit(1), CommitResult::Applied);
+        assert_eq!(st.params(), &p1);
     }
 
     #[test]

@@ -1,15 +1,24 @@
 //! Binary wire/storage format for sparse delta checkpoints.
 //!
-//! Layout (all little-endian):
+//! Layout (format version 2, all little-endian):
 //!
 //! ```text
 //! header   magic "SPRW" | fmt u8 | mode u8 | pad u16
-//!          version u64 | base_version u64 | model_fp u64 | n_tensors u32
+//!          version u64 | base_version u64 | model_fp u64 | flags u32 (0)
 //! section* tensor u32 | nnz u64 | idx_bytes u64
 //!          LEB128 gap-coded indices (idx_bytes)
 //!          bf16 values (2*nnz bytes)
+//! end      tensor = 0xFFFF_FFFF (section terminator)
 //! trailer  sha256 of everything above (32 bytes)
 //! ```
+//!
+//! Format v2 replaces v1's up-front `n_tensors` header field with a
+//! section *terminator* sentinel so the byte stream is single-pass
+//! producible: a streaming encoder (`delta/stream.rs`) learns how many
+//! tensors changed only as the scan progresses, and with the sentinel it
+//! never needs to back-patch bytes that have already been hashed and
+//! shipped. `encode_delta` and `DeltaStreamEncoder` emit bit-identical
+//! bytes for the same delta (asserted by tests in `stream.rs`).
 //!
 //! The trailing SHA-256 is the checkpoint's integrity hash (§5.1): relays
 //! and actors verify it after reassembly and the Job Ledger uses it in the
@@ -21,8 +30,13 @@ use crate::util::Bf16;
 use sha2::{Digest, Sha256};
 
 pub const MAGIC: [u8; 4] = *b"SPRW";
-pub const FORMAT_VERSION: u8 = 1;
-const HEADER_LEN: usize = 4 + 1 + 1 + 2 + 8 + 8 + 8 + 4;
+pub const FORMAT_VERSION: u8 = 2;
+/// Sentinel tensor id marking the end of the section list. Real tensor ids
+/// are indices into the model layout and never approach this value.
+pub const SECTION_END: u32 = u32::MAX;
+pub(crate) const HEADER_LEN: usize = 4 + 1 + 1 + 2 + 8 + 8 + 8 + 4;
+/// Per-section fixed overhead: tensor u32 + nnz u64 + idx_bytes u64.
+pub(crate) const SECTION_HEADER_LEN: usize = 4 + 8 + 8;
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum DecodeError {
@@ -42,17 +56,28 @@ impl std::fmt::Display for DecodeError {
 
 impl std::error::Error for DecodeError {}
 
+/// Write the 36-byte header for a delta's metadata into `out`.
+pub(crate) fn write_header(
+    out: &mut Vec<u8>,
+    mode: ApplyMode,
+    version: u64,
+    base_version: u64,
+    model_fp: u64,
+) {
+    out.extend_from_slice(&MAGIC);
+    out.push(FORMAT_VERSION);
+    out.push(mode.to_u8());
+    out.extend_from_slice(&[0u8; 2]);
+    out.extend_from_slice(&version.to_le_bytes());
+    out.extend_from_slice(&base_version.to_le_bytes());
+    out.extend_from_slice(&model_fp.to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes()); // flags (reserved)
+}
+
 /// Serialize a delta to its canonical byte representation (with hash).
 pub fn encode_delta(d: &SparseDelta) -> Vec<u8> {
     let mut out = Vec::with_capacity(estimate_encoded_len(d));
-    out.extend_from_slice(&MAGIC);
-    out.push(FORMAT_VERSION);
-    out.push(d.mode.to_u8());
-    out.extend_from_slice(&[0u8; 2]);
-    out.extend_from_slice(&d.version.to_le_bytes());
-    out.extend_from_slice(&d.base_version.to_le_bytes());
-    out.extend_from_slice(&d.model_fp.to_le_bytes());
-    out.extend_from_slice(&(d.tensors.len() as u32).to_le_bytes());
+    write_header(&mut out, d.mode, d.version, d.base_version, d.model_fp);
     for t in &d.tensors {
         let mut idx_buf = Vec::with_capacity(t.idx.len() * 2);
         varint::encode_index_gaps(&t.idx, &mut idx_buf);
@@ -67,6 +92,7 @@ pub fn encode_delta(d: &SparseDelta) -> Vec<u8> {
         };
         out.extend_from_slice(val_bytes);
     }
+    out.extend_from_slice(&SECTION_END.to_le_bytes());
     let hash = Sha256::digest(&out);
     out.extend_from_slice(&hash);
     out
@@ -75,16 +101,17 @@ pub fn encode_delta(d: &SparseDelta) -> Vec<u8> {
 /// Upper-bound estimate used to pre-allocate the encode buffer.
 pub fn estimate_encoded_len(d: &SparseDelta) -> usize {
     HEADER_LEN
-        + 32
+        + 4 // terminator
+        + 32 // sha256
         + d.tensors
             .iter()
-            .map(|t| 20 + t.idx.len() * 10 + t.vals.len() * 2)
+            .map(|t| SECTION_HEADER_LEN + t.idx.len() * 10 + t.vals.len() * 2)
             .sum::<usize>()
 }
 
 /// Parse and integrity-check a canonical delta byte stream.
 pub fn decode_delta(bytes: &[u8]) -> Result<SparseDelta, DecodeError> {
-    if bytes.len() < HEADER_LEN + 32 {
+    if bytes.len() < HEADER_LEN + 4 + 32 {
         return Err(DecodeError::Truncated);
     }
     let (body, trailer) = bytes.split_at(bytes.len() - 32);
@@ -117,10 +144,16 @@ pub fn decode_delta(bytes: &[u8]) -> Result<SparseDelta, DecodeError> {
     let version = rd_u64(body, &mut pos)?;
     let base_version = rd_u64(body, &mut pos)?;
     let model_fp = rd_u64(body, &mut pos)?;
-    let n_tensors = rd_u32(body, &mut pos)? as usize;
-    let mut tensors = Vec::with_capacity(n_tensors);
-    for _ in 0..n_tensors {
+    let flags = rd_u32(body, &mut pos)?;
+    if flags != 0 {
+        return Err(DecodeError::Corrupt("unknown header flags"));
+    }
+    let mut tensors = Vec::new();
+    loop {
         let tensor = rd_u32(body, &mut pos)?;
+        if tensor == SECTION_END {
+            break;
+        }
         let nnz = rd_u64(body, &mut pos)? as usize;
         let idx_bytes = rd_u64(body, &mut pos)? as usize;
         let idx_end = pos.checked_add(idx_bytes).ok_or(DecodeError::Truncated)?;
@@ -207,6 +240,7 @@ mod tests {
             tensors: vec![],
         };
         let bytes = encode_delta(&d);
+        assert_eq!(bytes.len(), HEADER_LEN + 4 + 32);
         assert_eq!(decode_delta(&bytes).unwrap(), d);
     }
 
@@ -288,5 +322,17 @@ mod tests {
         let dense = l.dense_bytes_bf16() as f64;
         let ratio = dense / sparse;
         assert!(ratio > 40.0, "dense/sparse ratio {ratio:.1} too small");
+    }
+
+    #[test]
+    fn v1_streams_are_rejected_as_bad_format() {
+        let (_, d) = sample_delta(9, 3);
+        let mut bytes = encode_delta(&d);
+        bytes[4] = 1; // pretend format version 1
+        // Re-hash so only the format byte is wrong.
+        let body_len = bytes.len() - 32;
+        let h = Sha256::digest(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&h);
+        assert_eq!(decode_delta(&bytes), Err(DecodeError::BadFormat(1)));
     }
 }

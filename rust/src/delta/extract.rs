@@ -50,8 +50,10 @@ pub fn extract_delta(
 /// Invoke `hit(i)` for every position where old[i] != new[i] (bitwise).
 /// Word-at-a-time comparison: four bf16 lanes per u64, branch only on the
 /// rare unequal word — this is what makes the dense scan ~memory-bound.
+/// Shared with the fused streaming encoder (`delta/stream.rs`), which
+/// calls it per chunk with an index offset.
 #[inline]
-fn scan_changed<F: FnMut(usize)>(old: &[Bf16], new: &[Bf16], mut hit: F) {
+pub(crate) fn scan_changed<F: FnMut(usize)>(old: &[Bf16], new: &[Bf16], mut hit: F) {
     let n = old.len();
     let words = n / 4;
     // Safety: Bf16 is a repr-transparent-sized u16; we only read.
@@ -229,6 +231,84 @@ mod tests {
                 assert_eq!(hits, vec![pos], "n={n} pos={pos}");
             }
         }
+    }
+
+    #[test]
+    fn scan_changed_tail_handles_all_residues_mod_4() {
+        // Regression: tensor lengths not divisible by 4 must scan the
+        // word-path prefix AND the scalar tail with consistent indexing.
+        let mut rng = Rng::new(21);
+        for n in [1usize, 2, 3, 5, 6, 7, 13, 63, 66, 127, 129, 130, 131] {
+            let old: Vec<Bf16> = (0..n).map(|_| Bf16::from_bits(rng.next_u64() as u16)).collect();
+            let mut new = old.clone();
+            let mut expect = Vec::new();
+            for i in 0..n {
+                if rng.chance(0.3) {
+                    new[i] = Bf16::from_bits(old[i].to_bits() ^ (1 << rng.range(0, 16)));
+                    expect.push(i);
+                }
+            }
+            let mut hits = Vec::new();
+            scan_changed(&old, &new, |i| hits.push(i));
+            assert_eq!(hits, expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn scan_changed_on_unaligned_subslices() {
+        // Vec<Bf16> is only 2-byte aligned; subslices at odd offsets push
+        // the u64 reads fully off 8-byte alignment. read_unaligned must
+        // keep results exact for every offset/length combination.
+        let n = 41;
+        let old: Vec<Bf16> = (0..n).map(|i| Bf16::from_bits(i as u16 * 3)).collect();
+        let mut new = old.clone();
+        for pos in [0usize, 7, 20, 39, 40] {
+            new[pos] = Bf16::from_bits(new[pos].to_bits() ^ 0x0100);
+        }
+        for off in 0..8 {
+            for len in [1usize, 4, 9, n - off] {
+                let mut hits = Vec::new();
+                scan_changed(&old[off..off + len], &new[off..off + len], |i| hits.push(i + off));
+                let expect: Vec<usize> = [0usize, 7, 20, 39, 40]
+                    .iter()
+                    .copied()
+                    .filter(|&p| p >= off && p < off + len)
+                    .collect();
+                assert_eq!(hits, expect, "off={off} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn scan_is_bitwise_signed_zero_and_nan_payloads() {
+        // +0.0 vs -0.0 compare equal as floats but differ bitwise; NaN
+        // payload changes compare unequal-to-everything as floats. The
+        // delta must capture exactly the bit-pattern changes (mod docs:
+        // "whatever changed in storage").
+        let pz = Bf16::from_f32(0.0);
+        let nz = Bf16::from_bits(0x8000);
+        let nan_a = Bf16::from_bits(0x7FC1);
+        let nan_b = Bf16::from_bits(0x7FC2);
+        assert!(nan_a.is_nan() && nan_b.is_nan());
+        // Odd length to cover the tail path too.
+        let old = vec![pz, nan_a, pz, nan_a, pz];
+        let new = vec![nz, nan_a, pz, nan_b, pz];
+        let mut hits = Vec::new();
+        scan_changed(&old, &new, |i| hits.push(i));
+        assert_eq!(hits, vec![0, 3], "-0.0 and NaN-payload flips are changes");
+        // Same NaN payload is NOT a change (bitwise-equal).
+        let mut hits = Vec::new();
+        scan_changed(&[nan_a], &[nan_a], |i| hits.push(i));
+        assert!(hits.is_empty());
+        // Full extract/apply round trip over these values stays bit-exact.
+        let l = ModelLayout::new("z", vec![super::super::TensorSpec::new("w", &[5])]);
+        let po = ParamSet { tensors: vec![old] };
+        let pn = ParamSet { tensors: vec![new] };
+        let d = extract_delta(&l, &po, &pn, 0, 1, ApplyMode::Assign);
+        assert_eq!(d.nnz(), 2);
+        let mut applied = po.clone();
+        apply_delta(&mut applied, &d);
+        assert_eq!(applied, pn);
     }
 
     #[test]

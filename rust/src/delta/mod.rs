@@ -17,12 +17,17 @@ pub mod encode;
 pub mod extract;
 pub mod layout;
 pub mod naive;
+pub mod stream;
 pub mod varint;
 
 pub use checkpoint::{CheckpointStore, DeltaCheckpoint};
 pub use encode::{decode_delta, encode_delta, DecodeError};
 pub use extract::{apply_delta, extract_delta, extract_delta_parallel};
 pub use layout::{ModelLayout, TensorSpec};
+pub use stream::{
+    DeltaStreamApplier, DeltaStreamDecoder, DeltaStreamEncoder, StagedDelta, StreamConfig,
+    StreamError, StreamStats,
+};
 
 use crate::util::Bf16;
 

@@ -1,0 +1,1434 @@
+//! Streaming zero-copy delta pipeline: fused extract → encode → segment.
+//!
+//! The seed pipeline materialized three full copies of every checkpoint:
+//! `extract_delta` built `Vec<u64>`/`Vec<Bf16>` per tensor, `encode_delta`
+//! re-walked that into one contiguous byte buffer, and `split_into_segments`
+//! copied the buffer a third time into frames — so the first byte could not
+//! reach the wire until the entire dense scan (~5 s for a 16 GB model)
+//! finished. This module fuses all three passes (paper §5.2, "pipeline
+//! delta extraction with multi-stream transmission"):
+//!
+//! * [`DeltaStreamEncoder`] scans each tensor chunk-by-chunk with the same
+//!   word-at-a-time bit compare as `extract.rs`, gap-varint-encodes indices
+//!   and appends raw bf16 values directly into per-tensor section buffers,
+//!   folds every emitted byte into an incremental SHA-256, and yields
+//!   wire-ready [`Segment`] frames as soon as they fill — transmission of
+//!   tensor 0 overlaps extraction of tensor N. A multi-threaded variant
+//!   ([`DeltaStreamEncoder::encode_parallel`]) fans per-tensor shard
+//!   workers over a bounded queue and re-serializes sections in layout
+//!   order on the emitting thread, replacing `extract_delta_parallel`'s
+//!   collect-then-merge.
+//! * [`DeltaStreamDecoder`] is the actor-side dual: it parses the canonical
+//!   byte stream incrementally as segments arrive (tolerating reordering
+//!   and duplicates), freeing each segment payload as soon as it is
+//!   consumed, so staging never holds the full checkpoint byte buffer the
+//!   way `transport/reassembly.rs` does. [`DeltaStreamApplier`] goes one
+//!   step further and scatter-assigns each completed tensor section into
+//!   actor-resident parameters immediately, keeping an undo log so a
+//!   trailer-hash mismatch rolls the parameters back bit-exactly.
+//!
+//! # Frame format
+//!
+//! The byte stream is exactly `encode_delta`'s canonical format (see
+//! `encode.rs`: 36-byte header, self-delimiting sections, `SECTION_END`
+//! terminator, SHA-256 trailer) — the two paths are bit-identical by
+//! construction and asserted by tests below. Frames are `Segment`s of
+//! `segment_bytes` payload; every frame except the last carries
+//! `total == TOTAL_UNKNOWN (0)` because a single-pass encoder only learns
+//! the stream length at the end; the final frame carries the true segment
+//! count. `Reassembler` and the stream decoder both grow their state on
+//! unknown-total segments and bind the geometry when the final frame
+//! arrives, so legacy fixed-geometry streams and streaming frames share
+//! one receive path.
+//!
+//! # Buffer-pool lifecycle
+//!
+//! The encoder owns two reusable section buffers (`idx_buf`, `val_buf`)
+//! whose high-water mark is one tensor's encoded section, plus a
+//! [`FramePool`] of frame buffers: a frame is handed to the sink inside a
+//! `Segment`, and transports that finish writing a frame can `recycle()`
+//! it back into the pool, making the steady state allocation-free. The
+//! decoder's working set is one partially parsed field (< 32 bytes) plus
+//! the current section — never the whole checkpoint.
+//!
+//! # Overlap model
+//!
+//! Section granularity is the tensor: the wire format stores a section's
+//! `nnz` and `idx_bytes` *before* its payload, so a section is emitted
+//! when its tensor's scan completes, and frames flow as soon as
+//! `segment_bytes` of encoded stream exist. With the fused transformer
+//! layout (7+ tensors, the large MLP projections dominating), the first
+//! frames ship while >80% of the model is still unscanned; the pipelining
+//! test below asserts the first segment is emitted before the last tensor
+//! is reached. The simulator (`sim/compute.rs::stream_emit_bps`) models
+//! the source rate of this pipeline as payload produced uniformly over a
+//! single fused scan at `STREAM_ENCODE_BPS` (~2x the seed's two-pass
+//! effective rate; see `rust/benches/encoding.rs` / BENCH_encoding.json
+//! for the measured scan/encode GB/s on the build machine).
+
+use super::encode::{self, SECTION_END};
+use super::extract::scan_changed;
+use super::varint;
+use super::{ApplyMode, ModelLayout, ParamSet, SparseDelta, TensorDelta};
+use crate::transport::segment::{Segment, DEFAULT_SEGMENT_BYTES, TOTAL_UNKNOWN};
+use crate::util::Bf16;
+use sha2::{Digest, Sha256};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Tuning knobs for the streaming encoder.
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    /// Payload bytes per emitted segment (must match the transfer plan).
+    pub segment_bytes: usize,
+    /// Elements compared per scan chunk (rounded down to a multiple of 4
+    /// so the word-at-a-time path stays hot; the tail chunk may be odd).
+    pub chunk_elems: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig { segment_bytes: DEFAULT_SEGMENT_BYTES, chunk_elems: 1 << 16 }
+    }
+}
+
+/// What one streaming encode produced.
+#[derive(Clone, Debug)]
+pub struct StreamStats {
+    /// Changed elements across all tensors.
+    pub nnz: u64,
+    /// Total encoded stream length (header + sections + terminator + hash).
+    pub payload_bytes: u64,
+    /// Segments emitted.
+    pub segments: u32,
+    /// Tensors with at least one changed element.
+    pub changed_tensors: u32,
+    /// The stream's SHA-256 trailer (the checkpoint integrity hash).
+    pub hash: [u8; 32],
+    /// Tensor index that was being scanned when the first (non-final)
+    /// segment left the encoder — `Some(t)` with `t < n_tensors - 1`
+    /// demonstrates extraction/transmission overlap; `None` means the
+    /// stream fit in a single segment (no overlap possible).
+    pub first_segment_tensor: Option<u32>,
+    /// Wall time of the fused scan+encode pass.
+    pub scan_s: f64,
+}
+
+/// Recycling pool for frame buffers. Transports hand written-out frames
+/// back via [`FramePool::recycle`]; the encoder draws from the pool before
+/// allocating. Clones share one pool.
+#[derive(Clone, Default)]
+pub struct FramePool(Rc<RefCell<Vec<Vec<u8>>>>);
+
+impl FramePool {
+    pub fn new() -> FramePool {
+        FramePool::default()
+    }
+
+    /// Return a frame buffer to the pool for reuse.
+    pub fn recycle(&self, mut buf: Vec<u8>) {
+        buf.clear();
+        self.0.borrow_mut().push(buf);
+    }
+
+    /// Buffers currently pooled.
+    pub fn len(&self) -> usize {
+        self.0.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.borrow().is_empty()
+    }
+
+    fn take(&self, cap: usize) -> Vec<u8> {
+        match self.0.borrow_mut().pop() {
+            Some(b) => b,
+            None => Vec::with_capacity(cap),
+        }
+    }
+}
+
+/// One completed per-tensor section produced by a shard worker.
+struct SectionMsg {
+    nnz: u64,
+    idx: Vec<u8>,
+    vals: Vec<u8>,
+}
+
+/// Frame assembly state shared by the serial and parallel encoders.
+struct Emitter<'p, F: FnMut(Segment)> {
+    version: u64,
+    segment_bytes: usize,
+    frame: Vec<u8>,
+    seq: u32,
+    hasher: Sha256,
+    sink: F,
+    pool: &'p FramePool,
+    bytes: u64,
+    cur_tensor: u32,
+    first_segment_tensor: Option<u32>,
+}
+
+impl<'p, F: FnMut(Segment)> Emitter<'p, F> {
+    fn new(version: u64, segment_bytes: usize, pool: &'p FramePool, sink: F) -> Self {
+        Emitter {
+            version,
+            segment_bytes,
+            frame: pool.take(segment_bytes),
+            seq: 0,
+            hasher: Sha256::new(),
+            sink,
+            pool,
+            bytes: 0,
+            cur_tensor: 0,
+            first_segment_tensor: None,
+        }
+    }
+
+    /// Append stream bytes, folding them into the running hash.
+    fn emit(&mut self, bytes: &[u8]) {
+        self.hasher.update(bytes);
+        self.emit_unhashed(bytes);
+    }
+
+    /// Append stream bytes without hashing (the trailer itself).
+    fn emit_unhashed(&mut self, mut bytes: &[u8]) {
+        self.bytes += bytes.len() as u64;
+        while !bytes.is_empty() {
+            // A full frame is only flushed once more bytes arrive, so the
+            // final flush (which carries the true total) is never preceded
+            // by an unmarked full frame.
+            if self.frame.len() == self.segment_bytes {
+                self.flush(false);
+            }
+            let take = (self.segment_bytes - self.frame.len()).min(bytes.len());
+            self.frame.extend_from_slice(&bytes[..take]);
+            bytes = &bytes[take..];
+        }
+    }
+
+    fn flush(&mut self, last: bool) {
+        let payload = std::mem::replace(&mut self.frame, self.pool.take(self.segment_bytes));
+        if !last && self.seq == 0 {
+            self.first_segment_tensor = Some(self.cur_tensor);
+        }
+        let total = if last { self.seq + 1 } else { TOTAL_UNKNOWN };
+        let seg = Segment { version: self.version, seq: self.seq, total, payload };
+        self.seq += 1;
+        (self.sink)(seg);
+    }
+
+    fn emit_section(&mut self, tensor: u32, nnz: u64, idx: &[u8], vals: &[u8]) {
+        let mut head = [0u8; encode::SECTION_HEADER_LEN];
+        head[0..4].copy_from_slice(&tensor.to_le_bytes());
+        head[4..12].copy_from_slice(&nnz.to_le_bytes());
+        head[12..20].copy_from_slice(&(idx.len() as u64).to_le_bytes());
+        self.emit(&head);
+        self.emit(idx);
+        self.emit(vals);
+    }
+
+    /// Terminator + hash trailer + final frame. Returns (hash, segments).
+    fn finish(mut self) -> ([u8; 32], u32, u64, Option<u32>) {
+        self.emit(&SECTION_END.to_le_bytes());
+        let hasher = std::mem::replace(&mut self.hasher, Sha256::new());
+        let hash = hasher.finalize();
+        self.emit_unhashed(&hash);
+        self.flush(true);
+        (hash, self.seq, self.bytes, self.first_segment_tensor)
+    }
+}
+
+/// Scan one tensor pair into (nnz, varint index bytes, raw value bytes).
+/// `idx_buf`/`val_buf` are cleared and reused across calls.
+fn scan_tensor_into(
+    o: &[Bf16],
+    n: &[Bf16],
+    mode: ApplyMode,
+    chunk: usize,
+    idx_buf: &mut Vec<u8>,
+    val_buf: &mut Vec<u8>,
+) -> u64 {
+    idx_buf.clear();
+    val_buf.clear();
+    let mut nnz = 0u64;
+    let mut prev: Option<u64> = None;
+    let len = o.len();
+    let mut c = 0usize;
+    while c < len {
+        let end = (c + chunk).min(len);
+        scan_changed(&o[c..end], &n[c..end], |i| {
+            let gi = (c + i) as u64;
+            let gap = match prev {
+                None => gi,
+                Some(p) => gi - p,
+            };
+            varint::write_uleb128(idx_buf, gap);
+            prev = Some(gi);
+            let v = match mode {
+                ApplyMode::Assign => n[c + i],
+                ApplyMode::Add => Bf16::from_f32(n[c + i].to_f32() - o[c + i].to_f32()),
+            };
+            val_buf.extend_from_slice(&v.to_bits().to_le_bytes());
+            nnz += 1;
+        });
+        c = end;
+    }
+    nnz
+}
+
+/// Fused single-pass extract+encode+segment encoder. See the module docs.
+pub struct DeltaStreamEncoder {
+    version: u64,
+    base_version: u64,
+    model_fp: u64,
+    mode: ApplyMode,
+    cfg: StreamConfig,
+    pool: FramePool,
+}
+
+impl DeltaStreamEncoder {
+    pub fn new(
+        layout: &ModelLayout,
+        base_version: u64,
+        version: u64,
+        mode: ApplyMode,
+        cfg: StreamConfig,
+    ) -> DeltaStreamEncoder {
+        let mut cfg = cfg;
+        cfg.chunk_elems = (cfg.chunk_elems.max(4) / 4) * 4;
+        assert!(cfg.segment_bytes > 0, "segment_bytes must be positive");
+        DeltaStreamEncoder {
+            version,
+            base_version,
+            model_fp: layout.fingerprint(),
+            mode,
+            cfg,
+            pool: FramePool::new(),
+        }
+    }
+
+    /// Handle to the frame buffer pool (give it to the transport so frames
+    /// recycle after transmission).
+    pub fn pool(&self) -> FramePool {
+        self.pool.clone()
+    }
+
+    /// Single-threaded fused pass: diff `old` vs `new` and hand wire-ready
+    /// segments to `sink` as they close.
+    pub fn encode<F: FnMut(Segment)>(&self, old: &ParamSet, new: &ParamSet, sink: F) -> StreamStats {
+        assert_eq!(old.tensors.len(), new.tensors.len(), "snapshot arity");
+        let t0 = Instant::now();
+        let mode = self.mode;
+        let chunk = self.cfg.chunk_elems;
+        let mut em = Emitter::new(self.version, self.cfg.segment_bytes, &self.pool, sink);
+        let mut hdr = Vec::with_capacity(encode::HEADER_LEN);
+        encode::write_header(&mut hdr, mode, self.version, self.base_version, self.model_fp);
+        em.emit(&hdr);
+        let mut idx_buf: Vec<u8> = Vec::new();
+        let mut val_buf: Vec<u8> = Vec::new();
+        let mut nnz_total = 0u64;
+        let mut changed = 0u32;
+        for (tid, (o, n)) in old.tensors.iter().zip(&new.tensors).enumerate() {
+            assert_eq!(o.len(), n.len(), "tensor {tid} length");
+            em.cur_tensor = tid as u32;
+            let nnz = scan_tensor_into(o, n, mode, chunk, &mut idx_buf, &mut val_buf);
+            if nnz > 0 {
+                nnz_total += nnz;
+                changed += 1;
+                em.emit_section(tid as u32, nnz, &idx_buf, &val_buf);
+            }
+        }
+        let (hash, segments, bytes, first) = em.finish();
+        StreamStats {
+            nnz: nnz_total,
+            payload_bytes: bytes,
+            segments,
+            changed_tensors: changed,
+            hash,
+            first_segment_tensor: first,
+            scan_s: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Multi-threaded fused pass: per-tensor shard workers scan
+    /// concurrently and feed a bounded queue; the calling thread
+    /// re-serializes sections in layout order, hashes, and emits frames.
+    /// Byte-identical to [`encode`](Self::encode). Falls back to the
+    /// serial path for small models where spawn cost dominates.
+    pub fn encode_parallel<F: FnMut(Segment)>(
+        &self,
+        old: &ParamSet,
+        new: &ParamSet,
+        threads: usize,
+        sink: F,
+    ) -> StreamStats {
+        assert_eq!(old.tensors.len(), new.tensors.len(), "snapshot arity");
+        let total: u64 = old.tensors.iter().map(|t| t.len() as u64).sum();
+        let n_tensors = old.tensors.len();
+        if threads <= 1 || total < 4_000_000 || n_tensors < 2 {
+            return self.encode(old, new, sink);
+        }
+        let t0 = Instant::now();
+        let mode = self.mode;
+        let chunk = self.cfg.chunk_elems;
+        let threads = threads.min(n_tensors);
+        let (tx, rx) = std::sync::mpsc::sync_channel::<(usize, SectionMsg)>(threads * 2);
+        std::thread::scope(|scope| {
+            for w in 0..threads {
+                let tx = tx.clone();
+                let old_tensors = &old.tensors;
+                let new_tensors = &new.tensors;
+                scope.spawn(move || {
+                    let mut idx_buf = Vec::new();
+                    let mut val_buf = Vec::new();
+                    let mut tid = w;
+                    while tid < n_tensors {
+                        let (o, n) = (&old_tensors[tid], &new_tensors[tid]);
+                        assert_eq!(o.len(), n.len(), "tensor {tid} length");
+                        let nnz = scan_tensor_into(o, n, mode, chunk, &mut idx_buf, &mut val_buf);
+                        let msg = SectionMsg {
+                            nnz,
+                            idx: std::mem::take(&mut idx_buf),
+                            vals: std::mem::take(&mut val_buf),
+                        };
+                        if tx.send((tid, msg)).is_err() {
+                            return; // emitter gone
+                        }
+                        tid += threads;
+                    }
+                });
+            }
+            drop(tx);
+            let mut em = Emitter::new(self.version, self.cfg.segment_bytes, &self.pool, sink);
+            let mut hdr = Vec::with_capacity(encode::HEADER_LEN);
+            encode::write_header(&mut hdr, mode, self.version, self.base_version, self.model_fp);
+            em.emit(&hdr);
+            let mut pending: BTreeMap<usize, SectionMsg> = BTreeMap::new();
+            let mut nnz_total = 0u64;
+            let mut changed = 0u32;
+            for next in 0..n_tensors {
+                let msg = loop {
+                    if let Some(m) = pending.remove(&next) {
+                        break m;
+                    }
+                    match rx.recv() {
+                        Ok((tid, m)) => {
+                            pending.insert(tid, m);
+                        }
+                        Err(_) => panic!("stream shard worker died before tensor {next}"),
+                    }
+                };
+                em.cur_tensor = next as u32;
+                if msg.nnz > 0 {
+                    nnz_total += msg.nnz;
+                    changed += 1;
+                    em.emit_section(next as u32, msg.nnz, &msg.idx, &msg.vals);
+                }
+            }
+            let (hash, segments, bytes, first) = em.finish();
+            StreamStats {
+                nnz: nnz_total,
+                payload_bytes: bytes,
+                segments,
+                changed_tensors: changed,
+                hash,
+                first_segment_tensor: first,
+                scan_s: t0.elapsed().as_secs_f64(),
+            }
+        })
+    }
+
+    /// Convenience: run the fused pass and collect segments into a vec.
+    pub fn encode_to_segments(
+        &self,
+        old: &ParamSet,
+        new: &ParamSet,
+    ) -> (Vec<Segment>, StreamStats) {
+        let mut segs = Vec::new();
+        let stats = self.encode(old, new, |s| segs.push(s));
+        (segs, stats)
+    }
+}
+
+/// Error from the streaming decoder/applier.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StreamError {
+    WrongVersion { expected: u64, got: u64 },
+    /// Inconsistent totals, out-of-range seq, or duplicate with different
+    /// payload — the segment geometry lied.
+    GeometryMismatch,
+    BadMagic,
+    BadFormat(u8),
+    BadMode(u8),
+    Corrupt(&'static str),
+    HashMismatch,
+    /// The final segment arrived but the parsed stream needs more bytes.
+    Truncated,
+    /// The stream parsed to completion but more bytes followed.
+    TrailingBytes,
+    /// An earlier error poisoned this decoder; discard it.
+    Poisoned,
+}
+
+impl std::fmt::Display for StreamError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:?}", self)
+    }
+}
+
+impl std::error::Error for StreamError {}
+
+/// A fully received, hash-verified delta ready for commit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StagedDelta {
+    pub delta: SparseDelta,
+    pub hash: [u8; 32],
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    Header,
+    SectionHeader,
+    Indices,
+    Values,
+    Trailer,
+    Done,
+}
+
+struct CurSection {
+    tensor: u32,
+    nnz: u64,
+    idx_bytes: u64,
+    idx_consumed: u64,
+    idx_count: u64,
+    acc: u64,
+    idx: Vec<u64>,
+    vals: Vec<Bf16>,
+}
+
+/// Incremental decoder for the canonical delta stream: parses segments as
+/// they arrive (any order, duplicates tolerated), frees payload bytes as
+/// they are consumed, verifies the SHA-256 trailer, and yields the parsed
+/// [`SparseDelta`] — without ever materializing the checkpoint byte
+/// buffer. See the module docs.
+pub struct DeltaStreamDecoder {
+    version: u64,
+    next_seq: u32,
+    total: Option<u32>,
+    pending: BTreeMap<u32, Segment>,
+    buf: Vec<u8>,
+    pos: usize,
+    hasher: Sha256,
+    phase: Phase,
+    mode: ApplyMode,
+    hdr_version: u64,
+    base_version: u64,
+    model_fp: u64,
+    tensors: Vec<TensorDelta>,
+    cur: Option<CurSection>,
+    hash: [u8; 32],
+    duplicates: u64,
+    bytes_consumed: u64,
+    poisoned: bool,
+    done: bool,
+}
+
+impl DeltaStreamDecoder {
+    pub fn new(version: u64) -> DeltaStreamDecoder {
+        DeltaStreamDecoder {
+            version,
+            next_seq: 0,
+            total: None,
+            pending: BTreeMap::new(),
+            buf: Vec::new(),
+            pos: 0,
+            hasher: Sha256::new(),
+            phase: Phase::Header,
+            mode: ApplyMode::Assign,
+            hdr_version: 0,
+            base_version: 0,
+            model_fp: 0,
+            tensors: Vec::new(),
+            cur: None,
+            hash: [0u8; 32],
+            duplicates: 0,
+            bytes_consumed: 0,
+            poisoned: false,
+            done: false,
+        }
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.done
+    }
+
+    /// True once an unrecoverable error killed this stream; callers should
+    /// discard the decoder (a fresh one can restage from a retransmit).
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned
+    }
+
+    pub fn duplicates(&self) -> u64 {
+        self.duplicates
+    }
+
+    pub fn bytes_consumed(&self) -> u64 {
+        self.bytes_consumed
+    }
+
+    /// Fraction of segments consumed, when the total is known.
+    pub fn progress(&self) -> f64 {
+        match self.total {
+            Some(t) if t > 0 => (self.next_seq as f64 / t as f64).min(1.0),
+            _ => 0.0,
+        }
+    }
+
+    /// Header metadata, once the header has been parsed.
+    pub fn header(&self) -> Option<(u64, u64, u64, ApplyMode)> {
+        if self.phase == Phase::Header {
+            None
+        } else {
+            Some((self.hdr_version, self.base_version, self.model_fp, self.mode))
+        }
+    }
+
+    pub(crate) fn mode(&self) -> ApplyMode {
+        self.mode
+    }
+
+    fn poison(&mut self, e: StreamError) -> StreamError {
+        self.poisoned = true;
+        e
+    }
+
+    /// Feed one segment. Returns `Ok(true)` once the stream is complete
+    /// and hash-verified. Duplicates are counted and dropped; out-of-order
+    /// segments are buffered until their turn.
+    pub fn push(&mut self, seg: Segment) -> Result<bool, StreamError> {
+        if self.poisoned {
+            return Err(StreamError::Poisoned);
+        }
+        if seg.version != self.version {
+            return Err(StreamError::WrongVersion { expected: self.version, got: seg.version });
+        }
+        if self.done {
+            self.duplicates += 1;
+            return Ok(true);
+        }
+        if seg.total != TOTAL_UNKNOWN {
+            match self.total {
+                None => {
+                    if self.next_seq > seg.total
+                        || self.pending.keys().next_back().is_some_and(|&s| s >= seg.total)
+                    {
+                        return Err(self.poison(StreamError::GeometryMismatch));
+                    }
+                    self.total = Some(seg.total);
+                }
+                Some(t) if t != seg.total => {
+                    return Err(StreamError::GeometryMismatch);
+                }
+                _ => {}
+            }
+        }
+        if let Some(t) = self.total {
+            if seg.seq >= t {
+                return Err(StreamError::GeometryMismatch);
+            }
+        }
+        if seg.seq < self.next_seq {
+            self.duplicates += 1;
+            return Ok(false);
+        }
+        if seg.seq > self.next_seq {
+            match self.pending.get(&seg.seq) {
+                Some(prev) => {
+                    if prev.payload != seg.payload {
+                        return Err(self.poison(StreamError::GeometryMismatch));
+                    }
+                    self.duplicates += 1;
+                }
+                None => {
+                    self.pending.insert(seg.seq, seg);
+                }
+            }
+            return Ok(false);
+        }
+        self.consume(seg)?;
+        while let Some(next) = self.pending.remove(&self.next_seq) {
+            self.consume(next)?;
+        }
+        Ok(self.done)
+    }
+
+    fn consume(&mut self, seg: Segment) -> Result<(), StreamError> {
+        // Drop the consumed prefix so the carry buffer stays tiny (at most
+        // one partial field in the in-order case).
+        self.buf.drain(..self.pos);
+        self.pos = 0;
+        self.buf.extend_from_slice(&seg.payload);
+        self.next_seq += 1;
+        if let Err(e) = self.parse() {
+            return Err(self.poison(e));
+        }
+        if self.done && self.pos < self.buf.len() {
+            return Err(self.poison(StreamError::TrailingBytes));
+        }
+        if let Some(t) = self.total {
+            if self.next_seq == t && !self.done {
+                return Err(self.poison(StreamError::Truncated));
+            }
+        }
+        Ok(())
+    }
+
+    fn avail(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn parse(&mut self) -> Result<(), StreamError> {
+        loop {
+            match self.phase {
+                Phase::Header => {
+                    if self.avail() < encode::HEADER_LEN {
+                        return Ok(());
+                    }
+                    let h = &self.buf[self.pos..self.pos + encode::HEADER_LEN];
+                    if h[0..4] != encode::MAGIC {
+                        return Err(StreamError::BadMagic);
+                    }
+                    if h[4] != encode::FORMAT_VERSION {
+                        return Err(StreamError::BadFormat(h[4]));
+                    }
+                    let mode =
+                        ApplyMode::from_u8(h[5]).ok_or(StreamError::BadMode(h[5]))?;
+                    let rd = |a: usize| u64::from_le_bytes(h[a..a + 8].try_into().unwrap());
+                    let hdr_version = rd(8);
+                    let base_version = rd(16);
+                    let model_fp = rd(24);
+                    let flags = u32::from_le_bytes(h[32..36].try_into().unwrap());
+                    if flags != 0 {
+                        return Err(StreamError::Corrupt("unknown header flags"));
+                    }
+                    if hdr_version != self.version {
+                        return Err(StreamError::Corrupt("checkpoint/segment version mismatch"));
+                    }
+                    self.mode = mode;
+                    self.hdr_version = hdr_version;
+                    self.base_version = base_version;
+                    self.model_fp = model_fp;
+                    self.hasher.update(h);
+                    self.pos += encode::HEADER_LEN;
+                    self.bytes_consumed += encode::HEADER_LEN as u64;
+                    self.phase = Phase::SectionHeader;
+                }
+                Phase::SectionHeader => {
+                    if self.avail() < 4 {
+                        return Ok(());
+                    }
+                    let tensor = u32::from_le_bytes(
+                        self.buf[self.pos..self.pos + 4].try_into().unwrap(),
+                    );
+                    if tensor == SECTION_END {
+                        self.hasher.update(&self.buf[self.pos..self.pos + 4]);
+                        self.pos += 4;
+                        self.bytes_consumed += 4;
+                        self.phase = Phase::Trailer;
+                        continue;
+                    }
+                    if self.avail() < encode::SECTION_HEADER_LEN {
+                        return Ok(());
+                    }
+                    let h = &self.buf[self.pos..self.pos + encode::SECTION_HEADER_LEN];
+                    let nnz = u64::from_le_bytes(h[4..12].try_into().unwrap());
+                    let idx_bytes = u64::from_le_bytes(h[12..20].try_into().unwrap());
+                    // Plausibility gates bound allocations before the hash
+                    // can vouch for the stream: a gap varint is 1..=10
+                    // bytes per index.
+                    if nnz == 0 {
+                        if idx_bytes != 0 {
+                            return Err(StreamError::Corrupt("empty section with index bytes"));
+                        }
+                    } else if idx_bytes < nnz || idx_bytes > nnz.saturating_mul(10) {
+                        return Err(StreamError::Corrupt("index section size implausible"));
+                    }
+                    self.hasher.update(h);
+                    self.pos += encode::SECTION_HEADER_LEN;
+                    self.bytes_consumed += encode::SECTION_HEADER_LEN as u64;
+                    let prealloc = nnz.min(1 << 20) as usize;
+                    let cur = CurSection {
+                        tensor,
+                        nnz,
+                        idx_bytes,
+                        idx_consumed: 0,
+                        idx_count: 0,
+                        acc: 0,
+                        idx: Vec::with_capacity(prealloc),
+                        vals: Vec::with_capacity(prealloc),
+                    };
+                    if nnz == 0 {
+                        self.tensors.push(TensorDelta {
+                            tensor,
+                            idx: Vec::new(),
+                            vals: Vec::new(),
+                        });
+                        // phase stays SectionHeader
+                    } else {
+                        self.cur = Some(cur);
+                        self.phase = Phase::Indices;
+                    }
+                }
+                Phase::Indices => {
+                    let cur = self.cur.as_mut().expect("Indices phase has a section");
+                    let start = self.pos;
+                    let remaining = (cur.idx_bytes - cur.idx_consumed) as usize;
+                    // End of the section's index bytes that are present in
+                    // the buffer; stays valid as pos/remaining advance in
+                    // lockstep within this window.
+                    let window_end = self.pos + remaining.min(self.buf.len() - self.pos);
+                    let full_window = window_end == start + remaining;
+                    // Parse every varint available in the window, then fold
+                    // the whole consumed range into the hash in one update
+                    // (per-varint updates would dominate the staging path).
+                    while self.pos < window_end {
+                        let mut p = self.pos;
+                        match varint::read_uleb128(&self.buf[..window_end], &mut p) {
+                            Some(gap) => {
+                                let used = (p - self.pos) as u64;
+                                self.pos = p;
+                                cur.idx_consumed += used;
+                                cur.acc = if cur.idx_count == 0 {
+                                    gap
+                                } else {
+                                    cur.acc
+                                        .checked_add(gap)
+                                        .ok_or(StreamError::Corrupt("index overflow"))?
+                                };
+                                cur.idx.push(cur.acc);
+                                cur.idx_count += 1;
+                                if cur.idx_count > cur.nnz {
+                                    return Err(StreamError::Corrupt("more indices than nnz"));
+                                }
+                                if cur.idx_consumed == cur.idx_bytes {
+                                    if cur.idx_count != cur.nnz {
+                                        return Err(StreamError::Corrupt(
+                                            "index section length mismatch",
+                                        ));
+                                    }
+                                    self.phase = Phase::Values;
+                                    break;
+                                }
+                            }
+                            None => {
+                                if full_window {
+                                    // All of the section's index bytes are
+                                    // here and still unparsable: corrupt.
+                                    return Err(StreamError::Corrupt("bad varint stream"));
+                                }
+                                break; // varint spans the next segment
+                            }
+                        }
+                    }
+                    if self.pos > start {
+                        self.hasher.update(&self.buf[start..self.pos]);
+                        self.bytes_consumed += (self.pos - start) as u64;
+                    }
+                    if self.phase == Phase::Indices {
+                        return Ok(()); // need more bytes
+                    }
+                }
+                Phase::Values => {
+                    let cur = self.cur.as_mut().expect("Values phase has a section");
+                    let need = (cur.nnz as usize - cur.vals.len()) * 2;
+                    let take = need.min(self.avail()) & !1usize;
+                    if take == 0 {
+                        return Ok(());
+                    }
+                    let bytes = &self.buf[self.pos..self.pos + take];
+                    self.hasher.update(bytes);
+                    for pair in bytes.chunks_exact(2) {
+                        cur.vals.push(Bf16::from_bits(u16::from_le_bytes([pair[0], pair[1]])));
+                    }
+                    self.pos += take;
+                    self.bytes_consumed += take as u64;
+                    if cur.vals.len() == cur.nnz as usize {
+                        let cur = self.cur.take().unwrap();
+                        self.tensors.push(TensorDelta {
+                            tensor: cur.tensor,
+                            idx: cur.idx,
+                            vals: cur.vals,
+                        });
+                        self.phase = Phase::SectionHeader;
+                    }
+                }
+                Phase::Trailer => {
+                    if self.avail() < 32 {
+                        return Ok(());
+                    }
+                    let hasher = std::mem::replace(&mut self.hasher, Sha256::new());
+                    let expect = hasher.finalize();
+                    if self.buf[self.pos..self.pos + 32] != expect[..] {
+                        return Err(StreamError::HashMismatch);
+                    }
+                    self.hash = expect;
+                    self.pos += 32;
+                    self.bytes_consumed += 32;
+                    self.done = true;
+                    self.phase = Phase::Done;
+                    return Ok(());
+                }
+                Phase::Done => return Ok(()),
+            }
+        }
+    }
+
+    /// Drain the tensor sections parsed so far (used by the streaming
+    /// applier so its working set stays one section).
+    pub(crate) fn take_completed_sections(&mut self) -> Vec<TensorDelta> {
+        std::mem::take(&mut self.tensors)
+    }
+
+    /// Consume the decoder into the verified delta (None until complete).
+    pub fn into_staged(self) -> Option<StagedDelta> {
+        if !self.done {
+            return None;
+        }
+        Some(StagedDelta {
+            delta: SparseDelta {
+                version: self.hdr_version,
+                base_version: self.base_version,
+                model_fp: self.model_fp,
+                mode: self.mode,
+                tensors: self.tensors,
+            },
+            hash: self.hash,
+        })
+    }
+}
+
+/// Streaming scatter-assign: applies each completed tensor section to the
+/// parameters as its bytes arrive, with an undo log so a trailer-hash
+/// mismatch (or any mid-stream corruption) rolls the parameters back
+/// bit-exactly. Use at a safe point only — the parameters mutate while the
+/// stream is in flight.
+pub struct DeltaStreamApplier {
+    dec: DeltaStreamDecoder,
+    undo: Vec<(u32, u64, Bf16)>,
+    applied_nnz: u64,
+}
+
+impl DeltaStreamApplier {
+    pub fn new(version: u64) -> DeltaStreamApplier {
+        DeltaStreamApplier { dec: DeltaStreamDecoder::new(version), undo: Vec::new(), applied_nnz: 0 }
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.dec.is_complete()
+    }
+
+    pub fn applied_nnz(&self) -> u64 {
+        self.applied_nnz
+    }
+
+    /// Header metadata once parsed (for base-version gating by the caller).
+    pub fn header(&self) -> Option<(u64, u64, u64, ApplyMode)> {
+        self.dec.header()
+    }
+
+    /// The verified stream hash (valid once complete).
+    pub fn hash(&self) -> Option<[u8; 32]> {
+        self.dec.is_complete().then_some(self.dec.hash)
+    }
+
+    /// Feed one segment, applying completed sections to `params`. On any
+    /// error every applied element is rolled back before returning.
+    pub fn push(
+        &mut self,
+        seg: Segment,
+        params: &mut ParamSet,
+    ) -> Result<bool, StreamError> {
+        let done = match self.dec.push(seg) {
+            Ok(d) => d,
+            Err(e) => {
+                // Roll back only when the stream itself is dead (poisoned).
+                // Non-poisoning rejections (a stray segment from another
+                // version, an inconsistent-geometry frame) leave the stream
+                // recoverable, and already-applied sections must survive so
+                // the remaining segments complete correctly.
+                if self.dec.is_poisoned() {
+                    self.rollback(params);
+                }
+                return Err(e);
+            }
+        };
+        let mode = self.dec.mode();
+        for t in self.dec.take_completed_sections() {
+            let in_bounds = (t.tensor as usize) < params.tensors.len()
+                && t.idx
+                    .last()
+                    .map(|&i| (i as usize) < params.tensors[t.tensor as usize].len())
+                    .unwrap_or(true)
+                && t.idx.windows(2).all(|w| w[0] < w[1]);
+            if !in_bounds {
+                self.dec.poisoned = true;
+                self.rollback(params);
+                return Err(StreamError::Corrupt("section addresses out of bounds"));
+            }
+            let buf = &mut params.tensors[t.tensor as usize];
+            for (&i, &v) in t.idx.iter().zip(&t.vals) {
+                let slot = &mut buf[i as usize];
+                self.undo.push((t.tensor, i, *slot));
+                *slot = match mode {
+                    ApplyMode::Assign => v,
+                    ApplyMode::Add => Bf16::from_f32(slot.to_f32() + v.to_f32()),
+                };
+                self.applied_nnz += 1;
+            }
+        }
+        if done {
+            self.undo.clear(); // committed: hash verified
+        }
+        Ok(done)
+    }
+
+    fn rollback(&mut self, params: &mut ParamSet) {
+        for (tensor, i, old) in self.undo.drain(..).rev() {
+            params.tensors[tensor as usize][i as usize] = old;
+        }
+        self.applied_nnz = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::encode::{decode_delta, delta_hash, encode_delta};
+    use crate::delta::extract::{apply_delta, extract_delta};
+    use crate::transport::segment::split_into_segments;
+    use crate::util::{prop, Rng};
+
+    fn perturbed(p: &ParamSet, rho: f64, rng: &mut Rng) -> ParamSet {
+        let mut q = p.clone();
+        for t in &mut q.tensors {
+            let n = t.len();
+            let k = ((n as f64 * rho).round() as usize).clamp(1, n);
+            for i in prop::sparse_indices(rng, n as u64, k) {
+                let v = &mut t[i as usize];
+                *v = Bf16::from_bits(v.to_bits() ^ 0x0040);
+            }
+        }
+        q
+    }
+
+    fn setup(rho: f64, seed: u64) -> (ModelLayout, ParamSet, ParamSet) {
+        let l = ModelLayout::transformer("t", 256, 64, 2, 128);
+        let mut rng = Rng::new(seed);
+        let old = ParamSet::random(&l, 0.02, &mut rng);
+        let new = perturbed(&old, rho, &mut rng);
+        (l, old, new)
+    }
+
+    fn concat(segs: &[Segment]) -> Vec<u8> {
+        segs.iter().flat_map(|s| s.payload.iter().copied()).collect()
+    }
+
+    #[test]
+    fn bit_identical_to_legacy_encode_across_densities() {
+        for (i, rho) in [0.0005, 0.01, 0.08, 0.5].iter().enumerate() {
+            let (l, old, new) = setup(*rho, 100 + i as u64);
+            let legacy = encode_delta(&extract_delta(&l, &old, &new, 3, 4, ApplyMode::Assign));
+            let enc = DeltaStreamEncoder::new(
+                &l,
+                3,
+                4,
+                ApplyMode::Assign,
+                StreamConfig { segment_bytes: 1 << 12, ..Default::default() },
+            );
+            let (segs, stats) = enc.encode_to_segments(&old, &new);
+            let streamed = concat(&segs);
+            assert_eq!(streamed, legacy, "rho={rho}");
+            assert_eq!(Some(stats.hash), delta_hash(&legacy), "same trailing hash");
+            assert_eq!(stats.payload_bytes as usize, legacy.len());
+            assert_eq!(stats.segments as usize, segs.len());
+        }
+    }
+
+    #[test]
+    fn add_mode_is_bit_identical_too() {
+        let (l, old, new) = setup(0.02, 7);
+        let legacy = encode_delta(&extract_delta(&l, &old, &new, 0, 1, ApplyMode::Add));
+        let enc = DeltaStreamEncoder::new(&l, 0, 1, ApplyMode::Add, StreamConfig::default());
+        let (segs, _) = enc.encode_to_segments(&old, &new);
+        assert_eq!(concat(&segs), legacy);
+    }
+
+    #[test]
+    fn segment_geometry_matches_legacy_split() {
+        let (l, old, new) = setup(0.05, 9);
+        let legacy = encode_delta(&extract_delta(&l, &old, &new, 0, 1, ApplyMode::Assign));
+        let seg_bytes = 700usize;
+        let enc = DeltaStreamEncoder::new(
+            &l,
+            0,
+            1,
+            ApplyMode::Assign,
+            StreamConfig { segment_bytes: seg_bytes, ..Default::default() },
+        );
+        let (segs, _) = enc.encode_to_segments(&old, &new);
+        let split = split_into_segments(1, &legacy, seg_bytes);
+        assert_eq!(segs.len(), split.len());
+        for (a, b) in segs.iter().zip(&split) {
+            assert_eq!(a.payload, b.payload);
+            assert_eq!(a.seq, b.seq);
+        }
+        // Streaming totals: unknown everywhere except the final frame.
+        for s in &segs[..segs.len() - 1] {
+            assert_eq!(s.total, TOTAL_UNKNOWN);
+        }
+        assert_eq!(segs.last().unwrap().total, segs.len() as u32);
+    }
+
+    #[test]
+    fn first_segment_leaves_before_scan_completes() {
+        // Make the early tensors produce more than one segment's worth of
+        // encoded bytes so frames must ship mid-scan.
+        let (l, old, new) = setup(0.10, 11);
+        let n_tensors = l.tensors.len() as u32;
+        let enc = DeltaStreamEncoder::new(
+            &l,
+            0,
+            1,
+            ApplyMode::Assign,
+            StreamConfig { segment_bytes: 1 << 10, ..Default::default() },
+        );
+        let (segs, stats) = enc.encode_to_segments(&old, &new);
+        assert!(segs.len() > 3, "need a multi-segment stream");
+        let at = stats
+            .first_segment_tensor
+            .expect("first segment must ship during the scan");
+        assert!(
+            at < n_tensors - 1,
+            "first segment left at tensor {at}/{n_tensors}: no overlap"
+        );
+    }
+
+    #[test]
+    fn parallel_encode_is_byte_identical_and_stats_match() {
+        let l = ModelLayout::transformer("p", 512, 128, 4, 512);
+        let mut rng = Rng::new(13);
+        let old = ParamSet::random(&l, 0.02, &mut rng);
+        let new = perturbed(&old, 0.03, &mut rng);
+        let enc = DeltaStreamEncoder::new(
+            &l,
+            1,
+            2,
+            ApplyMode::Assign,
+            StreamConfig { segment_bytes: 1 << 12, ..Default::default() },
+        );
+        let (serial, s_stats) = enc.encode_to_segments(&old, &new);
+        let mut par = Vec::new();
+        // Force the parallel path even though the model is small.
+        let total: u64 = old.tensors.iter().map(|t| t.len() as u64).sum();
+        assert!(total < 4_000_000, "test model should be below the fallback bound");
+        let p_stats = {
+            // Bypass the size fallback by calling with a big-model clone of
+            // the config logic: use encode_parallel on a padded model is
+            // overkill; instead exercise the worker path directly.
+            let mut q_old = old.clone();
+            let mut q_new = new.clone();
+            // Pad with one large unchanged tensor to cross the threshold
+            // without altering the diff (unchanged => no section).
+            q_old.tensors.push(vec![Bf16::ZERO; 4_000_000]);
+            q_new.tensors.push(vec![Bf16::ZERO; 4_000_000]);
+            enc.encode_parallel(&q_old, &q_new, 4, |s| par.push(s))
+        };
+        assert_eq!(concat(&par), concat(&serial));
+        assert_eq!(p_stats.nnz, s_stats.nnz);
+        assert_eq!(p_stats.hash, s_stats.hash);
+    }
+
+    #[test]
+    fn decoder_in_order_round_trips() {
+        let (l, old, new) = setup(0.02, 17);
+        let delta = extract_delta(&l, &old, &new, 5, 6, ApplyMode::Assign);
+        let enc = DeltaStreamEncoder::new(
+            &l,
+            5,
+            6,
+            ApplyMode::Assign,
+            StreamConfig { segment_bytes: 900, ..Default::default() },
+        );
+        let (segs, stats) = enc.encode_to_segments(&old, &new);
+        let mut dec = DeltaStreamDecoder::new(6);
+        let mut became = false;
+        for s in segs {
+            became |= dec.push(s).unwrap();
+        }
+        assert!(became && dec.is_complete());
+        let staged = dec.into_staged().unwrap();
+        assert_eq!(staged.delta, delta);
+        assert_eq!(staged.hash, stats.hash);
+    }
+
+    #[test]
+    fn decoder_tolerates_reordering_and_duplicates() {
+        let (l, old, new) = setup(0.03, 19);
+        let delta = extract_delta(&l, &old, &new, 0, 1, ApplyMode::Assign);
+        let enc = DeltaStreamEncoder::new(
+            &l,
+            0,
+            1,
+            ApplyMode::Assign,
+            StreamConfig { segment_bytes: 500, ..Default::default() },
+        );
+        let (segs, _) = enc.encode_to_segments(&old, &new);
+        let mut rng = Rng::new(3);
+        let mut chaos: Vec<Segment> = segs.clone();
+        let dups: Vec<Segment> = segs.iter().step_by(2).cloned().collect();
+        chaos.extend(dups);
+        rng.shuffle(&mut chaos);
+        let mut dec = DeltaStreamDecoder::new(1);
+        for s in chaos {
+            dec.push(s).unwrap();
+        }
+        assert!(dec.is_complete());
+        assert!(dec.duplicates() > 0);
+        assert_eq!(dec.into_staged().unwrap().delta, delta);
+    }
+
+    #[test]
+    fn decoder_detects_corruption_and_poisons() {
+        let (l, old, new) = setup(0.02, 23);
+        let enc = DeltaStreamEncoder::new(
+            &l,
+            0,
+            1,
+            ApplyMode::Assign,
+            StreamConfig { segment_bytes: 600, ..Default::default() },
+        );
+        let (mut segs, _) = enc.encode_to_segments(&old, &new);
+        let n = segs.len();
+        assert!(n > 2);
+        // Corrupt one payload byte in the middle of the stream: either the
+        // parser rejects it structurally or the final hash check fails.
+        segs[n / 2].payload[3] ^= 0xFF;
+        let mut dec = DeltaStreamDecoder::new(1);
+        let mut failed = false;
+        for s in segs {
+            if dec.push(s).is_err() {
+                failed = true;
+            }
+        }
+        assert!(failed, "corruption must surface as an error");
+        assert!(!dec.is_complete());
+        // Poisoned decoders refuse further input.
+        assert_eq!(
+            dec.push(Segment { version: 1, seq: 0, total: TOTAL_UNKNOWN, payload: vec![] }),
+            Err(StreamError::Poisoned)
+        );
+    }
+
+    #[test]
+    fn decoder_rejects_wrong_version_and_geometry() {
+        let mut dec = DeltaStreamDecoder::new(4);
+        let wrong = Segment { version: 5, seq: 0, total: 2, payload: vec![1, 2] };
+        assert!(matches!(
+            dec.push(wrong),
+            Err(StreamError::WrongVersion { expected: 4, got: 5 })
+        ));
+        // Conflicting totals.
+        let a = Segment { version: 4, seq: 1, total: 3, payload: vec![0] };
+        let b = Segment { version: 4, seq: 2, total: 9, payload: vec![0] };
+        dec.push(a).unwrap();
+        assert_eq!(dec.push(b), Err(StreamError::GeometryMismatch));
+    }
+
+    #[test]
+    fn applier_matches_apply_delta_and_rolls_back_on_corruption() {
+        let (l, old, new) = setup(0.04, 29);
+        let delta = extract_delta(&l, &old, &new, 0, 1, ApplyMode::Assign);
+        let enc = DeltaStreamEncoder::new(
+            &l,
+            0,
+            1,
+            ApplyMode::Assign,
+            StreamConfig { segment_bytes: 800, ..Default::default() },
+        );
+        let (segs, _) = enc.encode_to_segments(&old, &new);
+
+        // Clean stream: streaming scatter-assign == buffered apply_delta.
+        let mut via_stream = old.clone();
+        let mut ap = DeltaStreamApplier::new(1);
+        let mut done = false;
+        for s in segs.clone() {
+            done |= ap.push(s, &mut via_stream).unwrap();
+        }
+        assert!(done);
+        assert_eq!(ap.applied_nnz(), delta.nnz());
+        let mut via_buffer = old.clone();
+        apply_delta(&mut via_buffer, &delta);
+        assert_eq!(via_stream, via_buffer);
+        assert_eq!(via_stream, new, "assign mode reproduces the snapshot");
+
+        // Corrupted stream: values scatter in flight, then the hash check
+        // fails and the rollback restores the original parameters.
+        let mut corrupted = segs;
+        let last = corrupted.len() - 1;
+        // Flip a value byte early so sections DO get applied before the
+        // trailer check fails.
+        corrupted[0].payload[encode::HEADER_LEN + encode::SECTION_HEADER_LEN + 1] ^= 0x10;
+        let mut params = old.clone();
+        let mut ap = DeltaStreamApplier::new(1);
+        let mut saw_err = false;
+        for (i, s) in corrupted.into_iter().enumerate() {
+            match ap.push(s, &mut params) {
+                Ok(_) => {}
+                Err(e) => {
+                    saw_err = true;
+                    assert!(i == last || matches!(e, StreamError::Poisoned | StreamError::Corrupt(_)));
+                }
+            }
+        }
+        assert!(saw_err);
+        assert_eq!(params, old, "rollback must restore parameters bit-exactly");
+    }
+
+    #[test]
+    fn applier_survives_stray_segment_without_reverting() {
+        // A non-poisoning rejection (segment from another version) must
+        // not roll back sections that already applied — the real stream
+        // still completes and must land bit-exact.
+        let (l, old, new) = setup(0.04, 41);
+        let enc = DeltaStreamEncoder::new(
+            &l,
+            0,
+            1,
+            ApplyMode::Assign,
+            StreamConfig { segment_bytes: 800, ..Default::default() },
+        );
+        let (segs, _) = enc.encode_to_segments(&old, &new);
+        assert!(segs.len() > 2);
+        let mut params = old.clone();
+        let mut ap = DeltaStreamApplier::new(1);
+        let mut done = false;
+        for (k, s) in segs.iter().enumerate() {
+            if k == segs.len() / 2 {
+                let stray = Segment {
+                    version: 9,
+                    seq: 0,
+                    total: TOTAL_UNKNOWN,
+                    payload: vec![1, 2, 3],
+                };
+                assert!(matches!(
+                    ap.push(stray, &mut params),
+                    Err(StreamError::WrongVersion { expected: 1, got: 9 })
+                ));
+            }
+            done |= ap.push(s.clone(), &mut params).unwrap();
+        }
+        assert!(done);
+        assert_eq!(params, new, "stray segment must not corrupt the apply");
+    }
+
+    #[test]
+    fn empty_delta_streams_as_one_segment() {
+        let (l, old, _) = setup(0.01, 31);
+        let enc = DeltaStreamEncoder::new(&l, 2, 3, ApplyMode::Assign, StreamConfig::default());
+        let (segs, stats) = enc.encode_to_segments(&old, &old);
+        assert_eq!(stats.nnz, 0);
+        assert_eq!(segs.len(), 1);
+        assert_eq!(segs[0].total, 1);
+        assert_eq!(stats.first_segment_tensor, None, "single frame => no overlap");
+        let legacy = encode_delta(&extract_delta(&l, &old, &old, 2, 3, ApplyMode::Assign));
+        assert_eq!(concat(&segs), legacy);
+        let mut dec = DeltaStreamDecoder::new(3);
+        assert!(dec.push(segs[0].clone()).unwrap());
+        let staged = dec.into_staged().unwrap();
+        assert_eq!(staged.delta.nnz(), 0);
+        assert_eq!(staged.delta.base_version, 2);
+    }
+
+    #[test]
+    fn frame_pool_recycles_buffers() {
+        let (l, old, new) = setup(0.05, 37);
+        let enc = DeltaStreamEncoder::new(
+            &l,
+            0,
+            1,
+            ApplyMode::Assign,
+            StreamConfig { segment_bytes: 512, ..Default::default() },
+        );
+        let pool = enc.pool();
+        let mut n = 0usize;
+        enc.encode(&old, &new, |seg| {
+            n += 1;
+            pool.recycle(seg.payload); // transport done with the frame
+        });
+        assert!(n > 2);
+        assert!(!pool.is_empty(), "recycled frames return to the pool");
+        // Second encode draws from the pool rather than allocating.
+        let before = pool.len();
+        enc.encode(&old, &new, |seg| pool.recycle(seg.payload));
+        assert!(pool.len() >= before.min(1));
+    }
+
+    #[test]
+    fn prop_stream_and_legacy_paths_agree_and_apply_bit_exact() {
+        // Satellite: extract -> encode -> decode -> apply bit-exactness at
+        // densities 0.01% .. 50%, streaming and legacy byte-identical.
+        prop::check("stream/legacy byte identity + apply", 20, |rng| {
+            let l = ModelLayout::new(
+                "p",
+                vec![
+                    super::super::TensorSpec::new("a", &[rng.range(1, 4000)]),
+                    super::super::TensorSpec::new("b", &[rng.range(1, 4000)]),
+                    super::super::TensorSpec::new("c", &[rng.range(1, 400)]),
+                ],
+            );
+            let old = ParamSet::random(&l, 0.05, rng);
+            // Log-uniform density in [1e-4, 0.5].
+            let rho = 10f64.powf(-4.0 + rng.f64() * (f64::log10(0.5) + 4.0));
+            let mut new = old.clone();
+            for t in &mut new.tensors {
+                let n = t.len();
+                let k = ((n as f64 * rho).round() as usize).min(n);
+                for i in prop::sparse_indices(rng, n as u64, k) {
+                    t[i as usize] = Bf16::from_bits(rng.next_u64() as u16);
+                }
+            }
+            let delta = extract_delta(&l, &old, &new, 7, 8, ApplyMode::Assign);
+            let legacy = encode_delta(&delta);
+            let seg_bytes = rng.range(64, 4096);
+            let enc = DeltaStreamEncoder::new(
+                &l,
+                7,
+                8,
+                ApplyMode::Assign,
+                StreamConfig { segment_bytes: seg_bytes, chunk_elems: rng.range(4, 512) },
+            );
+            let (segs, stats) = enc.encode_to_segments(&old, &new);
+            assert_eq!(concat(&segs), legacy, "streaming and legacy bytes identical");
+            assert_eq!(Some(stats.hash), delta_hash(&legacy));
+            // decode (legacy) and streaming decode agree...
+            let via_legacy = decode_delta(&legacy).unwrap();
+            let mut dec = DeltaStreamDecoder::new(8);
+            for s in segs {
+                dec.push(s).unwrap();
+            }
+            let via_stream = dec.into_staged().unwrap().delta;
+            assert_eq!(via_legacy, via_stream);
+            // ...and applying reproduces the snapshot bit-exactly.
+            let mut applied = old.clone();
+            apply_delta(&mut applied, &via_stream);
+            assert_eq!(applied, new);
+        });
+    }
+}

@@ -23,7 +23,13 @@ pub fn write_uleb128(out: &mut Vec<u8>, mut x: u64) -> usize {
 }
 
 /// Decode one LEB128 value from `buf[pos..]`, advancing `pos`.
-/// Returns None on truncation or overlong/overflowing encodings.
+///
+/// Strictly canonical: returns None on truncation, on encodings that would
+/// overflow a u64 (10th byte > 1 or an 11th continuation byte), and on
+/// overlong encodings (a multi-byte encoding whose final byte is zero —
+/// the value had a shorter canonical form). Canonicality guarantees every
+/// value has exactly one byte representation, which is what lets the
+/// streaming and legacy encoders be byte-identical by construction.
 #[inline]
 pub fn read_uleb128(buf: &[u8], pos: &mut usize) -> Option<u64> {
     let mut x: u64 = 0;
@@ -36,6 +42,9 @@ pub fn read_uleb128(buf: &[u8], pos: &mut usize) -> Option<u64> {
         }
         x |= ((byte & 0x7F) as u64) << shift;
         if byte & 0x80 == 0 {
+            if byte == 0 && shift > 0 {
+                return None; // overlong: trailing zero byte
+            }
             return Some(x);
         }
         shift += 7;
@@ -149,6 +158,52 @@ mod tests {
         let buf = [0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x02];
         let mut pos = 0;
         assert_eq!(read_uleb128(&buf, &mut pos), None);
+    }
+
+    #[test]
+    fn u64_max_is_exactly_ten_bytes_and_round_trips() {
+        let mut buf = Vec::new();
+        assert_eq!(write_uleb128(&mut buf, u64::MAX), 10);
+        assert_eq!(buf, vec![0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0x01]);
+        let mut pos = 0;
+        assert_eq!(read_uleb128(&buf, &mut pos), Some(u64::MAX));
+        assert_eq!(pos, 10);
+    }
+
+    #[test]
+    fn overlong_encodings_rejected() {
+        // 0 as two bytes, 1 as two bytes, 127 as two bytes: all non-canonical.
+        for buf in [[0x80u8, 0x00], [0x81, 0x00], [0xFF, 0x00]] {
+            let mut pos = 0;
+            assert_eq!(read_uleb128(&buf, &mut pos), None, "{buf:02x?}");
+        }
+        // Ten-byte overlong zero-extension of a small value.
+        let buf = [0x81, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x00];
+        let mut pos = 0;
+        assert_eq!(read_uleb128(&buf, &mut pos), None);
+    }
+
+    #[test]
+    fn truncation_mid_value_at_every_length() {
+        for &x in &[128u64, 16384, 1 << 21, 1 << 42, u64::MAX] {
+            let mut buf = Vec::new();
+            write_uleb128(&mut buf, x);
+            for cut in 0..buf.len() {
+                let mut pos = 0;
+                assert_eq!(read_uleb128(&buf[..cut], &mut pos), None, "x={x} cut={cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_canonical_two_byte_value_accepted() {
+        // Exhaustive over the 2-byte range boundary: 128..=16383.
+        for x in 128u64..=16383 {
+            let mut buf = Vec::new();
+            assert_eq!(write_uleb128(&mut buf, x), 2);
+            let mut pos = 0;
+            assert_eq!(read_uleb128(&buf, &mut pos), Some(x));
+        }
     }
 
     #[test]

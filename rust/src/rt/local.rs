@@ -15,12 +15,11 @@
 use crate::actor::rollout::{generate_batch, SampleCfg};
 use crate::actor::{CommitResult, PolicyState};
 use crate::data::{pack_batch, Benchmark, Task};
-use crate::delta::{CheckpointStore, DeltaCheckpoint, ParamSet};
+use crate::delta::{CheckpointStore, ParamSet};
 use crate::ledger::{JobLedger, LeasePolicy};
 use crate::runtime::{Engines, TrainState};
 use crate::scheduler::{Scheduler, SchedulerConfig, VersionState};
 use crate::trainer::{group_advantages, Algorithm, Rollout};
-use crate::transport::split_into_segments;
 use crate::util::Rng;
 use anyhow::{bail, Context, Result};
 use std::time::Instant;
@@ -249,23 +248,38 @@ pub fn run_local(cfg: &LocalRunConfig) -> Result<RunReport> {
         let loss = eng.train_step(&mut state, &batch.tokens, &batch.gen_mask, &adv_padded, cfg.lr_rl)?;
         let train_ms = t_train.elapsed().as_secs_f64() * 1e3;
 
-        // -- delta extraction + checkpoint ------------------------------
+        // -- fused delta extraction + encode + segment + stream ----------
+        // One pass: segments hit every actor's staging decoder while later
+        // tensors are still being scanned (paper §5.2 pipelining). The
+        // sealed artifact for the store is assembled from the same bytes.
         let t_extract = Instant::now();
         let new_policy = state.to_policy();
-        let ckpt = crate::trainer::extract_checkpoint(
+        let mut stream_err: Option<String> = None;
+        let (ckpt, stream_stats) = crate::trainer::stream_checkpoint(
             &spec.layout,
             &policy,
             &new_policy,
             version,
             version + 1,
+            cfg.segment_bytes,
+            |seg| {
+                for (i, actor) in actors.iter_mut().enumerate() {
+                    if let Err(e) = actor.on_segment(seg.clone()) {
+                        stream_err.get_or_insert(format!("actor {i} staging: {e}"));
+                    }
+                }
+            },
         );
+        if let Some(e) = stream_err {
+            bail!("{e}");
+        }
         let extract_ms = t_extract.elapsed().as_secs_f64() * 1e3;
-        let rho = ckpt.open().unwrap().nnz() as f64 / spec.total_params() as f64;
+        let rho = stream_stats.nnz as f64 / spec.total_params() as f64;
         let payload = ckpt.payload_bytes();
         store.put(ckpt.clone())?;
 
-        // -- stream to actors: segments -> staging -> commit -------------
-        transfer_and_commit(&ckpt, &mut actors, cfg.segment_bytes)?;
+        // -- commit at the safe point ------------------------------------
+        commit_all(&mut actors, ckpt.version)?;
         version += 1;
         version_hash = ckpt.hash;
         policy = new_policy;
@@ -312,21 +326,10 @@ pub fn run_local(cfg: &LocalRunConfig) -> Result<RunReport> {
     })
 }
 
-/// Stream a checkpoint to every actor through the segment path and commit
-/// at the safe point.
-fn transfer_and_commit(
-    ckpt: &DeltaCheckpoint,
-    actors: &mut [PolicyState],
-    segment_bytes: usize,
-) -> Result<()> {
-    let segs = split_into_segments(ckpt.version, &ckpt.bytes, segment_bytes);
+/// Commit a fully staged version on every actor at the safe point.
+fn commit_all(actors: &mut [PolicyState], version: u64) -> Result<()> {
     for (i, actor) in actors.iter_mut().enumerate() {
-        for seg in &segs {
-            actor
-                .on_segment(seg.clone())
-                .map_err(|e| anyhow::anyhow!("actor {i} staging: {e}"))?;
-        }
-        match actor.commit(ckpt.version) {
+        match actor.commit(version) {
             CommitResult::Applied => {}
             other => bail!("actor {i} commit failed: {other:?}"),
         }

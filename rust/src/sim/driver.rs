@@ -214,8 +214,11 @@ pub fn run(cfg: &SimConfig) -> SimResult {
 
     let batch_tokens = cfg.batch as f64 * cm.gen_tokens_per_sample;
     let train_time = cm.train_time(&cfg.model, batch_tokens);
-    let extract_time = cm.extract_time(&cfg.model);
-    let emit_bps = cm.extract_emit_bps(&cfg.model, payload);
+    // Pipelined systems run the fused streaming encoder: emission is the
+    // payload produced uniformly over one fused scan pass (measured
+    // streaming rate), not the seed's separate extract-then-emit model.
+    let extract_time = cm.stream_scan_time(&cfg.model);
+    let emit_bps = cm.stream_emit_bps(&cfg.model, payload);
 
     let mut trainer_free = 0.0f64;
     let mut last_frontier = 0.0f64;

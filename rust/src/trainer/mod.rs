@@ -10,7 +10,9 @@ pub mod algorithms;
 
 pub use algorithms::Algorithm;
 
+use crate::delta::stream::{DeltaStreamEncoder, StreamConfig, StreamStats};
 use crate::delta::{extract_delta, ApplyMode, DeltaCheckpoint, ModelLayout, ParamSet};
+use crate::transport::Segment;
 
 /// One completed rollout returned by an actor.
 #[derive(Clone, Debug)]
@@ -47,7 +49,9 @@ pub fn group_advantages(rollouts: &[Rollout], alg: Algorithm) -> Vec<f32> {
 }
 
 /// Snapshot-diff the old/new bf16 policies into a sealed, versioned delta
-/// checkpoint (the paper's step-(4): encode + store).
+/// checkpoint (the paper's step-(4): encode + store). Legacy three-pass
+/// path, kept for comparison experiments; the runtime's hot path is
+/// [`stream_checkpoint`].
 pub fn extract_checkpoint(
     layout: &ModelLayout,
     old_policy: &ParamSet,
@@ -57,6 +61,40 @@ pub fn extract_checkpoint(
 ) -> DeltaCheckpoint {
     let delta = extract_delta(layout, old_policy, new_policy, base_version, version, ApplyMode::Assign);
     DeltaCheckpoint::seal(&delta)
+}
+
+/// Fused streaming path (paper §5.2): diff, encode, and segment the new
+/// policy in one pass, handing each wire-ready segment to `sink` as soon
+/// as it closes — transmission overlaps extraction. The sealed checkpoint
+/// artifact (for the Checkpoint Store) is assembled from the same bytes,
+/// so no second encode pass runs. Byte-identical to
+/// [`extract_checkpoint`]'s artifact.
+pub fn stream_checkpoint<F: FnMut(&Segment)>(
+    layout: &ModelLayout,
+    old_policy: &ParamSet,
+    new_policy: &ParamSet,
+    base_version: u64,
+    version: u64,
+    segment_bytes: usize,
+    mut sink: F,
+) -> (DeltaCheckpoint, StreamStats) {
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let enc = DeltaStreamEncoder::new(
+        layout,
+        base_version,
+        version,
+        ApplyMode::Assign,
+        StreamConfig { segment_bytes, ..Default::default() },
+    );
+    let mut bytes = Vec::new();
+    let stats = enc.encode_parallel(old_policy, new_policy, threads, |seg| {
+        bytes.extend_from_slice(&seg.payload);
+        sink(&seg);
+    });
+    let ckpt = DeltaCheckpoint { version, base_version, bytes, hash: stats.hash };
+    (ckpt, stats)
 }
 
 #[cfg(test)]
@@ -99,6 +137,32 @@ mod tests {
         let adv = group_advantages(&rs, Algorithm::Rloo);
         assert!(adv[0] > 0.0 && adv[2] < 0.0, "group 9 order kept");
         assert!(adv[1] < 0.0 && adv[3] > 0.0, "group 7 order kept");
+    }
+
+    #[test]
+    fn stream_checkpoint_matches_legacy_artifact() {
+        use crate::util::{Bf16, Rng};
+        let layout = ModelLayout::transformer("t", 128, 32, 2, 64);
+        let mut rng = Rng::new(5);
+        let old = ParamSet::random(&layout, 0.02, &mut rng);
+        let mut new = old.clone();
+        for t in &mut new.tensors {
+            for _ in 0..6 {
+                let i = rng.range(0, t.len());
+                t[i] = Bf16::from_bits(t[i].to_bits() ^ 0x0020);
+            }
+        }
+        let legacy = extract_checkpoint(&layout, &old, &new, 2, 3);
+        let mut seg_bytes_seen = 0usize;
+        let (streamed, stats) =
+            stream_checkpoint(&layout, &old, &new, 2, 3, 256, |seg| {
+                seg_bytes_seen += seg.payload.len();
+            });
+        assert_eq!(streamed.bytes, legacy.bytes, "artifacts byte-identical");
+        assert_eq!(streamed.hash, legacy.hash);
+        assert_eq!(seg_bytes_seen, legacy.bytes.len());
+        assert_eq!(stats.payload_bytes as usize, legacy.bytes.len());
+        assert!(stats.nnz > 0);
     }
 
     #[test]

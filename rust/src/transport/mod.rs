@@ -21,5 +21,5 @@ pub mod stripe;
 
 pub use plan::TransferPlan;
 pub use reassembly::Reassembler;
-pub use segment::{split_into_segments, Segment, DEFAULT_SEGMENT_BYTES};
+pub use segment::{split_into_segments, Segment, DEFAULT_SEGMENT_BYTES, TOTAL_UNKNOWN};
 pub use stripe::stripe_round_robin;

@@ -9,6 +9,13 @@
 use super::segment::Segment;
 use crate::delta::DeltaCheckpoint;
 
+/// Upper bound on the segment count a reassembler will allocate for,
+/// whether from a claimed total or from streaming growth — one corrupt or
+/// hostile seq/total must not trigger a multi-gigabyte allocation before
+/// the integrity hash can reject the stream. 2^20 segments is 1 TiB at
+/// the default 1 MiB segment size.
+pub const MAX_SEGMENTS: u32 = 1 << 20;
+
 /// Incremental reassembly buffer for one checkpoint version.
 pub struct Reassembler {
     version: u64,
@@ -59,21 +66,38 @@ impl Reassembler {
     }
 
     /// Accept one segment. Duplicate segments are counted and ignored.
+    ///
+    /// Segments carrying [`TOTAL_UNKNOWN`](crate::transport::TOTAL_UNKNOWN)
+    /// (the non-final frames of a streaming encode) grow the buffer as
+    /// needed; the geometry binds when a frame with a real total arrives.
     pub fn accept(&mut self, seg: Segment) -> Result<(), AcceptError> {
         if seg.version != self.version {
             return Err(AcceptError::WrongVersion { expected: self.version, got: seg.version });
         }
-        match self.total {
-            None => {
-                self.total = Some(seg.total);
-                self.parts = vec![None; seg.total as usize];
+        if seg.total != super::segment::TOTAL_UNKNOWN {
+            if seg.total > MAX_SEGMENTS {
+                return Err(AcceptError::GeometryMismatch);
             }
-            Some(t) if t != seg.total => return Err(AcceptError::GeometryMismatch),
-            _ => {}
+            match self.total {
+                None => {
+                    if (seg.total as usize) < self.parts.len() {
+                        // We already saw a seq beyond this claimed total.
+                        return Err(AcceptError::GeometryMismatch);
+                    }
+                    self.total = Some(seg.total);
+                    self.parts.resize_with(seg.total as usize, || None);
+                }
+                Some(t) if t != seg.total => return Err(AcceptError::GeometryMismatch),
+                _ => {}
+            }
         }
         let i = seg.seq as usize;
         if i >= self.parts.len() {
-            return Err(AcceptError::SeqOutOfRange);
+            if self.total.is_some() || seg.seq >= MAX_SEGMENTS {
+                return Err(AcceptError::SeqOutOfRange);
+            }
+            // Streaming frames before the geometry is known: grow.
+            self.parts.resize_with(i + 1, || None);
         }
         match &self.parts[i] {
             Some(existing) => {
@@ -198,6 +222,59 @@ mod tests {
         assert!(!r.is_complete());
         assert!(r.assemble().is_none());
         assert!(r.progress() < 1.0);
+    }
+
+    #[test]
+    fn streaming_unknown_totals_reassemble() {
+        use crate::transport::segment::TOTAL_UNKNOWN;
+        let c = checkpoint(7);
+        let mut segs = split_into_segments(c.version, &c.bytes, 50);
+        assert!(segs.len() > 2);
+        // Rewrite as a streaming encode would emit: only the final frame
+        // carries the geometry.
+        let n = segs.len() as u32;
+        for s in segs.iter_mut() {
+            s.total = if s.seq == n - 1 { n } else { TOTAL_UNKNOWN };
+        }
+        // Out of order: the buffer must grow before the geometry is known.
+        let mut rng = Rng::new(9);
+        rng.shuffle(&mut segs);
+        let mut r = Reassembler::new(c.version);
+        for s in segs {
+            r.accept(s).unwrap();
+        }
+        assert!(r.is_complete());
+        assert_eq!(r.assemble().unwrap(), c.bytes);
+    }
+
+    #[test]
+    fn hostile_seq_and_total_bounded_by_cap() {
+        use crate::transport::segment::TOTAL_UNKNOWN;
+        let mut r = Reassembler::new(1);
+        // A corrupt streaming frame with an absurd seq must not allocate.
+        assert_eq!(
+            r.accept(Segment { version: 1, seq: u32::MAX, total: TOTAL_UNKNOWN, payload: vec![1] }),
+            Err(AcceptError::SeqOutOfRange)
+        );
+        // A claimed total past the cap is rejected before allocation too.
+        assert_eq!(
+            r.accept(Segment { version: 1, seq: 0, total: u32::MAX, payload: vec![1] }),
+            Err(AcceptError::GeometryMismatch)
+        );
+        assert_eq!(r.bytes_staged(), 0);
+    }
+
+    #[test]
+    fn streaming_total_below_seen_seq_is_geometry_error() {
+        use crate::transport::segment::TOTAL_UNKNOWN;
+        let mut r = Reassembler::new(1);
+        r.accept(Segment { version: 1, seq: 5, total: TOTAL_UNKNOWN, payload: vec![1] })
+            .unwrap();
+        // A final frame claiming only 3 segments contradicts seq 5.
+        assert_eq!(
+            r.accept(Segment { version: 1, seq: 2, total: 3, payload: vec![2] }),
+            Err(AcceptError::GeometryMismatch)
+        );
     }
 
     #[test]

@@ -10,6 +10,16 @@
 
 pub const SEG_MAGIC: [u8; 4] = *b"SSEG";
 pub const DEFAULT_SEGMENT_BYTES: usize = 1 << 20; // 1 MiB
+
+/// `total` value meaning "stream length not yet known". A single-pass
+/// streaming encoder (`delta/stream.rs`) only learns the segment count at
+/// the end of the scan, so every frame except the last carries this
+/// sentinel and the final frame binds the true geometry. Legacy
+/// `split_into_segments` streams carry the real total on every frame;
+/// receivers (`Reassembler`, `DeltaStreamDecoder`) accept both. The
+/// sentinel is unambiguous because a materialized stream always has
+/// `total >= 1`.
+pub const TOTAL_UNKNOWN: u32 = 0;
 const HEADER_LEN: usize = 4 + 8 + 4 + 4 + 4;
 
 /// One transfer segment of a delta checkpoint.
@@ -19,7 +29,8 @@ pub struct Segment {
     pub version: u64,
     /// Position in the checkpoint byte stream.
     pub seq: u32,
-    /// Total number of segments in the checkpoint.
+    /// Total number of segments in the checkpoint, or [`TOTAL_UNKNOWN`]
+    /// on the non-final frames of a streaming encode.
     pub total: u32,
     pub payload: Vec<u8>,
 }

@@ -2,8 +2,11 @@
 //!
 //! `cargo bench` targets use `harness = false` and drive this directly.
 //! Each benchmark runs a warmup, then `reps` timed iterations, and reports
-//! min / median / mean / p95 wall time plus derived throughput.
+//! min / median / mean / p95 wall time plus derived throughput. Results
+//! can be exported as machine-readable JSON (`write_json`) so the perf
+//! trajectory is tracked across PRs (e.g. `BENCH_encoding.json`).
 
+use crate::util::jsonl::Json;
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark case.
@@ -34,6 +37,24 @@ impl BenchResult {
             s.push_str(&format!("  {:>8.3} GB/s", t));
         }
         s
+    }
+
+    /// Machine-readable form (seconds; throughput in GB/s when known).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("name", self.name.as_str())
+            .set("reps", self.reps)
+            .set("min_s", self.min.as_secs_f64())
+            .set("median_s", self.median.as_secs_f64())
+            .set("mean_s", self.mean.as_secs_f64())
+            .set("p95_s", self.p95.as_secs_f64());
+        if let Some(b) = self.bytes_per_iter {
+            j = j.set("bytes_per_iter", b);
+        }
+        if let Some(t) = self.throughput_gbps() {
+            j = j.set("gb_per_s", t);
+        }
+        j
     }
 }
 
@@ -100,6 +121,36 @@ impl Bencher {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Build the JSON document for all recorded results, with optional
+    /// derived metrics (e.g. speedup ratios) attached by the bench driver.
+    pub fn to_json(&self, bench: &str, derived: &[(&str, f64)]) -> Json {
+        let mut d = Json::obj();
+        for (k, v) in derived {
+            d = d.set(*k, *v);
+        }
+        Json::obj()
+            .set("bench", bench)
+            .set(
+                "results",
+                Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+            )
+            .set("derived", d)
+    }
+
+    /// Write all recorded results as a JSON document (the cross-PR perf
+    /// record, e.g. `BENCH_encoding.json`).
+    pub fn write_json(
+        &self,
+        path: &std::path::Path,
+        bench: &str,
+        derived: &[(&str, f64)],
+    ) -> std::io::Result<()> {
+        let doc = self.to_json(bench, derived).to_string();
+        std::fs::write(path, doc + "\n")?;
+        println!("bench results written to {}", path.display());
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -114,6 +165,24 @@ mod tests {
         });
         assert!(r.min <= r.median && r.median <= r.p95);
         assert_eq!(r.reps, 5);
+    }
+
+    #[test]
+    fn json_export_contains_every_result_and_derived_metrics() {
+        let mut b = Bencher::new(0, 3);
+        b.bench("alpha", || {
+            std::hint::black_box(1 + 1);
+        });
+        let buf = vec![0u8; 1024];
+        b.bench_bytes("beta", buf.len() as u64, || {
+            std::hint::black_box(buf.iter().map(|&x| x as u64).sum::<u64>());
+        });
+        let doc = b.to_json("encoding", &[("fused_speedup", 1.75)]).to_string();
+        assert!(doc.contains("\"bench\":\"encoding\""));
+        assert!(doc.contains("\"name\":\"alpha\""));
+        assert!(doc.contains("\"name\":\"beta\""));
+        assert!(doc.contains("\"gb_per_s\""));
+        assert!(doc.contains("\"fused_speedup\":1.75"));
     }
 
     #[test]
