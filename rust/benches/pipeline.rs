@@ -1,0 +1,116 @@
+//! End-to-end overlap bench: the phase-sequential executor vs the
+//! overlapped one-step pipelined executor on the same RL loop, plus the
+//! measured overlap efficiency (hidden-sync-time / sync-time) from the
+//! pipelined run's timeline. Emits `BENCH_pipeline.json` so the perf
+//! trajectory is tracked across PRs.
+//!
+//! Runs on the deterministic synthetic engine with emulated compute
+//! latencies (artifact-free, CI-safe). When PJRT artifacts for sparrow-xs
+//! are present, the real loop is measured as well. Set `BENCH_QUICK=1`
+//! for a CI smoke run.
+
+use sparrowrl::delta::ModelLayout;
+use sparrowrl::metrics::SpanKind;
+use sparrowrl::rt::{
+    run_local_mode, run_with_compute, ExecMode, LocalRunConfig, SyntheticCompute,
+};
+use sparrowrl::util::bench::Bencher;
+use std::time::Duration;
+
+const SYNC: [SpanKind; 2] = [SpanKind::Train, SpanKind::Extract];
+
+fn synthetic_cfg(quick: bool) -> LocalRunConfig {
+    let mut cfg = LocalRunConfig::quick("synthetic");
+    cfg.steps = if quick { 5 } else { 10 };
+    cfg.sft_steps = 0;
+    cfg.n_actors = 2;
+    cfg.group_size = 2;
+    cfg.max_new_tokens = 6;
+    cfg.lr_rl = 1e-2;
+    cfg
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let mut b = Bencher::new(1, if quick { 3 } else { 7 });
+    let mut derived: Vec<(&str, f64)> = Vec::new();
+
+    // -- synthetic engine: emulated accelerator latencies ----------------
+    let layout = ModelLayout::transformer("syn-bench", 512, 128, 2, 256);
+    let comp = SyntheticCompute::new(16, 8, 64)
+        .with_delays(Duration::from_millis(10), Duration::from_millis(8));
+    let cfg = synthetic_cfg(quick);
+    let seq = b
+        .bench("e2e 2-actor synthetic [sequential]", || {
+            std::hint::black_box(
+                run_with_compute(&cfg, &layout, &comp, ExecMode::Sequential).unwrap(),
+            );
+        })
+        .median
+        .as_secs_f64();
+    let pip = b
+        .bench("e2e 2-actor synthetic [pipelined]", || {
+            std::hint::black_box(
+                run_with_compute(&cfg, &layout, &comp, ExecMode::Pipelined).unwrap(),
+            );
+        })
+        .median
+        .as_secs_f64();
+    let speedup = seq / pip.max(1e-12);
+    // Overlap efficiency from a representative pipelined timeline.
+    let report = run_with_compute(&cfg, &layout, &comp, ExecMode::Pipelined).unwrap();
+    let sync_s = report.timeline.total("trainer", SpanKind::Train)
+        + report.timeline.total("trainer", SpanKind::Extract);
+    let overlap = report.timeline.overlap_ratio("trainer", &SYNC);
+    println!(
+        "synthetic: sequential {seq:.3}s, pipelined {pip:.3}s -> {speedup:.2}x; \
+         hidden sync {:.0}% of {:.3}s",
+        overlap * 100.0,
+        sync_s
+    );
+    derived.push(("sequential_wall_s", seq));
+    derived.push(("pipelined_wall_s", pip));
+    derived.push(("pipeline_speedup", speedup));
+    derived.push(("overlap_efficiency", overlap));
+    derived.push(("hidden_sync_s", overlap * sync_s));
+
+    // -- real PJRT loop, when artifacts exist ----------------------------
+    let model = "sparrow-xs";
+    if sparrowrl::runtime::artifacts_dir()
+        .join(format!("{model}_policy_fwd.hlo.txt"))
+        .exists()
+    {
+        let mut cfg = LocalRunConfig::quick(model);
+        cfg.steps = if quick { 3 } else { 6 };
+        cfg.sft_steps = 0;
+        let seq = b
+            .bench("e2e 2-actor sparrow-xs [sequential]", || {
+                std::hint::black_box(run_local_mode(&cfg, ExecMode::Sequential).unwrap());
+            })
+            .median
+            .as_secs_f64();
+        let pip = b
+            .bench("e2e 2-actor sparrow-xs [pipelined]", || {
+                std::hint::black_box(run_local_mode(&cfg, ExecMode::Pipelined).unwrap());
+            })
+            .median
+            .as_secs_f64();
+        let real_speedup = seq / pip.max(1e-12);
+        let report = run_local_mode(&cfg, ExecMode::Pipelined).unwrap();
+        println!(
+            "sparrow-xs: sequential {seq:.3}s, pipelined {pip:.3}s -> {real_speedup:.2}x"
+        );
+        derived.push(("real_sequential_wall_s", seq));
+        derived.push(("real_pipelined_wall_s", pip));
+        derived.push(("real_pipeline_speedup", real_speedup));
+        derived.push((
+            "real_overlap_efficiency",
+            report.timeline.overlap_ratio("trainer", &SYNC),
+        ));
+    } else {
+        eprintln!("({model} artifacts missing; real-loop case skipped)");
+    }
+
+    let out = std::path::Path::new("BENCH_pipeline.json");
+    b.write_json(out, "pipeline", &derived).expect("write bench json");
+}

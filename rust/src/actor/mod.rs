@@ -29,6 +29,9 @@ use std::collections::BTreeMap;
 pub enum CommitResult {
     /// Applied; active version advanced.
     Applied,
+    /// A generation batch is running: the commit was parked and will apply
+    /// at the next safe point ([`PolicyState::on_safe_point`]).
+    Deferred,
     /// No fully staged delta for that version yet.
     NotStaged,
     /// Staged delta's base does not match the active version.
@@ -49,6 +52,8 @@ pub struct PolicyState {
     staged: BTreeMap<u64, StagedDelta>,
     /// True while a generation batch is running (no safe point).
     generating: bool,
+    /// Commit requested mid-generation, parked for the next safe point.
+    pending_commit: Option<u64>,
     applied: u64,
 }
 
@@ -61,6 +66,7 @@ impl PolicyState {
             staging: BTreeMap::new(),
             staged: BTreeMap::new(),
             generating: false,
+            pending_commit: None,
             applied: 0,
         }
     }
@@ -150,10 +156,48 @@ impl PolicyState {
         self.active_version = version;
         self.applied += 1;
         self.staged.remove(&version);
-        // Garbage-collect staging state that can never apply now.
+        // Garbage-collect staging state that can never apply now — and any
+        // deferred commit request this apply already satisfied.
         self.staging.retain(|&v, _| v > version);
         self.staged.retain(|&v, _| v > version);
+        if self.pending_commit.map_or(false, |p| p <= version) {
+            self.pending_commit = None;
+        }
         CommitResult::Applied
+    }
+
+    /// Asynchronous commit entry point (the hub's mailbox delivery): apply
+    /// immediately if the actor is at a safe point, otherwise park the
+    /// request and return [`CommitResult::Deferred`] — it lands via
+    /// [`on_safe_point`](Self::on_safe_point) between generation batches.
+    /// A newer deferred request supersedes an older one (the later delta
+    /// chains through `commit_chain`-style catch-up on apply).
+    pub fn request_commit(&mut self, version: u64) -> CommitResult {
+        if self.generating {
+            let v = self.pending_commit.map_or(version, |p| p.max(version));
+            self.pending_commit = Some(v);
+            return CommitResult::Deferred;
+        }
+        self.commit(version)
+    }
+
+    /// Safe-point hook: called by the generation loop between batches
+    /// (`generating == false`). Applies a commit parked by
+    /// [`request_commit`](Self::request_commit), chaining through any
+    /// intermediate staged versions, and reports what happened.
+    /// `None` when nothing was pending (or no safe point yet).
+    pub fn on_safe_point(&mut self) -> Option<(u64, CommitResult)> {
+        if self.generating {
+            return None;
+        }
+        let v = self.pending_commit.take()?;
+        // Chain intermediate versions so a deferred v+k lands from v.
+        while self.active_version < v.saturating_sub(1) && self.commit(self.active_version + 1) == CommitResult::Applied {}
+        Some((v, self.commit(v)))
+    }
+
+    pub fn has_pending_commit(&self) -> bool {
+        self.pending_commit.is_some()
     }
 
     /// Catch-up: apply every staged version that chains from the active
@@ -284,6 +328,64 @@ mod tests {
         st.stage_checkpoint(c1);
         st.set_generating(true);
         st.commit(1);
+    }
+
+    #[test]
+    fn commit_mid_generation_batch_is_deferred_to_the_safe_point() {
+        // The pipelined runtime's invariant: a Commit arriving while a
+        // generation batch runs must never apply under `generating == true`;
+        // it parks and lands at the next inter-batch safe point.
+        let (l, p0) = setup();
+        let p1 = perturbed(&p0, 21);
+        let c1 = ckpt(&l, &p0, &p1, 0, 1);
+        let mut st = PolicyState::new(l, p0.clone(), 0);
+        st.set_generating(true);
+        for s in split_into_segments(1, &c1.bytes, 64) {
+            st.on_segment(s).unwrap(); // staging is allowed mid-generation
+        }
+        assert!(st.is_staged(1));
+        assert_eq!(st.request_commit(1), CommitResult::Deferred);
+        assert!(st.has_pending_commit());
+        assert_eq!(st.active_version(), 0, "never applied mid-batch");
+        assert_eq!(st.params(), &p0, "policy untouched mid-batch");
+        assert_eq!(st.on_safe_point(), None, "still generating: no safe point");
+        st.set_generating(false);
+        assert_eq!(st.on_safe_point(), Some((1, CommitResult::Applied)));
+        assert_eq!(st.active_version(), 1);
+        assert_eq!(st.params(), &p1, "bit-exact at the safe point");
+        assert!(!st.has_pending_commit());
+        assert_eq!(st.on_safe_point(), None, "one-shot");
+    }
+
+    #[test]
+    fn deferred_commit_supersedes_and_chains() {
+        let (l, p0) = setup();
+        let p1 = perturbed(&p0, 22);
+        let p2 = perturbed(&p1, 23);
+        let c1 = ckpt(&l, &p0, &p1, 0, 1);
+        let c2 = ckpt(&l, &p1, &p2, 1, 2);
+        let mut st = PolicyState::new(l, p0, 0);
+        st.set_generating(true);
+        st.stage_checkpoint(c1);
+        st.stage_checkpoint(c2);
+        assert_eq!(st.request_commit(1), CommitResult::Deferred);
+        assert_eq!(st.request_commit(2), CommitResult::Deferred);
+        st.set_generating(false);
+        // The newest request wins and chains through v1.
+        assert_eq!(st.on_safe_point(), Some((2, CommitResult::Applied)));
+        assert_eq!(st.active_version(), 2);
+        assert_eq!(st.params(), &p2);
+    }
+
+    #[test]
+    fn request_commit_at_safe_point_applies_immediately() {
+        let (l, p0) = setup();
+        let p1 = perturbed(&p0, 24);
+        let c1 = ckpt(&l, &p0, &p1, 0, 1);
+        let mut st = PolicyState::new(l, p0, 0);
+        st.stage_checkpoint(c1);
+        assert_eq!(st.request_commit(1), CommitResult::Applied);
+        assert_eq!(st.params(), &p1);
     }
 
     #[test]

@@ -8,10 +8,10 @@ pub mod sparsity;
 use crate::util::cli::Args;
 use anyhow::{bail, Result};
 
-/// All experiment ids, in paper order.
+/// All experiment ids, in paper order (plus repo-specific extras).
 pub const ALL: &[&str] = &[
     "table2", "fig3", "fig4", "table4", "fig8", "fig9", "fig10", "fig11",
-    "table5", "fig12", "fig13", "table6", "table7",
+    "table5", "fig12", "fig13", "table6", "table7", "overlap",
 ];
 
 /// Dispatch one experiment by id.
@@ -30,6 +30,7 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         "table5" => e2e::table5(args),
         "table6" => e2e::table6(args),
         "table7" => e2e::table7(args),
+        "overlap" => e2e::overlap(args),
         "all" => {
             for id in ALL {
                 println!("\n################ {id} ################");

@@ -14,9 +14,30 @@
 //! which also prevents stale rollouts from poisoning training.
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::time::Instant;
 
 pub type PromptId = u64;
 pub type ActorId = u32;
+
+/// Monotonic wall-clock source for lease timestamps. The ledger itself is
+/// clock-agnostic (`issue`/`submit`/`expire` take `now`); the simulator
+/// passes virtual event time, while the real runtimes (`rt/local`,
+/// `rt/pipeline`) anchor a `WallClock` at run start so in-flight work —
+/// rollouts generating concurrently with training — is leased against
+/// actual elapsed seconds and genuinely expires on stalls.
+#[derive(Clone, Copy, Debug)]
+pub struct WallClock(Instant);
+
+impl WallClock {
+    pub fn start() -> WallClock {
+        WallClock(Instant::now())
+    }
+
+    /// Seconds since the clock was started (monotone, never negative).
+    pub fn now(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
 
 /// Lease policy: duration = clamp(multiplier * median completion).
 #[derive(Clone, Copy, Debug)]
@@ -239,6 +260,20 @@ mod tests {
         let mut l = JobLedger::new(LeasePolicy { multiplier: 2.0, min_s: 10.0, max_s: 100.0 });
         l.post(0..10);
         l
+    }
+
+    #[test]
+    fn wall_clock_is_monotone_and_drives_lease_expiry() {
+        let c = WallClock::start();
+        let a = c.now();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let b = c.now();
+        assert!(a >= 0.0 && b > a, "monotone: {a} -> {b}");
+        // A lease issued at wall time `a` is still valid "now" (real leases
+        // are >= min_s seconds long, far beyond this test's runtime).
+        let mut l = ledger();
+        let p = l.issue(1, 5, H, a, 1)[0];
+        assert!(l.submit(1, p, 5, H, c.now()).is_ok());
     }
 
     #[test]

@@ -10,7 +10,7 @@
 use sparrowrl::config;
 use sparrowrl::data::Benchmark;
 use sparrowrl::exp;
-use sparrowrl::rt::{run_local, LocalRunConfig};
+use sparrowrl::rt::{run_local_mode, ExecMode, LocalRunConfig};
 use sparrowrl::sim::driver::{run as sim_run, SimConfig};
 use sparrowrl::sim::{RegionSpec, System};
 use sparrowrl::trainer::Algorithm;
@@ -19,7 +19,7 @@ use sparrowrl::util::cli::Args;
 fn usage() -> ! {
     eprintln!(
         "usage:\n  sparrowrl exp <{}|all> [--flags]\n  sparrowrl train [--model sparrow-xs] \
-         [--steps N] [--sft-steps N] [--algorithm grpo|rloo|opo] [--lr-rl X] [--actors N] [--seed S]\n  \
+         [--steps N] [--sft-steps N] [--algorithm grpo|rloo|opo] [--lr-rl X] [--actors N] [--seed S] [--pipelined] [--gantt]\n  \
          sparrowrl sim [--model qwen3-8b] [--system sparrow|full|ms|ideal] [--bench gsm8k|math|deepscaler] [--steps N]\n  \
          sparrowrl list",
         exp::ALL.join("|")
@@ -66,21 +66,30 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.bench = Benchmark::parse(&args.str_or("bench", "gsm8k"))
         .ok_or_else(|| anyhow::anyhow!("bad --bench"))?;
     cfg.verbose = true;
+    let mode = if args.flag("pipelined") { ExecMode::Pipelined } else { ExecMode::Sequential };
     println!(
-        "training {model} with {} on {} ({} actors, {} SFT + {} RL steps)",
+        "training {model} with {} on {} ({} actors, {} SFT + {} RL steps, {} executor)",
         cfg.algorithm.name(),
         cfg.bench.name(),
         cfg.n_actors,
         cfg.sft_steps,
-        cfg.steps
+        cfg.steps,
+        mode.name(),
     );
-    let report = run_local(&cfg)?;
+    let report = run_local_mode(&cfg, mode)?;
     println!(
-        "\ndone: {} versions, mean rho {:.3}%, wall {:.1}s",
+        "\ndone: {} versions, mean rho {:.3}%, wall {:.1}s, hidden sync {:.0}%",
         report.final_version,
         report.mean_rho() * 100.0,
-        report.wall_s
+        report.wall_s,
+        report.timeline.overlap_ratio(
+            "trainer",
+            &[sparrowrl::metrics::SpanKind::Train, sparrowrl::metrics::SpanKind::Extract],
+        ) * 100.0,
     );
+    if args.flag("gantt") {
+        print!("{}", report.timeline.ascii_gantt(100));
+    }
     Ok(())
 }
 

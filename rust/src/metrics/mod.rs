@@ -62,6 +62,56 @@ impl Timeline {
         self.spans.iter().map(|s| s.end).fold(0.0, f64::max)
     }
 
+    /// Merge the spans of `kind` recorded by entities *other than*
+    /// `exclude` into a sorted union of disjoint intervals.
+    fn merged_windows(&self, exclude: &str, kind: SpanKind) -> Vec<(f64, f64)> {
+        let mut iv: Vec<(f64, f64)> = self
+            .spans
+            .iter()
+            .filter(|s| s.entity != exclude && s.kind == kind && s.end > s.start)
+            .map(|s| (s.start, s.end))
+            .collect();
+        iv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut out: Vec<(f64, f64)> = Vec::with_capacity(iv.len());
+        for (a, b) in iv {
+            match out.last_mut() {
+                Some(last) if a <= last.1 => last.1 = last.1.max(b),
+                _ => out.push((a, b)),
+            }
+        }
+        out
+    }
+
+    /// Fraction of `entity`'s time in `kinds` that other entities covered
+    /// with Rollout spans — the paper's pipelining metric: how much of the
+    /// synchronization path (train / extract / transfer) was *hidden*
+    /// inside the generation window. 0.0 for a strictly sequential run,
+    /// approaching 1.0 when sync is fully off the critical path.
+    pub fn overlap_ratio(&self, entity: &str, kinds: &[SpanKind]) -> f64 {
+        let windows = self.merged_windows(entity, SpanKind::Rollout);
+        let mut sync = 0.0;
+        let mut hidden = 0.0;
+        for s in self
+            .spans
+            .iter()
+            .filter(|s| s.entity == entity && kinds.contains(&s.kind))
+        {
+            sync += s.end - s.start;
+            for &(a, b) in &windows {
+                let lo = s.start.max(a);
+                let hi = s.end.min(b);
+                if hi > lo {
+                    hidden += hi - lo;
+                }
+            }
+        }
+        if sync <= 0.0 {
+            0.0
+        } else {
+            hidden / sync
+        }
+    }
+
     pub fn to_jsonl(&self) -> String {
         let mut out = String::new();
         for s in &self.spans {
@@ -183,6 +233,26 @@ mod tests {
         assert!(g.contains("actor0"));
         assert!(g.contains('T'));
         assert!(g.contains('R'));
+    }
+
+    #[test]
+    fn overlap_ratio_measures_hidden_sync_time() {
+        let mut t = Timeline::default();
+        // Two actors generate 0-10 and 2-6; trainer syncs 4-8 (train) and
+        // 8-12 (extract). Rollout union = [0,10]; hidden = 4 + 2 of 8.
+        t.record("actor0", SpanKind::Rollout, 0.0, 10.0, 1);
+        t.record("actor1", SpanKind::Rollout, 2.0, 6.0, 1);
+        t.record("trainer", SpanKind::Train, 4.0, 8.0, 1);
+        t.record("trainer", SpanKind::Extract, 8.0, 12.0, 1);
+        let r = t.overlap_ratio("trainer", &[SpanKind::Train, SpanKind::Extract]);
+        assert!((r - 0.75).abs() < 1e-9, "r={r}");
+        // A strictly sequential trace hides nothing.
+        let mut seq = Timeline::default();
+        seq.record("actor0", SpanKind::Rollout, 0.0, 5.0, 1);
+        seq.record("trainer", SpanKind::Train, 5.0, 9.0, 1);
+        assert_eq!(seq.overlap_ratio("trainer", &[SpanKind::Train]), 0.0);
+        // No sync spans at all: defined as 0.
+        assert_eq!(seq.overlap_ratio("trainer", &[SpanKind::Commit]), 0.0);
     }
 
     #[test]

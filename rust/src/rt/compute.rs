@@ -1,0 +1,251 @@
+//! Compute backends for the local runtimes.
+//!
+//! The RL loop (`rt/pipeline.rs`) is generic over a [`Compute`]: the PJRT
+//! [`Engines`] implement it for real artifact execution, and
+//! [`SyntheticCompute`] provides a deterministic, dependency-free stand-in
+//! so the pipelined executor, its equivalence tests, and the overlap
+//! benchmark all run in environments without compiled artifacts. The
+//! synthetic backend is *honest about data flow*: generations depend on
+//! the served policy bits and training mutates the master weights, so a
+//! runtime bug that serves the wrong policy version or tears a commit
+//! changes observable output.
+
+use crate::actor::rollout::{generate_batch, Generation, SampleCfg};
+use crate::delta::ParamSet;
+use crate::runtime::{Engines, TrainState};
+use crate::util::Rng;
+use anyhow::Result;
+use std::time::Duration;
+
+/// Fixed batch geometry a compute backend executes.
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeShape {
+    pub b_train: usize,
+    pub b_gen: usize,
+    pub max_seq: usize,
+}
+
+/// What the RL loop needs from a model executor. `Sync` because the
+/// pipelined runtime shares one backend across actor worker threads.
+pub trait Compute: Sync {
+    fn shape(&self) -> ComputeShape;
+
+    /// One optimizer step in place on `state`; returns the loss.
+    fn train_step(
+        &self,
+        state: &mut TrainState,
+        tokens: &[i32],
+        mask: &[f32],
+        adv: &[f32],
+        lr: f32,
+    ) -> Result<f32>;
+
+    /// Sample completions for up to `b_gen` prompts on `policy`.
+    fn generate(
+        &self,
+        policy: &ParamSet,
+        prompts: &[Vec<i32>],
+        cfg: SampleCfg,
+        rng: &mut Rng,
+    ) -> Result<Vec<Generation>>;
+}
+
+impl Compute for Engines {
+    fn shape(&self) -> ComputeShape {
+        ComputeShape {
+            b_train: self.manifest.b_train,
+            b_gen: self.manifest.b_gen,
+            max_seq: self.manifest.max_seq,
+        }
+    }
+
+    fn train_step(
+        &self,
+        state: &mut TrainState,
+        tokens: &[i32],
+        mask: &[f32],
+        adv: &[f32],
+        lr: f32,
+    ) -> Result<f32> {
+        Engines::train_step(self, state, tokens, mask, adv, lr)
+    }
+
+    fn generate(
+        &self,
+        policy: &ParamSet,
+        prompts: &[Vec<i32>],
+        cfg: SampleCfg,
+        rng: &mut Rng,
+    ) -> Result<Vec<Generation>> {
+        generate_batch(self, policy, prompts, cfg, rng)
+    }
+}
+
+/// Deterministic artifact-free backend. Optional per-call delays emulate
+/// accelerator latency so overlap benchmarks measure real concurrency.
+#[derive(Clone, Debug)]
+pub struct SyntheticCompute {
+    pub shape: ComputeShape,
+    pub vocab: usize,
+    /// Sleep per `train_step` call (zero in unit tests).
+    pub train_delay: Duration,
+    /// Sleep per `generate` call (one generation batch).
+    pub gen_delay: Duration,
+}
+
+impl SyntheticCompute {
+    pub fn new(b_train: usize, b_gen: usize, max_seq: usize) -> SyntheticCompute {
+        SyntheticCompute {
+            shape: ComputeShape { b_train, b_gen, max_seq },
+            vocab: 64,
+            train_delay: Duration::ZERO,
+            gen_delay: Duration::ZERO,
+        }
+    }
+
+    /// Attach emulated compute latencies (for overlap benchmarking).
+    pub fn with_delays(mut self, train: Duration, gen: Duration) -> SyntheticCompute {
+        self.train_delay = train;
+        self.gen_delay = gen;
+        self
+    }
+
+    /// FNV-1a fingerprint of a strided sample of the policy bits: cheap,
+    /// but any committed delta perturbs it with overwhelming probability.
+    fn policy_fingerprint(policy: &ParamSet) -> u64 {
+        let mut fp = 0xcbf2_9ce4_8422_2325u64;
+        for t in &policy.tensors {
+            let stride = (t.len() / 64).max(1);
+            for b in t.iter().step_by(stride) {
+                fp = (fp ^ b.to_bits() as u64).wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        fp
+    }
+}
+
+impl Compute for SyntheticCompute {
+    fn shape(&self) -> ComputeShape {
+        self.shape
+    }
+
+    fn train_step(
+        &self,
+        state: &mut TrainState,
+        tokens: &[i32],
+        _mask: &[f32],
+        adv: &[f32],
+        lr: f32,
+    ) -> Result<f32> {
+        if !self.train_delay.is_zero() {
+            std::thread::sleep(self.train_delay);
+        }
+        state.step += 1;
+        // Deterministic pseudo-gradient seeded by the batch content and the
+        // optimizer step, so identical inputs => identical new weights.
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut mix = |x: u64| {
+            h = (h ^ x).wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        for &t in tokens {
+            mix(t as u32 as u64);
+        }
+        for &a in adv {
+            mix(a.to_bits() as u64);
+        }
+        mix(state.step);
+        let mut rng = Rng::new(h);
+        for t in state.masters.iter_mut() {
+            let touched = (t.len() / 128).max(1);
+            for _ in 0..touched {
+                let i = rng.range(0, t.len());
+                t[i] -= lr * (rng.f32() * 2.0 - 1.0);
+            }
+        }
+        Ok(1.0 / (state.step as f32).sqrt())
+    }
+
+    fn generate(
+        &self,
+        policy: &ParamSet,
+        prompts: &[Vec<i32>],
+        cfg: SampleCfg,
+        rng: &mut Rng,
+    ) -> Result<Vec<Generation>> {
+        assert!(prompts.len() <= self.shape.b_gen, "{} prompts > b_gen", prompts.len());
+        if !self.gen_delay.is_zero() {
+            std::thread::sleep(self.gen_delay);
+        }
+        let fp = Self::policy_fingerprint(policy);
+        let mut out = Vec::with_capacity(prompts.len());
+        for p in prompts {
+            let prompt_len = p.len().min(self.shape.max_seq - 1);
+            let mut tokens = p[..prompt_len].to_vec();
+            let room = self.shape.max_seq - prompt_len;
+            for _ in 0..cfg.max_new_tokens.min(room) {
+                // Token stream depends on both the RNG lane and the policy
+                // bits; avoid PAD/EOS so lengths stay deterministic.
+                let r = rng.next_u64() ^ fp;
+                tokens.push(3 + (r % (self.vocab as u64 - 3)) as i32);
+            }
+            out.push(Generation { prompt_len, tokens });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::ModelLayout;
+
+    fn setup() -> (ModelLayout, SyntheticCompute) {
+        (ModelLayout::transformer("synown", 64, 16, 2, 32), SyntheticCompute::new(8, 4, 32))
+    }
+
+    #[test]
+    fn synthetic_train_is_deterministic_and_mutates_weights() {
+        let (l, c) = setup();
+        let mut rng = Rng::new(1);
+        let mut a = TrainState::init(&l, &mut rng);
+        let before = a.to_policy();
+        let tokens = vec![5i32; 8 * 32];
+        let mask = vec![1.0f32; 8 * 32];
+        let adv = vec![0.5f32; 8];
+        let la = c.train_step(&mut a, &tokens, &mask, &adv, 1e-2).unwrap();
+        let mut rng2 = Rng::new(1);
+        let mut b = TrainState::init(&l, &mut rng2);
+        let lb = c.train_step(&mut b, &tokens, &mask, &adv, 1e-2).unwrap();
+        assert_eq!(la, lb);
+        assert_eq!(a.to_policy(), b.to_policy(), "same inputs, same weights");
+        assert_ne!(a.to_policy(), before, "training changed the policy");
+    }
+
+    #[test]
+    fn synthetic_generation_depends_on_policy_and_rng() {
+        let (l, c) = setup();
+        let mut rng = Rng::new(2);
+        let st = TrainState::init(&l, &mut rng);
+        let p0 = st.to_policy();
+        let prompts = vec![vec![4, 5, 6], vec![7, 8]];
+        let cfg = SampleCfg { temperature: 0.8, max_new_tokens: 4 };
+        let a = c.generate(&p0, &prompts, cfg, &mut Rng::new(7)).unwrap();
+        let b = c.generate(&p0, &prompts, cfg, &mut Rng::new(7)).unwrap();
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].tokens, b[0].tokens, "same policy + seed => same tokens");
+        // A different policy changes the completions (stale vs fresh matters).
+        let mut st2 = TrainState::init(&l, &mut Rng::new(3));
+        let tokens = vec![5i32; 8 * 32];
+        c.train_step(&mut st2, &tokens, &[1.0; 256], &[1.0; 8], 5e-2).unwrap();
+        let p1 = st2.to_policy();
+        assert_ne!(p1, p0);
+        let d = c.generate(&p1, &prompts, cfg, &mut Rng::new(7)).unwrap();
+        assert_ne!(a[0].tokens, d[0].tokens, "policy bits reach the output");
+        // Shape invariants.
+        for (g, p) in a.iter().zip(&prompts) {
+            assert_eq!(g.prompt_len, p.len());
+            assert_eq!(g.tokens.len(), p.len() + 4);
+            assert!(g.tokens[g.prompt_len..].iter().all(|&t| t >= 3));
+        }
+    }
+}

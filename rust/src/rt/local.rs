@@ -1,28 +1,30 @@
 //! In-process SparrowRL runtime: the paper's full loop on real compute.
 //!
-//! Per step: the Job Ledger issues prompts under leases; actors generate
-//! rollout groups through the PJRT policy artifact (Pallas attention);
-//! rewards + GRPO/RLOO/OPO advantages feed the train-step artifact; the
-//! new bf16 policy is diffed into a sealed delta checkpoint, segmented,
-//! streamed to every actor's staging buffer, and committed at a safe
-//! point. An optional SFT warmup phase reuses the same train-step artifact
-//! with advantage 1 and gold completions.
+//! Per step: the Job Ledger issues prompts under real-clock leases; actors
+//! generate rollout groups through the PJRT policy artifact (Pallas
+//! attention); rewards + GRPO/RLOO/OPO advantages feed the train-step
+//! artifact; the new bf16 policy is diffed into a sealed delta checkpoint,
+//! segmented, streamed to every actor's staging decoder, and committed at
+//! a safe point. An optional SFT warmup phase reuses the same train-step
+//! artifact with advantage 1 and gold completions.
 //!
-//! Everything the distributed runtime does happens here except sockets —
-//! transfer runs through the same segment/reassembly/staging code paths,
-//! so bit-exactness of actor policies is asserted against the trainer's.
+//! The loop itself lives in [`crate::rt::pipeline`] and runs under either
+//! executor: [`ExecMode::Sequential`] (phase-sequential reference) or
+//! [`ExecMode::Pipelined`] (generation overlaps training + delta
+//! streaming, the paper's §2.1/Fig 7 schedule). Everything the distributed
+//! runtime does happens here except sockets — transfer runs through the
+//! same segment/reassembly/staging code paths, so bit-exactness of actor
+//! policies is asserted against the trainer's in both modes.
 
 use crate::actor::rollout::{generate_batch, SampleCfg};
-use crate::actor::{CommitResult, PolicyState};
-use crate::data::{pack_batch, Benchmark, Task};
-use crate::delta::{CheckpointStore, ParamSet};
-use crate::ledger::{JobLedger, LeasePolicy};
-use crate::runtime::{Engines, TrainState};
-use crate::scheduler::{Scheduler, SchedulerConfig, VersionState};
-use crate::trainer::{group_advantages, Algorithm, Rollout};
+use crate::data::{Benchmark, Task};
+use crate::delta::ParamSet;
+use crate::metrics::Timeline;
+use crate::rt::pipeline::{run_with_compute, ExecMode};
+use crate::runtime::Engines;
+use crate::trainer::Algorithm;
 use crate::util::Rng;
 use anyhow::{bail, Context, Result};
-use std::time::Instant;
 
 /// Configuration for a local end-to-end run.
 #[derive(Clone, Debug)]
@@ -45,6 +47,11 @@ pub struct LocalRunConfig {
     pub seed: u64,
     /// Print per-step progress lines.
     pub verbose: bool,
+    /// Replace wall-clock lease/settlement time with deterministic virtual
+    /// time so a seed fully determines the run — the sequential and
+    /// pipelined executors then produce bit-identical results (used by the
+    /// equivalence tests; leave off for real throughput measurements).
+    pub deterministic: bool,
 }
 
 impl LocalRunConfig {
@@ -64,6 +71,7 @@ impl LocalRunConfig {
             segment_bytes: 16 << 10,
             seed: 0,
             verbose: false,
+            deterministic: false,
         }
     }
 }
@@ -82,6 +90,10 @@ pub struct StepLog {
     pub extract_ms: f64,
     pub train_ms: f64,
     pub rollout_ms: f64,
+    /// SHA-256 of the trainer policy committed by this step's train pass
+    /// (every actor acknowledged the same digest — the bit-exactness
+    /// witness, and the cross-executor equivalence probe).
+    pub policy_checksum: [u8; 32],
 }
 
 /// Result of a local run.
@@ -90,6 +102,11 @@ pub struct RunReport {
     pub steps: Vec<StepLog>,
     pub final_version: u64,
     pub wall_s: f64,
+    /// Measured execution spans (rollout/train/extract/transfer/commit)
+    /// — the real-runtime counterpart of the simulator's Figure 9 trace;
+    /// `timeline.overlap_ratio(..)` quantifies how much synchronization
+    /// the pipelined executor hid inside the generation window.
+    pub timeline: Timeline,
 }
 
 impl RunReport {
@@ -110,231 +127,20 @@ impl RunReport {
     }
 }
 
-/// Run the full loop. See module docs.
-pub fn run_local(cfg: &LocalRunConfig) -> Result<RunReport> {
-    let wall0 = Instant::now();
+/// Run the full loop on PJRT artifacts with the chosen executor.
+pub fn run_local_mode(cfg: &LocalRunConfig, mode: ExecMode) -> Result<RunReport> {
     let spec = crate::config::model(&cfg.model)
         .with_context(|| format!("unknown model {}", cfg.model))?;
     if !spec.runnable {
         bail!("{} is analytic-only; pick a sparrow-* model", cfg.model);
     }
     let eng = Engines::load(&crate::runtime::artifacts_dir(), &cfg.model)?;
-    let mut rng = Rng::new(cfg.seed);
-    let mut state = TrainState::init(&spec.layout, &mut rng);
-    let b_train = eng.manifest.b_train;
-    let b_gen = eng.manifest.b_gen;
-    let t = eng.manifest.max_seq;
-    if cfg.group_size > b_gen {
-        bail!("group_size {} exceeds artifact b_gen {}", cfg.group_size, b_gen);
-    }
-
-    // ---------------- SFT warmup: same artifact, adv = 1 ----------------
-    let mut sft_losses = Vec::new();
-    let mut task_counter: u64 = 0;
-    for _ in 0..cfg.sft_steps {
-        let pairs: Vec<(Vec<i32>, Vec<i32>)> = (0..b_train)
-            .map(|_| {
-                task_counter += 1;
-                let task = Task::from_prompt_id(task_counter, cfg.bench);
-                (task.prompt_tokens(), task.answer_tokens())
-            })
-            .collect();
-        let batch = pack_batch(&pairs, b_train, t);
-        let adv = vec![1.0f32; b_train];
-        let loss = eng.train_step(&mut state, &batch.tokens, &batch.gen_mask, &adv, cfg.lr_sft)?;
-        sft_losses.push(loss);
-    }
-
-    // ---------------- RL phase ------------------------------------------
-    let mut version: u64 = 0;
-    let mut policy = state.to_policy();
-    let mut store = CheckpointStore::in_memory();
-    let mut ledger = JobLedger::new(LeasePolicy::default());
-    let mut sched = Scheduler::new(SchedulerConfig::default());
-    let mut actors: Vec<PolicyState> = (0..cfg.n_actors)
-        .map(|_| PolicyState::new(spec.layout.clone(), policy.clone(), 0))
-        .collect();
-    for i in 0..cfg.n_actors {
-        sched.register(i as u32, 1000.0);
-        sched.observe_version(i as u32, VersionState { active: 0, staged: None });
-    }
-    // Version-0 "hash": the genesis policy has no checkpoint; use zeros.
-    let mut version_hash = [0u8; 32];
-    let prompts_per_step = b_train / cfg.group_size;
-    let mut steps = Vec::new();
-    let mut clock = 0.0f64; // logical seconds for lease bookkeeping
-
-    for step in 0..cfg.steps {
-        // -- issue prompts under leases --------------------------------
-        let prompt_ids: Vec<u64> = (0..prompts_per_step)
-            .map(|_| {
-                task_counter += 1;
-                task_counter
-            })
-            .collect();
-        ledger.post(prompt_ids.iter().copied());
-        let assignments = sched.allocate(version, prompts_per_step as u64);
-        if assignments.is_empty() {
-            bail!("no eligible actors at step {step}");
-        }
-
-        // -- rollout generation (real PJRT) ----------------------------
-        let t_roll = Instant::now();
-        let mut rollouts: Vec<Rollout> = Vec::new();
-        let mut gen_tokens = 0u64;
-        for asg in &assignments {
-            let actor = asg.actor as usize;
-            let claimed = ledger.issue(asg.actor, version, version_hash, clock, asg.requests as usize);
-            let policy_ref = actors[actor].params().clone();
-            actors[actor].set_generating(true);
-            for chunk in claimed.chunks(b_gen / cfg.group_size) {
-                // One generation batch holds group_size samples per prompt.
-                let mut prompts = Vec::new();
-                for &pid in chunk {
-                    let task = Task::from_prompt_id(pid, cfg.bench);
-                    for _ in 0..cfg.group_size {
-                        prompts.push(task.prompt_tokens());
-                    }
-                }
-                let gens = generate_batch(
-                    &eng,
-                    &policy_ref,
-                    &prompts,
-                    SampleCfg {
-                        temperature: cfg.temperature,
-                        max_new_tokens: cfg.max_new_tokens,
-                    },
-                    &mut rng,
-                )?;
-                for (gi, g) in gens.iter().enumerate() {
-                    let pid = chunk[gi / cfg.group_size];
-                    let task = Task::from_prompt_id(pid, cfg.bench);
-                    let completion = &g.tokens[g.prompt_len..];
-                    gen_tokens += completion.len() as u64;
-                    rollouts.push(Rollout {
-                        prompt_id: pid,
-                        actor: asg.actor,
-                        version,
-                        prompt_tokens: g.tokens[..g.prompt_len].to_vec(),
-                        generated_tokens: completion.to_vec(),
-                        reward: task.reward(completion),
-                    });
-                }
-            }
-            actors[actor].set_generating(false);
-            clock += 1.0;
-            // Submit under the acceptance predicate.
-            for &pid in &claimed {
-                ledger
-                    .submit(asg.actor, pid, version, version_hash, clock)
-                    .map_err(|e| anyhow::anyhow!("ledger rejected {pid}: {e:?}"))?;
-            }
-            sched.settle(asg.actor, gen_tokens, t_roll.elapsed().as_secs_f64().max(1e-3));
-        }
-        let rollout_ms = t_roll.elapsed().as_secs_f64() * 1e3;
-        let mean_reward =
-            rollouts.iter().map(|r| r.reward).sum::<f32>() / rollouts.len().max(1) as f32;
-
-        // -- advantages + train step ------------------------------------
-        let adv = group_advantages(&rollouts, cfg.algorithm);
-        let pairs: Vec<(Vec<i32>, Vec<i32>)> = rollouts
-            .iter()
-            .map(|r| (r.prompt_tokens.clone(), r.generated_tokens.clone()))
-            .collect();
-        let batch = pack_batch(&pairs, b_train, t);
-        let mut adv_padded = vec![0.0f32; b_train];
-        adv_padded[..adv.len()].copy_from_slice(&adv);
-        let t_train = Instant::now();
-        let loss = eng.train_step(&mut state, &batch.tokens, &batch.gen_mask, &adv_padded, cfg.lr_rl)?;
-        let train_ms = t_train.elapsed().as_secs_f64() * 1e3;
-
-        // -- fused delta extraction + encode + segment + stream ----------
-        // One pass: segments hit every actor's staging decoder while later
-        // tensors are still being scanned (paper §5.2 pipelining). The
-        // sealed artifact for the store is assembled from the same bytes.
-        let t_extract = Instant::now();
-        let new_policy = state.to_policy();
-        let mut stream_err: Option<String> = None;
-        let (ckpt, stream_stats) = crate::trainer::stream_checkpoint(
-            &spec.layout,
-            &policy,
-            &new_policy,
-            version,
-            version + 1,
-            cfg.segment_bytes,
-            |seg| {
-                for (i, actor) in actors.iter_mut().enumerate() {
-                    if let Err(e) = actor.on_segment(seg.clone()) {
-                        stream_err.get_or_insert(format!("actor {i} staging: {e}"));
-                    }
-                }
-            },
-        );
-        if let Some(e) = stream_err {
-            bail!("{e}");
-        }
-        let extract_ms = t_extract.elapsed().as_secs_f64() * 1e3;
-        let rho = stream_stats.nnz as f64 / spec.total_params() as f64;
-        let payload = ckpt.payload_bytes();
-        store.put(ckpt.clone())?;
-
-        // -- commit at the safe point ------------------------------------
-        commit_all(&mut actors, ckpt.version)?;
-        version += 1;
-        version_hash = ckpt.hash;
-        policy = new_policy;
-        for (i, a) in actors.iter().enumerate() {
-            // Bit-exactness: every actor's policy equals the trainer's.
-            if a.params() != &policy {
-                bail!("actor {i} diverged from trainer policy at v{version}");
-            }
-            sched.observe_version(i as u32, VersionState { active: version, staged: None });
-        }
-
-        let log = StepLog {
-            step,
-            loss,
-            mean_reward,
-            rho,
-            payload_bytes: payload,
-            dense_bytes: spec.dense_bytes_bf16(),
-            gen_tokens,
-            extract_ms,
-            train_ms,
-            rollout_ms,
-        };
-        if cfg.verbose {
-            println!(
-                "step {:>3}  loss {:>8.4}  reward {:>5.3}  rho {:>7.4}%  payload {:>10}  ({}x smaller)  gen {:>5} tok",
-                step,
-                loss,
-                mean_reward,
-                rho * 100.0,
-                crate::util::fmt_bytes(payload),
-                (spec.dense_bytes_bf16() / payload.max(1)),
-                gen_tokens,
-            );
-        }
-        steps.push(log);
-    }
-
-    Ok(RunReport {
-        sft_losses,
-        steps,
-        final_version: version,
-        wall_s: wall0.elapsed().as_secs_f64(),
-    })
+    run_with_compute(cfg, &spec.layout, &eng, mode)
 }
 
-/// Commit a fully staged version on every actor at the safe point.
-fn commit_all(actors: &mut [PolicyState], version: u64) -> Result<()> {
-    for (i, actor) in actors.iter_mut().enumerate() {
-        match actor.commit(version) {
-            CommitResult::Applied => {}
-            other => bail!("actor {i} commit failed: {other:?}"),
-        }
-    }
-    Ok(())
+/// Run the full loop with the phase-sequential executor. See module docs.
+pub fn run_local(cfg: &LocalRunConfig) -> Result<RunReport> {
+    run_local_mode(cfg, ExecMode::Sequential)
 }
 
 /// Evaluate greedy accuracy of the current trainer policy on `n` fresh

@@ -2,11 +2,20 @@
 //!
 //! `local` runs trainer + N rollout actors in one process against the AOT
 //! PJRT artifacts, with real delta checkpoints flowing trainer -> segments
-//! -> staged activation, the real Job Ledger (leases + acceptance
-//! predicate) and the real Algorithm-1 scheduler. `net` adds the
-//! TCP transport so the same loop runs across processes.
+//! -> staged activation, the real Job Ledger (real-clock leases +
+//! acceptance predicate) and the real Algorithm-1 scheduler. `pipeline`
+//! holds the step logic and both executors — the phase-sequential
+//! reference and the overlapped one-step async runtime (worker thread per
+//! actor, training/delta-streaming hidden inside the generation window).
+//! `compute` abstracts the model backend (PJRT artifacts or the
+//! deterministic synthetic engine). `net` adds the TCP transport so the
+//! same loop runs across processes.
 
+pub mod compute;
 pub mod local;
 pub mod net;
+pub mod pipeline;
 
-pub use local::{run_local, LocalRunConfig, RunReport, StepLog};
+pub use compute::{Compute, ComputeShape, SyntheticCompute};
+pub use local::{evaluate, run_local, run_local_mode, LocalRunConfig, RunReport, StepLog};
+pub use pipeline::{policy_checksum, run_with_compute, ExecMode};

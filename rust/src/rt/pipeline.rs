@@ -1,0 +1,947 @@
+//! Overlapped one-step async runtime (paper §2.1, Fig 7, §5.2).
+//!
+//! The paper's throughput claim rests on *hiding* synchronization inside
+//! the generation window: while actors generate batch `s` on the stale
+//! policy `v_{s-1}`, the Trainer Hub trains on batch `s-1`, extracts and
+//! streams `D_{v_s}` into every actor's staging decoder mid-generation,
+//! and Commit lands at each actor's next safe point (between generation
+//! batches) — no global barrier. This module implements that schedule
+//! twice over the *same* step logic:
+//!
+//! * [`ExecMode::Sequential`] — every phase in program order on one
+//!   thread (the reference executor; wall-clock is the sum of phases);
+//! * [`ExecMode::Pipelined`] — one worker thread per actor, each owning
+//!   its [`PolicyState`] behind an mpsc command mailbox, with the hub
+//!   thread training/streaming concurrently with generation.
+//!
+//! Both executors share `plan_step` / `run_gen_job` / `train_and_stream`,
+//! draw per-(step, actor) RNG streams, and assemble training batches in
+//! assignment order, so with `LocalRunConfig::deterministic` the two modes
+//! are **bit-identical**: same committed policies, same per-step rho and
+//! payload bytes, same final version (see `tests/pipeline_equivalence.rs`).
+//! Bit-exactness of actor policies against the trainer is asserted at
+//! every committed version in both modes — cross-thread via a SHA-256
+//! witness ([`policy_checksum`]) carried in the Commit acknowledgement.
+//!
+//! Why the overlap is legal: a generation job snapshots the actor's params
+//! at job start, so a Commit applying between generation batches never
+//! changes in-flight completions — it only moves the *next* job onto the
+//! new version, exactly the paper's staged-activation contract.
+
+use crate::actor::rollout::SampleCfg;
+use crate::actor::{CommitResult, PolicyState};
+use crate::data::{pack_batch, Task};
+use crate::delta::{CheckpointStore, ModelLayout, ParamSet};
+use crate::ledger::{JobLedger, LeasePolicy, Reject, WallClock};
+use crate::metrics::{SpanKind, Timeline};
+use crate::rt::compute::Compute;
+use crate::rt::local::{LocalRunConfig, RunReport, StepLog};
+use crate::runtime::TrainState;
+use crate::scheduler::{Assignment, Scheduler, SchedulerConfig, VersionState};
+use crate::trainer::{group_advantages, stream_checkpoint, Rollout};
+use crate::transport::Segment;
+use crate::util::Rng;
+use anyhow::{anyhow, bail, Result};
+use sha2::{Digest, Sha256};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::time::Instant;
+
+/// Executor choice for the local runtime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Phase-sequential reference executor (rollout, train, extract,
+    /// commit in program order on one thread).
+    Sequential,
+    /// One worker thread per actor; training + delta streaming overlap
+    /// generation; commits land at per-actor safe points.
+    Pipelined,
+}
+
+impl ExecMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::Sequential => "sequential",
+            ExecMode::Pipelined => "pipelined",
+        }
+    }
+}
+
+/// SHA-256 over the policy's bf16 bits in layout order — the witness the
+/// pipelined runtime ships across threads to assert actor == trainer
+/// bit-exactness at every committed version.
+pub fn policy_checksum(p: &ParamSet) -> [u8; 32] {
+    let mut h = Sha256::new();
+    let mut buf: Vec<u8> = Vec::new();
+    for t in &p.tensors {
+        buf.clear();
+        buf.reserve(t.len() * 2);
+        for b in t {
+            buf.extend_from_slice(&b.to_bits().to_le_bytes());
+        }
+        h.update(&buf);
+    }
+    h.finalize()
+}
+
+/// Independent RNG stream per (seed, step, actor): generation draws the
+/// same randomness in both executors regardless of thread interleaving.
+fn job_seed(seed: u64, step: u64, actor: u32) -> u64 {
+    let mut x = seed ^ 0x9E37_79B9_7F4A_7C15;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9).wrapping_add(step);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ ((actor as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// One actor's generation work for one step.
+#[derive(Clone, Debug)]
+struct GenJob {
+    step: u64,
+    /// Policy version the rollouts must be generated on (the lease's v).
+    version: u64,
+    /// Integrity hash of that version's checkpoint (the lease's h).
+    hash: [u8; 32],
+    /// Claimed prompt ids, in lease order.
+    pids: Vec<u64>,
+    rng_seed: u64,
+}
+
+/// Hub -> actor mailbox protocol. Channel FIFO order is the correctness
+/// backbone: segments of `D_v` always precede `Commit(v)`, which always
+/// precedes `Generate` for the step that needs `v` active.
+enum ToActor {
+    Generate(GenJob),
+    /// Delta segment for the staging decoder (consumed mid-generation).
+    Segment(Segment),
+    /// Activate `version` at the next safe point.
+    Commit(u64),
+}
+
+/// Actor -> hub replies. Span timestamps are seconds since the RL phase
+/// origin, measured on the worker.
+enum FromActor {
+    Generated {
+        actor: u32,
+        step: u64,
+        rollouts: Vec<Rollout>,
+        gen_tokens: u64,
+        start_s: f64,
+        end_s: f64,
+    },
+    Committed {
+        actor: u32,
+        version: u64,
+        checksum: [u8; 32],
+        start_s: f64,
+        end_s: f64,
+    },
+    Failed {
+        actor: u32,
+        msg: String,
+    },
+}
+
+/// Run one generation job against `state`. Params are snapshotted at
+/// entry; `at_safe_point` fires between generation batches so staging and
+/// deferred commits can land mid-step without touching in-flight output.
+fn run_gen_job<C: Compute>(
+    comp: &C,
+    cfg: &LocalRunConfig,
+    state: &mut PolicyState,
+    actor: u32,
+    job: &GenJob,
+    mut at_safe_point: impl FnMut(&mut PolicyState) -> Result<(), String>,
+) -> Result<(Vec<Rollout>, u64), String> {
+    if state.active_version() != job.version {
+        return Err(format!(
+            "actor {actor}: generate for v{} but active is v{}",
+            job.version,
+            state.active_version()
+        ));
+    }
+    let shape = comp.shape();
+    let policy_ref = state.params().clone();
+    let mut rng = Rng::new(job.rng_seed);
+    let mut rollouts = Vec::with_capacity(job.pids.len() * cfg.group_size);
+    let mut gen_tokens = 0u64;
+    let sample = SampleCfg { temperature: cfg.temperature, max_new_tokens: cfg.max_new_tokens };
+    for chunk in job.pids.chunks((shape.b_gen / cfg.group_size).max(1)) {
+        state.set_generating(true);
+        let mut prompts = Vec::with_capacity(chunk.len() * cfg.group_size);
+        for &pid in chunk {
+            let task = Task::from_prompt_id(pid, cfg.bench);
+            for _ in 0..cfg.group_size {
+                prompts.push(task.prompt_tokens());
+            }
+        }
+        let gens = comp
+            .generate(&policy_ref, &prompts, sample, &mut rng)
+            .map_err(|e| format!("actor {actor} generate: {e:#}"));
+        state.set_generating(false);
+        let gens = gens?;
+        for (gi, g) in gens.iter().enumerate() {
+            let pid = chunk[gi / cfg.group_size];
+            let task = Task::from_prompt_id(pid, cfg.bench);
+            let completion = &g.tokens[g.prompt_len..];
+            gen_tokens += completion.len() as u64;
+            rollouts.push(Rollout {
+                prompt_id: pid,
+                actor,
+                version: job.version,
+                prompt_tokens: g.tokens[..g.prompt_len].to_vec(),
+                generated_tokens: completion.to_vec(),
+                reward: task.reward(completion),
+            });
+        }
+        // Inter-batch safe point: drain staging segments / commits.
+        at_safe_point(state)?;
+    }
+    Ok((rollouts, gen_tokens))
+}
+
+/// Per-step record assembled across loop iterations (generation lands a
+/// step before its training under the one-step-off schedule).
+#[derive(Clone, Copy, Default)]
+struct StepAccum {
+    mean_reward: f32,
+    gen_tokens: u64,
+    rollout_ms: f64,
+    loss: f32,
+    train_ms: f64,
+    extract_ms: f64,
+    rho: f64,
+    payload_bytes: u64,
+    policy_checksum: [u8; 32],
+}
+
+/// Lease/ledger time source: wall clock for real runs, a deterministic
+/// tick counter when `LocalRunConfig::deterministic` (ticks are µs-scale,
+/// so leases — floored at seconds — never expire and both executors
+/// accept identical rollout sets).
+enum RunClock {
+    Real(WallClock),
+    Virtual(f64),
+}
+
+impl RunClock {
+    fn now(&mut self) -> f64 {
+        match self {
+            RunClock::Real(w) => w.now(),
+            RunClock::Virtual(t) => {
+                *t += 1e-6;
+                *t
+            }
+        }
+    }
+}
+
+/// Trainer-hub state shared by both executors.
+struct Hub<'a, C: Compute> {
+    cfg: &'a LocalRunConfig,
+    layout: &'a ModelLayout,
+    comp: &'a C,
+    state: TrainState,
+    /// Trainer policy snapshot at `version`.
+    policy: ParamSet,
+    version: u64,
+    version_hash: [u8; 32],
+    store: CheckpointStore,
+    ledger: JobLedger,
+    sched: Scheduler,
+    clock: RunClock,
+    timeline: Timeline,
+    /// RL-phase origin for timeline spans.
+    t0: Instant,
+    task_counter: u64,
+    prompts_per_step: usize,
+    accum: Vec<StepAccum>,
+}
+
+impl<'a, C: Compute> Hub<'a, C> {
+    fn new(
+        cfg: &'a LocalRunConfig,
+        layout: &'a ModelLayout,
+        comp: &'a C,
+        state: TrainState,
+        task_counter: u64,
+    ) -> Hub<'a, C> {
+        let policy = state.to_policy();
+        let mut sched = Scheduler::new(SchedulerConfig::default());
+        for i in 0..cfg.n_actors {
+            sched.register(i as u32, 1000.0);
+            sched.observe_version(i as u32, VersionState { active: 0, staged: None });
+        }
+        let clock = if cfg.deterministic {
+            RunClock::Virtual(0.0)
+        } else {
+            RunClock::Real(WallClock::start())
+        };
+        Hub {
+            cfg,
+            layout,
+            comp,
+            state,
+            policy,
+            version: 0,
+            // Version-0 "hash": the genesis policy has no checkpoint.
+            version_hash: [0u8; 32],
+            store: CheckpointStore::in_memory(),
+            ledger: JobLedger::new(LeasePolicy::default()),
+            sched,
+            clock,
+            timeline: Timeline::default(),
+            t0: Instant::now(),
+            task_counter,
+            prompts_per_step: comp.shape().b_train / cfg.group_size,
+            accum: vec![StepAccum::default(); cfg.steps as usize],
+        }
+    }
+
+    fn now_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    /// Post this step's prompts and lease them out per Algorithm 1,
+    /// against the *current* committed version (one step stale relative
+    /// to the version being trained concurrently).
+    fn plan_step(&mut self, step: u64) -> Result<Vec<(Assignment, GenJob)>> {
+        let pids: Vec<u64> = (0..self.prompts_per_step)
+            .map(|_| {
+                self.task_counter += 1;
+                self.task_counter
+            })
+            .collect();
+        self.ledger.post(pids.iter().copied());
+        let now = self.clock.now();
+        // Real-clock lease hygiene: reclaim anything overdue from stalled
+        // or crashed in-flight work before allocating.
+        self.ledger.expire(now);
+        let assignments = self.sched.allocate(self.version, self.prompts_per_step as u64);
+        if assignments.is_empty() {
+            bail!("no eligible actors at step {step}");
+        }
+        let mut out = Vec::with_capacity(assignments.len());
+        for asg in assignments {
+            let claimed =
+                self.ledger
+                    .issue(asg.actor, self.version, self.version_hash, now, asg.requests as usize);
+            let job = GenJob {
+                step,
+                version: self.version,
+                hash: self.version_hash,
+                pids: claimed,
+                rng_seed: job_seed(self.cfg.seed, step, asg.actor),
+            };
+            out.push((asg, job));
+        }
+        Ok(out)
+    }
+
+    /// Submit one assignment's results under the acceptance predicate and
+    /// settle the scheduler with *per-assignment* tokens and duration (the
+    /// old loop credited cumulative totals across actors, corrupting tau).
+    /// Returns with `rollouts` filtered down to the accepted prompts: under
+    /// real-clock leases, work that outlived its lease is dropped (the
+    /// prompts return to the pool via `expire`) instead of killing the run.
+    fn submit_and_settle(
+        &mut self,
+        actor: u32,
+        job: &GenJob,
+        rollouts: &mut Vec<Rollout>,
+        tokens: u64,
+        elapsed_s: f64,
+    ) -> Result<()> {
+        let now = self.clock.now();
+        let mut expired: Vec<u64> = Vec::new();
+        for &pid in &job.pids {
+            match self.ledger.submit(actor, pid, job.version, job.hash, now) {
+                Ok(()) => {}
+                Err(Reject::LeaseExpired) => expired.push(pid),
+                Err(e) => bail!("ledger rejected {pid}: {e:?}"),
+            }
+        }
+        if !expired.is_empty() {
+            rollouts.retain(|r| !expired.contains(&r.prompt_id));
+        }
+        let dt = if self.cfg.deterministic {
+            // Virtual duration pinned to the current estimate: tau stays at
+            // its prior, so allocation is identical across executors.
+            (tokens as f64 / self.sched.tau(actor).unwrap_or(1.0).max(1e-9)).max(1e-6)
+        } else {
+            elapsed_s.max(1e-3)
+        };
+        self.sched.settle(actor, tokens, dt);
+        Ok(())
+    }
+
+    /// Close out a step's generation accounting.
+    fn finish_generation(&mut self, step: u64, batch: &[Rollout], rollout_ms: f64) {
+        let a = &mut self.accum[step as usize];
+        a.mean_reward = batch.iter().map(|r| r.reward).sum::<f32>() / batch.len().max(1) as f32;
+        a.gen_tokens = batch.iter().map(|r| r.generated_tokens.len() as u64).sum();
+        a.rollout_ms = rollout_ms;
+    }
+
+    /// Train on `batch_step`'s rollouts, then run the fused delta
+    /// extract+encode+segment pass, handing each wire-ready segment to
+    /// `sink` (the staging path) mid-scan. Advances the trainer-side
+    /// version; actor commits are the caller's job.
+    fn train_and_stream<F: FnMut(Segment)>(
+        &mut self,
+        batch_step: u64,
+        batch: &[Rollout],
+        mut sink: F,
+    ) -> Result<()> {
+        let shape = self.comp.shape();
+        let adv = group_advantages(batch, self.cfg.algorithm);
+        let pairs: Vec<(Vec<i32>, Vec<i32>)> = batch
+            .iter()
+            .map(|r| (r.prompt_tokens.clone(), r.generated_tokens.clone()))
+            .collect();
+        let packed = pack_batch(&pairs, shape.b_train, shape.max_seq);
+        let mut adv_padded = vec![0.0f32; shape.b_train];
+        adv_padded[..adv.len()].copy_from_slice(&adv);
+
+        let train_start = self.now_s();
+        let t_train = Instant::now();
+        let loss = self.comp.train_step(
+            &mut self.state,
+            &packed.tokens,
+            &packed.gen_mask,
+            &adv_padded,
+            self.cfg.lr_rl,
+        )?;
+        let train_ms = t_train.elapsed().as_secs_f64() * 1e3;
+        let train_end = self.now_s();
+        self.timeline.record("trainer", SpanKind::Train, train_start, train_end, batch_step);
+
+        let extract_start = self.now_s();
+        let t_extract = Instant::now();
+        let new_policy = self.state.to_policy();
+        let t0c = self.t0;
+        let mut first_seg: Option<f64> = None;
+        let mut last_seg = extract_start;
+        let (ckpt, stats) = stream_checkpoint(
+            self.layout,
+            &self.policy,
+            &new_policy,
+            self.version,
+            self.version + 1,
+            self.cfg.segment_bytes,
+            |seg| {
+                let now = t0c.elapsed().as_secs_f64();
+                first_seg.get_or_insert(now);
+                last_seg = now;
+                sink(seg);
+            },
+        );
+        let extract_ms = t_extract.elapsed().as_secs_f64() * 1e3;
+        self.timeline.record("trainer", SpanKind::Extract, extract_start, self.now_s(), batch_step);
+        if let Some(f) = first_seg {
+            self.timeline.record("transfer", SpanKind::Transfer, f, last_seg, batch_step);
+        }
+
+        let rho = stats.nnz as f64 / self.layout.total_params() as f64;
+        let payload = ckpt.payload_bytes();
+        let hash = ckpt.hash;
+        self.store.put(ckpt)?;
+        self.version += 1;
+        self.version_hash = hash;
+        self.policy = new_policy;
+
+        let a = &mut self.accum[batch_step as usize];
+        a.loss = loss;
+        a.train_ms = train_ms;
+        a.extract_ms = extract_ms;
+        a.rho = rho;
+        a.payload_bytes = payload;
+        a.policy_checksum = policy_checksum(&self.policy);
+        if self.cfg.verbose {
+            println!(
+                "step {:>3}  loss {:>8.4}  reward {:>5.3}  rho {:>7.4}%  payload {:>10}  ({}x smaller)  gen {:>5} tok",
+                batch_step,
+                a.loss,
+                a.mean_reward,
+                a.rho * 100.0,
+                crate::util::fmt_bytes(a.payload_bytes),
+                self.layout.dense_bytes_bf16() / a.payload_bytes.max(1),
+                a.gen_tokens,
+            );
+        }
+        Ok(())
+    }
+
+    fn into_report(self, sft_losses: Vec<f32>, wall0: Instant) -> RunReport {
+        let dense = self.layout.dense_bytes_bf16();
+        let steps = self
+            .accum
+            .iter()
+            .enumerate()
+            .map(|(i, a)| StepLog {
+                step: i as u64,
+                loss: a.loss,
+                mean_reward: a.mean_reward,
+                rho: a.rho,
+                payload_bytes: a.payload_bytes,
+                dense_bytes: dense,
+                gen_tokens: a.gen_tokens,
+                extract_ms: a.extract_ms,
+                train_ms: a.train_ms,
+                rollout_ms: a.rollout_ms,
+                policy_checksum: a.policy_checksum,
+            })
+            .collect();
+        RunReport {
+            sft_losses,
+            steps,
+            final_version: self.version,
+            wall_s: wall0.elapsed().as_secs_f64(),
+            timeline: self.timeline,
+        }
+    }
+}
+
+/// Run the full loop (SFT warmup + RL) on any [`Compute`] backend.
+/// `layout` must match the backend's parameter geometry.
+pub fn run_with_compute<C: Compute>(
+    cfg: &LocalRunConfig,
+    layout: &ModelLayout,
+    comp: &C,
+    mode: ExecMode,
+) -> Result<RunReport> {
+    let wall0 = Instant::now();
+    let shape = comp.shape();
+    if cfg.group_size == 0 || cfg.group_size > shape.b_gen {
+        bail!("group_size {} must be in 1..={}", cfg.group_size, shape.b_gen);
+    }
+    if cfg.group_size > shape.b_train {
+        bail!("group_size {} exceeds b_train {}", cfg.group_size, shape.b_train);
+    }
+    if cfg.n_actors == 0 {
+        bail!("need at least one actor");
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let mut state = TrainState::init(layout, &mut rng);
+
+    // ---------------- SFT warmup: same train path, adv = 1 --------------
+    let mut sft_losses = Vec::new();
+    let mut task_counter: u64 = 0;
+    for _ in 0..cfg.sft_steps {
+        let pairs: Vec<(Vec<i32>, Vec<i32>)> = (0..shape.b_train)
+            .map(|_| {
+                task_counter += 1;
+                let task = Task::from_prompt_id(task_counter, cfg.bench);
+                (task.prompt_tokens(), task.answer_tokens())
+            })
+            .collect();
+        let batch = pack_batch(&pairs, shape.b_train, shape.max_seq);
+        let adv = vec![1.0f32; shape.b_train];
+        let loss = comp.train_step(&mut state, &batch.tokens, &batch.gen_mask, &adv, cfg.lr_sft)?;
+        sft_losses.push(loss);
+    }
+
+    // ---------------- RL phase ------------------------------------------
+    let mut hub = Hub::new(cfg, layout, comp, state, task_counter);
+    match mode {
+        ExecMode::Sequential => run_sequential(&mut hub)?,
+        ExecMode::Pipelined => run_pipelined(&mut hub)?,
+    }
+    Ok(hub.into_report(sft_losses, wall0))
+}
+
+/// Stream `D_{v}` into in-process actors and commit at their safe points
+/// (the sequential executor's staging+commit tail for one version).
+fn seq_stream_and_commit<C: Compute>(
+    hub: &mut Hub<C>,
+    actors: &mut [PolicyState],
+    batch_step: u64,
+    batch: &[Rollout],
+) -> Result<()> {
+    let mut stream_err: Option<String> = None;
+    let last = actors.len() - 1;
+    hub.train_and_stream(batch_step, batch, |seg| {
+        for (i, actor) in actors[..last].iter_mut().enumerate() {
+            if let Err(e) = actor.on_segment(seg.clone()) {
+                stream_err.get_or_insert(format!("actor {i} staging: {e}"));
+            }
+        }
+        if let Err(e) = actors[last].on_segment(seg) {
+            stream_err.get_or_insert(format!("actor {last} staging: {e}"));
+        }
+    })?;
+    if let Some(e) = stream_err {
+        bail!("{e}");
+    }
+    let v = hub.version;
+    for (i, actor) in actors.iter_mut().enumerate() {
+        hub.sched.note_staged(i as u32, v);
+        let c0 = hub.t0.elapsed().as_secs_f64();
+        match actor.request_commit(v) {
+            CommitResult::Applied => {}
+            other => bail!("actor {i} commit failed: {other:?}"),
+        }
+        let c1 = hub.t0.elapsed().as_secs_f64();
+        hub.timeline.record(&format!("actor{i}"), SpanKind::Commit, c0, c1, batch_step);
+        // Bit-exactness: every actor's policy equals the trainer's.
+        if actor.params() != &hub.policy {
+            bail!("actor {i} diverged from trainer policy at v{v}");
+        }
+        hub.sched.note_committed(i as u32, v);
+    }
+    Ok(())
+}
+
+/// Phase-sequential executor over the shared one-step-off schedule.
+fn run_sequential<C: Compute>(hub: &mut Hub<C>) -> Result<()> {
+    let mut actors: Vec<PolicyState> = (0..hub.cfg.n_actors)
+        .map(|_| PolicyState::new(hub.layout.clone(), hub.policy.clone(), 0))
+        .collect();
+    let mut pending: Option<(u64, Vec<Rollout>)> = None;
+    for step in 0..hub.cfg.steps {
+        let jobs = hub.plan_step(step)?;
+        let phase_t = Instant::now();
+        let mut batch: Vec<Rollout> = Vec::new();
+        for (asg, job) in &jobs {
+            let a = asg.actor as usize;
+            let start_s = hub.now_s();
+            let t_job = Instant::now();
+            let (mut rollouts, tokens) =
+                run_gen_job(hub.comp, hub.cfg, &mut actors[a], asg.actor, job, |_| Ok(()))
+                    .map_err(anyhow::Error::msg)?;
+            let elapsed = t_job.elapsed().as_secs_f64();
+            let end_s = hub.now_s();
+            hub.timeline.record(&format!("actor{a}"), SpanKind::Rollout, start_s, end_s, step);
+            hub.submit_and_settle(asg.actor, job, &mut rollouts, tokens, elapsed)?;
+            batch.extend(rollouts);
+        }
+        hub.finish_generation(step, &batch, phase_t.elapsed().as_secs_f64() * 1e3);
+        // Train on the previous batch — after this step's generation, the
+        // same dependency order the pipelined executor overlaps.
+        if let Some((prev_step, prev)) = pending.take() {
+            seq_stream_and_commit(hub, &mut actors, prev_step, &prev)?;
+        }
+        pending = Some((step, batch));
+    }
+    if let Some((prev_step, prev)) = pending.take() {
+        seq_stream_and_commit(hub, &mut actors, prev_step, &prev)?;
+    }
+    Ok(())
+}
+
+/// Drain an actor's mailbox, then let any parked commit land if we are at
+/// a safe point. Segments stage regardless of the generating flag; a
+/// `Commit` delivered mid-batch parks via [`PolicyState::request_commit`]
+/// and is applied (and acknowledged) by the trailing
+/// [`PolicyState::on_safe_point`] once `generating` drops. `Generate`
+/// messages are parked on the backlog for the main loop.
+fn drain_mailbox(
+    rx: &Receiver<ToActor>,
+    state: &mut PolicyState,
+    backlog: &mut VecDeque<GenJob>,
+    actor: u32,
+    tx: &Sender<FromActor>,
+    t0: Instant,
+) -> Result<(), String> {
+    loop {
+        match rx.try_recv() {
+            Ok(ToActor::Segment(seg)) => {
+                state
+                    .on_segment(seg)
+                    .map_err(|e| format!("actor {actor} staging: {e}"))?;
+            }
+            Ok(ToActor::Commit(v)) => {
+                commit_and_ack(state, actor, v, tx, t0)?;
+            }
+            Ok(ToActor::Generate(job)) => backlog.push_back(job),
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+        }
+    }
+    service_safe_point(state, actor, tx, t0)
+}
+
+/// Deliver `Commit(v)`: apply immediately at a safe point, or park it
+/// mid-generation-batch (`Deferred`) — the ack then rides the apply in
+/// [`service_safe_point`]. Never applies under `generating == true`.
+fn commit_and_ack(
+    state: &mut PolicyState,
+    actor: u32,
+    version: u64,
+    tx: &Sender<FromActor>,
+    t0: Instant,
+) -> Result<(), String> {
+    let start_s = t0.elapsed().as_secs_f64();
+    match state.request_commit(version) {
+        CommitResult::Applied => ack_commit(state, actor, version, tx, t0, start_s),
+        CommitResult::Deferred => Ok(()),
+        other => Err(format!("actor {actor} commit v{version} failed: {other:?}")),
+    }
+}
+
+/// Apply (and acknowledge) any commit parked while a batch was generating.
+/// No-op when nothing is pending or we are not at a safe point.
+fn service_safe_point(
+    state: &mut PolicyState,
+    actor: u32,
+    tx: &Sender<FromActor>,
+    t0: Instant,
+) -> Result<(), String> {
+    let start_s = t0.elapsed().as_secs_f64();
+    match state.on_safe_point() {
+        None => Ok(()),
+        Some((v, CommitResult::Applied)) => ack_commit(state, actor, v, tx, t0, start_s),
+        Some((v, other)) => Err(format!("actor {actor} deferred commit v{v} failed: {other:?}")),
+    }
+}
+
+/// Send the Committed acknowledgement carrying the bit-exactness witness.
+fn ack_commit(
+    state: &PolicyState,
+    actor: u32,
+    version: u64,
+    tx: &Sender<FromActor>,
+    t0: Instant,
+    start_s: f64,
+) -> Result<(), String> {
+    let reply = FromActor::Committed {
+        actor,
+        version,
+        checksum: policy_checksum(state.params()),
+        start_s,
+        end_s: t0.elapsed().as_secs_f64(),
+    };
+    tx.send(reply).map_err(|_| "hub exited".to_string())
+}
+
+/// One actor worker: owns its [`PolicyState`], processes the command
+/// mailbox, and generates rollouts while staging deltas that arrive
+/// mid-generation at inter-batch safe points.
+///
+/// A panic inside the worker must not strand the hub: with several
+/// workers alive the reply channel never disconnects, so an unwinding
+/// thread that sent nothing would leave `collect_step` blocked forever.
+/// The drop guard converts the unwind into a `Failed` reply.
+fn actor_worker<C: Compute>(
+    comp: &C,
+    cfg: &LocalRunConfig,
+    actor: u32,
+    mut state: PolicyState,
+    rx: Receiver<ToActor>,
+    tx: Sender<FromActor>,
+    t0: Instant,
+) {
+    struct PanicGuard<'a> {
+        actor: u32,
+        tx: &'a Sender<FromActor>,
+    }
+    impl Drop for PanicGuard<'_> {
+        fn drop(&mut self) {
+            if std::thread::panicking() {
+                let _ = self.tx.send(FromActor::Failed {
+                    actor: self.actor,
+                    msg: format!("actor {} worker panicked", self.actor),
+                });
+            }
+        }
+    }
+    let _guard = PanicGuard { actor, tx: &tx };
+    let mut backlog: VecDeque<GenJob> = VecDeque::new();
+    loop {
+        let msg = match backlog.pop_front() {
+            Some(job) => ToActor::Generate(job),
+            None => match rx.recv() {
+                Ok(m) => m,
+                Err(_) => return, // hub dropped the mailbox: shut down
+            },
+        };
+        let outcome: Result<(), String> = match msg {
+            ToActor::Generate(job) => {
+                let start_s = t0.elapsed().as_secs_f64();
+                run_gen_job(comp, cfg, &mut state, actor, &job, |st| {
+                    drain_mailbox(&rx, st, &mut backlog, actor, &tx, t0)
+                })
+                .and_then(|(rollouts, gen_tokens)| {
+                    let reply = FromActor::Generated {
+                        actor,
+                        step: job.step,
+                        rollouts,
+                        gen_tokens,
+                        start_s,
+                        end_s: t0.elapsed().as_secs_f64(),
+                    };
+                    tx.send(reply).map_err(|_| "hub exited".to_string())
+                })
+            }
+            ToActor::Segment(seg) => state
+                .on_segment(seg)
+                .map(|_| ())
+                .map_err(|e| format!("actor {actor} staging: {e}")),
+            ToActor::Commit(v) => commit_and_ack(&mut state, actor, v, &tx, t0),
+        };
+        if let Err(msg) = outcome {
+            let _ = tx.send(FromActor::Failed { actor, msg });
+            return;
+        }
+    }
+}
+
+/// Pipelined executor: spawn workers, then per step dispatch generation,
+/// train + stream the previous version concurrently, and collect
+/// generation results and commit acknowledgements.
+fn run_pipelined<C: Compute>(hub: &mut Hub<C>) -> Result<()> {
+    let n = hub.cfg.n_actors;
+    let comp = hub.comp;
+    let cfg = hub.cfg;
+    let t0 = hub.t0;
+    std::thread::scope(|scope| {
+        let (from_tx, from_rx) = channel::<FromActor>();
+        let mut to_txs: Vec<Sender<ToActor>> = Vec::with_capacity(n);
+        for i in 0..n {
+            let (tx, rx) = channel::<ToActor>();
+            to_txs.push(tx);
+            let state = PolicyState::new(hub.layout.clone(), hub.policy.clone(), 0);
+            let ftx = from_tx.clone();
+            scope.spawn(move || actor_worker(comp, cfg, i as u32, state, rx, ftx, t0));
+        }
+        drop(from_tx);
+        pipelined_hub_loop(hub, &to_txs, &from_rx)
+        // `to_txs` drops here: workers see the disconnect and exit; the
+        // scope joins them on the way out.
+    })
+}
+
+/// Broadcast one version's delta + commit to every mailbox, moving (not
+/// cloning) the segment into the last one.
+fn broadcast_and_commit<C: Compute>(
+    hub: &mut Hub<C>,
+    to_txs: &[Sender<ToActor>],
+    batch_step: u64,
+    batch: &[Rollout],
+) -> Result<()> {
+    let last = to_txs.len() - 1;
+    hub.train_and_stream(batch_step, batch, |seg| {
+        for tx in &to_txs[..last] {
+            let _ = tx.send(ToActor::Segment(seg.clone()));
+        }
+        let _ = to_txs[last].send(ToActor::Segment(seg));
+    })?;
+    let v = hub.version;
+    for (i, tx) in to_txs.iter().enumerate() {
+        hub.sched.note_staged(i as u32, v);
+        let _ = tx.send(ToActor::Commit(v));
+    }
+    Ok(())
+}
+
+fn pipelined_hub_loop<C: Compute>(
+    hub: &mut Hub<C>,
+    to_txs: &[Sender<ToActor>],
+    from_rx: &Receiver<FromActor>,
+) -> Result<()> {
+    let n = to_txs.len();
+    let mut last_batch: Option<(u64, Vec<Rollout>)> = None;
+    for step in 0..hub.cfg.steps {
+        // 1. Dispatch this step's generation on the stale policy.
+        let jobs = hub.plan_step(step)?;
+        for (asg, job) in &jobs {
+            to_txs[asg.actor as usize]
+                .send(ToActor::Generate(job.clone()))
+                .map_err(|_| anyhow!("actor {} worker exited", asg.actor))?;
+        }
+        // 2. Train on the previous batch + stream D_{v} mid-generation.
+        let committing = if let Some((prev_step, prev)) = last_batch.take() {
+            broadcast_and_commit(hub, to_txs, prev_step, &prev)?;
+            Some(hub.version)
+        } else {
+            None
+        };
+        // 3. Collect generation results and commit acknowledgements.
+        let (results, spans) = collect_step(hub, from_rx, step, &jobs, committing, n)?;
+        // 4. Deterministic batch assembly + ledger/scheduler bookkeeping,
+        //    in assignment order.
+        let mut batch: Vec<Rollout> = Vec::new();
+        let mut results = results;
+        let mut phase = (f64::INFINITY, 0.0f64);
+        for (asg, job) in &jobs {
+            let (mut rollouts, tokens, start_s, end_s) =
+                results.remove(&asg.actor).expect("collected above");
+            hub.timeline
+                .record(&format!("actor{}", asg.actor), SpanKind::Rollout, start_s, end_s, step);
+            hub.submit_and_settle(asg.actor, job, &mut rollouts, tokens, end_s - start_s)?;
+            phase = (phase.0.min(start_s), phase.1.max(end_s));
+            batch.extend(rollouts);
+        }
+        for (actor, c0, c1) in spans {
+            hub.timeline.record(&format!("actor{actor}"), SpanKind::Commit, c0, c1, step);
+        }
+        hub.finish_generation(step, &batch, (phase.1 - phase.0).max(0.0) * 1e3);
+        last_batch = Some((step, batch));
+    }
+    // Epilogue: train + commit the final version (no generation to hide
+    // behind — the same tail the sequential executor pays every step).
+    if let Some((prev_step, prev)) = last_batch.take() {
+        broadcast_and_commit(hub, to_txs, prev_step, &prev)?;
+        let (final_step, final_version) = (hub.cfg.steps, hub.version);
+        let empty: Vec<(Assignment, GenJob)> = Vec::new();
+        let (_, spans) = collect_step(hub, from_rx, final_step, &empty, Some(final_version), n)?;
+        for (actor, c0, c1) in spans {
+            hub.timeline
+                .record(&format!("actor{actor}"), SpanKind::Commit, c0, c1, prev_step);
+        }
+    }
+    Ok(())
+}
+
+type GenResults = BTreeMap<u32, (Vec<Rollout>, u64, f64, f64)>;
+
+/// Block until every assigned actor returned its batch for `step` and —
+/// when `committing` — every actor acknowledged the commit with a
+/// checksum matching the trainer policy.
+fn collect_step<C: Compute>(
+    hub: &mut Hub<C>,
+    from_rx: &Receiver<FromActor>,
+    step: u64,
+    jobs: &[(Assignment, GenJob)],
+    committing: Option<u64>,
+    n: usize,
+) -> Result<(GenResults, Vec<(u32, f64, f64)>)> {
+    let mut want_gen: BTreeSet<u32> = jobs.iter().map(|(a, _)| a.actor).collect();
+    let mut want_commit: BTreeSet<u32> = match committing {
+        Some(_) => (0..n as u32).collect(),
+        None => BTreeSet::new(),
+    };
+    let mut results: GenResults = BTreeMap::new();
+    let mut commit_spans: Vec<(u32, f64, f64)> = Vec::new();
+    while !want_gen.is_empty() || !want_commit.is_empty() {
+        match from_rx.recv() {
+            Ok(FromActor::Generated { actor, step: s, rollouts, gen_tokens, start_s, end_s }) => {
+                if s != step {
+                    bail!("actor {actor} returned batch for step {s} during step {step}");
+                }
+                if !want_gen.remove(&actor) {
+                    bail!("unexpected generation result from actor {actor}");
+                }
+                results.insert(actor, (rollouts, gen_tokens, start_s, end_s));
+            }
+            Ok(FromActor::Committed { actor, version, checksum, start_s, end_s }) => {
+                let Some(v) = committing else {
+                    bail!("unexpected commit ack v{version} from actor {actor}");
+                };
+                if version != v {
+                    bail!("actor {actor} committed v{version}, expected v{v}");
+                }
+                // Cross-thread bit-exactness at every committed version.
+                if checksum != hub.accum[(v - 1) as usize].policy_checksum {
+                    bail!("actor {actor} diverged from trainer policy at v{version}");
+                }
+                if !want_commit.remove(&actor) {
+                    bail!("duplicate commit ack from actor {actor}");
+                }
+                hub.sched.note_committed(actor, version);
+                commit_spans.push((actor, start_s, end_s));
+            }
+            Ok(FromActor::Failed { msg, .. }) => bail!("{msg}"),
+            Err(_) => bail!("actor workers exited before step {step} completed"),
+        }
+    }
+    Ok((results, commit_spans))
+}

@@ -98,6 +98,27 @@ impl Scheduler {
         }
     }
 
+    /// Staging notification from the async runtime: `D_version` finished
+    /// staging on `actor` (possibly mid-generation). Monotone — a late
+    /// notification for an older delta never regresses the state.
+    pub fn note_staged(&mut self, actor: ActorId, version: u64) {
+        if let Some(a) = self.actors.get_mut(&actor) {
+            if version > a.version.active && a.version.staged.map_or(true, |s| s < version) {
+                a.version.staged = Some(version);
+            }
+        }
+    }
+
+    /// Commit notification: `actor` activated `version` at its safe point.
+    pub fn note_committed(&mut self, actor: ActorId, version: u64) {
+        if let Some(a) = self.actors.get_mut(&actor) {
+            a.version.active = a.version.active.max(version);
+            if a.version.staged.map_or(false, |s| s <= a.version.active) {
+                a.version.staged = None;
+            }
+        }
+    }
+
     pub fn tau(&self, actor: ActorId) -> Option<f64> {
         self.actors.get(&actor).and_then(|a| a.tau.get())
     }
@@ -234,6 +255,28 @@ mod tests {
         assert_eq!(actors, vec![1, 2]);
         assert!(!alloc[0].needs_commit);
         assert!(alloc[1].needs_commit);
+    }
+
+    #[test]
+    fn incremental_staging_and_commit_notifications_drive_the_gate() {
+        let mut s = sched();
+        s.register(1, 1000.0);
+        on_version(&mut s, 1, 4);
+        // Mid-generation staging of D_5: eligible for v5 with a Commit first.
+        s.note_staged(1, 5);
+        let alloc = s.allocate(5, 10);
+        assert_eq!(alloc.len(), 1);
+        assert!(alloc[0].needs_commit);
+        // Commit lands at the safe point: plain eligibility, staged cleared.
+        s.note_committed(1, 5);
+        let alloc = s.allocate(5, 10);
+        assert!(!alloc[0].needs_commit);
+        // Stale notifications never regress the state.
+        s.note_staged(1, 3);
+        s.note_committed(1, 2);
+        let alloc = s.allocate(5, 10);
+        assert_eq!(alloc.len(), 1);
+        assert!(!alloc[0].needs_commit);
     }
 
     #[test]

@@ -64,12 +64,13 @@ pub fn extract_checkpoint(
 }
 
 /// Fused streaming path (paper §5.2): diff, encode, and segment the new
-/// policy in one pass, handing each wire-ready segment to `sink` as soon
-/// as it closes — transmission overlaps extraction. The sealed checkpoint
+/// policy in one pass, handing each wire-ready segment to `sink` — *by
+/// value*, so a single-destination sink forwards without copying — as soon
+/// as it closes; transmission overlaps extraction. The sealed checkpoint
 /// artifact (for the Checkpoint Store) is assembled from the same bytes,
 /// so no second encode pass runs. Byte-identical to
 /// [`extract_checkpoint`]'s artifact.
-pub fn stream_checkpoint<F: FnMut(&Segment)>(
+pub fn stream_checkpoint<F: FnMut(Segment)>(
     layout: &ModelLayout,
     old_policy: &ParamSet,
     new_policy: &ParamSet,
@@ -91,7 +92,7 @@ pub fn stream_checkpoint<F: FnMut(&Segment)>(
     let mut bytes = Vec::new();
     let stats = enc.encode_parallel(old_policy, new_policy, threads, |seg| {
         bytes.extend_from_slice(&seg.payload);
-        sink(&seg);
+        sink(seg);
     });
     let ckpt = DeltaCheckpoint { version, base_version, bytes, hash: stats.hash };
     (ckpt, stats)

@@ -116,6 +116,43 @@ impl Reassembler {
         Ok(())
     }
 
+    /// Read-only classification of `seg`: `Ok(true)` if [`accept`](Self::accept)
+    /// would count it as a duplicate, `Ok(false)` if it would stage new
+    /// content, and the same error `accept` would return otherwise. Lets a
+    /// relay forward the borrowed segment *before* moving it into `accept`,
+    /// so cut-through fanout never copies the payload.
+    pub fn precheck(&self, seg: &Segment) -> Result<bool, AcceptError> {
+        if seg.version != self.version {
+            return Err(AcceptError::WrongVersion { expected: self.version, got: seg.version });
+        }
+        let mut bound = self.total;
+        if seg.total != super::segment::TOTAL_UNKNOWN {
+            if seg.total > MAX_SEGMENTS {
+                return Err(AcceptError::GeometryMismatch);
+            }
+            match self.total {
+                None => {
+                    if (seg.total as usize) < self.parts.len() {
+                        return Err(AcceptError::GeometryMismatch);
+                    }
+                    bound = Some(seg.total);
+                }
+                Some(t) if t != seg.total => return Err(AcceptError::GeometryMismatch),
+                _ => {}
+            }
+        }
+        let i = seg.seq as usize;
+        let len = bound.map(|t| t as usize).unwrap_or(self.parts.len()).max(self.parts.len());
+        if i >= len && (bound.is_some() || seg.seq >= MAX_SEGMENTS) {
+            return Err(AcceptError::SeqOutOfRange);
+        }
+        match self.parts.get(i).and_then(|p| p.as_ref()) {
+            Some(existing) if *existing != seg.payload => Err(AcceptError::GeometryMismatch),
+            Some(_) => Ok(true),
+            None => Ok(false),
+        }
+    }
+
     pub fn is_complete(&self) -> bool {
         self.total.map(|t| self.received == t as usize).unwrap_or(false)
     }
@@ -209,6 +246,37 @@ mod tests {
         let mut r = Reassembler::new(c.version);
         r.accept(a[0].clone()).unwrap();
         assert_eq!(r.accept(b[0].clone()), Err(AcceptError::GeometryMismatch));
+    }
+
+    #[test]
+    fn precheck_agrees_with_accept() {
+        // Property: for a stream with shuffles, duplicates, a wrong-version
+        // frame, and a geometry lie, precheck's verdict always matches what
+        // accept then does — including after state evolves.
+        prop::check("precheck mirrors accept", 20, |rng| {
+            let c = checkpoint(rng.range(10, 500) as u64);
+            let mut segs = split_into_segments(c.version, &c.bytes, 64);
+            let dups: Vec<_> = segs.iter().step_by(2).cloned().collect();
+            segs.extend(dups);
+            segs.push(Segment { version: c.version + 7, seq: 0, total: 1, payload: vec![0] });
+            let mut lie = segs[0].clone();
+            lie.payload.push(0xFF);
+            segs.push(lie);
+            rng.shuffle(&mut segs);
+            let mut r = Reassembler::new(c.version);
+            for s in segs {
+                let verdict = r.precheck(&s);
+                let before = r.duplicates();
+                match r.accept(s) {
+                    Ok(()) => {
+                        let was_dup = r.duplicates() > before;
+                        assert_eq!(verdict, Ok(was_dup));
+                    }
+                    Err(e) => assert_eq!(verdict, Err(e)),
+                }
+            }
+            assert!(r.is_complete());
+        });
     }
 
     #[test]

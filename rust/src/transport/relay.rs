@@ -40,14 +40,16 @@ impl RelayNode {
     /// Handle one incoming segment: forward to every peer immediately
     /// (cut-through), then stage locally. Duplicate segments are staged
     /// (idempotently) but *not* re-forwarded, so retries cannot amplify.
+    ///
+    /// The segment is classified with a read-only [`Reassembler::precheck`]
+    /// first, so peers forward from the *borrowed* segment and staging then
+    /// takes it by move — no payload copy anywhere on the fanout path.
     pub fn on_segment<S: SegmentSink>(
         &mut self,
         seg: Segment,
         peers: &mut [S],
     ) -> Result<(), AcceptError> {
-        let dups_before = self.reasm.duplicates();
-        self.reasm.accept(seg.clone())?;
-        let is_dup = self.reasm.duplicates() > dups_before;
+        let is_dup = self.reasm.precheck(&seg)?;
         if !is_dup {
             for p in peers.iter_mut() {
                 match p.send_segment(&seg) {
@@ -56,7 +58,7 @@ impl RelayNode {
                 }
             }
         }
-        Ok(())
+        self.reasm.accept(seg)
     }
 
     pub fn is_staged(&self) -> bool {
