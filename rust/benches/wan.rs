@@ -1,0 +1,92 @@
+//! WAN distribution bench: CPU cost of the distribution-tree hot paths
+//! (plan construction, striped arrival-order simulation, relay
+//! cut-through fanout) plus the analytic WAN makespan record — striped
+//! relay tree vs single-stream direct per-actor fan-out on the `wan-4`
+//! preset — written to `BENCH_wan.json` so the distribution layer's perf
+//! trajectory is tracked across PRs. Set `BENCH_QUICK=1` for the CI smoke
+//! run.
+
+use sparrowrl::config::{self, wan_preset};
+use sparrowrl::data::Benchmark;
+use sparrowrl::netsim::deliver_striped;
+use sparrowrl::sim::compute::{delta_payload_bytes, ComputeModel};
+use sparrowrl::transport::relay::RelayNode;
+use sparrowrl::transport::{split_into_segments, DistributionPlan, Segment};
+use sparrowrl::util::bench::Bencher;
+use sparrowrl::util::Rng;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let mut b = Bencher::new(if quick { 1 } else { 2 }, if quick { 5 } else { 11 });
+
+    let preset = wan_preset("wan-4").unwrap();
+    b.bench("DistributionPlan::from_preset (wan-4)", || {
+        std::hint::black_box(DistributionPlan::from_preset(&preset, 1 << 20));
+    });
+    let plan = DistributionPlan::from_preset(&preset, 1 << 20);
+
+    // Arrival-order simulation over the widest-striped leg.
+    let n_segs = if quick { 64 } else { 256 };
+    let sizes = vec![1u64 << 20; n_segs];
+    let widest = plan
+        .legs
+        .iter()
+        .max_by_key(|l| l.streams)
+        .expect("wan-4 has legs");
+    b.bench(
+        &format!("netsim striped arrivals ({n_segs} x 1 MiB, {} stripes)", widest.streams),
+        || {
+            let mut rng = Rng::new(1);
+            std::hint::black_box(deliver_striped(&widest.wan, &sizes, widest.streams, &mut rng));
+        },
+    );
+
+    // Relay cut-through fanout of a pseudo-delta through the whole tree.
+    let mb = if quick { 4 } else { 16 };
+    let mut rng = Rng::new(2);
+    let payload_bytes: Vec<u8> = (0..mb << 20).map(|_| rng.next_u64() as u8).collect();
+    let segs = split_into_segments(1, &payload_bytes, 1 << 20);
+    let total: u64 = plan.legs.iter().map(|_| payload_bytes.len() as u64).sum();
+    b.bench_bytes(&format!("relay tree fanout (wan-4, {mb} MiB/region)"), total, || {
+        for leg in &plan.legs {
+            let mut relay = RelayNode::new(1);
+            let mut peers: Vec<Vec<Segment>> = vec![Vec::new(); leg.peers.len()];
+            for s in &segs {
+                relay.on_segment(s.clone(), &mut peers).unwrap();
+            }
+            std::hint::black_box(peers);
+        }
+    });
+
+    // Analytic WAN record: the acceptance metric behind `exp wan`.
+    let model = config::model("qwen3-8b").unwrap();
+    let payload = delta_payload_bytes(&model, model.expected_rho);
+    let cm = ComputeModel::new(Benchmark::Gsm8k, 4);
+    let produce = Some(cm.stream_emit_bps(&model, payload));
+    let mut rng = Rng::new(0);
+    let striped = plan.makespan(payload, produce, &mut rng);
+    let direct = plan.direct_single_stream_makespan(payload, produce, &mut rng);
+    println!(
+        "wan-4 qwen3-8b delta {}: striped relay tree {striped:.2}s vs \
+         1-stream direct fan-out {direct:.2}s ({:.1}x)",
+        sparrowrl::util::fmt_bytes(payload),
+        direct / striped.max(1e-9),
+    );
+    assert!(
+        striped < direct,
+        "striped distribution must beat single-stream direct fan-out"
+    );
+    let mut derived: Vec<(&str, f64)> = vec![
+        ("payload_bytes", payload as f64),
+        ("striped_makespan_s", striped),
+        ("direct_single_stream_makespan_s", direct),
+        ("wan_speedup", direct / striped.max(1e-9)),
+    ];
+    const UTIL_KEYS: [&str; 4] = ["util_r0", "util_r1", "util_r2", "util_r3"];
+    for (i, (region, util)) in plan.region_utilization(payload, striped).iter().enumerate() {
+        println!("  {region}: {:.0}% WAN utilization over the makespan", util * 100.0);
+        derived.push((UTIL_KEYS[i], *util));
+    }
+    let out = std::path::Path::new("BENCH_wan.json");
+    b.write_json(out, "wan", &derived).expect("write bench json");
+}

@@ -7,7 +7,11 @@
 //!   stage in a side buffer and apply only at a safe point on Commit;
 //! * a delta applies only if its `base_version` equals the active version
 //!   (out-of-order / replayed deltas are rejected);
-//! * the active-version tag advances only after the scatter completes.
+//! * the active-version tag advances only after the scatter completes;
+//! * a `Commit(v)` that overtakes `D_v` segments still in flight (striped
+//!   WAN streams and relay forwarding reorder freely) parks and lands once
+//!   the last segment completes staging — reordering never poisons an
+//!   otherwise healthy stream.
 //!
 //! Staging runs through the streaming decoder (`delta/stream.rs`): each
 //! arriving segment is parsed incrementally and its payload freed, so the
@@ -172,8 +176,15 @@ impl PolicyState {
     /// [`on_safe_point`](Self::on_safe_point) between generation batches.
     /// A newer deferred request supersedes an older one (the later delta
     /// chains through `commit_chain`-style catch-up on apply).
+    ///
+    /// A request for a *future* version whose delta is not fully staged
+    /// yet also parks: under multi-path delivery (striped WAN streams,
+    /// relay forwarding) a `Commit(v)` can overtake `D_v` segments still
+    /// in flight, and failing it would poison an otherwise healthy stream.
+    /// The parked commit lands once the last segment completes staging
+    /// (the segment path calls [`on_safe_point`](Self::on_safe_point)).
     pub fn request_commit(&mut self, version: u64) -> CommitResult {
-        if self.generating {
+        if self.generating || self.chain_in_flight(version) {
             let v = self.pending_commit.map_or(version, |p| p.max(version));
             self.pending_commit = Some(v);
             return CommitResult::Deferred;
@@ -181,16 +192,32 @@ impl PolicyState {
         self.commit(version)
     }
 
+    /// True while any delta on the commit chain `active+1 ..= version` has
+    /// not fully staged yet. Multi-path delivery can reorder *whole
+    /// deltas*, not just segments — a small `D_v` on fast stripes can
+    /// complete while `D_{v-1}` is still in flight — and applying early
+    /// would fail with `BaseMismatch` instead of waiting.
+    fn chain_in_flight(&self, version: u64) -> bool {
+        version > self.active_version
+            && (self.active_version + 1..=version).any(|w| !self.staged.contains_key(&w))
+    }
+
     /// Safe-point hook: called by the generation loop between batches
-    /// (`generating == false`). Applies a commit parked by
-    /// [`request_commit`](Self::request_commit), chaining through any
-    /// intermediate staged versions, and reports what happened.
-    /// `None` when nothing was pending (or no safe point yet).
+    /// (`generating == false`) and after staging progress. Applies a
+    /// commit parked by [`request_commit`](Self::request_commit), chaining
+    /// through any intermediate staged versions, and reports what
+    /// happened. `None` when nothing was pending, no safe point was
+    /// reached, or the pending version's segments are still in flight
+    /// (reordered multi-stream delivery: retry on the next call).
     pub fn on_safe_point(&mut self) -> Option<(u64, CommitResult)> {
         if self.generating {
             return None;
         }
-        let v = self.pending_commit.take()?;
+        let v = self.pending_commit?;
+        if self.chain_in_flight(v) {
+            return None; // deltas still in flight; keep the commit parked
+        }
+        self.pending_commit = None;
         // Chain intermediate versions so a deferred v+k lands from v.
         while self.active_version < v.saturating_sub(1) && self.commit(self.active_version + 1) == CommitResult::Applied {}
         Some((v, self.commit(v)))
@@ -375,6 +402,78 @@ mod tests {
         assert_eq!(st.on_safe_point(), Some((2, CommitResult::Applied)));
         assert_eq!(st.active_version(), 2);
         assert_eq!(st.params(), &p2);
+    }
+
+    #[test]
+    fn commit_overtaking_striped_segments_parks_until_staged() {
+        // Multi-path delivery (striped WAN streams, relay forwarding) can
+        // reorder a Commit(v) ahead of D_v's last segments. The commit
+        // must park — not fail — and land when staging completes.
+        let (l, p0) = setup();
+        let p1 = perturbed(&p0, 31);
+        let c1 = ckpt(&l, &p0, &p1, 0, 1);
+        let mut st = PolicyState::new(l, p0.clone(), 0);
+        let segs = split_into_segments(1, &c1.bytes, 64);
+        // Only the first half of the stream has arrived when Commit lands.
+        for s in &segs[..segs.len() / 2] {
+            st.on_segment(s.clone()).unwrap();
+        }
+        assert_eq!(st.request_commit(1), CommitResult::Deferred);
+        assert!(st.has_pending_commit());
+        assert_eq!(st.on_safe_point(), None, "segments still in flight: stay parked");
+        assert!(st.has_pending_commit(), "parked commit survives the retry");
+        assert_eq!(st.active_version(), 0);
+        // The stragglers arrive (out of order) and the commit lands.
+        for s in segs[segs.len() / 2..].iter().rev() {
+            st.on_segment(s.clone()).unwrap();
+        }
+        assert_eq!(st.on_safe_point(), Some((1, CommitResult::Applied)));
+        assert_eq!(st.active_version(), 1);
+        assert_eq!(st.params(), &p1, "bit-exact despite the overtaken commit");
+        assert!(!st.has_pending_commit());
+    }
+
+    #[test]
+    fn commit_parks_while_an_intermediate_delta_is_still_in_flight() {
+        // Whole deltas can reorder, not just segments: a small D_2 on fast
+        // stripes completes while D_1 is still streaming. A parked
+        // Commit(2) must wait for the full chain, then apply through it —
+        // not consume the request and die on BaseMismatch.
+        let (l, p0) = setup();
+        let p1 = perturbed(&p0, 41);
+        let p2 = perturbed(&p1, 42);
+        let c1 = ckpt(&l, &p0, &p1, 0, 1);
+        let c2 = ckpt(&l, &p1, &p2, 1, 2);
+        let mut st = PolicyState::new(l, p0, 0);
+        st.stage_checkpoint(c2); // D_2 fully staged first
+        assert_eq!(st.request_commit(1), CommitResult::Deferred);
+        assert_eq!(st.request_commit(2), CommitResult::Deferred);
+        assert_eq!(st.on_safe_point(), None, "D_1 still in flight: stay parked");
+        assert!(st.has_pending_commit(), "request survives the retry");
+        // D_1's segments land (out of order) and the chain applies.
+        let segs = split_into_segments(1, &c1.bytes, 64);
+        for s in segs.iter().rev() {
+            st.on_segment(s.clone()).unwrap();
+        }
+        assert_eq!(st.on_safe_point(), Some((2, CommitResult::Applied)));
+        assert_eq!(st.active_version(), 2);
+        assert_eq!(st.params(), &p2);
+    }
+
+    #[test]
+    fn commit_before_any_segment_parks_too() {
+        // The extreme reorder: Commit(v) beats every segment of D_v (no
+        // staging decoder exists yet). It must still park, not fail.
+        let (l, p0) = setup();
+        let p1 = perturbed(&p0, 32);
+        let c1 = ckpt(&l, &p0, &p1, 0, 1);
+        let mut st = PolicyState::new(l, p0, 0);
+        assert_eq!(st.request_commit(1), CommitResult::Deferred);
+        for s in split_into_segments(1, &c1.bytes, 64) {
+            st.on_segment(s).unwrap();
+        }
+        assert_eq!(st.on_safe_point(), Some((1, CommitResult::Applied)));
+        assert_eq!(st.params(), &p1);
     }
 
     #[test]

@@ -95,6 +95,42 @@ pub fn paper_models() -> Vec<&'static str> {
     vec!["qwen3-4b", "qwen3-8b", "qwen3-14b"]
 }
 
+/// A multi-region WAN deployment preset (§7.5 / Fig 13): which regions
+/// host rollout actors and how many per region. The trainer hub is always
+/// US-local; each region's WAN link profile comes from
+/// [`regions`](super::regions).
+#[derive(Clone, Debug)]
+pub struct WanPreset {
+    pub name: &'static str,
+    /// Hub→region link profiles, in deployment order.
+    pub regions: Vec<super::RegionProfile>,
+    /// Rollout actors hosted in each region.
+    pub actors_per_region: usize,
+}
+
+impl WanPreset {
+    pub fn n_actors(&self) -> usize {
+        self.regions.len() * self.actors_per_region
+    }
+}
+
+/// The §7.5 region roll-out order: regions join in the order the paper
+/// adds datacenters (Fig 13's 1-DC → 4-DC sweep).
+pub fn wan_region_order() -> [super::RegionProfile; 4] {
+    use super::regions;
+    [regions::CANADA, regions::JAPAN, regions::NETHERLANDS, regions::ICELAND]
+}
+
+/// Look up a WAN preset: `wan-N` (N = 1..=4) spreads actors over the
+/// first N regions of [`wan_region_order`] (2 actors per region, the
+/// paper's 8-actor fleet split evenly at 4 DCs).
+pub fn wan_preset(name: &str) -> Option<WanPreset> {
+    const NAMES: [&str; 4] = ["wan-1", "wan-2", "wan-3", "wan-4"];
+    let idx = NAMES.iter().position(|&n| n == name)?;
+    let regions = wan_region_order()[..=idx].to_vec();
+    Some(WanPreset { name: NAMES[idx], regions, actors_per_region: 2 })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -124,6 +160,21 @@ mod tests {
     #[test]
     fn unknown_model_is_none() {
         assert!(model("gpt-17t").is_none());
+    }
+
+    #[test]
+    fn wan_presets_scale_one_to_four_regions() {
+        for n in 1..=4usize {
+            let p = wan_preset(&format!("wan-{n}")).unwrap();
+            assert_eq!(p.regions.len(), n);
+            assert_eq!(p.n_actors(), 2 * n);
+            // Every region has a real WAN profile (nonzero RTT + bandwidth).
+            for r in &p.regions {
+                assert!(r.bandwidth_bps > 0.0 && r.rtt_s > 0.0, "{}", r.name);
+            }
+        }
+        assert_eq!(wan_preset("wan-1").unwrap().regions[0].name, "canada");
+        assert!(wan_preset("wan-9").is_none());
     }
 
     #[test]

@@ -80,6 +80,48 @@ impl Deployment {
         };
         billed * self.cost_per_hr()
     }
+
+    /// Cross-region egress cost of moving `bytes` out of the trainer's
+    /// cloud. Reserved RDMA deployments keep all traffic in-fabric (free);
+    /// cross-cloud deployments pay commodity egress per GB — the term the
+    /// 79x payload reduction shrinks along with transfer time.
+    pub fn egress_cost(&self, bytes: u64) -> f64 {
+        match self.procurement {
+            Procurement::OnDemandCrossCloud => bytes as f64 / 1e9 * EGRESS_PER_GB,
+            Procurement::ReservedRdma => 0.0,
+        }
+    }
+
+    /// Tokens per dollar including delta-distribution egress: GPU-hours
+    /// plus the egress bill for `egress_bytes_per_step` every `step_s`
+    /// seconds (one WAN copy per region under the relay tree).
+    pub fn tokens_per_dollar_with_egress(
+        &self,
+        tokens_per_s: f64,
+        egress_bytes_per_step: u64,
+        step_s: f64,
+    ) -> f64 {
+        let egress_per_hr = self.egress_cost(egress_bytes_per_step) * 3600.0 / step_s.max(1e-9);
+        tokens_per_s * 3600.0 / (self.cost_per_hr() + egress_per_hr)
+    }
+}
+
+/// Commodity inter-cloud egress rate, $/GB (order-of-magnitude commodity
+/// pricing; the paper's cost tables price GPU-hours only, so egress is an
+/// additional conservative term against SparrowRL).
+pub const EGRESS_PER_GB: f64 = 0.08;
+
+/// The multi-region WAN deployment behind `sparrowrl exp wan` (§7.5 /
+/// Fig 13 scaled out): a 4xH100 trainer block plus `actors_per_region`
+/// A100 actors in each of `n_regions` regions, all on-demand cross-cloud.
+pub fn wan_deployment(n_regions: usize, actors_per_region: usize) -> Deployment {
+    Deployment::cross_cloud(
+        &format!("4xH100 + {n_regions}x{actors_per_region}xA100 ({n_regions}-region cross-cloud)"),
+        vec![
+            GpuPool { class: GpuClass::H100, count: 4 },
+            GpuPool { class: GpuClass::A100, count: n_regions * actors_per_region },
+        ],
+    )
 }
 
 /// The paper's Table 6 deployment pairs for a given model scale.
@@ -137,6 +179,30 @@ mod tests {
         let (sparrow, _) = table6_deployments("qwen3-8b").unwrap();
         let tpd = sparrow.tokens_per_dollar(15_900.0);
         assert!((3.4e6..3.8e6).contains(&tpd), "{tpd}");
+    }
+
+    #[test]
+    fn wan_deployment_prices_per_region_actors() {
+        let d = wan_deployment(4, 2);
+        assert_eq!(d.gpu_count(), 12);
+        let expect = 4.0 * GpuClass::H100.on_demand_per_hr()
+            + 8.0 * GpuClass::A100.on_demand_per_hr();
+        assert!((d.cost_per_hr() - expect).abs() < 1e-9);
+        assert_eq!(d.procurement, Procurement::OnDemandCrossCloud);
+    }
+
+    #[test]
+    fn egress_billed_only_cross_cloud_and_shrinks_tokens_per_dollar() {
+        let wan = wan_deployment(4, 2);
+        let (_, rdma) = table6_deployments("qwen3-8b").unwrap();
+        // 4 regions x 202 MB per step.
+        let per_step = 4 * 202_000_000u64;
+        assert!((wan.egress_cost(per_step) - 0.8 * 0.08 * 1.01).abs() < 1e-3);
+        assert_eq!(rdma.egress_cost(per_step), 0.0);
+        let plain = wan.tokens_per_dollar(10_000.0);
+        let with = wan.tokens_per_dollar_with_egress(10_000.0, per_step, 60.0);
+        assert!(with < plain, "egress must cost something");
+        assert!(with > plain * 0.5, "but stays the same order of magnitude");
     }
 
     #[test]

@@ -47,7 +47,7 @@ pub fn extract_delta(
     }
 }
 
-/// Invoke `hit(i)` for every position where old[i] != new[i] (bitwise).
+/// Invoke `hit(i)` for every position where `old[i] != new[i]` (bitwise).
 /// Word-at-a-time comparison: four bf16 lanes per u64, branch only on the
 /// rare unequal word — this is what makes the dense scan ~memory-bound.
 /// Shared with the fused streaming encoder (`delta/stream.rs`), which

@@ -11,6 +11,30 @@
 //! is not always bit-exact, whereas assignment is lossless by construction
 //! at identical payload size (16 bits/value). An additive mode is provided
 //! for compatibility experiments (`ApplyMode::Add`).
+//!
+//! Round-tripping a small delta through the wire codec:
+//!
+//! ```
+//! use sparrowrl::delta::{
+//!     apply_delta, decode_delta, encode_delta, extract_delta, ApplyMode, ModelLayout, ParamSet,
+//! };
+//! use sparrowrl::util::{Bf16, Rng};
+//!
+//! let layout = ModelLayout::transformer("doc", 64, 16, 2, 32);
+//! let mut rng = Rng::new(7);
+//! let old = ParamSet::random(&layout, 0.02, &mut rng);
+//! let mut new = old.clone();
+//! new.tensors[0][3] = Bf16::from_f32(0.5); // one training "update"
+//!
+//! let delta = extract_delta(&layout, &old, &new, 0, 1, ApplyMode::Assign);
+//! let wire = encode_delta(&delta);
+//! let back = decode_delta(&wire).expect("codec is lossless");
+//! assert_eq!(back, delta);
+//!
+//! let mut actor = old.clone();
+//! apply_delta(&mut actor, &back);
+//! assert_eq!(actor, new, "bit-exact after scatter-assign");
+//! ```
 
 pub mod checkpoint;
 pub mod encode;

@@ -4,6 +4,7 @@
 pub mod e2e;
 pub mod encoding;
 pub mod sparsity;
+pub mod wan;
 
 use crate::util::cli::Args;
 use anyhow::{bail, Result};
@@ -11,7 +12,7 @@ use anyhow::{bail, Result};
 /// All experiment ids, in paper order (plus repo-specific extras).
 pub const ALL: &[&str] = &[
     "table2", "fig3", "fig4", "table4", "fig8", "fig9", "fig10", "fig11",
-    "table5", "fig12", "fig13", "table6", "table7", "overlap",
+    "table5", "fig12", "fig13", "table6", "table7", "overlap", "wan",
 ];
 
 /// Dispatch one experiment by id.
@@ -31,6 +32,7 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         "table6" => e2e::table6(args),
         "table7" => e2e::table7(args),
         "overlap" => e2e::overlap(args),
+        "wan" => wan::wan(args),
         "all" => {
             for id in ALL {
                 println!("\n################ {id} ################");

@@ -15,7 +15,10 @@
 //! * **L1** — `python/compile/kernels/`: Pallas attention and delta-diff
 //!   kernels called from L2 (interpret mode on CPU).
 //!
-//! See DESIGN.md for the system inventory and the paper-experiment index.
+//! See DESIGN.md for the system inventory and the paper-experiment index,
+//! and docs/ARCHITECTURE.md for the subsystem map (delta pipeline →
+//! runtime → transport/netsim), the wire formats, the mailbox protocol,
+//! and the multi-region distribution-tree design.
 
 pub mod actor;
 pub mod config;

@@ -19,7 +19,7 @@ use sparrowrl::util::cli::Args;
 fn usage() -> ! {
     eprintln!(
         "usage:\n  sparrowrl exp <{}|all> [--flags]\n  sparrowrl train [--model sparrow-xs] \
-         [--steps N] [--sft-steps N] [--algorithm grpo|rloo|opo] [--lr-rl X] [--actors N] [--seed S] [--pipelined] [--gantt]\n  \
+         [--steps N] [--sft-steps N] [--algorithm grpo|rloo|opo] [--lr-rl X] [--actors N] [--seed S] [--pipelined] [--wan wan-1..wan-4] [--gantt]\n  \
          sparrowrl sim [--model qwen3-8b] [--system sparrow|full|ms|ideal] [--bench gsm8k|math|deepscaler] [--steps N]\n  \
          sparrowrl list",
         exp::ALL.join("|")
@@ -66,7 +66,29 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.bench = Benchmark::parse(&args.str_or("bench", "gsm8k"))
         .ok_or_else(|| anyhow::anyhow!("bad --bench"))?;
     cfg.verbose = true;
-    let mode = if args.flag("pipelined") { ExecMode::Pipelined } else { ExecMode::Sequential };
+    let mut mode = if args.flag("pipelined") { ExecMode::Pipelined } else { ExecMode::Sequential };
+    // Multi-region distribution: group the actors per a WAN preset and
+    // stream deltas hub -> regional relay -> peers (implies --pipelined,
+    // since the sequential reference has no distribution tree).
+    let wan = args.str_or("wan", "");
+    if !wan.is_empty() {
+        if args.get("actors").is_some() {
+            anyhow::bail!("--wan sets the actor count from the preset; drop --actors");
+        }
+        let preset = config::wan_preset(&wan)
+            .ok_or_else(|| anyhow::anyhow!("unknown WAN preset {wan} (wan-1..wan-4)"))?;
+        let plan = sparrowrl::transport::DistributionPlan::from_preset(&preset, 1 << 20);
+        cfg.n_actors = plan.n_actors();
+        cfg.distribution = Some(sparrowrl::rt::DistributionSpec::from_plan(&plan));
+        mode = ExecMode::Pipelined;
+        println!(
+            "WAN preset {}: {} regions, {} actors, relays {:?}",
+            preset.name,
+            preset.regions.len(),
+            plan.n_actors(),
+            plan.legs.iter().map(|l| l.relay).collect::<Vec<_>>(),
+        );
+    }
     println!(
         "training {model} with {} on {} ({} actors, {} SFT + {} RL steps, {} executor)",
         cfg.algorithm.name(),

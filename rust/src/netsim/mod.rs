@@ -8,12 +8,23 @@
 //! is modelled with the Mathis throughput ceiling, which captures the two
 //! phenomena the paper exploits: a single stream under-utilizes a long-fat
 //! lossy pipe, and S parallel streams recover up to the capacity limit.
+//!
+//! Three layers:
+//! * [`link`] — analytic per-path throughput (Mathis ceiling, slow-start,
+//!   jitter);
+//! * [`event`] — a deterministic discrete-event queue over virtual time;
+//! * [`stripes`] — segment-level arrival order under multi-stream
+//!   striping: heterogeneous WAN legs are loss-free at this layer but
+//!   reorder freely across stripes, which is exactly what the staging
+//!   decoders must tolerate.
 
 pub mod event;
 pub mod link;
+pub mod stripes;
 
 pub use event::EventQueue;
 pub use link::{Link, TransferOpts};
+pub use stripes::{deliver_striped, striped_makespan, Arrival};
 
 /// Simulated time in seconds.
 pub type SimTime = f64;

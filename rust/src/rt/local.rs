@@ -52,6 +52,13 @@ pub struct LocalRunConfig {
     /// pipelined executors then produce bit-identical results (used by the
     /// equivalence tests; leave off for real throughput measurements).
     pub deterministic: bool,
+    /// Geo-distribution wiring for the pipelined executor: actors grouped
+    /// into regions with one relay each; the hub streams delta segments to
+    /// relays only and relays forward to peers (the in-process mirror of
+    /// `transport::DistributionPlan`). `None` = flat hub→all streaming.
+    /// The sequential reference executor ignores this — staging is
+    /// order-insensitive, so results are bit-identical either way.
+    pub distribution: Option<crate::rt::pipeline::DistributionSpec>,
 }
 
 impl LocalRunConfig {
@@ -72,6 +79,7 @@ impl LocalRunConfig {
             seed: 0,
             verbose: false,
             deterministic: false,
+            distribution: None,
         }
     }
 }

@@ -9,7 +9,11 @@
 //! actor, training/delta-streaming hidden inside the generation window).
 //! `compute` abstracts the model backend (PJRT artifacts or the
 //! deterministic synthetic engine). `net` adds the TCP transport so the
-//! same loop runs across processes.
+//! same loop runs across processes. With a [`DistributionSpec`]
+//! (`LocalRunConfig::distribution`) the pipelined executor routes delta
+//! segments hub → regional relay worker → peers, mirroring the
+//! multi-region WAN tree of `transport::DistributionPlan` in one process
+//! (see docs/ARCHITECTURE.md).
 
 pub mod compute;
 pub mod local;
@@ -18,4 +22,4 @@ pub mod pipeline;
 
 pub use compute::{Compute, ComputeShape, SyntheticCompute};
 pub use local::{evaluate, run_local, run_local_mode, LocalRunConfig, RunReport, StepLog};
-pub use pipeline::{policy_checksum, run_with_compute, ExecMode};
+pub use pipeline::{policy_checksum, run_with_compute, DistributionSpec, ExecMode};

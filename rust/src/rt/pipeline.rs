@@ -47,6 +47,60 @@ use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::time::Instant;
 
+/// Geo-distribution wiring for the runtime: actors grouped into regions,
+/// one relay per region. The hub streams each delta segment once per
+/// region — to the relay's mailbox — and the relay worker forwards it to
+/// its regional peers cut-through, mirroring
+/// [`crate::transport::DistributionPlan`]'s tree inside one process.
+/// Commits still go hub→actor directly, so on multi-hop paths a
+/// `Commit(v)` can overtake `D_v` segments; `PolicyState` parks such
+/// commits until staging completes (see `actor::mod`).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DistributionSpec {
+    /// Region index of each actor, in actor order (empty = flat hub→all).
+    pub region_of: Vec<usize>,
+}
+
+impl DistributionSpec {
+    /// Derive the runtime wiring from a transport-layer plan.
+    pub fn from_plan(plan: &crate::transport::DistributionPlan) -> DistributionSpec {
+        DistributionSpec { region_of: plan.region_map() }
+    }
+
+    pub fn is_flat(&self) -> bool {
+        self.region_of.is_empty()
+    }
+
+    pub fn n_regions(&self) -> usize {
+        self.region_of.iter().max().map_or(0, |m| m + 1)
+    }
+
+    /// The relay (first actor) of each region, by region index.
+    pub fn relays(&self) -> Vec<usize> {
+        (0..self.n_regions())
+            .filter_map(|r| self.region_of.iter().position(|&x| x == r))
+            .collect()
+    }
+
+    /// Actors relay `actor` forwards segments to: its region's non-relay
+    /// members, when `actor` is that region's relay; empty otherwise.
+    pub fn forward_targets(&self, actor: usize) -> Vec<usize> {
+        let Some(&region) = self.region_of.get(actor) else {
+            return Vec::new();
+        };
+        let relay = self.region_of.iter().position(|&x| x == region);
+        if relay != Some(actor) {
+            return Vec::new();
+        }
+        self.region_of
+            .iter()
+            .enumerate()
+            .filter(|&(i, &r)| r == region && i != actor)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
 /// Executor choice for the local runtime.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ExecMode {
@@ -271,6 +325,12 @@ impl<'a, C: Compute> Hub<'a, C> {
             sched.register(i as u32, 1000.0);
             sched.observe_version(i as u32, VersionState { active: 0, staged: None });
         }
+        // Region tags / the bandwidth-aware allocation gate are not wired
+        // here: in-process streaming has no per-region WAN timings to
+        // observe (and feeding wall-clock stream durations would break the
+        // deterministic executor-equivalence contract). The gate runs
+        // where real link timings exist: the netsim driver
+        // (`SimConfig::bandwidth_gate`) and `sparrowrl exp wan`.
         let clock = if cfg.deterministic {
             RunClock::Virtual(0.0)
         } else {
@@ -520,6 +580,15 @@ pub fn run_with_compute<C: Compute>(
     if cfg.n_actors == 0 {
         bail!("need at least one actor");
     }
+    if let Some(spec) = &cfg.distribution {
+        if !spec.is_flat() && spec.region_of.len() != cfg.n_actors {
+            bail!(
+                "distribution spec covers {} actors but n_actors is {}",
+                spec.region_of.len(),
+                cfg.n_actors
+            );
+        }
+    }
     let mut rng = Rng::new(cfg.seed);
     let mut state = TrainState::init(layout, &mut rng);
 
@@ -628,10 +697,21 @@ fn run_sequential<C: Compute>(hub: &mut Hub<C>) -> Result<()> {
     Ok(())
 }
 
+/// Forward one segment to every downstream mailbox (regional relay duty:
+/// cut-through, before local staging, so peers never wait on the relay's
+/// own decode). Send failures mean the peer exited; its own error path
+/// reports the cause, so drops here are not amplified.
+fn forward_segment(forwards: &[Sender<ToActor>], seg: &Segment) {
+    for tx in forwards {
+        let _ = tx.send(ToActor::Segment(seg.clone()));
+    }
+}
+
 /// Drain an actor's mailbox, then let any parked commit land if we are at
-/// a safe point. Segments stage regardless of the generating flag; a
-/// `Commit` delivered mid-batch parks via [`PolicyState::request_commit`]
-/// and is applied (and acknowledged) by the trailing
+/// a safe point. Segments stage regardless of the generating flag (and are
+/// forwarded first when this actor relays for its region); a `Commit`
+/// delivered mid-batch parks via [`PolicyState::request_commit`] and is
+/// applied (and acknowledged) by the trailing
 /// [`PolicyState::on_safe_point`] once `generating` drops. `Generate`
 /// messages are parked on the backlog for the main loop.
 fn drain_mailbox(
@@ -640,11 +720,13 @@ fn drain_mailbox(
     backlog: &mut VecDeque<GenJob>,
     actor: u32,
     tx: &Sender<FromActor>,
+    forwards: &[Sender<ToActor>],
     t0: Instant,
 ) -> Result<(), String> {
     loop {
         match rx.try_recv() {
             Ok(ToActor::Segment(seg)) => {
+                forward_segment(forwards, &seg);
                 state
                     .on_segment(seg)
                     .map_err(|e| format!("actor {actor} staging: {e}"))?;
@@ -727,6 +809,7 @@ fn actor_worker<C: Compute>(
     mut state: PolicyState,
     rx: Receiver<ToActor>,
     tx: Sender<FromActor>,
+    forwards: Vec<Sender<ToActor>>,
     t0: Instant,
 ) {
     struct PanicGuard<'a> {
@@ -757,7 +840,7 @@ fn actor_worker<C: Compute>(
             ToActor::Generate(job) => {
                 let start_s = t0.elapsed().as_secs_f64();
                 run_gen_job(comp, cfg, &mut state, actor, &job, |st| {
-                    drain_mailbox(&rx, st, &mut backlog, actor, &tx, t0)
+                    drain_mailbox(&rx, st, &mut backlog, actor, &tx, &forwards, t0)
                 })
                 .and_then(|(rollouts, gen_tokens)| {
                     let reply = FromActor::Generated {
@@ -771,10 +854,17 @@ fn actor_worker<C: Compute>(
                     tx.send(reply).map_err(|_| "hub exited".to_string())
                 })
             }
-            ToActor::Segment(seg) => state
-                .on_segment(seg)
-                .map(|_| ())
-                .map_err(|e| format!("actor {actor} staging: {e}")),
+            ToActor::Segment(seg) => {
+                forward_segment(&forwards, &seg);
+                state
+                    .on_segment(seg)
+                    .map(|_| ())
+                    .map_err(|e| format!("actor {actor} staging: {e}"))
+                    // A commit that overtook these segments (relay routing
+                    // reorders hub→actor message paths) lands as soon as
+                    // staging completes.
+                    .and_then(|()| service_safe_point(&mut state, actor, &tx, t0))
+            }
             ToActor::Commit(v) => commit_and_ack(&mut state, actor, v, &tx, t0),
         };
         if let Err(msg) = outcome {
@@ -792,15 +882,28 @@ fn run_pipelined<C: Compute>(hub: &mut Hub<C>) -> Result<()> {
     let comp = hub.comp;
     let cfg = hub.cfg;
     let t0 = hub.t0;
+    let spec = cfg.distribution.clone().unwrap_or_default();
     std::thread::scope(|scope| {
         let (from_tx, from_rx) = channel::<FromActor>();
+        // Create every mailbox first: relay workers need their peers'
+        // senders at spawn time.
+        let mut rxs: Vec<Option<Receiver<ToActor>>> = Vec::with_capacity(n);
         let mut to_txs: Vec<Sender<ToActor>> = Vec::with_capacity(n);
-        for i in 0..n {
+        for _ in 0..n {
             let (tx, rx) = channel::<ToActor>();
             to_txs.push(tx);
+            rxs.push(Some(rx));
+        }
+        for (i, slot) in rxs.iter_mut().enumerate() {
+            let rx = slot.take().expect("receiver consumed once");
             let state = PolicyState::new(hub.layout.clone(), hub.policy.clone(), 0);
             let ftx = from_tx.clone();
-            scope.spawn(move || actor_worker(comp, cfg, i as u32, state, rx, ftx, t0));
+            let forwards: Vec<Sender<ToActor>> = spec
+                .forward_targets(i)
+                .into_iter()
+                .map(|j| to_txs[j].clone())
+                .collect();
+            scope.spawn(move || actor_worker(comp, cfg, i as u32, state, rx, ftx, forwards, t0));
         }
         drop(from_tx);
         pipelined_hub_loop(hub, &to_txs, &from_rx)
@@ -809,20 +912,28 @@ fn run_pipelined<C: Compute>(hub: &mut Hub<C>) -> Result<()> {
     })
 }
 
-/// Broadcast one version's delta + commit to every mailbox, moving (not
-/// cloning) the segment into the last one.
+/// Stream one version's delta into the distribution tree + commit to
+/// every mailbox, moving (not cloning) each segment into its last target.
+/// Flat topology: every actor gets every segment from the hub. Regional
+/// topology ([`DistributionSpec`]): the hub sends each segment once per
+/// region — to the relay — and relays forward to their peers, so the
+/// hub-side send fan-out is O(regions) exactly like the WAN tree.
 fn broadcast_and_commit<C: Compute>(
     hub: &mut Hub<C>,
     to_txs: &[Sender<ToActor>],
     batch_step: u64,
     batch: &[Rollout],
 ) -> Result<()> {
-    let last = to_txs.len() - 1;
+    let targets: Vec<usize> = match &hub.cfg.distribution {
+        Some(spec) if !spec.is_flat() => spec.relays(),
+        _ => (0..to_txs.len()).collect(),
+    };
+    let last = targets.len() - 1;
     hub.train_and_stream(batch_step, batch, |seg| {
-        for tx in &to_txs[..last] {
-            let _ = tx.send(ToActor::Segment(seg.clone()));
+        for &i in &targets[..last] {
+            let _ = to_txs[i].send(ToActor::Segment(seg.clone()));
         }
-        let _ = to_txs[last].send(ToActor::Segment(seg));
+        let _ = to_txs[targets[last]].send(ToActor::Segment(seg));
     })?;
     let v = hub.version;
     for (i, tx) in to_txs.iter().enumerate() {

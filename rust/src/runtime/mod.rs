@@ -126,7 +126,7 @@ impl Engines {
     }
 
     /// One optimizer step in place on `state`; returns the loss.
-    /// `tokens`/`mask` are [b_train * max_seq]; `adv` is [b_train].
+    /// `tokens`/`mask` are `[b_train * max_seq]`; `adv` is `[b_train]`.
     pub fn train_step(
         &self,
         state: &mut TrainState,

@@ -1,6 +1,6 @@
 //! Heterogeneity-aware job scheduling — the paper's Algorithm 1 (§5.3).
 //!
-//! Two mechanisms:
+//! Three mechanisms:
 //! * **Adaptive allocation**: each step's batch B splits across eligible
 //!   actors proportionally to EMA throughput estimates tau_a, so fast and
 //!   slow actors finish together.
@@ -8,6 +8,28 @@
 //!   staged (they get a Commit first), receive work. Actors further behind
 //!   are excluded for the step and their tau decays by alpha so they
 //!   rejoin conservatively.
+//! * **Bandwidth-aware gating** (§5.2's "throughput- and bandwidth-aware
+//!   scheduling", multi-region form): actors carry a region tag, each
+//!   region's observed delta-distribution throughput feeds an EMA
+//!   ([`Scheduler::observe_transfer`]), and
+//!   [`Scheduler::allocate_bandwidth_aware`] shrinks the share of regions
+//!   whose predicted delivery time exceeds the generation window — work
+//!   shifts toward regions that can actually hide the next delta.
+//!
+//! ```
+//! use sparrowrl::scheduler::{Scheduler, SchedulerConfig, VersionState};
+//!
+//! let mut s = Scheduler::new(SchedulerConfig::default());
+//! s.register(0, 5000.0); // H100 prior, tokens/s
+//! s.register(1, 2500.0); // A100 prior
+//! for a in [0, 1] {
+//!     s.observe_version(a, VersionState { active: 3, staged: None });
+//! }
+//! // The paper's §5.3 worked example: 300 requests split 200/100.
+//! let alloc = s.allocate(3, 300);
+//! assert_eq!(alloc[0].requests, 200);
+//! assert_eq!(alloc[1].requests, 100);
+//! ```
 
 use crate::util::Ema;
 use std::collections::BTreeMap;
@@ -60,11 +82,65 @@ pub struct Assignment {
 pub struct Scheduler {
     cfg: SchedulerConfig,
     actors: BTreeMap<ActorId, ActorEntry>,
+    /// Region tag per actor (multi-region deployments; untagged = local).
+    region_of: BTreeMap<ActorId, usize>,
+    /// Observed delta-distribution throughput per region, bytes/s EMA.
+    region_bps: BTreeMap<usize, Ema>,
 }
 
 impl Scheduler {
     pub fn new(cfg: SchedulerConfig) -> Scheduler {
-        Scheduler { cfg, actors: BTreeMap::new() }
+        Scheduler {
+            cfg,
+            actors: BTreeMap::new(),
+            region_of: BTreeMap::new(),
+            region_bps: BTreeMap::new(),
+        }
+    }
+
+    /// Tag an actor with its deployment region (for the bandwidth gate).
+    pub fn set_region(&mut self, actor: ActorId, region: usize) {
+        self.region_of.insert(actor, region);
+    }
+
+    /// Record one observed delta distribution into `region`: `bytes`
+    /// delivered in `elapsed_s` seconds (WAN leg completion as seen by the
+    /// hub or the netsim). Feeds the per-region throughput EMA.
+    pub fn observe_transfer(&mut self, region: usize, bytes: u64, elapsed_s: f64) {
+        if elapsed_s <= 0.0 {
+            return;
+        }
+        self.region_bps
+            .entry(region)
+            .or_insert_with(|| Ema::new(self.cfg.beta))
+            .observe(bytes as f64 / elapsed_s);
+    }
+
+    /// Observed distribution throughput of a region, bytes/s (None until
+    /// the first observation).
+    pub fn region_bps(&self, region: usize) -> Option<f64> {
+        self.region_bps.get(&region).and_then(|e| e.get())
+    }
+
+    /// Bandwidth-gate scale for one actor: the fraction of its tau that
+    /// survives given its region's predicted delivery time for
+    /// `payload_bytes` against a `window_s` generation window. Regions
+    /// that deliver within the window (or have no observations yet) keep
+    /// their full share; a region predicted to take 2x the window keeps
+    /// half, and so on — work shifts smoothly toward regions whose next
+    /// delta will actually hide.
+    fn bandwidth_scale(&self, actor: ActorId, payload_bytes: u64, window_s: f64) -> f64 {
+        let Some(&region) = self.region_of.get(&actor) else {
+            return 1.0;
+        };
+        let Some(bps) = self.region_bps(region) else {
+            return 1.0;
+        };
+        if bps <= 0.0 || window_s <= 0.0 {
+            return 1.0;
+        }
+        let predicted = payload_bytes as f64 / bps;
+        (window_s / predicted.max(1e-9)).min(1.0)
     }
 
     /// Register an actor with a GPU-class prior (tokens/s).
@@ -143,6 +219,37 @@ impl Scheduler {
     /// remainder so the full batch is always assigned (avoiding the
     /// paper's implicit rounding loss). Ineligible live actors decay.
     pub fn allocate(&mut self, version: u64, batch: u64) -> Vec<Assignment> {
+        self.allocate_scaled(version, batch, |_| 1.0)
+    }
+
+    /// Bandwidth-aware allocation (§5.2, multi-region): like
+    /// [`allocate`](Self::allocate), but each actor's tau is additionally
+    /// scaled by its region's distribution feasibility — the fraction of a
+    /// `window_s` generation window its region's observed throughput needs
+    /// to land a `payload_bytes` delta. Regions that hide the delta keep
+    /// their full proportional share; starved regions shrink (but never
+    /// hard-exclude: one WAN copy still flows, so they keep catching up).
+    pub fn allocate_bandwidth_aware(
+        &mut self,
+        version: u64,
+        batch: u64,
+        payload_bytes: u64,
+        window_s: f64,
+    ) -> Vec<Assignment> {
+        let scales: BTreeMap<ActorId, f64> = self
+            .actors
+            .keys()
+            .map(|&id| (id, self.bandwidth_scale(id, payload_bytes, window_s)))
+            .collect();
+        self.allocate_scaled(version, batch, |id| scales.get(&id).copied().unwrap_or(1.0))
+    }
+
+    fn allocate_scaled(
+        &mut self,
+        version: u64,
+        batch: u64,
+        scale: impl Fn(ActorId) -> f64,
+    ) -> Vec<Assignment> {
         let cfg = self.cfg;
         // Pass 1: eligible set + aggregate capacity T.
         let mut elig: Vec<(ActorId, f64, bool)> = Vec::new();
@@ -150,7 +257,7 @@ impl Scheduler {
         for (&id, e) in self.actors.iter() {
             let (ok, needs_commit) = Self::eligible(e, version);
             if ok {
-                let t = e.tau.get_or(cfg.default_tau).max(1e-9);
+                let t = (e.tau.get_or(cfg.default_tau) * scale(id)).max(1e-9);
                 total_tau += t;
                 elig.push((id, t, needs_commit));
             }
@@ -326,6 +433,56 @@ mod tests {
         let a1 = alloc.iter().find(|a| a.actor == 1).unwrap().requests;
         let a2 = alloc.iter().find(|a| a.actor == 2).unwrap().requests;
         assert!(a1 >= 290 && a2 <= 110, "a1={a1} a2={a2}");
+    }
+
+    #[test]
+    fn bandwidth_gate_shrinks_starved_region_share() {
+        // Two regions, equal taus. Region 1's observed distribution
+        // throughput can only land the delta in 4x the window: its actors'
+        // share drops to ~1/(1+4) of the pair-wise split.
+        let mut s = sched();
+        for id in 0..4u32 {
+            s.register(id, 2000.0);
+            on_version(&mut s, id, 1);
+            s.set_region(id, (id / 2) as usize);
+        }
+        let payload = 200_000_000u64;
+        let window = 40.0;
+        s.observe_transfer(0, payload, 10.0); // delivers in 1/4 window: fine
+        s.observe_transfer(1, payload, 160.0); // needs 4x the window
+        let alloc = s.allocate_bandwidth_aware(1, 400, payload, window);
+        let total: u64 = alloc.iter().map(|a| a.requests).sum();
+        assert_eq!(total, 400, "full batch still assigned");
+        let r0: u64 = alloc.iter().filter(|a| a.actor < 2).map(|a| a.requests).sum();
+        let r1: u64 = alloc.iter().filter(|a| a.actor >= 2).map(|a| a.requests).sum();
+        assert!(r1 > 0, "starved region is throttled, not excluded");
+        // scale(r0)=1, scale(r1)=0.25 -> 320/80 exactly.
+        assert_eq!(r0, 320, "r0={r0} r1={r1}");
+        assert_eq!(r1, 80);
+    }
+
+    #[test]
+    fn bandwidth_gate_neutral_without_observations_or_regions() {
+        let mut s = sched();
+        for id in 0..3u32 {
+            s.register(id, 1000.0 + id as f64 * 500.0);
+            on_version(&mut s, id, 2);
+        }
+        s.set_region(0, 0); // tagged but never observed
+        let plain = s.allocate(2, 300);
+        let gated = s.allocate_bandwidth_aware(2, 300, 100_000_000, 30.0);
+        assert_eq!(plain, gated, "no observations: gate must be a no-op");
+    }
+
+    #[test]
+    fn region_throughput_ema_blends_observations() {
+        let mut s = sched();
+        s.observe_transfer(3, 100_000_000, 10.0); // 10 MB/s
+        assert!((s.region_bps(3).unwrap() - 1e7).abs() < 1.0);
+        s.observe_transfer(3, 300_000_000, 10.0); // 30 MB/s
+        // beta=0.7: 0.7*10 + 0.3*30 = 16 MB/s
+        assert!((s.region_bps(3).unwrap() - 1.6e7).abs() < 1.0);
+        assert!(s.region_bps(4).is_none());
     }
 
     #[test]

@@ -44,6 +44,11 @@ pub struct SimConfig {
     pub streams: usize,
     /// Heterogeneity-aware (Algorithm 1) vs uniform splitting (Table 7).
     pub hetero_sched: bool,
+    /// Bandwidth-aware gate: feed each region's observed delta-delivery
+    /// throughput back into allocation, shrinking the share of regions
+    /// whose predicted delivery exceeds the generation window (§5.2's
+    /// "throughput- and bandwidth-aware scheduling"; used by `exp wan`).
+    pub bandwidth_gate: bool,
     /// Per-transfer link jitter sampling.
     pub jittered: bool,
     pub seed: u64,
@@ -83,6 +88,7 @@ impl SimConfig {
             steps: 7,
             streams: 4,
             hetero_sched: true,
+            bandwidth_gate: false,
             jittered: false,
             seed: 0,
             failures: Vec::new(),
@@ -210,6 +216,7 @@ pub fn run(cfg: &SimConfig) -> SimResult {
     let mut sched = Scheduler::new(SchedulerConfig::default());
     for (i, a) in actors.iter().enumerate() {
         sched.register(i as u32, cm.rollout_rate(a.gpu, &cfg.model));
+        sched.set_region(i as u32, a.region);
     }
 
     let batch_tokens = cfg.batch as f64 * cm.gen_tokens_per_sample;
@@ -237,8 +244,17 @@ pub fn run(cfg: &SimConfig) -> SimResult {
             sched.observe_version(i as u32, VersionState { active: step, staged: None });
         }
         let shares: Vec<(usize, u64)> = if cfg.hetero_sched {
-            sched
-                .allocate(step, cfg.batch)
+            let alloc = if cfg.bandwidth_gate {
+                sched.allocate_bandwidth_aware(
+                    step,
+                    cfg.batch,
+                    payload,
+                    SimConfig::TARGET_WINDOW_S,
+                )
+            } else {
+                sched.allocate(step, cfg.batch)
+            };
+            alloc
                 .into_iter()
                 .map(|a| (a.actor as usize, a.requests))
                 .collect()
@@ -325,6 +341,8 @@ pub fn run(cfg: &SimConfig) -> SimResult {
                 train_end + plan.direct_fanout_time(wan, payload, members.len(), produce, &mut rng)
             };
             let deliver_at = deliver_at + wan.control_delay(); // Commit msg
+            // Observed distribution throughput feeds the bandwidth gate.
+            sched.observe_transfer(ri, payload, (deliver_at - train_end).max(1e-9));
             for &ai in &members {
                 // Next batch starts once the running batch ends AND the
                 // new version is committed at a safe point.
@@ -461,6 +479,29 @@ mod tests {
         assert!(r.timeline.total("trainer", SpanKind::Train) > 0.0);
         assert!(r.timeline.total("trainer", SpanKind::Transfer) > 0.0);
         assert!(r.timeline.total("actor00", SpanKind::Rollout) > 0.0);
+    }
+
+    #[test]
+    fn bandwidth_gate_preserves_batch_and_determinism() {
+        let model = config::model("qwen3-8b").unwrap();
+        let fleet = vec![
+            RegionSpec::new(regions::CANADA, vec![GpuClass::A100; 4]),
+            RegionSpec::new(regions::AUSTRALIA, vec![GpuClass::A100; 4]),
+        ];
+        let mut cfg =
+            SimConfig::paper_testbed(model, Benchmark::Gsm8k, System::Sparrow, fleet);
+        cfg.bandwidth_gate = true;
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(a.total_gen_tokens, b.total_gen_tokens, "gate is deterministic");
+        assert_eq!(a.total_time, b.total_time);
+        let mut off = cfg.clone();
+        off.bandwidth_gate = false;
+        let base = run(&off);
+        assert_eq!(
+            a.total_gen_tokens, base.total_gen_tokens,
+            "the gate reallocates work, it never drops any"
+        );
     }
 
     #[test]

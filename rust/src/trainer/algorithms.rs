@@ -8,7 +8,7 @@
 /// Which estimator turns group rewards into advantages.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Algorithm {
-    /// Group-normalized: (r - mean) / (std + eps)   [DeepSeekMath].
+    /// Group-normalized: (r - mean) / (std + eps)   (DeepSeekMath).
     Grpo,
     /// Leave-one-out baseline: r_i - mean(r_{j != i})   [Ahmadian et al.].
     Rloo,

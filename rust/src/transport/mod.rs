@@ -11,7 +11,10 @@
 //! * `relay`      — two-tier fanout: Trainer → regional seed Actor → peers,
 //!                  forwarding segments on arrival (cut-through);
 //! * `plan`       — the analytic timing of all of the above over `netsim`
-//!                  links (used by the simulator and the experiments).
+//!                  links, plus the multi-region [`DistributionPlan`]:
+//!                  a bandwidth-aware spanning tree (hub → regional relays
+//!                  → actors) whose WAN legs stripe to each link's
+//!                  bandwidth-delay product ([`stripe::stripes_for_link`]).
 
 pub mod plan;
 pub mod reassembly;
@@ -19,7 +22,7 @@ pub mod relay;
 pub mod segment;
 pub mod stripe;
 
-pub use plan::TransferPlan;
+pub use plan::{DistributionPlan, RegionTopo, RelayLeg, TransferPlan};
 pub use reassembly::Reassembler;
 pub use segment::{split_into_segments, Segment, DEFAULT_SEGMENT_BYTES, TOTAL_UNKNOWN};
-pub use stripe::stripe_round_robin;
+pub use stripe::{stripe_round_robin, stripes_for_link, MAX_STRIPES};

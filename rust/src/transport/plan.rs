@@ -1,11 +1,44 @@
-//! Analytic timing of the streaming transfer protocol over `netsim` links.
+//! Transfer timing and bandwidth-aware distribution planning over
+//! `netsim` links.
 //!
-//! The discrete-event simulator and every transfer-time experiment
-//! (Table 2, Figures 10–13) price transfers through this one model so that
-//! baselines and SparrowRL differ only in the knobs the paper varies:
-//! payload size, stream count, pipelining, and relay fanout.
+//! Two layers live here:
+//!
+//! * [`TransferPlan`] — analytic timing of one streaming transfer. The
+//!   discrete-event simulator and every transfer-time experiment
+//!   (Table 2, Figures 10–13) price transfers through this one model so
+//!   that baselines and SparrowRL differ only in the knobs the paper
+//!   varies: payload size, stream count, pipelining, and relay fanout.
+//! * [`DistributionPlan`] — the geo-distribution tree (§5.2/§7.5): given
+//!   a region/link topology, one relay per region receives the delta over
+//!   a WAN leg striped to the link's bandwidth-delay product
+//!   ([`stripes_for_link`])
+//!   and forwards segments cut-through to its regional peers, so each
+//!   WAN link carries the payload once instead of once per actor.
+//!
+//! Building a plan from a WAN preset:
+//!
+//! ```
+//! use sparrowrl::config::wan_preset;
+//! use sparrowrl::transport::plan::DistributionPlan;
+//!
+//! let preset = wan_preset("wan-4").unwrap();
+//! let plan = DistributionPlan::from_preset(&preset, 1 << 20);
+//! assert_eq!(plan.legs.len(), 4);
+//! assert_eq!(plan.n_actors(), 8);
+//! // Every WAN leg stripes to at least one stream, and lossy long-RTT
+//! // legs (e.g. Japan) stripe wider than short clean ones.
+//! assert!(plan.legs.iter().all(|l| l.streams >= 1));
+//! // The striped relay tree beats a single-stream direct fan-out.
+//! let mut rng = sparrowrl::util::Rng::new(0);
+//! let striped = plan.makespan(202_000_000, None, &mut rng);
+//! let direct = plan.direct_single_stream_makespan(202_000_000, None, &mut rng);
+//! assert!(striped < direct);
+//! ```
 
+use crate::config::{RegionProfile, WanPreset};
+use crate::netsim::link::PROTOCOL_EFFICIENCY;
 use crate::netsim::{Link, TransferOpts};
+use crate::transport::stripe::stripes_for_link;
 use crate::util::Rng;
 
 /// Default intra-region (same provider/datacenter LAN) path used for
@@ -150,6 +183,194 @@ impl TransferPlan {
     }
 }
 
+/// One region of a WAN topology: the hub→region link and how many rollout
+/// actors the region hosts.
+#[derive(Clone, Debug)]
+pub struct RegionTopo {
+    pub name: String,
+    pub wan: Link,
+    pub actors: usize,
+}
+
+impl RegionTopo {
+    pub fn from_profile(p: &RegionProfile, actors: usize) -> RegionTopo {
+        RegionTopo { name: p.name.to_string(), wan: Link::from_profile(p), actors }
+    }
+}
+
+/// One leg of the distribution tree: hub → regional relay over the WAN
+/// (striped), relay → peers over the intra-region LAN (cut-through).
+#[derive(Clone, Debug)]
+pub struct RelayLeg {
+    pub region: String,
+    /// Global actor index of the regional relay (the region's first actor,
+    /// a dual-role node: rollout actor + forwarding proxy).
+    pub relay: usize,
+    /// Global actor indices the relay forwards each segment to.
+    pub peers: Vec<usize>,
+    pub wan: Link,
+    pub intra: Link,
+    /// WAN stripe count, sized to the leg's bandwidth-delay product.
+    pub streams: usize,
+}
+
+/// Bandwidth-aware spanning distribution tree over a region topology.
+///
+/// Global actor indices are assigned in region order (region 0's actors
+/// first); each region's first actor is its relay. The hub sends each
+/// delta segment once per region — to the relay, over a WAN leg striped
+/// to the link's BDP — and the relay forwards it to every regional peer
+/// on arrival, so cross-region traffic is O(regions), not O(actors)
+/// (the paper's Table 5 relay fanout, generalized to many regions).
+#[derive(Clone, Debug)]
+pub struct DistributionPlan {
+    pub legs: Vec<RelayLeg>,
+    /// Segment size used for cut-through pipelining on every leg.
+    pub segment_bytes: u64,
+}
+
+impl DistributionPlan {
+    /// Build the tree from an explicit topology. Regions with zero actors
+    /// are skipped (they contribute no leg).
+    pub fn build(regions: &[RegionTopo], segment_bytes: u64) -> DistributionPlan {
+        let mut legs = Vec::new();
+        let mut next = 0usize;
+        for r in regions {
+            if r.actors == 0 {
+                continue;
+            }
+            let relay = next;
+            let peers: Vec<usize> = (next + 1..next + r.actors).collect();
+            next += r.actors;
+            legs.push(RelayLeg {
+                region: r.name.clone(),
+                relay,
+                peers,
+                wan: r.wan.clone(),
+                intra: intra_region_link(),
+                streams: stripes_for_link(&r.wan),
+            });
+        }
+        DistributionPlan { legs, segment_bytes }
+    }
+
+    /// Build from a [`WanPreset`] (`config::wan_preset("wan-4")` etc.).
+    pub fn from_preset(preset: &WanPreset, segment_bytes: u64) -> DistributionPlan {
+        let topo: Vec<RegionTopo> = preset
+            .regions
+            .iter()
+            .map(|p| RegionTopo::from_profile(p, preset.actors_per_region))
+            .collect();
+        DistributionPlan::build(&topo, segment_bytes)
+    }
+
+    pub fn n_actors(&self) -> usize {
+        self.legs.iter().map(|l| 1 + l.peers.len()).sum()
+    }
+
+    /// Region index of each global actor, in actor order (runtime wiring).
+    pub fn region_map(&self) -> Vec<usize> {
+        let mut map = vec![0usize; self.n_actors()];
+        for (ri, leg) in self.legs.iter().enumerate() {
+            map[leg.relay] = ri;
+            for &p in &leg.peers {
+                map[p] = ri;
+            }
+        }
+        map
+    }
+
+    /// Region index owning global actor `actor`.
+    pub fn region_of(&self, actor: usize) -> Option<usize> {
+        self.legs
+            .iter()
+            .position(|l| l.relay == actor || l.peers.contains(&actor))
+    }
+
+    /// The per-leg [`TransferPlan`] (striped + pipelined over that leg).
+    pub fn leg_transfer_plan(&self, leg: &RelayLeg, pipelined: bool) -> TransferPlan {
+        TransferPlan {
+            streams: leg.streams,
+            segment_bytes: self.segment_bytes,
+            pipelined,
+            jittered: false,
+        }
+    }
+
+    /// Delivery makespan of a `payload`-byte delta to *every* actor:
+    /// regions run in parallel, each paying one striped WAN copy plus the
+    /// relay's cut-through LAN fanout; the slowest region completes last.
+    /// `produce_bps` is the source-side streaming-encoder rate (None =
+    /// payload already materialized).
+    pub fn makespan(&self, payload: u64, produce_bps: Option<f64>, rng: &mut Rng) -> f64 {
+        self.legs
+            .iter()
+            .map(|l| {
+                self.leg_transfer_plan(l, produce_bps.is_some()).relay_fanout_time(
+                    &l.wan,
+                    &l.intra,
+                    payload,
+                    l.peers.len(),
+                    produce_bps,
+                    rng,
+                )
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Baseline makespan: single-stream direct per-actor fan-out (no
+    /// relays, no striping) — every copy crosses the WAN, one TCP stream
+    /// per actor (the paper's PrimeRL-style O(N) distribution).
+    pub fn direct_single_stream_makespan(
+        &self,
+        payload: u64,
+        produce_bps: Option<f64>,
+        rng: &mut Rng,
+    ) -> f64 {
+        let plan = TransferPlan {
+            streams: 1,
+            segment_bytes: self.segment_bytes,
+            pipelined: produce_bps.is_some(),
+            jittered: false,
+        };
+        self.legs
+            .iter()
+            .map(|l| {
+                plan.direct_fanout_time(&l.wan, payload, 1 + l.peers.len(), produce_bps, rng)
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Per-region WAN utilization over a delivery: payload bits that
+    /// crossed the region's WAN leg divided by what the leg could carry
+    /// in `makespan` seconds at protocol efficiency. Under the relay tree
+    /// each leg carries the payload exactly once. Deliberately unclamped:
+    /// a value above 1.0 means the makespan claims more than the link can
+    /// physically carry — a link-model regression worth surfacing, not
+    /// hiding.
+    pub fn region_utilization(&self, payload: u64, makespan: f64) -> Vec<(String, f64)> {
+        self.legs
+            .iter()
+            .map(|l| {
+                let could = l.wan.capacity_bps * PROTOCOL_EFFICIENCY * makespan.max(1e-9);
+                (l.region.clone(), payload as f64 * 8.0 / could)
+            })
+            .collect()
+    }
+
+    /// Per-region WAN ingress bytes for one delta: `payload` once per
+    /// region under the relay tree vs once per actor under direct fanout.
+    pub fn region_ingress_bytes(&self, payload: u64, direct: bool) -> Vec<(String, u64)> {
+        self.legs
+            .iter()
+            .map(|l| {
+                let copies = if direct { 1 + l.peers.len() as u64 } else { 1 };
+                (l.region.clone(), payload * copies)
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,6 +431,92 @@ mod tests {
         plan.pipelined = false;
         let blocking = plan.delivery_time(&link, 202_000_000, Some(extract_bps), &mut r);
         assert!(piped < blocking, "{piped:.2} vs {blocking:.2}");
+    }
+
+    #[test]
+    fn distribution_plan_assigns_contiguous_actors_and_relays() {
+        let preset = crate::config::wan_preset("wan-3").unwrap();
+        let plan = DistributionPlan::from_preset(&preset, 1 << 20);
+        assert_eq!(plan.n_actors(), 6);
+        assert_eq!(plan.legs.len(), 3);
+        // Relays are each region's first actor; indices are a partition.
+        let mut seen = vec![false; plan.n_actors()];
+        for (ri, leg) in plan.legs.iter().enumerate() {
+            assert!(!seen[leg.relay]);
+            seen[leg.relay] = true;
+            assert_eq!(plan.region_of(leg.relay), Some(ri));
+            for &p in &leg.peers {
+                assert!(!seen[p]);
+                seen[p] = true;
+                assert_eq!(plan.region_of(p), Some(ri));
+            }
+        }
+        assert!(seen.into_iter().all(|x| x));
+        let map = plan.region_map();
+        assert_eq!(map, vec![0, 0, 1, 1, 2, 2]);
+    }
+
+    #[test]
+    fn distribution_plan_skips_empty_regions() {
+        let topo = vec![
+            RegionTopo::from_profile(&regions::CANADA, 2),
+            RegionTopo::from_profile(&regions::JAPAN, 0),
+            RegionTopo::from_profile(&regions::ICELAND, 3),
+        ];
+        let plan = DistributionPlan::build(&topo, 1 << 20);
+        assert_eq!(plan.legs.len(), 2);
+        assert_eq!(plan.n_actors(), 5);
+        assert_eq!(plan.legs[1].region, "iceland");
+        assert_eq!(plan.legs[1].relay, 2);
+        assert_eq!(plan.legs[1].peers, vec![3, 4]);
+    }
+
+    #[test]
+    fn striped_relay_tree_beats_single_stream_direct_fanout() {
+        // The acceptance invariant behind `exp wan` / BENCH_wan.json: on
+        // every 1–4-region preset the striped relay tree strictly beats
+        // the single-stream per-actor fan-out baseline.
+        for n in 1..=4usize {
+            let preset = crate::config::wan_preset(&format!("wan-{n}")).unwrap();
+            let plan = DistributionPlan::from_preset(&preset, 1 << 20);
+            let mut r = rng();
+            let striped = plan.makespan(202_000_000, Some(3.2e9 * 8.0), &mut r);
+            let direct =
+                plan.direct_single_stream_makespan(202_000_000, Some(3.2e9 * 8.0), &mut r);
+            assert!(
+                striped < direct,
+                "wan-{n}: striped {striped:.2}s must beat direct {direct:.2}s"
+            );
+        }
+    }
+
+    #[test]
+    fn wan_legs_stripe_to_their_bdp() {
+        let preset = crate::config::wan_preset("wan-4").unwrap();
+        let plan = DistributionPlan::from_preset(&preset, 1 << 20);
+        for leg in &plan.legs {
+            assert_eq!(leg.streams, crate::transport::stripe::stripes_for_link(&leg.wan));
+        }
+        // Japan's long-RTT lossy path stripes wider than Canada's.
+        assert!(plan.legs[1].streams > plan.legs[0].streams);
+    }
+
+    #[test]
+    fn utilization_and_ingress_account_per_region() {
+        let preset = crate::config::wan_preset("wan-2").unwrap();
+        let plan = DistributionPlan::from_preset(&preset, 1 << 20);
+        let mut r = rng();
+        let payload = 100_000_000u64;
+        let mk = plan.makespan(payload, None, &mut r);
+        for (region, util) in plan.region_utilization(payload, mk) {
+            assert!(util > 0.0 && util <= 1.0, "{region}: {util}");
+        }
+        let relay_in = plan.region_ingress_bytes(payload, false);
+        let direct_in = plan.region_ingress_bytes(payload, true);
+        for ((_, a), (_, b)) in relay_in.iter().zip(&direct_in) {
+            assert_eq!(*a, payload);
+            assert_eq!(*b, 2 * payload, "2 actors per region -> 2 WAN copies");
+        }
     }
 
     #[test]

@@ -5,8 +5,39 @@
 //! loss-induced stall on one stream delays only that stream's segments.
 //! Assignment must be a *deterministic function of seq* so a relay can
 //! re-stripe without coordination.
+//!
+//! [`stripes_for_link`] sizes the stream count to the link's
+//! bandwidth-delay product: each stream's congestion window sustains only
+//! `w = MSS·C/√p` bytes of the BDP, so `S = ceil(BDP_eff / w)` streams are
+//! needed before path capacity, not the per-stream ceiling, binds.
 
 use super::segment::Segment;
+use crate::netsim::link::PROTOCOL_EFFICIENCY;
+use crate::netsim::Link;
+
+/// Upper bound on per-link stripes: past this, connection and reassembly
+/// overheads dominate any residual window gain (the paper evaluates 1–8;
+/// Australia-class paths saturate well below 16).
+pub const MAX_STRIPES: usize = 16;
+
+/// Bandwidth-delay-product stripe sizing for one WAN leg.
+///
+/// A single TCP stream on a path with RTT `r` and residual loss `p`
+/// sustains a congestion window of about `w = MSS·C/√p` bytes — a fixed
+/// fraction of the link's bandwidth-delay product `B·r`. The number of
+/// parallel streams that fills the pipe is therefore
+/// `S = ceil(B·r / w) = ceil(B_eff / ceiling_bps)` — the two forms are
+/// algebraically identical, and the second is what the Mathis model in
+/// [`Link`] exposes directly. Lossless links need exactly one stream;
+/// long-RTT lossy fat pipes are clamped at [`MAX_STRIPES`].
+pub fn stripes_for_link(link: &Link) -> usize {
+    let per_stream = link.single_stream_ceiling_bps();
+    if per_stream <= 0.0 {
+        return 1;
+    }
+    let target = link.capacity_bps * PROTOCOL_EFFICIENCY;
+    ((target / per_stream).ceil() as usize).clamp(1, MAX_STRIPES)
+}
 
 /// Assign segment `seq` to one of `streams` streams.
 #[inline]
@@ -102,6 +133,51 @@ mod tests {
             }
             assert!(seen.into_iter().all(|x| x));
         });
+    }
+
+    #[test]
+    fn bdp_stripes_lossless_link_needs_one_stream() {
+        // No loss: one stream already reaches protocol-efficiency capacity.
+        let lan = Link::emulated(10e9, 0.001, 0.0);
+        assert_eq!(stripes_for_link(&lan), 1);
+        // Extreme low bandwidth: the Mathis ceiling exceeds the capacity,
+        // so the capacity term binds and one stream suffices.
+        let dialup = Link::emulated(56e3, 0.120, 1e-4);
+        assert_eq!(stripes_for_link(&dialup), 1);
+    }
+
+    #[test]
+    fn bdp_stripes_grow_with_bandwidth_delay_product_and_cap() {
+        use crate::config::regions;
+        // US-Canada: moderate BDP -> a couple of streams.
+        let ca = Link::from_profile(&regions::CANADA);
+        let s_ca = stripes_for_link(&ca);
+        assert!((2..=4).contains(&s_ca), "canada stripes {s_ca}");
+        // Australia: long RTT + loss -> more streams than Canada.
+        let au = Link::from_profile(&regions::AUSTRALIA);
+        assert!(stripes_for_link(&au) > s_ca);
+        // Extreme high bandwidth on a long lossy path: the raw BDP formula
+        // would ask for thousands of streams; the cap binds.
+        let fat = Link::emulated(100e9, 0.150, 1e-4);
+        assert_eq!(stripes_for_link(&fat), MAX_STRIPES);
+    }
+
+    #[test]
+    fn bdp_stripes_saturate_the_link() {
+        // The chosen count reaches the link's effective capacity, and one
+        // fewer stream would not (when more than one is chosen at all).
+        use crate::config::regions;
+        for p in [regions::CANADA, regions::JAPAN, regions::AUSTRALIA] {
+            let link = Link::from_profile(&p);
+            let s = stripes_for_link(&link);
+            let cap = link.capacity_bps * crate::netsim::link::PROTOCOL_EFFICIENCY;
+            if s < MAX_STRIPES {
+                assert!(link.effective_bps(s) >= cap - 1.0, "{}: {s} stripes", p.name);
+            }
+            if s > 1 {
+                assert!(link.effective_bps(s - 1) < cap, "{}: {s} not minimal", p.name);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,227 @@
+//! Multi-region WAN distribution: end-to-end properties of the
+//! distribution tree, striped delivery, and the runtime's relay routing.
+//!
+//! * **Reorder regression**: netsim's cross-stripe reordering (and a
+//!   Commit overtaking its segments) must never poison the staging
+//!   decoder — the committed policy is bit-identical to the sequential
+//!   in-order baseline.
+//! * **Exactly-once**: over random topologies, the relay tree delivers
+//!   every segment exactly once to every actor (no duplicate or dropped
+//!   forwards at relays).
+//! * **Routing equivalence**: the pipelined executor with relay routing
+//!   commits exactly the policies the sequential reference commits.
+
+use sparrowrl::actor::{CommitResult, PolicyState};
+use sparrowrl::config::regions;
+use sparrowrl::delta::{ModelLayout, ParamSet};
+use sparrowrl::netsim::{deliver_striped, Link};
+use sparrowrl::rt::{
+    policy_checksum, run_with_compute, DistributionSpec, ExecMode, LocalRunConfig, RunReport,
+    SyntheticCompute,
+};
+use sparrowrl::trainer::stream_checkpoint;
+use sparrowrl::transport::relay::RelayNode;
+use sparrowrl::transport::{
+    split_into_segments, DistributionPlan, Reassembler, RegionTopo, Segment,
+};
+use sparrowrl::util::{prop, Bf16, Rng};
+
+/// A real streaming-encoded delta (TOTAL_UNKNOWN on all but the final
+/// frame), as the fused encoder ships it.
+fn streamed_delta(seed: u64, segment_bytes: usize) -> (ModelLayout, ParamSet, ParamSet, Vec<Segment>) {
+    let layout = ModelLayout::transformer("wan-t", 256, 64, 2, 128);
+    let mut rng = Rng::new(seed);
+    let old = ParamSet::random(&layout, 0.02, &mut rng);
+    let mut new = old.clone();
+    for t in &mut new.tensors {
+        for _ in 0..32 {
+            let i = rng.range(0, t.len());
+            t[i] = Bf16::from_bits(t[i].to_bits() ^ 0x0040);
+        }
+    }
+    let mut segs = Vec::new();
+    let (_ckpt, _stats) =
+        stream_checkpoint(&layout, &old, &new, 0, 1, segment_bytes, |seg| segs.push(seg));
+    (layout, old, new, segs)
+}
+
+#[test]
+fn striped_reorder_does_not_poison_staging() {
+    // Baseline: in-order delivery, commit after staging.
+    let (layout, old, new, segs) = streamed_delta(11, 128);
+    assert!(segs.len() > 8, "need a multi-segment stream, got {}", segs.len());
+    let mut baseline = PolicyState::new(layout.clone(), old.clone(), 0);
+    for s in &segs {
+        baseline.on_segment(s.clone()).unwrap();
+    }
+    assert_eq!(baseline.request_commit(1), CommitResult::Applied);
+    let want = policy_checksum(baseline.params());
+
+    // Striped WAN delivery: 4 jittered stripes over US-Canada reorder the
+    // stream, and the Commit overtakes every segment.
+    let link = Link::from_profile(&regions::CANADA);
+    let sizes: Vec<u64> = segs.iter().map(|s| s.payload.len() as u64).collect();
+    let arrivals = deliver_striped(&link, &sizes, 4, &mut Rng::new(5));
+    let order: Vec<usize> = arrivals.iter().map(|a| a.index).collect();
+    assert_ne!(
+        order,
+        (0..segs.len()).collect::<Vec<_>>(),
+        "stripes must actually reorder or this test is vacuous"
+    );
+
+    let mut actor = PolicyState::new(layout, old, 0);
+    assert_eq!(actor.request_commit(1), CommitResult::Deferred, "commit overtakes segments");
+    let mut committed = None;
+    for &i in &order {
+        actor.on_segment(segs[i].clone()).unwrap_or_else(|e| {
+            panic!("reordered segment {i} poisoned staging: {e}")
+        });
+        if let Some(outcome) = actor.on_safe_point() {
+            committed = Some(outcome);
+        }
+    }
+    assert_eq!(committed, Some((1, CommitResult::Applied)));
+    assert_eq!(actor.active_version(), 1);
+    assert_eq!(policy_checksum(actor.params()), want, "bit-identical to in-order baseline");
+    assert_eq!(actor.params(), &new);
+}
+
+#[test]
+fn reorder_regression_holds_across_stripe_counts_and_seeds() {
+    prop::check("striped reorder commits the baseline policy", 15, |rng| {
+        let (layout, old, new, segs) = streamed_delta(rng.next_u64(), 256 + rng.range(0, 512));
+        let streams = rng.range(2, 9);
+        let link = Link::from_profile(&regions::AUSTRALIA);
+        let sizes: Vec<u64> = segs.iter().map(|s| s.payload.len() as u64).collect();
+        let arrivals = deliver_striped(&link, &sizes, streams, rng);
+        let mut actor = PolicyState::new(layout, old, 0);
+        // Commit lands at a random point — possibly after every segment
+        // (commit_at == arrivals.len() skips the mid-stream request and
+        // exercises the plain commit-after-staging path instead).
+        let commit_at = rng.range(0, arrivals.len() + 1);
+        let mut done = false;
+        for (k, a) in arrivals.iter().enumerate() {
+            if k == commit_at {
+                let _ = actor.request_commit(1);
+            }
+            actor.on_segment(segs[a.index].clone()).expect("no poison under reorder");
+            if actor.on_safe_point() == Some((1, CommitResult::Applied)) {
+                done = true;
+            }
+        }
+        if !done {
+            // commit_at == arrivals.len(): the commit was never requested
+            // mid-stream; issue it now against the fully staged delta.
+            assert_eq!(actor.request_commit(1), CommitResult::Applied);
+        }
+        assert_eq!(actor.params(), &new);
+    });
+}
+
+#[test]
+fn relay_tree_delivers_every_segment_exactly_once() {
+    prop::check("relay tree exactly-once delivery", 15, |rng| {
+        // Random topology: 1-4 regions, 1-5 actors each.
+        let all = [
+            regions::CANADA,
+            regions::JAPAN,
+            regions::NETHERLANDS,
+            regions::ICELAND,
+        ];
+        let n_regions = rng.range(1, 5);
+        let topo: Vec<RegionTopo> = (0..n_regions)
+            .map(|i| RegionTopo::from_profile(&all[i], rng.range(1, 6)))
+            .collect();
+        let plan = DistributionPlan::build(&topo, 512);
+        let payload: Vec<u8> = (0..rng.range(600, 4000)).map(|_| rng.next_u64() as u8).collect();
+        let segs = split_into_segments(1, &payload, 512);
+        let sizes: Vec<u64> = segs.iter().map(|s| s.payload.len() as u64).collect();
+
+        for leg in &plan.legs {
+            // Hub -> relay: striped WAN arrival order.
+            let arrivals = deliver_striped(&leg.wan, &sizes, leg.streams, rng);
+            let mut relay = RelayNode::new(1);
+            let mut peers: Vec<Vec<Segment>> = vec![Vec::new(); leg.peers.len()];
+            for a in &arrivals {
+                relay.on_segment(segs[a.index].clone(), &mut peers).unwrap();
+            }
+            // The relay staged the full artifact...
+            assert!(relay.is_staged(), "{}: relay incomplete", leg.region);
+            assert_eq!(relay.forward_failures(), 0);
+            assert_eq!(relay.into_staged_bytes().unwrap(), payload);
+            // ...and forwarded each segment exactly once to every peer.
+            for (pi, got) in peers.iter().enumerate() {
+                assert_eq!(
+                    got.len(),
+                    segs.len(),
+                    "{} peer {pi}: duplicate or dropped forwards",
+                    leg.region
+                );
+                let mut r = Reassembler::new(1);
+                for s in got {
+                    r.accept(s.clone()).unwrap();
+                }
+                assert_eq!(r.duplicates(), 0);
+                assert_eq!(r.assemble().unwrap(), payload);
+            }
+        }
+    });
+}
+
+fn wan_cfg(n_actors: usize, steps: u64, seed: u64, spec: Option<DistributionSpec>) -> LocalRunConfig {
+    let mut cfg = LocalRunConfig::quick("synthetic");
+    cfg.n_actors = n_actors;
+    cfg.steps = steps;
+    cfg.sft_steps = 2;
+    cfg.group_size = 2;
+    cfg.max_new_tokens = 5;
+    cfg.lr_rl = 1e-2;
+    cfg.segment_bytes = 256; // many segments per delta: real relay traffic
+    cfg.seed = seed;
+    cfg.deterministic = true;
+    cfg.distribution = spec;
+    cfg
+}
+
+fn run(cfg: &LocalRunConfig, comp: &SyntheticCompute, mode: ExecMode) -> RunReport {
+    run_with_compute(cfg, &ModelLayout::transformer("syn-wan-eq", 256, 64, 2, 128), comp, mode)
+        .unwrap_or_else(|e| panic!("{} run failed: {e:#}", mode.name()))
+}
+
+#[test]
+fn pipelined_relay_routing_matches_sequential_baseline() {
+    // Hub -> relay -> peer routing is a pure transport change: committed
+    // policies must be bit-identical to the flat sequential reference.
+    let comp = SyntheticCompute::new(16, 8, 64);
+    let spec = DistributionSpec { region_of: vec![0, 0, 1, 1] };
+    let cfg = wan_cfg(4, 3, 9, Some(spec));
+    let seq = run(&cfg, &comp, ExecMode::Sequential);
+    let pip = run(&cfg, &comp, ExecMode::Pipelined);
+    assert_eq!(seq.final_version, pip.final_version);
+    for (a, b) in seq.steps.iter().zip(&pip.steps) {
+        assert_eq!(a.policy_checksum, b.policy_checksum, "step {} diverged", a.step);
+        assert_eq!(a.rho, b.rho);
+        assert_eq!(a.payload_bytes, b.payload_bytes);
+    }
+}
+
+#[test]
+fn relay_routing_handles_uneven_regions_and_single_relay() {
+    // Region sizes 1/2/3 (one region is relay-only, no peers) and the
+    // degenerate all-in-one-region tree (one relay forwards to everyone).
+    let comp = SyntheticCompute::new(16, 8, 64);
+    for region_of in [vec![0, 1, 1, 2, 2, 2], vec![0, 0, 0, 0, 0, 0]] {
+        let spec = DistributionSpec { region_of: region_of.clone() };
+        let cfg = wan_cfg(6, 2, 4, Some(spec));
+        let flat = run(&wan_cfg(6, 2, 4, None), &comp, ExecMode::Pipelined);
+        let tree = run(&cfg, &comp, ExecMode::Pipelined);
+        assert_eq!(flat.final_version, tree.final_version);
+        for (a, b) in flat.steps.iter().zip(&tree.steps) {
+            assert_eq!(
+                a.policy_checksum, b.policy_checksum,
+                "step {} diverged under {region_of:?}",
+                a.step
+            );
+        }
+    }
+}
