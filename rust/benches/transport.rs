@@ -1,16 +1,38 @@
-//! Transport benches: segmentation, striping, reassembly throughput, and
-//! relay forwarding — §5.2's per-checkpoint CPU overheads.
+//! Transport benches, two tiers:
+//!
+//! 1. Micro: segmentation, striping, reassembly throughput, relay
+//!    forwarding — §5.2's per-checkpoint CPU overheads.
+//! 2. Backend: the same deterministic pipelined RL run over each
+//!    `transport::api` backend (InProc / Sim / Tcp loopback), measuring
+//!    per-backend wall clock, per-step latency, and the sync-hidden
+//!    overlap ratio. Emits `BENCH_transport.json` and asserts the
+//!    throughput sanity bound: zero-copy InProc must not be slower than
+//!    framed loopback Tcp.
+//!
+//! Set `BENCH_QUICK=1` for the CI smoke run.
 
+use sparrowrl::config::regions;
+use sparrowrl::delta::ModelLayout;
+use sparrowrl::metrics::SpanKind;
+use sparrowrl::netsim::Link;
+use sparrowrl::rt::{
+    run_with_compute, ExecMode, LocalRunConfig, SyntheticCompute, TransportKind,
+};
 use sparrowrl::transport::relay::RelayNode;
-use sparrowrl::transport::{split_into_segments, stripe_round_robin, Reassembler, Segment};
+use sparrowrl::transport::{
+    split_into_segments, stripe_round_robin, Reassembler, Segment, SimNetConfig, TcpConfig,
+};
 use sparrowrl::util::bench::Bencher;
 use sparrowrl::util::Rng;
+use std::time::Duration;
 
-fn main() {
-    let mut b = Bencher::new(2, 9);
-    // A ~64 MB pseudo-checkpoint (sparrow-xl scale delta).
+const SYNC: [SpanKind; 2] = [SpanKind::Train, SpanKind::Extract];
+
+fn micro(b: &mut Bencher, quick: bool) {
+    // A pseudo-checkpoint at sparrow-xl delta scale (smaller when quick).
     let mut rng = Rng::new(1);
-    let bytes: Vec<u8> = (0..64 << 20).map(|_| rng.next_u64() as u8).collect();
+    let total = if quick { 8 << 20 } else { 64 << 20 };
+    let bytes: Vec<u8> = (0..total).map(|_| rng.next_u64() as u8).collect();
     let n = bytes.len() as u64;
 
     b.bench_bytes("split_into_segments (1 MiB)", n, || {
@@ -53,4 +75,88 @@ fn main() {
         }
         std::hint::black_box(peers);
     });
+}
+
+fn backend_cfg(quick: bool) -> LocalRunConfig {
+    let mut cfg = LocalRunConfig::quick("synthetic");
+    cfg.steps = if quick { 4 } else { 8 };
+    cfg.sft_steps = 0;
+    cfg.n_actors = 2;
+    cfg.group_size = 2;
+    cfg.max_new_tokens = 6;
+    cfg.lr_rl = 1e-2;
+    cfg.segment_bytes = 4 << 10;
+    cfg.deterministic = true;
+    cfg
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let mut b = Bencher::new(1, if quick { 3 } else { 7 });
+    micro(&mut b, quick);
+
+    // -- backend tier: identical run, three transports -------------------
+    let layout = ModelLayout::transformer("syn-tr-bench", 512, 128, 2, 256);
+    // Emulated accelerator latencies so the overlap ratio is meaningful.
+    let comp = SyntheticCompute::new(16, 8, 64)
+        .with_delays(Duration::from_millis(8), Duration::from_millis(6));
+    let base = backend_cfg(quick);
+    let steps = base.steps as f64;
+
+    let backends: Vec<(&str, TransportKind)> = vec![
+        ("inproc", TransportKind::InProc),
+        (
+            "sim",
+            TransportKind::Sim(SimNetConfig::single_region(
+                base.n_actors,
+                Link::from_profile(&regions::CANADA),
+                4,
+                base.seed,
+            )),
+        ),
+        (
+            "tcp",
+            TransportKind::Tcp(TcpConfig { streams: 2, bits_per_s: None, kill: None }),
+        ),
+    ];
+    let mut derived: Vec<(String, f64)> = Vec::new();
+    let mut walls: Vec<(&str, f64)> = Vec::new();
+    for (name, kind) in backends {
+        let mut cfg = base.clone();
+        cfg.transport = kind;
+        let wall = b
+            .bench(&format!("e2e 2-actor pipelined [{name}]"), || {
+                std::hint::black_box(
+                    run_with_compute(&cfg, &layout, &comp, ExecMode::Pipelined).unwrap(),
+                );
+            })
+            .median
+            .as_secs_f64();
+        let report = run_with_compute(&cfg, &layout, &comp, ExecMode::Pipelined).unwrap();
+        let overlap = report.timeline.overlap_ratio("trainer", &SYNC);
+        println!(
+            "{name}: wall {wall:.3}s, {:.1} ms/step, hidden sync {:.0}%",
+            wall * 1e3 / steps,
+            overlap * 100.0
+        );
+        derived.push((format!("{name}_wall_s"), wall));
+        derived.push((format!("{name}_step_latency_s"), wall / steps));
+        derived.push((format!("{name}_overlap_efficiency"), overlap));
+        walls.push((name, wall));
+    }
+    let inproc = walls.iter().find(|(n, _)| *n == "inproc").unwrap().1;
+    let tcp = walls.iter().find(|(n, _)| *n == "tcp").unwrap().1;
+    derived.push(("tcp_over_inproc_wall_ratio".to_string(), tcp / inproc.max(1e-12)));
+    // Sanity bound: zero-copy in-process must not lose to framed loopback
+    // sockets (generous 1.15x slack absorbs CI timer noise — the real
+    // signal is catastrophic regressions, e.g. a blocking wait on the
+    // socket path).
+    assert!(
+        inproc <= tcp * 1.15,
+        "InProc ({inproc:.3}s) slower than Tcp ({tcp:.3}s): transport overhead inverted"
+    );
+
+    let derived_refs: Vec<(&str, f64)> = derived.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let out = std::path::Path::new("BENCH_transport.json");
+    b.write_json(out, "transport", &derived_refs).expect("write bench json");
 }

@@ -24,8 +24,11 @@
 pub mod rollout;
 
 use crate::delta::stream::{DeltaStreamDecoder, StagedDelta};
-use crate::delta::{apply_delta, DeltaCheckpoint, ModelLayout, ParamSet};
+use crate::delta::{
+    apply_delta, ApplyMode, DeltaCheckpoint, ModelLayout, ParamSet, SparseDelta, TensorDelta,
+};
 use crate::transport::Segment;
+use crate::util::Bf16;
 use std::collections::BTreeMap;
 
 /// Outcome of a commit attempt.
@@ -49,6 +52,10 @@ pub struct PolicyState {
     layout: ModelLayout,
     params: ParamSet,
     active_version: u64,
+    /// Checkpoint hash of the active version (all-zero genesis before the
+    /// first commit) — echoed in every rollout result so the hub's job
+    /// ledger can run the §5.4 acceptance predicate across processes.
+    active_hash: [u8; 32],
     /// In-flight streaming decoders, by version (segments parsed and
     /// freed on arrival; working set is one partial section each).
     staging: BTreeMap<u64, DeltaStreamDecoder>,
@@ -58,7 +65,45 @@ pub struct PolicyState {
     generating: bool,
     /// Commit requested mid-generation, parked for the next safe point.
     pending_commit: Option<u64>,
+    /// Behaviour-policy retention for failover: the version the last
+    /// commit replaced, reconstructible by applying `inverse` (the sparse
+    /// old-values delta captured during the scatter) to the live params.
+    /// Storage is O(rho) of the model — the same lossless-sparse-delta
+    /// trick the transfer path uses, pointed backwards.
+    retained: Option<RetainedVersion>,
     applied: u64,
+}
+
+/// The pre-commit identity of the version the active policy replaced.
+struct RetainedVersion {
+    version: u64,
+    hash: [u8; 32],
+    inverse: SparseDelta,
+}
+
+/// Sparse inverse of `delta` against the *current* (pre-apply) params:
+/// same indices, the old values they hold now, always `Assign` mode.
+/// Capturing old values (rather than negating an `Add` delta) is what
+/// makes the reconstruction bit-exact for *both* apply modes — bf16
+/// addition rounds, so `round(round(a + v) - v)` need not equal `a`, but
+/// re-assigning the captured `a` always does.
+fn invert_delta(params: &ParamSet, delta: &SparseDelta) -> SparseDelta {
+    let tensors = delta
+        .tensors
+        .iter()
+        .map(|t| {
+            let buf = &params.tensors[t.tensor as usize];
+            let vals: Vec<Bf16> = t.idx.iter().map(|&i| buf[i as usize]).collect();
+            TensorDelta { tensor: t.tensor, idx: t.idx.clone(), vals }
+        })
+        .collect();
+    SparseDelta {
+        version: delta.base_version,
+        base_version: delta.version,
+        model_fp: delta.model_fp,
+        mode: ApplyMode::Assign,
+        tensors,
+    }
 }
 
 impl PolicyState {
@@ -67,16 +112,43 @@ impl PolicyState {
             layout,
             params,
             active_version: version,
+            active_hash: [0u8; 32],
             staging: BTreeMap::new(),
             staged: BTreeMap::new(),
             generating: false,
             pending_commit: None,
+            retained: None,
             applied: 0,
         }
     }
 
     pub fn active_version(&self) -> u64 {
         self.active_version
+    }
+
+    /// Checkpoint hash of the active version ([0; 32] at genesis). This
+    /// is the `h_r` an actor attaches to results; the ledger accepts a
+    /// rollout only if it matches the lease's `h(v_job)`.
+    pub fn active_hash(&self) -> [u8; 32] {
+        self.active_hash
+    }
+
+    /// Resolve the policy bits + checkpoint hash to generate `version`'s
+    /// rollouts on: the active policy, or — when staged activation has
+    /// already rolled this actor to `version + 1` mid-step (a commit at
+    /// an inter-batch safe point) — the replaced version rebuilt by
+    /// applying the retained sparse inverse. The failover path depends on
+    /// this: a job re-issued from a dead peer still targets the step's
+    /// lease version, and regeneration must be bit-identical. `None` if
+    /// `version` is neither active nor retained (too far behind).
+    pub fn behaviour_policy(&self, version: u64) -> Option<(ParamSet, [u8; 32])> {
+        if version == self.active_version {
+            return Some((self.params.clone(), self.active_hash));
+        }
+        let r = self.retained.as_ref().filter(|r| r.version == version)?;
+        let mut params = self.params.clone();
+        apply_delta(&mut params, &r.inverse);
+        Some((params, r.hash))
     }
 
     pub fn params(&self) -> &ParamSet {
@@ -155,9 +227,18 @@ impl PolicyState {
         if staged.delta.validate(&self.layout).is_err() {
             return CommitResult::Corrupt;
         }
+        let applied_hash = staged.hash;
+        // Retain the replaced version as a sparse inverse before the
+        // scatter overwrites it: a failover job may still target it.
+        self.retained = Some(RetainedVersion {
+            version: self.active_version,
+            hash: self.active_hash,
+            inverse: invert_delta(&self.params, &staged.delta),
+        });
         apply_delta(&mut self.params, &staged.delta);
         // Advance the tag only after the scatter completed (§5.2).
         self.active_version = version;
+        self.active_hash = applied_hash;
         self.applied += 1;
         self.staged.remove(&version);
         // Garbage-collect staging state that can never apply now — and any
@@ -293,6 +374,51 @@ mod tests {
         assert_eq!(st.commit(1), CommitResult::Applied);
         assert_eq!(st.active_version(), 1);
         assert_eq!(st.params(), &p1, "bit-exact after commit");
+    }
+
+    #[test]
+    fn active_hash_tracks_committed_checkpoints() {
+        let (l, p0) = setup();
+        let p1 = perturbed(&p0, 51);
+        let p2 = perturbed(&p1, 52);
+        let c1 = ckpt(&l, &p0, &p1, 0, 1);
+        let c2 = ckpt(&l, &p1, &p2, 1, 2);
+        let (h1, h2) = (c1.hash, c2.hash);
+        let mut st = PolicyState::new(l, p0, 0);
+        assert_eq!(st.active_hash(), [0u8; 32], "genesis hash");
+        st.stage_checkpoint(c1);
+        assert_eq!(st.active_hash(), [0u8; 32], "staging must not change it");
+        assert_eq!(st.commit(1), CommitResult::Applied);
+        assert_eq!(st.active_hash(), h1);
+        st.stage_checkpoint(c2);
+        assert_eq!(st.commit(2), CommitResult::Applied);
+        assert_eq!(st.active_hash(), h2);
+    }
+
+    #[test]
+    fn behaviour_policy_serves_active_and_retained_versions() {
+        // Failover contract: after committing v+1, the actor can still
+        // rebuild v bit-exactly (sparse inverse), so a job re-issued from
+        // a dead peer regenerates on the lease's version.
+        let (l, p0) = setup();
+        let p1 = perturbed(&p0, 61);
+        let p2 = perturbed(&p1, 62);
+        let c1 = ckpt(&l, &p0, &p1, 0, 1);
+        let c2 = ckpt(&l, &p1, &p2, 1, 2);
+        let (h1, h2) = (c1.hash, c2.hash);
+        let mut st = PolicyState::new(l, p0.clone(), 0);
+        assert_eq!(st.behaviour_policy(0), Some((p0.clone(), [0u8; 32])));
+        assert!(st.behaviour_policy(1).is_none(), "future versions unknown");
+        st.stage_checkpoint(c1);
+        assert_eq!(st.commit(1), CommitResult::Applied);
+        // Active v1 and retained v0 both resolvable, bit-exact.
+        assert_eq!(st.behaviour_policy(1), Some((p1.clone(), h1)));
+        assert_eq!(st.behaviour_policy(0), Some((p0, [0u8; 32])));
+        st.stage_checkpoint(c2);
+        assert_eq!(st.commit(2), CommitResult::Applied);
+        assert_eq!(st.behaviour_policy(2), Some((p2, h2)));
+        assert_eq!(st.behaviour_policy(1), Some((p1, h1)));
+        assert!(st.behaviour_policy(0).is_none(), "only one version retained");
     }
 
     #[test]

@@ -19,23 +19,53 @@ use std::time::Instant;
 pub type PromptId = u64;
 pub type ActorId = u32;
 
-/// Monotonic wall-clock source for lease timestamps. The ledger itself is
-/// clock-agnostic (`issue`/`submit`/`expire` take `now`); the simulator
-/// passes virtual event time, while the real runtimes (`rt/local`,
-/// `rt/pipeline`) anchor a `WallClock` at run start so in-flight work —
-/// rollouts generating concurrently with training — is leased against
-/// actual elapsed seconds and genuinely expires on stalls.
+/// Lease time source. The ledger itself is clock-agnostic
+/// (`issue`/`submit`/`expire` take `now`); callers pick the variant:
+///
+/// * [`Clock::Wall`] — monotone seconds since construction. The real
+///   runtimes (`rt/local`, `rt/pipeline`) anchor one at run start so
+///   in-flight work — rollouts generating concurrently with training —
+///   is leased against actual elapsed seconds and genuinely expires on
+///   stalls, crashes, and partitions.
+/// * [`Clock::Manual`] — deterministic virtual time advanced explicitly
+///   with [`Clock::advance`]. Lease-expiry tests drive failure scenarios
+///   without sleeping, and the deterministic executors use µs-scale ticks
+///   so leases (floored at seconds) never expire spuriously.
 #[derive(Clone, Copy, Debug)]
-pub struct WallClock(Instant);
+pub enum Clock {
+    /// Monotone wall time, seconds since the clock was created.
+    Wall(Instant),
+    /// Virtual time; advances only via [`Clock::advance`].
+    Manual(f64),
+}
 
-impl WallClock {
-    pub fn start() -> WallClock {
-        WallClock(Instant::now())
+impl Clock {
+    pub fn wall() -> Clock {
+        Clock::Wall(Instant::now())
     }
 
-    /// Seconds since the clock was started (monotone, never negative).
+    pub fn manual(start_s: f64) -> Clock {
+        Clock::Manual(start_s)
+    }
+
+    /// Current time in seconds (monotone, never negative).
     pub fn now(&self) -> f64 {
-        self.0.elapsed().as_secs_f64()
+        match self {
+            Clock::Wall(origin) => origin.elapsed().as_secs_f64(),
+            Clock::Manual(t) => *t,
+        }
+    }
+
+    /// Advance a manual clock by `dt` seconds; no-op on a wall clock
+    /// (wall time advances itself).
+    pub fn advance(&mut self, dt: f64) {
+        if let Clock::Manual(t) = self {
+            *t += dt;
+        }
+    }
+
+    pub fn is_manual(&self) -> bool {
+        matches!(self, Clock::Manual(_))
     }
 }
 
@@ -174,6 +204,45 @@ impl JobLedger {
         out
     }
 
+    /// Re-lease specific pooled prompts to `actor`, preserving the
+    /// caller's order (the failover path: a dead actor's prompts return
+    /// to the pool via [`expire`](Self::expire) /
+    /// [`revoke_actor`](Self::revoke_actor), then the hub re-issues the
+    /// *original job's* prompt sequence to one survivor so regeneration
+    /// is bit-reproducible). Prompts not currently pending are skipped;
+    /// returns the prompts actually re-leased, in request order.
+    pub fn reissue(
+        &mut self,
+        prompts: &[PromptId],
+        actor: ActorId,
+        version: u64,
+        hash: [u8; 32],
+        now: f64,
+    ) -> Vec<PromptId> {
+        let dur = self.lease_duration();
+        let mut out = Vec::with_capacity(prompts.len());
+        for &p in prompts {
+            let Some(pos) = self.pending.iter().position(|&q| q == p) else { continue };
+            self.pending.remove(pos);
+            let lease = Lease {
+                prompt: p,
+                actor,
+                issued_at: now,
+                expires_at: now + dur,
+                version,
+                hash,
+            };
+            self.expiry
+                .entry((lease.expires_at * 1000.0) as u64)
+                .or_default()
+                .push(p);
+            self.leases.insert(p, lease);
+            self.stats.issued += 1;
+            out.push(p);
+        }
+        out
+    }
+
     /// Submit a result: the acceptance predicate, verbatim.
     pub fn submit(
         &mut self,
@@ -264,16 +333,60 @@ mod tests {
 
     #[test]
     fn wall_clock_is_monotone_and_drives_lease_expiry() {
-        let c = WallClock::start();
+        let c = Clock::wall();
         let a = c.now();
         std::thread::sleep(std::time::Duration::from_millis(2));
         let b = c.now();
         assert!(a >= 0.0 && b > a, "monotone: {a} -> {b}");
+        assert!(!c.is_manual());
         // A lease issued at wall time `a` is still valid "now" (real leases
         // are >= min_s seconds long, far beyond this test's runtime).
         let mut l = ledger();
         let p = l.issue(1, 5, H, a, 1)[0];
         assert!(l.submit(1, p, 5, H, c.now()).is_ok());
+    }
+
+    #[test]
+    fn manual_clock_drives_expiry_without_sleeping() {
+        // The deterministic failure-test pattern: a Manual clock advanced
+        // past the lease horizon expires leases with zero wall time spent.
+        let mut c = Clock::manual(0.0);
+        let mut l = ledger();
+        let got = l.issue(1, 5, H, c.now(), 3);
+        assert_eq!(got.len(), 3);
+        c.advance(19.0); // duration = multiplier * min_s = 20 s
+        assert!(l.expire(c.now()).is_empty(), "not yet due");
+        c.advance(2.0);
+        let returned = l.expire(c.now());
+        assert_eq!(returned.len(), 3);
+        assert_eq!(l.stats().expired, 3);
+        // Wall clocks ignore advance (their time is real).
+        let mut w = Clock::wall();
+        let t0 = w.now();
+        w.advance(1e9);
+        assert!(w.now() - t0 < 1.0, "advance must not warp a wall clock");
+    }
+
+    #[test]
+    fn reissue_preserves_request_order_and_skips_unpooled() {
+        let mut l = ledger();
+        let got = l.issue(1, 5, H, 0.0, 4); // prompts 0..4 leased to actor 1
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        // Actor 1 dies; its prompts return to the pool (arbitrary order).
+        let mut revoked = l.revoke_actor(1);
+        revoked.sort_unstable();
+        assert_eq!(revoked, vec![0, 1, 2, 3]);
+        // Failover re-leases the ORIGINAL job order to actor 2; prompt 77
+        // was never posted, so it is simply skipped.
+        let again = l.reissue(&[2, 0, 3, 1, 77], 2, 5, H, 1.0);
+        assert_eq!(again, vec![2, 0, 3, 1], "caller order, not pool order");
+        assert_eq!(l.outstanding(), 4);
+        for p in [2u64, 0, 3, 1] {
+            assert!(l.submit(2, p, 5, H, 2.0).is_ok());
+        }
+        // A prompt already leased elsewhere cannot be re-leased.
+        let held = l.issue(3, 5, H, 3.0, 1);
+        assert_eq!(l.reissue(&held, 2, 5, H, 3.0), Vec::<u64>::new());
     }
 
     #[test]

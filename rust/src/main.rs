@@ -19,7 +19,8 @@ use sparrowrl::util::cli::Args;
 fn usage() -> ! {
     eprintln!(
         "usage:\n  sparrowrl exp <{}|all> [--flags]\n  sparrowrl train [--model sparrow-xs] \
-         [--steps N] [--sft-steps N] [--algorithm grpo|rloo|opo] [--lr-rl X] [--actors N] [--seed S] [--pipelined] [--wan wan-1..wan-4] [--gantt]\n  \
+         [--steps N] [--sft-steps N] [--algorithm grpo|rloo|opo] [--lr-rl X] [--actors N] [--seed S] [--pipelined] \
+         [--transport inproc|sim|tcp] [--tcp-streams N] [--tcp-bps BITS] [--deterministic] [--wan wan-1..wan-4] [--gantt]\n  \
          sparrowrl sim [--model qwen3-8b] [--system sparrow|full|ms|ideal] [--bench gsm8k|math|deepscaler] [--steps N]\n  \
          sparrowrl list",
         exp::ALL.join("|")
@@ -66,37 +67,96 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.bench = Benchmark::parse(&args.str_or("bench", "gsm8k"))
         .ok_or_else(|| anyhow::anyhow!("bad --bench"))?;
     cfg.verbose = true;
+    cfg.deterministic = args.flag("deterministic");
     let mut mode = if args.flag("pipelined") { ExecMode::Pipelined } else { ExecMode::Sequential };
-    // Multi-region distribution: group the actors per a WAN preset and
-    // stream deltas hub -> regional relay -> peers (implies --pipelined,
-    // since the sequential reference has no distribution tree).
+    // Multi-region distribution: group the actors per a WAN preset
+    // (implies --pipelined, since the sequential reference has no
+    // distribution tree).
     let wan = args.str_or("wan", "");
-    if !wan.is_empty() {
+    let preset = if wan.is_empty() {
+        None
+    } else {
         if args.get("actors").is_some() {
             anyhow::bail!("--wan sets the actor count from the preset; drop --actors");
         }
-        let preset = config::wan_preset(&wan)
+        let p = config::wan_preset(&wan)
             .ok_or_else(|| anyhow::anyhow!("unknown WAN preset {wan} (wan-1..wan-4)"))?;
-        let plan = sparrowrl::transport::DistributionPlan::from_preset(&preset, 1 << 20);
-        cfg.n_actors = plan.n_actors();
-        cfg.distribution = Some(sparrowrl::rt::DistributionSpec::from_plan(&plan));
+        cfg.n_actors = p.n_actors();
         mode = ExecMode::Pipelined;
-        println!(
-            "WAN preset {}: {} regions, {} actors, relays {:?}",
-            preset.name,
-            preset.regions.len(),
-            plan.n_actors(),
-            plan.legs.iter().map(|l| l.relay).collect::<Vec<_>>(),
-        );
+        Some(p)
+    };
+    // Transport backend: how hub↔actor traffic travels in the pipelined
+    // executor. All three run the identical executor code path.
+    match args.str_or("transport", "inproc").as_str() {
+        // In-process mailboxes; a WAN preset becomes relay routing
+        // (hub -> regional relay worker -> peers).
+        "inproc" => {
+            if let Some(p) = &preset {
+                let plan = sparrowrl::transport::DistributionPlan::from_preset(p, 1 << 20);
+                cfg.distribution = Some(sparrowrl::rt::DistributionSpec::from_plan(&plan));
+                println!(
+                    "WAN preset {}: {} regions, {} actors, relays {:?}",
+                    p.name,
+                    p.regions.len(),
+                    plan.n_actors(),
+                    plan.legs.iter().map(|l| l.relay).collect::<Vec<_>>(),
+                );
+            }
+        }
+        // Netsim-modeled WAN: the transport owns the relay tree and the
+        // cross-stripe arrival reordering.
+        "sim" => {
+            mode = ExecMode::Pipelined;
+            let net = match &preset {
+                Some(p) => sparrowrl::transport::SimNetConfig::from_preset(p, cfg.seed),
+                None => sparrowrl::transport::SimNetConfig::single_region(
+                    cfg.n_actors,
+                    sparrowrl::netsim::Link::from_profile(&config::regions::CANADA),
+                    4,
+                    cfg.seed,
+                ),
+            };
+            println!(
+                "sim transport: {} region(s), stripes {:?}",
+                net.n_regions(),
+                net.streams
+            );
+            cfg.transport = sparrowrl::rt::TransportKind::Sim(net);
+        }
+        // Real loopback sockets with striped, optionally throttled
+        // segment push.
+        "tcp" => {
+            mode = ExecMode::Pipelined;
+            if preset.is_some() {
+                anyhow::bail!(
+                    "--transport tcp streams hub→actor directly; combine --wan with --transport sim"
+                );
+            }
+            let tc = sparrowrl::transport::TcpConfig {
+                streams: args.parse_or("tcp-streams", 2usize),
+                bits_per_s: args.get("tcp-bps").and_then(|s| s.parse::<f64>().ok()),
+                kill: None,
+            };
+            println!(
+                "tcp transport: {} stream(s)/actor over loopback{}",
+                tc.streams,
+                tc.bits_per_s
+                    .map(|b| format!(", throttled to {:.0} Mbit/s", b / 1e6))
+                    .unwrap_or_default(),
+            );
+            cfg.transport = sparrowrl::rt::TransportKind::Tcp(tc);
+        }
+        other => anyhow::bail!("unknown --transport {other} (inproc|sim|tcp)"),
     }
     println!(
-        "training {model} with {} on {} ({} actors, {} SFT + {} RL steps, {} executor)",
+        "training {model} with {} on {} ({} actors, {} SFT + {} RL steps, {} executor, {} transport)",
         cfg.algorithm.name(),
         cfg.bench.name(),
         cfg.n_actors,
         cfg.sft_steps,
         cfg.steps,
         mode.name(),
+        cfg.transport.name(),
     );
     let report = run_local_mode(&cfg, mode)?;
     println!(
@@ -109,6 +169,18 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             &[sparrowrl::metrics::SpanKind::Train, sparrowrl::metrics::SpanKind::Extract],
         ) * 100.0,
     );
+    // The cross-backend equivalence witness: identical runs (same seed,
+    // --deterministic) print the same digest on every transport.
+    if let Some(last) = report.steps.last() {
+        let hex: String = last.policy_checksum.iter().map(|b| format!("{b:02x}")).collect();
+        println!("final policy checksum: {hex}");
+    }
+    if report.failovers > 0 {
+        println!(
+            "failovers: {} actor(s) lost, {} prompt(s) requeued to survivors",
+            report.failovers, report.requeued_prompts,
+        );
+    }
     if args.flag("gantt") {
         print!("{}", report.timeline.ascii_gantt(100));
     }

@@ -19,12 +19,42 @@
 use crate::actor::rollout::{generate_batch, SampleCfg};
 use crate::data::{Benchmark, Task};
 use crate::delta::ParamSet;
+use crate::ledger::LeasePolicy;
 use crate::metrics::Timeline;
 use crate::rt::pipeline::{run_with_compute, ExecMode};
 use crate::runtime::Engines;
 use crate::trainer::Algorithm;
+use crate::transport::api::SimNetConfig;
+use crate::transport::tcp::TcpConfig;
 use crate::util::Rng;
 use anyhow::{bail, Context, Result};
+
+/// Which `transport::api` backend carries hub↔actor traffic in the
+/// pipelined executor. All three run the identical executor and worker
+/// code; in deterministic mode they commit bit-identical policies.
+#[derive(Clone, Debug, Default)]
+pub enum TransportKind {
+    /// In-process mpsc mailboxes, zero-copy message passing (optionally
+    /// relay-routed per `LocalRunConfig::distribution`).
+    #[default]
+    InProc,
+    /// In-process workers behind the netsim WAN model: delta streams
+    /// arrive in `deliver_striped` order per region relay leg.
+    Sim(SimNetConfig),
+    /// Real loopback sockets: framed `Msg` traffic, striped segment
+    /// push, throttled writers, real crash/partition failure surfaces.
+    Tcp(TcpConfig),
+}
+
+impl TransportKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::InProc => "inproc",
+            TransportKind::Sim(_) => "sim",
+            TransportKind::Tcp(_) => "tcp",
+        }
+    }
+}
 
 /// Configuration for a local end-to-end run.
 #[derive(Clone, Debug)]
@@ -59,6 +89,17 @@ pub struct LocalRunConfig {
     /// The sequential reference executor ignores this — staging is
     /// order-insensitive, so results are bit-identical either way.
     pub distribution: Option<crate::rt::pipeline::DistributionSpec>,
+    /// Communication backend for the pipelined executor (the sequential
+    /// reference has no transport; it ignores this).
+    pub transport: TransportKind,
+    /// Job-ledger lease policy (fault tests shorten `min_s` so expiry
+    /// fires within a test's runtime).
+    pub lease: LeasePolicy,
+    /// Lease against the wall clock even when `deterministic` is set:
+    /// generation stays bit-reproducible (virtual settle durations keep
+    /// the scheduler deterministic) while stalled/partitioned actors
+    /// genuinely time out — the fault-tolerance tests' configuration.
+    pub wall_leases: bool,
 }
 
 impl LocalRunConfig {
@@ -80,6 +121,9 @@ impl LocalRunConfig {
             verbose: false,
             deterministic: false,
             distribution: None,
+            transport: TransportKind::InProc,
+            lease: LeasePolicy::default(),
+            wall_leases: false,
         }
     }
 }
@@ -115,6 +159,12 @@ pub struct RunReport {
     /// `timeline.overlap_ratio(..)` quantifies how much synchronization
     /// the pipelined executor hid inside the generation window.
     pub timeline: Timeline,
+    /// Actors lost mid-run and absorbed via lease-driven failover
+    /// (crash, partition, or graceful leave) — 0 on a healthy run.
+    pub failovers: u64,
+    /// Prompts re-leased to survivors after failures, exactly once per
+    /// failure per prompt.
+    pub requeued_prompts: u64,
 }
 
 impl RunReport {

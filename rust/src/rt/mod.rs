@@ -8,9 +8,14 @@
 //! reference and the overlapped one-step async runtime (worker thread per
 //! actor, training/delta-streaming hidden inside the generation window).
 //! `compute` abstracts the model backend (PJRT artifacts or the
-//! deterministic synthetic engine). `net` adds the TCP transport so the
-//! same loop runs across processes. With a [`DistributionSpec`]
-//! (`LocalRunConfig::distribution`) the pipelined executor routes delta
+//! deterministic synthetic engine). `net` defines the `Msg` vocabulary
+//! and its TCP framing — the *entire* hub↔actor protocol every
+//! `transport::api` backend carries, so one pipelined executor runs
+//! unchanged over in-process mailboxes (`--transport inproc`), the
+//! netsim WAN-reorder model (`--transport sim`), and real loopback
+//! sockets (`--transport tcp`), with lease-driven failover when a Tcp
+//! actor crashes or partitions. With a [`DistributionSpec`]
+//! (`LocalRunConfig::distribution`) the InProc backend routes delta
 //! segments hub → regional relay worker → peers, mirroring the
 //! multi-region WAN tree of `transport::DistributionPlan` in one process
 //! (see docs/ARCHITECTURE.md).
@@ -21,5 +26,7 @@ pub mod net;
 pub mod pipeline;
 
 pub use compute::{Compute, ComputeShape, SyntheticCompute};
-pub use local::{evaluate, run_local, run_local_mode, LocalRunConfig, RunReport, StepLog};
+pub use local::{
+    evaluate, run_local, run_local_mode, LocalRunConfig, RunReport, StepLog, TransportKind,
+};
 pub use pipeline::{policy_checksum, run_with_compute, DistributionSpec, ExecMode};

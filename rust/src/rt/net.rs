@@ -1,10 +1,16 @@
-//! TCP transport for the distributed runtime: message framing, throttled
-//! writers (WAN emulation without root/tc), multi-stream segment push, and
-//! the actor-side receive loop.
+//! The hub↔actor message vocabulary and its TCP framing: `Msg` is the
+//! *entire* protocol every [`crate::transport::api::Transport`] backend
+//! speaks (in-process channels pass it by value; the Tcp backend frames
+//! it over loopback sockets with throttled writers emulating WAN
+//! bandwidth — no root/tc required).
 //!
 //! The wire protocol is deliberately tiny — length-prefixed frames with a
 //! one-byte tag — because the heavy lifting (segment framing, integrity,
 //! reassembly, staging) is already done by `transport` and `actor`.
+//! Decoding is hostile-input safe: truncated frames, unknown tags, and
+//! oversized length prefixes are rejected without panicking and without
+//! attacker-controlled allocation (counts are validated against the
+//! actual body length before any `Vec` is reserved).
 
 use crate::transport::Segment;
 use anyhow::{bail, Context, Result};
@@ -12,7 +18,14 @@ use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
-/// Control/data messages between Trainer Hub and Actors.
+/// Hard cap on one frame's length prefix. Larger than any real message
+/// (segments are ~1 MiB), small enough that a hostile prefix cannot ask
+/// the reader to buffer unbounded memory.
+pub const MAX_FRAME: usize = 256 << 20;
+
+/// Control/data messages between Trainer Hub and Actors — the complete
+/// transport vocabulary (membership, delta push, staged activation, job
+/// dispatch, rollout results, shutdown).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
     /// Actor introduces itself (actor id, gpu-class prior tokens/s).
@@ -21,11 +34,22 @@ pub enum Msg {
     Seg(Segment),
     /// Commit a fully staged version (§5.2 staged activation).
     Commit { version: u64 },
-    /// Actor acknowledges activation of `version` with the ckpt hash.
+    /// Actor acknowledges activation of `version`. `hash` is the SHA-256
+    /// of the actor's post-commit policy bits ([`policy_checksum`]) — the
+    /// cross-process bit-exactness witness the hub checks against its own
+    /// trainer policy before accepting any rollouts generated on it.
+    ///
+    /// [`policy_checksum`]: crate::rt::pipeline::policy_checksum
     Activated { actor: u32, version: u64, hash: [u8; 32] },
-    /// Job: generate rollouts for `prompt_ids` on `version`.
-    Job { version: u64, prompt_ids: Vec<u64> },
-    /// One rollout result (prompt, behaviour version, reward, tokens).
+    /// Job: generate rollouts for `prompt_ids` on `version`, drawing
+    /// randomness from `rng_seed`. The seed is hub-assigned (derived from
+    /// the run seed and the *original* assignment) so a job re-issued to
+    /// a survivor after a failure regenerates bit-identical rollouts.
+    Job { version: u64, rng_seed: u64, prompt_ids: Vec<u64> },
+    /// One rollout result. `hash` is the checkpoint hash of the actor's
+    /// active version — the ledger's acceptance predicate (§5.4) checks
+    /// it against the lease. `tokens` are the generated completion only
+    /// (prompt tokens are re-derived from `prompt_id`).
     RolloutResult {
         actor: u32,
         prompt_id: u64,
@@ -70,8 +94,9 @@ impl Msg {
                 body.extend_from_slice(hash);
                 TAG_ACTIVATED
             }
-            Msg::Job { version, prompt_ids } => {
+            Msg::Job { version, rng_seed, prompt_ids } => {
                 body.extend_from_slice(&version.to_le_bytes());
+                body.extend_from_slice(&rng_seed.to_le_bytes());
                 body.extend_from_slice(&(prompt_ids.len() as u32).to_le_bytes());
                 for p in prompt_ids {
                     body.extend_from_slice(&p.to_le_bytes());
@@ -128,12 +153,19 @@ impl Msg {
             }
             TAG_JOB => {
                 let version = rd_u64(body, 0)?;
-                let n = rd_u32(body, 8)? as usize;
+                let rng_seed = rd_u64(body, 8)?;
+                let n = rd_u32(body, 16)? as usize;
+                // Validate the count against the bytes actually present
+                // BEFORE allocating: a hostile prefix must not drive a
+                // multi-gigabyte `with_capacity`.
+                if body.len() != 20 + n.checked_mul(8).context("prompt count overflow")? {
+                    bail!("job frame length mismatch ({n} prompts, {} bytes)", body.len());
+                }
                 let mut prompt_ids = Vec::with_capacity(n);
                 for i in 0..n {
-                    prompt_ids.push(rd_u64(body, 12 + i * 8)?);
+                    prompt_ids.push(rd_u64(body, 20 + i * 8)?);
                 }
-                Msg::Job { version, prompt_ids }
+                Msg::Job { version, rng_seed, prompt_ids }
             }
             TAG_RESULT => {
                 let actor = rd_u32(body, 0)?;
@@ -143,6 +175,9 @@ impl Msg {
                 hash.copy_from_slice(body.get(20..52).context("short")?);
                 let reward = f32::from_le_bytes(body.get(52..56).context("short")?.try_into()?);
                 let n = rd_u32(body, 56)? as usize;
+                if body.len() != 60 + n.checked_mul(4).context("token count overflow")? {
+                    bail!("result frame length mismatch ({n} tokens, {} bytes)", body.len());
+                }
                 let mut tokens = Vec::with_capacity(n);
                 for i in 0..n {
                     tokens.push(i32::from_le_bytes(
@@ -157,21 +192,23 @@ impl Msg {
     }
 }
 
-/// Blocking frame reader.
-pub fn read_msg(stream: &mut TcpStream) -> Result<Msg> {
+/// Blocking frame reader over any byte stream (sockets in production,
+/// in-memory cursors in tests). Frames longer than [`MAX_FRAME`] are
+/// rejected before any body allocation.
+pub fn read_msg<R: Read>(stream: &mut R) -> Result<Msg> {
     let mut len = [0u8; 4];
     stream.read_exact(&mut len).context("read frame length")?;
     let len = u32::from_le_bytes(len) as usize;
-    if len == 0 || len > 256 << 20 {
-        bail!("bad frame length {len}");
+    if len == 0 || len > MAX_FRAME {
+        bail!("bad frame length {len} (max {MAX_FRAME})");
     }
     let mut body = vec![0u8; len];
     stream.read_exact(&mut body).context("read frame body")?;
     Msg::from_tagged(&body)
 }
 
-/// Blocking frame writer.
-pub fn write_msg(stream: &mut TcpStream, msg: &Msg) -> Result<()> {
+/// Blocking frame writer over any byte sink.
+pub fn write_msg<W: Write>(stream: &mut W, msg: &Msg) -> Result<()> {
     stream.write_all(&msg.to_frame()).context("write frame")?;
     Ok(())
 }
@@ -230,6 +267,26 @@ pub fn push_segments_multistream(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::io::Cursor;
+
+    fn every_message() -> Vec<Msg> {
+        vec![
+            Msg::Hello { actor: 3, prior_tau: 2500.0 },
+            Msg::Seg(Segment { version: 9, seq: 2, total: 5, payload: vec![1, 2, 3] }),
+            Msg::Commit { version: 12 },
+            Msg::Activated { actor: 1, version: 12, hash: [7u8; 32] },
+            Msg::Job { version: 4, rng_seed: 0xDEAD_BEEF, prompt_ids: vec![10, 20, 30] },
+            Msg::RolloutResult {
+                actor: 2,
+                prompt_id: 77,
+                version: 4,
+                hash: [9u8; 32],
+                reward: 0.5,
+                tokens: vec![1, -2, 3],
+            },
+            Msg::Bye,
+        ]
+    }
 
     fn round_trip(m: Msg) {
         let frame = m.to_frame();
@@ -241,25 +298,24 @@ mod tests {
 
     #[test]
     fn all_messages_round_trip() {
-        round_trip(Msg::Hello { actor: 3, prior_tau: 2500.0 });
-        round_trip(Msg::Seg(Segment {
-            version: 9,
-            seq: 2,
-            total: 5,
-            payload: vec![1, 2, 3],
-        }));
-        round_trip(Msg::Commit { version: 12 });
-        round_trip(Msg::Activated { actor: 1, version: 12, hash: [7u8; 32] });
-        round_trip(Msg::Job { version: 4, prompt_ids: vec![10, 20, 30] });
-        round_trip(Msg::RolloutResult {
-            actor: 2,
-            prompt_id: 77,
-            version: 4,
-            hash: [9u8; 32],
-            reward: 0.5,
-            tokens: vec![1, -2, 3],
-        });
-        round_trip(Msg::Bye);
+        for m in every_message() {
+            round_trip(m);
+        }
+    }
+
+    #[test]
+    fn stream_round_trip_through_reader_and_writer() {
+        // The exact path the Tcp backend uses: write_msg onto a byte
+        // stream, read_msg back, for the full vocabulary back to back.
+        let mut buf: Vec<u8> = Vec::new();
+        for m in every_message() {
+            write_msg(&mut buf, &m).unwrap();
+        }
+        let mut rd = Cursor::new(buf);
+        for want in every_message() {
+            assert_eq!(read_msg(&mut rd).unwrap(), want);
+        }
+        assert!(read_msg(&mut rd).is_err(), "clean EOF after the last frame");
     }
 
     #[test]
@@ -269,6 +325,75 @@ mod tests {
         let n = frame.len();
         frame[n - 3] ^= 0xFF;
         assert!(Msg::from_tagged(&frame[4..]).is_err());
+    }
+
+    #[test]
+    fn truncated_frames_error_instead_of_panicking() {
+        // Every prefix of every message body must decode to Err — never
+        // panic, never misparse into a shorter valid message.
+        for m in every_message() {
+            let frame = m.to_frame();
+            let body = &frame[4..];
+            for cut in 0..body.len() {
+                match Msg::from_tagged(&body[..cut]) {
+                    Err(_) => {}
+                    // A Seg prefix could only "succeed" if it were a
+                    // full shorter segment; the trailing-bytes check and
+                    // per-segment checksum forbid that.
+                    Ok(got) => panic!("prefix {cut} of {m:?} parsed as {got:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_and_empty_tags_rejected() {
+        assert!(Msg::from_tagged(&[]).is_err(), "empty frame");
+        for tag in [0u8, 8, 99, 255] {
+            assert!(Msg::from_tagged(&[tag]).is_err(), "tag {tag}");
+            assert!(Msg::from_tagged(&[tag, 1, 2, 3]).is_err(), "tag {tag} with body");
+        }
+    }
+
+    #[test]
+    fn hostile_counts_are_capped_before_allocation() {
+        // A Job body claiming u32::MAX prompts but carrying none: the
+        // count/length cross-check must reject it without ever reserving
+        // 32 GB. (If the cap regressed, this test would OOM/abort rather
+        // than fail an assert — either way CI catches it.)
+        let mut body = vec![TAG_JOB];
+        body.extend_from_slice(&4u64.to_le_bytes()); // version
+        body.extend_from_slice(&7u64.to_le_bytes()); // rng_seed
+        body.extend_from_slice(&u32::MAX.to_le_bytes()); // n, hostile
+        assert!(Msg::from_tagged(&body).is_err());
+
+        let mut body = vec![TAG_RESULT];
+        body.extend_from_slice(&[0u8; 56]); // actor..reward, all zero
+        body.extend_from_slice(&u32::MAX.to_le_bytes()); // n tokens, hostile
+        body.extend_from_slice(&[0u8; 64]); // some bytes, far fewer than claimed
+        assert!(Msg::from_tagged(&body).is_err());
+
+        // Trailing garbage after a valid count is also a length mismatch.
+        let mut frame = Msg::Job { version: 1, rng_seed: 2, prompt_ids: vec![5] }.to_frame();
+        frame.extend_from_slice(&[0u8; 8]);
+        assert!(Msg::from_tagged(&frame[4..]).is_err());
+    }
+
+    #[test]
+    fn read_msg_rejects_oversized_and_zero_length_prefixes() {
+        // len > MAX_FRAME: reject from the 4-byte prefix alone — the body
+        // is never allocated or read.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        buf.extend_from_slice(&[TAG_BYE]);
+        assert!(read_msg(&mut Cursor::new(&buf)).is_err());
+        // len == 0: no room for even a tag.
+        assert!(read_msg(&mut Cursor::new(&0u32.to_le_bytes())).is_err());
+        // Truncated body: length prefix promises more than the stream has.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&100u32.to_le_bytes());
+        buf.push(TAG_BYE);
+        assert!(read_msg(&mut Cursor::new(&buf)).is_err());
     }
 
     #[test]

@@ -10,18 +10,30 @@
 //!
 //! * [`ExecMode::Sequential`] — every phase in program order on one
 //!   thread (the reference executor; wall-clock is the sum of phases);
-//! * [`ExecMode::Pipelined`] — one worker thread per actor, each owning
-//!   its [`PolicyState`] behind an mpsc command mailbox, with the hub
-//!   thread training/streaming concurrently with generation.
+//! * [`ExecMode::Pipelined`] — one worker per actor behind a
+//!   [`Transport`] backend, with the hub training/streaming concurrently
+//!   with generation.
+//!
+//! The pipelined executor is **transport-agnostic**: hub and workers
+//! speak only `rt::net::Msg` through the `transport::api` handle types,
+//! so the identical executor code path runs over in-process mailboxes
+//! (`InProc`, the zero-copy default), the netsim WAN-reorder model
+//! (`Sim`), and real loopback sockets (`Tcp`) — selected by
+//! `LocalRunConfig::transport`. Failure is a first-class input: a dead
+//! or partitioned actor surfaces as a transport `Down` event or a lease
+//! expiry, its prompts requeue to survivors under fresh leases with the
+//! *original* job's RNG seed (so regeneration is bit-reproducible), and
+//! the run completes without a global restart — the paper's §5.4 loop.
 //!
 //! Both executors share `plan_step` / `run_gen_job` / `train_and_stream`,
 //! draw per-(step, actor) RNG streams, and assemble training batches in
 //! assignment order, so with `LocalRunConfig::deterministic` the two modes
-//! are **bit-identical**: same committed policies, same per-step rho and
-//! payload bytes, same final version (see `tests/pipeline_equivalence.rs`).
-//! Bit-exactness of actor policies against the trainer is asserted at
-//! every committed version in both modes — cross-thread via a SHA-256
-//! witness ([`policy_checksum`]) carried in the Commit acknowledgement.
+//! — and all three transport backends — are **bit-identical**: same
+//! committed policies, same per-step rho and payload bytes, same final
+//! version (see `tests/pipeline_equivalence.rs` and
+//! `tests/transport_equivalence.rs`). Bit-exactness of actor policies
+//! against the trainer is asserted at every committed version via a
+//! SHA-256 witness ([`policy_checksum`]) carried in the `Activated` ack.
 //!
 //! Why the overlap is legal: a generation job snapshots the actor's params
 //! at job start, so a Commit applying between generation batches never
@@ -32,20 +44,24 @@ use crate::actor::rollout::SampleCfg;
 use crate::actor::{CommitResult, PolicyState};
 use crate::data::{pack_batch, Task};
 use crate::delta::{CheckpointStore, ModelLayout, ParamSet};
-use crate::ledger::{JobLedger, LeasePolicy, Reject, WallClock};
+use crate::ledger::{Clock, JobLedger, Reject};
 use crate::metrics::{SpanKind, Timeline};
 use crate::rt::compute::Compute;
-use crate::rt::local::{LocalRunConfig, RunReport, StepLog};
+use crate::rt::local::{LocalRunConfig, RunReport, StepLog, TransportKind};
+use crate::rt::net::Msg;
 use crate::runtime::TrainState;
 use crate::scheduler::{Assignment, Scheduler, SchedulerConfig, VersionState};
 use crate::trainer::{group_advantages, stream_checkpoint, Rollout};
+use crate::transport::api::{
+    ActorEndpoint, Closed, Event, HubEndpoint, InProcTransport, Polled, SimTransport, Transport,
+};
+use crate::transport::tcp::TcpTransport;
 use crate::transport::Segment;
 use crate::util::Rng;
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 use sha2::{Digest, Sha256};
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Geo-distribution wiring for the runtime: actors grouped into regions,
 /// one relay per region. The hub streams each delta segment once per
@@ -160,61 +176,31 @@ struct GenJob {
     rng_seed: u64,
 }
 
-/// Hub -> actor mailbox protocol. Channel FIFO order is the correctness
-/// backbone: segments of `D_v` always precede `Commit(v)`, which always
-/// precedes `Generate` for the step that needs `v` active.
-enum ToActor {
-    Generate(GenJob),
-    /// Delta segment for the staging decoder (consumed mid-generation).
-    Segment(Segment),
-    /// Activate `version` at the next safe point.
-    Commit(u64),
-}
+// The hub↔actor protocol is `rt::net::Msg`, carried by whatever
+// `transport::api` backend the config selects. Control-plane FIFO order
+// (per actor) is the correctness backbone: a `Job` for version `v` is
+// only dispatched after that actor's `Activated(v)` ack, so generation
+// never starts on a version the actor hasn't applied — while segments
+// may ride reordered paths freely (staging is order-insensitive, and a
+// `Commit` overtaking its segments parks in `PolicyState`).
 
-/// Actor -> hub replies. Span timestamps are seconds since the RL phase
-/// origin, measured on the worker.
-enum FromActor {
-    Generated {
-        actor: u32,
-        step: u64,
-        rollouts: Vec<Rollout>,
-        gen_tokens: u64,
-        start_s: f64,
-        end_s: f64,
-    },
-    Committed {
-        actor: u32,
-        version: u64,
-        checksum: [u8; 32],
-        start_s: f64,
-        end_s: f64,
-    },
-    Failed {
-        actor: u32,
-        msg: String,
-    },
-}
-
-/// Run one generation job against `state`. Params are snapshotted at
-/// entry; `at_safe_point` fires between generation batches so staging and
-/// deferred commits can land mid-step without touching in-flight output.
+/// Run one generation job against `state`, serving completions from
+/// `policy_ref` — the behaviour snapshot the caller resolved for
+/// `job.version` via [`PolicyState::behaviour_policy`] (the active
+/// policy, or the retained previous version when a commit already rolled
+/// the actor forward mid-step). `at_safe_point` fires between generation
+/// batches so staging and deferred commits can land mid-step without
+/// touching in-flight output.
 fn run_gen_job<C: Compute>(
     comp: &C,
     cfg: &LocalRunConfig,
     state: &mut PolicyState,
+    policy_ref: &ParamSet,
     actor: u32,
     job: &GenJob,
     mut at_safe_point: impl FnMut(&mut PolicyState) -> Result<(), String>,
 ) -> Result<(Vec<Rollout>, u64), String> {
-    if state.active_version() != job.version {
-        return Err(format!(
-            "actor {actor}: generate for v{} but active is v{}",
-            job.version,
-            state.active_version()
-        ));
-    }
     let shape = comp.shape();
-    let policy_ref = state.params().clone();
     let mut rng = Rng::new(job.rng_seed);
     let mut rollouts = Vec::with_capacity(job.pids.len() * cfg.group_size);
     let mut gen_tokens = 0u64;
@@ -229,7 +215,7 @@ fn run_gen_job<C: Compute>(
             }
         }
         let gens = comp
-            .generate(&policy_ref, &prompts, sample, &mut rng)
+            .generate(policy_ref, &prompts, sample, &mut rng)
             .map_err(|e| format!("actor {actor} generate: {e:#}"));
         state.set_generating(false);
         let gens = gens?;
@@ -268,27 +254,6 @@ struct StepAccum {
     policy_checksum: [u8; 32],
 }
 
-/// Lease/ledger time source: wall clock for real runs, a deterministic
-/// tick counter when `LocalRunConfig::deterministic` (ticks are µs-scale,
-/// so leases — floored at seconds — never expire and both executors
-/// accept identical rollout sets).
-enum RunClock {
-    Real(WallClock),
-    Virtual(f64),
-}
-
-impl RunClock {
-    fn now(&mut self) -> f64 {
-        match self {
-            RunClock::Real(w) => w.now(),
-            RunClock::Virtual(t) => {
-                *t += 1e-6;
-                *t
-            }
-        }
-    }
-}
-
 /// Trainer-hub state shared by both executors.
 struct Hub<'a, C: Compute> {
     cfg: &'a LocalRunConfig,
@@ -302,13 +267,21 @@ struct Hub<'a, C: Compute> {
     store: CheckpointStore,
     ledger: JobLedger,
     sched: Scheduler,
-    clock: RunClock,
+    /// Lease clock: wall time normally (leases genuinely expire on
+    /// stalls); a manual µs-tick clock under `deterministic` without
+    /// `wall_leases`, so leases never expire and every backend accepts
+    /// identical rollout sets.
+    clock: Clock,
     timeline: Timeline,
     /// RL-phase origin for timeline spans.
     t0: Instant,
     task_counter: u64,
     prompts_per_step: usize,
     accum: Vec<StepAccum>,
+    /// Actors lost to crash/partition this run (lease-driven failover).
+    failures: u64,
+    /// Prompts re-leased to survivors after a failure.
+    requeued: u64,
 }
 
 impl<'a, C: Compute> Hub<'a, C> {
@@ -331,10 +304,10 @@ impl<'a, C: Compute> Hub<'a, C> {
         // deterministic executor-equivalence contract). The gate runs
         // where real link timings exist: the netsim driver
         // (`SimConfig::bandwidth_gate`) and `sparrowrl exp wan`.
-        let clock = if cfg.deterministic {
-            RunClock::Virtual(0.0)
+        let clock = if cfg.deterministic && !cfg.wall_leases {
+            Clock::manual(0.0)
         } else {
-            RunClock::Real(WallClock::start())
+            Clock::wall()
         };
         Hub {
             cfg,
@@ -346,7 +319,7 @@ impl<'a, C: Compute> Hub<'a, C> {
             // Version-0 "hash": the genesis policy has no checkpoint.
             version_hash: [0u8; 32],
             store: CheckpointStore::in_memory(),
-            ledger: JobLedger::new(LeasePolicy::default()),
+            ledger: JobLedger::new(cfg.lease),
             sched,
             clock,
             timeline: Timeline::default(),
@@ -354,11 +327,21 @@ impl<'a, C: Compute> Hub<'a, C> {
             task_counter,
             prompts_per_step: comp.shape().b_train / cfg.group_size,
             accum: vec![StepAccum::default(); cfg.steps as usize],
+            failures: 0,
+            requeued: 0,
         }
     }
 
     fn now_s(&self) -> f64 {
         self.t0.elapsed().as_secs_f64()
+    }
+
+    /// Lease timestamp: wall seconds normally; under the deterministic
+    /// manual clock each read ticks 1 µs, so issue/submit stay ordered
+    /// while leases (seconds-scale) never expire spuriously.
+    fn lease_now(&mut self) -> f64 {
+        self.clock.advance(1e-6);
+        self.clock.now()
     }
 
     /// Post this step's prompts and lease them out per Algorithm 1,
@@ -372,7 +355,7 @@ impl<'a, C: Compute> Hub<'a, C> {
             })
             .collect();
         self.ledger.post(pids.iter().copied());
-        let now = self.clock.now();
+        let now = self.lease_now();
         // Real-clock lease hygiene: reclaim anything overdue from stalled
         // or crashed in-flight work before allocating.
         self.ledger.expire(now);
@@ -400,28 +383,33 @@ impl<'a, C: Compute> Hub<'a, C> {
     /// Submit one assignment's results under the acceptance predicate and
     /// settle the scheduler with *per-assignment* tokens and duration (the
     /// old loop credited cumulative totals across actors, corrupting tau).
-    /// Returns with `rollouts` filtered down to the accepted prompts: under
-    /// real-clock leases, work that outlived its lease is dropped (the
-    /// prompts return to the pool via `expire`) instead of killing the run.
+    /// `result_hash` is the checkpoint hash attached to the results — the
+    /// hub's own lease hash for the in-process sequential executor, the
+    /// actor-echoed hash over a transport (the §5.4 predicate end-to-end).
+    /// Returns with `rollouts` filtered down to the accepted prompts:
+    /// work whose lease lapsed mid-flight (`LeaseExpired`) or already
+    /// migrated to a survivor (`UnknownLease` after a failover sweep
+    /// re-pooled it) is dropped instead of killing the run.
     fn submit_and_settle(
         &mut self,
         actor: u32,
         job: &GenJob,
+        result_hash: [u8; 32],
         rollouts: &mut Vec<Rollout>,
         tokens: u64,
         elapsed_s: f64,
     ) -> Result<()> {
-        let now = self.clock.now();
-        let mut expired: Vec<u64> = Vec::new();
+        let now = self.lease_now();
+        let mut dropped: Vec<u64> = Vec::new();
         for &pid in &job.pids {
-            match self.ledger.submit(actor, pid, job.version, job.hash, now) {
+            match self.ledger.submit(actor, pid, job.version, result_hash, now) {
                 Ok(()) => {}
-                Err(Reject::LeaseExpired) => expired.push(pid),
+                Err(Reject::LeaseExpired) | Err(Reject::UnknownLease) => dropped.push(pid),
                 Err(e) => bail!("ledger rejected {pid}: {e:?}"),
             }
         }
-        if !expired.is_empty() {
-            rollouts.retain(|r| !expired.contains(&r.prompt_id));
+        if !dropped.is_empty() {
+            rollouts.retain(|r| !dropped.contains(&r.prompt_id));
         }
         let dt = if self.cfg.deterministic {
             // Virtual duration pinned to the current estimate: tau stays at
@@ -557,6 +545,8 @@ impl<'a, C: Compute> Hub<'a, C> {
             final_version: self.version,
             wall_s: wall0.elapsed().as_secs_f64(),
             timeline: self.timeline,
+            failovers: self.failures,
+            requeued_prompts: self.requeued,
         }
     }
 }
@@ -674,13 +664,16 @@ fn run_sequential<C: Compute>(hub: &mut Hub<C>) -> Result<()> {
             let a = asg.actor as usize;
             let start_s = hub.now_s();
             let t_job = Instant::now();
+            let (policy, _hash) = actors[a]
+                .behaviour_policy(job.version)
+                .ok_or_else(|| anyhow!("actor {a} has no behaviour policy for v{}", job.version))?;
             let (mut rollouts, tokens) =
-                run_gen_job(hub.comp, hub.cfg, &mut actors[a], asg.actor, job, |_| Ok(()))
+                run_gen_job(hub.comp, hub.cfg, &mut actors[a], &policy, asg.actor, job, |_| Ok(()))
                     .map_err(anyhow::Error::msg)?;
             let elapsed = t_job.elapsed().as_secs_f64();
             let end_s = hub.now_s();
             hub.timeline.record(&format!("actor{a}"), SpanKind::Rollout, start_s, end_s, step);
-            hub.submit_and_settle(asg.actor, job, &mut rollouts, tokens, elapsed)?;
+            hub.submit_and_settle(asg.actor, job, job.hash, &mut rollouts, tokens, elapsed)?;
             batch.extend(rollouts);
         }
         hub.finish_generation(step, &batch, phase_t.elapsed().as_secs_f64() * 1e3);
@@ -697,48 +690,50 @@ fn run_sequential<C: Compute>(hub: &mut Hub<C>) -> Result<()> {
     Ok(())
 }
 
-/// Forward one segment to every downstream mailbox (regional relay duty:
-/// cut-through, before local staging, so peers never wait on the relay's
-/// own decode). Send failures mean the peer exited; its own error path
-/// reports the cause, so drops here are not amplified.
-fn forward_segment(forwards: &[Sender<ToActor>], seg: &Segment) {
-    for tx in forwards {
-        let _ = tx.send(ToActor::Segment(seg.clone()));
-    }
+/// Reconstruct a worker-side job from its wire form. The lease hash
+/// lives hub-side only — the worker echoes the checkpoint hash its
+/// [`PolicyState::behaviour_policy`] resolves for the job's version — and
+/// `step` is folded into `version` (the hub never reads it back; slots
+/// are keyed by prompt id).
+fn wire_job(version: u64, rng_seed: u64, pids: Vec<u64>) -> GenJob {
+    GenJob { step: version, version, hash: [0u8; 32], pids, rng_seed }
 }
 
-/// Drain an actor's mailbox, then let any parked commit land if we are at
-/// a safe point. Segments stage regardless of the generating flag (and are
-/// forwarded first when this actor relays for its region); a `Commit`
-/// delivered mid-batch parks via [`PolicyState::request_commit`] and is
-/// applied (and acknowledged) by the trailing
-/// [`PolicyState::on_safe_point`] once `generating` drops. `Generate`
-/// messages are parked on the backlog for the main loop.
-fn drain_mailbox(
-    rx: &Receiver<ToActor>,
+/// Drain the endpoint without blocking, then let any parked commit land
+/// if we are at a safe point. Segments stage regardless of the
+/// generating flag; a `Commit` delivered mid-batch parks via
+/// [`PolicyState::request_commit`] and is applied (and acknowledged) by
+/// the trailing [`PolicyState::on_safe_point`] once `generating` drops.
+/// `Job` messages are parked on the backlog for the main loop. A closed
+/// endpoint mid-drain is not an error: the batch finishes and the main
+/// loop observes the shutdown.
+fn worker_drain(
+    ep: &mut dyn ActorEndpoint,
     state: &mut PolicyState,
     backlog: &mut VecDeque<GenJob>,
     actor: u32,
-    tx: &Sender<FromActor>,
-    forwards: &[Sender<ToActor>],
-    t0: Instant,
 ) -> Result<(), String> {
     loop {
-        match rx.try_recv() {
-            Ok(ToActor::Segment(seg)) => {
-                forward_segment(forwards, &seg);
+        match ep.try_recv() {
+            Ok(Some(Msg::Seg(seg))) => {
                 state
                     .on_segment(seg)
                     .map_err(|e| format!("actor {actor} staging: {e}"))?;
             }
-            Ok(ToActor::Commit(v)) => {
-                commit_and_ack(state, actor, v, tx, t0)?;
+            Ok(Some(Msg::Commit { version })) => {
+                commit_and_ack(state, actor, version, ep)?;
             }
-            Ok(ToActor::Generate(job)) => backlog.push_back(job),
-            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            Ok(Some(Msg::Job { version, rng_seed, prompt_ids })) => {
+                backlog.push_back(wire_job(version, rng_seed, prompt_ids));
+            }
+            // A mid-batch Bye only happens while the hub is tearing down;
+            // the disconnect surfaces at the next blocking recv.
+            Ok(Some(Msg::Bye)) => {}
+            Ok(Some(other)) => return Err(format!("actor {actor}: unexpected {other:?}")),
+            Ok(None) | Err(Closed) => break,
         }
     }
-    service_safe_point(state, actor, tx, t0)
+    service_safe_point(state, actor, ep)
 }
 
 /// Deliver `Commit(v)`: apply immediately at a safe point, or park it
@@ -748,12 +743,10 @@ fn commit_and_ack(
     state: &mut PolicyState,
     actor: u32,
     version: u64,
-    tx: &Sender<FromActor>,
-    t0: Instant,
+    ep: &mut dyn ActorEndpoint,
 ) -> Result<(), String> {
-    let start_s = t0.elapsed().as_secs_f64();
     match state.request_commit(version) {
-        CommitResult::Applied => ack_commit(state, actor, version, tx, t0, start_s),
+        CommitResult::Applied => ack_commit(state, actor, version, ep),
         CommitResult::Deferred => Ok(()),
         other => Err(format!("actor {actor} commit v{version} failed: {other:?}")),
     }
@@ -764,225 +757,278 @@ fn commit_and_ack(
 fn service_safe_point(
     state: &mut PolicyState,
     actor: u32,
-    tx: &Sender<FromActor>,
-    t0: Instant,
+    ep: &mut dyn ActorEndpoint,
 ) -> Result<(), String> {
-    let start_s = t0.elapsed().as_secs_f64();
     match state.on_safe_point() {
         None => Ok(()),
-        Some((v, CommitResult::Applied)) => ack_commit(state, actor, v, tx, t0, start_s),
+        Some((v, CommitResult::Applied)) => ack_commit(state, actor, v, ep),
         Some((v, other)) => Err(format!("actor {actor} deferred commit v{v} failed: {other:?}")),
     }
 }
 
-/// Send the Committed acknowledgement carrying the bit-exactness witness.
+/// Send the `Activated` acknowledgement carrying the bit-exactness
+/// witness (SHA-256 of the post-commit policy).
 fn ack_commit(
     state: &PolicyState,
     actor: u32,
     version: u64,
-    tx: &Sender<FromActor>,
-    t0: Instant,
-    start_s: f64,
+    ep: &mut dyn ActorEndpoint,
 ) -> Result<(), String> {
-    let reply = FromActor::Committed {
-        actor,
-        version,
-        checksum: policy_checksum(state.params()),
-        start_s,
-        end_s: t0.elapsed().as_secs_f64(),
-    };
-    tx.send(reply).map_err(|_| "hub exited".to_string())
+    ep.send(Msg::Activated { actor, version, hash: policy_checksum(state.params()) })
+        .map_err(|_| "hub exited".to_string())
 }
 
-/// One actor worker: owns its [`PolicyState`], processes the command
-/// mailbox, and generates rollouts while staging deltas that arrive
-/// mid-generation at inter-batch safe points.
-///
-/// A panic inside the worker must not strand the hub: with several
-/// workers alive the reply channel never disconnects, so an unwinding
-/// thread that sent nothing would leave `collect_step` blocked forever.
-/// The drop guard converts the unwind into a `Failed` reply.
+/// One actor worker, generic over the transport backend: owns its
+/// [`PolicyState`], speaks the `Msg` protocol through its endpoint, and
+/// generates rollouts while staging deltas that arrive mid-generation at
+/// inter-batch safe points. The identical function runs on an in-process
+/// thread (`InProc`/`Sim`) and behind loopback sockets (`Tcp`); errors
+/// become transport `Down` events at the hub, which fails the actor over
+/// instead of aborting the run.
 fn actor_worker<C: Compute>(
     comp: &C,
     cfg: &LocalRunConfig,
     actor: u32,
     mut state: PolicyState,
-    rx: Receiver<ToActor>,
-    tx: Sender<FromActor>,
-    forwards: Vec<Sender<ToActor>>,
-    t0: Instant,
-) {
-    struct PanicGuard<'a> {
-        actor: u32,
-        tx: &'a Sender<FromActor>,
+    ep: &mut dyn ActorEndpoint,
+) -> Result<(), String> {
+    // Membership: introduce ourselves before any work flows.
+    if ep.send(Msg::Hello { actor, prior_tau: 1000.0 }).is_err() {
+        return Ok(()); // hub gone before the run started
     }
-    impl Drop for PanicGuard<'_> {
-        fn drop(&mut self) {
-            if std::thread::panicking() {
-                let _ = self.tx.send(FromActor::Failed {
-                    actor: self.actor,
-                    msg: format!("actor {} worker panicked", self.actor),
-                });
-            }
-        }
-    }
-    let _guard = PanicGuard { actor, tx: &tx };
     let mut backlog: VecDeque<GenJob> = VecDeque::new();
     loop {
-        let msg = match backlog.pop_front() {
-            Some(job) => ToActor::Generate(job),
-            None => match rx.recv() {
-                Ok(m) => m,
-                Err(_) => return, // hub dropped the mailbox: shut down
+        let job = match backlog.pop_front() {
+            Some(job) => Some(job),
+            None => match ep.recv() {
+                Ok(Msg::Job { version, rng_seed, prompt_ids }) => {
+                    Some(wire_job(version, rng_seed, prompt_ids))
+                }
+                Ok(Msg::Seg(seg)) => {
+                    state
+                        .on_segment(seg)
+                        .map_err(|e| format!("actor {actor} staging: {e}"))?;
+                    // A commit that overtook these segments (striped
+                    // sockets and relay routing reorder hub→actor paths)
+                    // lands as soon as staging completes.
+                    service_safe_point(&mut state, actor, ep)?;
+                    None
+                }
+                Ok(Msg::Commit { version }) => {
+                    commit_and_ack(&mut state, actor, version, ep)?;
+                    None
+                }
+                Ok(Msg::Bye) | Err(Closed) => return Ok(()), // orderly shutdown
+                Ok(other) => return Err(format!("actor {actor}: unexpected {other:?}")),
             },
         };
-        let outcome: Result<(), String> = match msg {
-            ToActor::Generate(job) => {
-                let start_s = t0.elapsed().as_secs_f64();
-                run_gen_job(comp, cfg, &mut state, actor, &job, |st| {
-                    drain_mailbox(&rx, st, &mut backlog, actor, &tx, &forwards, t0)
-                })
-                .and_then(|(rollouts, gen_tokens)| {
-                    let reply = FromActor::Generated {
-                        actor,
-                        step: job.step,
-                        rollouts,
-                        gen_tokens,
-                        start_s,
-                        end_s: t0.elapsed().as_secs_f64(),
-                    };
-                    tx.send(reply).map_err(|_| "hub exited".to_string())
-                })
-            }
-            ToActor::Segment(seg) => {
-                forward_segment(&forwards, &seg);
-                state
-                    .on_segment(seg)
-                    .map(|_| ())
-                    .map_err(|e| format!("actor {actor} staging: {e}"))
-                    // A commit that overtook these segments (relay routing
-                    // reorders hub→actor message paths) lands as soon as
-                    // staging completes.
-                    .and_then(|()| service_safe_point(&mut state, actor, &tx, t0))
-            }
-            ToActor::Commit(v) => commit_and_ack(&mut state, actor, v, &tx, t0),
+        let Some(job) = job else { continue };
+        // Resolve the behaviour snapshot + checkpoint hash for the job's
+        // version NOW: a commit landing at a mid-job safe point advances
+        // `state`, but the lease (and the §5.4 predicate) bind results to
+        // the version the job was issued on. A re-issued failover job may
+        // even start on a version this actor already replaced — served
+        // from the retained sparse inverse.
+        let Some((policy, hash)) = state.behaviour_policy(job.version) else {
+            return Err(format!(
+                "actor {actor}: no behaviour policy for v{} (active v{})",
+                job.version,
+                state.active_version()
+            ));
         };
-        if let Err(msg) = outcome {
-            let _ = tx.send(FromActor::Failed { actor, msg });
-            return;
+        let (rollouts, _gen_tokens) =
+            run_gen_job(comp, cfg, &mut state, &policy, actor, &job, |st| {
+                worker_drain(ep, st, &mut backlog, actor)
+            })?;
+        drop(policy);
+        // Per-rollout results, in generation order (per-actor FIFO makes
+        // hub-side reassembly deterministic).
+        for r in rollouts {
+            let sent = ep.send(Msg::RolloutResult {
+                actor,
+                prompt_id: r.prompt_id,
+                version: r.version,
+                hash,
+                reward: r.reward,
+                tokens: r.generated_tokens,
+            });
+            if sent.is_err() {
+                return Ok(()); // hub gone mid-reply
+            }
         }
     }
 }
 
-/// Pipelined executor: spawn workers, then per step dispatch generation,
-/// train + stream the previous version concurrently, and collect
-/// generation results and commit acknowledgements.
+/// Build the configured transport backend for a pipelined run.
+fn build_transport(cfg: &LocalRunConfig) -> Result<Box<dyn Transport>> {
+    Ok(match &cfg.transport {
+        TransportKind::InProc => Box::new(InProcTransport::new(cfg.distribution.clone())),
+        TransportKind::Sim(net) => {
+            ensure!(
+                net.region_of.len() == cfg.n_actors,
+                "sim transport topology covers {} actors but n_actors is {}",
+                net.region_of.len(),
+                cfg.n_actors
+            );
+            Box::new(SimTransport::new(net.clone()))
+        }
+        TransportKind::Tcp(tc) => {
+            ensure!(
+                cfg.distribution.as_ref().map_or(true, |d| d.is_flat()),
+                "tcp transport streams hub→actor directly; use --transport sim for WAN relay trees"
+            );
+            Box::new(TcpTransport::new(tc.clone()))
+        }
+    })
+}
+
+/// Pipelined executor: launch the configured transport backend around
+/// the backend-agnostic [`actor_worker`], then per step dispatch
+/// generation, train + stream the previous version concurrently, and
+/// collect generation results and activation acknowledgements — failing
+/// over to survivors when a transport `Down` event or a lease expiry
+/// reports a lost actor.
 fn run_pipelined<C: Compute>(hub: &mut Hub<C>) -> Result<()> {
     let n = hub.cfg.n_actors;
     let comp = hub.comp;
     let cfg = hub.cfg;
-    let t0 = hub.t0;
-    let spec = cfg.distribution.clone().unwrap_or_default();
+    let layout = hub.layout.clone();
+    let policy0 = hub.policy.clone();
+    let transport = build_transport(cfg)?;
+    let runner = move |actor: u32, ep: &mut dyn ActorEndpoint| -> Result<(), String> {
+        let state = PolicyState::new(layout.clone(), policy0.clone(), 0);
+        actor_worker(comp, cfg, actor, state, ep)
+    };
     std::thread::scope(|scope| {
-        let (from_tx, from_rx) = channel::<FromActor>();
-        // Create every mailbox first: relay workers need their peers'
-        // senders at spawn time.
-        let mut rxs: Vec<Option<Receiver<ToActor>>> = Vec::with_capacity(n);
-        let mut to_txs: Vec<Sender<ToActor>> = Vec::with_capacity(n);
-        for _ in 0..n {
-            let (tx, rx) = channel::<ToActor>();
-            to_txs.push(tx);
-            rxs.push(Some(rx));
-        }
-        for (i, slot) in rxs.iter_mut().enumerate() {
-            let rx = slot.take().expect("receiver consumed once");
-            let state = PolicyState::new(hub.layout.clone(), hub.policy.clone(), 0);
-            let ftx = from_tx.clone();
-            let forwards: Vec<Sender<ToActor>> = spec
-                .forward_targets(i)
-                .into_iter()
-                .map(|j| to_txs[j].clone())
-                .collect();
-            scope.spawn(move || actor_worker(comp, cfg, i as u32, state, rx, ftx, forwards, t0));
-        }
-        drop(from_tx);
-        pipelined_hub_loop(hub, &to_txs, &from_rx)
-        // `to_txs` drops here: workers see the disconnect and exit; the
-        // scope joins them on the way out.
+        let mut ep = transport.launch(scope, n, &runner)?;
+        let result = transport_hub_loop(hub, ep.as_mut());
+        // Orderly teardown regardless of outcome: Bye + closed links let
+        // every worker (even a stalled one) exit so the scope can join.
+        ep.shutdown();
+        result
     })
 }
 
-/// Stream one version's delta into the distribution tree + commit to
-/// every mailbox, moving (not cloning) each segment into its last target.
-/// Flat topology: every actor gets every segment from the hub. Regional
-/// topology ([`DistributionSpec`]): the hub sends each segment once per
-/// region — to the relay — and relays forward to their peers, so the
-/// hub-side send fan-out is O(regions) exactly like the WAN tree.
+/// Train on the previous batch, stream its delta through the transport's
+/// segment fan-out (direct mailboxes, relay tree, netsim reorder, or
+/// striped sockets — the backend's business), then push `Commit` to
+/// every live actor. Send failures surface as `Down` events in the
+/// collect loop, so they are not errors here.
 fn broadcast_and_commit<C: Compute>(
     hub: &mut Hub<C>,
-    to_txs: &[Sender<ToActor>],
+    ep: &mut dyn HubEndpoint,
+    alive: &BTreeSet<u32>,
     batch_step: u64,
     batch: &[Rollout],
 ) -> Result<()> {
-    let targets: Vec<usize> = match &hub.cfg.distribution {
-        Some(spec) if !spec.is_flat() => spec.relays(),
-        _ => (0..to_txs.len()).collect(),
-    };
-    let last = targets.len() - 1;
-    hub.train_and_stream(batch_step, batch, |seg| {
-        for &i in &targets[..last] {
-            let _ = to_txs[i].send(ToActor::Segment(seg.clone()));
-        }
-        let _ = to_txs[targets[last]].send(ToActor::Segment(seg));
-    })?;
+    hub.train_and_stream(batch_step, batch, |seg| ep.broadcast_seg(seg))?;
     let v = hub.version;
-    for (i, tx) in to_txs.iter().enumerate() {
-        hub.sched.note_staged(i as u32, v);
-        let _ = tx.send(ToActor::Commit(v));
+    for &a in alive {
+        hub.sched.note_staged(a, v);
+        let _ = ep.send(a, Msg::Commit { version: v });
     }
     Ok(())
 }
 
-fn pipelined_hub_loop<C: Compute>(
-    hub: &mut Hub<C>,
-    to_txs: &[Sender<ToActor>],
-    from_rx: &Receiver<FromActor>,
-) -> Result<()> {
-    let n = to_txs.len();
+/// Collect-loop poll interval: the granularity of lease-expiry sweeps.
+const POLL_INTERVAL: Duration = Duration::from_millis(25);
+
+/// One assignment's in-flight generation work, hub-side. `executing`
+/// starts as the original assignment and moves to a survivor on
+/// failover; the job (prompt order + RNG seed) never changes, so the
+/// regenerated rollouts are bit-identical to what the dead actor would
+/// have produced.
+struct Slot {
+    job: GenJob,
+    executing: u32,
+    results: Vec<Rollout>,
+    /// Checkpoint hash echoed by the executing actor (must agree across
+    /// a slot's results; checked against the lease on submit).
+    hash: Option<[u8; 32]>,
+    expect: usize,
+    start_s: f64,
+    end_s: f64,
+    done: bool,
+}
+
+/// The transport-generic pipelined hub loop: membership barrier, then
+/// per step dispatch → overlapped train/stream → collect, with
+/// lease-driven failover throughout.
+fn transport_hub_loop<C: Compute>(hub: &mut Hub<C>, ep: &mut dyn HubEndpoint) -> Result<()> {
+    let n = hub.cfg.n_actors;
+    // Membership barrier: every worker says Hello before step 0 (over
+    // Tcp this also proves all sockets are up).
+    let mut alive: BTreeSet<u32> = BTreeSet::new();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while alive.len() < n {
+        match ep.poll(POLL_INTERVAL) {
+            Polled::Event(Event::Msg { actor, msg: Msg::Hello { .. } }) => {
+                ensure!((actor as usize) < n, "hello from unknown actor {actor}");
+                alive.insert(actor);
+            }
+            Polled::Event(Event::Msg { actor, msg }) => {
+                bail!("actor {actor} sent {msg:?} before Hello")
+            }
+            Polled::Event(Event::Down { actor, reason }) => {
+                bail!("actor {actor} died during startup: {reason}")
+            }
+            Polled::TimedOut => {
+                ensure!(Instant::now() < deadline, "actors never joined ({}/{n})", alive.len())
+            }
+            Polled::Closed => bail!("transport closed during startup"),
+        }
+    }
+
     let mut last_batch: Option<(u64, Vec<Rollout>)> = None;
     for step in 0..hub.cfg.steps {
-        // 1. Dispatch this step's generation on the stale policy.
+        // 1. Dispatch this step's generation on the stale policy. Every
+        //    assigned actor already acked Activated(version), so per-actor
+        //    control FIFO guarantees the job lands on an applied policy.
         let jobs = hub.plan_step(step)?;
-        for (asg, job) in &jobs {
-            to_txs[asg.actor as usize]
-                .send(ToActor::Generate(job.clone()))
-                .map_err(|_| anyhow!("actor {} worker exited", asg.actor))?;
+        let mut slots: Vec<Slot> = Vec::with_capacity(jobs.len());
+        for (asg, job) in jobs {
+            let msg = Msg::Job {
+                version: job.version,
+                rng_seed: job.rng_seed,
+                prompt_ids: job.pids.clone(),
+            };
+            let start_s = hub.now_s();
+            let expect = job.pids.len() * hub.cfg.group_size;
+            // A drained pool can leave an assignment with zero prompts;
+            // such a slot is born complete and gets no dispatch.
+            slots.push(Slot {
+                job,
+                executing: asg.actor,
+                results: Vec::new(),
+                hash: None,
+                expect,
+                start_s,
+                end_s: start_s,
+                done: expect == 0,
+            });
+            if expect > 0 {
+                // A failed send means the link is already dead; the
+                // matching Down event reaches the collect loop and fails
+                // it over.
+                let _ = ep.send(asg.actor, msg);
+            }
         }
         // 2. Train on the previous batch + stream D_{v} mid-generation.
         let committing = if let Some((prev_step, prev)) = last_batch.take() {
-            broadcast_and_commit(hub, to_txs, prev_step, &prev)?;
-            Some(hub.version)
+            broadcast_and_commit(hub, ep, &alive, prev_step, &prev)?;
+            Some((hub.version, hub.now_s()))
         } else {
             None
         };
-        // 3. Collect generation results and commit acknowledgements.
-        let (results, spans) = collect_step(hub, from_rx, step, &jobs, committing, n)?;
-        // 4. Deterministic batch assembly + ledger/scheduler bookkeeping,
-        //    in assignment order.
+        // 3. Collect generation results + activation acks (failover on
+        //    Down events and expired leases).
+        collect_step(hub, ep, &mut alive, &mut slots, committing, step)?;
+        // 4. Deterministic batch assembly in assignment order.
         let mut batch: Vec<Rollout> = Vec::new();
-        let mut results = results;
         let mut phase = (f64::INFINITY, 0.0f64);
-        for (asg, job) in &jobs {
-            let (mut rollouts, tokens, start_s, end_s) =
-                results.remove(&asg.actor).expect("collected above");
-            hub.timeline
-                .record(&format!("actor{}", asg.actor), SpanKind::Rollout, start_s, end_s, step);
-            hub.submit_and_settle(asg.actor, job, &mut rollouts, tokens, end_s - start_s)?;
-            phase = (phase.0.min(start_s), phase.1.max(end_s));
-            batch.extend(rollouts);
-        }
-        for (actor, c0, c1) in spans {
-            hub.timeline.record(&format!("actor{actor}"), SpanKind::Commit, c0, c1, step);
+        for slot in &mut slots {
+            phase = (phase.0.min(slot.start_s), phase.1.max(slot.end_s));
+            batch.append(&mut slot.results);
         }
         hub.finish_generation(step, &batch, (phase.1 - phase.0).max(0.0) * 1e3);
         last_batch = Some((step, batch));
@@ -990,69 +1036,269 @@ fn pipelined_hub_loop<C: Compute>(
     // Epilogue: train + commit the final version (no generation to hide
     // behind — the same tail the sequential executor pays every step).
     if let Some((prev_step, prev)) = last_batch.take() {
-        broadcast_and_commit(hub, to_txs, prev_step, &prev)?;
-        let (final_step, final_version) = (hub.cfg.steps, hub.version);
-        let empty: Vec<(Assignment, GenJob)> = Vec::new();
-        let (_, spans) = collect_step(hub, from_rx, final_step, &empty, Some(final_version), n)?;
-        for (actor, c0, c1) in spans {
-            hub.timeline
-                .record(&format!("actor{actor}"), SpanKind::Commit, c0, c1, prev_step);
+        broadcast_and_commit(hub, ep, &alive, prev_step, &prev)?;
+        let committing = Some((hub.version, hub.now_s()));
+        let mut slots: Vec<Slot> = Vec::new();
+        collect_step(hub, ep, &mut alive, &mut slots, committing, prev_step)?;
+    }
+    Ok(())
+}
+
+/// Block until every slot's results arrived and — when `committing =
+/// (version, sent_s)` — every live actor acknowledged the commit with a
+/// checksum matching the trainer policy. Lost actors (transport `Down`,
+/// graceful `Bye`, or lease expiry on the wall clock) fail over to
+/// survivors without aborting the step.
+fn collect_step<C: Compute>(
+    hub: &mut Hub<C>,
+    ep: &mut dyn HubEndpoint,
+    alive: &mut BTreeSet<u32>,
+    slots: &mut [Slot],
+    committing: Option<(u64, f64)>,
+    step: u64,
+) -> Result<()> {
+    let mut want_acks: BTreeSet<u32> = match committing {
+        Some(_) => alive.clone(),
+        None => BTreeSet::new(),
+    };
+    let pid_slot: BTreeMap<u64, usize> = slots
+        .iter()
+        .enumerate()
+        .flat_map(|(i, s)| s.job.pids.iter().map(move |&p| (p, i)))
+        .collect();
+    while slots.iter().any(|s| !s.done) || !want_acks.is_empty() {
+        match ep.poll(POLL_INTERVAL) {
+            Polled::Event(Event::Msg { actor, msg }) => match msg {
+                Msg::RolloutResult { actor: ra, prompt_id, version, hash, reward, tokens } => {
+                    ensure!(ra == actor, "result from actor {actor} claims actor {ra}");
+                    let Some(&si) = pid_slot.get(&prompt_id) else {
+                        // A failed-over actor whose link survived (lease
+                        // expiry, not crash) may keep emitting results for
+                        // prompts that already migrated to another step.
+                        ensure!(
+                            !alive.contains(&actor),
+                            "result for unknown prompt {prompt_id} from live actor {actor}"
+                        );
+                        continue;
+                    };
+                    let slot = &mut slots[si];
+                    if slot.done || slot.executing != actor {
+                        // Stale result: the slot failed over (or already
+                        // closed) — its lease is gone, the predicate
+                        // would reject it, drop it here.
+                        continue;
+                    }
+                    ensure!(
+                        version == slot.job.version,
+                        "actor {actor} generated prompt {prompt_id} on v{version}, leased v{}",
+                        slot.job.version
+                    );
+                    match slot.hash {
+                        None => slot.hash = Some(hash),
+                        Some(h) => ensure!(
+                            h == hash,
+                            "actor {actor} reported inconsistent checkpoint hashes in one job"
+                        ),
+                    }
+                    slot.results.push(Rollout {
+                        prompt_id,
+                        actor,
+                        version,
+                        prompt_tokens: Task::from_prompt_id(prompt_id, hub.cfg.bench)
+                            .prompt_tokens(),
+                        generated_tokens: tokens,
+                        reward,
+                    });
+                    if slot.results.len() == slot.expect {
+                        finalize_slot(hub, slot, step)?;
+                    }
+                }
+                Msg::Activated { actor: aa, version, hash } => {
+                    ensure!(aa == actor, "ack from actor {actor} claims actor {aa}");
+                    if !alive.contains(&actor) {
+                        continue; // stale ack from a failed-over actor
+                    }
+                    let Some((v, sent_s)) = committing else {
+                        bail!("unexpected commit ack v{version} from actor {actor}");
+                    };
+                    if version != v {
+                        bail!("actor {actor} committed v{version}, expected v{v}");
+                    }
+                    // Cross-process bit-exactness at every committed
+                    // version: the ack's hash is the actor's post-commit
+                    // policy checksum.
+                    if hash != hub.accum[(v - 1) as usize].policy_checksum {
+                        bail!("actor {actor} diverged from trainer policy at v{version}");
+                    }
+                    if !want_acks.remove(&actor) {
+                        // An ack from an actor we already failed over is
+                        // stale, not fatal; a duplicate from a live one
+                        // is a protocol bug.
+                        ensure!(!alive.contains(&actor), "duplicate commit ack from {actor}");
+                        continue;
+                    }
+                    hub.sched.note_committed(actor, version);
+                    let now = hub.now_s();
+                    hub.timeline
+                        .record(&format!("actor{actor}"), SpanKind::Commit, sent_s, now, step);
+                }
+                // A Hello after the run started is a reconnect attempt;
+                // rejoin would need full-checkpoint catch-up, so refuse
+                // it politely (the run continues on survivors).
+                Msg::Hello { .. } => {
+                    let _ = ep.send(actor, Msg::Bye);
+                }
+                Msg::Bye => fail_actor(hub, ep, alive, &mut want_acks, slots, actor, "left")?,
+                other => bail!("unexpected message from actor {actor}: {other:?}"),
+            },
+            Polled::Event(Event::Down { actor, reason }) => {
+                fail_actor(hub, ep, alive, &mut want_acks, slots, actor, &reason)?;
+            }
+            Polled::TimedOut => {
+                // Idle tick: run the lease-expiry sweep. Under the manual
+                // deterministic clock nothing ever expires; on the wall
+                // clock this is the paper's implicit failure detector for
+                // partitioned (silent) actors.
+                expiry_sweep(hub, ep, alive, &mut want_acks, slots)?;
+            }
+            Polled::Closed => bail!("transport closed before step {step} completed"),
         }
     }
     Ok(())
 }
 
-type GenResults = BTreeMap<u32, (Vec<Rollout>, u64, f64, f64)>;
+/// A slot's results are complete: run the shared acceptance/settlement
+/// accounting ([`Hub::submit_and_settle`], with the actor-echoed hash)
+/// and record the rollout span.
+fn finalize_slot<C: Compute>(hub: &mut Hub<C>, slot: &mut Slot, step: u64) -> Result<()> {
+    let hash = slot.hash.expect("finalized slot has results");
+    // Settle on the full generated token count (work performed), even if
+    // some leases lapsed — matching the sequential executor's accounting.
+    let tokens: u64 = slot.results.iter().map(|r| r.generated_tokens.len() as u64).sum();
+    slot.end_s = hub.now_s();
+    hub.submit_and_settle(
+        slot.executing,
+        &slot.job,
+        hash,
+        &mut slot.results,
+        tokens,
+        slot.end_s - slot.start_s,
+    )?;
+    hub.timeline.record(
+        &format!("actor{}", slot.executing),
+        SpanKind::Rollout,
+        slot.start_s,
+        slot.end_s,
+        step,
+    );
+    slot.done = true;
+    Ok(())
+}
 
-/// Block until every assigned actor returned its batch for `step` and —
-/// when `committing` — every actor acknowledged the commit with a
-/// checksum matching the trainer policy.
-fn collect_step<C: Compute>(
+/// Remove a lost actor from the run: revoke its leases, exclude it from
+/// scheduling, stop waiting for its acks, and re-issue its unfinished
+/// slots to survivors — the §5.4 failover loop, no global restart.
+fn fail_actor<C: Compute>(
     hub: &mut Hub<C>,
-    from_rx: &Receiver<FromActor>,
-    step: u64,
-    jobs: &[(Assignment, GenJob)],
-    committing: Option<u64>,
-    n: usize,
-) -> Result<(GenResults, Vec<(u32, f64, f64)>)> {
-    let mut want_gen: BTreeSet<u32> = jobs.iter().map(|(a, _)| a.actor).collect();
-    let mut want_commit: BTreeSet<u32> = match committing {
-        Some(_) => (0..n as u32).collect(),
-        None => BTreeSet::new(),
-    };
-    let mut results: GenResults = BTreeMap::new();
-    let mut commit_spans: Vec<(u32, f64, f64)> = Vec::new();
-    while !want_gen.is_empty() || !want_commit.is_empty() {
-        match from_rx.recv() {
-            Ok(FromActor::Generated { actor, step: s, rollouts, gen_tokens, start_s, end_s }) => {
-                if s != step {
-                    bail!("actor {actor} returned batch for step {s} during step {step}");
-                }
-                if !want_gen.remove(&actor) {
-                    bail!("unexpected generation result from actor {actor}");
-                }
-                results.insert(actor, (rollouts, gen_tokens, start_s, end_s));
-            }
-            Ok(FromActor::Committed { actor, version, checksum, start_s, end_s }) => {
-                let Some(v) = committing else {
-                    bail!("unexpected commit ack v{version} from actor {actor}");
-                };
-                if version != v {
-                    bail!("actor {actor} committed v{version}, expected v{v}");
-                }
-                // Cross-thread bit-exactness at every committed version.
-                if checksum != hub.accum[(v - 1) as usize].policy_checksum {
-                    bail!("actor {actor} diverged from trainer policy at v{version}");
-                }
-                if !want_commit.remove(&actor) {
-                    bail!("duplicate commit ack from actor {actor}");
-                }
-                hub.sched.note_committed(actor, version);
-                commit_spans.push((actor, start_s, end_s));
-            }
-            Ok(FromActor::Failed { msg, .. }) => bail!("{msg}"),
-            Err(_) => bail!("actor workers exited before step {step} completed"),
+    ep: &mut dyn HubEndpoint,
+    alive: &mut BTreeSet<u32>,
+    want_acks: &mut BTreeSet<u32>,
+    slots: &mut [Slot],
+    actor: u32,
+    reason: &str,
+) -> Result<()> {
+    if !alive.remove(&actor) {
+        return Ok(()); // duplicate report (write-path cut + reader EOF)
+    }
+    // In-process relay trees cannot fail a *relay* over: segments queued
+    // in its dropped mailbox are gone, so peers mid-staging would wait on
+    // a window nobody can retransmit — and their parked commits would
+    // never ack. Abort loudly (the pre-failover behavior) instead of
+    // hanging; flat InProc, Sim, and Tcp topologies fail over fully.
+    if let Some(spec) = &hub.cfg.distribution {
+        if !spec.is_flat() && spec.relays().contains(&(actor as usize)) {
+            bail!(
+                "relay actor {actor} lost mid-run ({reason}); in-process relay-tree \
+                 failover is unsupported — use a flat topology or --transport sim/tcp"
+            );
         }
     }
-    Ok((results, commit_spans))
+    hub.failures += 1;
+    hub.sched.set_alive(actor, false);
+    want_acks.remove(&actor);
+    // Lease hygiene: expiry would reclaim these anyway; an explicit
+    // failure signal just shortens the window.
+    hub.ledger.revoke_actor(actor);
+    if hub.cfg.verbose {
+        eprintln!("actor {actor} lost ({reason}); failing over");
+    }
+    reissue_orphans(hub, ep, alive, slots, actor)
+}
+
+/// Re-lease a lost actor's unfinished slots to the lowest-numbered
+/// survivor (deterministic choice), preserving each job's prompt order
+/// and RNG seed so the regenerated rollouts are bit-identical.
+fn reissue_orphans<C: Compute>(
+    hub: &mut Hub<C>,
+    ep: &mut dyn HubEndpoint,
+    alive: &BTreeSet<u32>,
+    slots: &mut [Slot],
+    dead: u32,
+) -> Result<()> {
+    for slot in slots.iter_mut().filter(|s| !s.done && s.executing == dead) {
+        let Some(&survivor) = alive.iter().next() else {
+            bail!("actor {dead} failed with no survivors to absorb its work");
+        };
+        let now = hub.lease_now();
+        let leased =
+            hub.ledger.reissue(&slot.job.pids, survivor, slot.job.version, slot.job.hash, now);
+        ensure!(
+            leased.len() == slot.job.pids.len(),
+            "failover re-leased {}/{} prompts of actor {dead}",
+            leased.len(),
+            slot.job.pids.len()
+        );
+        slot.executing = survivor;
+        slot.results.clear();
+        slot.hash = None;
+        slot.start_s = hub.now_s();
+        hub.requeued += slot.job.pids.len() as u64;
+        ep.send(
+            survivor,
+            Msg::Job {
+                version: slot.job.version,
+                rng_seed: slot.job.rng_seed,
+                prompt_ids: slot.job.pids.clone(),
+            },
+        )
+        .map_err(|_| anyhow!("survivor {survivor} link down during failover"))?;
+    }
+    Ok(())
+}
+
+/// Expire overdue leases on the run clock. Slots whose prompts lapsed
+/// mean the executing actor stalled or was partitioned away (its sockets
+/// may still be open — only the lease can tell): declare it failed and
+/// migrate the work.
+fn expiry_sweep<C: Compute>(
+    hub: &mut Hub<C>,
+    ep: &mut dyn HubEndpoint,
+    alive: &mut BTreeSet<u32>,
+    want_acks: &mut BTreeSet<u32>,
+    slots: &mut [Slot],
+) -> Result<()> {
+    let now = hub.clock.now();
+    let expired = hub.ledger.expire(now);
+    if expired.is_empty() {
+        return Ok(());
+    }
+    let stalled: BTreeSet<u32> = slots
+        .iter()
+        .filter(|s| !s.done && s.job.pids.iter().any(|p| expired.contains(p)))
+        .map(|s| s.executing)
+        .collect();
+    for actor in stalled {
+        fail_actor(hub, ep, alive, want_acks, slots, actor, "leases expired (stall/partition)")?;
+    }
+    Ok(())
 }

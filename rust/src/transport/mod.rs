@@ -1,4 +1,5 @@
-//! Streaming delta transfer protocol (paper §5.2).
+//! Streaming delta transfer protocol (paper §5.2) and the runtime's
+//! transport API (§4, §5.4).
 //!
 //! A delta checkpoint is treated as a stream of independently transmitted,
 //! deterministically reassembled segments:
@@ -14,15 +15,29 @@
 //!                  links, plus the multi-region [`DistributionPlan`]:
 //!                  a bandwidth-aware spanning tree (hub → regional relays
 //!                  → actors) whose WAN legs stripe to each link's
-//!                  bandwidth-delay product ([`stripe::stripes_for_link`]).
+//!                  bandwidth-delay product ([`stripe::stripes_for_link`]);
+//! * `api`        — the [`Transport`] trait + [`HubEndpoint`] /
+//!                  [`ActorEndpoint`] handles the pipelined executor
+//!                  speaks (`rt::net::Msg` end to end), with the InProc
+//!                  and Sim backends;
+//! * `tcp`        — the loopback-socket backend: framed messages,
+//!                  throttled multi-stream segment push, real
+//!                  crash/partition failure injection.
 
+pub mod api;
 pub mod plan;
 pub mod reassembly;
 pub mod relay;
 pub mod segment;
 pub mod stripe;
+pub mod tcp;
 
+pub use api::{
+    ActorEndpoint, ActorRunner, Closed, Event, HubEndpoint, InProcTransport, Polled, SimNetConfig,
+    SimTransport, Transport,
+};
 pub use plan::{DistributionPlan, RegionTopo, RelayLeg, TransferPlan};
 pub use reassembly::Reassembler;
 pub use segment::{split_into_segments, Segment, DEFAULT_SEGMENT_BYTES, TOTAL_UNKNOWN};
 pub use stripe::{stripe_round_robin, stripes_for_link, MAX_STRIPES};
+pub use tcp::{KillMode, KillSpec, TcpConfig, TcpTransport};

@@ -1,0 +1,515 @@
+//! The Tcp backend: the same executor and actor worker as InProc, but
+//! every message crosses a real loopback socket through `rt::net`'s
+//! framing — length-prefixed [`Msg`] frames, per-stream [`Throttle`]d
+//! writers emulating WAN bandwidth, and multi-stream segment push
+//! (stripe `seq % streams`, like the paper's parallel TCP streams).
+//!
+//! Topology per actor: `streams` sockets, connected in stripe order.
+//! Stripe 0 is the duplex control stream (jobs, commits, results, acks,
+//! membership); stripes 1.. carry only hub→actor segment pushes. The
+//! actor side runs one OS thread per actor (a process stand-in: it
+//! shares no memory with the hub — all state flows through sockets) plus
+//! one reader thread per socket feeding the worker's mailbox, so
+//! segments stage mid-generation exactly as in-process.
+//!
+//! Failure semantics are real: a crashed actor's sockets reset, the
+//! hub's reader surfaces [`Event::Down`], and the executor's lease
+//! machinery requeues its prompts — no global restart. A *partitioned*
+//! actor (sockets up, silent) is caught by lease expiry alone. Both are
+//! injectable via [`KillSpec`] for the fault-tolerance suite.
+
+use crate::rt::net::{read_msg, write_msg, Msg, Throttle};
+use crate::transport::api::{ActorEndpoint, ActorRunner, Closed, Event, HubEndpoint, Polled, Transport};
+use crate::transport::stripe::stream_for;
+use crate::transport::Segment;
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::thread::Scope;
+use std::time::{Duration, Instant};
+
+/// How an injected failure manifests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KillMode {
+    /// Slam every socket shut and exit the actor thread: the hub sees
+    /// EOF/reset immediately (crash, preemption, OOM-kill).
+    Crash,
+    /// Keep sockets open but stop replying or applying anything: only
+    /// lease expiry can detect it (network partition, GPU hang).
+    Stall,
+}
+
+/// Fault injection: kill `actor` when it receives a job for
+/// `at_version` (i.e. mid-step, after dispatch, before results).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KillSpec {
+    pub actor: u32,
+    pub at_version: u64,
+    pub mode: KillMode,
+}
+
+/// Tcp backend configuration (carried in `LocalRunConfig`).
+#[derive(Clone, Debug)]
+pub struct TcpConfig {
+    /// Sockets per actor; segments stripe across all of them.
+    pub streams: usize,
+    /// Aggregate hub→actor segment bandwidth emulation (token-bucket per
+    /// stream at `bits_per_s / streams`), `None` = unthrottled loopback.
+    pub bits_per_s: Option<f64>,
+    /// Optional injected failure (fault-tolerance tests).
+    pub kill: Option<KillSpec>,
+}
+
+impl Default for TcpConfig {
+    fn default() -> TcpConfig {
+        TcpConfig { streams: 1, bits_per_s: None, kill: None }
+    }
+}
+
+/// The loopback-socket [`Transport`].
+pub struct TcpTransport {
+    pub cfg: TcpConfig,
+}
+
+impl TcpTransport {
+    pub fn new(cfg: TcpConfig) -> TcpTransport {
+        TcpTransport { cfg }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn launch<'scope, 'env>(
+        &'env self,
+        scope: &'scope Scope<'scope, 'env>,
+        n: usize,
+        runner: ActorRunner<'env>,
+    ) -> Result<Box<dyn HubEndpoint + 'env>> {
+        let streams = self.cfg.streams.max(1);
+        let listener = TcpListener::bind("127.0.0.1:0").context("bind loopback listener")?;
+        let addr = listener.local_addr()?;
+        let (ev_tx, ev_rx) = channel::<Event>();
+
+        // Actor side: one thread per actor, connecting back to the hub.
+        for i in 0..n {
+            let actor = i as u32;
+            let kill = self.cfg.kill.filter(|k| k.actor == actor);
+            scope.spawn(move || actor_shell(addr, actor, streams, kill, runner));
+        }
+
+        // Hub side: accept and handshake n * streams sockets. Each socket
+        // opens with a raw `Hello` naming its actor; stripe index is the
+        // actor's connect order (shells connect stripes sequentially).
+        // On failure, every accepted socket is shut down so already-
+        // connected shells exit instead of hanging the scope join.
+        let mut writers: Vec<Vec<TcpStream>> = (0..n).map(|_| Vec::new()).collect();
+        if let Err(e) = accept_all(&listener, &mut writers, n, streams, &ev_tx) {
+            for s in writers.iter().flatten() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            return Err(e);
+        }
+        let throttles: Vec<Vec<Option<Throttle>>> = (0..n)
+            .map(|_| {
+                (0..streams)
+                    .map(|_| self.cfg.bits_per_s.map(|b| Throttle::new(b / streams as f64)))
+                    .collect()
+            })
+            .collect();
+        Ok(Box::new(TcpHub {
+            writers: writers.into_iter().map(Some).collect(),
+            throttles,
+            events: ev_rx,
+            pending: VecDeque::new(),
+            streams,
+        }))
+    }
+}
+
+/// Accept + handshake every expected socket into `writers[actor][stripe]`,
+/// spawning the stripe-0 reader per actor. Partial progress stays in
+/// `writers` so the caller can clean up on error.
+fn accept_all(
+    listener: &TcpListener,
+    writers: &mut [Vec<TcpStream>],
+    n: usize,
+    streams: usize,
+    ev_tx: &Sender<Event>,
+) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut accepted = 0;
+    while accepted < n * streams {
+        match listener.accept() {
+            Ok((mut sock, _)) => {
+                sock.set_nonblocking(false)?;
+                sock.set_nodelay(true)?;
+                sock.set_read_timeout(Some(Duration::from_secs(10)))?;
+                let hello = read_msg(&mut sock).context("handshake")?;
+                let Msg::Hello { actor, .. } = hello else {
+                    bail!("expected handshake Hello, got {hello:?}");
+                };
+                let a = actor as usize;
+                anyhow::ensure!(a < n, "handshake from unknown actor {actor}");
+                let stripe = writers[a].len();
+                anyhow::ensure!(stripe < streams, "actor {actor}: too many sockets");
+                sock.set_read_timeout(None)?;
+                if stripe == 0 {
+                    // Stripe 0 is duplex: its read half feeds the hub's
+                    // event stream.
+                    let rd = sock.try_clone()?;
+                    let tx = ev_tx.clone();
+                    std::thread::spawn(move || hub_reader(rd, actor, tx));
+                }
+                writers[a].push(sock);
+                accepted += 1;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                anyhow::ensure!(
+                    Instant::now() < deadline,
+                    "timed out waiting for actor connections ({accepted}/{})",
+                    n * streams
+                );
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+/// Hub-side reader for one actor's control stream: frames become
+/// [`Event::Msg`]; EOF/reset becomes [`Event::Down`].
+fn hub_reader(mut sock: TcpStream, actor: u32, tx: Sender<Event>) {
+    loop {
+        match read_msg(&mut sock) {
+            Ok(msg) => {
+                let done = matches!(msg, Msg::Bye);
+                if tx.send(Event::Msg { actor, msg }).is_err() || done {
+                    return;
+                }
+            }
+            Err(e) => {
+                let _ = tx.send(Event::Down { actor, reason: format!("actor {actor} link: {e:#}") });
+                return;
+            }
+        }
+    }
+}
+
+struct TcpHub {
+    /// `[actor] -> [stripe]` write halves; `None` once the actor is cut.
+    writers: Vec<Option<Vec<TcpStream>>>,
+    throttles: Vec<Vec<Option<Throttle>>>,
+    events: Receiver<Event>,
+    /// Failures detected on the write path, queued ahead of the socket
+    /// readers' own Down reports.
+    pending: VecDeque<Event>,
+    streams: usize,
+}
+
+impl TcpHub {
+    fn cut(&mut self, actor: usize, reason: String) {
+        if let Some(socks) = self.writers[actor].take() {
+            for s in &socks {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            self.pending.push_back(Event::Down { actor: actor as u32, reason });
+        }
+    }
+}
+
+impl HubEndpoint for TcpHub {
+    fn send(&mut self, actor: u32, msg: Msg) -> Result<(), Closed> {
+        let a = actor as usize;
+        let Some(socks) = self.writers.get_mut(a).and_then(|w| w.as_mut()) else {
+            return Err(Closed);
+        };
+        match write_msg(&mut socks[0], &msg) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.cut(a, format!("write to actor {actor} failed: {e:#}"));
+                Err(Closed)
+            }
+        }
+    }
+
+    fn broadcast_seg(&mut self, seg: Segment) {
+        let stripe = stream_for(seg.seq, self.streams);
+        // Serialize once, fan the same frame out to every live actor.
+        let frame = Msg::Seg(seg).to_frame();
+        let mut dead: Vec<(usize, String)> = Vec::new();
+        for (a, slot) in self.writers.iter_mut().enumerate() {
+            let Some(socks) = slot.as_mut() else { continue };
+            if let Some(t) = self.throttles[a][stripe].as_mut() {
+                t.pace(frame.len());
+            }
+            if let Err(e) = socks[stripe].write_all(&frame) {
+                dead.push((a, format!("segment push to actor {a} failed: {e}")));
+            }
+        }
+        for (a, reason) in dead {
+            self.cut(a, reason);
+        }
+    }
+
+    fn poll(&mut self, timeout: Duration) -> Polled {
+        if let Some(e) = self.pending.pop_front() {
+            return Polled::Event(e);
+        }
+        match self.events.recv_timeout(timeout) {
+            Ok(e) => Polled::Event(e),
+            Err(RecvTimeoutError::Timeout) => Polled::TimedOut,
+            Err(RecvTimeoutError::Disconnected) => Polled::Closed,
+        }
+    }
+
+    fn shutdown(&mut self) {
+        for slot in &mut self.writers {
+            if let Some(mut socks) = slot.take() {
+                let _ = write_msg(&mut socks[0], &Msg::Bye);
+                // Explicit shutdown, not just drop: the hub's per-socket
+                // reader threads hold fd clones, so dropping the write
+                // halves alone would never send FIN — and a *stalled*
+                // actor (which ignores the Bye) would block the scope
+                // join forever. shutdown() closes the connection for all
+                // clones: queued data (the Bye) flushes, then EOF
+                // unblocks every reader on both sides.
+                for s in &socks {
+                    let _ = s.shutdown(Shutdown::Both);
+                }
+            }
+        }
+    }
+}
+
+/// One actor's "process": connects its stripes, bridges sockets to the
+/// backend-agnostic runner, and injects configured failures.
+fn actor_shell(
+    addr: SocketAddr,
+    actor: u32,
+    streams: usize,
+    kill: Option<KillSpec>,
+    runner: ActorRunner<'_>,
+) {
+    let launched = (|| -> Result<TcpActorEndpoint> {
+        let mut socks = Vec::with_capacity(streams);
+        for _ in 0..streams {
+            let mut s = TcpStream::connect(addr).context("connect to hub")?;
+            s.set_nodelay(true)?;
+            // Raw handshake frame: binds this socket to (actor, stripe).
+            write_msg(&mut s, &Msg::Hello { actor, prior_tau: 1000.0 })?;
+            socks.push(s);
+        }
+        let (in_tx, in_rx) = channel::<Msg>();
+        for s in &socks {
+            let rd = s.try_clone()?;
+            let tx = in_tx.clone();
+            // Readers drain unconditionally (even mid-generation and in
+            // Stall mode), so hub writes never block on a slow actor.
+            std::thread::spawn(move || shell_reader(rd, tx));
+        }
+        let ctrl = socks.remove(0);
+        Ok(TcpActorEndpoint { rx: in_rx, ctrl, extra: socks, kill, stalled: false })
+    })();
+    let Ok(mut ep) = launched else {
+        // Connect failed: the hub's accept loop times out and reports.
+        return;
+    };
+    // Runner errors/panics surface at the hub as socket EOF -> Down.
+    let _ = catch_unwind(AssertUnwindSafe(|| runner(actor, &mut ep)));
+}
+
+fn shell_reader(mut sock: TcpStream, tx: Sender<Msg>) {
+    loop {
+        match read_msg(&mut sock) {
+            Ok(msg) => {
+                if tx.send(msg).is_err() {
+                    return;
+                }
+            }
+            Err(_) => return, // hub closed: dropping tx unblocks the worker
+        }
+    }
+}
+
+struct TcpActorEndpoint {
+    rx: Receiver<Msg>,
+    /// Stripe-0 write half (all actor→hub traffic).
+    ctrl: TcpStream,
+    /// Stripes 1..: held so an injected Crash can slam them shut.
+    extra: Vec<TcpStream>,
+    kill: Option<KillSpec>,
+    stalled: bool,
+}
+
+impl TcpActorEndpoint {
+    /// Apply fault injection; `Ok(None)` means the message was swallowed
+    /// (stalled) and the caller should keep receiving.
+    fn intercept(&mut self, msg: Msg) -> Result<Option<Msg>, Closed> {
+        if let Some(k) = self.kill {
+            if matches!(&msg, Msg::Job { version, .. } if *version >= k.at_version) {
+                match k.mode {
+                    KillMode::Crash => {
+                        let _ = self.ctrl.shutdown(Shutdown::Both);
+                        for s in &self.extra {
+                            let _ = s.shutdown(Shutdown::Both);
+                        }
+                        return Err(Closed);
+                    }
+                    KillMode::Stall => self.stalled = true,
+                }
+            }
+        }
+        if self.stalled {
+            return Ok(None);
+        }
+        Ok(Some(msg))
+    }
+}
+
+impl ActorEndpoint for TcpActorEndpoint {
+    fn recv(&mut self) -> Result<Msg, Closed> {
+        loop {
+            let msg = self.rx.recv().map_err(|_| Closed)?;
+            if let Some(m) = self.intercept(msg)? {
+                return Ok(m);
+            }
+        }
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Msg>, Closed> {
+        loop {
+            match self.rx.try_recv() {
+                Ok(msg) => {
+                    if let Some(m) = self.intercept(msg)? {
+                        return Ok(Some(m));
+                    }
+                }
+                Err(TryRecvError::Empty) => return Ok(None),
+                Err(TryRecvError::Disconnected) => return Err(Closed),
+            }
+        }
+    }
+
+    fn send(&mut self, msg: Msg) -> Result<(), Closed> {
+        if self.stalled {
+            return Ok(()); // partitioned: output is blackholed too
+        }
+        write_msg(&mut self.ctrl, &msg).map_err(|_| Closed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal worker protocol over real sockets: hello, echo commits as
+    /// acks, report segment count, exit on Bye.
+    fn echo_runner(actor: u32, ep: &mut dyn ActorEndpoint) -> Result<(), String> {
+        ep.send(Msg::Hello { actor, prior_tau: 1000.0 }).map_err(|_| "hub gone")?;
+        let mut segs = 0i32;
+        loop {
+            match ep.recv() {
+                Ok(Msg::Seg(_)) => segs += 1,
+                Ok(Msg::Commit { version }) => {
+                    ep.send(Msg::RolloutResult {
+                        actor,
+                        prompt_id: 0,
+                        version,
+                        hash: [0u8; 32],
+                        reward: 0.0,
+                        tokens: vec![segs],
+                    })
+                    .map_err(|_| "hub gone")?;
+                    ep.send(Msg::Activated { actor, version, hash: [0u8; 32] })
+                        .map_err(|_| "hub gone")?;
+                }
+                Ok(Msg::Bye) | Err(Closed) => return Ok(()),
+                Ok(_) => {}
+            }
+        }
+    }
+
+    #[test]
+    fn loopback_multistream_round_trip() {
+        let t = TcpTransport::new(TcpConfig { streams: 3, ..TcpConfig::default() });
+        std::thread::scope(|scope| {
+            let mut ep = t.launch(scope, 2, &echo_runner).unwrap();
+            // Wait for both protocol-level hellos.
+            let mut hellos = 0;
+            while hellos < 2 {
+                match ep.poll(Duration::from_secs(10)) {
+                    Polled::Event(Event::Msg { msg: Msg::Hello { .. }, .. }) => hellos += 1,
+                    other => panic!("want hello, got {other:?}"),
+                }
+            }
+            for seq in 0..12u32 {
+                ep.broadcast_seg(Segment { version: 1, seq, total: 12, payload: vec![7; 256] });
+            }
+            for a in 0..2 {
+                ep.send(a, Msg::Commit { version: 1 }).unwrap();
+            }
+            let mut acks = 0;
+            let mut counts = vec![0i32; 2];
+            while acks < 2 {
+                match ep.poll(Duration::from_secs(10)) {
+                    Polled::Event(Event::Msg { actor, msg }) => match msg {
+                        Msg::RolloutResult { tokens, .. } => counts[actor as usize] = tokens[0],
+                        Msg::Activated { .. } => acks += 1,
+                        other => panic!("unexpected {other:?}"),
+                    },
+                    other => panic!("poll: {other:?}"),
+                }
+            }
+            // Every segment crossed the wire to every actor exactly once,
+            // over 3 striped sockets.
+            assert_eq!(counts, vec![12, 12]);
+            ep.shutdown();
+        });
+    }
+
+    #[test]
+    fn crashed_actor_surfaces_as_down() {
+        let t = TcpTransport::new(TcpConfig {
+            streams: 1,
+            bits_per_s: None,
+            kill: Some(KillSpec { actor: 1, at_version: 1, mode: KillMode::Crash }),
+        });
+        std::thread::scope(|scope| {
+            let mut ep = t.launch(scope, 2, &echo_runner).unwrap();
+            let mut hellos = 0;
+            while hellos < 2 {
+                match ep.poll(Duration::from_secs(10)) {
+                    Polled::Event(Event::Msg { msg: Msg::Hello { .. }, .. }) => hellos += 1,
+                    other => panic!("want hello, got {other:?}"),
+                }
+            }
+            // Job v1 triggers the injected crash on actor 1.
+            ep.send(1, Msg::Job { version: 1, rng_seed: 0, prompt_ids: vec![9] }).unwrap();
+            loop {
+                match ep.poll(Duration::from_secs(10)) {
+                    Polled::Event(Event::Down { actor: 1, .. }) => break,
+                    Polled::Event(_) => continue,
+                    other => panic!("want down, got {other:?}"),
+                }
+            }
+            // The survivor still works.
+            ep.send(0, Msg::Commit { version: 1 }).unwrap();
+            loop {
+                match ep.poll(Duration::from_secs(10)) {
+                    Polled::Event(Event::Msg { actor: 0, msg: Msg::Activated { .. } }) => break,
+                    Polled::Event(_) => continue,
+                    other => panic!("poll: {other:?}"),
+                }
+            }
+            ep.shutdown();
+        });
+    }
+}

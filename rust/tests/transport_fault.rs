@@ -1,0 +1,166 @@
+//! Lease-driven failover over real sockets (§5.4, executed rather than
+//! simulated): kill a Tcp actor mid-step — by crash (sockets reset) or
+//! by partition (sockets up, silent) — and the run must complete on the
+//! survivors with the dead actor's leased prompts re-issued exactly
+//! once, no global restart. Killing during the *final* step additionally
+//! pins the strongest property: because a re-issued job carries the
+//! original assignment's RNG seed and prompt order, the regenerated
+//! rollouts are bit-identical and the final committed policy equals the
+//! no-failure deterministic baseline's checksum.
+
+use sparrowrl::delta::ModelLayout;
+use sparrowrl::ledger::LeasePolicy;
+use sparrowrl::rt::{
+    run_with_compute, ExecMode, LocalRunConfig, RunReport, SyntheticCompute, TransportKind,
+};
+use sparrowrl::transport::{KillMode, KillSpec, TcpConfig};
+
+fn layout() -> ModelLayout {
+    ModelLayout::transformer("syn-fault", 256, 64, 2, 128)
+}
+
+/// Deterministic generation + wall-clock leases: rollouts stay
+/// bit-reproducible while stalls genuinely time out.
+fn config(n_actors: usize, steps: u64, seed: u64) -> LocalRunConfig {
+    let mut cfg = LocalRunConfig::quick("synthetic");
+    cfg.n_actors = n_actors;
+    cfg.steps = steps;
+    cfg.sft_steps = 2;
+    cfg.group_size = 2;
+    cfg.max_new_tokens = 5;
+    cfg.lr_rl = 1e-2;
+    cfg.segment_bytes = 256;
+    cfg.seed = seed;
+    cfg.deterministic = true;
+    cfg.wall_leases = true;
+    cfg
+}
+
+fn run(cfg: &LocalRunConfig) -> RunReport {
+    run_with_compute(cfg, &layout(), &SyntheticCompute::new(16, 8, 64), ExecMode::Pipelined)
+        .unwrap_or_else(|e| panic!("run over {} failed: {e:#}", cfg.transport.name()))
+}
+
+fn tcp_with_kill(kill: Option<KillSpec>) -> TransportKind {
+    TransportKind::Tcp(TcpConfig { streams: 2, bits_per_s: None, kill })
+}
+
+/// Jobs for step `s` are leased against version `max(s-1, 0)` (the
+/// one-step-off schedule), and version `v >= 1` is dispatched only at
+/// step `v + 1` — so killing at `steps - 2` hits exactly the final step.
+fn final_step_version(steps: u64) -> u64 {
+    steps - 2
+}
+
+fn assert_steps_match(tag: &str, a: &RunReport, b: &RunReport) {
+    assert_eq!(a.final_version, b.final_version, "{tag}: final version");
+    for (x, y) in a.steps.iter().zip(&b.steps) {
+        assert_eq!(x.rho, y.rho, "{tag}: step {} rho", x.step);
+        assert_eq!(x.payload_bytes, y.payload_bytes, "{tag}: step {} payload", x.step);
+        assert_eq!(x.gen_tokens, y.gen_tokens, "{tag}: step {} gen tokens", x.step);
+        assert_eq!(x.mean_reward, y.mean_reward, "{tag}: step {} reward", x.step);
+        assert_eq!(
+            x.policy_checksum, y.policy_checksum,
+            "{tag}: step {} policy diverged from the no-failure baseline",
+            x.step
+        );
+    }
+}
+
+#[test]
+fn crashed_actor_final_step_recovers_bitwise_to_baseline() {
+    let steps = 4;
+    let base = config(3, steps, 7);
+    let baseline = run(&base); // no-failure InProc reference
+    assert_eq!(baseline.failovers, 0);
+
+    let mut kcfg = base.clone();
+    kcfg.transport = tcp_with_kill(Some(KillSpec {
+        actor: 2,
+        at_version: final_step_version(steps),
+        mode: KillMode::Crash,
+    }));
+    let failed = run(&kcfg);
+
+    assert_eq!(failed.final_version, steps, "run completed through the failure");
+    assert_eq!(failed.failovers, 1, "exactly one actor lost");
+    assert!(failed.requeued_prompts > 0, "orphaned prompts migrated");
+    // Exactly-once re-issue, bit-exact regeneration: every step's batch
+    // accounting and committed policy equals the healthy baseline — a
+    // duplicated or dropped prompt would shift gen_tokens/reward, and a
+    // different RNG lane would shift the checksum.
+    assert_steps_match("crash@final", &baseline, &failed);
+}
+
+#[test]
+fn partitioned_actor_leases_expire_and_work_migrates_bitwise() {
+    // The silent-failure case: the actor's sockets stay open but it stops
+    // replying — only the wall-clock lease can detect it. Short leases
+    // keep the test fast (expiry ~0.6 s).
+    let steps = 3;
+    let base = config(3, steps, 5);
+    let baseline = run(&base); // default (long) leases: immune to CI hiccups
+
+    let mut kcfg = base.clone();
+    // Short leases only where the stall must be detected; lease policy
+    // never reaches the rollout bits, so results stay comparable.
+    kcfg.lease = LeasePolicy { multiplier: 2.0, min_s: 0.4, max_s: 5.0 };
+    kcfg.transport = tcp_with_kill(Some(KillSpec {
+        actor: 1,
+        at_version: final_step_version(steps),
+        mode: KillMode::Stall,
+    }));
+    let failed = run(&kcfg);
+
+    assert_eq!(failed.final_version, steps);
+    assert_eq!(failed.failovers, 1, "stall detected via lease expiry alone");
+    assert!(failed.requeued_prompts > 0);
+    assert_steps_match("stall@final", &baseline, &failed);
+}
+
+#[test]
+fn mid_run_crash_completes_on_survivors_with_full_batches() {
+    // Killing before the last step changes later allocations (two
+    // survivors split the work the baseline gave three actors), so the
+    // policies legitimately diverge from a no-failure run — but every
+    // step must still train on a full batch, and the failover must be
+    // exactly-once.
+    let steps = 5;
+    let mut cfg = config(3, steps, 13);
+    cfg.transport = tcp_with_kill(Some(KillSpec {
+        actor: 0,
+        at_version: 1, // dispatched at step 2: mid-run
+        mode: KillMode::Crash,
+    }));
+    let report = run(&cfg);
+
+    assert_eq!(report.final_version, steps);
+    assert_eq!(report.failovers, 1);
+    assert!(report.requeued_prompts > 0);
+    // SyntheticCompute emits exactly max_new_tokens per completion, so a
+    // full batch is a constant token count: prompts(8) * group(2) * 5.
+    for s in &report.steps {
+        assert_eq!(
+            s.gen_tokens, 80,
+            "step {}: batch incomplete after failover (lost or duplicated prompts)",
+            s.step
+        );
+        assert!(s.payload_bytes > 0, "step {}: no delta committed", s.step);
+    }
+}
+
+#[test]
+fn healthy_tcp_run_with_wall_leases_never_fails_over() {
+    // Wall-clock leases on a healthy fleet must be invisible: no expiry,
+    // no requeue, and results identical to the virtual-clock run.
+    let mut base = config(2, 3, 9);
+    base.wall_leases = false; // pure manual-clock reference, InProc
+    let virtual_clock = run(&base);
+    let mut wall = base.clone();
+    wall.wall_leases = true;
+    wall.transport = tcp_with_kill(None);
+    let tcp = run(&wall);
+    assert_eq!(tcp.failovers, 0);
+    assert_eq!(tcp.requeued_prompts, 0);
+    assert_steps_match("virtual vs wall-lease tcp", &virtual_clock, &tcp);
+}

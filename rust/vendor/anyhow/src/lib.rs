@@ -114,12 +114,40 @@ macro_rules! bail {
     ($($t:tt)*) => { return Err($crate::anyhow!($($t)*)) };
 }
 
+/// Return early with an [`Error`] unless the condition holds (upstream
+/// anyhow's `ensure!`, including the condition-only form).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn io_err() -> std::io::Error {
         std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(x: i32) -> Result<i32> {
+            crate::ensure!(x > 0, "x must be positive, got {x}");
+            crate::ensure!(x != 7);
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert_eq!(format!("{}", check(-1).unwrap_err()), "x must be positive, got -1");
+        assert!(format!("{}", check(7).unwrap_err()).contains("x != 7"));
     }
 
     #[test]
