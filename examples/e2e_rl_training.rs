@@ -14,7 +14,7 @@
 //! cargo run --release --example e2e_rl_training -- --model sparrow-s --sft-steps 300 --rl-steps 60
 //! ```
 
-use sparrowrl::rt::{run_local, LocalRunConfig};
+use sparrowrl::session::{Event, RunSpec, Session};
 use sparrowrl::trainer::Algorithm;
 use sparrowrl::util::cli::Args;
 use sparrowrl::util::fmt_bytes;
@@ -22,27 +22,45 @@ use sparrowrl::util::fmt_bytes;
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let model = args.str_or("model", "sparrow-s");
-    let mut cfg = LocalRunConfig::quick(&model);
-    cfg.sft_steps = args.parse_or("sft-steps", 300u64);
-    cfg.steps = args.parse_or("rl-steps", 60u64);
-    cfg.lr_sft = args.parse_or("lr-sft", 3e-3f32);
-    cfg.lr_rl = args.parse_or("lr-rl", 2e-5f32);
-    cfg.n_actors = args.parse_or("actors", 2usize);
-    cfg.max_new_tokens = args.parse_or("max-new", 8usize);
-    cfg.seed = args.parse_or("seed", 0u64);
-    cfg.algorithm = Algorithm::parse(&args.str_or("algorithm", "grpo")).unwrap();
-    cfg.verbose = true;
+    let algorithm = Algorithm::parse(&args.str_or("algorithm", "grpo")).unwrap();
+    let plan = RunSpec::model(&model)
+        .sft_steps(args.parse_or("sft-steps", 300u64))
+        .steps(args.parse_or("rl-steps", 60u64))
+        .lr_sft(args.parse_or("lr-sft", 3e-3f32))
+        .lr_rl(args.parse_or("lr-rl", 2e-5f32))
+        .actors(args.parse_or("actors", 2usize))
+        .max_new_tokens(args.parse_or("max-new", 8usize))
+        .seed(args.parse_or("seed", 0u64))
+        .algorithm(algorithm)
+        .build()?;
 
     let spec = sparrowrl::config::model(&model)
         .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
     println!(
         "=== e2e RL training: {model} ({} params), {} SFT + {} RL steps, {} ===\n",
         spec.total_params(),
-        cfg.sft_steps,
-        cfg.steps,
-        cfg.algorithm.name()
+        plan.config().sft_steps,
+        plan.config().steps,
+        algorithm.name()
     );
-    let report = run_local(&cfg)?;
+    // Live per-step lines come off the session's event stream; the final
+    // report is assembled from the same events.
+    let mut session = Session::start(&plan)?;
+    let report = loop {
+        match session.recv() {
+            Some(Event::StepCompleted(log)) => println!(
+                "step {:>3}  loss {:>8.4}  reward {:.3}  rho {:.4}%  payload {}",
+                log.step,
+                log.loss,
+                log.mean_reward,
+                log.rho * 100.0,
+                fmt_bytes(log.payload_bytes),
+            ),
+            Some(Event::Finished(r)) => break r,
+            Some(_) => {}
+            None => anyhow::bail!("session ended without a report"),
+        }
+    };
 
     println!("\n--- SFT loss curve (every 10th step) ---");
     for (i, l) in report.sft_losses.iter().enumerate() {

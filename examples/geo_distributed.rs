@@ -1,6 +1,8 @@
 //! Geo-distributed deployment study: the paper's §7.5 scenario as a
 //! simulated campaign — actors spread across 1-4 continents, all four
-//! systems, with a live Gantt of the winning configuration.
+//! systems, with a live Gantt of the winning configuration — plus the
+//! *real* pipelined runtime on the 4-region relay tree, driven through
+//! the Session API's typed event stream.
 //!
 //! ```bash
 //! cargo run --release --example geo_distributed [-- --model qwen3-8b --steps 7]
@@ -8,10 +10,15 @@
 
 use sparrowrl::config::{self, regions, GpuClass};
 use sparrowrl::data::Benchmark;
+use sparrowrl::delta::ModelLayout;
+use sparrowrl::metrics::SpanKind;
+use sparrowrl::rt::SyntheticCompute;
+use sparrowrl::session::{Event, RunSpec, Session};
 use sparrowrl::sim::driver::{run, SimConfig};
 use sparrowrl::sim::{RegionSpec, System};
 use sparrowrl::util::cli::Args;
 use sparrowrl::util::{fmt_bytes, fmt_secs};
+use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -80,5 +87,43 @@ fn main() -> anyhow::Result<()> {
         fmt_bytes(r.payload_bytes())
     );
     print!("{}", r.timeline.ascii_gantt(96));
+
+    // The same 4-region tree for real: the pipelined executor on the
+    // synthetic engine, hub -> regional relay -> peers, observed live
+    // through the Session event stream. `wan("wan-4")` derives the
+    // fleet, the relay tree, and the pipelined coercion inside build().
+    let plan = RunSpec::synthetic()
+        .wan("wan-4")
+        .steps(4)
+        .sft_steps(0)
+        .group_size(2)
+        .max_new_tokens(6)
+        .lr_rl(1e-2)
+        .build()?;
+    println!("\nlive runtime on wan-4 ({} actors):", plan.config().n_actors);
+    for note in plan.notes() {
+        println!("  note: {note}");
+    }
+    let layout = ModelLayout::transformer("syn-geo", 512, 128, 2, 256);
+    let comp = SyntheticCompute::new(16, 8, 64)
+        .with_delays(Duration::from_millis(6), Duration::from_millis(5));
+    let mut session = Session::start_with_compute(&plan, layout, comp)?;
+    let report = loop {
+        match session.recv() {
+            Some(Event::DeltaStreamed { version, payload_bytes, stripes }) => println!(
+                "  D_v{version}: {} in {stripes} segments to every region relay",
+                fmt_bytes(payload_bytes),
+            ),
+            Some(Event::Finished(r)) => break r,
+            Some(_) => {}
+            None => anyhow::bail!("session ended without a report"),
+        }
+    };
+    println!(
+        "  {} versions committed bit-exact on 4 continents; wall {:.2}s, hidden sync {:.0}%",
+        report.final_version,
+        report.wall_s,
+        report.timeline.overlap_ratio("trainer", &[SpanKind::Train, SpanKind::Extract]) * 100.0,
+    );
     Ok(())
 }

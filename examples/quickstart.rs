@@ -1,35 +1,78 @@
-//! Quickstart: the smallest end-to-end SparrowRL run.
+//! Quickstart: the smallest end-to-end SparrowRL run, through the
+//! Session API.
 //!
-//! Loads the AOT artifacts for the smoke-size model, runs a short SFT
-//! warmup plus a few RL steps with GRPO, and prints per-step sparsity and
-//! delta payloads — the paper's core observation, live.
+//! Builds a validated `RunSpec`, starts a live `Session`, and subscribes
+//! to its typed event stream — per-step sparsity and delta payloads (the
+//! paper's core observation) printed as they happen, then the final
+//! report assembled from those same events.
+//!
+//! With PJRT artifacts present (`make artifacts`) the run executes the
+//! real sparrow-xs model; without them it falls back to the
+//! deterministic synthetic engine so the example (and the CI
+//! session-smoke job) always runs.
 //!
 //! ```bash
-//! make artifacts
 //! cargo run --release --example quickstart
 //! ```
 
-use sparrowrl::rt::{run_local, LocalRunConfig};
+use sparrowrl::delta::ModelLayout;
+use sparrowrl::rt::SyntheticCompute;
+use sparrowrl::session::{Event, RunSpec, Session};
 use sparrowrl::util::fmt_bytes;
+use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
-    let mut cfg = LocalRunConfig::quick("sparrow-xs");
-    cfg.sft_steps = 40;
-    cfg.steps = 5;
-    cfg.verbose = true;
-    println!("SparrowRL quickstart: sparrow-xs, GRPO, 2 in-process actors\n");
-    let report = run_local(&cfg)?;
+    let have_artifacts = sparrowrl::runtime::artifacts_dir()
+        .join("sparrow-xs_policy_fwd.hlo.txt")
+        .exists();
+    let mut session = if have_artifacts {
+        println!("SparrowRL quickstart: sparrow-xs, GRPO, 2 in-process actors\n");
+        let plan = RunSpec::model("sparrow-xs").sft_steps(40).steps(5).build()?;
+        Session::start(&plan)?
+    } else {
+        println!("SparrowRL quickstart: synthetic engine (artifacts missing), GRPO, 2 actors\n");
+        let plan = RunSpec::synthetic()
+            .sft_steps(10)
+            .steps(5)
+            .group_size(2)
+            .max_new_tokens(6)
+            .lr_rl(1e-2)
+            .pipelined()
+            .build()?;
+        let layout = ModelLayout::transformer("syn-quickstart", 512, 128, 2, 256);
+        let comp = SyntheticCompute::new(16, 8, 64)
+            .with_delays(Duration::from_millis(5), Duration::from_millis(4));
+        Session::start_with_compute(&plan, layout, comp)?
+    };
+
+    // Subscribe: the CLI-style per-step line is just one view of the
+    // typed events; `Finished` carries the report assembled from them.
+    let report = loop {
+        match session.recv() {
+            Some(Event::StepCompleted(log)) => println!(
+                "step {:>3}  loss {:>8.4}  reward {:.3}  rho {:.4}%  payload {}",
+                log.step,
+                log.loss,
+                log.mean_reward,
+                log.rho * 100.0,
+                fmt_bytes(log.payload_bytes),
+            ),
+            Some(Event::Committed { version, checksum }) => println!(
+                "        committed v{version} ({})",
+                &sparrowrl::util::hex(&checksum)[..12],
+            ),
+            Some(Event::Finished(report)) => break report,
+            Some(_) => {}
+            None => anyhow::bail!("session ended without a report"),
+        }
+    };
+
     println!(
         "\nSFT warmup: loss {:.3} -> {:.3}",
         report.sft_losses.first().unwrap(),
         report.sft_losses.last().unwrap()
     );
-    let spec = sparrowrl::config::model("sparrow-xs").unwrap();
-    println!(
-        "RL steps: mean update sparsity rho = {:.3}% of {} params",
-        report.mean_rho() * 100.0,
-        spec.total_params()
-    );
+    println!("RL steps: mean update sparsity rho = {:.3}%", report.mean_rho() * 100.0);
     let last = report.steps.last().unwrap();
     println!(
         "last delta checkpoint: {} vs {} dense ({}x smaller), extracted in {:.1} ms",
@@ -38,6 +81,7 @@ fn main() -> anyhow::Result<()> {
         last.dense_bytes / last.payload_bytes.max(1),
         last.extract_ms
     );
+    println!("final policy checksum: {}", last.checksum_hex());
     println!("every actor finished bit-exact with the trainer policy (asserted internally).");
     Ok(())
 }

@@ -4,30 +4,41 @@
 //! pipelined run's timeline. Emits `BENCH_pipeline.json` so the perf
 //! trajectory is tracked across PRs.
 //!
-//! Runs on the deterministic synthetic engine with emulated compute
-//! latencies (artifact-free, CI-safe). When PJRT artifacts for sparrow-xs
-//! are present, the real loop is measured as well. Set `BENCH_QUICK=1`
-//! for a CI smoke run.
+//! Runs through the Session API (`RunSpec` -> `Session` -> `join`) on
+//! the deterministic synthetic engine with emulated compute latencies
+//! (artifact-free, CI-safe). When PJRT artifacts for sparrow-xs are
+//! present, the real loop is measured as well. Set `BENCH_QUICK=1` for a
+//! CI smoke run.
 
 use sparrowrl::delta::ModelLayout;
 use sparrowrl::metrics::SpanKind;
-use sparrowrl::rt::{
-    run_local_mode, run_with_compute, ExecMode, LocalRunConfig, SyntheticCompute,
-};
+use sparrowrl::rt::{ExecMode, RunReport, SyntheticCompute};
+use sparrowrl::session::{RunSpec, Session};
 use sparrowrl::util::bench::Bencher;
 use std::time::Duration;
 
 const SYNC: [SpanKind; 2] = [SpanKind::Train, SpanKind::Extract];
 
-fn synthetic_cfg(quick: bool) -> LocalRunConfig {
-    let mut cfg = LocalRunConfig::quick("synthetic");
-    cfg.steps = if quick { 5 } else { 10 };
-    cfg.sft_steps = 0;
-    cfg.n_actors = 2;
-    cfg.group_size = 2;
-    cfg.max_new_tokens = 6;
-    cfg.lr_rl = 1e-2;
-    cfg
+fn synthetic_spec(quick: bool, mode: ExecMode) -> RunSpec {
+    RunSpec::synthetic()
+        .steps(if quick { 5 } else { 10 })
+        .sft_steps(0)
+        .actors(2)
+        .group_size(2)
+        .max_new_tokens(6)
+        .lr_rl(1e-2)
+        .mode(mode)
+}
+
+fn run_synthetic(quick: bool, mode: ExecMode) -> RunReport {
+    let plan = synthetic_spec(quick, mode).build().expect("valid spec");
+    let layout = ModelLayout::transformer("syn-bench", 512, 128, 2, 256);
+    let comp = SyntheticCompute::new(16, 8, 64)
+        .with_delays(Duration::from_millis(10), Duration::from_millis(8));
+    Session::start_with_compute(&plan, layout, comp)
+        .expect("start session")
+        .join()
+        .expect("session run")
 }
 
 fn main() {
@@ -36,29 +47,21 @@ fn main() {
     let mut derived: Vec<(&str, f64)> = Vec::new();
 
     // -- synthetic engine: emulated accelerator latencies ----------------
-    let layout = ModelLayout::transformer("syn-bench", 512, 128, 2, 256);
-    let comp = SyntheticCompute::new(16, 8, 64)
-        .with_delays(Duration::from_millis(10), Duration::from_millis(8));
-    let cfg = synthetic_cfg(quick);
     let seq = b
         .bench("e2e 2-actor synthetic [sequential]", || {
-            std::hint::black_box(
-                run_with_compute(&cfg, &layout, &comp, ExecMode::Sequential).unwrap(),
-            );
+            std::hint::black_box(run_synthetic(quick, ExecMode::Sequential));
         })
         .median
         .as_secs_f64();
     let pip = b
         .bench("e2e 2-actor synthetic [pipelined]", || {
-            std::hint::black_box(
-                run_with_compute(&cfg, &layout, &comp, ExecMode::Pipelined).unwrap(),
-            );
+            std::hint::black_box(run_synthetic(quick, ExecMode::Pipelined));
         })
         .median
         .as_secs_f64();
     let speedup = seq / pip.max(1e-12);
     // Overlap efficiency from a representative pipelined timeline.
-    let report = run_with_compute(&cfg, &layout, &comp, ExecMode::Pipelined).unwrap();
+    let report = run_synthetic(quick, ExecMode::Pipelined);
     let sync_s = report.timeline.total("trainer", SpanKind::Train)
         + report.timeline.total("trainer", SpanKind::Extract);
     let overlap = report.timeline.overlap_ratio("trainer", &SYNC);
@@ -80,23 +83,29 @@ fn main() {
         .join(format!("{model}_policy_fwd.hlo.txt"))
         .exists()
     {
-        let mut cfg = LocalRunConfig::quick(model);
-        cfg.steps = if quick { 3 } else { 6 };
-        cfg.sft_steps = 0;
+        let real = |mode: ExecMode| -> RunReport {
+            let plan = RunSpec::model(model)
+                .steps(if quick { 3 } else { 6 })
+                .sft_steps(0)
+                .mode(mode)
+                .build()
+                .expect("valid spec");
+            Session::start(&plan).expect("start session").join().expect("session run")
+        };
         let seq = b
             .bench("e2e 2-actor sparrow-xs [sequential]", || {
-                std::hint::black_box(run_local_mode(&cfg, ExecMode::Sequential).unwrap());
+                std::hint::black_box(real(ExecMode::Sequential));
             })
             .median
             .as_secs_f64();
         let pip = b
             .bench("e2e 2-actor sparrow-xs [pipelined]", || {
-                std::hint::black_box(run_local_mode(&cfg, ExecMode::Pipelined).unwrap());
+                std::hint::black_box(real(ExecMode::Pipelined));
             })
             .median
             .as_secs_f64();
         let real_speedup = seq / pip.max(1e-12);
-        let report = run_local_mode(&cfg, ExecMode::Pipelined).unwrap();
+        let report = real(ExecMode::Pipelined);
         println!(
             "sparrow-xs: sequential {seq:.3}s, pipelined {pip:.3}s -> {real_speedup:.2}x"
         );

@@ -3,11 +3,11 @@
 //! 1. Micro: segmentation, striping, reassembly throughput, relay
 //!    forwarding — §5.2's per-checkpoint CPU overheads.
 //! 2. Backend: the same deterministic pipelined RL run over each
-//!    `transport::api` backend (InProc / Sim / Tcp loopback), measuring
-//!    per-backend wall clock, per-step latency, and the sync-hidden
-//!    overlap ratio. Emits `BENCH_transport.json` and asserts the
-//!    throughput sanity bound: zero-copy InProc must not be slower than
-//!    framed loopback Tcp.
+//!    `transport::api` backend (InProc / Sim / Tcp loopback) through the
+//!    Session API, measuring per-backend wall clock, per-step latency,
+//!    and the sync-hidden overlap ratio. Emits `BENCH_transport.json`
+//!    and asserts the throughput sanity bound: zero-copy InProc must not
+//!    be slower than framed loopback Tcp.
 //!
 //! Set `BENCH_QUICK=1` for the CI smoke run.
 
@@ -15,9 +15,8 @@ use sparrowrl::config::regions;
 use sparrowrl::delta::ModelLayout;
 use sparrowrl::metrics::SpanKind;
 use sparrowrl::netsim::Link;
-use sparrowrl::rt::{
-    run_with_compute, ExecMode, LocalRunConfig, SyntheticCompute, TransportKind,
-};
+use sparrowrl::rt::{RunReport, SyntheticCompute};
+use sparrowrl::session::{Backend, RunSpec, Session};
 use sparrowrl::transport::relay::RelayNode;
 use sparrowrl::transport::{
     split_into_segments, stripe_round_robin, Reassembler, Segment, SimNetConfig, TcpConfig,
@@ -77,17 +76,17 @@ fn micro(b: &mut Bencher, quick: bool) {
     });
 }
 
-fn backend_cfg(quick: bool) -> LocalRunConfig {
-    let mut cfg = LocalRunConfig::quick("synthetic");
-    cfg.steps = if quick { 4 } else { 8 };
-    cfg.sft_steps = 0;
-    cfg.n_actors = 2;
-    cfg.group_size = 2;
-    cfg.max_new_tokens = 6;
-    cfg.lr_rl = 1e-2;
-    cfg.segment_bytes = 4 << 10;
-    cfg.deterministic = true;
-    cfg
+fn backend_spec(quick: bool) -> RunSpec {
+    RunSpec::synthetic()
+        .steps(if quick { 4 } else { 8 })
+        .sft_steps(0)
+        .actors(2)
+        .group_size(2)
+        .max_new_tokens(6)
+        .lr_rl(1e-2)
+        .segment_bytes(4 << 10)
+        .deterministic()
+        .pipelined()
 }
 
 fn main() {
@@ -96,43 +95,47 @@ fn main() {
     micro(&mut b, quick);
 
     // -- backend tier: identical run, three transports -------------------
-    let layout = ModelLayout::transformer("syn-tr-bench", 512, 128, 2, 256);
     // Emulated accelerator latencies so the overlap ratio is meaningful.
-    let comp = SyntheticCompute::new(16, 8, 64)
-        .with_delays(Duration::from_millis(8), Duration::from_millis(6));
-    let base = backend_cfg(quick);
-    let steps = base.steps as f64;
+    let base = backend_spec(quick);
+    let steps = base.clone().build().unwrap().config().steps as f64;
+    let run = |spec: &RunSpec| -> RunReport {
+        let plan = spec.clone().build().expect("valid spec");
+        let layout = ModelLayout::transformer("syn-tr-bench", 512, 128, 2, 256);
+        let comp = SyntheticCompute::new(16, 8, 64)
+            .with_delays(Duration::from_millis(8), Duration::from_millis(6));
+        Session::start_with_compute(&plan, layout, comp)
+            .expect("start session")
+            .join()
+            .expect("session run")
+    };
 
-    let backends: Vec<(&str, TransportKind)> = vec![
-        ("inproc", TransportKind::InProc),
+    let backends: Vec<(&str, Backend)> = vec![
+        ("inproc", Backend::InProc),
         (
             "sim",
-            TransportKind::Sim(SimNetConfig::single_region(
-                base.n_actors,
+            Backend::SimNet(SimNetConfig::single_region(
+                2,
                 Link::from_profile(&regions::CANADA),
                 4,
-                base.seed,
+                0,
             )),
         ),
         (
             "tcp",
-            TransportKind::Tcp(TcpConfig { streams: 2, bits_per_s: None, kill: None }),
+            Backend::Tcp(TcpConfig { streams: 2, bits_per_s: None, kill: None }),
         ),
     ];
     let mut derived: Vec<(String, f64)> = Vec::new();
     let mut walls: Vec<(&str, f64)> = Vec::new();
     for (name, kind) in backends {
-        let mut cfg = base.clone();
-        cfg.transport = kind;
+        let spec = base.clone().transport(kind);
         let wall = b
             .bench(&format!("e2e 2-actor pipelined [{name}]"), || {
-                std::hint::black_box(
-                    run_with_compute(&cfg, &layout, &comp, ExecMode::Pipelined).unwrap(),
-                );
+                std::hint::black_box(run(&spec));
             })
             .median
             .as_secs_f64();
-        let report = run_with_compute(&cfg, &layout, &comp, ExecMode::Pipelined).unwrap();
+        let report = run(&spec);
         let overlap = report.timeline.overlap_ratio("trainer", &SYNC);
         println!(
             "{name}: wall {wall:.3}s, {:.1} ms/step, hidden sync {:.0}%",

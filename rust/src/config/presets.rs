@@ -121,14 +121,17 @@ pub fn wan_region_order() -> [super::RegionProfile; 4] {
     [regions::CANADA, regions::JAPAN, regions::NETHERLANDS, regions::ICELAND]
 }
 
+/// Every WAN preset name, in rollout order (`sparrowrl list` prints
+/// these; `RunSpec::wan` accepts them).
+pub const WAN_PRESET_NAMES: [&str; 4] = ["wan-1", "wan-2", "wan-3", "wan-4"];
+
 /// Look up a WAN preset: `wan-N` (N = 1..=4) spreads actors over the
 /// first N regions of [`wan_region_order`] (2 actors per region, the
 /// paper's 8-actor fleet split evenly at 4 DCs).
 pub fn wan_preset(name: &str) -> Option<WanPreset> {
-    const NAMES: [&str; 4] = ["wan-1", "wan-2", "wan-3", "wan-4"];
-    let idx = NAMES.iter().position(|&n| n == name)?;
+    let idx = WAN_PRESET_NAMES.iter().position(|&n| n == name)?;
     let regions = wan_region_order()[..=idx].to_vec();
-    Some(WanPreset { name: NAMES[idx], regions, actors_per_region: 2 })
+    Some(WanPreset { name: WAN_PRESET_NAMES[idx], regions, actors_per_region: 2 })
 }
 
 #[cfg(test)]

@@ -56,7 +56,7 @@ impl DeltaCheckpoint {
     }
 
     pub fn short_hash(&self) -> String {
-        self.hash[..6].iter().map(|b| format!("{b:02x}")).collect()
+        crate::util::hex(&self.hash[..6])
     }
 }
 

@@ -6,7 +6,8 @@ use crate::config::{self, regions, GpuClass, ModelSpec};
 use crate::cost::table6_deployments;
 use crate::data::Benchmark;
 use crate::metrics::{geometric_mean, SpanKind};
-use crate::rt::{run_local_mode, run_with_compute, ExecMode, LocalRunConfig, RunReport, SyntheticCompute};
+use crate::rt::{ExecMode, RunReport, SyntheticCompute};
+use crate::session::{RunSpec, Session};
 use crate::sim::driver::{run, SimConfig};
 use crate::sim::{RegionSpec, System};
 use crate::util::cli::Args;
@@ -300,21 +301,25 @@ pub fn overlap(args: &Args) -> Result<()> {
         .exists();
     let run_mode = |mode: ExecMode| -> Result<RunReport> {
         if have_artifacts {
-            let mut cfg = LocalRunConfig::quick(&model);
-            cfg.steps = steps;
-            cfg.sft_steps = args.parse_or("sft-steps", 10u64);
-            run_local_mode(&cfg, mode)
+            let plan = RunSpec::model(&model)
+                .steps(steps)
+                .sft_steps(args.parse_or("sft-steps", 10u64))
+                .mode(mode)
+                .build()?;
+            Session::start(&plan)?.join()
         } else {
             let layout = crate::delta::ModelLayout::transformer("syn-overlap", 512, 128, 2, 256);
             let comp = SyntheticCompute::new(16, 8, 64)
                 .with_delays(Duration::from_millis(8), Duration::from_millis(6));
-            let mut cfg = LocalRunConfig::quick("synthetic");
-            cfg.steps = steps;
-            cfg.sft_steps = 0;
-            cfg.group_size = 2;
-            cfg.max_new_tokens = 6;
-            cfg.lr_rl = 1e-2;
-            run_with_compute(&cfg, &layout, &comp, mode)
+            let plan = RunSpec::synthetic()
+                .steps(steps)
+                .sft_steps(0)
+                .group_size(2)
+                .max_new_tokens(6)
+                .lr_rl(1e-2)
+                .mode(mode)
+                .build()?;
+            Session::start_with_compute(&plan, layout, comp)?.join()
         }
     };
     if !have_artifacts {

@@ -6,11 +6,17 @@
 
 use super::print_table;
 use crate::config;
-use crate::rt::{run_local, LocalRunConfig};
+use crate::rt::RunReport;
+use crate::session::{RunSpec, Session};
 use crate::trainer::Algorithm;
 use crate::util::cli::Args;
 use crate::util::fmt_bytes;
 use anyhow::Result;
+
+/// Build + run a spec to completion (sequential reference executor).
+fn run_spec(spec: RunSpec) -> Result<RunReport> {
+    Session::start(&spec.build()?)?.join()
+}
 
 fn artifact_models(args: &Args) -> Vec<String> {
     let spec = args.str_or("models", "sparrow-xs,sparrow-s");
@@ -35,12 +41,13 @@ fn artifact_models(args: &Args) -> Vec<String> {
 pub fn fig3(args: &Args) -> Result<()> {
     let mut rows = Vec::new();
     for m in artifact_models(args) {
-        let mut cfg = LocalRunConfig::quick(&m);
-        cfg.steps = args.parse_or("steps", 3u64);
-        cfg.sft_steps = args.parse_or("sft-steps", 20u64);
-        cfg.lr_rl = 1e-6;
-        cfg.seed = args.parse_or("seed", 0u64);
-        let report = run_local(&cfg)?;
+        let report = run_spec(
+            RunSpec::model(&m)
+                .steps(args.parse_or("steps", 3u64))
+                .sft_steps(args.parse_or("sft-steps", 20u64))
+                .lr_rl(1e-6)
+                .seed(args.parse_or("seed", 0u64)),
+        )?;
         let spec = config::model(&m).unwrap();
         rows.push(vec![
             format!("{m} (measured)"),
@@ -74,18 +81,21 @@ pub fn fig3(args: &Args) -> Result<()> {
 /// Figure 4: sparsity and reward across RL training steps.
 pub fn fig4(args: &Args) -> Result<()> {
     let model = args.str_or("model", "sparrow-xs");
-    let mut cfg = LocalRunConfig::quick(&model);
-    cfg.steps = args.parse_or("steps", 40u64);
-    cfg.sft_steps = args.parse_or("sft-steps", 150u64);
-    cfg.lr_sft = args.parse_or("lr-sft", 5e-3f32);
-    cfg.lr_rl = args.parse_or("lr-rl", 2e-5f32);
-    cfg.seed = args.parse_or("seed", 0u64);
-    cfg.verbose = true;
+    let steps = args.parse_or("steps", 40u64);
+    let sft_steps = args.parse_or("sft-steps", 150u64);
+    let lr_rl = args.parse_or("lr-rl", 2e-5f32);
     println!(
-        "== Figure 4: training dynamics ({model}, {} SFT + {} RL steps, lr_rl={}) ==",
-        cfg.sft_steps, cfg.steps, cfg.lr_rl
+        "== Figure 4: training dynamics ({model}, {sft_steps} SFT + {steps} RL steps, lr_rl={lr_rl}) =="
     );
-    let report = run_local(&cfg)?;
+    let report = run_spec(
+        RunSpec::model(&model)
+            .steps(steps)
+            .sft_steps(sft_steps)
+            .lr_sft(args.parse_or("lr-sft", 5e-3f32))
+            .lr_rl(lr_rl)
+            .seed(args.parse_or("seed", 0u64))
+            .verbose(),
+    )?;
     println!(
         "\nSFT loss: {:.3} -> {:.3} over {} steps",
         report.sft_losses.first().copied().unwrap_or(0.0),
@@ -126,13 +136,14 @@ pub fn table4(args: &Args) -> Result<()> {
     let model = args.str_or("model", "sparrow-xs");
     let mut rows = Vec::new();
     for alg in Algorithm::all() {
-        let mut cfg = LocalRunConfig::quick(&model);
-        cfg.algorithm = alg;
-        cfg.steps = args.parse_or("steps", 3u64);
-        cfg.sft_steps = args.parse_or("sft-steps", 20u64);
-        cfg.lr_rl = 1e-6;
-        cfg.seed = args.parse_or("seed", 0u64);
-        let report = run_local(&cfg)?;
+        let report = run_spec(
+            RunSpec::model(&model)
+                .algorithm(alg)
+                .steps(args.parse_or("steps", 3u64))
+                .sft_steps(args.parse_or("sft-steps", 20u64))
+                .lr_rl(1e-6)
+                .seed(args.parse_or("seed", 0u64)),
+        )?;
         rows.push(vec![
             alg.name().to_string(),
             format!("{:.2}%", report.mean_rho() * 100.0),

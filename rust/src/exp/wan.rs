@@ -20,7 +20,8 @@ use crate::config::{self, wan_preset, GpuClass};
 use crate::cost::{table6_deployments, wan_deployment};
 use crate::data::Benchmark;
 use crate::metrics::SpanKind;
-use crate::rt::{run_with_compute, DistributionSpec, ExecMode, LocalRunConfig, SyntheticCompute};
+use crate::rt::SyntheticCompute;
+use crate::session::{RunSpec, Session};
 use crate::sim::compute::{delta_payload_bytes, ComputeModel};
 use crate::sim::driver::{run as sim_run, SimConfig};
 use crate::sim::{RegionSpec, System};
@@ -132,21 +133,22 @@ pub fn wan(args: &Args) -> Result<()> {
     );
 
     // --- Section B: the real pipelined runtime over the 4-region tree ----
+    // `RunSpec::wan` derives the same relay tree `plan` describes (and
+    // the fleet size, and the pipelined coercion) inside `build()`.
     let steps = args.parse_or("steps", 5u64);
-    let spec = DistributionSpec::from_plan(&plan);
     let layout = crate::delta::ModelLayout::transformer("syn-wan", 512, 128, 2, 256);
     let comp = SyntheticCompute::new(16, 8, 64)
         .with_delays(Duration::from_millis(8), Duration::from_millis(6));
-    let mut cfg = LocalRunConfig::quick("synthetic");
-    cfg.steps = steps;
-    cfg.sft_steps = 0;
-    cfg.n_actors = plan.n_actors();
-    cfg.group_size = 2;
-    cfg.max_new_tokens = 6;
-    cfg.lr_rl = 1e-2;
-    cfg.seed = seed;
-    cfg.distribution = Some(spec);
-    let report = run_with_compute(&cfg, &layout, &comp, ExecMode::Pipelined)?;
+    let run_plan = RunSpec::synthetic()
+        .wan("wan-4")
+        .steps(steps)
+        .sft_steps(0)
+        .group_size(2)
+        .max_new_tokens(6)
+        .lr_rl(1e-2)
+        .seed(seed)
+        .build()?;
+    let report = Session::start_with_compute(&run_plan, layout, comp)?.join()?;
     let sync = [SpanKind::Train, SpanKind::Extract];
     let per_step_payload =
         report.steps.iter().map(|s| s.payload_bytes).sum::<u64>() / report.steps.len().max(1) as u64;

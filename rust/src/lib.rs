@@ -15,10 +15,14 @@
 //! * **L1** — `python/compile/kernels/`: Pallas attention and delta-diff
 //!   kernels called from L2 (interpret mode on CPU).
 //!
+//! The public entry point is the [`session`] module: a validated
+//! [`session::RunSpec`] builder plus a live [`session::Session`] handle
+//! with typed event streaming.
+//!
 //! See DESIGN.md for the system inventory and the paper-experiment index,
 //! and docs/ARCHITECTURE.md for the subsystem map (delta pipeline →
 //! runtime → transport/netsim), the wire formats, the mailbox protocol,
-//! and the multi-region distribution-tree design.
+//! the multi-region distribution-tree design, and the Session API (§2c).
 
 pub mod actor;
 pub mod config;
@@ -32,6 +36,7 @@ pub mod netsim;
 pub mod rt;
 pub mod runtime;
 pub mod scheduler;
+pub mod session;
 pub mod sim;
 pub mod trainer;
 pub mod transport;

@@ -10,7 +10,7 @@
 use sparrowrl::config;
 use sparrowrl::data::Benchmark;
 use sparrowrl::exp;
-use sparrowrl::rt::{run_local_mode, ExecMode, LocalRunConfig};
+use sparrowrl::session::{Backend, Event, RunSpec, Session};
 use sparrowrl::sim::driver::{run as sim_run, SimConfig};
 use sparrowrl::sim::{RegionSpec, System};
 use sparrowrl::trainer::Algorithm;
@@ -42,6 +42,8 @@ fn main() {
             println!("experiments: {}", exp::ALL.join(", "));
             println!("runnable models: {}", config::runnable_models().join(", "));
             println!("analytic models: {}", config::paper_models().join(", "));
+            println!("transports: {}", Backend::NAMES.join(", "));
+            println!("wan presets: {}", config::WAN_PRESET_NAMES.join(", "));
             Ok(())
         }
         _ => usage(),
@@ -52,113 +54,90 @@ fn main() {
     }
 }
 
-fn cmd_train(args: &Args) -> anyhow::Result<()> {
+/// Parse `train` flags into a [`RunSpec`]. All cross-field legality
+/// rules (wan↔actors, wan↔tcp, transport→pipelined coercions, ...) live
+/// in `RunSpec::build`, not here — this is string parsing only.
+fn train_spec(args: &Args) -> anyhow::Result<RunSpec> {
     let model = args.str_or("model", "sparrow-xs");
-    let mut cfg = LocalRunConfig::quick(&model);
-    cfg.steps = args.parse_or("steps", 10u64);
-    cfg.sft_steps = args.parse_or("sft-steps", 50u64);
-    cfg.lr_sft = args.parse_or("lr-sft", 5e-3f32);
-    cfg.lr_rl = args.parse_or("lr-rl", 1e-6f32);
-    cfg.n_actors = args.parse_or("actors", 2usize);
-    cfg.seed = args.parse_or("seed", 0u64);
-    cfg.max_new_tokens = args.parse_or("max-new", 8usize);
-    cfg.algorithm = Algorithm::parse(&args.str_or("algorithm", "grpo"))
-        .ok_or_else(|| anyhow::anyhow!("bad --algorithm"))?;
-    cfg.bench = Benchmark::parse(&args.str_or("bench", "gsm8k"))
-        .ok_or_else(|| anyhow::anyhow!("bad --bench"))?;
-    cfg.verbose = true;
-    cfg.deterministic = args.flag("deterministic");
-    let mut mode = if args.flag("pipelined") { ExecMode::Pipelined } else { ExecMode::Sequential };
-    // Multi-region distribution: group the actors per a WAN preset
-    // (implies --pipelined, since the sequential reference has no
-    // distribution tree).
-    let wan = args.str_or("wan", "");
-    let preset = if wan.is_empty() {
-        None
-    } else {
-        if args.get("actors").is_some() {
-            anyhow::bail!("--wan sets the actor count from the preset; drop --actors");
-        }
-        let p = config::wan_preset(&wan)
-            .ok_or_else(|| anyhow::anyhow!("unknown WAN preset {wan} (wan-1..wan-4)"))?;
-        cfg.n_actors = p.n_actors();
-        mode = ExecMode::Pipelined;
-        Some(p)
-    };
-    // Transport backend: how hub↔actor traffic travels in the pipelined
-    // executor. All three run the identical executor code path.
-    match args.str_or("transport", "inproc").as_str() {
-        // In-process mailboxes; a WAN preset becomes relay routing
-        // (hub -> regional relay worker -> peers).
-        "inproc" => {
-            if let Some(p) = &preset {
-                let plan = sparrowrl::transport::DistributionPlan::from_preset(p, 1 << 20);
-                cfg.distribution = Some(sparrowrl::rt::DistributionSpec::from_plan(&plan));
-                println!(
-                    "WAN preset {}: {} regions, {} actors, relays {:?}",
-                    p.name,
-                    p.regions.len(),
-                    plan.n_actors(),
-                    plan.legs.iter().map(|l| l.relay).collect::<Vec<_>>(),
-                );
-            }
-        }
-        // Netsim-modeled WAN: the transport owns the relay tree and the
-        // cross-stripe arrival reordering.
-        "sim" => {
-            mode = ExecMode::Pipelined;
-            let net = match &preset {
-                Some(p) => sparrowrl::transport::SimNetConfig::from_preset(p, cfg.seed),
-                None => sparrowrl::transport::SimNetConfig::single_region(
-                    cfg.n_actors,
-                    sparrowrl::netsim::Link::from_profile(&config::regions::CANADA),
-                    4,
-                    cfg.seed,
-                ),
-            };
-            println!(
-                "sim transport: {} region(s), stripes {:?}",
-                net.n_regions(),
-                net.streams
-            );
-            cfg.transport = sparrowrl::rt::TransportKind::Sim(net);
-        }
-        // Real loopback sockets with striped, optionally throttled
-        // segment push.
-        "tcp" => {
-            mode = ExecMode::Pipelined;
-            if preset.is_some() {
-                anyhow::bail!(
-                    "--transport tcp streams hub→actor directly; combine --wan with --transport sim"
-                );
-            }
-            let tc = sparrowrl::transport::TcpConfig {
-                streams: args.parse_or("tcp-streams", 2usize),
-                bits_per_s: args.get("tcp-bps").and_then(|s| s.parse::<f64>().ok()),
-                kill: None,
-            };
-            println!(
-                "tcp transport: {} stream(s)/actor over loopback{}",
-                tc.streams,
-                tc.bits_per_s
-                    .map(|b| format!(", throttled to {:.0} Mbit/s", b / 1e6))
-                    .unwrap_or_default(),
-            );
-            cfg.transport = sparrowrl::rt::TransportKind::Tcp(tc);
-        }
-        other => anyhow::bail!("unknown --transport {other} (inproc|sim|tcp)"),
+    let mut spec = RunSpec::model(&model)
+        .steps(args.parse_or("steps", 10u64))
+        .sft_steps(args.parse_or("sft-steps", 50u64))
+        .lr_sft(args.parse_or("lr-sft", 5e-3f32))
+        .lr_rl(args.parse_or("lr-rl", 1e-6f32))
+        .seed(args.parse_or("seed", 0u64))
+        .max_new_tokens(args.parse_or("max-new", 8usize))
+        .algorithm(
+            Algorithm::parse(&args.str_or("algorithm", "grpo"))
+                .ok_or_else(|| anyhow::anyhow!("bad --algorithm"))?,
+        )
+        .bench(
+            Benchmark::parse(&args.str_or("bench", "gsm8k"))
+                .ok_or_else(|| anyhow::anyhow!("bad --bench"))?,
+        );
+    if args.get("actors").is_some() {
+        spec = spec.actors(args.parse_or("actors", 2usize));
     }
+    if args.flag("pipelined") {
+        spec = spec.pipelined();
+    }
+    if args.flag("deterministic") {
+        spec = spec.deterministic();
+    }
+    let wan = args.str_or("wan", "");
+    if !wan.is_empty() {
+        spec = spec.wan(&wan);
+    }
+    let tname = args.str_or("transport", "inproc");
+    let mut backend = Backend::parse(&tname)
+        .ok_or_else(|| anyhow::anyhow!("unknown --transport {tname} (inproc|sim|tcp)"))?;
+    if let Backend::Tcp(tc) = &mut backend {
+        tc.streams = args.parse_or("tcp-streams", 2usize);
+        tc.bits_per_s = args.get("tcp-bps").and_then(|s| s.parse::<f64>().ok());
+    }
+    Ok(spec.transport(backend))
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let plan = train_spec(args)?.build()?;
+    for note in plan.notes() {
+        println!("note: {note}");
+    }
+    let cfg = plan.config();
     println!(
-        "training {model} with {} on {} ({} actors, {} SFT + {} RL steps, {} executor, {} transport)",
+        "training {} with {} on {} ({} actors, {} SFT + {} RL steps, {} executor, {} transport)",
+        cfg.model,
         cfg.algorithm.name(),
         cfg.bench.name(),
         cfg.n_actors,
         cfg.sft_steps,
         cfg.steps,
-        mode.name(),
+        plan.mode().name(),
         cfg.transport.name(),
     );
-    let report = run_local_mode(&cfg, mode)?;
+    // The CLI is just one subscriber of the session's typed event
+    // stream: per-step lines, failover notices, and the final report all
+    // come out of the same events a dashboard would consume.
+    let mut session = Session::start(&plan)?;
+    let report = loop {
+        match session.recv() {
+            Some(Event::StepCompleted(log)) => println!("{}", log.progress_line()),
+            Some(Event::Failover { actor, requeued }) => {
+                eprintln!("actor {actor} lost; {requeued} prompt(s) requeued to survivors")
+            }
+            Some(Event::Finished(report)) => break report,
+            // Warmup progress and per-version stream/commit events are
+            // summarized by the step line; skip them here.
+            Some(Event::SftStep { .. })
+            | Some(Event::DeltaStreamed { .. })
+            | Some(Event::Committed { .. }) => {}
+            None => {
+                return Err(session
+                    .join()
+                    .err()
+                    .unwrap_or_else(|| anyhow::anyhow!("session ended without a report")))
+            }
+        }
+    };
     println!(
         "\ndone: {} versions, mean rho {:.3}%, wall {:.1}s, hidden sync {:.0}%",
         report.final_version,
@@ -172,8 +151,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     // The cross-backend equivalence witness: identical runs (same seed,
     // --deterministic) print the same digest on every transport.
     if let Some(last) = report.steps.last() {
-        let hex: String = last.policy_checksum.iter().map(|b| format!("{b:02x}")).collect();
-        println!("final policy checksum: {hex}");
+        println!("final policy checksum: {}", last.checksum_hex());
     }
     if report.failovers > 0 {
         println!(

@@ -16,12 +16,13 @@
 //! same segment/reassembly/staging code paths, so bit-exactness of actor
 //! policies is asserted against the trainer's in both modes.
 
-use crate::actor::rollout::{generate_batch, SampleCfg};
+use crate::actor::rollout::SampleCfg;
 use crate::data::{Benchmark, Task};
 use crate::delta::ParamSet;
 use crate::ledger::LeasePolicy;
 use crate::metrics::Timeline;
-use crate::rt::pipeline::{run_with_compute, ExecMode};
+use crate::rt::compute::Compute;
+use crate::rt::pipeline::ExecMode;
 use crate::runtime::Engines;
 use crate::trainer::Algorithm;
 use crate::transport::api::SimNetConfig;
@@ -128,7 +129,8 @@ impl LocalRunConfig {
     }
 }
 
-/// Per-RL-step record (feeds Figure 4 and EXPERIMENTS.md).
+/// Per-RL-step record (feeds Figure 4, EXPERIMENTS.md, and the Session
+/// API's `Event::StepCompleted`).
 #[derive(Clone, Copy, Debug)]
 pub struct StepLog {
     pub step: u64,
@@ -148,7 +150,32 @@ pub struct StepLog {
     pub policy_checksum: [u8; 32],
 }
 
-/// Result of a local run.
+impl StepLog {
+    /// The committed policy's SHA-256 witness as lowercase hex — the
+    /// cross-backend equivalence digest every surface prints.
+    pub fn checksum_hex(&self) -> String {
+        crate::util::hex(&self.policy_checksum)
+    }
+
+    /// The canonical one-line progress rendering (the CLI's per-step
+    /// line and the runtime's `verbose` knob print exactly this).
+    pub fn progress_line(&self) -> String {
+        format!(
+            "step {:>3}  loss {:>8.4}  reward {:>5.3}  rho {:>7.4}%  payload {:>10}  ({}x smaller)  gen {:>5} tok",
+            self.step,
+            self.loss,
+            self.mean_reward,
+            self.rho * 100.0,
+            crate::util::fmt_bytes(self.payload_bytes),
+            self.dense_bytes / self.payload_bytes.max(1),
+            self.gen_tokens,
+        )
+    }
+}
+
+/// Result of a local run. Assembled from the session event stream (see
+/// `session::Event`), so report and events cannot disagree.
+#[derive(Clone)]
 pub struct RunReport {
     pub sft_losses: Vec<f32>,
     pub steps: Vec<StepLog>,
@@ -186,6 +213,11 @@ impl RunReport {
 }
 
 /// Run the full loop on PJRT artifacts with the chosen executor.
+///
+/// **Deprecated shim** (kept for one release): this is now a thin
+/// blocking wrapper over [`crate::session::Session`] — it spawns a
+/// session and immediately `join()`s it. New code should build a
+/// [`crate::session::RunSpec`] and subscribe to the typed event stream.
 pub fn run_local_mode(cfg: &LocalRunConfig, mode: ExecMode) -> Result<RunReport> {
     let spec = crate::config::model(&cfg.model)
         .with_context(|| format!("unknown model {}", cfg.model))?;
@@ -193,18 +225,21 @@ pub fn run_local_mode(cfg: &LocalRunConfig, mode: ExecMode) -> Result<RunReport>
         bail!("{} is analytic-only; pick a sparrow-* model", cfg.model);
     }
     let eng = Engines::load(&crate::runtime::artifacts_dir(), &cfg.model)?;
-    run_with_compute(cfg, &spec.layout, &eng, mode)
+    crate::session::Session::spawn(cfg.clone(), spec.layout.clone(), eng, mode)?.join()
 }
 
 /// Run the full loop with the phase-sequential executor. See module docs.
+///
+/// **Deprecated shim** — see [`run_local_mode`].
 pub fn run_local(cfg: &LocalRunConfig) -> Result<RunReport> {
     run_local_mode(cfg, ExecMode::Sequential)
 }
 
 /// Evaluate greedy accuracy of the current trainer policy on `n` fresh
-/// tasks (reward == 1 exact matches).
-pub fn evaluate(
-    eng: &Engines,
+/// tasks (reward == 1 exact matches). Works on any [`Compute`] backend
+/// (PJRT [`Engines`] or [`crate::rt::SyntheticCompute`]).
+pub fn evaluate<C: Compute>(
+    comp: &C,
     policy: &ParamSet,
     bench: Benchmark,
     n: usize,
@@ -212,7 +247,12 @@ pub fn evaluate(
     seed: u64,
 ) -> Result<f32> {
     let mut rng = Rng::new(seed);
-    let b_gen = eng.manifest.b_gen;
+    let b_gen = comp.shape().b_gen;
+    // A zero generation batch would make the chunking loop below spin
+    // forever claiming zero tasks per pass — reject it up front.
+    if b_gen == 0 {
+        bail!("compute backend reports b_gen == 0; cannot batch evaluation prompts");
+    }
     let mut correct = 0usize;
     let mut total = 0usize;
     let mut id = 1_000_000u64;
@@ -224,8 +264,7 @@ pub fn evaluate(
             })
             .collect();
         let prompts: Vec<Vec<i32>> = tasks.iter().map(|t| t.prompt_tokens()).collect();
-        let gens = generate_batch(
-            eng,
+        let gens = comp.generate(
             policy,
             &prompts,
             SampleCfg { temperature: 0.0, max_new_tokens: max_new },
@@ -239,4 +278,35 @@ pub fn evaluate(
         }
     }
     Ok(correct as f32 / total.max(1) as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::ModelLayout;
+    use crate::rt::SyntheticCompute;
+    use crate::runtime::TrainState;
+
+    fn policy() -> ParamSet {
+        let layout = ModelLayout::transformer("eval-t", 64, 16, 2, 32);
+        TrainState::init(&layout, &mut Rng::new(1)).to_policy()
+    }
+
+    #[test]
+    fn evaluate_bails_on_zero_gen_batch_instead_of_spinning() {
+        // Regression: b_gen == 0 used to make the chunking loop claim
+        // zero tasks per pass and never terminate.
+        let comp = SyntheticCompute::new(8, 0, 32);
+        let err = evaluate(&comp, &policy(), Benchmark::Gsm8k, 4, 4, 0)
+            .expect_err("b_gen == 0 must be rejected");
+        assert!(format!("{err:#}").contains("b_gen"), "{err:#}");
+    }
+
+    #[test]
+    fn evaluate_runs_on_synthetic_compute() {
+        let comp = SyntheticCompute::new(8, 4, 32);
+        // n > b_gen exercises the multi-batch path.
+        let acc = evaluate(&comp, &policy(), Benchmark::Gsm8k, 6, 4, 0).unwrap();
+        assert!((0.0..=1.0).contains(&acc));
+    }
 }

@@ -51,6 +51,7 @@ use crate::rt::local::{LocalRunConfig, RunReport, StepLog, TransportKind};
 use crate::rt::net::Msg;
 use crate::runtime::TrainState;
 use crate::scheduler::{Assignment, Scheduler, SchedulerConfig, VersionState};
+use crate::session::{Event as SessionEvent, ReportAssembler, RunTail};
 use crate::trainer::{group_advantages, stream_checkpoint, Rollout};
 use crate::transport::api::{
     ActorEndpoint, Closed, Event, HubEndpoint, InProcTransport, Polled, SimTransport, Transport,
@@ -61,6 +62,7 @@ use crate::util::Rng;
 use anyhow::{anyhow, bail, ensure, Result};
 use sha2::{Digest, Sha256};
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::{Duration, Instant};
 
 /// Geo-distribution wiring for the runtime: actors grouped into regions,
@@ -282,6 +284,13 @@ struct Hub<'a, C: Compute> {
     failures: u64,
     /// Prompts re-leased to survivors after a failure.
     requeued: u64,
+    /// Typed observation stream (the Session API's feed; the blocking
+    /// legacy wrapper folds it straight into a report). Called only from
+    /// the hub's thread.
+    sink: &'a mut (dyn FnMut(SessionEvent) + 'a),
+    /// Cooperative cancellation (`Session::abort`): checked at step
+    /// boundaries and every collect-loop poll tick.
+    cancel: &'a AtomicBool,
 }
 
 impl<'a, C: Compute> Hub<'a, C> {
@@ -291,6 +300,8 @@ impl<'a, C: Compute> Hub<'a, C> {
         comp: &'a C,
         state: TrainState,
         task_counter: u64,
+        sink: &'a mut (dyn FnMut(SessionEvent) + 'a),
+        cancel: &'a AtomicBool,
     ) -> Hub<'a, C> {
         let policy = state.to_policy();
         let mut sched = Scheduler::new(SchedulerConfig::default());
@@ -329,7 +340,21 @@ impl<'a, C: Compute> Hub<'a, C> {
             accum: vec![StepAccum::default(); cfg.steps as usize],
             failures: 0,
             requeued: 0,
+            sink,
+            cancel,
         }
+    }
+
+    fn emit(&mut self, ev: SessionEvent) {
+        (self.sink)(ev);
+    }
+
+    /// Bail out at a cancellation point if `Session::abort` fired.
+    fn check_cancel(&self) -> Result<()> {
+        if self.cancel.load(Ordering::Relaxed) {
+            bail!("{}", crate::session::ABORT_MSG);
+        }
+        Ok(())
     }
 
     fn now_s(&self) -> f64 {
@@ -469,6 +494,7 @@ impl<'a, C: Compute> Hub<'a, C> {
         let t0c = self.t0;
         let mut first_seg: Option<f64> = None;
         let mut last_seg = extract_start;
+        let mut n_segs: u64 = 0;
         let (ckpt, stats) = stream_checkpoint(
             self.layout,
             &self.policy,
@@ -480,6 +506,7 @@ impl<'a, C: Compute> Hub<'a, C> {
                 let now = t0c.elapsed().as_secs_f64();
                 first_seg.get_or_insert(now);
                 last_seg = now;
+                n_segs += 1;
                 sink(seg);
             },
         );
@@ -497,68 +524,88 @@ impl<'a, C: Compute> Hub<'a, C> {
         self.version_hash = hash;
         self.policy = new_policy;
 
-        let a = &mut self.accum[batch_step as usize];
-        a.loss = loss;
-        a.train_ms = train_ms;
-        a.extract_ms = extract_ms;
-        a.rho = rho;
-        a.payload_bytes = payload;
-        a.policy_checksum = policy_checksum(&self.policy);
+        {
+            let a = &mut self.accum[batch_step as usize];
+            a.loss = loss;
+            a.train_ms = train_ms;
+            a.extract_ms = extract_ms;
+            a.rho = rho;
+            a.payload_bytes = payload;
+        }
+        self.accum[batch_step as usize].policy_checksum = policy_checksum(&self.policy);
+        // The step's books are closed: generation landed during this
+        // loop iteration's overlap window, training/extraction just
+        // finished. Emit the observation events the report is later
+        // assembled from.
+        let log = self.step_log(batch_step);
+        self.emit(SessionEvent::DeltaStreamed {
+            version: self.version,
+            payload_bytes: payload,
+            stripes: n_segs,
+        });
+        self.emit(SessionEvent::Committed {
+            version: self.version,
+            checksum: log.policy_checksum,
+        });
+        self.emit(SessionEvent::StepCompleted(log));
         if self.cfg.verbose {
-            println!(
-                "step {:>3}  loss {:>8.4}  reward {:>5.3}  rho {:>7.4}%  payload {:>10}  ({}x smaller)  gen {:>5} tok",
-                batch_step,
-                a.loss,
-                a.mean_reward,
-                a.rho * 100.0,
-                crate::util::fmt_bytes(a.payload_bytes),
-                self.layout.dense_bytes_bf16() / a.payload_bytes.max(1),
-                a.gen_tokens,
-            );
+            println!("{}", log.progress_line());
         }
         Ok(())
     }
 
-    fn into_report(self, sft_losses: Vec<f32>, wall0: Instant) -> RunReport {
-        let dense = self.layout.dense_bytes_bf16();
-        let steps = self
-            .accum
-            .iter()
-            .enumerate()
-            .map(|(i, a)| StepLog {
-                step: i as u64,
-                loss: a.loss,
-                mean_reward: a.mean_reward,
-                rho: a.rho,
-                payload_bytes: a.payload_bytes,
-                dense_bytes: dense,
-                gen_tokens: a.gen_tokens,
-                extract_ms: a.extract_ms,
-                train_ms: a.train_ms,
-                rollout_ms: a.rollout_ms,
-                policy_checksum: a.policy_checksum,
-            })
-            .collect();
-        RunReport {
-            sft_losses,
-            steps,
-            final_version: self.version,
-            wall_s: wall0.elapsed().as_secs_f64(),
-            timeline: self.timeline,
-            failovers: self.failures,
-            requeued_prompts: self.requeued,
+    /// The per-step record for `step` as currently accumulated.
+    fn step_log(&self, step: u64) -> StepLog {
+        let a = &self.accum[step as usize];
+        StepLog {
+            step,
+            loss: a.loss,
+            mean_reward: a.mean_reward,
+            rho: a.rho,
+            payload_bytes: a.payload_bytes,
+            dense_bytes: self.layout.dense_bytes_bf16(),
+            gen_tokens: a.gen_tokens,
+            extract_ms: a.extract_ms,
+            train_ms: a.train_ms,
+            rollout_ms: a.rollout_ms,
+            policy_checksum: a.policy_checksum,
         }
     }
 }
 
-/// Run the full loop (SFT warmup + RL) on any [`Compute`] backend.
-/// `layout` must match the backend's parameter geometry.
+/// Run the full loop (SFT warmup + RL) on any [`Compute`] backend,
+/// blocking the calling thread. Legacy entry point: internally this is
+/// one `run_observed` pass whose events are folded straight into the
+/// report by the same assembler `Session::join` uses, so the blocking
+/// API and the streaming API can never report different runs.
+/// New code should prefer [`crate::session::Session`].
 pub fn run_with_compute<C: Compute>(
     cfg: &LocalRunConfig,
     layout: &ModelLayout,
     comp: &C,
     mode: ExecMode,
 ) -> Result<RunReport> {
+    let mut asm = ReportAssembler::default();
+    let never = AtomicBool::new(false);
+    let mut sink = |ev: SessionEvent| asm.record(&ev);
+    let tail = run_observed(cfg, layout, comp, mode, &mut sink, &never)?;
+    Ok(asm.finish(tail))
+}
+
+/// Run the full loop (SFT warmup + RL) on any [`Compute`] backend with a
+/// typed event sink and a cooperative cancellation flag — the engine
+/// under both [`run_with_compute`] and the Session API. `layout` must
+/// match the backend's parameter geometry. Every event is emitted from
+/// the calling (hub) thread; setting `cancel` makes the run bail with
+/// [`crate::session::ABORT_MSG`] at its next cancellation point.
+pub(crate) fn run_observed<'a, C: Compute>(
+    cfg: &'a LocalRunConfig,
+    layout: &'a ModelLayout,
+    comp: &'a C,
+    mode: ExecMode,
+    sink: &'a mut (dyn FnMut(SessionEvent) + 'a),
+    cancel: &'a AtomicBool,
+) -> Result<RunTail> {
     let wall0 = Instant::now();
     let shape = comp.shape();
     if cfg.group_size == 0 || cfg.group_size > shape.b_gen {
@@ -583,9 +630,11 @@ pub fn run_with_compute<C: Compute>(
     let mut state = TrainState::init(layout, &mut rng);
 
     // ---------------- SFT warmup: same train path, adv = 1 --------------
-    let mut sft_losses = Vec::new();
     let mut task_counter: u64 = 0;
-    for _ in 0..cfg.sft_steps {
+    for step in 0..cfg.sft_steps {
+        if cancel.load(Ordering::Relaxed) {
+            bail!("{}", crate::session::ABORT_MSG);
+        }
         let pairs: Vec<(Vec<i32>, Vec<i32>)> = (0..shape.b_train)
             .map(|_| {
                 task_counter += 1;
@@ -596,16 +645,20 @@ pub fn run_with_compute<C: Compute>(
         let batch = pack_batch(&pairs, shape.b_train, shape.max_seq);
         let adv = vec![1.0f32; shape.b_train];
         let loss = comp.train_step(&mut state, &batch.tokens, &batch.gen_mask, &adv, cfg.lr_sft)?;
-        sft_losses.push(loss);
+        sink(SessionEvent::SftStep { step, loss });
     }
 
     // ---------------- RL phase ------------------------------------------
-    let mut hub = Hub::new(cfg, layout, comp, state, task_counter);
+    let mut hub = Hub::new(cfg, layout, comp, state, task_counter, sink, cancel);
     match mode {
         ExecMode::Sequential => run_sequential(&mut hub)?,
         ExecMode::Pipelined => run_pipelined(&mut hub)?,
     }
-    Ok(hub.into_report(sft_losses, wall0))
+    Ok(RunTail {
+        final_version: hub.version,
+        wall_s: wall0.elapsed().as_secs_f64(),
+        timeline: hub.timeline,
+    })
 }
 
 /// Stream `D_{v}` into in-process actors and commit at their safe points
@@ -657,6 +710,7 @@ fn run_sequential<C: Compute>(hub: &mut Hub<C>) -> Result<()> {
         .collect();
     let mut pending: Option<(u64, Vec<Rollout>)> = None;
     for step in 0..hub.cfg.steps {
+        hub.check_cancel()?;
         let jobs = hub.plan_step(step)?;
         let phase_t = Instant::now();
         let mut batch: Vec<Rollout> = Vec::new();
@@ -933,6 +987,12 @@ fn broadcast_and_commit<C: Compute>(
 /// Collect-loop poll interval: the granularity of lease-expiry sweeps.
 const POLL_INTERVAL: Duration = Duration::from_millis(25);
 
+/// How long the hub waits for outstanding `Activated` acks once all
+/// generation results are in before declaring the holdouts partitioned
+/// (mirrors the 60 s membership-barrier deadline). Healthy acks arrive
+/// within milliseconds of the trailing safe point.
+const ACK_TIMEOUT: Duration = Duration::from_secs(60);
+
 /// One assignment's in-flight generation work, hub-side. `executing`
 /// starts as the original assignment and moves to a survivor on
 /// failover; the job (prompt order + RNG seed) never changes, so the
@@ -961,6 +1021,7 @@ fn transport_hub_loop<C: Compute>(hub: &mut Hub<C>, ep: &mut dyn HubEndpoint) ->
     let mut alive: BTreeSet<u32> = BTreeSet::new();
     let deadline = Instant::now() + Duration::from_secs(60);
     while alive.len() < n {
+        hub.check_cancel()?;
         match ep.poll(POLL_INTERVAL) {
             Polled::Event(Event::Msg { actor, msg: Msg::Hello { .. } }) => {
                 ensure!((actor as usize) < n, "hello from unknown actor {actor}");
@@ -981,6 +1042,7 @@ fn transport_hub_loop<C: Compute>(hub: &mut Hub<C>, ep: &mut dyn HubEndpoint) ->
 
     let mut last_batch: Option<(u64, Vec<Rollout>)> = None;
     for step in 0..hub.cfg.steps {
+        hub.check_cancel()?;
         // 1. Dispatch this step's generation on the stale policy. Every
         //    assigned actor already acked Activated(version), so per-actor
         //    control FIFO guarantees the job lands on an applied policy.
@@ -1066,7 +1128,15 @@ fn collect_step<C: Compute>(
         .enumerate()
         .flat_map(|(i, s)| s.job.pids.iter().map(move |&p| (p, i)))
         .collect();
+    // Ack-wait backstop: lease expiry only detects a silent partition
+    // while the actor still OWES leased work. Once every slot is done
+    // (or when none were dispatched — the epilogue commit) a partitioned
+    // actor holds no leases, so an unacked commit would otherwise poll
+    // forever. The grace clock starts at the first idle tick after
+    // generation completes, so slow generation never eats into it.
+    let mut ack_grace: Option<Instant> = None;
     while slots.iter().any(|s| !s.done) || !want_acks.is_empty() {
+        hub.check_cancel()?;
         match ep.poll(POLL_INTERVAL) {
             Polled::Event(Event::Msg { actor, msg }) => match msg {
                 Msg::RolloutResult { actor: ra, prompt_id, version, hash, reward, tokens } => {
@@ -1160,6 +1230,23 @@ fn collect_step<C: Compute>(
                 // clock this is the paper's implicit failure detector for
                 // partitioned (silent) actors.
                 expiry_sweep(hub, ep, alive, &mut want_acks, slots)?;
+                if slots.iter().all(|s| s.done) && !want_acks.is_empty() {
+                    let now = Instant::now();
+                    let deadline = *ack_grace.get_or_insert(now + ACK_TIMEOUT);
+                    if now >= deadline {
+                        for actor in want_acks.clone() {
+                            fail_actor(
+                                hub,
+                                ep,
+                                alive,
+                                &mut want_acks,
+                                slots,
+                                actor,
+                                "commit ack timeout (silent partition)",
+                            )?;
+                        }
+                    }
+                }
             }
             Polled::Closed => bail!("transport closed before step {step} completed"),
         }
@@ -1232,7 +1319,10 @@ fn fail_actor<C: Compute>(
     if hub.cfg.verbose {
         eprintln!("actor {actor} lost ({reason}); failing over");
     }
-    reissue_orphans(hub, ep, alive, slots, actor)
+    let requeued_before = hub.requeued;
+    reissue_orphans(hub, ep, alive, slots, actor)?;
+    hub.emit(SessionEvent::Failover { actor, requeued: hub.requeued - requeued_before });
+    Ok(())
 }
 
 /// Re-lease a lost actor's unfinished slots to the lowest-numbered

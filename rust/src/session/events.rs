@@ -1,0 +1,84 @@
+//! The typed event stream a live [`Session`](crate::session::Session)
+//! exposes, and the assembler that folds it back into a
+//! [`RunReport`] — the single source of truth for both: the report is
+//! *derived from* the events, so the two cannot disagree.
+
+use crate::rt::{RunReport, StepLog};
+use crate::metrics::Timeline;
+
+/// One observable moment of a running session, in emission order:
+/// `SftStep*` (warmup), then per RL version `DeltaStreamed` →
+/// `Committed` → `StepCompleted`, with `Failover` interleaved whenever an
+/// actor is lost, and `Finished` as the final event of a successful run.
+///
+/// All events are emitted by the trainer hub's thread; a `Session`
+/// delivers them through `recv()`/`try_iter()` on the caller's thread.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// One supervised warmup step completed.
+    SftStep { step: u64, loss: f32 },
+    /// A full RL step closed its books: generation, training, and the
+    /// delta extraction for the version it produced are all accounted.
+    StepCompleted(StepLog),
+    /// The fused extract→encode→segment pass shipped `D_{version}` into
+    /// the transport fan-out: `payload_bytes` on the wire, cut into
+    /// `stripes` segments (the stripe granularity backends reorder at).
+    DeltaStreamed { version: u64, payload_bytes: u64, stripes: u64 },
+    /// The trainer committed `version`; `checksum` is the SHA-256 policy
+    /// witness every actor must echo in its `Activated` ack.
+    Committed { version: u64, checksum: [u8; 32] },
+    /// Lease-driven failover absorbed a lost actor: `requeued` of its
+    /// leased prompts were re-issued to survivors (original order + RNG
+    /// seed, so regeneration is bit-identical).
+    Failover { actor: u32, requeued: u64 },
+    /// The run completed; the report was assembled from this very event
+    /// stream (by the crate-internal `ReportAssembler`).
+    Finished(RunReport),
+}
+
+/// What the runtime hands back besides the event stream: the bits of a
+/// [`RunReport`] that are not step-shaped (and so have no event).
+#[derive(Clone, Debug)]
+pub struct RunTail {
+    pub final_version: u64,
+    pub wall_s: f64,
+    pub timeline: Timeline,
+}
+
+/// Folds the event stream into a [`RunReport`]. Both the blocking legacy
+/// API (`rt::run_with_compute`) and `Session::join` build their reports
+/// through this type, so a report can never claim something its event
+/// stream did not say.
+#[derive(Default)]
+pub(crate) struct ReportAssembler {
+    sft_losses: Vec<f32>,
+    steps: Vec<StepLog>,
+    failovers: u64,
+    requeued: u64,
+}
+
+impl ReportAssembler {
+    pub(crate) fn record(&mut self, ev: &Event) {
+        match ev {
+            Event::SftStep { loss, .. } => self.sft_losses.push(*loss),
+            Event::StepCompleted(log) => self.steps.push(*log),
+            Event::Failover { requeued, .. } => {
+                self.failovers += 1;
+                self.requeued += *requeued;
+            }
+            Event::DeltaStreamed { .. } | Event::Committed { .. } | Event::Finished(_) => {}
+        }
+    }
+
+    pub(crate) fn finish(self, tail: RunTail) -> RunReport {
+        RunReport {
+            sft_losses: self.sft_losses,
+            steps: self.steps,
+            final_version: tail.final_version,
+            wall_s: tail.wall_s,
+            timeline: tail.timeline,
+            failovers: self.failovers,
+            requeued_prompts: self.requeued,
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! [`Session`]: a live handle on a running training loop.
+//!
+//! `Session::start` launches the executor on a background thread and
+//! returns immediately; the caller observes the run through the typed
+//! [`Event`] stream (`recv`/`try_recv`/`try_iter`), can `abort()` it
+//! cooperatively, and `join()`s for the final [`RunReport`] — which is
+//! assembled *from the event stream itself*, so the two cannot disagree.
+
+use super::events::{Event, ReportAssembler};
+use super::spec::RunPlan;
+use crate::delta::ModelLayout;
+use crate::rt::pipeline::run_observed;
+use crate::rt::{Compute, ExecMode, LocalRunConfig, RunReport};
+use crate::runtime::Engines;
+use anyhow::{anyhow, bail, Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// The message `abort()` makes the runtime fail with; surfaced through
+/// [`Session::join`]'s error.
+pub const ABORT_MSG: &str = "session aborted by caller";
+
+/// A running SparrowRL training session.
+///
+/// Threading model: one background thread runs the trainer hub (and, in
+/// pipelined mode, spawns the scoped actor-worker threads beneath it —
+/// they can never outlive the hub). Events flow hub → handle over an
+/// unbounded channel, so the runtime never blocks on a slow subscriber.
+/// Dropping an unjoined `Session` aborts the run and joins the thread —
+/// a session cannot leak a running loop.
+pub struct Session {
+    rx: Receiver<Event>,
+    cancel: Arc<AtomicBool>,
+    thread: Option<JoinHandle<Result<super::events::RunTail>>>,
+    asm: Option<ReportAssembler>,
+    finished: Option<RunReport>,
+    error: Option<anyhow::Error>,
+}
+
+impl Session {
+    /// Start a run on the plan's PJRT artifacts (`make artifacts`).
+    /// Synthetic plans have no artifacts — pair them with
+    /// [`Session::start_with_compute`].
+    pub fn start(plan: &RunPlan) -> Result<Session> {
+        if plan.synthetic {
+            bail!("a synthetic RunSpec has no artifacts; use Session::start_with_compute");
+        }
+        let spec = crate::config::model(&plan.cfg.model)
+            .with_context(|| format!("unknown model {}", plan.cfg.model))?;
+        let eng = Engines::load(&crate::runtime::artifacts_dir(), &plan.cfg.model)?;
+        Session::spawn(plan.cfg.clone(), spec.layout.clone(), eng, plan.mode)
+    }
+
+    /// Start a run on a caller-supplied compute backend (synthetic or
+    /// otherwise); `layout` must match the backend's parameter geometry.
+    pub fn start_with_compute<C: Compute + Send + 'static>(
+        plan: &RunPlan,
+        layout: ModelLayout,
+        comp: C,
+    ) -> Result<Session> {
+        Session::spawn(plan.cfg.clone(), layout, comp, plan.mode)
+    }
+
+    /// The engine under both `start` flavors and the deprecated
+    /// `rt::run_local_mode` shim.
+    pub(crate) fn spawn<C: Compute + Send + 'static>(
+        cfg: LocalRunConfig,
+        layout: ModelLayout,
+        comp: C,
+        mode: ExecMode,
+    ) -> Result<Session> {
+        let (tx, rx) = channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let cancel_flag = cancel.clone();
+        let thread = std::thread::Builder::new()
+            .name("sparrowrl-session".to_string())
+            .spawn(move || {
+                let mut sink = |ev: Event| {
+                    // A dropped handle only means nobody is listening;
+                    // the run itself is cancelled via the abort flag.
+                    let _ = tx.send(ev);
+                };
+                run_observed(&cfg, &layout, &comp, mode, &mut sink, &cancel_flag)
+            })
+            .map_err(|e| anyhow!("spawn session thread: {e}"))?;
+        Ok(Session {
+            rx,
+            cancel,
+            thread: Some(thread),
+            asm: Some(ReportAssembler::default()),
+            finished: None,
+            error: None,
+        })
+    }
+
+    /// Blocking: the next event, or `None` once the stream is exhausted
+    /// (after [`Event::Finished`] on success; immediately on failure —
+    /// the error then comes out of [`Session::join`]).
+    pub fn recv(&mut self) -> Option<Event> {
+        if self.finished.is_some() {
+            return None;
+        }
+        match self.rx.recv() {
+            Ok(ev) => {
+                if let Some(asm) = self.asm.as_mut() {
+                    asm.record(&ev);
+                }
+                Some(ev)
+            }
+            Err(_) => self.finish_event(),
+        }
+    }
+
+    /// Non-blocking: the next event if one is ready.
+    pub fn try_recv(&mut self) -> Option<Event> {
+        if self.finished.is_some() {
+            return None;
+        }
+        match self.rx.try_recv() {
+            Ok(ev) => {
+                if let Some(asm) = self.asm.as_mut() {
+                    asm.record(&ev);
+                }
+                Some(ev)
+            }
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => self.finish_event(),
+        }
+    }
+
+    /// Non-blocking drain of everything currently available.
+    pub fn try_iter(&mut self) -> impl Iterator<Item = Event> + '_ {
+        std::iter::from_fn(move || self.try_recv())
+    }
+
+    /// Ask the run to stop at its next cancellation point (step
+    /// boundaries and the collect loop's poll ticks). Cooperative and
+    /// idempotent; `join()` then returns the abort error.
+    pub fn abort(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    /// Wait for the run to finish and return its report (assembled from
+    /// the event stream). Consumes the session; events not yet consumed
+    /// are drained (and folded into the report) on the way.
+    pub fn join(mut self) -> Result<RunReport> {
+        while self.recv().is_some() {}
+        if let Some(report) = self.finished.take() {
+            return Ok(report);
+        }
+        Err(self
+            .error
+            .take()
+            .unwrap_or_else(|| anyhow!("session ended without a result")))
+    }
+
+    /// The channel closed: the runtime returned. Join the thread and
+    /// either synthesize the terminal [`Event::Finished`] (success) or
+    /// record the error for [`Session::join`].
+    fn finish_event(&mut self) -> Option<Event> {
+        let handle = self.thread.take()?;
+        match handle.join() {
+            Ok(Ok(tail)) => {
+                let report = self.asm.take()?.finish(tail);
+                self.finished = Some(report.clone());
+                Some(Event::Finished(report))
+            }
+            Ok(Err(e)) => {
+                self.error = Some(e);
+                None
+            }
+            Err(_) => {
+                self.error = Some(anyhow!("session thread panicked"));
+                None
+            }
+        }
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        if let Some(handle) = self.thread.take() {
+            self.cancel.store(true, Ordering::Relaxed);
+            let _ = handle.join();
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! Session API: the embeddable, observable entry point to the runtime.
+//!
+//! Two types replace the old batch `run_local_mode` surface:
+//!
+//! * [`RunSpec`] — a builder that owns **all** run configuration
+//!   (executor mode, transport backend, WAN distribution, lease policy,
+//!   determinism) and whose [`RunSpec::build`] performs every cross-field
+//!   legality check in one place: illegal combinations come back as typed
+//!   [`SpecError`]s, legal auto-coercions (wan → pipelined, wan → actor
+//!   count, wan → relay tree) as typed [`SpecNote`]s on the [`RunPlan`].
+//! * [`Session`] — [`Session::start`] (PJRT artifacts) or
+//!   [`Session::start_with_compute`] (any [`Compute`](crate::rt::Compute)
+//!   backend, e.g. [`SyntheticCompute`](crate::rt::SyntheticCompute))
+//!   runs the executor on a background thread and hands back a handle
+//!   exposing the typed [`Event`] stream, a cooperative
+//!   [`Session::abort`], and [`Session::join`]` -> RunReport` — the
+//!   report assembled *from* the event stream, so the two cannot
+//!   disagree.
+//!
+//! This is the seam every long-running deployment plugs into: live
+//! dashboards subscribe to `Event`s, controllers `abort()` and resubmit
+//! refined specs, and the CLI is just one more subscriber (see
+//! `main.rs::cmd_train`). Architecture notes: docs/ARCHITECTURE.md §2c.
+//!
+//! ```
+//! use sparrowrl::session::{RunSpec, SpecNote};
+//! use sparrowrl::rt::ExecMode;
+//! use sparrowrl::trainer::Algorithm;
+//!
+//! // A 2-region WAN run: the builder derives the fleet size and relay
+//! // tree from the preset and coerces the executor to pipelined —
+//! // surfacing both as typed notes instead of printing.
+//! let plan = RunSpec::model("sparrow-xs")
+//!     .algorithm(Algorithm::Grpo)
+//!     .steps(3)
+//!     .wan("wan-2")
+//!     .build()
+//!     .expect("legal spec");
+//! assert_eq!(plan.mode(), ExecMode::Pipelined);
+//! assert_eq!(plan.config().n_actors, 4); // wan-2: 2 regions x 2 actors
+//! assert!(plan
+//!     .notes()
+//!     .iter()
+//!     .any(|n| matches!(n, SpecNote::PipelinedCoerced { .. })));
+//!
+//! // Illegal combinations are typed errors, not deep-runtime bails:
+//! let err = RunSpec::model("sparrow-xs").wan("wan-2").actors(3).build();
+//! assert!(err.is_err());
+//! ```
+
+mod events;
+mod handle;
+mod spec;
+
+pub use events::Event;
+pub(crate) use events::{ReportAssembler, RunTail};
+pub use handle::{Session, ABORT_MSG};
+pub use spec::{Backend, RunPlan, RunSpec, SpecError, SpecNote};

@@ -1,0 +1,587 @@
+//! [`RunSpec`]: the validated run-specification builder.
+//!
+//! A `RunSpec` owns *all* run configuration — model, algorithm, executor
+//! mode, transport backend, WAN distribution, lease policy, determinism —
+//! and its [`RunSpec::build`] performs every cross-field legality check
+//! in one place, returning typed [`SpecError`]s for illegal combinations
+//! and typed [`SpecNote`]s for the auto-coercions that used to happen
+//! silently inside the CLI (wan → pipelined, wan → actor count, wan →
+//! relay tree). A successful build yields a [`RunPlan`]: the frozen,
+//! internally-consistent configuration a [`Session`](super::Session)
+//! starts from.
+
+use crate::config;
+use crate::data::Benchmark;
+use crate::ledger::LeasePolicy;
+use crate::netsim::Link;
+use crate::rt::{DistributionSpec, ExecMode, LocalRunConfig, TransportKind};
+use crate::trainer::Algorithm;
+use crate::transport::{DistributionPlan, SimNetConfig, TcpConfig};
+use std::fmt;
+
+/// Transport backend selection for a [`RunSpec`]. `Sim` synthesizes its
+/// WAN topology at build time (from the WAN preset when one is set, a
+/// single emulated Canada leg otherwise); `SimNet` supplies an explicit
+/// topology; `Tcp` runs real loopback sockets.
+#[derive(Clone, Debug, Default)]
+pub enum Backend {
+    /// In-process mailboxes (zero-copy; relay-routed under a WAN preset).
+    #[default]
+    InProc,
+    /// Netsim WAN model, topology derived at `build()`.
+    Sim,
+    /// Netsim WAN model over an explicit topology.
+    SimNet(SimNetConfig),
+    /// Real loopback sockets: framed, striped, optionally throttled.
+    Tcp(TcpConfig),
+}
+
+impl Backend {
+    /// The names `sparrowrl list` advertises and `--transport` accepts.
+    pub const NAMES: [&'static str; 3] = ["inproc", "sim", "tcp"];
+
+    /// Parse a CLI-style backend name (`tcp` gets the default config;
+    /// refine with [`Backend::Tcp`] directly for streams/throttle/kill).
+    pub fn parse(name: &str) -> Option<Backend> {
+        match name {
+            "inproc" => Some(Backend::InProc),
+            "sim" => Some(Backend::Sim),
+            "tcp" => Some(Backend::Tcp(TcpConfig::default())),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::InProc => "inproc",
+            Backend::Sim | Backend::SimNet(_) => "sim",
+            Backend::Tcp(_) => "tcp",
+        }
+    }
+}
+
+/// A combination of [`RunSpec`] fields that cannot run. Every variant
+/// corresponds to one legality rule that used to live as a `bail!` in
+/// `main.rs::cmd_train` or deep inside the runtime; `build()` rejects
+/// them all up front with an actionable message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpecError {
+    /// The model name matches no preset (`config::model`).
+    UnknownModel(String),
+    /// The model exists but is analytic-only (simulator sizing, never
+    /// compiled); pick a `sparrow-*` model or a synthetic spec.
+    AnalyticOnlyModel(String),
+    /// `wan(..)` named no `wan-1..wan-4` preset.
+    UnknownWanPreset(String),
+    /// A WAN preset fixes the fleet size; an explicit `actors(..)` call
+    /// conflicts with it.
+    ActorsConflictWithWan { preset: String, actors: usize },
+    /// `sequential()` was requested together with a feature that only the
+    /// pipelined executor implements.
+    SequentialConflict { feature: &'static str },
+    /// The Tcp backend streams hub→actor directly; WAN relay trees need
+    /// the sim backend.
+    TcpConflictsWithWan,
+    /// The Tcp backend cannot route an in-process relay tree.
+    TcpConflictsWithDistribution,
+    /// The sim backend owns its own relay tree; an explicit in-process
+    /// `distribution(..)` would be dead wiring.
+    SimConflictsWithDistribution,
+    /// An explicit `SimNet` topology and a WAN preset both describe the
+    /// fleet; pick one.
+    SimNetConflictsWithWan,
+    /// The explicit `SimNet` topology covers a different number of actors
+    /// than the spec runs.
+    SimTopologyMismatch { covers: usize, actors: usize },
+    /// The in-process `distribution(..)` covers a different number of
+    /// actors than the spec runs.
+    DistributionMismatch { covers: usize, actors: usize },
+    /// `distribution(..)` and `wan(..)` both describe a relay tree.
+    DistributionConflictsWithWan,
+    ZeroActors,
+    ZeroGroupSize,
+    ZeroSegmentBytes,
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecError::UnknownModel(m) => write!(f, "unknown model {m:?} (see `sparrowrl list`)"),
+            SpecError::AnalyticOnlyModel(m) => {
+                write!(f, "{m} is analytic-only; pick a sparrow-* model or RunSpec::synthetic()")
+            }
+            SpecError::UnknownWanPreset(w) => write!(f, "unknown WAN preset {w} (wan-1..wan-4)"),
+            SpecError::ActorsConflictWithWan { preset, actors } => write!(
+                f,
+                "{preset} sets the actor count from the preset; drop the explicit actors({actors})"
+            ),
+            SpecError::SequentialConflict { feature } => write!(
+                f,
+                "the sequential reference executor does not support {feature}; drop sequential() \
+                 or the conflicting option"
+            ),
+            SpecError::TcpConflictsWithWan => write!(
+                f,
+                "the tcp backend streams hub→actor directly; combine wan(..) with the sim backend"
+            ),
+            SpecError::TcpConflictsWithDistribution => write!(
+                f,
+                "the tcp backend cannot route an in-process relay tree; use inproc or sim"
+            ),
+            SpecError::SimConflictsWithDistribution => write!(
+                f,
+                "the sim backend owns the relay tree; drop the explicit distribution(..)"
+            ),
+            SpecError::SimNetConflictsWithWan => write!(
+                f,
+                "an explicit SimNet topology and a wan(..) preset both describe the fleet; pick one"
+            ),
+            SpecError::SimTopologyMismatch { covers, actors } => write!(
+                f,
+                "sim transport topology covers {covers} actors but the spec runs {actors}"
+            ),
+            SpecError::DistributionMismatch { covers, actors } => write!(
+                f,
+                "distribution spec covers {covers} actors but the spec runs {actors}"
+            ),
+            SpecError::DistributionConflictsWithWan => write!(
+                f,
+                "wan(..) derives the relay tree itself; drop the explicit distribution(..)"
+            ),
+            SpecError::ZeroActors => write!(f, "need at least one actor"),
+            SpecError::ZeroGroupSize => write!(f, "group_size must be at least 1"),
+            SpecError::ZeroSegmentBytes => write!(f, "segment_bytes must be at least 1"),
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// A legal auto-coercion `build()` performed. These used to be silent (or
+/// `println!`ed) inside the CLI; a typed note lets any caller surface
+/// them however it likes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpecNote {
+    /// A feature that only the pipelined executor implements was selected
+    /// without an explicit mode, so the plan runs pipelined.
+    PipelinedCoerced { cause: &'static str },
+    /// The WAN preset fixed the fleet size.
+    WanSetsActorCount { preset: String, actors: usize },
+    /// The WAN preset became an in-process relay tree (InProc backend):
+    /// the hub streams each segment once per region, relays forward.
+    WanRelayTree { preset: String, regions: usize, relays: Vec<usize> },
+}
+
+impl fmt::Display for SpecNote {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecNote::PipelinedCoerced { cause } => {
+                write!(f, "{cause} implies the pipelined executor")
+            }
+            SpecNote::WanSetsActorCount { preset, actors } => {
+                write!(f, "{preset} sets the fleet to {actors} actors")
+            }
+            SpecNote::WanRelayTree { preset, regions, relays } => {
+                write!(f, "{preset}: {regions} region(s) as an in-process relay tree, relays {relays:?}")
+            }
+        }
+    }
+}
+
+/// Builder for a validated run. Construct with [`RunSpec::model`] (a
+/// runnable `sparrow-*` preset, executed through PJRT artifacts) or
+/// [`RunSpec::synthetic`] (artifact-free, paired with a caller-supplied
+/// compute backend at start), chain setters, then [`RunSpec::build`].
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    model: String,
+    synthetic: bool,
+    algorithm: Algorithm,
+    bench: Benchmark,
+    actors: Option<usize>,
+    group_size: usize,
+    steps: u64,
+    sft_steps: u64,
+    lr_sft: f32,
+    lr_rl: f32,
+    max_new_tokens: usize,
+    temperature: f32,
+    segment_bytes: usize,
+    seed: u64,
+    verbose: bool,
+    deterministic: bool,
+    wall_leases: bool,
+    lease: LeasePolicy,
+    mode: Option<ExecMode>,
+    wan: Option<String>,
+    backend: Backend,
+    distribution: Option<DistributionSpec>,
+}
+
+impl RunSpec {
+    fn defaults(model: &str, synthetic: bool) -> RunSpec {
+        RunSpec {
+            model: model.to_string(),
+            synthetic,
+            algorithm: Algorithm::Grpo,
+            bench: Benchmark::Gsm8k,
+            actors: None,
+            group_size: 4,
+            steps: 5,
+            sft_steps: 30,
+            lr_sft: 5e-3,
+            lr_rl: 1e-6,
+            max_new_tokens: 8,
+            temperature: 0.8,
+            segment_bytes: 16 << 10,
+            seed: 0,
+            verbose: false,
+            deterministic: false,
+            wall_leases: false,
+            lease: LeasePolicy::default(),
+            mode: None,
+            wan: None,
+            backend: Backend::InProc,
+            distribution: None,
+        }
+    }
+
+    /// Spec for a runnable model preset (validated at `build()`).
+    pub fn model(name: &str) -> RunSpec {
+        RunSpec::defaults(name, false)
+    }
+
+    /// Spec for an artifact-free run on a caller-supplied [`Compute`]
+    /// backend (`Session::start_with_compute`); skips the model lookup.
+    ///
+    /// [`Compute`]: crate::rt::Compute
+    pub fn synthetic() -> RunSpec {
+        RunSpec::defaults("synthetic", true)
+    }
+
+    pub fn algorithm(mut self, a: Algorithm) -> RunSpec {
+        self.algorithm = a;
+        self
+    }
+
+    pub fn bench(mut self, b: Benchmark) -> RunSpec {
+        self.bench = b;
+        self
+    }
+
+    /// Fleet size. Conflicts with [`RunSpec::wan`], which derives it.
+    pub fn actors(mut self, n: usize) -> RunSpec {
+        self.actors = Some(n);
+        self
+    }
+
+    /// Rollout group size per prompt (GRPO's G).
+    pub fn group_size(mut self, g: usize) -> RunSpec {
+        self.group_size = g;
+        self
+    }
+
+    /// RL steps to run.
+    pub fn steps(mut self, s: u64) -> RunSpec {
+        self.steps = s;
+        self
+    }
+
+    /// Supervised warmup steps before RL.
+    pub fn sft_steps(mut self, s: u64) -> RunSpec {
+        self.sft_steps = s;
+        self
+    }
+
+    pub fn lr_sft(mut self, lr: f32) -> RunSpec {
+        self.lr_sft = lr;
+        self
+    }
+
+    pub fn lr_rl(mut self, lr: f32) -> RunSpec {
+        self.lr_rl = lr;
+        self
+    }
+
+    pub fn max_new_tokens(mut self, n: usize) -> RunSpec {
+        self.max_new_tokens = n;
+        self
+    }
+
+    pub fn temperature(mut self, t: f32) -> RunSpec {
+        self.temperature = t;
+        self
+    }
+
+    /// Delta wire-segment size (smaller = more mid-generation staging).
+    pub fn segment_bytes(mut self, b: usize) -> RunSpec {
+        self.segment_bytes = b;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> RunSpec {
+        self.seed = s;
+        self
+    }
+
+    /// Print per-step progress lines from inside the runtime (the event
+    /// stream is the richer interface; this mirrors the legacy knob).
+    pub fn verbose(mut self) -> RunSpec {
+        self.verbose = true;
+        self
+    }
+
+    /// Deterministic virtual time: a seed fully determines the run and
+    /// all executors/backends commit bit-identical policies.
+    pub fn deterministic(mut self) -> RunSpec {
+        self.deterministic = true;
+        self
+    }
+
+    /// Keep wall-clock leases even under `deterministic` (stalls still
+    /// time out; the fault-tolerance configuration).
+    pub fn wall_leases(mut self) -> RunSpec {
+        self.wall_leases = true;
+        self
+    }
+
+    /// Job-ledger lease policy override.
+    pub fn lease(mut self, p: LeasePolicy) -> RunSpec {
+        self.lease = p;
+        self
+    }
+
+    /// Overlapped one-step async executor.
+    pub fn pipelined(self) -> RunSpec {
+        self.mode(ExecMode::Pipelined)
+    }
+
+    /// Phase-sequential reference executor (rejects pipelined-only
+    /// features at `build()` instead of silently coercing).
+    pub fn sequential(self) -> RunSpec {
+        self.mode(ExecMode::Sequential)
+    }
+
+    /// Explicit executor choice (programmatic form of
+    /// [`pipelined`](RunSpec::pipelined)/[`sequential`](RunSpec::sequential)).
+    pub fn mode(mut self, m: ExecMode) -> RunSpec {
+        self.mode = Some(m);
+        self
+    }
+
+    /// Multi-region WAN preset (`wan-1`..`wan-4`): derives the fleet
+    /// size, the relay tree (InProc) or netsim topology (Sim), and
+    /// implies the pipelined executor.
+    pub fn wan(mut self, preset: &str) -> RunSpec {
+        self.wan = Some(preset.to_string());
+        self
+    }
+
+    /// Transport backend (see [`Backend`]).
+    pub fn transport(mut self, b: Backend) -> RunSpec {
+        self.backend = b;
+        self
+    }
+
+    /// Explicit in-process relay-tree wiring (tests / custom topologies;
+    /// [`RunSpec::wan`] derives this automatically).
+    pub fn distribution(mut self, d: DistributionSpec) -> RunSpec {
+        self.distribution = Some(d);
+        self
+    }
+
+    /// Validate every cross-field rule and freeze the configuration.
+    /// Illegal combinations return a typed [`SpecError`]; legal
+    /// auto-coercions are recorded as [`SpecNote`]s on the plan.
+    pub fn build(self) -> Result<RunPlan, SpecError> {
+        let mut notes = Vec::new();
+
+        // -- model ---------------------------------------------------------
+        if !self.synthetic {
+            match config::model(&self.model) {
+                None => return Err(SpecError::UnknownModel(self.model.clone())),
+                Some(spec) if !spec.runnable => {
+                    return Err(SpecError::AnalyticOnlyModel(self.model.clone()))
+                }
+                Some(_) => {}
+            }
+        }
+        if self.group_size == 0 {
+            return Err(SpecError::ZeroGroupSize);
+        }
+        if self.segment_bytes == 0 {
+            return Err(SpecError::ZeroSegmentBytes);
+        }
+
+        // -- WAN preset → fleet size --------------------------------------
+        let preset = match &self.wan {
+            Some(name) => Some(
+                config::wan_preset(name)
+                    .ok_or_else(|| SpecError::UnknownWanPreset(name.clone()))?,
+            ),
+            None => None,
+        };
+        if let (Some(p), Some(n)) = (&preset, self.actors) {
+            return Err(SpecError::ActorsConflictWithWan {
+                preset: p.name.to_string(),
+                actors: n,
+            });
+        }
+        let n_actors = match (&preset, self.actors) {
+            (Some(p), _) => {
+                notes.push(SpecNote::WanSetsActorCount {
+                    preset: p.name.to_string(),
+                    actors: p.n_actors(),
+                });
+                p.n_actors()
+            }
+            (None, Some(n)) => n,
+            (None, None) => 2,
+        };
+        if n_actors == 0 {
+            return Err(SpecError::ZeroActors);
+        }
+
+        // -- executor mode: explicit wins, features coerce ----------------
+        let needs_pipeline: Option<&'static str> = if preset.is_some() {
+            Some("a WAN preset")
+        } else {
+            match &self.backend {
+                Backend::Sim | Backend::SimNet(_) => Some("the sim transport"),
+                Backend::Tcp(_) => Some("the tcp transport"),
+                Backend::InProc => None,
+            }
+        };
+        let mode = match (self.mode, needs_pipeline) {
+            (Some(ExecMode::Sequential), Some(feature)) => {
+                return Err(SpecError::SequentialConflict { feature })
+            }
+            (Some(m), _) => m,
+            (None, Some(cause)) => {
+                notes.push(SpecNote::PipelinedCoerced { cause });
+                ExecMode::Pipelined
+            }
+            (None, None) => ExecMode::Sequential,
+        };
+
+        // -- distribution tree --------------------------------------------
+        let mut distribution = self.distribution;
+        if let Some(spec) = &distribution {
+            if preset.is_some() {
+                return Err(SpecError::DistributionConflictsWithWan);
+            }
+            if !spec.is_flat() && spec.region_of.len() != n_actors {
+                return Err(SpecError::DistributionMismatch {
+                    covers: spec.region_of.len(),
+                    actors: n_actors,
+                });
+            }
+        }
+
+        // -- transport backend --------------------------------------------
+        let transport = match self.backend {
+            Backend::InProc => {
+                if let Some(p) = &preset {
+                    let plan = DistributionPlan::from_preset(p, 1 << 20);
+                    notes.push(SpecNote::WanRelayTree {
+                        preset: p.name.to_string(),
+                        regions: p.regions.len(),
+                        relays: plan.legs.iter().map(|l| l.relay).collect(),
+                    });
+                    distribution = Some(DistributionSpec::from_plan(&plan));
+                }
+                TransportKind::InProc
+            }
+            Backend::Sim => {
+                if distribution.is_some() {
+                    return Err(SpecError::SimConflictsWithDistribution);
+                }
+                let net = match &preset {
+                    Some(p) => SimNetConfig::from_preset(p, self.seed),
+                    None => SimNetConfig::single_region(
+                        n_actors,
+                        Link::from_profile(&config::regions::CANADA),
+                        4,
+                        self.seed,
+                    ),
+                };
+                TransportKind::Sim(net)
+            }
+            Backend::SimNet(net) => {
+                if preset.is_some() {
+                    return Err(SpecError::SimNetConflictsWithWan);
+                }
+                if distribution.is_some() {
+                    return Err(SpecError::SimConflictsWithDistribution);
+                }
+                if net.region_of.len() != n_actors {
+                    return Err(SpecError::SimTopologyMismatch {
+                        covers: net.region_of.len(),
+                        actors: n_actors,
+                    });
+                }
+                TransportKind::Sim(net)
+            }
+            Backend::Tcp(tc) => {
+                if preset.is_some() {
+                    return Err(SpecError::TcpConflictsWithWan);
+                }
+                if distribution.as_ref().map_or(false, |d| !d.is_flat()) {
+                    return Err(SpecError::TcpConflictsWithDistribution);
+                }
+                TransportKind::Tcp(tc)
+            }
+        };
+
+        let cfg = LocalRunConfig {
+            model: self.model,
+            algorithm: self.algorithm,
+            bench: self.bench,
+            n_actors,
+            group_size: self.group_size,
+            steps: self.steps,
+            sft_steps: self.sft_steps,
+            lr_sft: self.lr_sft,
+            lr_rl: self.lr_rl,
+            max_new_tokens: self.max_new_tokens,
+            temperature: self.temperature,
+            segment_bytes: self.segment_bytes,
+            seed: self.seed,
+            verbose: self.verbose,
+            deterministic: self.deterministic,
+            distribution,
+            transport,
+            lease: self.lease,
+            wall_leases: self.wall_leases,
+        };
+        Ok(RunPlan { cfg, mode, notes, synthetic: self.synthetic })
+    }
+}
+
+/// A frozen, validated run configuration: what [`RunSpec::build`]
+/// produces and [`Session::start`](super::Session::start) consumes.
+#[derive(Clone, Debug)]
+pub struct RunPlan {
+    pub(crate) cfg: LocalRunConfig,
+    pub(crate) mode: ExecMode,
+    notes: Vec<SpecNote>,
+    pub(crate) synthetic: bool,
+}
+
+impl RunPlan {
+    /// The resolved low-level configuration (read-only: the builder is
+    /// the only way to construct one through this module).
+    pub fn config(&self) -> &LocalRunConfig {
+        &self.cfg
+    }
+
+    /// The executor the plan runs under (explicit choice or coercion).
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    /// Auto-coercions `build()` performed, for surfacing to users.
+    pub fn notes(&self) -> &[SpecNote] {
+        &self.notes
+    }
+}

@@ -182,9 +182,27 @@ struct InProcHub {
     /// Relay wiring: flat = hub pushes to everyone; tree = one push per
     /// region (the relay) with direct-fetch fallback for its peers.
     spec: DistributionSpec,
+    /// Global actor indices per region (relay first), precomputed once —
+    /// the membership is fixed for the run and `broadcast_seg` sits on
+    /// the per-segment delta hot path.
+    region_members: Vec<Vec<usize>>,
 }
 
 impl InProcHub {
+    fn new(to: Vec<Option<Sender<Msg>>>, events: Receiver<Event>, spec: DistributionSpec) -> InProcHub {
+        let region_members: Vec<Vec<usize>> = (0..spec.n_regions())
+            .map(|region| {
+                spec.region_of
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &r)| r == region)
+                    .map(|(i, _)| i)
+                    .collect()
+            })
+            .collect();
+        InProcHub { to, events, spec, region_members }
+    }
+
     fn seg_to(&self, actor: usize, seg: &Segment) -> bool {
         match self.to.get(actor).and_then(|t| t.as_ref()) {
             Some(tx) => tx.send(Msg::Seg(seg.clone())).is_ok(),
@@ -219,15 +237,7 @@ impl HubEndpoint for InProcHub {
         // queued in the dropped mailbox — the executor therefore treats a
         // lost relay as fatal (`rt/pipeline.rs` `fail_actor`) rather than
         // risking a stranded region.
-        for region in 0..self.spec.n_regions() {
-            let members: Vec<usize> = self
-                .spec
-                .region_of
-                .iter()
-                .enumerate()
-                .filter(|&(_, &r)| r == region)
-                .map(|(i, _)| i)
-                .collect();
+        for members in &self.region_members {
             let Some(&relay) = members.first() else { continue };
             if !self.seg_to(relay, &seg) {
                 for &peer in &members[1..] {
@@ -306,7 +316,7 @@ impl Transport for InProcTransport {
         runner: ActorRunner<'env>,
     ) -> Result<Box<dyn HubEndpoint + 'env>> {
         let (to, events) = launch_workers(scope, n, runner, &self.spec);
-        Ok(Box::new(InProcHub { to, events, spec: self.spec.clone() }))
+        Ok(Box::new(InProcHub::new(to, events, self.spec.clone())))
     }
 }
 
@@ -478,7 +488,7 @@ impl Transport for SimTransport {
         // member sees the relay-leg order), so workers get no forwards
         // and the inner hub is flat.
         let (to, events) = launch_workers(scope, n, runner, &DistributionSpec::default());
-        let inner = InProcHub { to, events, spec: DistributionSpec::default() };
+        let inner = InProcHub::new(to, events, DistributionSpec::default());
         Ok(Box::new(SimHub { inner, net: self.net.clone(), buf: Vec::new(), flushed: 0 }))
     }
 }

@@ -15,8 +15,10 @@
 //! Failure semantics are real: a crashed actor's sockets reset, the
 //! hub's reader surfaces [`Event::Down`], and the executor's lease
 //! machinery requeues its prompts — no global restart. A *partitioned*
-//! actor (sockets up, silent) is caught by lease expiry alone. Both are
-//! injectable via [`KillSpec`] for the fault-tolerance suite.
+//! actor (sockets up, silent) is caught by lease expiry while it owes
+//! leased work, and by the hub's commit-ack timeout once it owes only an
+//! ack. Both are injectable via [`KillSpec`] for the fault-tolerance
+//! suite.
 
 use crate::rt::net::{read_msg, write_msg, Msg, Throttle};
 use crate::transport::api::{ActorEndpoint, ActorRunner, Closed, Event, HubEndpoint, Polled, Transport};

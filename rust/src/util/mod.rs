@@ -16,6 +16,18 @@ pub use bf16::Bf16;
 pub use ema::Ema;
 pub use rng::Rng;
 
+/// Lowercase hex rendering of a byte string (checksum display). The one
+/// place checksum formatting lives — `StepLog::checksum_hex`, the CLI's
+/// equivalence-witness line, and the short checkpoint-hash display all
+/// route through here.
+pub fn hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
 /// Format a byte count with binary-ish human units (as the paper does: MB).
 pub fn fmt_bytes(b: u64) -> String {
     const MB: f64 = 1e6;
@@ -48,6 +60,13 @@ pub fn fmt_secs(s: f64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn hex_lowercase_two_digits_per_byte() {
+        assert_eq!(hex(&[]), "");
+        assert_eq!(hex(&[0x00, 0xab, 0xff, 0x07]), "00abff07");
+        assert_eq!(hex(&[0u8; 32]).len(), 64);
+    }
 
     #[test]
     fn fmt_bytes_units() {

@@ -4,34 +4,37 @@
 //! per-step rho / payload bytes, and the same final version under both
 //! executors — and the runtime's internal bit-exactness assertion (actor
 //! policy == trainer policy at every committed version) must hold across
-//! threads. Runs on the synthetic compute backend, so no PJRT artifacts
-//! are needed.
+//! threads. Runs through the Session API on the synthetic compute
+//! backend, so no PJRT artifacts are needed.
 
 use sparrowrl::delta::ModelLayout;
 use sparrowrl::metrics::SpanKind;
-use sparrowrl::rt::{run_with_compute, ExecMode, LocalRunConfig, RunReport, SyntheticCompute};
+use sparrowrl::rt::{ExecMode, RunReport, SyntheticCompute};
+use sparrowrl::session::{RunSpec, Session};
 use std::time::Duration;
 
 fn layout() -> ModelLayout {
     ModelLayout::transformer("syn-eq", 256, 64, 2, 128)
 }
 
-fn config(n_actors: usize, steps: u64, seed: u64) -> LocalRunConfig {
-    let mut cfg = LocalRunConfig::quick("synthetic");
-    cfg.n_actors = n_actors;
-    cfg.steps = steps;
-    cfg.sft_steps = 3;
-    cfg.group_size = 2;
-    cfg.max_new_tokens = 5;
-    cfg.lr_rl = 1e-2; // large enough that every step flips bf16 bits
-    cfg.segment_bytes = 256; // many segments per delta: real mid-gen staging
-    cfg.seed = seed;
-    cfg.deterministic = true;
-    cfg
+fn config(n_actors: usize, steps: u64, seed: u64) -> RunSpec {
+    RunSpec::synthetic()
+        .actors(n_actors)
+        .steps(steps)
+        .sft_steps(3)
+        .group_size(2)
+        .max_new_tokens(5)
+        .lr_rl(1e-2) // large enough that every step flips bf16 bits
+        .segment_bytes(256) // many segments per delta: real mid-gen staging
+        .seed(seed)
+        .deterministic()
 }
 
-fn run(cfg: &LocalRunConfig, comp: &SyntheticCompute, mode: ExecMode) -> RunReport {
-    run_with_compute(cfg, &layout(), comp, mode)
+fn run(spec: &RunSpec, comp: &SyntheticCompute, mode: ExecMode) -> RunReport {
+    let plan = spec.clone().mode(mode).build().expect("valid spec");
+    Session::start_with_compute(&plan, layout(), comp.clone())
+        .expect("start session")
+        .join()
         .unwrap_or_else(|e| panic!("{} run failed: {e:#}", mode.name()))
 }
 
@@ -60,7 +63,7 @@ fn pipelined_matches_sequential_bitwise() {
     let cfg = config(2, 4, 7);
     let seq = run(&cfg, &comp, ExecMode::Sequential);
     let pip = run(&cfg, &comp, ExecMode::Pipelined);
-    assert_eq!(seq.final_version, cfg.steps);
+    assert_eq!(seq.final_version, 4);
     assert!(seq.steps.iter().all(|s| s.rho > 0.0), "every step changed the policy");
     assert!(seq.steps.iter().all(|s| s.payload_bytes > 0));
     assert_equivalent(&seq, &pip);
@@ -108,8 +111,16 @@ fn pipelined_executor_overlaps_generation_with_sync() {
     // sequential reference must hide none.
     let comp = SyntheticCompute::new(16, 8, 64)
         .with_delays(Duration::from_millis(10), Duration::from_millis(8));
-    let mut cfg = config(2, 4, 3);
-    cfg.deterministic = false; // real clocks: this is a timing property
+    // Real clocks (no .deterministic()): this is a timing property.
+    let cfg = RunSpec::synthetic()
+        .actors(2)
+        .steps(4)
+        .sft_steps(3)
+        .group_size(2)
+        .max_new_tokens(5)
+        .lr_rl(1e-2)
+        .segment_bytes(256)
+        .seed(3);
     let sync = [SpanKind::Train, SpanKind::Extract];
     let seq = run(&cfg, &comp, ExecMode::Sequential);
     let pip = run(&cfg, &comp, ExecMode::Pipelined);

@@ -1,0 +1,370 @@
+//! Session API acceptance suite:
+//!
+//! (a) every illegal `RunSpec` combination returns its typed `SpecError`
+//!     (the validation matrix that used to live as scattered `bail!`s);
+//! (b) the typed event stream and the `RunReport` agree exactly — same
+//!     step logs, same checksums, same failover totals — because the
+//!     report is assembled *from* the events;
+//! (c) `abort()` mid-run tears the session down promptly with no wedged
+//!     threads;
+//! (d) the `Session` path commits bit-identical checksums to the legacy
+//!     blocking API under `deterministic`.
+
+use sparrowrl::delta::ModelLayout;
+use sparrowrl::netsim::Link;
+use sparrowrl::rt::{run_with_compute, DistributionSpec, ExecMode, SyntheticCompute};
+use sparrowrl::session::{Backend, Event, RunSpec, Session, SpecError, SpecNote};
+use sparrowrl::transport::{SimNetConfig, TcpConfig};
+use std::time::{Duration, Instant};
+
+fn layout() -> ModelLayout {
+    ModelLayout::transformer("syn-sess", 256, 64, 2, 128)
+}
+
+fn comp() -> SyntheticCompute {
+    SyntheticCompute::new(16, 8, 64)
+}
+
+fn base_spec(steps: u64, seed: u64) -> RunSpec {
+    RunSpec::synthetic()
+        .actors(2)
+        .steps(steps)
+        .sft_steps(2)
+        .group_size(2)
+        .max_new_tokens(5)
+        .lr_rl(1e-2)
+        .segment_bytes(256)
+        .seed(seed)
+        .deterministic()
+}
+
+fn sim_net(n_actors: usize) -> SimNetConfig {
+    SimNetConfig::single_region(
+        n_actors,
+        Link::from_profile(&sparrowrl::config::regions::CANADA),
+        4,
+        0,
+    )
+}
+
+// ---------------------------------------------------------------------
+// (a) spec-validation matrix
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_illegal_spec_combination_returns_its_typed_error() {
+    let flat_tcp = Backend::Tcp(TcpConfig::default());
+    let cases: Vec<(RunSpec, SpecError)> = vec![
+        (RunSpec::model("gpt-17t"), SpecError::UnknownModel("gpt-17t".into())),
+        (RunSpec::model("qwen3-8b"), SpecError::AnalyticOnlyModel("qwen3-8b".into())),
+        (RunSpec::synthetic().wan("wan-9"), SpecError::UnknownWanPreset("wan-9".into())),
+        (
+            RunSpec::synthetic().wan("wan-2").actors(3),
+            SpecError::ActorsConflictWithWan { preset: "wan-2".into(), actors: 3 },
+        ),
+        (
+            RunSpec::synthetic().sequential().wan("wan-2"),
+            SpecError::SequentialConflict { feature: "a WAN preset" },
+        ),
+        (
+            RunSpec::synthetic().sequential().transport(Backend::Sim),
+            SpecError::SequentialConflict { feature: "the sim transport" },
+        ),
+        (
+            RunSpec::synthetic().sequential().transport(flat_tcp.clone()),
+            SpecError::SequentialConflict { feature: "the tcp transport" },
+        ),
+        (
+            RunSpec::synthetic().pipelined().wan("wan-2").transport(flat_tcp.clone()),
+            SpecError::TcpConflictsWithWan,
+        ),
+        (
+            RunSpec::synthetic()
+                .pipelined()
+                .actors(2)
+                .distribution(DistributionSpec { region_of: vec![0, 1] })
+                .transport(flat_tcp),
+            SpecError::TcpConflictsWithDistribution,
+        ),
+        (
+            RunSpec::synthetic()
+                .pipelined()
+                .actors(2)
+                .distribution(DistributionSpec { region_of: vec![0, 1] })
+                .transport(Backend::Sim),
+            SpecError::SimConflictsWithDistribution,
+        ),
+        (
+            RunSpec::synthetic().pipelined().wan("wan-2").transport(Backend::SimNet(
+                sim_net(4),
+            )),
+            SpecError::SimNetConflictsWithWan,
+        ),
+        (
+            RunSpec::synthetic().pipelined().actors(3).transport(Backend::SimNet(
+                sim_net(2),
+            )),
+            SpecError::SimTopologyMismatch { covers: 2, actors: 3 },
+        ),
+        (
+            RunSpec::synthetic().actors(3).distribution(DistributionSpec {
+                region_of: vec![0, 1],
+            }),
+            SpecError::DistributionMismatch { covers: 2, actors: 3 },
+        ),
+        (
+            RunSpec::synthetic().wan("wan-2").distribution(DistributionSpec {
+                region_of: vec![0, 0, 1, 1],
+            }),
+            SpecError::DistributionConflictsWithWan,
+        ),
+        (RunSpec::synthetic().actors(0), SpecError::ZeroActors),
+        (RunSpec::synthetic().group_size(0), SpecError::ZeroGroupSize),
+        (RunSpec::synthetic().segment_bytes(0), SpecError::ZeroSegmentBytes),
+    ];
+    for (spec, want) in cases {
+        match spec.clone().build() {
+            Err(got) => assert_eq!(got, want, "spec {spec:?}"),
+            Ok(_) => panic!("expected {want:?} for {spec:?}"),
+        }
+    }
+}
+
+#[test]
+fn legal_coercions_surface_as_typed_notes_not_prints() {
+    let plan = RunSpec::synthetic().wan("wan-2").build().unwrap();
+    assert_eq!(plan.mode(), ExecMode::Pipelined);
+    assert_eq!(plan.config().n_actors, 4); // 2 regions x 2 actors
+    assert!(plan
+        .notes()
+        .iter()
+        .any(|n| matches!(n, SpecNote::WanSetsActorCount { actors: 4, .. })));
+    assert!(plan
+        .notes()
+        .iter()
+        .any(|n| matches!(n, SpecNote::PipelinedCoerced { cause: "a WAN preset" })));
+    assert!(plan.notes().iter().any(|n| matches!(n, SpecNote::WanRelayTree { regions: 2, .. })));
+    // The InProc relay tree derived from the preset: contiguous regions.
+    assert_eq!(plan.config().distribution.as_ref().unwrap().region_of, vec![0, 0, 1, 1]);
+    // Notes have human-readable Display forms.
+    for n in plan.notes() {
+        assert!(!format!("{n}").is_empty());
+    }
+
+    // An explicitly pipelined tcp spec needs no coercion note.
+    let plan = RunSpec::synthetic()
+        .pipelined()
+        .transport(Backend::Tcp(TcpConfig::default()))
+        .build()
+        .unwrap();
+    assert!(plan.notes().is_empty());
+
+    // A plain sequential spec coerces nothing and defaults sanely.
+    let plan = RunSpec::synthetic().build().unwrap();
+    assert!(plan.notes().is_empty());
+    assert_eq!(plan.mode(), ExecMode::Sequential);
+    assert_eq!(plan.config().n_actors, 2);
+}
+
+// ---------------------------------------------------------------------
+// (b) event stream vs report consistency
+// ---------------------------------------------------------------------
+
+#[test]
+fn event_stream_and_report_agree_exactly() {
+    let plan = base_spec(4, 11).pipelined().build().unwrap();
+    let mut session = Session::start_with_compute(&plan, layout(), comp()).unwrap();
+    let mut sft = 0usize;
+    let mut steps = Vec::new();
+    let mut committed = Vec::new();
+    let mut streamed = Vec::new();
+    let mut failovers = 0u64;
+    let report = loop {
+        match session.recv() {
+            Some(Event::SftStep { loss, .. }) => {
+                assert!(loss.is_finite());
+                sft += 1;
+            }
+            Some(Event::StepCompleted(log)) => steps.push(log),
+            Some(Event::Committed { version, checksum }) => committed.push((version, checksum)),
+            Some(Event::DeltaStreamed { version, payload_bytes, stripes }) => {
+                streamed.push((version, payload_bytes, stripes))
+            }
+            Some(Event::Failover { .. }) => failovers += 1,
+            Some(Event::Finished(r)) => break r,
+            None => panic!("stream ended without Finished"),
+        }
+    };
+    // Same warmup, same steps, same checksums — the report IS the events.
+    assert_eq!(sft, report.sft_losses.len());
+    assert_eq!(steps.len(), report.steps.len());
+    assert_eq!(report.steps.len(), 4);
+    for (ev, rep) in steps.iter().zip(&report.steps) {
+        assert_eq!(ev.step, rep.step);
+        assert_eq!(ev.policy_checksum, rep.policy_checksum);
+        assert_eq!(ev.rho, rep.rho);
+        assert_eq!(ev.payload_bytes, rep.payload_bytes);
+        assert_eq!(ev.gen_tokens, rep.gen_tokens);
+    }
+    // One trainer commit per version, checksums matching the step logs.
+    assert_eq!(committed.len() as u64, report.final_version);
+    for (i, (version, checksum)) in committed.iter().enumerate() {
+        assert_eq!(*version, i as u64 + 1);
+        assert_eq!(*checksum, report.steps[i].policy_checksum);
+    }
+    // One delta stream per version with real payload and segmentation.
+    assert_eq!(streamed.len() as u64, report.final_version);
+    for ((version, payload, stripes), log) in streamed.iter().zip(&report.steps) {
+        assert_eq!(*version, log.step + 1);
+        assert_eq!(*payload, log.payload_bytes);
+        assert!(*stripes > 1, "segment_bytes=256 must cut multiple segments");
+    }
+    // Failover totals line up (healthy run: zero).
+    assert_eq!(failovers, report.failovers);
+    assert_eq!(report.failovers, 0);
+    // checksum_hex is the canonical hex of the witness.
+    let last = report.steps.last().unwrap();
+    assert_eq!(last.checksum_hex(), sparrowrl::util::hex(&last.policy_checksum));
+    assert_eq!(last.checksum_hex().len(), 64);
+}
+
+#[test]
+fn try_iter_drains_the_stream_without_blocking() {
+    let plan = base_spec(2, 1).build().unwrap();
+    let mut session = Session::start_with_compute(&plan, layout(), comp()).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut finished = false;
+    let mut step_events = 0;
+    while !finished {
+        assert!(Instant::now() < deadline, "run never finished");
+        for ev in session.try_iter().collect::<Vec<_>>() {
+            match ev {
+                Event::StepCompleted(_) => step_events += 1,
+                Event::Finished(_) => finished = true,
+                _ => {}
+            }
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(step_events, 2);
+    // After Finished, the stream is exhausted.
+    assert!(session.recv().is_none());
+    assert!(session.join().is_ok());
+}
+
+#[test]
+fn failover_events_match_report_totals() {
+    use sparrowrl::transport::{KillMode, KillSpec};
+    let steps = 4u64;
+    let plan = RunSpec::synthetic()
+        .actors(3)
+        .steps(steps)
+        .sft_steps(2)
+        .group_size(2)
+        .max_new_tokens(5)
+        .lr_rl(1e-2)
+        .segment_bytes(256)
+        .seed(7)
+        .deterministic()
+        .wall_leases()
+        .transport(Backend::Tcp(TcpConfig {
+            streams: 2,
+            bits_per_s: None,
+            kill: Some(KillSpec { actor: 2, at_version: steps - 2, mode: KillMode::Crash }),
+        }))
+        .build()
+        .unwrap();
+    let mut session = Session::start_with_compute(&plan, layout(), comp()).unwrap();
+    let mut ev_failovers = 0u64;
+    let mut ev_requeued = 0u64;
+    let report = loop {
+        match session.recv() {
+            Some(Event::Failover { requeued, .. }) => {
+                ev_failovers += 1;
+                ev_requeued += requeued;
+            }
+            Some(Event::Finished(r)) => break r,
+            Some(_) => {}
+            None => panic!("stream ended without Finished"),
+        }
+    };
+    assert_eq!(report.failovers, 1);
+    assert_eq!(ev_failovers, report.failovers);
+    assert_eq!(ev_requeued, report.requeued_prompts);
+    assert!(ev_requeued > 0);
+    assert_eq!(report.final_version, steps);
+}
+
+// ---------------------------------------------------------------------
+// (c) abort
+// ---------------------------------------------------------------------
+
+#[test]
+fn abort_mid_run_leaves_no_wedged_threads() {
+    // Slow-ish compute + many steps: the run is mid-flight when aborted.
+    let plan = base_spec(200, 3).pipelined().build().unwrap();
+    let slow = comp().with_delays(Duration::from_millis(5), Duration::from_millis(5));
+    let mut session = Session::start_with_compute(&plan, layout(), slow).unwrap();
+    // Observe at least one live event so the abort is genuinely mid-run.
+    assert!(session.recv().is_some(), "no events before abort");
+    session.abort();
+    let t0 = Instant::now();
+    let err = session.join().expect_err("aborted run must not produce a report");
+    assert!(
+        format!("{err:#}").contains("abort"),
+        "join error should name the abort: {err:#}"
+    );
+    // join() returning proves the hub thread exited; the scoped actor
+    // workers cannot outlive it by construction. Promptness is the
+    // no-wedged-threads witness.
+    assert!(t0.elapsed() < Duration::from_secs(60), "join did not return promptly");
+}
+
+#[test]
+fn dropping_an_unjoined_session_aborts_and_reaps_the_run() {
+    let plan = base_spec(200, 5).pipelined().build().unwrap();
+    let slow = comp().with_delays(Duration::from_millis(5), Duration::from_millis(5));
+    let t0 = Instant::now();
+    {
+        let mut session = Session::start_with_compute(&plan, layout(), slow).unwrap();
+        assert!(session.recv().is_some());
+        // Drop without join(): Drop must cancel and reap the thread.
+    }
+    assert!(t0.elapsed() < Duration::from_secs(60), "drop did not reap the session");
+}
+
+// ---------------------------------------------------------------------
+// (d) Session vs legacy blocking API, bitwise
+// ---------------------------------------------------------------------
+
+#[test]
+fn session_matches_legacy_blocking_api_bitwise() {
+    for mode in [ExecMode::Sequential, ExecMode::Pipelined] {
+        let plan = base_spec(3, 7).mode(mode).build().unwrap();
+        let legacy = run_with_compute(plan.config(), &layout(), &comp(), mode).unwrap();
+        let via_session =
+            Session::start_with_compute(&plan, layout(), comp()).unwrap().join().unwrap();
+        assert_eq!(legacy.final_version, via_session.final_version, "{mode:?}");
+        assert_eq!(legacy.sft_losses, via_session.sft_losses, "{mode:?}");
+        assert_eq!(legacy.steps.len(), via_session.steps.len(), "{mode:?}");
+        for (a, b) in legacy.steps.iter().zip(&via_session.steps) {
+            assert_eq!(
+                a.policy_checksum, b.policy_checksum,
+                "{mode:?} step {}: session and legacy shim must be bit-identical",
+                a.step
+            );
+            assert_eq!(a.rho, b.rho);
+            assert_eq!(a.payload_bytes, b.payload_bytes);
+            assert_eq!(a.gen_tokens, b.gen_tokens);
+            assert_eq!(a.mean_reward, b.mean_reward);
+            assert_eq!(a.loss, b.loss);
+        }
+    }
+}
+
+#[test]
+fn synthetic_plan_refuses_artifact_start() {
+    let plan = base_spec(1, 0).build().unwrap();
+    let err = Session::start(&plan).expect_err("synthetic plans have no artifacts");
+    assert!(format!("{err:#}").contains("start_with_compute"), "{err:#}");
+}

@@ -4,7 +4,7 @@
 use sparrowrl::actor::{CommitResult, PolicyState};
 use sparrowrl::delta::{extract_delta, ApplyMode, DeltaCheckpoint, ModelLayout, ParamSet};
 use sparrowrl::rt::net::{push_segments_multistream, read_msg, write_msg, Msg};
-use sparrowrl::rt::{run_local, LocalRunConfig};
+use sparrowrl::session::{RunSpec, Session};
 use sparrowrl::transport::split_into_segments;
 use sparrowrl::util::{Bf16, Rng};
 use std::net::{TcpListener, TcpStream};
@@ -23,10 +23,8 @@ fn local_rl_loop_end_to_end() {
     if !artifacts_present("sparrow-xs") {
         return;
     }
-    let mut cfg = LocalRunConfig::quick("sparrow-xs");
-    cfg.steps = 3;
-    cfg.sft_steps = 10;
-    let report = run_local(&cfg).expect("local run");
+    let plan = RunSpec::model("sparrow-xs").steps(3).sft_steps(10).build().expect("valid spec");
+    let report = Session::start(&plan).expect("start").join().expect("local run");
     assert_eq!(report.steps.len(), 3);
     assert_eq!(report.final_version, 3);
     // SFT losses must be finite and broadly decreasing.
@@ -49,11 +47,13 @@ fn local_rl_loop_rl_at_small_lr_is_sparse() {
     if !artifacts_present("sparrow-xs") {
         return;
     }
-    let mut cfg = LocalRunConfig::quick("sparrow-xs");
-    cfg.steps = 2;
-    cfg.sft_steps = 5;
-    cfg.lr_rl = 1e-6;
-    let report = run_local(&cfg).expect("local run");
+    let plan = RunSpec::model("sparrow-xs")
+        .steps(2)
+        .sft_steps(5)
+        .lr_rl(1e-6)
+        .build()
+        .expect("valid spec");
+    let report = Session::start(&plan).expect("start").join().expect("local run");
     // At post-training lr, the paper's regime: ~1% nonzero (allow slack
     // for the tiny model).
     assert!(report.mean_rho() < 0.08, "mean rho {:.4}", report.mean_rho());

@@ -10,38 +10,41 @@
 //! * Tcp     — real loopback sockets, multi-stream segment push.
 //!
 //! This is the acceptance criterion for the transport API redesign: one
-//! executor, three backends, zero behavioral drift.
+//! executor, three backends, zero behavioral drift — now driven through
+//! the Session API (`RunSpec` backends + `Session` event-assembled
+//! reports).
 
+use sparrowrl::config::regions;
 use sparrowrl::delta::ModelLayout;
 use sparrowrl::netsim::Link;
-use sparrowrl::config::regions;
-use sparrowrl::rt::{
-    run_with_compute, ExecMode, LocalRunConfig, RunReport, SyntheticCompute, TransportKind,
-};
+use sparrowrl::rt::{ExecMode, RunReport, SyntheticCompute};
+use sparrowrl::session::{Backend, RunSpec, Session};
 use sparrowrl::transport::{SimNetConfig, TcpConfig};
 
 fn layout() -> ModelLayout {
     ModelLayout::transformer("syn-tr-eq", 256, 64, 2, 128)
 }
 
-fn config(n_actors: usize, steps: u64, seed: u64) -> LocalRunConfig {
-    let mut cfg = LocalRunConfig::quick("synthetic");
-    cfg.n_actors = n_actors;
-    cfg.steps = steps;
-    cfg.sft_steps = 2;
-    cfg.group_size = 2;
-    cfg.max_new_tokens = 5;
-    cfg.lr_rl = 1e-2; // large enough that every step flips bf16 bits
-    cfg.segment_bytes = 256; // many segments per delta: real wire traffic
-    cfg.seed = seed;
-    cfg.deterministic = true;
-    cfg
+fn config(n_actors: usize, steps: u64, seed: u64) -> RunSpec {
+    RunSpec::synthetic()
+        .actors(n_actors)
+        .steps(steps)
+        .sft_steps(2)
+        .group_size(2)
+        .max_new_tokens(5)
+        .lr_rl(1e-2) // large enough that every step flips bf16 bits
+        .segment_bytes(256) // many segments per delta: real wire traffic
+        .seed(seed)
+        .deterministic()
 }
 
-fn run(cfg: &LocalRunConfig, comp: &SyntheticCompute, mode: ExecMode) -> RunReport {
-    run_with_compute(cfg, &layout(), comp, mode).unwrap_or_else(|e| {
-        panic!("{} run over {} failed: {e:#}", mode.name(), cfg.transport.name())
-    })
+fn run(spec: &RunSpec, comp: &SyntheticCompute, mode: ExecMode) -> RunReport {
+    let plan = spec.clone().mode(mode).build().expect("valid spec");
+    let transport = plan.config().transport.name();
+    Session::start_with_compute(&plan, layout(), comp.clone())
+        .expect("start session")
+        .join()
+        .unwrap_or_else(|e| panic!("{} run over {transport} failed: {e:#}", mode.name()))
 }
 
 fn assert_equivalent(tag: &str, a: &RunReport, b: &RunReport) {
@@ -83,18 +86,17 @@ fn all_backends_commit_bitwise_identical_policies() {
     let base = config(3, 4, 11);
 
     let seq = run(&base, &comp, ExecMode::Sequential);
-    assert_eq!(seq.final_version, base.steps);
+    assert_eq!(seq.final_version, 4);
     assert!(seq.steps.iter().all(|s| s.rho > 0.0 && s.payload_bytes > 0));
 
     let inproc = run(&base, &comp, ExecMode::Pipelined);
 
-    let mut simc = base.clone();
-    simc.transport = TransportKind::Sim(sim_two_region(3, 99));
+    let simc = base.clone().transport(Backend::SimNet(sim_two_region(3, 99)));
     let sim = run(&simc, &comp, ExecMode::Pipelined);
 
-    let mut tcpc = base.clone();
-    tcpc.transport =
-        TransportKind::Tcp(TcpConfig { streams: 2, bits_per_s: None, kill: None });
+    let tcpc = base
+        .clone()
+        .transport(Backend::Tcp(TcpConfig { streams: 2, bits_per_s: None, kill: None }));
     let tcp = run(&tcpc, &comp, ExecMode::Pipelined);
 
     assert_equivalent("seq vs inproc", &seq, &inproc);
@@ -113,13 +115,12 @@ fn sim_backend_matches_inproc_relay_tree_routing() {
 
     let flat = run(&base, &comp, ExecMode::Pipelined);
 
-    let mut tree = base.clone();
-    tree.distribution =
-        Some(sparrowrl::rt::DistributionSpec { region_of: vec![0, 0, 1, 1] });
+    let tree = base
+        .clone()
+        .distribution(sparrowrl::rt::DistributionSpec { region_of: vec![0, 0, 1, 1] });
     let inproc_tree = run(&tree, &comp, ExecMode::Pipelined);
 
-    let mut simc = base.clone();
-    simc.transport = TransportKind::Sim(sim_two_region(4, 5));
+    let simc = base.clone().transport(Backend::SimNet(sim_two_region(4, 5)));
     let sim_tree = run(&simc, &comp, ExecMode::Pipelined);
 
     assert_equivalent("flat vs inproc-tree", &flat, &inproc_tree);
@@ -131,8 +132,8 @@ fn tcp_backend_is_self_reproducible_across_socket_interleavings() {
     // Socket scheduling must not leak into results: two Tcp runs of the
     // same seed are bit-identical (the stronger determinism contract).
     let comp = SyntheticCompute::new(16, 8, 64);
-    let mut cfg = config(2, 3, 3);
-    cfg.transport = TransportKind::Tcp(TcpConfig { streams: 3, bits_per_s: None, kill: None });
+    let cfg = config(2, 3, 3)
+        .transport(Backend::Tcp(TcpConfig { streams: 3, bits_per_s: None, kill: None }));
     let a = run(&cfg, &comp, ExecMode::Pipelined);
     let b = run(&cfg, &comp, ExecMode::Pipelined);
     assert_equivalent("tcp vs tcp", &a, &b);
@@ -145,9 +146,9 @@ fn throttled_tcp_still_matches_and_completes() {
     let comp = SyntheticCompute::new(16, 8, 64);
     let base = config(2, 3, 17);
     let inproc = run(&base, &comp, ExecMode::Pipelined);
-    let mut tcpc = base.clone();
-    tcpc.transport =
-        TransportKind::Tcp(TcpConfig { streams: 2, bits_per_s: Some(200e6), kill: None });
+    let tcpc = base
+        .clone()
+        .transport(Backend::Tcp(TcpConfig { streams: 2, bits_per_s: Some(200e6), kill: None }));
     let tcp = run(&tcpc, &comp, ExecMode::Pipelined);
     assert_equivalent("inproc vs throttled tcp", &inproc, &tcp);
 }
@@ -157,17 +158,15 @@ fn different_seeds_diverge_on_every_backend() {
     // Guards against the equivalence suite passing vacuously (e.g. a
     // constant checksum).
     let comp = SyntheticCompute::new(16, 8, 64);
-    let mut a_cfg = config(2, 3, 1);
-    let mut b_cfg = config(2, 3, 2);
     for (kind_a, kind_b) in [
-        (TransportKind::InProc, TransportKind::InProc),
+        (Backend::InProc, Backend::InProc),
         (
-            TransportKind::Tcp(TcpConfig::default()),
-            TransportKind::Tcp(TcpConfig::default()),
+            Backend::Tcp(TcpConfig::default()),
+            Backend::Tcp(TcpConfig::default()),
         ),
     ] {
-        a_cfg.transport = kind_a;
-        b_cfg.transport = kind_b;
+        let a_cfg = config(2, 3, 1).transport(kind_a);
+        let b_cfg = config(2, 3, 2).transport(kind_b);
         let a = run(&a_cfg, &comp, ExecMode::Pipelined);
         let b = run(&b_cfg, &comp, ExecMode::Pipelined);
         assert_ne!(

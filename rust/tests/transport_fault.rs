@@ -10,9 +10,8 @@
 
 use sparrowrl::delta::ModelLayout;
 use sparrowrl::ledger::LeasePolicy;
-use sparrowrl::rt::{
-    run_with_compute, ExecMode, LocalRunConfig, RunReport, SyntheticCompute, TransportKind,
-};
+use sparrowrl::rt::{RunReport, SyntheticCompute};
+use sparrowrl::session::{Backend, RunSpec, Session};
 use sparrowrl::transport::{KillMode, KillSpec, TcpConfig};
 
 fn layout() -> ModelLayout {
@@ -21,28 +20,32 @@ fn layout() -> ModelLayout {
 
 /// Deterministic generation + wall-clock leases: rollouts stay
 /// bit-reproducible while stalls genuinely time out.
-fn config(n_actors: usize, steps: u64, seed: u64) -> LocalRunConfig {
-    let mut cfg = LocalRunConfig::quick("synthetic");
-    cfg.n_actors = n_actors;
-    cfg.steps = steps;
-    cfg.sft_steps = 2;
-    cfg.group_size = 2;
-    cfg.max_new_tokens = 5;
-    cfg.lr_rl = 1e-2;
-    cfg.segment_bytes = 256;
-    cfg.seed = seed;
-    cfg.deterministic = true;
-    cfg.wall_leases = true;
-    cfg
+fn config(n_actors: usize, steps: u64, seed: u64) -> RunSpec {
+    RunSpec::synthetic()
+        .actors(n_actors)
+        .steps(steps)
+        .sft_steps(2)
+        .group_size(2)
+        .max_new_tokens(5)
+        .lr_rl(1e-2)
+        .segment_bytes(256)
+        .seed(seed)
+        .deterministic()
+        .wall_leases()
+        .pipelined()
 }
 
-fn run(cfg: &LocalRunConfig) -> RunReport {
-    run_with_compute(cfg, &layout(), &SyntheticCompute::new(16, 8, 64), ExecMode::Pipelined)
-        .unwrap_or_else(|e| panic!("run over {} failed: {e:#}", cfg.transport.name()))
+fn run(spec: &RunSpec) -> RunReport {
+    let plan = spec.clone().build().expect("valid spec");
+    let transport = plan.config().transport.name();
+    Session::start_with_compute(&plan, layout(), SyntheticCompute::new(16, 8, 64))
+        .expect("start session")
+        .join()
+        .unwrap_or_else(|e| panic!("run over {transport} failed: {e:#}"))
 }
 
-fn tcp_with_kill(kill: Option<KillSpec>) -> TransportKind {
-    TransportKind::Tcp(TcpConfig { streams: 2, bits_per_s: None, kill })
+fn tcp_with_kill(kill: Option<KillSpec>) -> Backend {
+    Backend::Tcp(TcpConfig { streams: 2, bits_per_s: None, kill })
 }
 
 /// Jobs for step `s` are leased against version `max(s-1, 0)` (the
@@ -74,12 +77,11 @@ fn crashed_actor_final_step_recovers_bitwise_to_baseline() {
     let baseline = run(&base); // no-failure InProc reference
     assert_eq!(baseline.failovers, 0);
 
-    let mut kcfg = base.clone();
-    kcfg.transport = tcp_with_kill(Some(KillSpec {
+    let kcfg = base.clone().transport(tcp_with_kill(Some(KillSpec {
         actor: 2,
         at_version: final_step_version(steps),
         mode: KillMode::Crash,
-    }));
+    })));
     let failed = run(&kcfg);
 
     assert_eq!(failed.final_version, steps, "run completed through the failure");
@@ -101,15 +103,16 @@ fn partitioned_actor_leases_expire_and_work_migrates_bitwise() {
     let base = config(3, steps, 5);
     let baseline = run(&base); // default (long) leases: immune to CI hiccups
 
-    let mut kcfg = base.clone();
     // Short leases only where the stall must be detected; lease policy
     // never reaches the rollout bits, so results stay comparable.
-    kcfg.lease = LeasePolicy { multiplier: 2.0, min_s: 0.4, max_s: 5.0 };
-    kcfg.transport = tcp_with_kill(Some(KillSpec {
-        actor: 1,
-        at_version: final_step_version(steps),
-        mode: KillMode::Stall,
-    }));
+    let kcfg = base
+        .clone()
+        .lease(LeasePolicy { multiplier: 2.0, min_s: 0.4, max_s: 5.0 })
+        .transport(tcp_with_kill(Some(KillSpec {
+            actor: 1,
+            at_version: final_step_version(steps),
+            mode: KillMode::Stall,
+        })));
     let failed = run(&kcfg);
 
     assert_eq!(failed.final_version, steps);
@@ -126,12 +129,11 @@ fn mid_run_crash_completes_on_survivors_with_full_batches() {
     // step must still train on a full batch, and the failover must be
     // exactly-once.
     let steps = 5;
-    let mut cfg = config(3, steps, 13);
-    cfg.transport = tcp_with_kill(Some(KillSpec {
+    let cfg = config(3, steps, 13).transport(tcp_with_kill(Some(KillSpec {
         actor: 0,
         at_version: 1, // dispatched at step 2: mid-run
         mode: KillMode::Crash,
-    }));
+    })));
     let report = run(&cfg);
 
     assert_eq!(report.final_version, steps);
@@ -153,12 +155,20 @@ fn mid_run_crash_completes_on_survivors_with_full_batches() {
 fn healthy_tcp_run_with_wall_leases_never_fails_over() {
     // Wall-clock leases on a healthy fleet must be invisible: no expiry,
     // no requeue, and results identical to the virtual-clock run.
-    let mut base = config(2, 3, 9);
-    base.wall_leases = false; // pure manual-clock reference, InProc
+    // Pure manual-clock reference, InProc (no .wall_leases()):
+    let base = RunSpec::synthetic()
+        .actors(2)
+        .steps(3)
+        .sft_steps(2)
+        .group_size(2)
+        .max_new_tokens(5)
+        .lr_rl(1e-2)
+        .segment_bytes(256)
+        .seed(9)
+        .deterministic()
+        .pipelined();
     let virtual_clock = run(&base);
-    let mut wall = base.clone();
-    wall.wall_leases = true;
-    wall.transport = tcp_with_kill(None);
+    let wall = base.clone().wall_leases().transport(tcp_with_kill(None));
     let tcp = run(&wall);
     assert_eq!(tcp.failovers, 0);
     assert_eq!(tcp.requeued_prompts, 0);

@@ -16,9 +16,9 @@ use sparrowrl::config::regions;
 use sparrowrl::delta::{ModelLayout, ParamSet};
 use sparrowrl::netsim::{deliver_striped, Link};
 use sparrowrl::rt::{
-    policy_checksum, run_with_compute, DistributionSpec, ExecMode, LocalRunConfig, RunReport,
-    SyntheticCompute,
+    policy_checksum, DistributionSpec, ExecMode, RunReport, SyntheticCompute,
 };
+use sparrowrl::session::{RunSpec, Session};
 use sparrowrl::trainer::stream_checkpoint;
 use sparrowrl::transport::relay::RelayNode;
 use sparrowrl::transport::{
@@ -168,24 +168,33 @@ fn relay_tree_delivers_every_segment_exactly_once() {
     });
 }
 
-fn wan_cfg(n_actors: usize, steps: u64, seed: u64, spec: Option<DistributionSpec>) -> LocalRunConfig {
-    let mut cfg = LocalRunConfig::quick("synthetic");
-    cfg.n_actors = n_actors;
-    cfg.steps = steps;
-    cfg.sft_steps = 2;
-    cfg.group_size = 2;
-    cfg.max_new_tokens = 5;
-    cfg.lr_rl = 1e-2;
-    cfg.segment_bytes = 256; // many segments per delta: real relay traffic
-    cfg.seed = seed;
-    cfg.deterministic = true;
-    cfg.distribution = spec;
-    cfg
+fn wan_cfg(n_actors: usize, steps: u64, seed: u64, spec: Option<DistributionSpec>) -> RunSpec {
+    let mut s = RunSpec::synthetic()
+        .actors(n_actors)
+        .steps(steps)
+        .sft_steps(2)
+        .group_size(2)
+        .max_new_tokens(5)
+        .lr_rl(1e-2)
+        .segment_bytes(256) // many segments per delta: real relay traffic
+        .seed(seed)
+        .deterministic();
+    if let Some(d) = spec {
+        s = s.distribution(d);
+    }
+    s
 }
 
-fn run(cfg: &LocalRunConfig, comp: &SyntheticCompute, mode: ExecMode) -> RunReport {
-    run_with_compute(cfg, &ModelLayout::transformer("syn-wan-eq", 256, 64, 2, 128), comp, mode)
-        .unwrap_or_else(|e| panic!("{} run failed: {e:#}", mode.name()))
+fn run(spec: &RunSpec, comp: &SyntheticCompute, mode: ExecMode) -> RunReport {
+    let plan = spec.clone().mode(mode).build().expect("valid spec");
+    Session::start_with_compute(
+        &plan,
+        ModelLayout::transformer("syn-wan-eq", 256, 64, 2, 128),
+        comp.clone(),
+    )
+    .expect("start session")
+    .join()
+    .unwrap_or_else(|e| panic!("{} run failed: {e:#}", mode.name()))
 }
 
 #[test]
