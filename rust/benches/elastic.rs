@@ -1,0 +1,163 @@
+//! Elastic-membership benches (ISSUE 6), three tiers:
+//!
+//! 1. Bootstrap cost: bytes on the wire to bring a joiner to the active
+//!    version — the stored delta chain `D_1..D_v` (lossless sparse
+//!    deltas, the paper's wire format) vs a dense policy snapshot. The
+//!    asserted bound is the PR's acceptance criterion: the chain must be
+//!    measurably cheaper.
+//! 2. Makespan under preemption: the same deterministic Tcp run healthy
+//!    and with a spot-preemption (no usable warning) mid-run — the price
+//!    of a reissue-path recovery in wall clock.
+//! 3. Autoscaler trace: tokens-per-dollar decisions emitted per version
+//!    boundary by the cost-model policy.
+//!
+//! Emits `BENCH_elastic.json`. Set `BENCH_QUICK=1` for the CI smoke run.
+
+use sparrowrl::delta::ModelLayout;
+use sparrowrl::rt::{BootstrapKind, RunReport, SyntheticCompute};
+use sparrowrl::session::{Backend, Event, RunSpec, Session};
+use sparrowrl::transport::{KillMode, KillSpec, TcpConfig};
+use sparrowrl::util::bench::Bencher;
+use std::time::Duration;
+
+fn base_spec(quick: bool) -> RunSpec {
+    RunSpec::synthetic()
+        .steps(if quick { 4 } else { 8 })
+        .sft_steps(0)
+        .actors(3)
+        .group_size(2)
+        .max_new_tokens(6)
+        .lr_rl(1e-2)
+        .segment_bytes(4 << 10)
+        .deterministic()
+        .pipelined()
+}
+
+fn run_collect(spec: &RunSpec) -> (Vec<Event>, RunReport) {
+    let plan = spec.clone().build().expect("valid spec");
+    let layout = ModelLayout::transformer("syn-el-bench", 512, 128, 2, 256);
+    let comp = SyntheticCompute::new(16, 8, 64)
+        .with_delays(Duration::from_millis(8), Duration::from_millis(6));
+    let mut session =
+        Session::start_with_compute(&plan, layout, comp).expect("start session");
+    let mut events = Vec::new();
+    while let Some(ev) = session.recv() {
+        events.push(ev);
+    }
+    (events, session.join().expect("session run"))
+}
+
+/// Wire bytes of the single scripted join in `events`.
+fn joined_bytes(events: &[Event]) -> u64 {
+    events
+        .iter()
+        .find_map(|ev| match ev {
+            Event::Joined { bytes, .. } => Some(*bytes),
+            _ => None,
+        })
+        .expect("run admitted a joiner")
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let mut b = Bencher::new(1, if quick { 2 } else { 3 });
+    let base = base_spec(quick);
+    let mut derived: Vec<(String, f64)> = Vec::new();
+
+    // -- 1. bootstrap bytes: delta chain vs dense snapshot ---------------
+    // Both joiners target the same boundary, so the byte counts compare
+    // the formats, not the targets.
+    let join_v = 2;
+    let (chain_ev, chain_report) =
+        run_collect(&base.clone().join_at(3, join_v, BootstrapKind::DeltaChain));
+    let (snap_ev, snap_report) =
+        run_collect(&base.clone().join_at(3, join_v, BootstrapKind::Snapshot));
+    assert_eq!(chain_report.joins, 1);
+    assert_eq!(snap_report.joins, 1);
+    let chain_bytes = joined_bytes(&chain_ev);
+    let snap_bytes = joined_bytes(&snap_ev);
+    println!(
+        "bootstrap to v{join_v}: delta chain {} vs snapshot {} ({:.1}% of dense)",
+        sparrowrl::util::fmt_bytes(chain_bytes),
+        sparrowrl::util::fmt_bytes(snap_bytes),
+        chain_bytes as f64 / snap_bytes as f64 * 100.0,
+    );
+    // Acceptance bound: replaying the lossless sparse chain must beat
+    // shipping the dense policy.
+    assert!(
+        chain_bytes < snap_bytes,
+        "delta-chain bootstrap ({chain_bytes} B) not cheaper than snapshot ({snap_bytes} B)"
+    );
+    derived.push(("bootstrap_chain_bytes".into(), chain_bytes as f64));
+    derived.push(("bootstrap_snapshot_bytes".into(), snap_bytes as f64));
+    derived.push((
+        "bootstrap_chain_over_snapshot".into(),
+        chain_bytes as f64 / snap_bytes as f64,
+    ));
+
+    // -- 2. makespan under spot preemption (Tcp, reissue path) -----------
+    let tcp = |kills: Vec<KillSpec>| {
+        base.clone()
+            .wall_leases()
+            .transport(Backend::Tcp(TcpConfig { streams: 2, bits_per_s: None, kills }))
+    };
+    let healthy_spec = tcp(vec![]);
+    let preempt_spec = tcp(vec![KillSpec {
+        actor: 2,
+        at_version: 1, // mid-run: survivors absorb the re-issued leases
+        mode: KillMode::Preempt { warn_ms: 0 },
+    }]);
+    let healthy_wall = b
+        .bench("e2e tcp healthy fleet", || {
+            std::hint::black_box(run_collect(&healthy_spec));
+        })
+        .median
+        .as_secs_f64();
+    let preempt_wall = b
+        .bench("e2e tcp spot-preempted", || {
+            std::hint::black_box(run_collect(&preempt_spec));
+        })
+        .median
+        .as_secs_f64();
+    let (_, preempted) = run_collect(&preempt_spec);
+    assert_eq!(preempted.failovers, 1);
+    assert_eq!(preempted.preempts, 1);
+    println!(
+        "makespan: healthy {healthy_wall:.3}s, preempted {preempt_wall:.3}s ({:.2}x)",
+        preempt_wall / healthy_wall.max(1e-12),
+    );
+    derived.push(("makespan_healthy_s".into(), healthy_wall));
+    derived.push(("makespan_preempted_s".into(), preempt_wall));
+    derived.push((
+        "makespan_preempt_overhead".into(),
+        preempt_wall / healthy_wall.max(1e-12),
+    ));
+
+    // -- 3. autoscaler tokens-per-dollar trace ---------------------------
+    let (scale_ev, _) = run_collect(&base.clone().autoscale());
+    let decisions: Vec<(u64, f64, f64, &'static str)> = scale_ev
+        .iter()
+        .filter_map(|ev| match ev {
+            Event::Autoscale { version, decision } => Some((
+                *version,
+                decision.marginal_tpd(),
+                decision.reserve_line(),
+                decision.name(),
+            )),
+            _ => None,
+        })
+        .collect();
+    assert!(!decisions.is_empty(), "autoscaler emitted no decisions");
+    for (v, tpd, line, name) in &decisions {
+        println!("autoscale @v{v}: {name} (marginal {tpd:.0} tok/$, line {line:.0})");
+    }
+    let mean_tpd =
+        decisions.iter().map(|(_, tpd, _, _)| tpd).sum::<f64>() / decisions.len() as f64;
+    derived.push(("autoscale_decisions".into(), decisions.len() as f64));
+    derived.push(("autoscale_mean_marginal_tpd".into(), mean_tpd));
+    derived.push(("autoscale_reserve_line".into(), decisions[0].2));
+
+    let derived_refs: Vec<(&str, f64)> = derived.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let out = std::path::Path::new("BENCH_elastic.json");
+    b.write_json(out, "elastic", &derived_refs).expect("write bench json");
+}

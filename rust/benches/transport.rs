@@ -122,7 +122,7 @@ fn main() {
         ),
         (
             "tcp",
-            Backend::Tcp(TcpConfig { streams: 2, bits_per_s: None, kill: None }),
+            Backend::Tcp(TcpConfig { streams: 2, bits_per_s: None, kills: vec![] }),
         ),
     ];
     let mut derived: Vec<(String, f64)> = Vec::new();

@@ -155,6 +155,38 @@ impl PolicyState {
         &self.params
     }
 
+    /// Install a full-policy snapshot (the elastic-membership bootstrap
+    /// fallback when the delta chain is unavailable): the wire bytes of
+    /// [`ParamSet::to_snapshot_bytes`] become the active policy at
+    /// `version`, with `hash` as its checkpoint hash for the ledger
+    /// predicate. Only ever moves forward; staging and retention at or
+    /// below the snapshot are discarded (there is no older state to roll
+    /// back to on a freshly bootstrapped actor).
+    pub fn install_snapshot(
+        &mut self,
+        version: u64,
+        hash: [u8; 32],
+        data: &[u8],
+    ) -> Result<(), String> {
+        if version <= self.active_version {
+            return Err(format!(
+                "snapshot version {version} not ahead of active {}",
+                self.active_version
+            ));
+        }
+        self.params = ParamSet::from_snapshot_bytes(&self.layout, data)?;
+        self.active_version = version;
+        self.active_hash = hash;
+        self.staging.retain(|&v, _| v > version);
+        self.staged.retain(|&v, _| v > version);
+        if self.pending_commit.map_or(false, |p| p <= version) {
+            self.pending_commit = None;
+        }
+        self.retained = None;
+        self.applied += 1;
+        Ok(())
+    }
+
     pub fn highest_staged(&self) -> Option<u64> {
         self.staged.keys().next_back().copied()
     }

@@ -151,6 +151,140 @@ pub fn table6_deployments(model: &str) -> Option<(Deployment, Deployment)> {
     }
 }
 
+/// Typed decision emitted by the [`Autoscaler`] at a step boundary
+/// (carried on `session::Event::Autoscale`). `marginal_tpd` is the
+/// tokens/$ the *next* (or last) actor earns; `reserve_line` is the
+/// reserved-RDMA baseline it was compared against.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScaleDecision {
+    /// The marginal actor beats the reserved-RDMA line — grow the fleet.
+    Add { marginal_tpd: f64, reserve_line: f64 },
+    /// The marginal actor earns less than the line — shrink the fleet.
+    Drop { marginal_tpd: f64, reserve_line: f64 },
+    /// Inside the hysteresis band, or pinned at the fleet bounds.
+    Hold { marginal_tpd: f64, reserve_line: f64 },
+}
+
+impl ScaleDecision {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScaleDecision::Add { .. } => "add",
+            ScaleDecision::Drop { .. } => "drop",
+            ScaleDecision::Hold { .. } => "hold",
+        }
+    }
+
+    pub fn marginal_tpd(&self) -> f64 {
+        match *self {
+            ScaleDecision::Add { marginal_tpd, .. }
+            | ScaleDecision::Drop { marginal_tpd, .. }
+            | ScaleDecision::Hold { marginal_tpd, .. } => marginal_tpd,
+        }
+    }
+
+    /// The reserved-RDMA tokens-per-dollar line the decision compared
+    /// against (after hysteresis).
+    pub fn reserve_line(&self) -> f64 {
+        match *self {
+            ScaleDecision::Add { reserve_line, .. }
+            | ScaleDecision::Drop { reserve_line, .. }
+            | ScaleDecision::Hold { reserve_line, .. } => reserve_line,
+        }
+    }
+}
+
+/// Cost-model autoscaling policy (ISSUE 6): elastic actor capacity is
+/// worth adding only while the *marginal* actor — its on-demand GPU-hour
+/// plus its share of delta-egress — earns more tokens per dollar than
+/// the same money buys on a reserved RDMA cluster. The whole fleet is
+/// priced through [`wan_deployment`], so the decision moves with the
+/// same Table 6 rates as every other cost figure in the repo.
+///
+/// Decisions are advisory: the runtime logs them as
+/// `Event::Autoscale`; the chaos suite and bench read the trace.
+#[derive(Clone, Copy, Debug)]
+pub struct Autoscaler {
+    pub n_regions: usize,
+    /// Reserved-RDMA tokens/$ baseline (e.g. from
+    /// [`reserved_line`]). Marginal capacity must beat this to be
+    /// worth renting.
+    pub reserve_line: f64,
+    /// Never drop below this many actors per region.
+    pub min_per_region: usize,
+    /// Never grow past this many actors per region.
+    pub max_per_region: usize,
+    /// Relative dead-band around the line (e.g. 0.05 = ±5%) so noisy
+    /// throughput samples don't flap between Add and Drop.
+    pub hysteresis: f64,
+}
+
+impl Autoscaler {
+    pub fn new(n_regions: usize, reserve_line: f64) -> Autoscaler {
+        Autoscaler {
+            n_regions,
+            reserve_line,
+            min_per_region: 1,
+            max_per_region: 64,
+            hysteresis: 0.05,
+        }
+    }
+
+    /// Marginal tokens/$ of growing the fleet from `per_region` to
+    /// `per_region + 1` actors per region: the throughput the extra
+    /// actors add, divided by the extra hourly cost (GPU rate via
+    /// [`wan_deployment`] plus the delta-egress each new actor pulls).
+    pub fn marginal_tokens_per_dollar(
+        &self,
+        per_region: usize,
+        tokens_per_s_per_actor: f64,
+        egress_bytes_per_actor_step: u64,
+        step_s: f64,
+    ) -> f64 {
+        let d0 = wan_deployment(self.n_regions, per_region);
+        let d1 = wan_deployment(self.n_regions, per_region + 1);
+        let added_actors = self.n_regions as f64;
+        let d_tokens = tokens_per_s_per_actor * added_actors;
+        let d_gpu_hr = d1.cost_per_hr() - d0.cost_per_hr();
+        let d_egress_hr =
+            d1.egress_cost(egress_bytes_per_actor_step) * added_actors * 3600.0 / step_s.max(1e-9);
+        d_tokens * 3600.0 / (d_gpu_hr + d_egress_hr).max(1e-9)
+    }
+
+    /// One policy evaluation at a step boundary. Pure: same inputs,
+    /// same decision — the chaos suite relies on this determinism.
+    pub fn decide(
+        &self,
+        per_region: usize,
+        tokens_per_s_per_actor: f64,
+        egress_bytes_per_actor_step: u64,
+        step_s: f64,
+    ) -> ScaleDecision {
+        let marginal_tpd = self.marginal_tokens_per_dollar(
+            per_region,
+            tokens_per_s_per_actor,
+            egress_bytes_per_actor_step,
+            step_s,
+        );
+        let reserve_line = self.reserve_line;
+        let hi = reserve_line * (1.0 + self.hysteresis);
+        let lo = reserve_line * (1.0 - self.hysteresis);
+        if marginal_tpd > hi && per_region < self.max_per_region {
+            ScaleDecision::Add { marginal_tpd, reserve_line }
+        } else if marginal_tpd < lo && per_region > self.min_per_region {
+            ScaleDecision::Drop { marginal_tpd, reserve_line }
+        } else {
+            ScaleDecision::Hold { marginal_tpd, reserve_line }
+        }
+    }
+}
+
+/// The reserved-RDMA tokens/$ line for a Table 6 model scale: what the
+/// same sustained throughput costs on the reserved cluster. `None` for
+/// models without a Table 6 entry.
+pub fn reserved_line(model: &str, tokens_per_s: f64) -> Option<f64> {
+    table6_deployments(model).map(|(_, rdma)| rdma.tokens_per_dollar(tokens_per_s))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -215,5 +349,39 @@ mod tests {
         assert!((on_demand - 2.0 * 15.88).abs() < 1e-9);
         assert!((reserved - 24.0 * 19.92).abs() < 1e-9);
         assert!(reserved / on_demand > 10.0);
+    }
+
+    #[test]
+    fn autoscaler_adds_when_marginal_beats_line_and_drops_when_it_does_not() {
+        let line = reserved_line("qwen3-8b", 15_900.0).unwrap();
+        let scaler = Autoscaler::new(2, line);
+        // A productive actor: well above the reserved line per dollar.
+        let fast = scaler.decide(2, 4_000.0, 10 << 20, 30.0);
+        assert!(matches!(fast, ScaleDecision::Add { .. }), "{fast:?}");
+        // A nearly idle actor: marginal tokens/$ collapses below it.
+        let slow = scaler.decide(2, 100.0, 10 << 20, 30.0);
+        assert!(matches!(slow, ScaleDecision::Drop { .. }), "{slow:?}");
+        // Fleet bounds pin the decision to Hold even off the line.
+        let floor = Autoscaler { min_per_region: 2, ..scaler }.decide(2, 100.0, 10 << 20, 30.0);
+        assert!(matches!(floor, ScaleDecision::Hold { .. }), "{floor:?}");
+        let ceil = Autoscaler { max_per_region: 2, ..scaler }.decide(2, 4_000.0, 10 << 20, 30.0);
+        assert!(matches!(ceil, ScaleDecision::Hold { .. }), "{ceil:?}");
+    }
+
+    #[test]
+    fn marginal_tpd_is_finite_positive_and_shrinks_with_egress() {
+        let scaler = Autoscaler::new(4, 1.0);
+        let lean = scaler.marginal_tokens_per_dollar(2, 2_000.0, 0, 30.0);
+        let heavy = scaler.marginal_tokens_per_dollar(2, 2_000.0, 500 << 20, 30.0);
+        assert!(lean.is_finite() && lean > 0.0);
+        assert!(heavy < lean, "egress must tax the marginal actor: {heavy} vs {lean}");
+    }
+
+    #[test]
+    fn decide_is_deterministic() {
+        let scaler = Autoscaler::new(2, reserved_line("qwen3-8b", 15_900.0).unwrap());
+        let a = scaler.decide(3, 1_234.5, 42 << 20, 17.0);
+        let b = scaler.decide(3, 1_234.5, 42 << 20, 17.0);
+        assert_eq!(a, b);
     }
 }

@@ -207,6 +207,44 @@ impl ParamSet {
     pub fn total_params(&self) -> u64 {
         self.tensors.iter().map(|t| t.len() as u64).sum()
     }
+
+    /// Flatten every parameter to little-endian bf16 bytes in layout
+    /// order — the full-policy snapshot wire form used to bootstrap a
+    /// joining actor when the delta chain is unavailable
+    /// (`rt::net::Msg::Snapshot`). O(N) bytes, the baseline the sparse
+    /// chain's O(rho * k) is measured against.
+    pub fn to_snapshot_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.total_params() as usize * 2);
+        for t in &self.tensors {
+            for v in t {
+                out.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Rebuild parameters from [`ParamSet::to_snapshot_bytes`] output.
+    /// The byte count must match the layout exactly — a short or long
+    /// snapshot is a protocol error, never a partial apply.
+    pub fn from_snapshot_bytes(layout: &ModelLayout, bytes: &[u8]) -> Result<ParamSet, String> {
+        let want = layout.tensors.iter().map(|t| t.numel()).sum::<u64>() * 2;
+        if bytes.len() as u64 != want {
+            return Err(format!("snapshot size {} != layout size {}", bytes.len(), want));
+        }
+        let mut at = 0usize;
+        let mut tensors = Vec::with_capacity(layout.tensors.len());
+        for spec in &layout.tensors {
+            let n = spec.numel() as usize;
+            let mut t = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = [bytes[at + 2 * i], bytes[at + 2 * i + 1]];
+                t.push(Bf16::from_bits(u16::from_le_bytes(b)));
+            }
+            at += 2 * n;
+            tensors.push(t);
+        }
+        Ok(ParamSet { tensors })
+    }
 }
 
 #[cfg(test)]

@@ -75,12 +75,17 @@ pub struct LeasePolicy {
     pub multiplier: f64,
     pub min_s: f64,
     pub max_s: f64,
+    /// How often the hub sweeps for expired leases (and polls its
+    /// endpoint when idle), in milliseconds. Soak tests and slow WAN
+    /// presets tune this instead of inheriting a hardcoded 25 ms; zero
+    /// is rejected at spec validation (`SpecError::ZeroSweepInterval`).
+    pub sweep_ms: u64,
 }
 
 impl Default for LeasePolicy {
     fn default() -> Self {
         // Paper: "time-bounded lease (2-3x median completion time)".
-        LeasePolicy { multiplier: 2.5, min_s: 10.0, max_s: 1800.0 }
+        LeasePolicy { multiplier: 2.5, min_s: 10.0, max_s: 1800.0, sweep_ms: 25 }
     }
 }
 
@@ -317,6 +322,27 @@ impl JobLedger {
         }
         prompts
     }
+
+    /// Hand an actor's outstanding leases back to the pool *without* the
+    /// expiry penalty: a graceful drain (scripted leave, spot-preemption
+    /// warning, clean `Bye`) is not a failure, so it must not inflate
+    /// `LedgerStats::expired` or feed the completion-time estimator.
+    /// Prompts return to the pending queue in prompt order (the original
+    /// posting order), so the reissue that follows is deterministic.
+    pub fn revoke_actor_without_penalty(&mut self, actor: ActorId) -> Vec<PromptId> {
+        let mut prompts: Vec<PromptId> = self
+            .leases
+            .values()
+            .filter(|l| l.actor == actor)
+            .map(|l| l.prompt)
+            .collect();
+        prompts.sort_unstable();
+        for p in &prompts {
+            self.leases.remove(p);
+            self.pending.push_back(*p);
+        }
+        prompts
+    }
 }
 
 #[cfg(test)]
@@ -326,7 +352,7 @@ mod tests {
     const H: [u8; 32] = [7u8; 32];
 
     fn ledger() -> JobLedger {
-        let mut l = JobLedger::new(LeasePolicy { multiplier: 2.0, min_s: 10.0, max_s: 100.0 });
+        let mut l = JobLedger::new(LeasePolicy { multiplier: 2.0, min_s: 10.0, max_s: 100.0, ..Default::default() });
         l.post(0..10);
         l
     }
@@ -491,7 +517,7 @@ mod tests {
     #[test]
     fn prop_ledger_conserves_prompts() {
         crate::util::prop::check("ledger conservation", 25, |rng| {
-            let mut l = JobLedger::new(LeasePolicy { multiplier: 2.0, min_s: 5.0, max_s: 50.0 });
+            let mut l = JobLedger::new(LeasePolicy { multiplier: 2.0, min_s: 5.0, max_s: 50.0, ..Default::default() });
             let total = rng.range(1, 50) as u64;
             l.post(0..total);
             let mut now = 0.0;

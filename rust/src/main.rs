@@ -10,6 +10,7 @@
 use sparrowrl::config;
 use sparrowrl::data::Benchmark;
 use sparrowrl::exp;
+use sparrowrl::rt::BootstrapKind;
 use sparrowrl::session::{Backend, Event, RunSpec, Session};
 use sparrowrl::sim::driver::{run as sim_run, SimConfig};
 use sparrowrl::sim::{RegionSpec, System};
@@ -20,7 +21,8 @@ fn usage() -> ! {
     eprintln!(
         "usage:\n  sparrowrl exp <{}|all> [--flags]\n  sparrowrl train [--model sparrow-xs] \
          [--steps N] [--sft-steps N] [--algorithm grpo|rloo|opo] [--lr-rl X] [--actors N] [--seed S] [--pipelined] \
-         [--transport inproc|sim|tcp] [--tcp-streams N] [--tcp-bps BITS] [--deterministic] [--wan wan-1..wan-4] [--gantt]\n  \
+         [--transport inproc|sim|tcp] [--tcp-streams N] [--tcp-bps BITS] [--deterministic] [--wan wan-1..wan-4] [--gantt]\n    \
+         [--fault-script join:A@V[:snapshot],leave:A@V,crash:A@V,stall:A@V,preempt:A@V[:warn=MS],...] [--autoscale] [--lease-sweep-ms MS]\n  \
          sparrowrl sim [--model qwen3-8b] [--system sparrow|full|ms|ideal] [--bench gsm8k|math|deepscaler] [--steps N]\n  \
          sparrowrl list",
         exp::ALL.join("|")
@@ -87,6 +89,12 @@ fn train_spec(args: &Args) -> anyhow::Result<RunSpec> {
     if !wan.is_empty() {
         spec = spec.wan(&wan);
     }
+    if args.flag("autoscale") {
+        spec = spec.autoscale();
+    }
+    if args.get("lease-sweep-ms").is_some() {
+        spec = spec.lease_sweep_ms(args.parse_or("lease-sweep-ms", 25u64));
+    }
     let tname = args.str_or("transport", "inproc");
     let mut backend = Backend::parse(&tname)
         .ok_or_else(|| anyhow::anyhow!("unknown --transport {tname} (inproc|sim|tcp)"))?;
@@ -94,7 +102,77 @@ fn train_spec(args: &Args) -> anyhow::Result<RunSpec> {
         tc.streams = args.parse_or("tcp-streams", 2usize);
         tc.bits_per_s = args.get("tcp-bps").and_then(|s| s.parse::<f64>().ok());
     }
+    let script = args.str_or("fault-script", "");
+    if !script.is_empty() {
+        let (spec2, kills) = apply_fault_script(spec, &script)?;
+        spec = spec2;
+        if !kills.is_empty() {
+            let Backend::Tcp(tc) = &mut backend else {
+                anyhow::bail!(
+                    "crash/stall/preempt fault injection needs --transport tcp \
+                     (join/leave also run on inproc)"
+                );
+            };
+            tc.kills = kills;
+        }
+    }
     Ok(spec.transport(backend))
+}
+
+/// Parse one `--fault-script` into membership scripting on the spec plus
+/// Tcp kill injections. Entries are comma-separated:
+/// `join:A@V` (delta-chain bootstrap) / `join:A@V:snapshot`,
+/// `leave:A@V`, `crash:A@V`, `stall:A@V`, `preempt:A@V:warn=MS`.
+fn apply_fault_script(
+    mut spec: RunSpec,
+    script: &str,
+) -> anyhow::Result<(RunSpec, Vec<sparrowrl::transport::KillSpec>)> {
+    use sparrowrl::transport::{KillMode, KillSpec};
+    fn actor_at(s: &str) -> anyhow::Result<(u32, u64)> {
+        let (a, v) = s
+            .split_once('@')
+            .ok_or_else(|| anyhow::anyhow!("fault-script entry needs ACTOR@VERSION, got {s:?}"))?;
+        Ok((a.trim().parse()?, v.trim().parse()?))
+    }
+    let mut kills = Vec::new();
+    for entry in script.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let mut parts = entry.split(':');
+        let kind = parts.next().unwrap_or("");
+        let target = parts.next().ok_or_else(|| {
+            anyhow::anyhow!("fault-script entry {entry:?} needs KIND:ACTOR@VERSION")
+        })?;
+        let opt = parts.next();
+        let (actor, at_version) = actor_at(target)?;
+        match (kind, opt) {
+            ("join", None) => spec = spec.join_at(actor, at_version, BootstrapKind::DeltaChain),
+            ("join", Some("snapshot")) => {
+                spec = spec.join_at(actor, at_version, BootstrapKind::Snapshot)
+            }
+            ("join", Some("delta-chain")) => {
+                spec = spec.join_at(actor, at_version, BootstrapKind::DeltaChain)
+            }
+            ("leave", None) => spec = spec.leave_at(actor, at_version),
+            ("crash", None) => kills.push(KillSpec { actor, at_version, mode: KillMode::Crash }),
+            ("stall", None) => kills.push(KillSpec { actor, at_version, mode: KillMode::Stall }),
+            ("preempt", warn) => {
+                let warn_ms = match warn {
+                    None => 0,
+                    Some(w) => w
+                        .strip_prefix("warn=")
+                        .and_then(|ms| ms.trim_end_matches("ms").parse().ok())
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("preempt option must be warn=MS, got {w:?}")
+                        })?,
+                };
+                kills.push(KillSpec { actor, at_version, mode: KillMode::Preempt { warn_ms } });
+            }
+            _ => anyhow::bail!(
+                "unknown fault-script entry {entry:?} \
+                 (join|leave|crash|stall|preempt, e.g. preempt:1@3:warn=500)"
+            ),
+        }
+    }
+    Ok((spec, kills))
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
@@ -121,8 +199,29 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let report = loop {
         match session.recv() {
             Some(Event::StepCompleted(log)) => println!("{}", log.progress_line()),
-            Some(Event::Failover { actor, requeued }) => {
-                eprintln!("actor {actor} lost; {requeued} prompt(s) requeued to survivors")
+            Some(Event::Failover { actor, requeued, reason }) => {
+                eprintln!("actor {actor} lost ({reason}); {requeued} prompt(s) requeued to survivors")
+            }
+            Some(Event::Joined { actor, version, bootstrap, bytes }) => {
+                println!(
+                    "actor {actor} joined at v{version} ({} bootstrap, {})",
+                    bootstrap.name(),
+                    sparrowrl::util::fmt_bytes(bytes),
+                )
+            }
+            Some(Event::Draining { actor, requeued }) => {
+                println!("actor {actor} drained gracefully ({requeued} prompt(s) handed back)")
+            }
+            Some(Event::Preempted { actor }) => {
+                eprintln!("actor {actor} received a spot-preemption warning; draining")
+            }
+            Some(Event::Autoscale { version, decision }) => {
+                println!(
+                    "autoscale @v{version}: {} (marginal {:.0} tok/$, reserve line {:.0})",
+                    decision.name(),
+                    decision.marginal_tpd(),
+                    decision.reserve_line(),
+                )
             }
             Some(Event::Finished(report)) => break report,
             // Warmup progress and per-version stream/commit events are
@@ -157,6 +256,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         println!(
             "failovers: {} actor(s) lost, {} prompt(s) requeued to survivors",
             report.failovers, report.requeued_prompts,
+        );
+    }
+    if report.joins + report.drains + report.preempts > 0 {
+        println!(
+            "membership: {} join(s), {} graceful drain(s), {} preemption warning(s)",
+            report.joins, report.drains, report.preempts,
         );
     }
     if args.flag("gantt") {

@@ -57,6 +57,101 @@ impl TransportKind {
     }
 }
 
+/// Why an actor was removed from the fleet mid-run. Carried on
+/// `session::Event::Failover` so downstream consumers never have to
+/// parse ad-hoc reason strings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailReason {
+    /// Transport reported the worker dead (process exit, socket slam).
+    Crash,
+    /// Leases expired while the actor stayed silent.
+    Stall,
+    /// Commit-barrier acknowledgement timed out — reachable but mute.
+    Partition,
+    /// Spot preemption: the actor sent its `Draining` warning before the
+    /// provider reclaimed it.
+    Preempted,
+    /// A region relay died, taking its downstream peers with it.
+    RelayLost,
+    /// Graceful departure that could not finish draining in time and was
+    /// escalated to failover.
+    Left,
+}
+
+impl std::fmt::Display for FailReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FailReason::Crash => "crash",
+            FailReason::Stall => "stall",
+            FailReason::Partition => "partition",
+            FailReason::Preempted => "preempted",
+            FailReason::RelayLost => "relay-lost",
+            FailReason::Left => "left",
+        })
+    }
+}
+
+/// How a joining actor is brought to the hub's active policy version.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BootstrapKind {
+    /// Replay the stored sparse deltas `D_{1}..D_{v}` through the
+    /// joiner's staging decoder — O(rho * k) bytes on the wire.
+    DeltaChain,
+    /// Ship the full dense bf16 policy — O(N) bytes; the fallback when
+    /// no delta chain is available.
+    Snapshot,
+}
+
+impl BootstrapKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BootstrapKind::DeltaChain => "delta-chain",
+            BootstrapKind::Snapshot => "snapshot",
+        }
+    }
+}
+
+/// A scripted membership join: at the boundary after version
+/// `at_version` commits, the hub invites the (so far dormant) worker
+/// `actor`, bootstraps it via `bootstrap`, and admits it to the
+/// scheduler and bandwidth gate.
+#[derive(Clone, Copy, Debug)]
+pub struct JoinSpec {
+    pub actor: u32,
+    pub at_version: u64,
+    pub bootstrap: BootstrapKind,
+}
+
+/// A scripted graceful leave: at the boundary after version
+/// `at_version` commits, the hub stops scheduling `actor`, lets its
+/// outstanding work finish (or hands leased prompts back), then
+/// releases it with a `Drain` message.
+#[derive(Clone, Copy, Debug)]
+pub struct LeaveSpec {
+    pub actor: u32,
+    pub at_version: u64,
+}
+
+/// Elastic-membership script for a run: which actors join late, which
+/// leave gracefully, and whether the cost-model autoscaler emits
+/// scale decisions at step boundaries. Preemptions are scripted on the
+/// transport side (`tcp::KillSpec` with `KillMode::Preempt`).
+#[derive(Clone, Debug, Default)]
+pub struct ElasticSpec {
+    pub joins: Vec<JoinSpec>,
+    pub leaves: Vec<LeaveSpec>,
+    /// Evaluate `cost::Autoscaler` each step and emit
+    /// `Event::Autoscale` decisions (advisory — decisions are logged,
+    /// not auto-applied; the fleet follows the explicit script).
+    pub autoscale: bool,
+}
+
+impl ElasticSpec {
+    pub fn is_empty(&self) -> bool {
+        self.joins.is_empty() && self.leaves.is_empty() && !self.autoscale
+    }
+}
+
 /// Configuration for a local end-to-end run.
 #[derive(Clone, Debug)]
 pub struct LocalRunConfig {
@@ -101,6 +196,11 @@ pub struct LocalRunConfig {
     /// the scheduler deterministic) while stalled/partitioned actors
     /// genuinely time out — the fault-tolerance tests' configuration.
     pub wall_leases: bool,
+    /// Elastic-membership script: scripted joins/leaves plus the
+    /// autoscaler toggle. Empty (the default) = fixed fleet, exactly
+    /// the pre-elastic behaviour. Pipelined executor only; requires
+    /// flat distribution and the InProc or Tcp backend.
+    pub elastic: ElasticSpec,
 }
 
 impl LocalRunConfig {
@@ -125,6 +225,7 @@ impl LocalRunConfig {
             transport: TransportKind::InProc,
             lease: LeasePolicy::default(),
             wall_leases: false,
+            elastic: ElasticSpec::default(),
         }
     }
 }
@@ -187,11 +288,19 @@ pub struct RunReport {
     /// the pipelined executor hid inside the generation window.
     pub timeline: Timeline,
     /// Actors lost mid-run and absorbed via lease-driven failover
-    /// (crash, partition, or graceful leave) — 0 on a healthy run.
+    /// (crash, stall, partition, un-warned preemption) — 0 on a
+    /// healthy run. Graceful drains are counted in `drains`, not here.
     pub failovers: u64,
-    /// Prompts re-leased to survivors after failures, exactly once per
-    /// failure per prompt.
+    /// Prompts re-leased to survivors after failures or drain
+    /// handbacks, exactly once per event per prompt.
     pub requeued_prompts: u64,
+    /// Actors admitted mid-run (invite → bootstrap → witness → lease).
+    pub joins: u64,
+    /// Actors that departed gracefully (scripted leave or clean Bye) —
+    /// these do NOT inflate `failovers`.
+    pub drains: u64,
+    /// Spot preemptions whose warning reached the hub before the kill.
+    pub preempts: u64,
 }
 
 impl RunReport {

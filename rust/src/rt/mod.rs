@@ -27,6 +27,7 @@ pub mod pipeline;
 
 pub use compute::{Compute, ComputeShape, SyntheticCompute};
 pub use local::{
-    evaluate, run_local, run_local_mode, LocalRunConfig, RunReport, StepLog, TransportKind,
+    evaluate, run_local, run_local_mode, BootstrapKind, ElasticSpec, FailReason, JoinSpec,
+    LeaveSpec, LocalRunConfig, RunReport, StepLog, TransportKind,
 };
 pub use pipeline::{policy_checksum, run_with_compute, DistributionSpec, ExecMode};

@@ -60,6 +60,32 @@ pub enum Msg {
     },
     /// Orderly shutdown.
     Bye,
+    /// A new actor announces itself to a running fleet (elastic
+    /// membership): capability prior (`prior_tau`, tokens/s) and region
+    /// tag for the bandwidth gate. The hub replies with a bootstrap —
+    /// either the delta chain (`Seg`* then `Commit`) or a [`Msg::Snapshot`]
+    /// — and admits the actor only after its `Activated` witness matches
+    /// the trainer's policy checksum.
+    Join { actor: u32, prior_tau: f64, region: u32 },
+    /// Full-policy bootstrap: every bf16 parameter in layout order.
+    /// `hash` is the checkpoint hash of `version` (what the ledger's
+    /// acceptance predicate expects on rollouts generated against it).
+    /// The fallback when the delta chain is unavailable — O(N) bytes
+    /// where the chain costs O(rho * k).
+    Snapshot { version: u64, hash: [u8; 32], data: Vec<u8> },
+    /// Hub asks an actor to drain: it holds no leased work (the hub only
+    /// sends this once the actor's slots are settled), so it replies
+    /// `Bye` and exits without burning the failover path.
+    Drain { grace_ms: u64 },
+    /// Actor announces it is about to be lost (spot-preemption warning):
+    /// the hub hands its leased prompts back to the pool without the
+    /// expiry penalty and stops scheduling it; if the hard kill lands
+    /// before the drain completes, remaining leases take the normal
+    /// reissue path.
+    Draining { actor: u32 },
+    /// Hub provisions a dormant spare: the deterministic stand-in for
+    /// "a new spot instance came up". The spare answers with `Join`.
+    Invite { actor: u32 },
 }
 
 const TAG_HELLO: u8 = 1;
@@ -69,6 +95,11 @@ const TAG_ACTIVATED: u8 = 4;
 const TAG_JOB: u8 = 5;
 const TAG_RESULT: u8 = 6;
 const TAG_BYE: u8 = 7;
+const TAG_JOIN: u8 = 8;
+const TAG_SNAPSHOT: u8 = 9;
+const TAG_DRAIN: u8 = 10;
+const TAG_DRAINING: u8 = 11;
+const TAG_INVITE: u8 = 12;
 
 impl Msg {
     /// Serialize to a length-prefixed frame: len u32 | tag u8 | body.
@@ -116,6 +147,31 @@ impl Msg {
                 TAG_RESULT
             }
             Msg::Bye => TAG_BYE,
+            Msg::Join { actor, prior_tau, region } => {
+                body.extend_from_slice(&actor.to_le_bytes());
+                body.extend_from_slice(&prior_tau.to_le_bytes());
+                body.extend_from_slice(&region.to_le_bytes());
+                TAG_JOIN
+            }
+            Msg::Snapshot { version, hash, data } => {
+                body.extend_from_slice(&version.to_le_bytes());
+                body.extend_from_slice(hash);
+                body.extend_from_slice(&(data.len() as u32).to_le_bytes());
+                body.extend_from_slice(data);
+                TAG_SNAPSHOT
+            }
+            Msg::Drain { grace_ms } => {
+                body.extend_from_slice(&grace_ms.to_le_bytes());
+                TAG_DRAIN
+            }
+            Msg::Draining { actor } => {
+                body.extend_from_slice(&actor.to_le_bytes());
+                TAG_DRAINING
+            }
+            Msg::Invite { actor } => {
+                body.extend_from_slice(&actor.to_le_bytes());
+                TAG_INVITE
+            }
         };
         let mut out = Vec::with_capacity(5 + body.len());
         out.extend_from_slice(&(1 + body.len() as u32).to_le_bytes());
@@ -187,6 +243,48 @@ impl Msg {
                 Msg::RolloutResult { actor, prompt_id, version, hash, reward, tokens }
             }
             TAG_BYE => Msg::Bye,
+            TAG_JOIN => Msg::Join {
+                actor: rd_u32(body, 0)?,
+                prior_tau: f64::from_le_bytes(body.get(4..12).context("short")?.try_into()?),
+                region: {
+                    if body.len() != 16 {
+                        bail!("join frame length mismatch ({} bytes)", body.len());
+                    }
+                    rd_u32(body, 12)?
+                },
+            },
+            TAG_SNAPSHOT => {
+                let version = rd_u64(body, 0)?;
+                let mut hash = [0u8; 32];
+                hash.copy_from_slice(body.get(8..40).context("short")?);
+                let n = rd_u32(body, 40)? as usize;
+                // Validate the count against the bytes actually present
+                // BEFORE allocating (same rule as Job/RolloutResult), and
+                // bind the length so a truncated frame can never parse as
+                // a shorter valid snapshot.
+                if body.len() != 44usize.checked_add(n).context("snapshot length overflow")? {
+                    bail!("snapshot frame length mismatch ({n} data bytes, {} bytes)", body.len());
+                }
+                Msg::Snapshot { version, hash, data: body[44..].to_vec() }
+            }
+            TAG_DRAIN => {
+                if body.len() != 8 {
+                    bail!("drain frame length mismatch ({} bytes)", body.len());
+                }
+                Msg::Drain { grace_ms: rd_u64(body, 0)? }
+            }
+            TAG_DRAINING => {
+                if body.len() != 4 {
+                    bail!("draining frame length mismatch ({} bytes)", body.len());
+                }
+                Msg::Draining { actor: rd_u32(body, 0)? }
+            }
+            TAG_INVITE => {
+                if body.len() != 4 {
+                    bail!("invite frame length mismatch ({} bytes)", body.len());
+                }
+                Msg::Invite { actor: rd_u32(body, 0)? }
+            }
             other => bail!("unknown tag {other}"),
         })
     }
@@ -285,6 +383,11 @@ mod tests {
                 tokens: vec![1, -2, 3],
             },
             Msg::Bye,
+            Msg::Join { actor: 5, prior_tau: 1800.0, region: 2 },
+            Msg::Snapshot { version: 6, hash: [3u8; 32], data: vec![0xAB, 0xCD, 0xEF] },
+            Msg::Drain { grace_ms: 1500 },
+            Msg::Draining { actor: 4 },
+            Msg::Invite { actor: 5 },
         ]
     }
 
@@ -349,7 +452,7 @@ mod tests {
     #[test]
     fn unknown_and_empty_tags_rejected() {
         assert!(Msg::from_tagged(&[]).is_err(), "empty frame");
-        for tag in [0u8, 8, 99, 255] {
+        for tag in [0u8, 13, 99, 255] {
             assert!(Msg::from_tagged(&[tag]).is_err(), "tag {tag}");
             assert!(Msg::from_tagged(&[tag, 1, 2, 3]).is_err(), "tag {tag} with body");
         }
@@ -377,6 +480,14 @@ mod tests {
         let mut frame = Msg::Job { version: 1, rng_seed: 2, prompt_ids: vec![5] }.to_frame();
         frame.extend_from_slice(&[0u8; 8]);
         assert!(Msg::from_tagged(&frame[4..]).is_err());
+
+        // A Snapshot claiming 4 GiB of params while carrying none must be
+        // rejected by the count/length cross-check, never allocated.
+        let mut body = vec![TAG_SNAPSHOT];
+        body.extend_from_slice(&3u64.to_le_bytes()); // version
+        body.extend_from_slice(&[0u8; 32]); // hash
+        body.extend_from_slice(&u32::MAX.to_le_bytes()); // n data bytes, hostile
+        assert!(Msg::from_tagged(&body).is_err());
     }
 
     #[test]

@@ -42,12 +42,17 @@
 
 use crate::actor::rollout::SampleCfg;
 use crate::actor::{CommitResult, PolicyState};
+use crate::config::GpuClass;
+use crate::cost::{reserved_line, Autoscaler, Deployment};
 use crate::data::{pack_batch, Task};
 use crate::delta::{CheckpointStore, ModelLayout, ParamSet};
 use crate::ledger::{Clock, JobLedger, Reject};
 use crate::metrics::{SpanKind, Timeline};
 use crate::rt::compute::Compute;
-use crate::rt::local::{LocalRunConfig, RunReport, StepLog, TransportKind};
+use crate::rt::local::{
+    BootstrapKind, FailReason, JoinSpec, LeaveSpec, LocalRunConfig, RunReport, StepLog,
+    TransportKind,
+};
 use crate::rt::net::Msg;
 use crate::runtime::TrainState;
 use crate::scheduler::{Assignment, Scheduler, SchedulerConfig, VersionState};
@@ -57,7 +62,7 @@ use crate::transport::api::{
     ActorEndpoint, Closed, Event, HubEndpoint, InProcTransport, Polled, SimTransport, Transport,
 };
 use crate::transport::tcp::TcpTransport;
-use crate::transport::Segment;
+use crate::transport::{split_into_segments, Segment};
 use crate::util::Rng;
 use anyhow::{anyhow, bail, ensure, Result};
 use sha2::{Digest, Sha256};
@@ -359,6 +364,14 @@ impl<'a, C: Compute> Hub<'a, C> {
 
     fn now_s(&self) -> f64 {
         self.t0.elapsed().as_secs_f64()
+    }
+
+    /// Collect-loop poll granularity — the lease-expiry sweep interval,
+    /// from [`crate::ledger::LeasePolicy::sweep_ms`] (spec validation
+    /// rejects zero; clamp defensively for direct `LocalRunConfig`
+    /// construction).
+    fn poll_interval(&self) -> Duration {
+        Duration::from_millis(self.cfg.lease.sweep_ms.max(1))
     }
 
     /// Lease timestamp: wall seconds normally; under the deterministic
@@ -781,8 +794,10 @@ fn worker_drain(
                 backlog.push_back(wire_job(version, rng_seed, prompt_ids));
             }
             // A mid-batch Bye only happens while the hub is tearing down;
-            // the disconnect surfaces at the next blocking recv.
-            Ok(Some(Msg::Bye)) => {}
+            // the disconnect surfaces at the next blocking recv. The hub
+            // grants Drain only to an idle actor, so one cannot arrive
+            // mid-batch; tolerate it the same way.
+            Ok(Some(Msg::Bye)) | Ok(Some(Msg::Drain { .. })) => {}
             Ok(Some(other)) => return Err(format!("actor {actor}: unexpected {other:?}")),
             Ok(None) | Err(Closed) => break,
         }
@@ -843,13 +858,91 @@ fn actor_worker<C: Compute>(
     comp: &C,
     cfg: &LocalRunConfig,
     actor: u32,
-    mut state: PolicyState,
+    state: PolicyState,
     ep: &mut dyn ActorEndpoint,
 ) -> Result<(), String> {
     // Membership: introduce ourselves before any work flows.
     if ep.send(Msg::Hello { actor, prior_tau: 1000.0 }).is_err() {
         return Ok(()); // hub gone before the run started
     }
+    actor_loop(comp, cfg, actor, state, ep)
+}
+
+/// A scripted late joiner (elastic membership): launched dormant — no
+/// Hello, invisible to the membership barrier and excluded from the
+/// broadcast fan-out — until the hub's `Invite` models the provisioner
+/// granting capacity. It then announces itself (`Join` with capability
+/// and region info), bootstraps to the active version — a dense
+/// `Snapshot`, or the stored delta chain `D_1..D_v` replayed through the
+/// *same* staging decoders and chained commit the steady-state stream
+/// uses — acks the bit-exactness witness, and runs the normal worker
+/// loop.
+fn joiner_worker<C: Compute>(
+    comp: &C,
+    cfg: &LocalRunConfig,
+    actor: u32,
+    mut state: PolicyState,
+    ep: &mut dyn ActorEndpoint,
+) -> Result<(), String> {
+    // Dormant phase: wait to be provisioned.
+    loop {
+        match ep.recv() {
+            Ok(Msg::Invite { actor: a }) => {
+                if a != actor {
+                    return Err(format!("actor {actor}: invite addressed to actor {a}"));
+                }
+                break;
+            }
+            Ok(Msg::Bye) | Err(Closed) => return Ok(()), // run ended before we joined
+            Ok(other) => return Err(format!("dormant actor {actor}: unexpected {other:?}")),
+        }
+    }
+    // Announce ourselves over the transport.
+    if ep.send(Msg::Join { actor, prior_tau: 1000.0, region: 0 }).is_err() {
+        return Ok(()); // hub gone mid-join
+    }
+    // Bootstrap phase: runs until the commit (or snapshot) for the
+    // hub-announced target version applies. Chain segments may ride
+    // striped/reordered paths, so a Commit can overtake them — the
+    // standard park-then-safe-point machinery absorbs that here too.
+    let mut target: Option<u64> = None;
+    while target.map_or(true, |t| state.active_version() < t) {
+        match ep.recv() {
+            Ok(Msg::Seg(seg)) => {
+                state
+                    .on_segment(seg)
+                    .map_err(|e| format!("actor {actor} bootstrap staging: {e}"))?;
+                service_safe_point(&mut state, actor, ep)?;
+            }
+            Ok(Msg::Commit { version }) => {
+                target = Some(version);
+                commit_and_ack(&mut state, actor, version, ep)?;
+            }
+            Ok(Msg::Snapshot { version, hash, data }) => {
+                state
+                    .install_snapshot(version, hash, &data)
+                    .map_err(|e| format!("actor {actor} snapshot bootstrap: {e}"))?;
+                target = Some(version);
+                // The witness ack doubles as the admission request.
+                ack_commit(&state, actor, version, ep)?;
+            }
+            Ok(Msg::Bye) | Err(Closed) => return Ok(()), // run ended mid-bootstrap
+            Ok(other) => return Err(format!("joining actor {actor}: unexpected {other:?}")),
+        }
+    }
+    // Admitted: steady state from here on.
+    actor_loop(comp, cfg, actor, state, ep)
+}
+
+/// The steady-state worker loop shared by day-one actors (after their
+/// Hello) and admitted joiners (after bootstrap).
+fn actor_loop<C: Compute>(
+    comp: &C,
+    cfg: &LocalRunConfig,
+    actor: u32,
+    mut state: PolicyState,
+    ep: &mut dyn ActorEndpoint,
+) -> Result<(), String> {
     let mut backlog: VecDeque<GenJob> = VecDeque::new();
     loop {
         let job = match backlog.pop_front() {
@@ -871,6 +964,13 @@ fn actor_worker<C: Compute>(
                 Ok(Msg::Commit { version }) => {
                     commit_and_ack(&mut state, actor, version, ep)?;
                     None
+                }
+                Ok(Msg::Drain { .. }) => {
+                    // Graceful release: the hub settled our books and is
+                    // letting us go. Confirm with Bye — a clean EOF on
+                    // every transport, so no Down event, no failover.
+                    let _ = ep.send(Msg::Bye);
+                    return Ok(());
                 }
                 Ok(Msg::Bye) | Err(Closed) => return Ok(()), // orderly shutdown
                 Ok(other) => return Err(format!("actor {actor}: unexpected {other:?}")),
@@ -946,18 +1046,62 @@ fn run_pipelined<C: Compute>(hub: &mut Hub<C>) -> Result<()> {
     let n = hub.cfg.n_actors;
     let comp = hub.comp;
     let cfg = hub.cfg;
+    let elastic = &cfg.elastic;
+    let n_total = n + elastic.joins.len();
+    if !elastic.joins.is_empty() || !elastic.leaves.is_empty() {
+        ensure!(
+            !matches!(cfg.transport, TransportKind::Sim(_)),
+            "elastic membership needs --transport inproc or tcp (netsim fleets are fixed)"
+        );
+        ensure!(
+            cfg.distribution.as_ref().map_or(true, |d| d.is_flat()),
+            "elastic membership requires flat hub→actor streaming (no relay trees)"
+        );
+        let mut ids: Vec<u32> = elastic.joins.iter().map(|j| j.actor).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ensure!(
+            ids.len() == elastic.joins.len()
+                && ids == (n as u32..n_total as u32).collect::<Vec<u32>>(),
+            "scripted joiners must be actors {n}..{n_total} exactly (one id each)"
+        );
+        for j in &elastic.joins {
+            ensure!(
+                (1..=cfg.steps).contains(&j.at_version),
+                "join for actor {} at v{} outside 1..={}",
+                j.actor,
+                j.at_version,
+                cfg.steps
+            );
+        }
+        for l in &elastic.leaves {
+            ensure!((l.actor as usize) < n_total, "scripted leave names unknown actor {}", l.actor);
+            ensure!(
+                (1..=cfg.steps).contains(&l.at_version),
+                "leave for actor {} at v{} outside 1..={}",
+                l.actor,
+                l.at_version,
+                cfg.steps
+            );
+        }
+    }
     let layout = hub.layout.clone();
     let policy0 = hub.policy.clone();
     let transport = build_transport(cfg)?;
     let runner = move |actor: u32, ep: &mut dyn ActorEndpoint| -> Result<(), String> {
         let state = PolicyState::new(layout.clone(), policy0.clone(), 0);
-        actor_worker(comp, cfg, actor, state, ep)
+        if (actor as usize) < n {
+            actor_worker(comp, cfg, actor, state, ep)
+        } else {
+            joiner_worker(comp, cfg, actor, state, ep)
+        }
     };
     std::thread::scope(|scope| {
-        let mut ep = transport.launch(scope, n, &runner)?;
+        let mut ep = transport.launch(scope, n_total, &runner)?;
         let result = transport_hub_loop(hub, ep.as_mut());
         // Orderly teardown regardless of outcome: Bye + closed links let
-        // every worker (even a stalled one) exit so the scope can join.
+        // every worker (even a stalled or still-dormant one) exit so the
+        // scope can join.
         ep.shutdown();
         result
     })
@@ -984,13 +1128,13 @@ fn broadcast_and_commit<C: Compute>(
     Ok(())
 }
 
-/// Collect-loop poll interval: the granularity of lease-expiry sweeps.
-const POLL_INTERVAL: Duration = Duration::from_millis(25);
-
-/// How long the hub waits for outstanding `Activated` acks once all
-/// generation results are in before declaring the holdouts partitioned
-/// (mirrors the 60 s membership-barrier deadline). Healthy acks arrive
-/// within milliseconds of the trailing safe point.
+/// How long the hub waits for outstanding `Activated` acks (including
+/// in-flight joiner bootstraps) once all generation results are in
+/// before declaring the holdouts partitioned (mirrors the 60 s
+/// membership-barrier deadline). Healthy acks arrive within
+/// milliseconds of the trailing safe point. The collect-loop poll
+/// interval itself — the granularity of lease-expiry sweeps — comes
+/// from `LeasePolicy::sweep_ms` via [`Hub::poll_interval`].
 const ACK_TIMEOUT: Duration = Duration::from_secs(60);
 
 /// One assignment's in-flight generation work, hub-side. `executing`
@@ -1011,21 +1155,66 @@ struct Slot {
     done: bool,
 }
 
+/// Hub-side view of the elastic fleet. `alive` are schedulable members;
+/// `draining` are members finishing their last leases before a graceful
+/// release; `warned` received a spot-preemption warning (a subsequent
+/// `Down` is classified `Preempted`, not `Crash`); `joining` are invited
+/// actors mid-bootstrap, not yet admitted to the scheduler.
+struct Membership {
+    alive: BTreeSet<u32>,
+    draining: BTreeSet<u32>,
+    warned: BTreeSet<u32>,
+    joining: BTreeMap<u32, JoinInFlight>,
+}
+
+impl Membership {
+    fn new() -> Self {
+        Membership {
+            alive: BTreeSet::new(),
+            draining: BTreeSet::new(),
+            warned: BTreeSet::new(),
+            joining: BTreeMap::new(),
+        }
+    }
+}
+
+/// One invited actor's bootstrap in flight: the version it must reach,
+/// how it gets there, and the bytes spent doing so. `announced` flips
+/// when its `Msg::Join` arrives (the capability announcement that
+/// carries `prior_tau` and `region` for scheduler admission).
+struct JoinInFlight {
+    version: u64,
+    bootstrap: BootstrapKind,
+    bytes: u64,
+    prior_tau: f64,
+    region: u32,
+    announced: bool,
+}
+
 /// The transport-generic pipelined hub loop: membership barrier, then
 /// per step dispatch → overlapped train/stream → collect, with
 /// lease-driven failover throughout.
 fn transport_hub_loop<C: Compute>(hub: &mut Hub<C>, ep: &mut dyn HubEndpoint) -> Result<()> {
     let n = hub.cfg.n_actors;
-    // Membership barrier: every worker says Hello before step 0 (over
-    // Tcp this also proves all sockets are up).
-    let mut alive: BTreeSet<u32> = BTreeSet::new();
+    let poll = hub.poll_interval();
+    // Scripted joiners launch dormant: take them out of the broadcast
+    // fan-out up front so they cannot watch pre-join deltas for free —
+    // delta-chain bootstrap must pay for the history it replays.
+    let joiner_ids: Vec<u32> = hub.cfg.elastic.joins.iter().map(|j| j.actor).collect();
+    for actor in joiner_ids {
+        ep.set_active(actor, false);
+    }
+    // Membership barrier: every *day-one* worker says Hello before step 0
+    // (over Tcp this also proves all sockets are up). Dormant joiners
+    // stay silent until invited.
+    let mut mem = Membership::new();
     let deadline = Instant::now() + Duration::from_secs(60);
-    while alive.len() < n {
+    while mem.alive.len() < n {
         hub.check_cancel()?;
-        match ep.poll(POLL_INTERVAL) {
+        match ep.poll(poll) {
             Polled::Event(Event::Msg { actor, msg: Msg::Hello { .. } }) => {
                 ensure!((actor as usize) < n, "hello from unknown actor {actor}");
-                alive.insert(actor);
+                mem.alive.insert(actor);
             }
             Polled::Event(Event::Msg { actor, msg }) => {
                 bail!("actor {actor} sent {msg:?} before Hello")
@@ -1034,7 +1223,7 @@ fn transport_hub_loop<C: Compute>(hub: &mut Hub<C>, ep: &mut dyn HubEndpoint) ->
                 bail!("actor {actor} died during startup: {reason}")
             }
             Polled::TimedOut => {
-                ensure!(Instant::now() < deadline, "actors never joined ({}/{n})", alive.len())
+                ensure!(Instant::now() < deadline, "actors never joined ({}/{n})", mem.alive.len())
             }
             Polled::Closed => bail!("transport closed during startup"),
         }
@@ -1077,14 +1266,20 @@ fn transport_hub_loop<C: Compute>(hub: &mut Hub<C>, ep: &mut dyn HubEndpoint) ->
         }
         // 2. Train on the previous batch + stream D_{v} mid-generation.
         let committing = if let Some((prev_step, prev)) = last_batch.take() {
-            broadcast_and_commit(hub, ep, &alive, prev_step, &prev)?;
+            broadcast_and_commit(hub, ep, &mem.alive, prev_step, &prev)?;
             Some((hub.version, hub.now_s()))
         } else {
             None
         };
+        // 2b. Elastic membership at the version boundary the commit just
+        //     created: invite scripted joiners, start scripted drains,
+        //     let the autoscaler speak. Bootstrap and drain traffic then
+        //     interleaves with normal collection below.
+        run_membership_script(hub, ep, &mut mem)?;
         // 3. Collect generation results + activation acks (failover on
-        //    Down events and expired leases).
-        collect_step(hub, ep, &mut alive, &mut slots, committing, step)?;
+        //    Down events and expired leases; joins and drains settle
+        //    in the same loop).
+        collect_step(hub, ep, &mut mem, &mut slots, committing, step)?;
         // 4. Deterministic batch assembly in assignment order.
         let mut batch: Vec<Rollout> = Vec::new();
         let mut phase = (f64::INFINITY, 0.0f64);
@@ -1098,10 +1293,11 @@ fn transport_hub_loop<C: Compute>(hub: &mut Hub<C>, ep: &mut dyn HubEndpoint) ->
     // Epilogue: train + commit the final version (no generation to hide
     // behind — the same tail the sequential executor pays every step).
     if let Some((prev_step, prev)) = last_batch.take() {
-        broadcast_and_commit(hub, ep, &alive, prev_step, &prev)?;
+        broadcast_and_commit(hub, ep, &mem.alive, prev_step, &prev)?;
+        run_membership_script(hub, ep, &mut mem)?;
         let committing = Some((hub.version, hub.now_s()));
         let mut slots: Vec<Slot> = Vec::new();
-        collect_step(hub, ep, &mut alive, &mut slots, committing, prev_step)?;
+        collect_step(hub, ep, &mut mem, &mut slots, committing, prev_step)?;
     }
     Ok(())
 }
@@ -1114,13 +1310,13 @@ fn transport_hub_loop<C: Compute>(hub: &mut Hub<C>, ep: &mut dyn HubEndpoint) ->
 fn collect_step<C: Compute>(
     hub: &mut Hub<C>,
     ep: &mut dyn HubEndpoint,
-    alive: &mut BTreeSet<u32>,
+    mem: &mut Membership,
     slots: &mut [Slot],
     committing: Option<(u64, f64)>,
     step: u64,
 ) -> Result<()> {
     let mut want_acks: BTreeSet<u32> = match committing {
-        Some(_) => alive.clone(),
+        Some(_) => mem.alive.clone(),
         None => BTreeSet::new(),
     };
     let pid_slot: BTreeMap<u64, usize> = slots
@@ -1128,16 +1324,22 @@ fn collect_step<C: Compute>(
         .enumerate()
         .flat_map(|(i, s)| s.job.pids.iter().map(move |&p| (p, i)))
         .collect();
+    let poll = hub.poll_interval();
+    // A scripted drain of an already-idle actor can be released before
+    // any traffic arrives.
+    try_release_drained(hub, ep, mem, &want_acks, slots)?;
     // Ack-wait backstop: lease expiry only detects a silent partition
     // while the actor still OWES leased work. Once every slot is done
     // (or when none were dispatched — the epilogue commit) a partitioned
     // actor holds no leases, so an unacked commit would otherwise poll
     // forever. The grace clock starts at the first idle tick after
-    // generation completes, so slow generation never eats into it.
+    // generation completes, so slow generation never eats into it. A
+    // joiner mid-bootstrap is covered by the same backstop: its
+    // `Activated` admission ack is owed exactly like a commit ack.
     let mut ack_grace: Option<Instant> = None;
-    while slots.iter().any(|s| !s.done) || !want_acks.is_empty() {
+    while slots.iter().any(|s| !s.done) || !want_acks.is_empty() || !mem.joining.is_empty() {
         hub.check_cancel()?;
-        match ep.poll(POLL_INTERVAL) {
+        match ep.poll(poll) {
             Polled::Event(Event::Msg { actor, msg }) => match msg {
                 Msg::RolloutResult { actor: ra, prompt_id, version, hash, reward, tokens } => {
                     ensure!(ra == actor, "result from actor {actor} claims actor {ra}");
@@ -1146,7 +1348,7 @@ fn collect_step<C: Compute>(
                         // expiry, not crash) may keep emitting results for
                         // prompts that already migrated to another step.
                         ensure!(
-                            !alive.contains(&actor),
+                            !mem.alive.contains(&actor),
                             "result for unknown prompt {prompt_id} from live actor {actor}"
                         );
                         continue;
@@ -1185,7 +1387,13 @@ fn collect_step<C: Compute>(
                 }
                 Msg::Activated { actor: aa, version, hash } => {
                     ensure!(aa == actor, "ack from actor {actor} claims actor {aa}");
-                    if !alive.contains(&actor) {
+                    if mem.joining.contains_key(&actor) {
+                        // A joiner's first Activated is its admission
+                        // request: witness-check, then enter the fleet.
+                        admit_joiner(hub, ep, mem, actor, version, hash)?;
+                        continue;
+                    }
+                    if !mem.alive.contains(&actor) {
                         continue; // stale ack from a failed-over actor
                     }
                     let Some((v, sent_s)) = committing else {
@@ -1204,7 +1412,7 @@ fn collect_step<C: Compute>(
                         // An ack from an actor we already failed over is
                         // stale, not fatal; a duplicate from a live one
                         // is a protocol bug.
-                        ensure!(!alive.contains(&actor), "duplicate commit ack from {actor}");
+                        ensure!(!mem.alive.contains(&actor), "duplicate commit ack from {actor}");
                         continue;
                     }
                     hub.sched.note_committed(actor, version);
@@ -1212,25 +1420,48 @@ fn collect_step<C: Compute>(
                     hub.timeline
                         .record(&format!("actor{actor}"), SpanKind::Commit, sent_s, now, step);
                 }
-                // A Hello after the run started is a reconnect attempt;
-                // rejoin would need full-checkpoint catch-up, so refuse
-                // it politely (the run continues on survivors).
+                Msg::Join { actor: ja, prior_tau, region } => {
+                    ensure!(ja == actor, "join from actor {actor} claims actor {ja}");
+                    bootstrap_joiner(hub, ep, mem, actor, prior_tau, region)?;
+                }
+                Msg::Draining { actor: da } => {
+                    ensure!(da == actor, "drain notice from actor {actor} claims actor {da}");
+                    // Spot-preemption warning: stop scheduling the actor
+                    // and let its in-flight leases race the reclaim. If
+                    // it finishes in time it drains cleanly; if the kill
+                    // lands first, the Down below is a Preempted failover.
+                    if mem.alive.contains(&actor) && mem.warned.insert(actor) {
+                        mem.draining.insert(actor);
+                        hub.sched.set_alive(actor, false);
+                        if hub.cfg.verbose {
+                            eprintln!("actor {actor} warned of preemption; draining");
+                        }
+                        hub.emit(SessionEvent::Preempted { actor });
+                    }
+                }
+                // A Hello after the run started is a stray reconnect
+                // attempt; live rejoin runs through Invite/Join with a
+                // real bootstrap, so refuse the bare handshake politely
+                // (the run continues on survivors).
                 Msg::Hello { .. } => {
                     let _ = ep.send(actor, Msg::Bye);
                 }
-                Msg::Bye => fail_actor(hub, ep, alive, &mut want_acks, slots, actor, "left")?,
+                Msg::Bye => handle_bye(hub, ep, mem, &mut want_acks, slots, actor)?,
                 other => bail!("unexpected message from actor {actor}: {other:?}"),
             },
             Polled::Event(Event::Down { actor, reason }) => {
-                fail_actor(hub, ep, alive, &mut want_acks, slots, actor, &reason)?;
+                let why = classify_down(mem, actor, &reason);
+                fail_actor(hub, ep, mem, &mut want_acks, slots, actor, why)?;
             }
             Polled::TimedOut => {
                 // Idle tick: run the lease-expiry sweep. Under the manual
                 // deterministic clock nothing ever expires; on the wall
                 // clock this is the paper's implicit failure detector for
                 // partitioned (silent) actors.
-                expiry_sweep(hub, ep, alive, &mut want_acks, slots)?;
-                if slots.iter().all(|s| s.done) && !want_acks.is_empty() {
+                expiry_sweep(hub, ep, mem, &mut want_acks, slots)?;
+                if slots.iter().all(|s| s.done)
+                    && (!want_acks.is_empty() || !mem.joining.is_empty())
+                {
                     let now = Instant::now();
                     let deadline = *ack_grace.get_or_insert(now + ACK_TIMEOUT);
                     if now >= deadline {
@@ -1238,11 +1469,22 @@ fn collect_step<C: Compute>(
                             fail_actor(
                                 hub,
                                 ep,
-                                alive,
+                                mem,
                                 &mut want_acks,
                                 slots,
                                 actor,
-                                "commit ack timeout (silent partition)",
+                                FailReason::Partition,
+                            )?;
+                        }
+                        for actor in mem.joining.keys().copied().collect::<Vec<_>>() {
+                            fail_actor(
+                                hub,
+                                ep,
+                                mem,
+                                &mut want_acks,
+                                slots,
+                                actor,
+                                FailReason::Partition,
                             )?;
                         }
                     }
@@ -1250,6 +1492,7 @@ fn collect_step<C: Compute>(
             }
             Polled::Closed => bail!("transport closed before step {step} completed"),
         }
+        try_release_drained(hub, ep, mem, &want_acks, slots)?;
     }
     Ok(())
 }
@@ -1282,37 +1525,137 @@ fn finalize_slot<C: Compute>(hub: &mut Hub<C>, slot: &mut Slot, step: u64) -> Re
     Ok(())
 }
 
+/// Typed cause for a `Down` event: a warned actor was `Preempted`, a
+/// draining one `Left`; relay loss and plain crashes fall through on the
+/// transport's reason string.
+fn classify_down(mem: &Membership, actor: u32, reason: &str) -> FailReason {
+    if mem.warned.contains(&actor) {
+        FailReason::Preempted
+    } else if mem.draining.contains(&actor) {
+        FailReason::Left
+    } else if reason.contains("relay") {
+        FailReason::RelayLost
+    } else {
+        FailReason::Crash
+    }
+}
+
+/// In-process relay trees cannot fail a *relay* over: segments queued
+/// in its dropped mailbox are gone, so peers mid-staging would wait on
+/// a window nobody can retransmit — and their parked commits would
+/// never ack. Abort loudly (the pre-failover behavior) instead of
+/// hanging; flat InProc, Sim, and Tcp topologies fail over fully.
+fn check_relay_loss<C: Compute>(hub: &Hub<C>, actor: u32, why: &str) -> Result<()> {
+    if let Some(spec) = &hub.cfg.distribution {
+        if !spec.is_flat() && spec.relays().contains(&(actor as usize)) {
+            bail!(
+                "relay actor {actor} lost mid-run ({why}); in-process relay-tree \
+                 failover is unsupported — use a flat topology or --transport sim/tcp"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// A live actor announced a graceful departure (`Msg::Bye`): hand its
+/// leased prompts back without the failover penalty and re-issue them to
+/// survivors. Counted as a drain, never a failover.
+fn handle_bye<C: Compute>(
+    hub: &mut Hub<C>,
+    ep: &mut dyn HubEndpoint,
+    mem: &mut Membership,
+    want_acks: &mut BTreeSet<u32>,
+    slots: &mut [Slot],
+    actor: u32,
+) -> Result<()> {
+    if !mem.alive.remove(&actor) {
+        return Ok(()); // duplicate/stale departure notice
+    }
+    mem.draining.remove(&actor);
+    mem.warned.remove(&actor);
+    check_relay_loss(hub, actor, "left")?;
+    hub.sched.set_alive(actor, false);
+    want_acks.remove(&actor);
+    ep.set_active(actor, false);
+    hub.ledger.revoke_actor_without_penalty(actor);
+    if hub.cfg.verbose {
+        eprintln!("actor {actor} left gracefully; handing back its leases");
+    }
+    let requeued_before = hub.requeued;
+    reissue_orphans(hub, ep, mem, slots, actor)?;
+    hub.emit(SessionEvent::Draining { actor, requeued: hub.requeued - requeued_before });
+    Ok(())
+}
+
+/// Release scripted drains whose actors are fully idle: no unacked
+/// commit, no undone slot on them. The hub sends `Msg::Drain` (zero
+/// grace — there is nothing left to wait for) and the worker answers
+/// `Bye` and exits cleanly. Counted as a drain with zero requeued work.
+fn try_release_drained<C: Compute>(
+    hub: &mut Hub<C>,
+    ep: &mut dyn HubEndpoint,
+    mem: &mut Membership,
+    want_acks: &BTreeSet<u32>,
+    slots: &[Slot],
+) -> Result<()> {
+    let ready: Vec<u32> = mem
+        .draining
+        .iter()
+        .copied()
+        .filter(|a| {
+            mem.alive.contains(a)
+                && !want_acks.contains(a)
+                && !slots.iter().any(|s| !s.done && s.executing == *a)
+        })
+        .collect();
+    for actor in ready {
+        mem.alive.remove(&actor);
+        mem.draining.remove(&actor);
+        ep.set_active(actor, false);
+        // A failed send means the link died first; the Down event will
+        // report it (classified Left — it was already draining).
+        let _ = ep.send(actor, Msg::Drain { grace_ms: 0 });
+        if hub.cfg.verbose {
+            eprintln!("actor {actor} drained; released");
+        }
+        hub.emit(SessionEvent::Draining { actor, requeued: 0 });
+    }
+    Ok(())
+}
+
 /// Remove a lost actor from the run: revoke its leases, exclude it from
 /// scheduling, stop waiting for its acks, and re-issue its unfinished
 /// slots to survivors — the §5.4 failover loop, no global restart.
 fn fail_actor<C: Compute>(
     hub: &mut Hub<C>,
     ep: &mut dyn HubEndpoint,
-    alive: &mut BTreeSet<u32>,
+    mem: &mut Membership,
     want_acks: &mut BTreeSet<u32>,
     slots: &mut [Slot],
     actor: u32,
-    reason: &str,
+    reason: FailReason,
 ) -> Result<()> {
-    if !alive.remove(&actor) {
+    // A joiner that dies mid-bootstrap never held leases or scheduler
+    // state: count the failover, drop the bootstrap, move on.
+    if mem.joining.remove(&actor).is_some() && !mem.alive.contains(&actor) {
+        hub.failures += 1;
+        ep.set_active(actor, false);
+        if hub.cfg.verbose {
+            eprintln!("joiner {actor} lost mid-bootstrap ({reason})");
+        }
+        hub.emit(SessionEvent::Failover { actor, requeued: 0, reason });
+        return Ok(());
+    }
+    if !mem.alive.remove(&actor) {
         return Ok(()); // duplicate report (write-path cut + reader EOF)
     }
-    // In-process relay trees cannot fail a *relay* over: segments queued
-    // in its dropped mailbox are gone, so peers mid-staging would wait on
-    // a window nobody can retransmit — and their parked commits would
-    // never ack. Abort loudly (the pre-failover behavior) instead of
-    // hanging; flat InProc, Sim, and Tcp topologies fail over fully.
-    if let Some(spec) = &hub.cfg.distribution {
-        if !spec.is_flat() && spec.relays().contains(&(actor as usize)) {
-            bail!(
-                "relay actor {actor} lost mid-run ({reason}); in-process relay-tree \
-                 failover is unsupported — use a flat topology or --transport sim/tcp"
-            );
-        }
-    }
+    mem.draining.remove(&actor);
+    mem.warned.remove(&actor);
+    check_relay_loss(hub, actor, &reason.to_string())?;
     hub.failures += 1;
     hub.sched.set_alive(actor, false);
     want_acks.remove(&actor);
+    ep.set_active(actor, false);
     // Lease hygiene: expiry would reclaim these anyway; an explicit
     // failure signal just shortens the window.
     hub.ledger.revoke_actor(actor);
@@ -1320,23 +1663,24 @@ fn fail_actor<C: Compute>(
         eprintln!("actor {actor} lost ({reason}); failing over");
     }
     let requeued_before = hub.requeued;
-    reissue_orphans(hub, ep, alive, slots, actor)?;
-    hub.emit(SessionEvent::Failover { actor, requeued: hub.requeued - requeued_before });
+    reissue_orphans(hub, ep, mem, slots, actor)?;
+    hub.emit(SessionEvent::Failover { actor, requeued: hub.requeued - requeued_before, reason });
     Ok(())
 }
 
 /// Re-lease a lost actor's unfinished slots to the lowest-numbered
-/// survivor (deterministic choice), preserving each job's prompt order
-/// and RNG seed so the regenerated rollouts are bit-identical.
+/// non-draining survivor (deterministic choice), preserving each job's
+/// prompt order and RNG seed so the regenerated rollouts are
+/// bit-identical.
 fn reissue_orphans<C: Compute>(
     hub: &mut Hub<C>,
     ep: &mut dyn HubEndpoint,
-    alive: &BTreeSet<u32>,
+    mem: &Membership,
     slots: &mut [Slot],
     dead: u32,
 ) -> Result<()> {
     for slot in slots.iter_mut().filter(|s| !s.done && s.executing == dead) {
-        let Some(&survivor) = alive.iter().next() else {
+        let Some(&survivor) = mem.alive.iter().find(|a| !mem.draining.contains(a)) else {
             bail!("actor {dead} failed with no survivors to absorb its work");
         };
         let now = hub.lease_now();
@@ -1373,7 +1717,7 @@ fn reissue_orphans<C: Compute>(
 fn expiry_sweep<C: Compute>(
     hub: &mut Hub<C>,
     ep: &mut dyn HubEndpoint,
-    alive: &mut BTreeSet<u32>,
+    mem: &mut Membership,
     want_acks: &mut BTreeSet<u32>,
     slots: &mut [Slot],
 ) -> Result<()> {
@@ -1388,7 +1732,177 @@ fn expiry_sweep<C: Compute>(
         .map(|s| s.executing)
         .collect();
     for actor in stalled {
-        fail_actor(hub, ep, alive, want_acks, slots, actor, "leases expired (stall/partition)")?;
+        fail_actor(hub, ep, mem, want_acks, slots, actor, FailReason::Stall)?;
     }
     Ok(())
+}
+
+/// Fire the scripted membership changes pinned to the hub's current
+/// version: invite joiners (they bootstrap and get admitted inside the
+/// following `collect_step`), start scripted drains, and give the
+/// cost-model autoscaler its say at the same boundary.
+fn run_membership_script<C: Compute>(
+    hub: &mut Hub<C>,
+    ep: &mut dyn HubEndpoint,
+    mem: &mut Membership,
+) -> Result<()> {
+    let v = hub.version;
+    let joins: Vec<JoinSpec> =
+        hub.cfg.elastic.joins.iter().copied().filter(|j| j.at_version == v).collect();
+    for js in joins {
+        if mem.alive.contains(&js.actor) || mem.joining.contains_key(&js.actor) {
+            continue;
+        }
+        ep.send(js.actor, Msg::Invite { actor: js.actor })
+            .map_err(|_| anyhow!("scripted joiner {} unreachable at invite", js.actor))?;
+        mem.joining.insert(
+            js.actor,
+            JoinInFlight {
+                version: v,
+                bootstrap: js.bootstrap,
+                bytes: 0,
+                prior_tau: 1000.0,
+                region: 0,
+                announced: false,
+            },
+        );
+        if hub.cfg.verbose {
+            eprintln!("invited joiner {} at v{v} ({})", js.actor, js.bootstrap.name());
+        }
+    }
+    let leaves: Vec<LeaveSpec> =
+        hub.cfg.elastic.leaves.iter().copied().filter(|l| l.at_version == v).collect();
+    for ls in leaves {
+        if mem.alive.contains(&ls.actor) && mem.draining.insert(ls.actor) {
+            hub.sched.set_alive(ls.actor, false);
+            if hub.cfg.verbose {
+                eprintln!("draining actor {} at v{v} (scripted leave)", ls.actor);
+            }
+        }
+    }
+    autoscale_tick(hub, mem);
+    Ok(())
+}
+
+/// An invited actor announced itself (`Msg::Join`): ship it the active
+/// policy. Delta-chain bootstrap replays `D_1..D_v` from the checkpoint
+/// store through the actor's ordinary staging decoder; snapshot
+/// bootstrap sends the dense policy in one message. Either way the
+/// joiner's `Activated` ack carries its SHA-256 policy witness, checked
+/// in [`admit_joiner`] before it gets its first lease.
+fn bootstrap_joiner<C: Compute>(
+    hub: &mut Hub<C>,
+    ep: &mut dyn HubEndpoint,
+    mem: &mut Membership,
+    actor: u32,
+    prior_tau: f64,
+    region: u32,
+) -> Result<()> {
+    {
+        let jf = mem
+            .joining
+            .get_mut(&actor)
+            .ok_or_else(|| anyhow!("uninvited join announcement from actor {actor}"))?;
+        ensure!(!jf.announced, "duplicate join announcement from actor {actor}");
+        jf.announced = true;
+        jf.prior_tau = prior_tau;
+        jf.region = region;
+    }
+    let v = mem.joining[&actor].version;
+    ensure!(
+        v == hub.version,
+        "joiner {actor} invited at v{v} but hub moved to v{}",
+        hub.version
+    );
+    let mut sent: u64 = 0;
+    match mem.joining[&actor].bootstrap {
+        BootstrapKind::Snapshot => {
+            let data = hub.policy.to_snapshot_bytes();
+            sent += data.len() as u64;
+            ep.send(actor, Msg::Snapshot { version: v, hash: hub.version_hash, data })
+                .map_err(|_| anyhow!("joiner {actor} link down during snapshot bootstrap"))?;
+        }
+        BootstrapKind::DeltaChain => {
+            for ver in 1..=v {
+                let ckpt = hub
+                    .store
+                    .get(ver)
+                    .ok_or_else(|| anyhow!("delta chain broken: D_{ver} not in store"))?;
+                sent += ckpt.payload_bytes();
+                for seg in split_into_segments(ver, &ckpt.bytes, hub.cfg.segment_bytes) {
+                    ep.send(actor, Msg::Seg(seg))
+                        .map_err(|_| anyhow!("joiner {actor} link down during chain replay"))?;
+                }
+            }
+            ep.send(actor, Msg::Commit { version: v })
+                .map_err(|_| anyhow!("joiner {actor} link down during chain replay"))?;
+        }
+    }
+    let jf = mem.joining.get_mut(&actor).expect("still joining");
+    jf.bytes += sent;
+    if hub.cfg.verbose {
+        eprintln!("bootstrapping joiner {actor} to v{v}: {sent} B ({})", jf.bootstrap.name());
+    }
+    Ok(())
+}
+
+/// A bootstrapping joiner echoed `Activated`: verify its SHA-256 policy
+/// witness against the trainer's committed checksum, then admit it to
+/// the scheduler, the broadcast fan-out, and the lease pool.
+fn admit_joiner<C: Compute>(
+    hub: &mut Hub<C>,
+    ep: &mut dyn HubEndpoint,
+    mem: &mut Membership,
+    actor: u32,
+    version: u64,
+    hash: [u8; 32],
+) -> Result<()> {
+    let jf = &mem.joining[&actor];
+    ensure!(jf.announced, "joiner {actor} acked before announcing itself");
+    ensure!(
+        version == jf.version,
+        "joiner {actor} activated v{version}, bootstrap targeted v{}",
+        jf.version
+    );
+    ensure!(
+        version >= 1 && hash == hub.accum[(version - 1) as usize].policy_checksum,
+        "joiner {actor} diverged from trainer policy at v{version}"
+    );
+    let jf = mem.joining.remove(&actor).expect("checked above");
+    hub.sched.admit(actor, jf.prior_tau, version, jf.region as usize);
+    mem.alive.insert(actor);
+    ep.set_active(actor, true);
+    if hub.cfg.verbose {
+        eprintln!("joiner {actor} admitted at v{version} ({} B)", jf.bytes);
+    }
+    hub.emit(SessionEvent::Joined { actor, version, bootstrap: jf.bootstrap, bytes: jf.bytes });
+    Ok(())
+}
+
+/// Advisory autoscaler tick: price the live fleet against the reserved
+/// RDMA tokens-per-dollar line using the previous step's measured
+/// generation throughput and delta egress, and emit the typed decision.
+/// Purely observational — scripted membership stays the only mutator,
+/// so decisions never perturb determinism.
+fn autoscale_tick<C: Compute>(hub: &mut Hub<C>, mem: &Membership) {
+    if !hub.cfg.elastic.autoscale || hub.version == 0 || mem.alive.is_empty() {
+        return;
+    }
+    let v = hub.version;
+    let a = hub.accum[(v - 1) as usize];
+    let n_alive = mem.alive.len();
+    let mean_tau = mem
+        .alive
+        .iter()
+        .map(|&x| hub.sched.tau(x).unwrap_or(1000.0))
+        .sum::<f64>()
+        / n_alive as f64;
+    let per_actor = (a.gen_tokens as f64 / n_alive as f64) / mean_tau.max(1e-9);
+    let step_s = mean_tau.max(1e-3);
+    let fleet_tps = a.gen_tokens as f64 / step_s;
+    let line = reserved_line(&hub.cfg.model, fleet_tps).unwrap_or_else(|| {
+        Deployment::reserved_rdma("reserve-line", GpuClass::H100, 8).tokens_per_dollar(fleet_tps)
+    });
+    let decision = Autoscaler::new(1, line).decide(n_alive, per_actor, a.payload_bytes, step_s);
+    hub.emit(SessionEvent::Autoscale { version: v, decision });
 }

@@ -155,6 +155,18 @@ impl Scheduler {
         );
     }
 
+    /// Admit an elastically-joined actor mid-run: register its capability
+    /// prior, record the version it was bootstrapped to (a fresh
+    /// [`Self::register`] would claim version 0 and never pass the
+    /// eligibility gate), and tag its region for the bandwidth gate. The
+    /// caller invokes this only after the joiner's policy witness
+    /// verified, so the version state is trustworthy.
+    pub fn admit(&mut self, actor: ActorId, prior_tau: f64, version: u64, region: usize) {
+        self.register(actor, prior_tau);
+        self.observe_version(actor, VersionState { active: version, staged: None });
+        self.set_region(actor, region);
+    }
+
     pub fn deregister(&mut self, actor: ActorId) {
         if let Some(a) = self.actors.get_mut(&actor) {
             a.alive = false;

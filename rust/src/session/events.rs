@@ -3,13 +3,15 @@
 //! [`RunReport`] — the single source of truth for both: the report is
 //! *derived from* the events, so the two cannot disagree.
 
-use crate::rt::{RunReport, StepLog};
+use crate::cost::ScaleDecision;
 use crate::metrics::Timeline;
+use crate::rt::{BootstrapKind, FailReason, RunReport, StepLog};
 
 /// One observable moment of a running session, in emission order:
 /// `SftStep*` (warmup), then per RL version `DeltaStreamed` →
-/// `Committed` → `StepCompleted`, with `Failover` interleaved whenever an
-/// actor is lost, and `Finished` as the final event of a successful run.
+/// `Committed` → `StepCompleted`, with membership events (`Joined`,
+/// `Draining`, `Preempted`, `Failover`, `Autoscale`) interleaved as the
+/// fleet changes, and `Finished` as the final event of a successful run.
 ///
 /// All events are emitted by the trainer hub's thread; a `Session`
 /// delivers them through `recv()`/`try_iter()` on the caller's thread.
@@ -27,10 +29,26 @@ pub enum Event {
     /// The trainer committed `version`; `checksum` is the SHA-256 policy
     /// witness every actor must echo in its `Activated` ack.
     Committed { version: u64, checksum: [u8; 32] },
+    /// A new actor was admitted mid-run: bootstrapped to `version` via
+    /// `bootstrap` (`bytes` on the wire), its SHA-256 policy witness
+    /// verified against the hub's, then entered into the scheduler.
+    Joined { actor: u32, version: u64, bootstrap: BootstrapKind, bytes: u64 },
+    /// An actor departed gracefully: its leased prompts (if any) were
+    /// handed back and re-issued without a failover penalty.
+    Draining { actor: u32, requeued: u64 },
+    /// A spot-preemption warning arrived: the actor announced it is
+    /// about to be reclaimed. The hub stops scheduling it; if the kill
+    /// lands before its leases settle, the `Failover` that follows
+    /// carries `FailReason::Preempted`.
+    Preempted { actor: u32 },
     /// Lease-driven failover absorbed a lost actor: `requeued` of its
     /// leased prompts were re-issued to survivors (original order + RNG
-    /// seed, so regeneration is bit-identical).
-    Failover { actor: u32, requeued: u64 },
+    /// seed, so regeneration is bit-identical). `reason` is the typed
+    /// cause — graceful drains never appear here.
+    Failover { actor: u32, requeued: u64, reason: FailReason },
+    /// The cost-model autoscaler evaluated the fleet at a step boundary
+    /// and emitted a typed decision (advisory; see `cost::Autoscaler`).
+    Autoscale { version: u64, decision: ScaleDecision },
     /// The run completed; the report was assembled from this very event
     /// stream (by the crate-internal `ReportAssembler`).
     Finished(RunReport),
@@ -55,6 +73,9 @@ pub(crate) struct ReportAssembler {
     steps: Vec<StepLog>,
     failovers: u64,
     requeued: u64,
+    joins: u64,
+    drains: u64,
+    preempts: u64,
 }
 
 impl ReportAssembler {
@@ -66,7 +87,16 @@ impl ReportAssembler {
                 self.failovers += 1;
                 self.requeued += *requeued;
             }
-            Event::DeltaStreamed { .. } | Event::Committed { .. } | Event::Finished(_) => {}
+            Event::Joined { .. } => self.joins += 1,
+            Event::Draining { requeued, .. } => {
+                self.drains += 1;
+                self.requeued += *requeued;
+            }
+            Event::Preempted { .. } => self.preempts += 1,
+            Event::DeltaStreamed { .. }
+            | Event::Committed { .. }
+            | Event::Autoscale { .. }
+            | Event::Finished(_) => {}
         }
     }
 
@@ -79,6 +109,9 @@ impl ReportAssembler {
             timeline: tail.timeline,
             failovers: self.failovers,
             requeued_prompts: self.requeued,
+            joins: self.joins,
+            drains: self.drains,
+            preempts: self.preempts,
         }
     }
 }

@@ -14,7 +14,10 @@ use crate::config;
 use crate::data::Benchmark;
 use crate::ledger::LeasePolicy;
 use crate::netsim::Link;
-use crate::rt::{DistributionSpec, ExecMode, LocalRunConfig, TransportKind};
+use crate::rt::{
+    BootstrapKind, DistributionSpec, ElasticSpec, ExecMode, JoinSpec, LeaveSpec, LocalRunConfig,
+    TransportKind,
+};
 use crate::trainer::Algorithm;
 use crate::transport::{DistributionPlan, SimNetConfig, TcpConfig};
 use std::fmt;
@@ -98,9 +101,25 @@ pub enum SpecError {
     DistributionMismatch { covers: usize, actors: usize },
     /// `distribution(..)` and `wan(..)` both describe a relay tree.
     DistributionConflictsWithWan,
+    /// Scripted joins/leaves need a backend whose fleet can change at
+    /// runtime; the netsim fleet is fixed at topology-build time.
+    ElasticConflictsWithSim,
+    /// Elastic membership streams hub→actor directly; relay trees (WAN
+    /// presets or explicit non-flat distributions) cannot rewire live.
+    ElasticConflictsWithRelayTree,
+    /// Scripted joiners must extend the day-one fleet contiguously: with
+    /// `actors(n)` and `j` joins, the joiner ids must be exactly
+    /// `n..n+j`, one each.
+    ElasticJoinerIds { actors: usize, joins: usize },
+    /// A scripted membership change is pinned to a version the run never
+    /// commits (valid pins are `1..=steps`), or names an unknown actor.
+    ElasticVersionOutOfRange { actor: u32, version: u64, steps: u64 },
     ZeroActors,
     ZeroGroupSize,
     ZeroSegmentBytes,
+    /// `LeasePolicy::sweep_ms` is the collect-loop poll interval; zero
+    /// would spin the hub thread.
+    ZeroSweepInterval,
 }
 
 impl fmt::Display for SpecError {
@@ -148,9 +167,30 @@ impl fmt::Display for SpecError {
                 f,
                 "wan(..) derives the relay tree itself; drop the explicit distribution(..)"
             ),
+            SpecError::ElasticConflictsWithSim => write!(
+                f,
+                "scripted joins/leaves need the inproc or tcp backend (the netsim fleet is fixed)"
+            ),
+            SpecError::ElasticConflictsWithRelayTree => write!(
+                f,
+                "elastic membership streams hub→actor directly; drop wan(..)/distribution(..)"
+            ),
+            SpecError::ElasticJoinerIds { actors, joins } => write!(
+                f,
+                "scripted joiners must be actors {actors}..{} exactly (one id each)",
+                actors + joins
+            ),
+            SpecError::ElasticVersionOutOfRange { actor, version, steps } => write!(
+                f,
+                "membership change for actor {actor} pinned at v{version} outside 1..={steps} \
+                 (or the actor id is outside the fleet)"
+            ),
             SpecError::ZeroActors => write!(f, "need at least one actor"),
             SpecError::ZeroGroupSize => write!(f, "group_size must be at least 1"),
             SpecError::ZeroSegmentBytes => write!(f, "segment_bytes must be at least 1"),
+            SpecError::ZeroSweepInterval => {
+                write!(f, "lease sweep_ms must be at least 1 (it paces the hub's poll loop)")
+            }
         }
     }
 }
@@ -216,6 +256,7 @@ pub struct RunSpec {
     wan: Option<String>,
     backend: Backend,
     distribution: Option<DistributionSpec>,
+    elastic: ElasticSpec,
 }
 
 impl RunSpec {
@@ -243,6 +284,7 @@ impl RunSpec {
             wan: None,
             backend: Backend::InProc,
             distribution: None,
+            elastic: ElasticSpec::default(),
         }
     }
 
@@ -390,6 +432,40 @@ impl RunSpec {
         self
     }
 
+    /// Script a live join: `actor` (which must extend the day-one fleet
+    /// contiguously — actor ids `n..n+joins`) is invited once the trainer
+    /// commits `version`, bootstraps via `bootstrap`, and enters the
+    /// scheduler after its SHA-256 policy witness verifies.
+    pub fn join_at(mut self, actor: u32, version: u64, bootstrap: BootstrapKind) -> RunSpec {
+        self.elastic.joins.push(JoinSpec { actor, at_version: version, bootstrap });
+        self
+    }
+
+    /// Script a graceful leave: once the trainer commits `version` the
+    /// hub stops scheduling `actor`, lets its in-flight leases settle,
+    /// and releases it with a drain handshake (counted in
+    /// `RunReport::drains`, never `failovers`).
+    pub fn leave_at(mut self, actor: u32, version: u64) -> RunSpec {
+        self.elastic.leaves.push(LeaveSpec { actor, at_version: version });
+        self
+    }
+
+    /// Evaluate the cost-model autoscaler each step and emit typed
+    /// `Event::Autoscale` decisions (advisory; the fleet only follows
+    /// the explicit join/leave script).
+    pub fn autoscale(mut self) -> RunSpec {
+        self.elastic.autoscale = true;
+        self
+    }
+
+    /// Collect-loop poll / lease-expiry sweep interval override
+    /// (milliseconds; shorthand for setting `LeasePolicy::sweep_ms`
+    /// through [`RunSpec::lease`]).
+    pub fn lease_sweep_ms(mut self, ms: u64) -> RunSpec {
+        self.lease.sweep_ms = ms;
+        self
+    }
+
     /// Validate every cross-field rule and freeze the configuration.
     /// Illegal combinations return a typed [`SpecError`]; legal
     /// auto-coercions are recorded as [`SpecNote`]s on the plan.
@@ -411,6 +487,9 @@ impl RunSpec {
         }
         if self.segment_bytes == 0 {
             return Err(SpecError::ZeroSegmentBytes);
+        }
+        if self.lease.sweep_ms == 0 {
+            return Err(SpecError::ZeroSweepInterval);
         }
 
         // -- WAN preset → fleet size --------------------------------------
@@ -445,6 +524,8 @@ impl RunSpec {
         // -- executor mode: explicit wins, features coerce ----------------
         let needs_pipeline: Option<&'static str> = if preset.is_some() {
             Some("a WAN preset")
+        } else if !self.elastic.is_empty() {
+            Some("elastic membership")
         } else {
             match &self.backend {
                 Backend::Sim | Backend::SimNet(_) => Some("the sim transport"),
@@ -533,6 +614,46 @@ impl RunSpec {
             }
         };
 
+        // -- elastic membership -------------------------------------------
+        if !self.elastic.joins.is_empty() || !self.elastic.leaves.is_empty() {
+            if matches!(transport, TransportKind::Sim(_)) {
+                return Err(SpecError::ElasticConflictsWithSim);
+            }
+            if preset.is_some() || distribution.as_ref().map_or(false, |d| !d.is_flat()) {
+                return Err(SpecError::ElasticConflictsWithRelayTree);
+            }
+            let n_total = n_actors + self.elastic.joins.len();
+            let mut ids: Vec<u32> = self.elastic.joins.iter().map(|j| j.actor).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            if ids.len() != self.elastic.joins.len()
+                || ids != (n_actors as u32..n_total as u32).collect::<Vec<u32>>()
+            {
+                return Err(SpecError::ElasticJoinerIds {
+                    actors: n_actors,
+                    joins: self.elastic.joins.len(),
+                });
+            }
+            for j in &self.elastic.joins {
+                if !(1..=self.steps).contains(&j.at_version) {
+                    return Err(SpecError::ElasticVersionOutOfRange {
+                        actor: j.actor,
+                        version: j.at_version,
+                        steps: self.steps,
+                    });
+                }
+            }
+            for l in &self.elastic.leaves {
+                if (l.actor as usize) >= n_total || !(1..=self.steps).contains(&l.at_version) {
+                    return Err(SpecError::ElasticVersionOutOfRange {
+                        actor: l.actor,
+                        version: l.at_version,
+                        steps: self.steps,
+                    });
+                }
+            }
+        }
+
         let cfg = LocalRunConfig {
             model: self.model,
             algorithm: self.algorithm,
@@ -553,6 +674,7 @@ impl RunSpec {
             transport,
             lease: self.lease,
             wall_leases: self.wall_leases,
+            elastic: self.elastic,
         };
         Ok(RunPlan { cfg, mode, notes, synthetic: self.synthetic })
     }

@@ -88,6 +88,14 @@ pub trait HubEndpoint {
     /// Wait up to `timeout` for the next delivery.
     fn poll(&mut self, timeout: Duration) -> Polled;
 
+    /// Include/exclude `actor` from `broadcast_seg` fan-out. Elastic
+    /// membership: a dormant spare (launched but not yet joined) and a
+    /// drained actor must not receive delta streams — a joiner earns the
+    /// live stream only once admitted, and its catch-up happens through
+    /// explicit per-actor bootstrap sends. Direct `send` is unaffected
+    /// (the hub still needs to `Invite`/`Drain` inactive actors).
+    fn set_active(&mut self, actor: u32, active: bool);
+
     /// Orderly shutdown: `Bye` to every live actor, then close links.
     fn shutdown(&mut self);
 }
@@ -183,9 +191,12 @@ struct InProcHub {
     /// region (the relay) with direct-fetch fallback for its peers.
     spec: DistributionSpec,
     /// Global actor indices per region (relay first), precomputed once —
-    /// the membership is fixed for the run and `broadcast_seg` sits on
+    /// the topology is fixed for the run and `broadcast_seg` sits on
     /// the per-segment delta hot path.
     region_members: Vec<Vec<usize>>,
+    /// Broadcast membership: dormant spares and drained actors are
+    /// excluded from segment fan-out (elastic joins/leaves flip this).
+    active: Vec<bool>,
 }
 
 impl InProcHub {
@@ -200,7 +211,8 @@ impl InProcHub {
                     .collect()
             })
             .collect();
-        InProcHub { to, events, spec, region_members }
+        let active = vec![true; to.len()];
+        InProcHub { to, events, spec, region_members, active }
     }
 
     fn seg_to(&self, actor: usize, seg: &Segment) -> bool {
@@ -222,7 +234,13 @@ impl HubEndpoint for InProcHub {
     fn broadcast_seg(&mut self, seg: Segment) {
         if self.spec.is_flat() {
             // Move the segment into its last target; clone for the rest.
-            let live: Vec<&Sender<Msg>> = self.to.iter().filter_map(|t| t.as_ref()).collect();
+            let live: Vec<&Sender<Msg>> = self
+                .to
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| self.active.get(i).copied().unwrap_or(true))
+                .filter_map(|(_, t)| t.as_ref())
+                .collect();
             let Some((last, rest)) = live.split_last() else { return };
             for tx in rest {
                 let _ = tx.send(Msg::Seg(seg.clone()));
@@ -252,6 +270,12 @@ impl HubEndpoint for InProcHub {
             Ok(e) => Polled::Event(e),
             Err(RecvTimeoutError::Timeout) => Polled::TimedOut,
             Err(RecvTimeoutError::Disconnected) => Polled::Closed,
+        }
+    }
+
+    fn set_active(&mut self, actor: u32, active: bool) {
+        if let Some(a) = self.active.get_mut(actor as usize) {
+            *a = active;
         }
     }
 
@@ -456,6 +480,10 @@ impl HubEndpoint for SimHub {
 
     fn poll(&mut self, timeout: Duration) -> Polled {
         self.inner.poll(timeout)
+    }
+
+    fn set_active(&mut self, actor: u32, active: bool) {
+        self.inner.set_active(actor, active);
     }
 
     fn shutdown(&mut self) {

@@ -42,6 +42,15 @@ pub enum KillMode {
     /// Keep sockets open but stop replying or applying anything: only
     /// lease expiry can detect it (network partition, GPU hang).
     Stall,
+    /// Spot preemption with notice: the actor sends a `Msg::Draining`
+    /// warning on its control stream the moment the trigger job arrives,
+    /// keeps working through the warning window, then all sockets slam
+    /// shut `warn_ms` later. Because warning and EOF share the FIFO
+    /// control stream, the hub always observes the warning first — a
+    /// generous window lets the drain complete gracefully; `warn_ms: 0`
+    /// kills before the actor even sees the trigger job, so its leases
+    /// take the ordinary reissue path.
+    Preempt { warn_ms: u64 },
 }
 
 /// Fault injection: kill `actor` when it receives a job for
@@ -61,13 +70,14 @@ pub struct TcpConfig {
     /// Aggregate hub→actor segment bandwidth emulation (token-bucket per
     /// stream at `bits_per_s / streams`), `None` = unthrottled loopback.
     pub bits_per_s: Option<f64>,
-    /// Optional injected failure (fault-tolerance tests).
-    pub kill: Option<KillSpec>,
+    /// Injected failures, at most one per actor (fault scripts mixing
+    /// crash, stall, and preemption across the fleet).
+    pub kills: Vec<KillSpec>,
 }
 
 impl Default for TcpConfig {
     fn default() -> TcpConfig {
-        TcpConfig { streams: 1, bits_per_s: None, kill: None }
+        TcpConfig { streams: 1, bits_per_s: None, kills: Vec::new() }
     }
 }
 
@@ -101,7 +111,7 @@ impl Transport for TcpTransport {
         // Actor side: one thread per actor, connecting back to the hub.
         for i in 0..n {
             let actor = i as u32;
-            let kill = self.cfg.kill.filter(|k| k.actor == actor);
+            let kill = self.cfg.kills.iter().find(|k| k.actor == actor).copied();
             scope.spawn(move || actor_shell(addr, actor, streams, kill, runner));
         }
 
@@ -125,6 +135,7 @@ impl Transport for TcpTransport {
             })
             .collect();
         Ok(Box::new(TcpHub {
+            active: vec![true; n],
             writers: writers.into_iter().map(Some).collect(),
             throttles,
             events: ev_rx,
@@ -214,6 +225,9 @@ struct TcpHub {
     /// readers' own Down reports.
     pending: VecDeque<Event>,
     streams: usize,
+    /// Broadcast membership: dormant spares and drained actors keep their
+    /// sockets but receive no delta stream until admitted.
+    active: Vec<bool>,
 }
 
 impl TcpHub {
@@ -248,6 +262,9 @@ impl HubEndpoint for TcpHub {
         let frame = Msg::Seg(seg).to_frame();
         let mut dead: Vec<(usize, String)> = Vec::new();
         for (a, slot) in self.writers.iter_mut().enumerate() {
+            if !self.active.get(a).copied().unwrap_or(true) {
+                continue;
+            }
             let Some(socks) = slot.as_mut() else { continue };
             if let Some(t) = self.throttles[a][stripe].as_mut() {
                 t.pace(frame.len());
@@ -269,6 +286,12 @@ impl HubEndpoint for TcpHub {
             Ok(e) => Polled::Event(e),
             Err(RecvTimeoutError::Timeout) => Polled::TimedOut,
             Err(RecvTimeoutError::Disconnected) => Polled::Closed,
+        }
+    }
+
+    fn set_active(&mut self, actor: u32, active: bool) {
+        if let Some(a) = self.active.get_mut(actor as usize) {
+            *a = active;
         }
     }
 
@@ -318,7 +341,15 @@ fn actor_shell(
             std::thread::spawn(move || shell_reader(rd, tx));
         }
         let ctrl = socks.remove(0);
-        Ok(TcpActorEndpoint { rx: in_rx, ctrl, extra: socks, kill, stalled: false })
+        Ok(TcpActorEndpoint {
+            actor,
+            rx: in_rx,
+            ctrl,
+            extra: socks,
+            kill,
+            stalled: false,
+            preempt_deadline: None,
+        })
     })();
     let Ok(mut ep) = launched else {
         // Connect failed: the hub's accept loop times out and reports.
@@ -342,6 +373,7 @@ fn shell_reader(mut sock: TcpStream, tx: Sender<Msg>) {
 }
 
 struct TcpActorEndpoint {
+    actor: u32,
     rx: Receiver<Msg>,
     /// Stripe-0 write half (all actor→hub traffic).
     ctrl: TcpStream,
@@ -349,25 +381,51 @@ struct TcpActorEndpoint {
     extra: Vec<TcpStream>,
     kill: Option<KillSpec>,
     stalled: bool,
+    /// Hard-kill time of an in-flight preemption warning.
+    preempt_deadline: Option<Instant>,
 }
 
 impl TcpActorEndpoint {
+    fn slam(&mut self) -> Closed {
+        let _ = self.ctrl.shutdown(Shutdown::Both);
+        for s in &self.extra {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        Closed
+    }
+
     /// Apply fault injection; `Ok(None)` means the message was swallowed
     /// (stalled) and the caller should keep receiving.
     fn intercept(&mut self, msg: Msg) -> Result<Option<Msg>, Closed> {
         if let Some(k) = self.kill {
             if matches!(&msg, Msg::Job { version, .. } if *version >= k.at_version) {
                 match k.mode {
-                    KillMode::Crash => {
-                        let _ = self.ctrl.shutdown(Shutdown::Both);
-                        for s in &self.extra {
-                            let _ = s.shutdown(Shutdown::Both);
-                        }
-                        return Err(Closed);
-                    }
+                    KillMode::Crash => return Err(self.slam()),
                     KillMode::Stall => self.stalled = true,
+                    KillMode::Preempt { warn_ms } => {
+                        if self.preempt_deadline.is_none() {
+                            // The spot warning: it shares the FIFO control
+                            // stream with the eventual EOF, so the hub is
+                            // guaranteed to see the warning first.
+                            let _ = write_msg(
+                                &mut self.ctrl,
+                                &Msg::Draining { actor: self.actor },
+                            );
+                            if warn_ms == 0 {
+                                // Notice too short to act on: die before
+                                // the trigger job is even seen, leaving
+                                // its leases to the reissue path.
+                                return Err(self.slam());
+                            }
+                            self.preempt_deadline =
+                                Some(Instant::now() + Duration::from_millis(warn_ms));
+                        }
+                    }
                 }
             }
+        }
+        if self.preempt_deadline.is_some_and(|d| Instant::now() >= d) {
+            return Err(self.slam());
         }
         if self.stalled {
             return Ok(None);
@@ -379,7 +437,19 @@ impl TcpActorEndpoint {
 impl ActorEndpoint for TcpActorEndpoint {
     fn recv(&mut self) -> Result<Msg, Closed> {
         loop {
-            let msg = self.rx.recv().map_err(|_| Closed)?;
+            // A pending hard kill bounds the wait so the deadline fires
+            // even while the hub has nothing to say.
+            let msg = match self.preempt_deadline {
+                None => self.rx.recv().map_err(|_| Closed)?,
+                Some(d) => {
+                    let left = d.saturating_duration_since(Instant::now());
+                    match self.rx.recv_timeout(left) {
+                        Ok(m) => m,
+                        Err(RecvTimeoutError::Timeout) => return Err(self.slam()),
+                        Err(RecvTimeoutError::Disconnected) => return Err(Closed),
+                    }
+                }
+            };
             if let Some(m) = self.intercept(msg)? {
                 return Ok(m);
             }
@@ -394,13 +464,21 @@ impl ActorEndpoint for TcpActorEndpoint {
                         return Ok(Some(m));
                     }
                 }
-                Err(TryRecvError::Empty) => return Ok(None),
+                Err(TryRecvError::Empty) => {
+                    if self.preempt_deadline.is_some_and(|d| Instant::now() >= d) {
+                        return Err(self.slam());
+                    }
+                    return Ok(None);
+                }
                 Err(TryRecvError::Disconnected) => return Err(Closed),
             }
         }
     }
 
     fn send(&mut self, msg: Msg) -> Result<(), Closed> {
+        if self.preempt_deadline.is_some_and(|d| Instant::now() >= d) {
+            return Err(self.slam());
+        }
         if self.stalled {
             return Ok(()); // partitioned: output is blackholed too
         }
@@ -482,7 +560,7 @@ mod tests {
         let t = TcpTransport::new(TcpConfig {
             streams: 1,
             bits_per_s: None,
-            kill: Some(KillSpec { actor: 1, at_version: 1, mode: KillMode::Crash }),
+            kills: vec![KillSpec { actor: 1, at_version: 1, mode: KillMode::Crash }],
         });
         std::thread::scope(|scope| {
             let mut ep = t.launch(scope, 2, &echo_runner).unwrap();

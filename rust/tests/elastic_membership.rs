@@ -1,0 +1,273 @@
+//! Elastic membership chaos suite (ISSUE 6): live joins with
+//! delta-chain / snapshot bootstrap, graceful scripted leaves,
+//! spot-preemption faults with and without a usable warning window, and
+//! fleet re-growth after a crash — all seeded and deterministic. The
+//! load-bearing property throughout: membership changes pinned to the
+//! final version boundary never perturb allocations, so the final
+//! committed policy is **bitwise identical** to the no-fault baseline,
+//! and every actor lost the hard way takes the PR-4 reissue path
+//! (exactly-once accounting, full batches).
+
+use sparrowrl::delta::ModelLayout;
+use sparrowrl::rt::{BootstrapKind, FailReason, RunReport, SyntheticCompute};
+use sparrowrl::session::{Backend, Event, RunSpec, Session, SpecError};
+use sparrowrl::transport::{KillMode, KillSpec, TcpConfig};
+
+fn layout() -> ModelLayout {
+    ModelLayout::transformer("syn-elastic", 256, 64, 2, 128)
+}
+
+/// Deterministic generation + wall-clock leases (stalls and preemptions
+/// genuinely time out while rollouts stay bit-reproducible).
+fn config(n_actors: usize, steps: u64, seed: u64) -> RunSpec {
+    RunSpec::synthetic()
+        .actors(n_actors)
+        .steps(steps)
+        .sft_steps(2)
+        .group_size(2)
+        .max_new_tokens(5)
+        .lr_rl(1e-2)
+        .segment_bytes(256)
+        .seed(seed)
+        .deterministic()
+        .wall_leases()
+        .pipelined()
+}
+
+fn run(spec: &RunSpec) -> RunReport {
+    run_with_events(spec).1
+}
+
+fn run_with_events(spec: &RunSpec) -> (Vec<Event>, RunReport) {
+    let plan = spec.clone().build().expect("valid spec");
+    let transport = plan.config().transport.name();
+    let mut session =
+        Session::start_with_compute(&plan, layout(), SyntheticCompute::new(16, 8, 64))
+            .expect("start session");
+    let mut events = Vec::new();
+    while let Some(ev) = session.recv() {
+        events.push(ev);
+    }
+    let report =
+        session.join().unwrap_or_else(|e| panic!("run over {transport} failed: {e:#}"));
+    (events, report)
+}
+
+fn tcp_with_kills(kills: Vec<KillSpec>) -> Backend {
+    Backend::Tcp(TcpConfig { streams: 2, bits_per_s: None, kills })
+}
+
+/// Jobs for step `s` are leased against version `max(s-1, 0)`, so a kill
+/// triggered at `steps - 2` hits exactly the final step's job.
+fn final_step_version(steps: u64) -> u64 {
+    steps - 2
+}
+
+/// Membership changes pinned at `steps - 1` fire after the final
+/// `plan_step` (the commit boundary the last batch trains into), so they
+/// can never change an allocation — the strongest determinism pin.
+fn final_boundary(steps: u64) -> u64 {
+    steps - 1
+}
+
+fn assert_steps_match(tag: &str, a: &RunReport, b: &RunReport) {
+    assert_eq!(a.final_version, b.final_version, "{tag}: final version");
+    for (x, y) in a.steps.iter().zip(&b.steps) {
+        assert_eq!(x.rho, y.rho, "{tag}: step {} rho", x.step);
+        assert_eq!(x.payload_bytes, y.payload_bytes, "{tag}: step {} payload", x.step);
+        assert_eq!(x.gen_tokens, y.gen_tokens, "{tag}: step {} gen tokens", x.step);
+        assert_eq!(x.mean_reward, y.mean_reward, "{tag}: step {} reward", x.step);
+        assert_eq!(
+            x.policy_checksum, y.policy_checksum,
+            "{tag}: step {} policy diverged from the no-fault baseline",
+            x.step
+        );
+    }
+}
+
+/// The single `Joined` event of a run with one scripted join.
+fn joined_of(events: &[Event]) -> (u32, u64, BootstrapKind, u64) {
+    let mut found = None;
+    for ev in events {
+        if let Event::Joined { actor, version, bootstrap, bytes } = ev {
+            assert!(found.is_none(), "more than one Joined event");
+            found = Some((*actor, *version, *bootstrap, *bytes));
+        }
+    }
+    found.expect("no Joined event")
+}
+
+#[test]
+fn join_at_final_boundary_is_bitwise_for_both_bootstrap_kinds() {
+    let steps = 4;
+    let base = config(3, steps, 7);
+    let baseline = run(&base);
+    assert_eq!(baseline.failovers, 0);
+    assert_eq!(baseline.joins, 0);
+
+    let v = final_boundary(steps);
+    let (chain_ev, chain) =
+        run_with_events(&base.clone().join_at(3, v, BootstrapKind::DeltaChain));
+    let (snap_ev, snap) = run_with_events(&base.clone().join_at(3, v, BootstrapKind::Snapshot));
+
+    for (tag, report) in [("chain", &chain), ("snapshot", &snap)] {
+        assert_eq!(report.joins, 1, "{tag}: one admitted joiner");
+        assert_eq!(report.failovers, 0, "{tag}: a join is not a failure");
+        assert_eq!(report.drains, 0, "{tag}");
+        assert_eq!(report.requeued_prompts, 0, "{tag}: nothing migrated");
+    }
+    // Verified bit-exactness: the joiner echoed the SHA-256 policy
+    // witness before admission, and the admission changed no allocation,
+    // so both elastic runs equal the fixed-fleet baseline — and hence
+    // the delta-chain joiner equals the snapshot joiner.
+    assert_steps_match("join:chain@final", &baseline, &chain);
+    assert_steps_match("join:snapshot@final", &baseline, &snap);
+
+    let (actor, version, kind, chain_bytes) = joined_of(&chain_ev);
+    assert_eq!((actor, version, kind), (3, v, BootstrapKind::DeltaChain));
+    let (_, _, _, snap_bytes) = joined_of(&snap_ev);
+    assert!(chain_bytes > 0 && snap_bytes > 0, "bootstrap bytes are accounted");
+}
+
+#[test]
+fn join_over_tcp_matches_the_inproc_baseline() {
+    let steps = 4;
+    let base = config(3, steps, 11);
+    let baseline = run(&base); // fixed-fleet InProc reference
+    let tcp = run(&base
+        .clone()
+        .join_at(3, final_boundary(steps), BootstrapKind::DeltaChain)
+        .transport(tcp_with_kills(vec![])));
+    assert_eq!(tcp.joins, 1);
+    assert_eq!(tcp.failovers, 0);
+    assert_steps_match("join over tcp", &baseline, &tcp);
+}
+
+#[test]
+fn scripted_leave_drains_without_a_failover() {
+    let steps = 4;
+    let base = config(3, steps, 19);
+    let baseline = run(&base);
+
+    for (tag, spec) in [
+        ("inproc", base.clone().leave_at(2, final_boundary(steps))),
+        (
+            "tcp",
+            base.clone()
+                .leave_at(2, final_boundary(steps))
+                .transport(tcp_with_kills(vec![])),
+        ),
+    ] {
+        let left = run(&spec);
+        assert_eq!(left.drains, 1, "{tag}: one graceful drain");
+        assert_eq!(left.failovers, 0, "{tag}: a drain is not a failure");
+        assert_eq!(left.preempts, 0, "{tag}");
+        assert_eq!(left.requeued_prompts, 0, "{tag}: leases settled before release");
+        assert_steps_match(tag, &baseline, &left);
+    }
+}
+
+#[test]
+fn preemption_without_warning_takes_the_reissue_path_bitwise() {
+    // warn_ms: 0 — the reclaim lands before the actor can act on the
+    // warning, so its leased prompts take the ordinary crash-failover
+    // path; the warning still types the loss as Preempted.
+    let steps = 4;
+    let base = config(3, steps, 23);
+    let baseline = run(&base);
+
+    let (events, failed) = run_with_events(&base.clone().transport(tcp_with_kills(vec![
+        KillSpec {
+            actor: 2,
+            at_version: final_step_version(steps),
+            mode: KillMode::Preempt { warn_ms: 0 },
+        },
+    ])));
+    assert_eq!(failed.preempts, 1, "the warning was observed");
+    assert_eq!(failed.failovers, 1, "the kill landed before the drain");
+    assert_eq!(failed.drains, 0);
+    assert!(failed.requeued_prompts > 0, "orphaned prompts migrated");
+    assert!(
+        events.iter().any(|ev| matches!(
+            ev,
+            Event::Failover { actor: 2, reason: FailReason::Preempted, .. }
+        )),
+        "the failover is typed Preempted, not Crash"
+    );
+    assert_steps_match("preempt:no-warning", &baseline, &failed);
+}
+
+#[test]
+fn preemption_with_a_generous_warning_drains_gracefully() {
+    // A warning window longer than the remaining work: the actor
+    // finishes its leases, the hub releases it, nothing is reissued.
+    let steps = 4;
+    let base = config(3, steps, 29);
+    let baseline = run(&base);
+
+    let warned = run(&base.clone().transport(tcp_with_kills(vec![KillSpec {
+        actor: 2,
+        at_version: final_step_version(steps),
+        mode: KillMode::Preempt { warn_ms: 60_000 },
+    }])));
+    assert_eq!(warned.preempts, 1, "warning observed");
+    assert_eq!(warned.drains, 1, "drained inside the window");
+    assert_eq!(warned.failovers, 0, "no failover needed");
+    assert_eq!(warned.requeued_prompts, 0);
+    assert_steps_match("preempt:drained", &baseline, &warned);
+}
+
+#[test]
+fn crash_then_join_regrows_capacity_with_full_batches() {
+    // An actor crashes mid-run and a replacement joins two versions
+    // later ("re-join": the fleet regains capacity under a fresh id,
+    // bootstrapped over the wire). Allocations legitimately change, but
+    // every step still trains on a full batch — exactly-once accounting
+    // through both the loss and the growth.
+    let steps = 5;
+    let cfg = config(3, steps, 13)
+        .join_at(3, 3, BootstrapKind::DeltaChain)
+        .transport(tcp_with_kills(vec![KillSpec {
+            actor: 0,
+            at_version: 1, // dispatched at step 2: mid-run
+            mode: KillMode::Crash,
+        }]));
+    let report = run(&cfg);
+
+    assert_eq!(report.final_version, steps);
+    assert_eq!(report.failovers, 1);
+    assert_eq!(report.joins, 1);
+    assert!(report.requeued_prompts > 0);
+    // SyntheticCompute emits exactly max_new_tokens per completion, so a
+    // full batch is a constant token count: prompts(8) * group(2) * 5.
+    for s in &report.steps {
+        assert_eq!(
+            s.gen_tokens, 80,
+            "step {}: batch incomplete across crash + join (lost or duplicated prompts)",
+            s.step
+        );
+        assert!(s.payload_bytes > 0, "step {}: no delta committed", s.step);
+    }
+}
+
+#[test]
+fn elastic_specs_are_validated_up_front() {
+    // Joiner ids must extend the day-one fleet contiguously.
+    let err = config(3, 4, 0).join_at(7, 3, BootstrapKind::DeltaChain).build();
+    assert!(matches!(err, Err(SpecError::ElasticJoinerIds { actors: 3, joins: 1 })));
+    // Membership pins must land on a committed version.
+    let err = config(3, 4, 0).leave_at(1, 9).build();
+    assert!(matches!(err, Err(SpecError::ElasticVersionOutOfRange { actor: 1, version: 9, .. })));
+    // The netsim fleet is fixed at topology-build time.
+    let err = config(3, 4, 0)
+        .join_at(3, 3, BootstrapKind::DeltaChain)
+        .transport(Backend::Sim)
+        .build();
+    assert!(matches!(err, Err(SpecError::ElasticConflictsWithSim)));
+    // sweep_ms paces the hub's poll loop; zero would spin.
+    let err = config(3, 4, 0).lease_sweep_ms(0).build();
+    assert!(matches!(err, Err(SpecError::ZeroSweepInterval)));
+    // A custom sweep interval is accepted and survives into the plan.
+    let plan = config(3, 4, 0).lease_sweep_ms(5).build().expect("legal");
+    assert_eq!(plan.config().lease.sweep_ms, 5);
+}

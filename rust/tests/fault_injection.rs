@@ -106,7 +106,7 @@ fn relay_crash_peers_fetch_directly() {
 
 #[test]
 fn partitioned_actor_leases_expire_and_work_migrates() {
-    let mut ledger = JobLedger::new(LeasePolicy { multiplier: 2.0, min_s: 10.0, max_s: 60.0 });
+    let mut ledger = JobLedger::new(LeasePolicy { multiplier: 2.0, min_s: 10.0, max_s: 60.0, ..Default::default() });
     ledger.post(0..20);
     let h = [1u8; 32];
     // Actor 1 (about to be partitioned) claims half the pool.

@@ -270,7 +270,7 @@ fn failover_events_match_report_totals() {
         .transport(Backend::Tcp(TcpConfig {
             streams: 2,
             bits_per_s: None,
-            kill: Some(KillSpec { actor: 2, at_version: steps - 2, mode: KillMode::Crash }),
+            kills: vec![KillSpec { actor: 2, at_version: steps - 2, mode: KillMode::Crash }],
         }))
         .build()
         .unwrap();

@@ -96,7 +96,7 @@ fn all_backends_commit_bitwise_identical_policies() {
 
     let tcpc = base
         .clone()
-        .transport(Backend::Tcp(TcpConfig { streams: 2, bits_per_s: None, kill: None }));
+        .transport(Backend::Tcp(TcpConfig { streams: 2, bits_per_s: None, kills: vec![] }));
     let tcp = run(&tcpc, &comp, ExecMode::Pipelined);
 
     assert_equivalent("seq vs inproc", &seq, &inproc);
@@ -133,7 +133,7 @@ fn tcp_backend_is_self_reproducible_across_socket_interleavings() {
     // same seed are bit-identical (the stronger determinism contract).
     let comp = SyntheticCompute::new(16, 8, 64);
     let cfg = config(2, 3, 3)
-        .transport(Backend::Tcp(TcpConfig { streams: 3, bits_per_s: None, kill: None }));
+        .transport(Backend::Tcp(TcpConfig { streams: 3, bits_per_s: None, kills: vec![] }));
     let a = run(&cfg, &comp, ExecMode::Pipelined);
     let b = run(&cfg, &comp, ExecMode::Pipelined);
     assert_equivalent("tcp vs tcp", &a, &b);
@@ -148,7 +148,7 @@ fn throttled_tcp_still_matches_and_completes() {
     let inproc = run(&base, &comp, ExecMode::Pipelined);
     let tcpc = base
         .clone()
-        .transport(Backend::Tcp(TcpConfig { streams: 2, bits_per_s: Some(200e6), kill: None }));
+        .transport(Backend::Tcp(TcpConfig { streams: 2, bits_per_s: Some(200e6), kills: vec![] }));
     let tcp = run(&tcpc, &comp, ExecMode::Pipelined);
     assert_equivalent("inproc vs throttled tcp", &inproc, &tcp);
 }

@@ -45,7 +45,7 @@ fn run(spec: &RunSpec) -> RunReport {
 }
 
 fn tcp_with_kill(kill: Option<KillSpec>) -> Backend {
-    Backend::Tcp(TcpConfig { streams: 2, bits_per_s: None, kill })
+    Backend::Tcp(TcpConfig { streams: 2, bits_per_s: None, kills: kill.into_iter().collect() })
 }
 
 /// Jobs for step `s` are leased against version `max(s-1, 0)` (the
@@ -107,7 +107,7 @@ fn partitioned_actor_leases_expire_and_work_migrates_bitwise() {
     // never reaches the rollout bits, so results stay comparable.
     let kcfg = base
         .clone()
-        .lease(LeasePolicy { multiplier: 2.0, min_s: 0.4, max_s: 5.0 })
+        .lease(LeasePolicy { multiplier: 2.0, min_s: 0.4, max_s: 5.0, ..Default::default() })
         .transport(tcp_with_kill(Some(KillSpec {
             actor: 1,
             at_version: final_step_version(steps),
