@@ -1,0 +1,132 @@
+//! Durable-store benches (PR 7), three tiers:
+//!
+//! 1. Durability tax: wall clock of the same deterministic run with and
+//!    without a durable store attached — the per-commit price of
+//!    sealing objects (tmp + fsync + rename) plus the journal append.
+//! 2. Reconstruct latency: materializing the final policy by replaying
+//!    the full delta chain vs applying the compacted (folded) chain.
+//! 3. Compaction ratio: encoded bytes of `D_1..D_k` vs the single
+//!    folded object (lossless — verified against the journaled witness).
+//!
+//! Emits `BENCH_store.json`. Set `BENCH_QUICK=1` for the CI smoke run.
+
+use sparrowrl::delta::{policy_witness, DurableStore, ModelLayout};
+use sparrowrl::rt::{ExecMode, RunReport, SyntheticCompute};
+use sparrowrl::session::{RunSpec, Session};
+use sparrowrl::util::bench::Bencher;
+
+fn layout() -> ModelLayout {
+    ModelLayout::transformer("syn-store-bench", 512, 128, 2, 256)
+}
+
+fn spec(steps: u64) -> RunSpec {
+    RunSpec::synthetic()
+        .actors(2)
+        .steps(steps)
+        .sft_steps(2)
+        .group_size(2)
+        .max_new_tokens(6)
+        .lr_rl(1e-2)
+        .segment_bytes(4 << 10)
+        .seed(61)
+        .deterministic()
+}
+
+fn run(spec: RunSpec) -> RunReport {
+    let plan = spec.mode(ExecMode::Sequential).build().expect("valid spec");
+    Session::start_with_compute(&plan, layout(), SyntheticCompute::new(16, 8, 64))
+        .expect("start session")
+        .join()
+        .expect("session run")
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let steps: u64 = if quick { 5 } else { 12 };
+    let mut b = Bencher::new(1, if quick { 2 } else { 3 });
+    let mut derived: Vec<(String, f64)> = Vec::new();
+    let scratch = std::env::temp_dir().join(format!("sprw-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&scratch);
+    std::fs::create_dir_all(&scratch).expect("scratch dir");
+
+    // -- 1. durability tax per committed step ----------------------------
+    let plain_s = b
+        .bench("run, no durability", || {
+            std::hint::black_box(run(spec(steps)));
+        })
+        .median
+        .as_secs_f64();
+    let mut rep = 0u32;
+    let persist_s = b
+        .bench("run, durable store", || {
+            rep += 1;
+            // A fresh directory per rep: a durable store refuses to be
+            // re-seeded by a second fresh run.
+            let dir = scratch.join(format!("rep{rep}"));
+            std::hint::black_box(run(spec(steps).persist_dir(&dir)));
+        })
+        .median
+        .as_secs_f64();
+    let tax_per_step = (persist_s - plain_s).max(0.0) / steps as f64;
+    println!(
+        "durability tax: {plain_s:.3}s plain vs {persist_s:.3}s durable \
+         ({:.1} ms per committed step)",
+        tax_per_step * 1e3
+    );
+    derived.push(("plain_run_s".into(), plain_s));
+    derived.push(("durable_run_s".into(), persist_s));
+    derived.push(("journal_seal_tax_per_step_s".into(), tax_per_step));
+
+    // -- 2 + 3. reconstruct latency and compaction ratio -----------------
+    let dir = scratch.join("main");
+    let report = run(spec(steps).persist_dir(&dir));
+    let l = layout();
+    let mut store = DurableStore::open(&dir).unwrap_or_else(|e| panic!("recover: {e}"));
+    let witness = report.steps.last().expect("run committed steps").policy_checksum;
+    let chain_s = b
+        .bench("reconstruct final, chain replay", || {
+            let p = store.reconstruct(&l, steps).unwrap_or_else(|e| panic!("reconstruct: {e}"));
+            std::hint::black_box(p);
+        })
+        .median
+        .as_secs_f64();
+    let stats = store.compact(&l, None).unwrap_or_else(|e| panic!("compact: {e}"));
+    assert_eq!(stats.upto, steps);
+    let compacted_s = b
+        .bench("reconstruct final, compacted", || {
+            let p = store.reconstruct(&l, steps).unwrap_or_else(|e| panic!("reconstruct: {e}"));
+            std::hint::black_box(p);
+        })
+        .median
+        .as_secs_f64();
+    // Lossless by construction: the compacted path must reproduce the
+    // live run's committed checksum exactly.
+    let p = store.reconstruct(&l, steps).unwrap_or_else(|e| panic!("reconstruct: {e}"));
+    assert_eq!(policy_witness(&p), witness, "compacted reconstruct diverged from the live run");
+    assert!(
+        stats.compacted_bytes <= stats.chain_bytes,
+        "folding D_1..D_{steps} must not grow the artifact"
+    );
+    println!(
+        "compaction: chain {} -> folded {} ({:.1}%), reconstruct {:.3}s -> {:.3}s",
+        sparrowrl::util::fmt_bytes(stats.chain_bytes),
+        sparrowrl::util::fmt_bytes(stats.compacted_bytes),
+        stats.compacted_bytes as f64 / stats.chain_bytes as f64 * 100.0,
+        chain_s,
+        compacted_s,
+    );
+    derived.push(("chain_bytes".into(), stats.chain_bytes as f64));
+    derived.push(("compacted_bytes".into(), stats.compacted_bytes as f64));
+    derived.push((
+        "compaction_ratio".into(),
+        stats.compacted_bytes as f64 / stats.chain_bytes as f64,
+    ));
+    derived.push(("reconstruct_chain_s".into(), chain_s));
+    derived.push(("reconstruct_compacted_s".into(), compacted_s));
+    derived.push(("reconstruct_speedup".into(), chain_s / compacted_s.max(1e-12)));
+
+    let _ = std::fs::remove_dir_all(&scratch);
+    let derived_refs: Vec<(&str, f64)> = derived.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let out = std::path::Path::new("BENCH_store.json");
+    b.write_json(out, "store", &derived_refs).expect("write bench json");
+}

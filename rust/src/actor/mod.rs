@@ -122,6 +122,15 @@ impl PolicyState {
         }
     }
 
+    /// Builder: set the active checkpoint hash. A worker spun up mid-run
+    /// (hub resume) starts at the resumed version, not genesis, and the
+    /// ledger's acceptance predicate compares this hash against the
+    /// lease's — `[0; 32]` would reject every result.
+    pub fn with_active_hash(mut self, hash: [u8; 32]) -> PolicyState {
+        self.active_hash = hash;
+        self
+    }
+
     pub fn active_version(&self) -> u64 {
         self.active_version
     }
@@ -311,8 +320,21 @@ impl PolicyState {
     /// complete while `D_{v-1}` is still in flight — and applying early
     /// would fail with `BaseMismatch` instead of waiting.
     fn chain_in_flight(&self, version: u64) -> bool {
-        version > self.active_version
-            && (self.active_version + 1..=version).any(|w| !self.staged.contains_key(&w))
+        if version <= self.active_version {
+            return false;
+        }
+        // A staged delta that applies directly onto the active version —
+        // a compacted chain folded into one artifact (delta::merge_chain)
+        // — is complete in itself; the versions it skips over will never
+        // arrive and must not keep the commit parked.
+        if self
+            .staged
+            .get(&version)
+            .map_or(false, |s| s.delta.base_version == self.active_version)
+        {
+            return false;
+        }
+        (self.active_version + 1..=version).any(|w| !self.staged.contains_key(&w))
     }
 
     /// Safe-point hook: called by the generation loop between batches
@@ -425,6 +447,47 @@ mod tests {
         st.stage_checkpoint(c2);
         assert_eq!(st.commit(2), CommitResult::Applied);
         assert_eq!(st.active_hash(), h2);
+    }
+
+    #[test]
+    fn compacted_delta_commits_without_intermediate_versions() {
+        // A joiner bootstrapped from a compacted chain receives ONE
+        // delta spanning 0 -> k. The versions it skips will never
+        // arrive, so request_commit must not park waiting for them.
+        let (l, p0) = setup();
+        let p3 = perturbed(&perturbed(&perturbed(&p0, 71), 72), 73);
+        let folded = ckpt(&l, &p0, &p3, 0, 3);
+        let h3 = folded.hash;
+        let mut st = PolicyState::new(l, p0, 0);
+        st.stage_checkpoint(folded);
+        assert_eq!(st.request_commit(3), CommitResult::Applied, "must not defer");
+        assert_eq!(st.active_version(), 3);
+        assert_eq!(st.active_hash(), h3);
+        assert_eq!(st.params(), &p3, "bit-exact through the folded delta");
+    }
+
+    #[test]
+    fn compacted_delta_lands_from_parked_commit_at_safe_point() {
+        // Same folded-chain shape, but the Commit overtakes the delta
+        // segments: it parks, then lands once staging completes.
+        let (l, p0) = setup();
+        let p2 = perturbed(&perturbed(&p0, 81), 82);
+        let folded = ckpt(&l, &p0, &p2, 0, 2);
+        let mut st = PolicyState::new(l, p0, 0);
+        assert_eq!(st.request_commit(2), CommitResult::Deferred, "nothing staged yet");
+        st.stage_checkpoint(folded);
+        assert_eq!(st.on_safe_point(), Some((2, CommitResult::Applied)));
+        assert_eq!(st.active_version(), 2);
+        assert_eq!(st.params(), &p2);
+    }
+
+    #[test]
+    fn with_active_hash_seeds_resumed_workers() {
+        let (l, p0) = setup();
+        let h = [7u8; 32];
+        let st = PolicyState::new(l, p0, 5).with_active_hash(h);
+        assert_eq!(st.active_version(), 5);
+        assert_eq!(st.active_hash(), h);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! holds a hash-verified `D_v` or it does not.
 
 use super::encode::{decode_delta, delta_hash, encode_delta, DecodeError};
+use super::store::RecoveryError;
 use super::SparseDelta;
 use std::collections::BTreeMap;
 use std::io::Write as _;
@@ -66,18 +67,35 @@ impl DeltaCheckpoint {
 pub struct CheckpointStore {
     dir: Option<PathBuf>,
     by_version: BTreeMap<u64, DeltaCheckpoint>,
+    /// Chain horizons pinned by in-flight delta-chain bootstraps
+    /// (horizon version -> pin count). While any pin is held, gc keeps
+    /// the whole chain D_1.. so a joiner's replay cannot lose links.
+    pins: BTreeMap<u64, usize>,
 }
 
 impl CheckpointStore {
     /// Memory-only store (simulation and tests).
     pub fn in_memory() -> CheckpointStore {
-        CheckpointStore { dir: None, by_version: BTreeMap::new() }
+        CheckpointStore { dir: None, by_version: BTreeMap::new(), pins: BTreeMap::new() }
     }
 
-    /// Store persisting artifacts as `<dir>/delta-v{N}.sprw`.
+    /// Store persisting artifacts as `<dir>/delta-v{N}.sprw`. Sweeps
+    /// orphaned `.delta-v{N}.tmp` files a crash mid-`put` left behind —
+    /// the rename never happened, so they are dead bytes.
     pub fn on_disk(dir: &Path) -> std::io::Result<CheckpointStore> {
         std::fs::create_dir_all(dir)?;
-        Ok(CheckpointStore { dir: Some(dir.to_path_buf()), by_version: BTreeMap::new() })
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            let name = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
+            if name.starts_with(".delta-v") && name.ends_with(".tmp") {
+                std::fs::remove_file(&path)?;
+            }
+        }
+        Ok(CheckpointStore {
+            dir: Some(dir.to_path_buf()),
+            by_version: BTreeMap::new(),
+            pins: BTreeMap::new(),
+        })
     }
 
     /// Insert a sealed checkpoint. Re-inserting the same version must carry
@@ -121,46 +139,83 @@ impl CheckpointStore {
     }
 
     /// Load any persisted checkpoints from disk (crash recovery).
-    pub fn recover(&mut self) -> std::io::Result<usize> {
+    ///
+    /// An artifact is admitted only when the version in its filename
+    /// matches the version decoded from its header — a renamed or
+    /// misplaced artifact is rejected with
+    /// [`RecoveryError::VersionMismatch`] instead of being silently
+    /// inserted under whatever its header claims.
+    pub fn recover(&mut self) -> Result<usize, RecoveryError> {
         let Some(dir) = self.dir.clone() else { return Ok(0) };
         let mut n = 0;
         for entry in std::fs::read_dir(&dir)? {
             let path = entry?.path();
             let name = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
-            if !name.starts_with("delta-v") || !name.ends_with(".sprw") {
+            let Some(filename_version) = name
+                .strip_prefix("delta-v")
+                .and_then(|s| s.strip_suffix(".sprw"))
+                .and_then(|s| s.parse::<u64>().ok())
+            else {
                 continue;
-            }
+            };
             let bytes = std::fs::read(&path)?;
-            match DeltaCheckpoint::from_bytes(bytes) {
-                Ok(ckpt) => {
-                    self.by_version.entry(ckpt.version).or_insert(ckpt);
-                    n += 1;
-                }
-                Err(e) => {
-                    return Err(std::io::Error::new(
-                        std::io::ErrorKind::InvalidData,
-                        format!("{}: {e}", path.display()),
-                    ));
-                }
+            let ckpt = DeltaCheckpoint::from_bytes(bytes)
+                .map_err(|error| RecoveryError::CorruptArtifact { path: path.clone(), error })?;
+            if ckpt.version != filename_version {
+                return Err(RecoveryError::VersionMismatch {
+                    path,
+                    filename_version,
+                    header_version: ckpt.version,
+                });
             }
+            self.by_version.entry(ckpt.version).or_insert(ckpt);
+            n += 1;
         }
         Ok(n)
     }
 
-    /// Drop checkpoints with version < `min_version`.
-    pub fn gc_before(&mut self, min_version: u64) -> usize {
+    /// Pin the chain `D_1..=horizon` against gc while a delta-chain
+    /// bootstrap replays it. Pins are counted, so overlapping joins on
+    /// the same horizon are safe.
+    pub fn pin_chain(&mut self, horizon: u64) {
+        *self.pins.entry(horizon).or_insert(0) += 1;
+    }
+
+    /// Release one pin on `horizon`. Unmatched unpins are ignored.
+    pub fn unpin_chain(&mut self, horizon: u64) {
+        if let Some(count) = self.pins.get_mut(&horizon) {
+            *count -= 1;
+            if *count == 0 {
+                self.pins.remove(&horizon);
+            }
+        }
+    }
+
+    /// Drop checkpoints with version < `min_version`. While any chain
+    /// pin is held the floor is clamped to 1 (a bootstrap replays from
+    /// D_1, so nothing may be collected). A failed disk delete keeps
+    /// the in-memory entry too — the store never claims a checkpoint is
+    /// gone while its artifact may still be on disk.
+    pub fn gc_before(&mut self, min_version: u64) -> std::io::Result<usize> {
+        let min_version = if self.pins.is_empty() { min_version } else { min_version.min(1) };
         let drop: Vec<u64> = self
             .by_version
             .range(..min_version)
             .map(|(&v, _)| v)
             .collect();
+        let mut removed = 0;
         for v in &drop {
             if let Some(dir) = &self.dir {
-                let _ = std::fs::remove_file(dir.join(format!("delta-v{v}.sprw")));
+                match std::fs::remove_file(dir.join(format!("delta-v{v}.sprw"))) {
+                    Ok(()) => {}
+                    Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                    Err(e) => return Err(e),
+                }
             }
             self.by_version.remove(v);
+            removed += 1;
         }
-        drop.len()
+        Ok(removed)
     }
 }
 
@@ -201,10 +256,17 @@ mod tests {
         assert_eq!(s.latest_version(), Some(1));
     }
 
+    /// Per-test unique temp dir: keyed on pid AND test name, because
+    /// cargo runs all tests in one process and pid alone collides.
+    fn test_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("sprw-ckpt-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
     #[test]
     fn disk_persistence_and_recovery() {
-        let dir = std::env::temp_dir().join(format!("sprw-store-{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
+        let dir = test_dir("recov");
         {
             let mut s = CheckpointStore::on_disk(&dir).unwrap();
             s.put(ckpt(1, 1)).unwrap();
@@ -219,8 +281,7 @@ mod tests {
 
     #[test]
     fn corrupted_disk_artifact_fails_recovery() {
-        let dir = std::env::temp_dir().join(format!("sprw-corrupt-{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
+        let dir = test_dir("corrupt");
         {
             let mut s = CheckpointStore::on_disk(&dir).unwrap();
             s.put(ckpt(1, 1)).unwrap();
@@ -231,7 +292,44 @@ mod tests {
         bytes[10] ^= 0xFF;
         std::fs::write(&path, bytes).unwrap();
         let mut s2 = CheckpointStore::on_disk(&dir).unwrap();
-        assert!(s2.recover().is_err());
+        assert!(matches!(s2.recover(), Err(RecoveryError::CorruptArtifact { .. })));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn recovery_rejects_filename_header_mismatch() {
+        let dir = test_dir("mismatch");
+        {
+            let mut s = CheckpointStore::on_disk(&dir).unwrap();
+            s.put(ckpt(3, 1)).unwrap();
+        }
+        // Rename v3's artifact to claim v7: recovery must refuse rather
+        // than trust either name.
+        std::fs::rename(dir.join("delta-v3.sprw"), dir.join("delta-v7.sprw")).unwrap();
+        let mut s2 = CheckpointStore::on_disk(&dir).unwrap();
+        match s2.recover() {
+            Err(RecoveryError::VersionMismatch { filename_version, header_version, .. }) => {
+                assert_eq!(filename_version, 7);
+                assert_eq!(header_version, 3);
+            }
+            other => panic!("expected VersionMismatch, got {:?}", other.err()),
+        }
+        assert!(s2.is_empty(), "nothing may be admitted from a mismatched artifact");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn on_disk_sweeps_orphaned_tmp_files() {
+        let dir = test_dir("sweep");
+        {
+            let mut s = CheckpointStore::on_disk(&dir).unwrap();
+            s.put(ckpt(1, 1)).unwrap();
+        }
+        // A crash mid-put leaves a tmp that never got renamed.
+        std::fs::write(dir.join(".delta-v2.tmp"), b"partial").unwrap();
+        let mut s2 = CheckpointStore::on_disk(&dir).unwrap();
+        assert!(!dir.join(".delta-v2.tmp").exists(), "orphaned tmp must be swept");
+        assert_eq!(s2.recover().unwrap(), 1, "real artifacts survive the sweep");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
@@ -241,9 +339,40 @@ mod tests {
         for v in 1..=5 {
             s.put(ckpt(v, v)).unwrap();
         }
-        assert_eq!(s.gc_before(4), 3);
+        assert_eq!(s.gc_before(4).unwrap(), 3);
         assert!(s.get(3).is_none());
         assert!(s.get(4).is_some());
         assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn pinned_chain_blocks_gc() {
+        let mut s = CheckpointStore::in_memory();
+        for v in 1..=5 {
+            s.put(ckpt(v, v)).unwrap();
+        }
+        s.pin_chain(4);
+        assert_eq!(s.gc_before(4).unwrap(), 0, "pinned chain must not be collected");
+        assert!(s.get(1).is_some());
+        s.pin_chain(4); // a second overlapping join
+        s.unpin_chain(4);
+        assert_eq!(s.gc_before(4).unwrap(), 0, "still pinned by the second join");
+        s.unpin_chain(4);
+        assert_eq!(s.gc_before(4).unwrap(), 3, "gc proceeds once all pins drop");
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn gc_missing_disk_artifact_is_not_an_error() {
+        let dir = test_dir("gc-missing");
+        let mut s = CheckpointStore::on_disk(&dir).unwrap();
+        for v in 1..=3 {
+            s.put(ckpt(v, v)).unwrap();
+        }
+        // Someone already removed v1's file out from under the store.
+        std::fs::remove_file(dir.join("delta-v1.sprw")).unwrap();
+        assert_eq!(s.gc_before(3).unwrap(), 2);
+        assert_eq!(s.len(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -41,10 +41,15 @@ pub mod encode;
 pub mod extract;
 pub mod layout;
 pub mod naive;
+pub mod store;
 pub mod stream;
 pub mod varint;
 
 pub use checkpoint::{CheckpointStore, DeltaCheckpoint};
+pub use store::{
+    merge_chain, policy_witness, CompactStats, DurableStore, JournalRecord, MergeError,
+    RecoveryError, ResumePoint, SeedRecord,
+};
 pub use encode::{decode_delta, encode_delta, DecodeError};
 pub use extract::{apply_delta, extract_delta, extract_delta_parallel};
 pub use layout::{ModelLayout, TensorSpec};

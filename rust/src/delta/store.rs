@@ -1,0 +1,1492 @@
+//! Durable, content-addressed checkpoint store with a crash-consistent
+//! run journal.
+//!
+//! Layout under a persist directory:
+//!
+//! ```text
+//! persist_dir/
+//!   objects/<sha256-hex>.sprw   immutable blobs, named by the SHA-256 of
+//!                               their full byte content (delta artifacts,
+//!                               base policy snapshot, trainer-state dumps,
+//!                               compacted chains)
+//!   refs/v0                     JSON manifest: base snapshot + train state
+//!   refs/v{N}                   JSON manifest: delta object + train state
+//!   refs/compact                JSON manifest: folded chain D_1..D_k
+//!   journal.jsonl               append-only run journal (one JSON/line)
+//! ```
+//!
+//! Crash-consistency protocol, per commit of version `V`:
+//!
+//! 1. write the delta object (tmp + fsync + rename),
+//! 2. write the trainer-state object (tmp + fsync + rename),
+//! 3. write `refs/v{V}` (tmp + fsync + rename),
+//! 4. append one journal line and fsync the journal.
+//!
+//! Step 4 is the commit point. A crash anywhere before it leaves sealed
+//! but unjournaled artifacts that recovery ignores; the resumed run
+//! recommits the same version idempotently (object writes to an existing
+//! content address are skipped, the manifest rewrite is byte-identical,
+//! and the journal gains the record that was lost). A torn final journal
+//! line (the classic crash-during-append) is truncated away silently;
+//! corruption anywhere else surfaces as a typed [`RecoveryError`].
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use sha2::{Digest, Sha256};
+
+use crate::delta::encode::DecodeError;
+use crate::delta::{ApplyMode, DeltaCheckpoint, ModelLayout, ParamSet, SparseDelta, TensorDelta};
+use crate::runtime::TrainState;
+use crate::util::jsonl::Json;
+use crate::util::{hex, Bf16};
+
+/// Typed failure surfaced by [`DurableStore`] recovery and reads.
+///
+/// Every variant names the artifact that failed so operators can decide
+/// between restoring from a replica and accepting data loss; nothing in
+/// the recovery path panics.
+#[derive(Debug)]
+pub enum RecoveryError {
+    /// Underlying filesystem error.
+    Io(std::io::Error),
+    /// A journal line other than a torn tail failed to parse or had the
+    /// wrong schema.
+    CorruptJournal {
+        /// 0-based line number in `journal.jsonl`.
+        line: usize,
+        /// Human-readable parse/schema failure.
+        reason: String,
+    },
+    /// The journal has commit records but no leading genesis record.
+    MissingGenesis,
+    /// Journal versions must be 0, 1, 2, ... with no gaps.
+    NonContiguous {
+        /// The version recovery expected next.
+        expected: u64,
+        /// The version actually found.
+        found: u64,
+    },
+    /// A journaled version has no `refs/v{N}` manifest.
+    MissingManifest {
+        /// The version whose manifest is missing.
+        version: u64,
+    },
+    /// A manifest exists but is unreadable or inconsistent.
+    CorruptManifest {
+        /// The version whose manifest is corrupt.
+        version: u64,
+        /// Human-readable reason.
+        reason: String,
+    },
+    /// A manifest references an object that is not on disk.
+    MissingObject {
+        /// The version whose manifest references the object.
+        version: u64,
+        /// Content address (SHA-256 hex) of the missing object.
+        id: String,
+    },
+    /// An object's bytes no longer hash to its content address.
+    ObjectHashMismatch {
+        /// The version whose manifest references the object.
+        version: u64,
+        /// Content address the object was stored under.
+        id: String,
+    },
+    /// A reconstructed policy's checksum differs from the journaled
+    /// witness recorded at commit time.
+    WitnessMismatch {
+        /// The version whose witness failed to verify.
+        version: u64,
+    },
+    /// A version was requested that the journal does not record.
+    UnknownVersion {
+        /// The requested version.
+        version: u64,
+    },
+    /// The persisted run's identity (model fingerprint / run seed) does
+    /// not match the resuming configuration.
+    ConfigMismatch {
+        /// Which field disagreed (e.g. `"model_fp"`, `"run_seed"`).
+        field: &'static str,
+    },
+    /// Chain compaction failed.
+    Compaction(MergeError),
+    /// A delta artifact failed to decode.
+    CorruptArtifact {
+        /// Path of the artifact.
+        path: PathBuf,
+        /// Decoder failure.
+        error: DecodeError,
+    },
+    /// A `delta-v{N}.sprw` filename disagrees with the version in its
+    /// decoded header (legacy [`CheckpointStore`] layout).
+    ///
+    /// [`CheckpointStore`]: crate::delta::CheckpointStore
+    VersionMismatch {
+        /// Path of the artifact.
+        path: PathBuf,
+        /// Version encoded in the filename.
+        filename_version: u64,
+        /// Version decoded from the artifact header.
+        header_version: u64,
+    },
+}
+
+impl std::fmt::Display for RecoveryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RecoveryError::Io(e) => write!(f, "store io error: {e}"),
+            RecoveryError::CorruptJournal { line, reason } => {
+                write!(f, "corrupt journal record at line {line}: {reason}")
+            }
+            RecoveryError::MissingGenesis => {
+                write!(f, "journal has commit records but no genesis record")
+            }
+            RecoveryError::NonContiguous { expected, found } => {
+                write!(f, "journal is non-contiguous: expected v{expected}, found v{found}")
+            }
+            RecoveryError::MissingManifest { version } => {
+                write!(f, "missing manifest refs/v{version}")
+            }
+            RecoveryError::CorruptManifest { version, reason } => {
+                write!(f, "corrupt manifest refs/v{version}: {reason}")
+            }
+            RecoveryError::MissingObject { version, id } => {
+                write!(f, "v{version} references missing object {id}")
+            }
+            RecoveryError::ObjectHashMismatch { version, id } => {
+                write!(f, "object {id} (referenced by v{version}) fails its content hash")
+            }
+            RecoveryError::WitnessMismatch { version } => {
+                write!(f, "reconstructed v{version} does not match its journaled witness")
+            }
+            RecoveryError::UnknownVersion { version } => {
+                write!(f, "version v{version} is not recorded in the journal")
+            }
+            RecoveryError::ConfigMismatch { field } => {
+                write!(f, "persisted run does not match the resuming config: {field} differs")
+            }
+            RecoveryError::Compaction(e) => write!(f, "chain compaction failed: {e}"),
+            RecoveryError::CorruptArtifact { path, error } => {
+                write!(f, "corrupt delta artifact {}: {error:?}", path.display())
+            }
+            RecoveryError::VersionMismatch { path, filename_version, header_version } => {
+                write!(
+                    f,
+                    "artifact {} claims v{filename_version} by filename but v{header_version} by header",
+                    path.display()
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for RecoveryError {}
+
+impl From<std::io::Error> for RecoveryError {
+    fn from(e: std::io::Error) -> Self {
+        RecoveryError::Io(e)
+    }
+}
+
+impl From<MergeError> for RecoveryError {
+    fn from(e: MergeError) -> Self {
+        RecoveryError::Compaction(e)
+    }
+}
+
+/// Typed failure from [`merge_chain`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MergeError {
+    /// An empty chain cannot be folded.
+    Empty,
+    /// Folding is only bit-exact for `ApplyMode::Assign` deltas.
+    AddMode {
+        /// The offending delta's version.
+        version: u64,
+    },
+    /// Chain links must satisfy `d[i].base_version == d[i-1].version`.
+    NonContiguous {
+        /// The base version the next link was expected to have.
+        expected: u64,
+        /// The base version actually found.
+        found: u64,
+    },
+    /// Deltas in a chain must share one model fingerprint.
+    ModelMismatch,
+}
+
+impl std::fmt::Display for MergeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MergeError::Empty => write!(f, "cannot merge an empty chain"),
+            MergeError::AddMode { version } => {
+                write!(f, "delta v{version} uses Add mode; only Assign chains fold bit-exactly")
+            }
+            MergeError::NonContiguous { expected, found } => {
+                write!(f, "chain link expected base v{expected}, found base v{found}")
+            }
+            MergeError::ModelMismatch => write!(f, "chain spans different model fingerprints"),
+        }
+    }
+}
+
+impl std::error::Error for MergeError {}
+
+/// Fold a contiguous Assign-mode chain `D_1..D_k` into one delta whose
+/// application is bit-identical to applying the chain sequentially.
+///
+/// Assign semantics make this a last-writer-wins union per (tensor,
+/// index): later deltas overwrite earlier writes to the same slot, and
+/// slots written once keep their value. The result spans
+/// `chain.first().base_version .. chain.last().version`.
+pub fn merge_chain(chain: &[SparseDelta]) -> Result<SparseDelta, MergeError> {
+    let first = chain.first().ok_or(MergeError::Empty)?;
+    let model_fp = first.model_fp;
+    let mut expected_base = first.base_version;
+    // tensor id -> (flat index -> latest value). BTreeMaps keep the
+    // output sorted, matching the encoder's canonical ordering.
+    let mut folded: BTreeMap<u32, BTreeMap<u64, Bf16>> = BTreeMap::new();
+    for d in chain {
+        if d.mode != ApplyMode::Assign {
+            return Err(MergeError::AddMode { version: d.version });
+        }
+        if d.model_fp != model_fp {
+            return Err(MergeError::ModelMismatch);
+        }
+        if d.base_version != expected_base {
+            return Err(MergeError::NonContiguous {
+                expected: expected_base,
+                found: d.base_version,
+            });
+        }
+        expected_base = d.version;
+        for t in &d.tensors {
+            let slot = folded.entry(t.tensor).or_default();
+            for (i, v) in t.idx.iter().zip(t.vals.iter()) {
+                slot.insert(*i, *v);
+            }
+        }
+    }
+    let tensors = folded
+        .into_iter()
+        .filter(|(_, slots)| !slots.is_empty())
+        .map(|(tensor, slots)| {
+            let mut idx = Vec::with_capacity(slots.len());
+            let mut vals = Vec::with_capacity(slots.len());
+            for (i, v) in slots {
+                idx.push(i);
+                vals.push(v);
+            }
+            TensorDelta { tensor, idx, vals }
+        })
+        .collect();
+    Ok(SparseDelta {
+        version: chain.last().unwrap().version,
+        base_version: first.base_version,
+        model_fp,
+        mode: ApplyMode::Assign,
+        tensors,
+    })
+}
+
+/// SHA-256 policy witness: digest of every tensor's bf16 little-endian
+/// bytes in layout order. Bit-for-bit the same digest as the pipeline's
+/// committed-checksum trace (`rt::pipeline::policy_checksum`), so a
+/// journaled witness can be checked against any reconstruction.
+pub fn policy_witness(p: &ParamSet) -> [u8; 32] {
+    let mut h = Sha256::new();
+    let mut buf: Vec<u8> = Vec::new();
+    for t in &p.tensors {
+        buf.clear();
+        buf.reserve(t.len() * 2);
+        for b in t {
+            buf.extend_from_slice(&b.to_bits().to_le_bytes());
+        }
+        h.update(&buf);
+    }
+    h.finalize()
+}
+
+const TRAIN_STATE_MAGIC: &[u8; 4] = b"SPTS";
+
+/// Serialize the full-precision trainer state (f32 masters + Adam
+/// moments + step counter). The bf16 policy alone cannot resume
+/// training bit-exactly: `TrainState::to_policy()` is lossy.
+pub fn encode_train_state(state: &TrainState) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(TRAIN_STATE_MAGIC);
+    out.extend_from_slice(&(state.masters.len() as u32).to_le_bytes());
+    for group in [&state.masters, &state.m, &state.v] {
+        for tensor in group.iter() {
+            out.extend_from_slice(&(tensor.len() as u64).to_le_bytes());
+            for x in tensor {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+    out.extend_from_slice(&state.step.to_le_bytes());
+    out
+}
+
+/// Inverse of [`encode_train_state`]. Rejects truncated or mislabeled
+/// buffers with a readable reason.
+pub fn decode_train_state(bytes: &[u8]) -> Result<TrainState, String> {
+    let mut pos = 0usize;
+    fn take<'a>(bytes: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8], String> {
+        if *pos + n > bytes.len() {
+            return Err(format!("train state truncated at byte {}", *pos));
+        }
+        let s = &bytes[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    }
+    if take(bytes, &mut pos, 4)? != TRAIN_STATE_MAGIC {
+        return Err("bad train-state magic".into());
+    }
+    let n_tensors = u32::from_le_bytes(take(bytes, &mut pos, 4)?.try_into().unwrap()) as usize;
+    let mut groups: Vec<Vec<Vec<f32>>> = Vec::with_capacity(3);
+    for _ in 0..3 {
+        let mut group = Vec::with_capacity(n_tensors);
+        for _ in 0..n_tensors {
+            let len =
+                u64::from_le_bytes(take(bytes, &mut pos, 8)?.try_into().unwrap()) as usize;
+            let raw = take(bytes, &mut pos, len * 4)?;
+            let mut tensor = Vec::with_capacity(len);
+            for chunk in raw.chunks_exact(4) {
+                tensor.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+            }
+            group.push(tensor);
+        }
+        groups.push(group);
+    }
+    let step = u64::from_le_bytes(take(bytes, &mut pos, 8)?.try_into().unwrap());
+    if pos != bytes.len() {
+        return Err(format!("train state has {} trailing bytes", bytes.len() - pos));
+    }
+    let v = groups.pop().unwrap();
+    let m = groups.pop().unwrap();
+    let masters = groups.pop().unwrap();
+    Ok(TrainState { masters, m, v, step })
+}
+
+/// One per-actor RNG seed recorded at a commit boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SeedRecord {
+    /// Actor id.
+    pub actor: u32,
+    /// The `job_seed` that actor's generation used for the trained step.
+    pub seed: u64,
+}
+
+/// One journal line. The journal is the run's commit log: a version
+/// exists iff its record does.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JournalRecord {
+    /// Written once when a fresh run first persists: v0 identity.
+    Genesis {
+        /// SHA-256 policy witness of the base (v0) policy.
+        witness: [u8; 32],
+        /// Task counter at the start of RL (after SFT warmup).
+        task_counter: u64,
+        /// Model layout fingerprint; guards resume against a different model.
+        model_fp: u64,
+        /// Run-level RNG seed; guards resume against a different seed.
+        run_seed: u64,
+    },
+    /// Written at each commit boundary, after the version's objects and
+    /// manifest are durable.
+    Commit {
+        /// Committed policy version.
+        version: u64,
+        /// The training step whose batch produced this version.
+        step: u64,
+        /// SHA-256 policy witness of the committed policy.
+        witness: [u8; 32],
+        /// Task counter after this commit's generation planning.
+        task_counter: u64,
+        /// Per-actor generation seeds for the trained batch.
+        seeds: Vec<SeedRecord>,
+    },
+}
+
+impl JournalRecord {
+    fn to_json(&self) -> Json {
+        match self {
+            JournalRecord::Genesis { witness, task_counter, model_fp, run_seed } => Json::obj()
+                .set("kind", "genesis")
+                .set("version", 0u64)
+                .set("witness", hex(witness))
+                .set("task_counter", *task_counter)
+                .set("model_fp", format!("{model_fp:016x}"))
+                .set("run_seed", format!("{run_seed:016x}")),
+            JournalRecord::Commit { version, step, witness, task_counter, seeds } => {
+                let seeds_json: Vec<Json> = seeds
+                    .iter()
+                    .map(|s| {
+                        Json::obj()
+                            .set("actor", s.actor)
+                            .set("seed", format!("{:016x}", s.seed))
+                    })
+                    .collect();
+                Json::obj()
+                    .set("kind", "commit")
+                    .set("version", *version)
+                    .set("step", *step)
+                    .set("witness", hex(witness))
+                    .set("task_counter", *task_counter)
+                    .set("seeds", Json::Arr(seeds_json))
+            }
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<JournalRecord, String> {
+        let kind = j.get("kind").and_then(Json::as_str).ok_or("missing kind")?;
+        let witness_hex = j.get("witness").and_then(Json::as_str).ok_or("missing witness")?;
+        let witness = parse_hash(witness_hex).ok_or("witness is not 64 hex chars")?;
+        let task_counter =
+            j.get("task_counter").and_then(Json::as_u64).ok_or("missing task_counter")?;
+        match kind {
+            "genesis" => {
+                let model_fp = j
+                    .get("model_fp")
+                    .and_then(Json::as_str)
+                    .and_then(parse_u64_hex)
+                    .ok_or("missing model_fp")?;
+                let run_seed = j
+                    .get("run_seed")
+                    .and_then(Json::as_str)
+                    .and_then(parse_u64_hex)
+                    .ok_or("missing run_seed")?;
+                Ok(JournalRecord::Genesis { witness, task_counter, model_fp, run_seed })
+            }
+            "commit" => {
+                let version = j.get("version").and_then(Json::as_u64).ok_or("missing version")?;
+                let step = j.get("step").and_then(Json::as_u64).ok_or("missing step")?;
+                let seeds_json = j.get("seeds").and_then(Json::as_arr).ok_or("missing seeds")?;
+                let mut seeds = Vec::with_capacity(seeds_json.len());
+                for s in seeds_json {
+                    let actor =
+                        s.get("actor").and_then(Json::as_u64).ok_or("seed missing actor")? as u32;
+                    let seed = s
+                        .get("seed")
+                        .and_then(Json::as_str)
+                        .and_then(parse_u64_hex)
+                        .ok_or("seed missing seed")?;
+                    seeds.push(SeedRecord { actor, seed });
+                }
+                Ok(JournalRecord::Commit { version, step, witness, task_counter, seeds })
+            }
+            other => Err(format!("unknown record kind {other:?}")),
+        }
+    }
+}
+
+fn parse_hash(s: &str) -> Option<[u8; 32]> {
+    if s.len() != 64 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    let mut out = [0u8; 32];
+    for (i, byte) in out.iter_mut().enumerate() {
+        *byte = u8::from_str_radix(&s[2 * i..2 * i + 2], 16).ok()?;
+    }
+    Some(out)
+}
+
+fn parse_u64_hex(s: &str) -> Option<u64> {
+    if s.is_empty() || s.len() > 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+/// Everything a resuming run needs, rebuilt from the last durable commit.
+pub struct ResumePoint {
+    /// Last journaled version.
+    pub version: u64,
+    /// Full-precision trainer state at `version`.
+    pub state: TrainState,
+    /// bf16 policy at `version` (reconstructed and witness-checked).
+    pub policy: ParamSet,
+    /// `D_version.hash` (trailing artifact hash), or `[0; 32]` at v0 —
+    /// matches the live hub's `version_hash` convention.
+    pub version_hash: [u8; 32],
+    /// Task counter recorded at the last commit.
+    pub task_counter: u64,
+    /// Policy at `version - 1`, needed to regenerate the pending batch.
+    /// `None` when `version == 0`.
+    pub prev_policy: Option<ParamSet>,
+    /// `version_hash` convention applied to `version - 1`.
+    pub prev_hash: [u8; 32],
+    /// Decoded checkpoints `D_1..D_version`, for reseeding the in-memory
+    /// store (elastic bootstraps replay from it).
+    pub chain: Vec<DeltaCheckpoint>,
+}
+
+/// Result of [`DurableStore::compact`].
+#[derive(Debug, Clone, Copy)]
+pub struct CompactStats {
+    /// Highest version folded into the compacted object.
+    pub upto: u64,
+    /// Total encoded bytes of the individual chain artifacts D_1..D_upto.
+    pub chain_bytes: u64,
+    /// Encoded bytes of the folded artifact.
+    pub compacted_bytes: u64,
+}
+
+/// A manifest entry, decoded from `refs/v{N}` / `refs/compact`.
+#[derive(Debug, Clone)]
+enum Manifest {
+    Base { base: String, state: String },
+    Delta { delta: String, delta_hash: [u8; 32], state: String },
+    Compact { upto: u64, object: String },
+}
+
+/// Content-addressed durable store. See the module docs for the layout
+/// and the crash-consistency protocol.
+pub struct DurableStore {
+    root: PathBuf,
+    records: Vec<JournalRecord>,
+}
+
+impl DurableStore {
+    /// Open (and create if absent) a persist directory, replaying and
+    /// validating the journal. Verifies every journaled version's
+    /// manifest and the content hash of every referenced object;
+    /// truncates a torn final journal line.
+    pub fn open(root: impl Into<PathBuf>) -> Result<DurableStore, RecoveryError> {
+        let root = root.into();
+        fs::create_dir_all(root.join("objects"))?;
+        fs::create_dir_all(root.join("refs"))?;
+        let mut store = DurableStore { root, records: Vec::new() };
+        store.recover_journal()?;
+        store.verify_chain()?;
+        Ok(store)
+    }
+
+    /// Directory this store persists under.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// `true` when the journal holds no records (a brand-new run).
+    pub fn is_fresh(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Last journaled version, if any record exists.
+    pub fn last_version(&self) -> Option<u64> {
+        match self.records.last() {
+            None => None,
+            Some(JournalRecord::Genesis { .. }) => Some(0),
+            Some(JournalRecord::Commit { version, .. }) => Some(*version),
+        }
+    }
+
+    /// The replayed journal records, genesis first.
+    pub fn records(&self) -> &[JournalRecord] {
+        self.records.as_slice()
+    }
+
+    /// Journaled witness of `version`.
+    pub fn witness(&self, version: u64) -> Result<[u8; 32], RecoveryError> {
+        match self.records.get(version as usize) {
+            Some(JournalRecord::Genesis { witness, .. }) => Ok(*witness),
+            Some(JournalRecord::Commit { witness, .. }) => Ok(*witness),
+            None => Err(RecoveryError::UnknownVersion { version }),
+        }
+    }
+
+    fn journal_path(&self) -> PathBuf {
+        self.root.join("journal.jsonl")
+    }
+
+    fn object_path(&self, id: &str) -> PathBuf {
+        self.root.join("objects").join(format!("{id}.sprw"))
+    }
+
+    fn ref_path(&self, name: &str) -> PathBuf {
+        self.root.join("refs").join(name)
+    }
+
+    /// Replay `journal.jsonl`. A parse failure on the final non-empty
+    /// line is a torn append: the file is truncated back to the last
+    /// good record. Any other malformation is a typed error.
+    fn recover_journal(&mut self) -> Result<(), RecoveryError> {
+        let path = self.journal_path();
+        let raw = match fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+            Err(e) => return Err(e.into()),
+        };
+        let text = String::from_utf8_lossy(&raw);
+        let lines: Vec<&str> = text.split('\n').collect();
+        let mut records = Vec::new();
+        // Byte offset just past the last good line (incl. its newline).
+        let mut good_bytes = 0usize;
+        let mut torn = false;
+        for (idx, line) in lines.iter().enumerate() {
+            if line.trim().is_empty() {
+                if lines[idx..].iter().all(|l| l.trim().is_empty()) {
+                    break;
+                }
+                return Err(RecoveryError::CorruptJournal {
+                    line: idx,
+                    reason: "blank line before further records".into(),
+                });
+            }
+            match Json::parse(line) {
+                Ok(j) => match JournalRecord::from_json(&j) {
+                    Ok(r) => {
+                        records.push(r);
+                        good_bytes += line.len() + 1;
+                    }
+                    // Schema-invalid but well-formed JSON is never a
+                    // torn write; fail loudly wherever it sits.
+                    Err(reason) => {
+                        return Err(RecoveryError::CorruptJournal { line: idx, reason })
+                    }
+                },
+                Err(reason) => {
+                    // Unparseable content is a torn tail only if nothing
+                    // but whitespace follows it.
+                    if lines[idx + 1..].iter().all(|l| l.trim().is_empty()) {
+                        torn = true;
+                        break;
+                    }
+                    return Err(RecoveryError::CorruptJournal { line: idx, reason });
+                }
+            }
+        }
+        if torn {
+            // Drop the torn tail on disk so the next append starts clean.
+            let f = fs::OpenOptions::new().write(true).open(&path)?;
+            f.set_len(good_bytes.min(raw.len()) as u64)?;
+            f.sync_all()?;
+        }
+        // Validate ordering: genesis first, then contiguous commits.
+        for (i, r) in records.iter().enumerate() {
+            match (i, r) {
+                (0, JournalRecord::Genesis { .. }) => {}
+                (0, JournalRecord::Commit { .. }) => return Err(RecoveryError::MissingGenesis),
+                (_, JournalRecord::Genesis { .. }) => {
+                    return Err(RecoveryError::CorruptJournal {
+                        line: i,
+                        reason: "duplicate genesis record".into(),
+                    })
+                }
+                (_, JournalRecord::Commit { version, .. }) => {
+                    if *version != i as u64 {
+                        return Err(RecoveryError::NonContiguous {
+                            expected: i as u64,
+                            found: *version,
+                        });
+                    }
+                }
+            }
+        }
+        self.records = records;
+        Ok(())
+    }
+
+    /// Verify that every journaled version's manifest exists and every
+    /// referenced object hashes to its content address.
+    fn verify_chain(&self) -> Result<(), RecoveryError> {
+        for version in 0..self.records.len() as u64 {
+            let manifest = self.read_manifest(version)?;
+            let ids: Vec<&String> = match &manifest {
+                Manifest::Base { base, state } => vec![base, state],
+                Manifest::Delta { delta, state, .. } => vec![delta, state],
+                Manifest::Compact { .. } => {
+                    return Err(RecoveryError::CorruptManifest {
+                        version,
+                        reason: "compact manifest stored under a version ref".into(),
+                    })
+                }
+            };
+            for id in ids {
+                self.read_object(version, id)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Read and content-verify an object.
+    fn read_object(&self, version: u64, id: &str) -> Result<Vec<u8>, RecoveryError> {
+        let path = self.object_path(id);
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Err(RecoveryError::MissingObject { version, id: id.to_string() })
+            }
+            Err(e) => return Err(e.into()),
+        };
+        if hex(&Sha256::digest(&bytes)) != id {
+            return Err(RecoveryError::ObjectHashMismatch { version, id: id.to_string() });
+        }
+        Ok(bytes)
+    }
+
+    /// Write `bytes` as a content-addressed object (tmp + fsync +
+    /// rename). Writing an already-present address is a no-op, which is
+    /// what makes post-crash recommits idempotent.
+    fn put_object(&self, bytes: &[u8]) -> Result<String, RecoveryError> {
+        let id = hex(&Sha256::digest(bytes));
+        let path = self.object_path(&id);
+        if path.exists() {
+            return Ok(id);
+        }
+        let tmp = self.root.join("objects").join(format!(".{id}.tmp"));
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(bytes)?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, &path)?;
+        Ok(id)
+    }
+
+    fn write_ref(&self, name: &str, manifest: &Json) -> Result<(), RecoveryError> {
+        let path = self.ref_path(name);
+        let tmp = self.root.join("refs").join(format!(".{name}.tmp"));
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(manifest.to_string().as_bytes())?;
+            f.write_all(b"\n")?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, &path)?;
+        Ok(())
+    }
+
+    fn read_ref_json(&self, version: u64, name: &str) -> Result<Option<Json>, RecoveryError> {
+        let raw = match fs::read_to_string(self.ref_path(name)) {
+            Ok(s) => s,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e.into()),
+        };
+        match Json::parse(raw.trim()) {
+            Ok(j) => Ok(Some(j)),
+            Err(reason) => Err(RecoveryError::CorruptManifest { version, reason }),
+        }
+    }
+
+    fn read_manifest(&self, version: u64) -> Result<Manifest, RecoveryError> {
+        let name = format!("v{version}");
+        let j = self
+            .read_ref_json(version, &name)?
+            .ok_or(RecoveryError::MissingManifest { version })?;
+        Self::manifest_from_json(version, &j)
+    }
+
+    fn manifest_from_json(version: u64, j: &Json) -> Result<Manifest, RecoveryError> {
+        let corrupt = |reason: &str| RecoveryError::CorruptManifest {
+            version,
+            reason: reason.to_string(),
+        };
+        let kind = j.get("kind").and_then(Json::as_str).ok_or_else(|| corrupt("missing kind"))?;
+        match kind {
+            "base" => {
+                let base = j
+                    .get("base")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| corrupt("missing base"))?
+                    .to_string();
+                let state = j
+                    .get("state")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| corrupt("missing state"))?
+                    .to_string();
+                Ok(Manifest::Base { base, state })
+            }
+            "delta" => {
+                let v = j
+                    .get("version")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| corrupt("missing version"))?;
+                if v != version {
+                    return Err(corrupt(&format!("manifest says v{v}")));
+                }
+                let delta = j
+                    .get("delta")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| corrupt("missing delta"))?
+                    .to_string();
+                let delta_hash = j
+                    .get("delta_hash")
+                    .and_then(Json::as_str)
+                    .and_then(parse_hash)
+                    .ok_or_else(|| corrupt("missing delta_hash"))?;
+                let state = j
+                    .get("state")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| corrupt("missing state"))?
+                    .to_string();
+                Ok(Manifest::Delta { delta, delta_hash, state })
+            }
+            "compact" => {
+                let upto =
+                    j.get("upto").and_then(Json::as_u64).ok_or_else(|| corrupt("missing upto"))?;
+                let object = j
+                    .get("object")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| corrupt("missing object"))?
+                    .to_string();
+                Ok(Manifest::Compact { upto, object })
+            }
+            other => Err(corrupt(&format!("unknown manifest kind {other:?}"))),
+        }
+    }
+
+    /// Persist v0: base policy snapshot + trainer state + genesis
+    /// journal record. Must be the first write into a fresh store.
+    pub fn put_genesis(
+        &mut self,
+        layout: &ModelLayout,
+        policy: &ParamSet,
+        state: &TrainState,
+        task_counter: u64,
+        run_seed: u64,
+    ) -> Result<(), RecoveryError> {
+        let base_id = self.put_object(&policy.to_snapshot_bytes())?;
+        let state_id = self.put_object(&encode_train_state(state))?;
+        self.write_ref(
+            "v0",
+            &Json::obj()
+                .set("kind", "base")
+                .set("version", 0u64)
+                .set("base", base_id)
+                .set("state", state_id),
+        )?;
+        let record = JournalRecord::Genesis {
+            witness: policy_witness(policy),
+            task_counter,
+            model_fp: layout.fingerprint(),
+            run_seed,
+        };
+        self.append_record(record)
+    }
+
+    /// Seal a version's artifacts durably (delta object, trainer-state
+    /// object, `refs/v{N}` manifest) WITHOUT journaling — the caller
+    /// journals separately via [`DurableStore::append_commit`], and a
+    /// crash between the two is recoverable.
+    pub fn seal_version(
+        &mut self,
+        ckpt: &DeltaCheckpoint,
+        state: &TrainState,
+    ) -> Result<(), RecoveryError> {
+        let delta_id = self.put_object(&ckpt.bytes)?;
+        let state_id = self.put_object(&encode_train_state(state))?;
+        self.write_ref(
+            &format!("v{}", ckpt.version),
+            &Json::obj()
+                .set("kind", "delta")
+                .set("version", ckpt.version)
+                .set("delta", delta_id)
+                .set("delta_hash", hex(&ckpt.hash))
+                .set("state", state_id),
+        )
+    }
+
+    /// Append the commit record for `version`. This is the commit point:
+    /// only call it after [`DurableStore::seal_version`] returned Ok.
+    pub fn append_commit(
+        &mut self,
+        version: u64,
+        step: u64,
+        witness: [u8; 32],
+        task_counter: u64,
+        seeds: Vec<SeedRecord>,
+    ) -> Result<(), RecoveryError> {
+        assert_eq!(
+            version,
+            self.records.len() as u64,
+            "commit records must be appended in version order"
+        );
+        self.append_record(JournalRecord::Commit { version, step, witness, task_counter, seeds })
+    }
+
+    fn append_record(&mut self, record: JournalRecord) -> Result<(), RecoveryError> {
+        let path = self.journal_path();
+        let mut f = fs::OpenOptions::new().create(true).append(true).open(&path)?;
+        // Heal a good-but-unterminated final line (tail truncation can
+        // leave one when the last good record had no trailing newline).
+        let len = f.seek(SeekFrom::End(0))?;
+        if len > 0 {
+            let mut last = [0u8; 1];
+            let mut rf = fs::File::open(&path)?;
+            rf.seek(SeekFrom::End(-1))?;
+            rf.read_exact(&mut last)?;
+            if last[0] != b'\n' {
+                f.write_all(b"\n")?;
+            }
+        }
+        let mut line = record.to_json().to_string();
+        line.push('\n');
+        f.write_all(line.as_bytes())?;
+        f.sync_all()?;
+        self.records.push(record);
+        Ok(())
+    }
+
+    /// Decode the delta checkpoint committed at `version` (>= 1),
+    /// verifying content hash and artifact integrity.
+    pub fn delta(&self, version: u64) -> Result<DeltaCheckpoint, RecoveryError> {
+        if version == 0 || version as usize >= self.records.len() {
+            return Err(RecoveryError::UnknownVersion { version });
+        }
+        let manifest = self.read_manifest(version)?;
+        let (delta_id, delta_hash) = match manifest {
+            Manifest::Delta { delta, delta_hash, .. } => (delta, delta_hash),
+            _ => {
+                return Err(RecoveryError::CorruptManifest {
+                    version,
+                    reason: "expected a delta manifest".into(),
+                })
+            }
+        };
+        let bytes = self.read_object(version, &delta_id)?;
+        let ckpt = DeltaCheckpoint::from_bytes(bytes).map_err(|error| {
+            RecoveryError::CorruptArtifact { path: self.object_path(&delta_id), error }
+        })?;
+        if ckpt.hash != delta_hash {
+            return Err(RecoveryError::CorruptManifest {
+                version,
+                reason: "manifest delta_hash disagrees with the artifact".into(),
+            });
+        }
+        if ckpt.version != version {
+            return Err(RecoveryError::CorruptManifest {
+                version,
+                reason: format!("artifact encodes v{}", ckpt.version),
+            });
+        }
+        Ok(ckpt)
+    }
+
+    /// Decode the trainer state persisted at `version`.
+    pub fn train_state(&self, version: u64) -> Result<TrainState, RecoveryError> {
+        if version as usize >= self.records.len() {
+            return Err(RecoveryError::UnknownVersion { version });
+        }
+        let state_id = match self.read_manifest(version)? {
+            Manifest::Base { state, .. } | Manifest::Delta { state, .. } => state,
+            Manifest::Compact { .. } => {
+                return Err(RecoveryError::CorruptManifest {
+                    version,
+                    reason: "compact manifest stored under a version ref".into(),
+                })
+            }
+        };
+        let bytes = self.read_object(version, &state_id)?;
+        decode_train_state(&bytes).map_err(|reason| RecoveryError::CorruptManifest {
+            version,
+            reason: format!("train state object: {reason}"),
+        })
+    }
+
+    /// Decode the v0 base policy snapshot.
+    pub fn base_policy(&self, layout: &ModelLayout) -> Result<ParamSet, RecoveryError> {
+        if self.records.is_empty() {
+            return Err(RecoveryError::UnknownVersion { version: 0 });
+        }
+        let base_id = match self.read_manifest(0)? {
+            Manifest::Base { base, .. } => base,
+            _ => {
+                return Err(RecoveryError::CorruptManifest {
+                    version: 0,
+                    reason: "v0 manifest is not a base snapshot".into(),
+                })
+            }
+        };
+        let bytes = self.read_object(0, &base_id)?;
+        ParamSet::from_snapshot_bytes(layout, &bytes)
+            .map_err(|reason| RecoveryError::CorruptManifest { version: 0, reason })
+    }
+
+    /// Materialize the policy at `version` by replaying the delta chain
+    /// over the base snapshot (using the compacted object when one
+    /// covers a prefix), then verify it against the journaled witness.
+    pub fn reconstruct(
+        &self,
+        layout: &ModelLayout,
+        version: u64,
+    ) -> Result<ParamSet, RecoveryError> {
+        if version as usize >= self.records.len() {
+            return Err(RecoveryError::UnknownVersion { version });
+        }
+        let mut policy = self.base_policy(layout)?;
+        let mut next = 1u64;
+        if let Some((upto, ckpt)) = self.compacted()? {
+            if upto <= version {
+                let delta = ckpt.open().map_err(|error| RecoveryError::CorruptArtifact {
+                    path: self.ref_path("compact"),
+                    error,
+                })?;
+                crate::delta::apply_delta(&mut policy, &delta);
+                next = upto + 1;
+            }
+        }
+        for v in next..=version {
+            let ckpt = self.delta(v)?;
+            let delta = ckpt.open().map_err(|error| RecoveryError::CorruptArtifact {
+                path: self.object_path(&hex(&Sha256::digest(&ckpt.bytes))),
+                error,
+            })?;
+            crate::delta::apply_delta(&mut policy, &delta);
+        }
+        let witness = self.witness(version)?;
+        if policy_witness(&policy) != witness {
+            return Err(RecoveryError::WitnessMismatch { version });
+        }
+        Ok(policy)
+    }
+
+    /// The compacted-chain checkpoint, when `refs/compact` exists.
+    /// Returns the highest version it covers and the decoded artifact.
+    pub fn compacted(&self) -> Result<Option<(u64, DeltaCheckpoint)>, RecoveryError> {
+        let j = match self.read_ref_json(0, "compact")? {
+            Some(j) => j,
+            None => return Ok(None),
+        };
+        let (upto, object) = match Self::manifest_from_json(0, &j)? {
+            Manifest::Compact { upto, object } => (upto, object),
+            _ => {
+                return Err(RecoveryError::CorruptManifest {
+                    version: 0,
+                    reason: "refs/compact is not a compact manifest".into(),
+                })
+            }
+        };
+        let bytes = self.read_object(upto, &object)?;
+        let ckpt = DeltaCheckpoint::from_bytes(bytes).map_err(|error| {
+            RecoveryError::CorruptArtifact { path: self.object_path(&object), error }
+        })?;
+        Ok(Some((upto, ckpt)))
+    }
+
+    /// Fold `D_1..D_upto` into one object and point `refs/compact` at
+    /// it. Verifies the folded chain reproduces the journaled witness
+    /// before publishing the ref. Defaults to the last journaled
+    /// version when `upto` is `None`.
+    pub fn compact(
+        &mut self,
+        layout: &ModelLayout,
+        upto: Option<u64>,
+    ) -> Result<CompactStats, RecoveryError> {
+        let last = self.last_version().ok_or(RecoveryError::UnknownVersion { version: 0 })?;
+        let upto = upto.unwrap_or(last);
+        if upto == 0 || upto > last {
+            return Err(RecoveryError::UnknownVersion { version: upto });
+        }
+        let mut chain_bytes = 0u64;
+        let mut chain = Vec::with_capacity(upto as usize);
+        for v in 1..=upto {
+            let ckpt = self.delta(v)?;
+            chain_bytes += ckpt.bytes.len() as u64;
+            let delta = ckpt.open().map_err(|error| RecoveryError::CorruptArtifact {
+                path: self.object_path(&hex(&Sha256::digest(&ckpt.bytes))),
+                error,
+            })?;
+            chain.push(delta);
+        }
+        let merged = merge_chain(&chain)?;
+        let folded = DeltaCheckpoint::seal(&merged);
+        // Verify the fold against the journaled witness before any ref
+        // becomes visible: base + merged must equal base + D_1..D_upto.
+        let mut check = self.base_policy(layout)?;
+        let reopened = folded.open().map_err(|error| RecoveryError::CorruptArtifact {
+            path: self.ref_path("compact"),
+            error,
+        })?;
+        crate::delta::apply_delta(&mut check, &reopened);
+        if policy_witness(&check) != self.witness(upto)? {
+            return Err(RecoveryError::WitnessMismatch { version: upto });
+        }
+        let compacted_bytes = folded.bytes.len() as u64;
+        let object = self.put_object(&folded.bytes)?;
+        self.write_ref(
+            "compact",
+            &Json::obj().set("kind", "compact").set("upto", upto).set("object", object),
+        )?;
+        Ok(CompactStats { upto, chain_bytes, compacted_bytes })
+    }
+
+    /// Rebuild everything a resuming run needs from the last journaled
+    /// commit, checking the persisted identity against the resuming
+    /// config. `[0; 32]` stands in for the genesis hash, matching the
+    /// live hub.
+    pub fn resume_point(
+        &self,
+        layout: &ModelLayout,
+        run_seed: u64,
+    ) -> Result<ResumePoint, RecoveryError> {
+        let (genesis_fp, genesis_seed) = match self.records.first() {
+            Some(JournalRecord::Genesis { model_fp, run_seed, .. }) => (*model_fp, *run_seed),
+            _ => return Err(RecoveryError::MissingGenesis),
+        };
+        if genesis_fp != layout.fingerprint() {
+            return Err(RecoveryError::ConfigMismatch { field: "model_fp" });
+        }
+        if genesis_seed != run_seed {
+            return Err(RecoveryError::ConfigMismatch { field: "run_seed" });
+        }
+        let version = self.last_version().unwrap();
+        let task_counter = match &self.records[version as usize] {
+            JournalRecord::Genesis { task_counter, .. } => *task_counter,
+            JournalRecord::Commit { task_counter, .. } => *task_counter,
+        };
+        let state = self.train_state(version)?;
+        let policy = self.reconstruct(layout, version)?;
+        let mut chain = Vec::with_capacity(version as usize);
+        for v in 1..=version {
+            chain.push(self.delta(v)?);
+        }
+        let version_hash =
+            if version == 0 { [0u8; 32] } else { chain[version as usize - 1].hash };
+        let (prev_policy, prev_hash) = if version == 0 {
+            (None, [0u8; 32])
+        } else {
+            let prev = self.reconstruct(layout, version - 1)?;
+            let ph = if version == 1 { [0u8; 32] } else { chain[version as usize - 2].hash };
+            (Some(prev), ph)
+        };
+        Ok(ResumePoint {
+            version,
+            state,
+            policy,
+            version_hash,
+            task_counter,
+            prev_policy,
+            prev_hash,
+            chain,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::{extract_delta, CheckpointStore};
+    use crate::util::Rng;
+
+    fn test_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("sprw-durable-{}-{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn layout() -> ModelLayout {
+        ModelLayout::transformer("store-test", 64, 16, 2, 32)
+    }
+
+    /// Build a store with a genesis and `n` committed versions; returns
+    /// (store, layout, per-version policies p_0..p_n).
+    fn seeded_store(dir: &Path, n: u64) -> (DurableStore, ModelLayout, Vec<ParamSet>) {
+        let l = layout();
+        let mut rng = Rng::new(1);
+        let mut policies = vec![ParamSet::random(&l, 0.02, &mut rng)];
+        let state = TrainState::init(&l, &mut rng);
+        let mut store = DurableStore::open(dir).unwrap();
+        store.put_genesis(&l, &policies[0], &state, 0, 42).unwrap();
+        for v in 1..=n {
+            let mut next = policies[v as usize - 1].clone();
+            // Perturb a few elements so each delta is small and sparse.
+            for _ in 0..8 {
+                let t = (rng.next_u64() % l.tensors.len() as u64) as usize;
+                let len = next.tensors[t].len();
+                let i = (rng.next_u64() % len as u64) as usize;
+                next.tensors[t][i] = Bf16::from_f32(rng.normal() as f32);
+            }
+            let delta =
+                extract_delta(&l, &policies[v as usize - 1], &next, v - 1, v, ApplyMode::Assign);
+            let ckpt = DeltaCheckpoint::seal(&delta);
+            store.seal_version(&ckpt, &state).unwrap();
+            store
+                .append_commit(
+                    v,
+                    v - 1,
+                    policy_witness(&next),
+                    v * 10,
+                    vec![SeedRecord { actor: 0, seed: v }],
+                )
+                .unwrap();
+            policies.push(next);
+        }
+        (store, l, policies)
+    }
+
+    #[test]
+    fn fresh_open_round_trip() {
+        let dir = test_dir("fresh");
+        let (store, l, policies) = seeded_store(&dir, 4);
+        assert_eq!(store.last_version(), Some(4));
+        // Reopen from disk and verify recovery sees the same chain.
+        drop(store);
+        let store = DurableStore::open(&dir).unwrap();
+        assert_eq!(store.last_version(), Some(4));
+        for v in 0..=4u64 {
+            let p = store.reconstruct(&l, v).unwrap();
+            assert_eq!(
+                policy_witness(&p),
+                policy_witness(&policies[v as usize]),
+                "v{v} reconstruction differs"
+            );
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_journal_tail_is_truncated() {
+        let dir = test_dir("torn");
+        let (store, _, _) = seeded_store(&dir, 3);
+        drop(store);
+        // Simulate a crash mid-append: add half a record.
+        let path = dir.join("journal.jsonl");
+        let mut f = fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"{\"kind\":\"commit\",\"vers").unwrap();
+        drop(f);
+        let store = DurableStore::open(&dir).unwrap();
+        assert_eq!(store.last_version(), Some(3), "torn tail must roll back to v3");
+        // The file itself must have been healed.
+        let text = fs::read_to_string(&path).unwrap();
+        assert!(text.ends_with('\n'));
+        assert_eq!(text.lines().count(), 4);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn interior_corruption_is_typed() {
+        let dir = test_dir("interior");
+        let (store, _, _) = seeded_store(&dir, 3);
+        drop(store);
+        let path = dir.join("journal.jsonl");
+        let text = fs::read_to_string(&path).unwrap();
+        let mut lines: Vec<&str> = text.lines().collect();
+        lines[1] = "{\"kind\":\"commit\",\"vers"; // corrupt a middle line
+        fs::write(&path, format!("{}\n", lines.join("\n"))).unwrap();
+        let err = DurableStore::open(&dir).err().expect("open must fail");
+        match err {
+            RecoveryError::CorruptJournal { line, .. } => assert_eq!(line, 1),
+            other => panic!("expected CorruptJournal, got {other}"),
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_and_corrupt_objects_are_typed() {
+        let dir = test_dir("objects");
+        let (store, _, _) = seeded_store(&dir, 3);
+        // Find v2's delta object via its manifest, then delete it.
+        let manifest = fs::read_to_string(dir.join("refs/v2")).unwrap();
+        let j = Json::parse(manifest.trim()).unwrap();
+        let id = j.get("delta").and_then(Json::as_str).unwrap().to_string();
+        drop(store);
+        let obj = dir.join("objects").join(format!("{id}.sprw"));
+        let bytes = fs::read(&obj).unwrap();
+        fs::remove_file(&obj).unwrap();
+        match DurableStore::open(&dir).err().expect("open must fail") {
+            RecoveryError::MissingObject { version, id: got } => {
+                assert_eq!(version, 2);
+                assert_eq!(got, id);
+            }
+            other => panic!("expected MissingObject, got {other}"),
+        }
+        // Restore it corrupted: content no longer matches the address.
+        let mut bad = bytes.clone();
+        bad[10] ^= 0xff;
+        fs::write(&obj, &bad).unwrap();
+        match DurableStore::open(&dir).err().expect("open must fail") {
+            RecoveryError::ObjectHashMismatch { version, .. } => assert_eq!(version, 2),
+            other => panic!("expected ObjectHashMismatch, got {other}"),
+        }
+        // Restore the original bytes: recovery succeeds again.
+        fs::write(&obj, &bytes).unwrap();
+        assert!(DurableStore::open(&dir).is_ok());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_manifest_is_typed() {
+        let dir = test_dir("manifest");
+        let (store, _, _) = seeded_store(&dir, 2);
+        drop(store);
+        fs::remove_file(dir.join("refs/v1")).unwrap();
+        match DurableStore::open(&dir).err().expect("open must fail") {
+            RecoveryError::MissingManifest { version } => assert_eq!(version, 1),
+            other => panic!("expected MissingManifest, got {other}"),
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sealed_but_unjournaled_version_is_invisible() {
+        let dir = test_dir("unjournaled");
+        let (store, l, policies) = seeded_store(&dir, 3);
+        drop(store);
+        // Delete the last journal line: v3's objects + manifest remain
+        // durable, but the commit record is gone — exactly the state a
+        // crash between seal_version and append_commit leaves behind.
+        let path = dir.join("journal.jsonl");
+        let text = fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        fs::write(&path, format!("{}\n", lines[..lines.len() - 1].join("\n"))).unwrap();
+        let store = DurableStore::open(&dir).unwrap();
+        assert_eq!(store.last_version(), Some(2));
+        assert!(matches!(store.delta(3), Err(RecoveryError::UnknownVersion { version: 3 })));
+        let p2 = store.reconstruct(&l, 2).unwrap();
+        assert_eq!(policy_witness(&p2), policy_witness(&policies[2]));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recommit_after_crash_is_idempotent() {
+        let dir = test_dir("recommit");
+        let (store, l, policies) = seeded_store(&dir, 3);
+        drop(store);
+        let path = dir.join("journal.jsonl");
+        let before = fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = before.lines().collect();
+        fs::write(&path, format!("{}\n", lines[..lines.len() - 1].join("\n"))).unwrap();
+        let mut store = DurableStore::open(&dir).unwrap();
+        // Recommit v3 with identical content: objects dedupe, the
+        // manifest rewrite is byte-identical, the journal heals.
+        let delta = extract_delta(&l, &policies[2], &policies[3], 2, 3, ApplyMode::Assign);
+        let ckpt = DeltaCheckpoint::seal(&delta);
+        let mut rng = Rng::new(1);
+        let state = TrainState::init(&l, &mut rng);
+        store.seal_version(&ckpt, &state).unwrap();
+        store
+            .append_commit(
+                3,
+                2,
+                policy_witness(&policies[3]),
+                30,
+                vec![SeedRecord { actor: 0, seed: 3 }],
+            )
+            .unwrap();
+        assert_eq!(store.last_version(), Some(3));
+        assert_eq!(fs::read_to_string(&path).unwrap(), before);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compaction_is_bit_exact_and_layers_with_replay() {
+        let dir = test_dir("compact");
+        let (mut store, l, policies) = seeded_store(&dir, 5);
+        let stats = store.compact(&l, None).unwrap();
+        assert_eq!(stats.upto, 5);
+        assert!(stats.compacted_bytes > 0);
+        // Reconstruct through the compacted object; must still match.
+        let p5 = store.reconstruct(&l, 5).unwrap();
+        assert_eq!(policy_witness(&p5), policy_witness(&policies[5]));
+        // A partial compaction still lets later versions replay on top.
+        let stats = store.compact(&l, Some(3)).unwrap();
+        assert_eq!(stats.upto, 3);
+        let p5b = store.reconstruct(&l, 5).unwrap();
+        assert_eq!(policy_witness(&p5b), policy_witness(&policies[5]));
+        // Versions below the compaction horizon replay per-delta.
+        let p2 = store.reconstruct(&l, 2).unwrap();
+        assert_eq!(policy_witness(&p2), policy_witness(&policies[2]));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn merge_chain_rejects_bad_chains() {
+        let l = layout();
+        let mut rng = Rng::new(9);
+        let a = ParamSet::random(&l, 0.02, &mut rng);
+        let mut b = a.clone();
+        b.tensors[0][0] = Bf16::from_f32(0.25);
+        let mut c = b.clone();
+        c.tensors[0][1] = Bf16::from_f32(0.75);
+        let d1 = extract_delta(&l, &a, &b, 0, 1, ApplyMode::Assign);
+        let d2 = extract_delta(&l, &b, &c, 1, 2, ApplyMode::Assign);
+        assert_eq!(merge_chain(&[]), Err(MergeError::Empty));
+        let mut add = d1.clone();
+        add.mode = ApplyMode::Add;
+        assert_eq!(merge_chain(&[add]), Err(MergeError::AddMode { version: 1 }));
+        let gap = extract_delta(&l, &b, &c, 5, 6, ApplyMode::Assign);
+        assert_eq!(
+            merge_chain(&[d1.clone(), gap]),
+            Err(MergeError::NonContiguous { expected: 1, found: 5 })
+        );
+        let mut alien = d2.clone();
+        alien.model_fp ^= 1;
+        assert_eq!(merge_chain(&[d1.clone(), alien]), Err(MergeError::ModelMismatch));
+        let merged = merge_chain(&[d1, d2]).unwrap();
+        let mut p = a.clone();
+        crate::delta::apply_delta(&mut p, &merged);
+        assert_eq!(policy_witness(&p), policy_witness(&c));
+    }
+
+    #[test]
+    fn train_state_codec_round_trips() {
+        let l = layout();
+        let mut rng = Rng::new(7);
+        let mut state = TrainState::init(&l, &mut rng);
+        for group in [&mut state.m, &mut state.v] {
+            for tensor in group.iter_mut() {
+                for x in tensor.iter_mut() {
+                    *x = rng.normal() as f32;
+                }
+            }
+        }
+        state.step = 1234;
+        let bytes = encode_train_state(&state);
+        let back = decode_train_state(&bytes).unwrap();
+        assert_eq!(back.step, 1234);
+        assert_eq!(back.masters, state.masters);
+        assert_eq!(back.m, state.m);
+        assert_eq!(back.v, state.v);
+        assert!(decode_train_state(&bytes[..bytes.len() - 1]).is_err());
+        assert!(decode_train_state(b"XXXX").is_err());
+    }
+
+    #[test]
+    fn resume_point_checks_identity() {
+        let dir = test_dir("resume-point");
+        let (store, l, policies) = seeded_store(&dir, 3);
+        let rp = store.resume_point(&l, 42).unwrap();
+        assert_eq!(rp.version, 3);
+        assert_eq!(rp.task_counter, 30);
+        assert_eq!(policy_witness(&rp.policy), policy_witness(&policies[3]));
+        assert_eq!(
+            policy_witness(rp.prev_policy.as_ref().unwrap()),
+            policy_witness(&policies[2])
+        );
+        assert_eq!(rp.chain.len(), 3);
+        assert_eq!(rp.version_hash, rp.chain[2].hash);
+        assert_eq!(rp.prev_hash, rp.chain[1].hash);
+        // Wrong seed and wrong model both refuse to resume.
+        assert!(matches!(
+            store.resume_point(&l, 43),
+            Err(RecoveryError::ConfigMismatch { field: "run_seed" })
+        ));
+        let other = ModelLayout::transformer("other-model", 64, 16, 2, 32);
+        assert!(matches!(
+            store.resume_point(&other, 42),
+            Err(RecoveryError::ConfigMismatch { field: "model_fp" })
+        ));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn chain_feeds_checkpoint_store() {
+        // The resume path seeds the hub's in-memory CheckpointStore from
+        // ResumePoint::chain; make sure the pieces fit together.
+        let dir = test_dir("chain-seed");
+        let (store, l, _) = seeded_store(&dir, 3);
+        let rp = store.resume_point(&l, 42).unwrap();
+        let mut mem = CheckpointStore::in_memory();
+        for ckpt in rp.chain {
+            mem.put(ckpt).unwrap();
+        }
+        assert_eq!(mem.latest_version(), Some(3));
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,10 +1,11 @@
 //! SparrowRL launcher CLI.
 //!
 //! ```text
-//! sparrowrl exp <id> [--flags]   reproduce a paper table/figure (or 'all')
-//! sparrowrl train [--flags]      run the real RL loop on PJRT artifacts
-//! sparrowrl sim [--flags]        one simulated geo-distributed run
-//! sparrowrl list                 list experiments and models
+//! sparrowrl exp <id> [--flags]        reproduce a paper table/figure (or 'all')
+//! sparrowrl train [--flags]           run the real RL loop on PJRT artifacts
+//! sparrowrl sim [--flags]             one simulated geo-distributed run
+//! sparrowrl reconstruct [--flags]     rebuild a policy from a durable store
+//! sparrowrl list                      list experiments and models
 //! ```
 
 use sparrowrl::config;
@@ -22,7 +23,9 @@ fn usage() -> ! {
         "usage:\n  sparrowrl exp <{}|all> [--flags]\n  sparrowrl train [--model sparrow-xs] \
          [--steps N] [--sft-steps N] [--algorithm grpo|rloo|opo] [--lr-rl X] [--actors N] [--seed S] [--pipelined] \
          [--transport inproc|sim|tcp] [--tcp-streams N] [--tcp-bps BITS] [--deterministic] [--wan wan-1..wan-4] [--gantt]\n    \
-         [--fault-script join:A@V[:snapshot],leave:A@V,crash:A@V,stall:A@V,preempt:A@V[:warn=MS],...] [--autoscale] [--lease-sweep-ms MS]\n  \
+         [--fault-script join:A@V[:snapshot],leave:A@V,crash:A@V,stall:A@V,preempt:A@V[:warn=MS],...] [--autoscale] [--lease-sweep-ms MS]\n    \
+         [--persist-dir DIR] [--resume]\n  \
+         sparrowrl reconstruct --persist-dir DIR [--model sparrow-xs] [--version V] [--compact]\n  \
          sparrowrl sim [--model qwen3-8b] [--system sparrow|full|ms|ideal] [--bench gsm8k|math|deepscaler] [--steps N]\n  \
          sparrowrl list",
         exp::ALL.join("|")
@@ -40,6 +43,7 @@ fn main() {
         }
         "train" => cmd_train(&args),
         "sim" => cmd_sim(&args),
+        "reconstruct" => cmd_reconstruct(&args),
         "list" => {
             println!("experiments: {}", exp::ALL.join(", "));
             println!("runnable models: {}", config::runnable_models().join(", "));
@@ -94,6 +98,13 @@ fn train_spec(args: &Args) -> anyhow::Result<RunSpec> {
     }
     if args.get("lease-sweep-ms").is_some() {
         spec = spec.lease_sweep_ms(args.parse_or("lease-sweep-ms", 25u64));
+    }
+    let pdir = args.str_or("persist-dir", "");
+    if !pdir.is_empty() {
+        spec = spec.persist_dir(pdir);
+    }
+    if args.flag("resume") {
+        spec = spec.resume();
     }
     let tname = args.str_or("transport", "inproc");
     let mut backend = Backend::parse(&tname)
@@ -267,6 +278,55 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     if args.flag("gantt") {
         print!("{}", report.timeline.ascii_gantt(100));
     }
+    Ok(())
+}
+
+/// Offline recovery tooling over a durable store: verify the journal and
+/// object chain, optionally fold the delta chain into one compacted
+/// object (`--compact`, witness-verified before publication), and print
+/// the reconstructed policy's SHA-256 checksum at `--version` (default:
+/// the last journaled version). The checksum matches the live run's
+/// `final policy checksum` line and the journaled witness — the
+/// end-to-end durability proof.
+fn cmd_reconstruct(args: &Args) -> anyhow::Result<()> {
+    use sparrowrl::delta::{policy_witness, DurableStore, JournalRecord};
+    let dir = args.str_or("persist-dir", "");
+    if dir.is_empty() {
+        anyhow::bail!("reconstruct needs --persist-dir DIR");
+    }
+    let mut store =
+        DurableStore::open(&dir).map_err(|e| anyhow::anyhow!("durable store at {dir}: {e}"))?;
+    let model = args.str_or("model", "sparrow-xs");
+    let spec = config::model(&model).ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let layout = &spec.layout;
+    match store.records().first() {
+        Some(JournalRecord::Genesis { model_fp, .. }) => anyhow::ensure!(
+            *model_fp == layout.fingerprint(),
+            "--model {model} does not match the persisted run (layout fingerprint mismatch)"
+        ),
+        _ => anyhow::bail!("{dir} holds no durable run"),
+    }
+    let last = store.last_version().expect("genesis checked above");
+    let version = match args.get("version") {
+        Some(v) => v.parse::<u64>()?,
+        None => last,
+    };
+    if args.flag("compact") {
+        let stats = store
+            .compact(layout, None)
+            .map_err(|e| anyhow::anyhow!("compacting chain: {e}"))?;
+        println!(
+            "compacted D_1..D_{}: {} -> {} ({:.1}% of the chain)",
+            stats.upto,
+            sparrowrl::util::fmt_bytes(stats.chain_bytes),
+            sparrowrl::util::fmt_bytes(stats.compacted_bytes),
+            100.0 * stats.compacted_bytes as f64 / stats.chain_bytes.max(1) as f64,
+        );
+    }
+    let policy = store
+        .reconstruct(layout, version)
+        .map_err(|e| anyhow::anyhow!("reconstructing v{version}: {e}"))?;
+    println!("v{version} policy checksum: {}", sparrowrl::util::hex(&policy_witness(&policy)));
     Ok(())
 }
 

@@ -201,6 +201,17 @@ pub struct LocalRunConfig {
     /// the pre-elastic behaviour. Pipelined executor only; requires
     /// flat distribution and the InProc or Tcp backend.
     pub elastic: ElasticSpec,
+    /// Root of the content-addressed durable store
+    /// ([`crate::delta::DurableStore`]). `Some` makes every commit
+    /// crash-durable (objects + journal record) before it is observable;
+    /// `None` (the default) keeps the run fully in memory.
+    pub persist_dir: Option<std::path::PathBuf>,
+    /// Continue the durable run found under `persist_dir` from its last
+    /// journaled version instead of starting fresh. Requires
+    /// `deterministic` (without `wall_leases`) and an empty elastic
+    /// script; the resumed run's committed-checksum trace is bitwise
+    /// identical to an uninterrupted run's.
+    pub resume: bool,
 }
 
 impl LocalRunConfig {
@@ -226,6 +237,8 @@ impl LocalRunConfig {
             lease: LeasePolicy::default(),
             wall_leases: false,
             elastic: ElasticSpec::default(),
+            persist_dir: None,
+            resume: false,
         }
     }
 }

@@ -45,7 +45,10 @@ use crate::actor::{CommitResult, PolicyState};
 use crate::config::GpuClass;
 use crate::cost::{reserved_line, Autoscaler, Deployment};
 use crate::data::{pack_batch, Task};
-use crate::delta::{CheckpointStore, ModelLayout, ParamSet};
+use crate::delta::{
+    merge_chain, CheckpointStore, DeltaCheckpoint, DurableStore, JournalRecord, ModelLayout,
+    ParamSet, ResumePoint, SeedRecord, SparseDelta,
+};
 use crate::ledger::{Clock, JobLedger, Reject};
 use crate::metrics::{SpanKind, Timeline};
 use crate::rt::compute::Compute;
@@ -272,6 +275,16 @@ struct Hub<'a, C: Compute> {
     version: u64,
     version_hash: [u8; 32],
     store: CheckpointStore,
+    /// Content-addressed on-disk store (`LocalRunConfig::persist_dir`).
+    /// When present, every commit seals its delta + optimizer state and
+    /// appends a journal record *before* the version is observable, so a
+    /// crash at any point resumes bit-exactly ([`DurableStore`]).
+    durable: Option<DurableStore>,
+    /// First step the executor loops run (nonzero only on resume).
+    start_step: u64,
+    /// The regenerated in-flight batch a resumed run trains first, in
+    /// place of the executor's own `pending`/`last_batch` seed.
+    resume_pending: Option<(u64, Vec<Rollout>)>,
     ledger: JobLedger,
     sched: Scheduler,
     /// Lease clock: wall time normally (leases genuinely expire on
@@ -305,6 +318,7 @@ impl<'a, C: Compute> Hub<'a, C> {
         comp: &'a C,
         state: TrainState,
         task_counter: u64,
+        durable: Option<DurableStore>,
         sink: &'a mut (dyn FnMut(SessionEvent) + 'a),
         cancel: &'a AtomicBool,
     ) -> Hub<'a, C> {
@@ -335,6 +349,9 @@ impl<'a, C: Compute> Hub<'a, C> {
             // Version-0 "hash": the genesis policy has no checkpoint.
             version_hash: [0u8; 32],
             store: CheckpointStore::in_memory(),
+            durable,
+            start_step: 0,
+            resume_pending: None,
             ledger: JobLedger::new(cfg.lease),
             sched,
             clock,
@@ -386,6 +403,21 @@ impl<'a, C: Compute> Hub<'a, C> {
     /// against the *current* committed version (one step stale relative
     /// to the version being trained concurrently).
     fn plan_step(&mut self, step: u64) -> Result<Vec<(Assignment, GenJob)>> {
+        let (version, hash) = (self.version, self.version_hash);
+        self.plan_step_at(step, version, hash)
+    }
+
+    /// [`Hub::plan_step`] against an explicit `(version, hash)` lease
+    /// pair. Normal operation always plans at the hub's current version;
+    /// a resumed run replays the crash-lost batch at the *previous*
+    /// version (the one it was originally leased on) so the regenerated
+    /// rollouts are bit-identical to the uninterrupted run's.
+    fn plan_step_at(
+        &mut self,
+        step: u64,
+        version: u64,
+        hash: [u8; 32],
+    ) -> Result<Vec<(Assignment, GenJob)>> {
         let pids: Vec<u64> = (0..self.prompts_per_step)
             .map(|_| {
                 self.task_counter += 1;
@@ -397,19 +429,17 @@ impl<'a, C: Compute> Hub<'a, C> {
         // Real-clock lease hygiene: reclaim anything overdue from stalled
         // or crashed in-flight work before allocating.
         self.ledger.expire(now);
-        let assignments = self.sched.allocate(self.version, self.prompts_per_step as u64);
+        let assignments = self.sched.allocate(version, self.prompts_per_step as u64);
         if assignments.is_empty() {
             bail!("no eligible actors at step {step}");
         }
         let mut out = Vec::with_capacity(assignments.len());
         for asg in assignments {
-            let claimed =
-                self.ledger
-                    .issue(asg.actor, self.version, self.version_hash, now, asg.requests as usize);
+            let claimed = self.ledger.issue(asg.actor, version, hash, now, asg.requests as usize);
             let job = GenJob {
                 step,
-                version: self.version,
-                hash: self.version_hash,
+                version,
+                hash,
                 pids: claimed,
                 rng_seed: job_seed(self.cfg.seed, step, asg.actor),
             };
@@ -532,6 +562,15 @@ impl<'a, C: Compute> Hub<'a, C> {
         let rho = stats.nnz as f64 / self.layout.total_params() as f64;
         let payload = ckpt.payload_bytes();
         let hash = ckpt.hash;
+        // Durability step 1–3 (objects + manifest): the delta artifact
+        // and the full-precision optimizer state must be on disk before
+        // anything in memory observes the new version. The journal
+        // record below — step 4, the actual commit point — only lands
+        // after the policy books close.
+        if let Some(d) = self.durable.as_mut() {
+            d.seal_version(&ckpt, &self.state)
+                .map_err(|e| anyhow!("sealing v{} durably: {e}", ckpt.version))?;
+        }
         self.store.put(ckpt)?;
         self.version += 1;
         self.version_hash = hash;
@@ -546,6 +585,26 @@ impl<'a, C: Compute> Hub<'a, C> {
             a.payload_bytes = payload;
         }
         self.accum[batch_step as usize].policy_checksum = policy_checksum(&self.policy);
+        // Durability step 4: journal the commit. Version, trained step,
+        // SHA-256 policy witness, task counter, and the per-(step, actor)
+        // generation seeds — everything resume needs to continue the
+        // committed-checksum trace bit-exactly. Written strictly after
+        // the objects above are durable: a crash between seal and journal
+        // leaves an invisible (recommittable) version, never a phantom.
+        if self.durable.is_some() {
+            let actors: BTreeSet<u32> = batch.iter().map(|r| r.actor).collect();
+            let seeds: Vec<SeedRecord> = actors
+                .into_iter()
+                .map(|a| SeedRecord { actor: a, seed: job_seed(self.cfg.seed, batch_step, a) })
+                .collect();
+            let witness = self.accum[batch_step as usize].policy_checksum;
+            let (version, task_counter) = (self.version, self.task_counter);
+            self.durable
+                .as_mut()
+                .expect("checked above")
+                .append_commit(version, batch_step, witness, task_counter, seeds)
+                .map_err(|e| anyhow!("journaling v{version}: {e}"))?;
+        }
         // The step's books are closed: generation landed during this
         // loop iteration's overlap window, training/extraction just
         // finished. Emit the observation events the report is later
@@ -583,6 +642,81 @@ impl<'a, C: Compute> Hub<'a, C> {
             rollout_ms: a.rollout_ms,
             policy_checksum: a.policy_checksum,
         }
+    }
+
+    /// First-run durability: persist the base (v0) snapshot, optimizer
+    /// state, and genesis journal record before any RL step mutates
+    /// them. A no-op for in-memory runs and for resumed stores, which
+    /// already hold their genesis.
+    fn write_genesis(&mut self) -> Result<()> {
+        let (layout, task_counter, seed) = (self.layout, self.task_counter, self.cfg.seed);
+        if let Some(d) = self.durable.as_mut() {
+            if d.is_fresh() {
+                d.put_genesis(layout, &self.policy, &self.state, task_counter, seed)
+                    .map_err(|e| anyhow!("writing durable genesis: {e}"))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Rebuild the generation batch that was in flight when the run
+    /// died. Under the one-step-off schedule, batch `V` is generated on
+    /// policy `v_{V-1}` concurrently with the training that commits
+    /// `v_V`; the journal's last record proves `v_V` committed, so batch
+    /// `V` existed only in memory and is lost. Replaying the *same*
+    /// leases (prompt ids re-derived from the genesis counter) with the
+    /// *same* per-(step, actor) seeds against the *same* `v_{V-1}`
+    /// policy reproduces it bit-exactly — the deterministic schedule
+    /// pins tau at its prior, so allocation matches the original run.
+    fn regenerate_pending(&mut self, prev_policy: ParamSet, prev_hash: [u8; 32]) -> Result<()> {
+        let v = self.version;
+        let prev_v = v - 1;
+        // The scheduler registered everyone at v0; the original run had
+        // observed them at `v_{V-1}` when batch V was planned.
+        for i in 0..self.cfg.n_actors {
+            self.sched
+                .observe_version(i as u32, VersionState { active: prev_v, staged: None });
+        }
+        // Batch V's prompt ids are fully determined by the genesis
+        // counter: batches 0..V each consumed one step's worth. Deriving
+        // from genesis (rather than rewinding the last journaled value)
+        // handles both shapes the journal can be in at version V — a
+        // mid-run crash, where batch V's prompts were already posted,
+        // and a cleanly finished shorter run being extended, where the
+        // epilogue committed v_V without ever planning batch V.
+        let genesis_tc = match self.durable.as_ref().and_then(|d| d.records().first()) {
+            Some(JournalRecord::Genesis { task_counter, .. }) => *task_counter,
+            _ => bail!("resume without a durable genesis record"),
+        };
+        self.task_counter = genesis_tc + v * self.prompts_per_step as u64;
+        let jobs = self.plan_step_at(v, prev_v, prev_hash)?;
+        let phase_t = Instant::now();
+        let mut scratch = PolicyState::new(self.layout.clone(), prev_policy.clone(), prev_v);
+        let mut batch: Vec<Rollout> = Vec::new();
+        for (asg, job) in &jobs {
+            let t_job = Instant::now();
+            let (mut rollouts, tokens) = run_gen_job(
+                self.comp,
+                self.cfg,
+                &mut scratch,
+                &prev_policy,
+                asg.actor,
+                job,
+                |_| Ok(()),
+            )
+            .map_err(anyhow::Error::msg)?;
+            let elapsed = t_job.elapsed().as_secs_f64();
+            self.submit_and_settle(asg.actor, job, job.hash, &mut rollouts, tokens, elapsed)?;
+            batch.extend(rollouts);
+        }
+        // Workers start at the resumed version V, not V-1.
+        for i in 0..self.cfg.n_actors {
+            self.sched.observe_version(i as u32, VersionState { active: v, staged: None });
+        }
+        self.finish_generation(v, &batch, phase_t.elapsed().as_secs_f64() * 1e3);
+        self.resume_pending = Some((v, batch));
+        self.start_step = v + 1;
+        Ok(())
     }
 }
 
@@ -639,30 +773,109 @@ pub(crate) fn run_observed<'a, C: Compute>(
             );
         }
     }
-    let mut rng = Rng::new(cfg.seed);
-    let mut state = TrainState::init(layout, &mut rng);
-
-    // ---------------- SFT warmup: same train path, adv = 1 --------------
-    let mut task_counter: u64 = 0;
-    for step in 0..cfg.sft_steps {
-        if cancel.load(Ordering::Relaxed) {
-            bail!("{}", crate::session::ABORT_MSG);
+    // ---------------- Durable store / resume ----------------------------
+    let mut durable: Option<DurableStore> = None;
+    let mut resume_from: Option<ResumePoint> = None;
+    if let Some(dir) = &cfg.persist_dir {
+        let store = DurableStore::open(dir)
+            .map_err(|e| anyhow!("durable store at {}: {e}", dir.display()))?;
+        if cfg.resume {
+            ensure!(
+                cfg.deterministic && !cfg.wall_leases,
+                "resume requires the deterministic schedule (wall-clock leases would \
+                 make the replayed in-flight batch diverge)"
+            );
+            ensure!(
+                cfg.elastic.joins.is_empty() && cfg.elastic.leaves.is_empty(),
+                "resume cannot be combined with scripted elastic membership"
+            );
+            ensure!(!store.is_fresh(), "nothing to resume: {} holds no durable run", dir.display());
+            let rp = store
+                .resume_point(layout, cfg.seed)
+                .map_err(|e| anyhow!("recovering durable run at {}: {e}", dir.display()))?;
+            ensure!(
+                rp.version <= cfg.steps,
+                "durable run is already at v{} but the spec asks for only {} steps",
+                rp.version,
+                cfg.steps
+            );
+            resume_from = Some(rp);
+        } else {
+            ensure!(
+                store.is_fresh(),
+                "{} already holds a durable run; resume it or point at an empty directory",
+                dir.display()
+            );
         }
-        let pairs: Vec<(Vec<i32>, Vec<i32>)> = (0..shape.b_train)
-            .map(|_| {
-                task_counter += 1;
-                let task = Task::from_prompt_id(task_counter, cfg.bench);
-                (task.prompt_tokens(), task.answer_tokens())
-            })
-            .collect();
-        let batch = pack_batch(&pairs, shape.b_train, shape.max_seq);
-        let adv = vec![1.0f32; shape.b_train];
-        let loss = comp.train_step(&mut state, &batch.tokens, &batch.gen_mask, &adv, cfg.lr_sft)?;
-        sink(SessionEvent::SftStep { step, loss });
+        durable = Some(store);
+    } else {
+        ensure!(!cfg.resume, "resume needs a persist_dir to recover from");
     }
 
     // ---------------- RL phase ------------------------------------------
-    let mut hub = Hub::new(cfg, layout, comp, state, task_counter, sink, cancel);
+    let mut hub = match resume_from {
+        Some(rp) => {
+            // Resumed run: SFT and steps `0..V` are already folded into
+            // the persisted optimizer state. Rebuild the hub at the last
+            // durable version, reseed the in-memory chain (elastic
+            // bootstraps replay from it), and regenerate the one
+            // in-flight batch the crash lost.
+            let ResumePoint {
+                version,
+                state,
+                policy: _,
+                version_hash,
+                task_counter,
+                prev_policy,
+                prev_hash,
+                chain,
+            } = rp;
+            let mut hub = Hub::new(cfg, layout, comp, state, task_counter, durable, sink, cancel);
+            hub.version = version;
+            hub.version_hash = version_hash;
+            for ckpt in chain {
+                hub.store.put(ckpt)?;
+            }
+            if version >= 1 && version < cfg.steps {
+                let prev =
+                    prev_policy.expect("resume_point retains the pre-crash policy for v >= 1");
+                hub.regenerate_pending(prev, prev_hash)?;
+            } else {
+                // v0 (crash before the first commit) restarts the loop
+                // from the top; v == steps has nothing left to run.
+                hub.start_step = version;
+            }
+            hub
+        }
+        None => {
+            let mut rng = Rng::new(cfg.seed);
+            let mut state = TrainState::init(layout, &mut rng);
+
+            // ------------ SFT warmup: same train path, adv = 1 ----------
+            let mut task_counter: u64 = 0;
+            for step in 0..cfg.sft_steps {
+                if cancel.load(Ordering::Relaxed) {
+                    bail!("{}", crate::session::ABORT_MSG);
+                }
+                let pairs: Vec<(Vec<i32>, Vec<i32>)> = (0..shape.b_train)
+                    .map(|_| {
+                        task_counter += 1;
+                        let task = Task::from_prompt_id(task_counter, cfg.bench);
+                        (task.prompt_tokens(), task.answer_tokens())
+                    })
+                    .collect();
+                let batch = pack_batch(&pairs, shape.b_train, shape.max_seq);
+                let adv = vec![1.0f32; shape.b_train];
+                let loss =
+                    comp.train_step(&mut state, &batch.tokens, &batch.gen_mask, &adv, cfg.lr_sft)?;
+                sink(SessionEvent::SftStep { step, loss });
+            }
+            let mut hub = Hub::new(cfg, layout, comp, state, task_counter, durable, sink, cancel);
+            // Base snapshot + genesis record before the first RL step.
+            hub.write_genesis()?;
+            hub
+        }
+    };
     match mode {
         ExecMode::Sequential => run_sequential(&mut hub)?,
         ExecMode::Pipelined => run_pipelined(&mut hub)?,
@@ -718,11 +931,16 @@ fn seq_stream_and_commit<C: Compute>(
 
 /// Phase-sequential executor over the shared one-step-off schedule.
 fn run_sequential<C: Compute>(hub: &mut Hub<C>) -> Result<()> {
+    // Fresh runs start every actor at v0; a resumed run starts them at
+    // the recovered version, seeded with the recovered policy.
     let mut actors: Vec<PolicyState> = (0..hub.cfg.n_actors)
-        .map(|_| PolicyState::new(hub.layout.clone(), hub.policy.clone(), 0))
+        .map(|_| {
+            PolicyState::new(hub.layout.clone(), hub.policy.clone(), hub.version)
+                .with_active_hash(hub.version_hash)
+        })
         .collect();
-    let mut pending: Option<(u64, Vec<Rollout>)> = None;
-    for step in 0..hub.cfg.steps {
+    let mut pending: Option<(u64, Vec<Rollout>)> = hub.resume_pending.take();
+    for step in hub.start_step..hub.cfg.steps {
         hub.check_cancel()?;
         let jobs = hub.plan_step(step)?;
         let phase_t = Instant::now();
@@ -1087,12 +1305,20 @@ fn run_pipelined<C: Compute>(hub: &mut Hub<C>) -> Result<()> {
     }
     let layout = hub.layout.clone();
     let policy0 = hub.policy.clone();
+    // Day-one workers start where the hub is: v0 for fresh runs, the
+    // recovered version on resume (the active hash seeds the ledger's
+    // acceptance predicate). Joiners always bootstrap from scratch —
+    // resume forbids elastic scripts, so `v0 == 0` whenever they exist.
+    let v0 = hub.version;
+    let h0 = hub.version_hash;
     let transport = build_transport(cfg)?;
     let runner = move |actor: u32, ep: &mut dyn ActorEndpoint| -> Result<(), String> {
-        let state = PolicyState::new(layout.clone(), policy0.clone(), 0);
         if (actor as usize) < n {
+            let state =
+                PolicyState::new(layout.clone(), policy0.clone(), v0).with_active_hash(h0);
             actor_worker(comp, cfg, actor, state, ep)
         } else {
+            let state = PolicyState::new(layout.clone(), policy0.clone(), 0);
             joiner_worker(comp, cfg, actor, state, ep)
         }
     };
@@ -1229,8 +1455,11 @@ fn transport_hub_loop<C: Compute>(hub: &mut Hub<C>, ep: &mut dyn HubEndpoint) ->
         }
     }
 
-    let mut last_batch: Option<(u64, Vec<Rollout>)> = None;
-    for step in 0..hub.cfg.steps {
+    // A resumed run seeds the overlap window with its regenerated
+    // in-flight batch: the first loop iteration trains it exactly as the
+    // uninterrupted run would have.
+    let mut last_batch: Option<(u64, Vec<Rollout>)> = hub.resume_pending.take();
+    for step in hub.start_step..hub.cfg.steps {
         hub.check_cancel()?;
         // 1. Dispatch this step's generation on the stale policy. Every
         //    assigned actor already acked Activated(version), so per-actor
@@ -1637,14 +1866,22 @@ fn fail_actor<C: Compute>(
 ) -> Result<()> {
     // A joiner that dies mid-bootstrap never held leases or scheduler
     // state: count the failover, drop the bootstrap, move on.
-    if mem.joining.remove(&actor).is_some() && !mem.alive.contains(&actor) {
-        hub.failures += 1;
-        ep.set_active(actor, false);
-        if hub.cfg.verbose {
-            eprintln!("joiner {actor} lost mid-bootstrap ({reason})");
+    if let Some(jf) = mem.joining.remove(&actor) {
+        // `bootstrap_joiner` pinned the chain when the (announced)
+        // delta-chain bootstrap started streaming; release it so gc can
+        // move again.
+        if jf.announced && matches!(jf.bootstrap, BootstrapKind::DeltaChain) {
+            hub.store.unpin_chain(jf.version);
         }
-        hub.emit(SessionEvent::Failover { actor, requeued: 0, reason });
-        return Ok(());
+        if !mem.alive.contains(&actor) {
+            hub.failures += 1;
+            ep.set_active(actor, false);
+            if hub.cfg.verbose {
+                eprintln!("joiner {actor} lost mid-bootstrap ({reason})");
+            }
+            hub.emit(SessionEvent::Failover { actor, requeued: 0, reason });
+            return Ok(());
+        }
     }
     if !mem.alive.remove(&actor) {
         return Ok(()); // duplicate report (write-path cut + reader EOF)
@@ -1823,15 +2060,38 @@ fn bootstrap_joiner<C: Compute>(
                 .map_err(|_| anyhow!("joiner {actor} link down during snapshot bootstrap"))?;
         }
         BootstrapKind::DeltaChain => {
-            for ver in 1..=v {
-                let ckpt = hub
-                    .store
-                    .get(ver)
-                    .ok_or_else(|| anyhow!("delta chain broken: D_{ver} not in store"))?;
-                sent += ckpt.payload_bytes();
-                for seg in split_into_segments(ver, &ckpt.bytes, hub.cfg.segment_bytes) {
-                    ep.send(actor, Msg::Seg(seg))
-                        .map_err(|_| anyhow!("joiner {actor} link down during chain replay"))?;
+            // Pin the chain horizon first: a gc sweep must not reclaim
+            // D_1..D_v while this bootstrap is in flight (released in
+            // `admit_joiner`, or in `fail_actor` if the joiner dies).
+            hub.store.pin_chain(v);
+            // Prefer one bit-exact folded delta (last-writer-wins merge
+            // of D_1..D_v): the same end state in O(changed elements)
+            // bytes instead of O(chain bytes), and one decode on the
+            // joiner. Fall back to per-version replay when the chain
+            // cannot fold (additive mode, decode failure) — the joiner's
+            // staging decoder handles both identically.
+            match fold_chain_for_bootstrap(hub, v) {
+                Some(folded) => {
+                    sent += folded.payload_bytes();
+                    for seg in split_into_segments(v, &folded.bytes, hub.cfg.segment_bytes) {
+                        ep.send(actor, Msg::Seg(seg)).map_err(|_| {
+                            anyhow!("joiner {actor} link down during folded-chain bootstrap")
+                        })?;
+                    }
+                }
+                None => {
+                    for ver in 1..=v {
+                        let ckpt = hub
+                            .store
+                            .get(ver)
+                            .ok_or_else(|| anyhow!("delta chain broken: D_{ver} not in store"))?;
+                        sent += ckpt.payload_bytes();
+                        for seg in split_into_segments(ver, &ckpt.bytes, hub.cfg.segment_bytes) {
+                            ep.send(actor, Msg::Seg(seg)).map_err(|_| {
+                                anyhow!("joiner {actor} link down during chain replay")
+                            })?;
+                        }
+                    }
                 }
             }
             ep.send(actor, Msg::Commit { version: v })
@@ -1844,6 +2104,20 @@ fn bootstrap_joiner<C: Compute>(
         eprintln!("bootstrapping joiner {actor} to v{v}: {sent} B ({})", jf.bootstrap.name());
     }
     Ok(())
+}
+
+/// Fold `D_1..D_v` from the hub's in-memory store into one sealed
+/// checkpoint for delta-chain bootstrap — the same bit-exact merge the
+/// durable store's offline compaction uses ([`merge_chain`]). `None`
+/// when the chain cannot fold (missing link, decode failure, additive
+/// mode); the caller falls back to per-version replay.
+fn fold_chain_for_bootstrap<C: Compute>(hub: &Hub<C>, v: u64) -> Option<DeltaCheckpoint> {
+    let mut chain: Vec<SparseDelta> = Vec::with_capacity(v as usize);
+    for ver in 1..=v {
+        chain.push(hub.store.get(ver)?.open().ok()?);
+    }
+    let folded = merge_chain(&chain).ok()?;
+    Some(DeltaCheckpoint::seal(&folded))
 }
 
 /// A bootstrapping joiner echoed `Activated`: verify its SHA-256 policy
@@ -1869,6 +2143,11 @@ fn admit_joiner<C: Compute>(
         "joiner {actor} diverged from trainer policy at v{version}"
     );
     let jf = mem.joining.remove(&actor).expect("checked above");
+    if matches!(jf.bootstrap, BootstrapKind::DeltaChain) {
+        // The bootstrap landed; its chain horizon no longer needs gc
+        // protection.
+        hub.store.unpin_chain(jf.version);
+    }
     hub.sched.admit(actor, jf.prior_tau, version, jf.region as usize);
     mem.alive.insert(actor);
     ep.set_active(actor, true);

@@ -120,6 +120,16 @@ pub enum SpecError {
     /// `LeasePolicy::sweep_ms` is the collect-loop poll interval; zero
     /// would spin the hub thread.
     ZeroSweepInterval,
+    /// `resume()` recovers from a durable store; without `persist_dir(..)`
+    /// there is nothing to recover from.
+    ResumeNeedsPersistDir,
+    /// Resume replays the crash-lost in-flight batch; only the
+    /// deterministic schedule (without wall-clock leases) makes the
+    /// replay bit-exact.
+    ResumeRequiresDeterministic,
+    /// A resumed run cannot re-run a membership script relative to a
+    /// recovered version history.
+    ResumeConflictsWithElastic,
 }
 
 impl fmt::Display for SpecError {
@@ -191,6 +201,19 @@ impl fmt::Display for SpecError {
             SpecError::ZeroSweepInterval => {
                 write!(f, "lease sweep_ms must be at least 1 (it paces the hub's poll loop)")
             }
+            SpecError::ResumeNeedsPersistDir => {
+                write!(f, "resume() needs persist_dir(..) to name the durable store to recover")
+            }
+            SpecError::ResumeRequiresDeterministic => write!(
+                f,
+                "resume() requires deterministic() without wall_leases() — the crash-lost \
+                 batch is replayed bit-exactly under the deterministic schedule"
+            ),
+            SpecError::ResumeConflictsWithElastic => write!(
+                f,
+                "resume() cannot be combined with join_at(..)/leave_at(..); restart the \
+                 membership script in a fresh run instead"
+            ),
         }
     }
 }
@@ -257,6 +280,8 @@ pub struct RunSpec {
     backend: Backend,
     distribution: Option<DistributionSpec>,
     elastic: ElasticSpec,
+    persist_dir: Option<std::path::PathBuf>,
+    resume: bool,
 }
 
 impl RunSpec {
@@ -285,6 +310,8 @@ impl RunSpec {
             backend: Backend::InProc,
             distribution: None,
             elastic: ElasticSpec::default(),
+            persist_dir: None,
+            resume: false,
         }
     }
 
@@ -466,6 +493,29 @@ impl RunSpec {
         self
     }
 
+    /// Make the run durable: every committed version seals its delta
+    /// artifact, full optimizer state, and an append-only journal record
+    /// under `dir` (a content-addressed store,
+    /// [`crate::delta::DurableStore`]) *before* the version becomes
+    /// observable. A crash at any point — including between the object
+    /// seal and the journal append — leaves a store that
+    /// [`RunSpec::resume`] continues bit-exactly.
+    pub fn persist_dir(mut self, dir: impl Into<std::path::PathBuf>) -> RunSpec {
+        self.persist_dir = Some(dir.into());
+        self
+    }
+
+    /// Continue the durable run under [`RunSpec::persist_dir`] from its
+    /// last journaled version: the optimizer state is restored, RNG
+    /// streams re-seeded from the journal, and the crash-lost in-flight
+    /// batch regenerated, so the resumed committed-checksum trace is
+    /// bitwise identical to an uninterrupted run's. Requires
+    /// [`RunSpec::deterministic`] and no elastic script.
+    pub fn resume(mut self) -> RunSpec {
+        self.resume = true;
+        self
+    }
+
     /// Validate every cross-field rule and freeze the configuration.
     /// Illegal combinations return a typed [`SpecError`]; legal
     /// auto-coercions are recorded as [`SpecNote`]s on the plan.
@@ -490,6 +540,19 @@ impl RunSpec {
         }
         if self.lease.sweep_ms == 0 {
             return Err(SpecError::ZeroSweepInterval);
+        }
+
+        // -- durability / resume ------------------------------------------
+        if self.resume {
+            if self.persist_dir.is_none() {
+                return Err(SpecError::ResumeNeedsPersistDir);
+            }
+            if !self.deterministic || self.wall_leases {
+                return Err(SpecError::ResumeRequiresDeterministic);
+            }
+            if !self.elastic.joins.is_empty() || !self.elastic.leaves.is_empty() {
+                return Err(SpecError::ResumeConflictsWithElastic);
+            }
         }
 
         // -- WAN preset → fleet size --------------------------------------
@@ -675,6 +738,8 @@ impl RunSpec {
             lease: self.lease,
             wall_leases: self.wall_leases,
             elastic: self.elastic,
+            persist_dir: self.persist_dir,
+            resume: self.resume,
         };
         Ok(RunPlan { cfg, mode, notes, synthetic: self.synthetic })
     }

@@ -1,0 +1,505 @@
+//! Durable runs: kill-and-resume chaos suite + chain-compaction
+//! properties. A run with `persist_dir` journals every commit boundary;
+//! killing it at any scripted point — including between sealing a
+//! version's objects and journaling the commit — and resuming must
+//! produce a committed-checksum trace bitwise identical to the
+//! uninterrupted run, and `DurableStore::reconstruct` must reproduce
+//! every journaled witness, with or without chain compaction. Runs on
+//! the synthetic compute backend; all state lives under per-test temp
+//! directories.
+
+use sparrowrl::delta::{
+    apply_delta, merge_chain, policy_witness, ApplyMode, DurableStore, JournalRecord, MergeError,
+    ModelLayout, ParamSet, RecoveryError, SparseDelta, TensorDelta,
+};
+use sparrowrl::rt::{ExecMode, RunReport, SyntheticCompute};
+use sparrowrl::session::{Event, RunSpec, Session, SpecError};
+use sparrowrl::util::{prop, Bf16, Rng};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+fn layout() -> ModelLayout {
+    ModelLayout::transformer("syn-dur", 256, 64, 2, 128)
+}
+
+/// Unique per test (and per process) so parallel test binaries never
+/// collide; removed up front so reruns start clean.
+fn test_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sprw-persist-{}-{name}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+fn spec(steps: u64, seed: u64) -> RunSpec {
+    RunSpec::synthetic()
+        .actors(2)
+        .steps(steps)
+        .sft_steps(2)
+        .group_size(2)
+        .max_new_tokens(5)
+        .lr_rl(1e-2) // large enough that every step flips bf16 bits
+        .segment_bytes(256)
+        .seed(seed)
+        .deterministic()
+}
+
+fn run(spec: RunSpec, mode: ExecMode) -> RunReport {
+    let plan = spec.mode(mode).build().expect("valid spec");
+    Session::start_with_compute(&plan, layout(), SyntheticCompute::new(16, 8, 64))
+        .expect("start session")
+        .join()
+        .unwrap_or_else(|e| panic!("run failed: {e:#}"))
+}
+
+/// Run a spec that must fail; returns the rendered error chain.
+fn run_err(spec: RunSpec, mode: ExecMode) -> String {
+    let plan = spec.mode(mode).build().expect("valid spec");
+    match Session::start_with_compute(&plan, layout(), SyntheticCompute::new(16, 8, 64)) {
+        Ok(s) => match s.join() {
+            Ok(r) => panic!("run unexpectedly succeeded at v{}", r.final_version),
+            Err(e) => format!("{e:#}"),
+        },
+        Err(e) => format!("{e:#}"),
+    }
+}
+
+/// Every step the resumed run produced must be bitwise identical to the
+/// same step of the uninterrupted baseline (checksum AND the scalar
+/// stats feeding it), and the two runs must end at the same version.
+fn assert_tail_matches(baseline: &RunReport, resumed: &RunReport, resume_version: u64) {
+    assert_eq!(baseline.final_version, resumed.final_version, "final version");
+    assert_eq!(
+        resumed.steps.first().map(|s| s.step),
+        Some(resume_version),
+        "resumed run must pick up at the regenerated in-flight batch"
+    );
+    assert_eq!(
+        resumed.steps.len() as u64,
+        baseline.final_version - resume_version,
+        "resumed run replays exactly the lost steps"
+    );
+    for r in &resumed.steps {
+        let b = &baseline.steps[r.step as usize];
+        assert_eq!(b.step, r.step);
+        assert_eq!(b.loss, r.loss, "step {} loss", r.step);
+        assert_eq!(b.mean_reward, r.mean_reward, "step {} reward", r.step);
+        assert_eq!(b.rho, r.rho, "step {} rho", r.step);
+        assert_eq!(b.payload_bytes, r.payload_bytes, "step {} payload", r.step);
+        assert_eq!(b.gen_tokens, r.gen_tokens, "step {} gen tokens", r.step);
+        assert_eq!(
+            b.policy_checksum, r.policy_checksum,
+            "step {}: resumed commit must be bit-identical to the uninterrupted run",
+            r.step
+        );
+    }
+}
+
+/// The journaled witness of `version`, straight from the records.
+fn journaled_witness(store: &DurableStore, version: u64) -> [u8; 32] {
+    match &store.records()[version as usize] {
+        JournalRecord::Genesis { witness, .. } => *witness,
+        JournalRecord::Commit { witness, .. } => *witness,
+    }
+}
+
+fn copy_dir(src: &Path, dst: &Path) {
+    fs::create_dir_all(dst).unwrap();
+    for e in fs::read_dir(src).unwrap() {
+        let e = e.unwrap();
+        let to = dst.join(e.file_name());
+        if e.file_type().unwrap().is_dir() {
+            copy_dir(&e.path(), &to);
+        } else {
+            fs::copy(e.path(), &to).unwrap();
+        }
+    }
+}
+
+/// Rewind the journal to its first `keep` records — the on-disk state
+/// of a run killed right after journaling record `keep - 1`. Objects
+/// and manifests of later versions are left behind on purpose: that is
+/// exactly the kill point between object-seal and journal-append.
+fn truncate_journal(dir: &Path, keep: usize) {
+    let path = dir.join("journal.jsonl");
+    let raw = fs::read_to_string(&path).unwrap();
+    let kept: Vec<&str> = raw.lines().take(keep).collect();
+    fs::write(&path, format!("{}\n", kept.join("\n"))).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Kill-and-resume chaos suite
+// ---------------------------------------------------------------------
+
+#[test]
+fn kill_after_any_commit_resumes_bitwise_identical() {
+    let base_dir = test_dir("chaos-base");
+    let baseline = run(spec(6, 7).persist_dir(&base_dir), ExecMode::Sequential);
+    assert_eq!(baseline.final_version, 6);
+    for kill_v in [1u64, 3, 5] {
+        let dir = test_dir(&format!("chaos-kill{kill_v}"));
+        copy_dir(&base_dir, &dir);
+        // Kill point: the journal holds genesis + commits 1..=kill_v;
+        // later versions' objects and manifests are already sealed on
+        // disk (the seal-vs-journal window) but must stay invisible.
+        truncate_journal(&dir, kill_v as usize + 1);
+        let store = DurableStore::open(&dir).unwrap_or_else(|e| panic!("recover: {e}"));
+        assert_eq!(store.last_version(), Some(kill_v), "sealed-but-unjournaled is invisible");
+        drop(store);
+        let resumed = run(spec(6, 7).persist_dir(&dir).resume(), ExecMode::Sequential);
+        assert_tail_matches(&baseline, &resumed, kill_v);
+        // The healed store must be byte-identical to the uninterrupted
+        // run's: same journal, same manifests (recommits are idempotent
+        // and the replay is bit-exact).
+        assert_eq!(
+            fs::read(base_dir.join("journal.jsonl")).unwrap(),
+            fs::read(dir.join("journal.jsonl")).unwrap(),
+            "kill at v{kill_v}: healed journal diverged"
+        );
+        for v in 0..=6u64 {
+            assert_eq!(
+                fs::read(base_dir.join("refs").join(format!("v{v}"))).unwrap(),
+                fs::read(dir.join("refs").join(format!("v{v}"))).unwrap(),
+                "kill at v{kill_v}: manifest v{v} diverged"
+            );
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+    let _ = fs::remove_dir_all(&base_dir);
+}
+
+#[test]
+fn kill_before_any_seal_resumes_bitwise_identical() {
+    // Kill point: right after journaling commit 3, before any of v4's
+    // objects hit disk (manifests of later versions removed too — the
+    // "clean crash between iterations" state).
+    let base_dir = test_dir("cleankill-base");
+    let baseline = run(spec(5, 11).persist_dir(&base_dir), ExecMode::Sequential);
+    let dir = test_dir("cleankill");
+    copy_dir(&base_dir, &dir);
+    truncate_journal(&dir, 4);
+    for v in 4..=5u64 {
+        fs::remove_file(dir.join("refs").join(format!("v{v}"))).unwrap();
+    }
+    let resumed = run(spec(5, 11).persist_dir(&dir).resume(), ExecMode::Sequential);
+    assert_tail_matches(&baseline, &resumed, 3);
+    assert_eq!(
+        fs::read(base_dir.join("journal.jsonl")).unwrap(),
+        fs::read(dir.join("journal.jsonl")).unwrap(),
+    );
+    let _ = fs::remove_dir_all(&base_dir);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pipelined_resume_matches_sequential_baseline() {
+    // The overlapped executor must persist and resume the very same
+    // trace the sequential reference produces.
+    let baseline = run(spec(6, 13), ExecMode::Sequential);
+    let dir = test_dir("pipelined");
+    let partial = run(spec(3, 13).persist_dir(&dir), ExecMode::Pipelined);
+    for s in &partial.steps {
+        assert_eq!(
+            s.policy_checksum, baseline.steps[s.step as usize].policy_checksum,
+            "pre-kill step {}",
+            s.step
+        );
+    }
+    let resumed = run(spec(6, 13).persist_dir(&dir).resume(), ExecMode::Pipelined);
+    assert_tail_matches(&baseline, &resumed, 3);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn extending_a_finished_run_matches_longer_baseline() {
+    // Resuming a cleanly finished short run with a larger step budget
+    // must continue exactly where an uninterrupted long run would be.
+    let baseline = run(spec(6, 17), ExecMode::Sequential);
+    let dir = test_dir("extend");
+    let short = run(spec(3, 17).persist_dir(&dir), ExecMode::Sequential);
+    assert_eq!(short.final_version, 3);
+    let resumed = run(spec(6, 17).persist_dir(&dir).resume(), ExecMode::Sequential);
+    assert_tail_matches(&baseline, &resumed, 3);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn abort_mid_run_then_resume_completes_the_trace() {
+    // A genuine (not synthesized) kill: cooperative abort somewhere
+    // mid-run, then resume to the full budget.
+    let baseline = run(spec(8, 23), ExecMode::Sequential);
+    let dir = test_dir("abort");
+    let plan = spec(8, 23).persist_dir(&dir).build().expect("valid spec");
+    let mut sess = Session::start_with_compute(&plan, layout(), SyntheticCompute::new(16, 8, 64))
+        .expect("start session");
+    let mut commits = 0u64;
+    while let Some(ev) = sess.recv() {
+        if matches!(ev, Event::StepCompleted(_)) {
+            commits += 1;
+            if commits == 2 {
+                sess.abort();
+            }
+        }
+    }
+    // The abort lands at a cancellation point; if it raced past the last
+    // one the run simply finished — both outcomes leave a valid store.
+    let _ = sess.join();
+    let store = DurableStore::open(&dir).unwrap_or_else(|e| panic!("recover after abort: {e}"));
+    let v = store.last_version().expect("at least the genesis is durable");
+    assert!(v >= 2, "two commits were observed before the abort");
+    drop(store);
+    let resumed = run(spec(8, 23).persist_dir(&dir).resume(), ExecMode::Sequential);
+    assert_eq!(resumed.final_version, 8);
+    if v < 8 {
+        assert_tail_matches(&baseline, &resumed, v);
+    }
+    let store = DurableStore::open(&dir).unwrap();
+    let policy = store.reconstruct(&layout(), 8).unwrap_or_else(|e| panic!("reconstruct: {e}"));
+    assert_eq!(
+        policy_witness(&policy),
+        baseline.steps[7].policy_checksum,
+        "resumed store must reconstruct the uninterrupted run's final policy"
+    );
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_at_the_exact_step_budget_is_a_noop() {
+    let dir = test_dir("noop");
+    let first = run(spec(3, 29).persist_dir(&dir), ExecMode::Sequential);
+    let resumed = run(spec(3, 29).persist_dir(&dir).resume(), ExecMode::Sequential);
+    assert_eq!(resumed.final_version, first.final_version);
+    assert!(resumed.steps.is_empty(), "nothing left to replay");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Journal damage
+// ---------------------------------------------------------------------
+
+#[test]
+fn torn_journal_tail_is_truncated_and_resumable() {
+    let baseline = run(spec(5, 31), ExecMode::Sequential);
+    let dir = test_dir("torn");
+    run(spec(3, 31).persist_dir(&dir), ExecMode::Sequential);
+    // A half-written record with no newline: the classic torn append.
+    let journal = dir.join("journal.jsonl");
+    let mut raw = fs::read(&journal).unwrap();
+    raw.extend_from_slice(br#"{"kind":"commit","version":4,"wit"#);
+    fs::write(&journal, &raw).unwrap();
+    let store = DurableStore::open(&dir).unwrap_or_else(|e| panic!("torn tail must heal: {e}"));
+    assert_eq!(store.last_version(), Some(3));
+    drop(store);
+    let resumed = run(spec(5, 31).persist_dir(&dir).resume(), ExecMode::Sequential);
+    assert_tail_matches(&baseline, &resumed, 3);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_mid_journal_record_is_a_typed_error() {
+    let dir = test_dir("midcorrupt");
+    run(spec(3, 37).persist_dir(&dir), ExecMode::Sequential);
+    let journal = dir.join("journal.jsonl");
+    let raw = fs::read_to_string(&journal).unwrap();
+    let mut lines: Vec<String> = raw.lines().map(str::to_string).collect();
+    // Valid JSON, wrong schema, NOT on the final line: no torn-tail
+    // excuse applies — this is real corruption and must be refused.
+    lines[1] = r#"{"kind":"mystery"}"#.to_string();
+    fs::write(&journal, format!("{}\n", lines.join("\n"))).unwrap();
+    match DurableStore::open(&dir) {
+        Err(RecoveryError::CorruptJournal { line, .. }) => assert_eq!(line, 1),
+        Err(other) => panic!("expected CorruptJournal, got {other}"),
+        Ok(_) => panic!("corrupt journal must not recover"),
+    }
+    // Through the session API the same store must refuse to resume.
+    let err = run_err(spec(5, 37).persist_dir(&dir).resume(), ExecMode::Sequential);
+    assert!(err.contains("journal"), "unhelpful error: {err}");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn missing_object_fails_resume_with_a_typed_error() {
+    let dir = test_dir("missingobj");
+    run(spec(3, 41).persist_dir(&dir), ExecMode::Sequential);
+    // Remove one referenced object; recovery names it.
+    let victim = fs::read_dir(dir.join("objects")).unwrap().next().unwrap().unwrap().path();
+    fs::remove_file(&victim).unwrap();
+    match DurableStore::open(&dir) {
+        Err(RecoveryError::MissingObject { .. }) => {}
+        Err(other) => panic!("expected MissingObject, got {other}"),
+        Ok(_) => panic!("missing object must not recover"),
+    }
+    let err = run_err(spec(5, 41).persist_dir(&dir).resume(), ExecMode::Sequential);
+    assert!(err.contains("missing object"), "unhelpful error: {err}");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Spec / config guards
+// ---------------------------------------------------------------------
+
+#[test]
+fn resume_spec_guards_reject_unsound_combinations() {
+    assert_eq!(
+        spec(3, 1).resume().build().unwrap_err(),
+        SpecError::ResumeNeedsPersistDir
+    );
+    let nondet = RunSpec::synthetic()
+        .actors(2)
+        .steps(3)
+        .sft_steps(2)
+        .group_size(2)
+        .max_new_tokens(5)
+        .seed(1)
+        .persist_dir("/tmp/never-used")
+        .resume();
+    assert_eq!(nondet.build().unwrap_err(), SpecError::ResumeRequiresDeterministic);
+}
+
+#[test]
+fn resume_refuses_an_empty_store_and_fresh_runs_refuse_a_full_one() {
+    let dir = test_dir("guards");
+    let err = run_err(spec(3, 43).persist_dir(&dir).resume(), ExecMode::Sequential);
+    assert!(err.contains("nothing to resume"), "unhelpful error: {err}");
+    let _ = fs::remove_dir_all(&dir);
+    run(spec(2, 43).persist_dir(&dir), ExecMode::Sequential);
+    let err = run_err(spec(2, 43).persist_dir(&dir), ExecMode::Sequential);
+    assert!(err.contains("already holds a durable run"), "unhelpful error: {err}");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_refuses_mismatched_identity() {
+    let dir = test_dir("identity");
+    run(spec(3, 47).persist_dir(&dir), ExecMode::Sequential);
+    // Different run seed: the journaled genesis pins it.
+    let err = run_err(spec(5, 48).persist_dir(&dir).resume(), ExecMode::Sequential);
+    assert!(err.contains("run_seed"), "unhelpful error: {err}");
+    // Smaller step budget than the run already reached.
+    let err = run_err(spec(2, 47).persist_dir(&dir).resume(), ExecMode::Sequential);
+    assert!(err.contains("already at v3"), "unhelpful error: {err}");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Reconstruction + compaction
+// ---------------------------------------------------------------------
+
+#[test]
+fn reconstruct_matches_live_checksums_at_every_version() {
+    let dir = test_dir("reconstruct");
+    let report = run(spec(5, 53).persist_dir(&dir), ExecMode::Sequential);
+    let store = DurableStore::open(&dir).unwrap_or_else(|e| panic!("recover: {e}"));
+    let l = layout();
+    for v in 1..=5u64 {
+        let policy = store.reconstruct(&l, v).unwrap_or_else(|e| panic!("reconstruct v{v}: {e}"));
+        let w = policy_witness(&policy);
+        assert_eq!(w, journaled_witness(&store, v), "v{v} journal witness");
+        assert_eq!(
+            w,
+            report.steps[v as usize - 1].policy_checksum,
+            "v{v} live run checksum"
+        );
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn compaction_is_bit_exact_and_the_store_stays_resumable() {
+    let baseline = run(spec(7, 59), ExecMode::Sequential);
+    let dir = test_dir("compact");
+    let report = run(spec(5, 59).persist_dir(&dir), ExecMode::Sequential);
+    let l = layout();
+    let mut store = DurableStore::open(&dir).unwrap_or_else(|e| panic!("recover: {e}"));
+    // Partial fold first: D_1..D_3 collapse to one object; versions on
+    // both sides of the fold still reconstruct to their witnesses.
+    let stats = store.compact(&l, Some(3)).unwrap_or_else(|e| panic!("compact(3): {e}"));
+    assert_eq!(stats.upto, 3);
+    assert!(stats.compacted_bytes > 0 && stats.compacted_bytes <= stats.chain_bytes);
+    // Then the default full fold supersedes it.
+    let stats = store.compact(&l, None).unwrap_or_else(|e| panic!("compact: {e}"));
+    assert_eq!(stats.upto, 5);
+    for v in 1..=5u64 {
+        let policy = store.reconstruct(&l, v).unwrap_or_else(|e| panic!("reconstruct v{v}: {e}"));
+        assert_eq!(
+            policy_witness(&policy),
+            report.steps[v as usize - 1].policy_checksum,
+            "v{v} after compaction"
+        );
+    }
+    drop(store);
+    // A compacted store is still a valid resume source.
+    let resumed = run(spec(7, 59).persist_dir(&dir).resume(), ExecMode::Sequential);
+    assert_tail_matches(&baseline, &resumed, 5);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// merge_chain properties
+// ---------------------------------------------------------------------
+
+/// One random Assign-mode delta v-1 -> v over `tensors` tensors of
+/// `numel` elements each, at roughly `density` nonzeros per tensor.
+fn random_delta(rng: &mut Rng, v: u64, tensors: u32, numel: u64, density: f64) -> SparseDelta {
+    let mut td = Vec::new();
+    for t in 0..tensors {
+        // Not every tensor appears in every delta (real extracts skip
+        // untouched tensors); empty updates are legal too.
+        if rng.below(4) == 0 {
+            continue;
+        }
+        let k = ((numel as f64 * density) as usize).min(numel as usize);
+        let idx = prop::sparse_indices(rng, numel, k);
+        let vals = idx.iter().map(|_| Bf16(rng.next_u64() as u16)).collect();
+        td.push(TensorDelta { tensor: t, idx, vals });
+    }
+    SparseDelta { version: v, base_version: v - 1, model_fp: 0xD00D, mode: ApplyMode::Assign, tensors: td }
+}
+
+#[test]
+fn folding_a_chain_equals_sequential_application() {
+    // Densities from 0.01% to 50%, random chain lengths: the folded
+    // delta applied once must be bit-identical to replaying the chain.
+    let densities = [0.0001, 0.001, 0.01, 0.1, 0.5];
+    prop::check("merge_chain folds bit-exactly", 40, |rng| {
+        let tensors = rng.range(1, 5) as u32;
+        let numel = rng.range(256, 8192) as u64;
+        let len = rng.range(1, 9) as u64;
+        let density = densities[rng.range(0, densities.len())];
+        let chain: Vec<SparseDelta> =
+            (1..=len).map(|v| random_delta(rng, v, tensors, numel, density)).collect();
+        let base = ParamSet {
+            tensors: (0..tensors)
+                .map(|_| (0..numel).map(|_| Bf16(rng.next_u64() as u16)).collect())
+                .collect(),
+        };
+        let mut replayed = base.clone();
+        for d in &chain {
+            apply_delta(&mut replayed, d);
+        }
+        let folded = merge_chain(&chain).expect("valid chain folds");
+        assert_eq!(folded.base_version, 0);
+        assert_eq!(folded.version, len);
+        let mut once = base.clone();
+        apply_delta(&mut once, &folded);
+        assert_eq!(
+            policy_witness(&once),
+            policy_witness(&replayed),
+            "folded apply diverged (len {len}, density {density})"
+        );
+    });
+}
+
+#[test]
+fn merge_chain_rejects_unfoldable_chains() {
+    let mut rng = Rng::new(9);
+    let mut chain: Vec<SparseDelta> = (1..=3u64).map(|v| random_delta(&mut rng, v, 2, 64, 0.1)).collect();
+    assert_eq!(merge_chain(&[]), Err(MergeError::Empty));
+    chain[1].mode = ApplyMode::Add;
+    assert_eq!(merge_chain(&chain), Err(MergeError::AddMode { version: 2 }));
+    chain[1].mode = ApplyMode::Assign;
+    chain[1].base_version = 7;
+    assert_eq!(merge_chain(&chain), Err(MergeError::NonContiguous { expected: 1, found: 7 }));
+    chain[1].base_version = 1;
+    chain[2].model_fp = 0xBEEF;
+    assert_eq!(merge_chain(&chain), Err(MergeError::ModelMismatch));
+}
