@@ -11,8 +11,9 @@
 //! 3. Autoscaler trace: tokens-per-dollar decisions emitted per version
 //!    boundary by the cost-model policy.
 //!
-//! Emits `BENCH_elastic.json`. Set `BENCH_QUICK=1` for the CI smoke run.
+//! Emits `BENCH_elastic.json`. Set `BENCH_QUICK=1` for a quick local run.
 
+use sparrowrl::bench::{Better, ResultRecord, ResultSet};
 use sparrowrl::delta::ModelLayout;
 use sparrowrl::rt::{BootstrapKind, RunReport, SyntheticCompute};
 use sparrowrl::session::{Backend, Event, RunSpec, Session};
@@ -157,7 +158,16 @@ fn main() {
     derived.push(("autoscale_mean_marginal_tpd".into(), mean_tpd));
     derived.push(("autoscale_reserve_line".into(), decisions[0].2));
 
-    let derived_refs: Vec<(&str, f64)> = derived.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    // Harness-schema emit: bootstrap byte counts come out of the
+    // deterministic run, so they gate `Lower`; wall clocks and the
+    // autoscaler trace stay ungated gauges.
+    let mut set = ResultSet::from_bencher("bench-elastic", &b);
+    let mut rec = ResultRecord::new("bench-elastic/derived");
+    for (k, v) in &derived {
+        rec = if k.ends_with("_bytes") { rec.gate(k, *v, Better::Lower) } else { rec.gauge(k, *v) };
+    }
+    set.push(rec);
     let out = std::path::Path::new("BENCH_elastic.json");
-    b.write_json(out, "elastic", &derived_refs).expect("write bench json");
+    set.write(out).expect("write bench json");
+    println!("bench results written to {}", out.display());
 }

@@ -4,15 +4,18 @@
 //! fused single-pass >= 1.5x the seed's extract_delta + encode_delta
 //! sequence at rho=1%.
 //!
-//! Emits `BENCH_encoding.json` (cwd) so the perf trajectory is tracked
-//! across PRs. Set `BENCH_QUICK=1` for a CI smoke run (small model, few
-//! reps).
+//! Emits `BENCH_encoding.json` (cwd) on the harness result schema
+//! (`bench::summary`): timings as ungated gauges, the seeded-RNG payload
+//! bytes and nnz as gated `Lower` metrics, diffable with
+//! `sparrowrl bench compare`. Set `BENCH_QUICK=1` for a quick local run
+//! (small model, few reps).
 
 use sparrowrl::delta::{
     apply_delta, decode_delta, encode_delta, extract_delta, naive, ApplyMode,
     DeltaStreamApplier, DeltaStreamDecoder, DeltaStreamEncoder, ModelLayout, ParamSet,
     StreamConfig,
 };
+use sparrowrl::bench::{Better, ResultRecord, ResultSet};
 use sparrowrl::util::bench::Bencher;
 use sparrowrl::util::{prop, Bf16, Rng};
 
@@ -147,7 +150,16 @@ fn main() {
         );
     }
 
+    // Harness-schema emit: the seeded delta's byte counts are gated
+    // (deterministic across machines); every timing stays a gauge.
+    let mut set = ResultSet::from_bencher("bench-encoding", &b);
+    set.push(
+        ResultRecord::new("bench-encoding/derived")
+            .gate("delta_payload_bytes", bytes.len() as f64, Better::Lower)
+            .gate("delta_nnz", delta.nnz() as f64, Better::Exact)
+            .gauge("fused_speedup_vs_two_pass", speedup),
+    );
     let out = std::path::Path::new("BENCH_encoding.json");
-    b.write_json(out, "encoding", &[("fused_speedup_vs_two_pass", speedup)])
-        .expect("write BENCH_encoding.json");
+    set.write(out).expect("write BENCH_encoding.json");
+    println!("bench results written to {}", out.display());
 }

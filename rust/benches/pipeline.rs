@@ -1,15 +1,17 @@
 //! End-to-end overlap bench: the phase-sequential executor vs the
 //! overlapped one-step pipelined executor on the same RL loop, plus the
 //! measured overlap efficiency (hidden-sync-time / sync-time) from the
-//! pipelined run's timeline. Emits `BENCH_pipeline.json` so the perf
-//! trajectory is tracked across PRs.
+//! pipelined run's timeline. Emits `BENCH_pipeline.json` on the harness
+//! result schema (`bench::summary`; all metrics are timing gauges, so
+//! nothing gates) so the perf trajectory is tracked across PRs.
 //!
 //! Runs through the Session API (`RunSpec` -> `Session` -> `join`) on
 //! the deterministic synthetic engine with emulated compute latencies
 //! (artifact-free, CI-safe). When PJRT artifacts for sparrow-xs are
 //! present, the real loop is measured as well. Set `BENCH_QUICK=1` for a
-//! CI smoke run.
+//! quick local run.
 
+use sparrowrl::bench::{ResultRecord, ResultSet};
 use sparrowrl::delta::ModelLayout;
 use sparrowrl::metrics::SpanKind;
 use sparrowrl::rt::{ExecMode, RunReport, SyntheticCompute};
@@ -120,6 +122,15 @@ fn main() {
         eprintln!("({model} artifacts missing; real-loop case skipped)");
     }
 
+    // Harness-schema emit: wall clocks and ratios are machine-dependent,
+    // so every derived metric stays an ungated gauge.
+    let mut set = ResultSet::from_bencher("bench-pipeline", &b);
+    let mut rec = ResultRecord::new("bench-pipeline/derived");
+    for (k, v) in &derived {
+        rec = rec.gauge(k, *v);
+    }
+    set.push(rec);
     let out = std::path::Path::new("BENCH_pipeline.json");
-    b.write_json(out, "pipeline", &derived).expect("write bench json");
+    set.write(out).expect("write bench json");
+    println!("bench results written to {}", out.display());
 }

@@ -3,9 +3,10 @@
 //! cut-through fanout) plus the analytic WAN makespan record — striped
 //! relay tree vs single-stream direct per-actor fan-out on the `wan-4`
 //! preset — written to `BENCH_wan.json` so the distribution layer's perf
-//! trajectory is tracked across PRs. Set `BENCH_QUICK=1` for the CI smoke
-//! run.
+//! trajectory is tracked across PRs. Set `BENCH_QUICK=1` for a quick
+//! local run.
 
+use sparrowrl::bench::{Better, ResultRecord, ResultSet};
 use sparrowrl::config::{self, wan_preset};
 use sparrowrl::data::Benchmark;
 use sparrowrl::netsim::deliver_striped;
@@ -76,17 +77,22 @@ fn main() {
         striped < direct,
         "striped distribution must beat single-stream direct fan-out"
     );
-    let mut derived: Vec<(&str, f64)> = vec![
-        ("payload_bytes", payload as f64),
-        ("striped_makespan_s", striped),
-        ("direct_single_stream_makespan_s", direct),
-        ("wan_speedup", direct / striped.max(1e-9)),
-    ];
+    // Harness-schema emit. The analytic record is seeded and therefore
+    // deterministic: the payload is gated `Lower` and the makespans and
+    // speedup gate the WAN model's trajectory; CPU timings stay gauges.
+    let mut set = ResultSet::from_bencher("bench-wan", &b);
+    let mut rec = ResultRecord::new("bench-wan/derived")
+        .gate("payload_bytes", payload as f64, Better::Lower)
+        .gate("striped_makespan_s", striped, Better::Lower)
+        .gate("direct_single_stream_makespan_s", direct, Better::Lower)
+        .gate("wan_speedup", direct / striped.max(1e-9), Better::Higher);
     const UTIL_KEYS: [&str; 4] = ["util_r0", "util_r1", "util_r2", "util_r3"];
     for (i, (region, util)) in plan.region_utilization(payload, striped).iter().enumerate() {
         println!("  {region}: {:.0}% WAN utilization over the makespan", util * 100.0);
-        derived.push((UTIL_KEYS[i], *util));
+        rec = rec.gauge(UTIL_KEYS[i], *util);
     }
+    set.push(rec);
     let out = std::path::Path::new("BENCH_wan.json");
-    b.write_json(out, "wan", &derived).expect("write bench json");
+    set.write(out).expect("write bench json");
+    println!("bench results written to {}", out.display());
 }

@@ -1,0 +1,291 @@
+//! `bench compare OLD NEW`: the regression gate over two result sets.
+//!
+//! Records are joined per scenario key. For each gated metric the
+//! verdict depends on its [`Better`] direction: `Exact` metrics fail on
+//! any drift; `Lower`/`Higher` metrics fail when they move in the worse
+//! direction by more than the threshold (and are reported as
+//! improvements when they move the other way that far). A changed
+//! determinism witness is always a failure — that is the bit-exactness
+//! guarantee becoming machine-checkable. A key present in OLD but
+//! missing from NEW fails (scenario coverage regressed); a new key is
+//! reported and passes. Ungated gauges (timings) never gate, so a
+//! committed baseline stays valid across machines.
+//!
+//! A `placeholder` OLD (the committed bootstrap baseline) passes
+//! unconditionally and prints a re-baseline notice — see bench/README.md.
+
+use crate::bench::summary::{Better, ResultSet};
+use std::fmt::Write as _;
+
+pub const DEFAULT_THRESHOLD_PCT: f64 = 5.0;
+
+/// Outcome of one scenario key's diff.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CellStatus {
+    Ok,
+    /// At least one gated metric moved past the threshold in the better
+    /// direction (and none regressed).
+    Improved,
+    /// At least one gating failure (regression, exact drift, witness
+    /// mismatch, or a gated metric disappearing).
+    Regressed,
+    /// In OLD but not NEW: the matrix lost coverage.
+    Missing,
+    /// In NEW only: fresh coverage, never a failure.
+    Added,
+}
+
+impl CellStatus {
+    fn label(self) -> &'static str {
+        match self {
+            CellStatus::Ok => "ok",
+            CellStatus::Improved => "improved",
+            CellStatus::Regressed => "REGRESSED",
+            CellStatus::Missing => "MISSING",
+            CellStatus::Added => "added",
+        }
+    }
+}
+
+/// One scenario key's rendered diff.
+#[derive(Clone, Debug)]
+pub struct CellDiff {
+    pub key: String,
+    pub status: CellStatus,
+    /// Human-readable gating failures (empty unless Regressed/Missing).
+    pub failures: Vec<String>,
+    /// Beyond-threshold moves in the better direction.
+    pub improvements: Vec<String>,
+}
+
+/// The full diff: render with [`CompareReport::render`], gate CI with
+/// [`CompareReport::passed`].
+#[derive(Clone, Debug)]
+pub struct CompareReport {
+    pub threshold_pct: f64,
+    pub old_suite: String,
+    pub new_suite: String,
+    pub baseline_placeholder: bool,
+    pub suite_mismatch: bool,
+    pub cells: Vec<CellDiff>,
+}
+
+impl CompareReport {
+    pub fn passed(&self) -> bool {
+        !self.suite_mismatch
+            && self
+                .cells
+                .iter()
+                .all(|c| !matches!(c.status, CellStatus::Regressed | CellStatus::Missing))
+    }
+
+    pub fn failures(&self) -> usize {
+        self.cells.iter().map(|c| c.failures.len()).sum::<usize>()
+            + usize::from(self.suite_mismatch)
+    }
+
+    /// The summary table `bench compare` prints.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "bench compare: {} -> {} (gated metrics, threshold ±{}%)",
+            self.old_suite, self.new_suite, self.threshold_pct
+        );
+        if self.baseline_placeholder {
+            let _ = writeln!(
+                out,
+                "  baseline is a placeholder: every cell below is fresh; promote the new \
+                 results to re-baseline (see bench/README.md)"
+            );
+        }
+        if self.suite_mismatch {
+            let _ = writeln!(
+                out,
+                "  SUITE MISMATCH: comparing {:?} against {:?} is not meaningful",
+                self.old_suite, self.new_suite
+            );
+        }
+        let width = self.cells.iter().map(|c| c.key.len()).max().unwrap_or(8).max(8);
+        for cell in &self.cells {
+            let _ = writeln!(out, "  {:<width$}  {}", cell.key, cell.status.label());
+            for f in &cell.failures {
+                let _ = writeln!(out, "  {:<width$}    !! {}", "", f);
+            }
+            for imp in &cell.improvements {
+                let _ = writeln!(out, "  {:<width$}    ++ {}", "", imp);
+            }
+        }
+        let count = |s: CellStatus| self.cells.iter().filter(|c| c.status == s).count();
+        let _ = writeln!(
+            out,
+            "summary: {} cell(s): {} ok, {} improved, {} regressed, {} missing, {} added -> {}",
+            self.cells.len(),
+            count(CellStatus::Ok),
+            count(CellStatus::Improved),
+            count(CellStatus::Regressed),
+            count(CellStatus::Missing),
+            count(CellStatus::Added),
+            if self.passed() { "PASS" } else { "FAIL" },
+        );
+        out
+    }
+}
+
+/// Diff `new` against the `old` baseline.
+pub fn compare(old: &ResultSet, new: &ResultSet, threshold_pct: f64) -> CompareReport {
+    let mut report = CompareReport {
+        threshold_pct,
+        old_suite: old.suite.clone(),
+        new_suite: new.suite.clone(),
+        baseline_placeholder: old.placeholder,
+        suite_mismatch: !old.placeholder && old.suite != new.suite,
+        cells: Vec::new(),
+    };
+    // OLD's order first (stable against the baseline), then NEW-only keys.
+    for rec in &old.records {
+        let Some(new_rec) = new.get(&rec.key) else {
+            report.cells.push(CellDiff {
+                key: rec.key.clone(),
+                status: CellStatus::Missing,
+                failures: vec!["scenario missing from NEW results (coverage regressed)".into()],
+                improvements: Vec::new(),
+            });
+            continue;
+        };
+        let mut failures = Vec::new();
+        let mut improvements = Vec::new();
+        if let (Some(ow), nw) = (&rec.witness, &new_rec.witness) {
+            if nw.as_ref() != Some(ow) {
+                failures.push(format!(
+                    "determinism witness changed: {} -> {}",
+                    short(ow),
+                    nw.as_deref().map(short).unwrap_or_else(|| "(none)".into()),
+                ));
+            }
+        }
+        for (name, m_old) in rec.metrics.iter().filter(|(_, m)| m.gated) {
+            let Some(m_new) = new_rec.metrics.get(name) else {
+                failures.push(format!("gated metric {name} missing from NEW"));
+                continue;
+            };
+            match m_old.better {
+                Better::Exact => {
+                    if m_new.value != m_old.value {
+                        failures.push(format!(
+                            "{name}: {} -> {} (exact metric drifted)",
+                            m_old.value, m_new.value
+                        ));
+                    }
+                }
+                Better::Lower | Better::Higher => {
+                    let delta_pct = if m_old.value == 0.0 {
+                        if m_new.value == 0.0 {
+                            0.0
+                        } else {
+                            f64::INFINITY * (m_new.value - m_old.value).signum()
+                        }
+                    } else {
+                        (m_new.value - m_old.value) / m_old.value.abs() * 100.0
+                    };
+                    let worse = match m_old.better {
+                        Better::Lower => delta_pct > 0.0,
+                        _ => delta_pct < 0.0,
+                    };
+                    if delta_pct.abs() > threshold_pct {
+                        let line = format!(
+                            "{name}: {} -> {} ({delta_pct:+.1}%)",
+                            m_old.value, m_new.value
+                        );
+                        if worse {
+                            failures.push(line);
+                        } else {
+                            improvements.push(line);
+                        }
+                    }
+                }
+            }
+        }
+        let status = if !failures.is_empty() {
+            CellStatus::Regressed
+        } else if !improvements.is_empty() {
+            CellStatus::Improved
+        } else {
+            CellStatus::Ok
+        };
+        report.cells.push(CellDiff { key: rec.key.clone(), status, failures, improvements });
+    }
+    for rec in &new.records {
+        if old.get(&rec.key).is_none() {
+            report.cells.push(CellDiff {
+                key: rec.key.clone(),
+                status: CellStatus::Added,
+                failures: Vec::new(),
+                improvements: Vec::new(),
+            });
+        }
+    }
+    report
+}
+
+fn short(w: &str) -> String {
+    w.chars().take(12).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::summary::{ResultRecord, ResultSet};
+
+    fn set_with(payload: f64, witness: &str) -> ResultSet {
+        let mut s = ResultSet::new("t");
+        s.push(
+            ResultRecord::new("syn-xs/r1/inproc/none/default/seed0")
+                .gate("payload_bytes", payload, Better::Lower)
+                .gauge("makespan_s", 1.0)
+                .with_witness(witness),
+        );
+        s
+    }
+
+    #[test]
+    fn self_compare_passes_and_gauges_never_gate() {
+        let a = set_with(1000.0, "aa");
+        let mut b = set_with(1000.0, "aa");
+        // A wildly different timing gauge must not gate.
+        b.records[0].metrics.get_mut("makespan_s").unwrap().value = 99.0;
+        let rep = compare(&a, &b, 5.0);
+        assert!(rep.passed(), "{}", rep.render());
+        assert_eq!(rep.cells[0].status, CellStatus::Ok);
+    }
+
+    #[test]
+    fn regression_beyond_threshold_fails_and_improvement_passes() {
+        let base = set_with(1000.0, "aa");
+        let rep = compare(&base, &set_with(1200.0, "aa"), 5.0);
+        assert!(!rep.passed());
+        assert_eq!(rep.cells[0].status, CellStatus::Regressed);
+        let rep = compare(&base, &set_with(700.0, "aa"), 5.0);
+        assert!(rep.passed());
+        assert_eq!(rep.cells[0].status, CellStatus::Improved);
+        // Within noise: 3% growth under a 5% threshold.
+        assert_eq!(compare(&base, &set_with(1030.0, "aa"), 5.0).cells[0].status, CellStatus::Ok);
+    }
+
+    #[test]
+    fn witness_mismatch_always_fails() {
+        let rep = compare(&set_with(1000.0, "aa"), &set_with(1000.0, "bb"), 50.0);
+        assert!(!rep.passed());
+        assert!(rep.cells[0].failures[0].contains("witness"));
+    }
+
+    #[test]
+    fn placeholder_baseline_passes_with_every_cell_added() {
+        let mut old = ResultSet::new("smoke");
+        old.placeholder = true;
+        let rep = compare(&old, &set_with(1000.0, "aa"), 5.0);
+        assert!(rep.passed());
+        assert_eq!(rep.cells[0].status, CellStatus::Added);
+        assert!(rep.render().contains("placeholder"));
+    }
+}

@@ -1,0 +1,28 @@
+//! `sparrowrl bench`: the declarative scenario-matrix harness.
+//!
+//! Replaces the bespoke per-bench JSON emitters with one schema and one
+//! gate (ROADMAP open item 3):
+//!
+//! * [`scenario`] — declarative cells {model} × {regions 1–4} ×
+//!   {transport} × {fault} × {sparsity} × {seed}, expanded from built-in
+//!   suites (`smoke`, `full`) or a JSON file, validated with typed
+//!   errors before anything runs.
+//! * [`runner`] — executes each cell through the `Session` API on
+//!   `SyntheticCompute` and folds the report into a result record.
+//! * [`summary`] — the result-record schema: gated deterministic
+//!   metrics + ungated timing gauges + the SHA-256 determinism witness,
+//!   round-tripped through one JSON file per run.
+//! * [`compare`] — diffs two result sets per scenario key and fails
+//!   (nonzero exit) on regression beyond a threshold, on any drift of an
+//!   exact metric, or on a changed witness. This is the CI gate
+//!   (`bench-gate` job) that makes scenario diversity enforceable.
+
+pub mod compare;
+pub mod runner;
+pub mod scenario;
+pub mod summary;
+
+pub use compare::{compare, CompareReport, DEFAULT_THRESHOLD_PCT};
+pub use runner::{run_scenario, run_suite};
+pub use scenario::{builtin_suite, Scenario, ScenarioBlock, ScenarioError, Suite, SUITE_NAMES};
+pub use summary::{Better, Metric, ResultRecord, ResultSet, SummaryError, SCHEMA_VERSION};

@@ -1,0 +1,218 @@
+//! Scenario execution: one validated [`Scenario`] in, one
+//! [`ResultRecord`] out, through the public `Session`/`RunSpec` API on
+//! [`SyntheticCompute`].
+//!
+//! Every cell runs `--deterministic`, so the gated metrics (payload and
+//! dense bytes, rho, gen tokens, membership counts) and the SHA-256
+//! policy witness are bit-stable across replays and machines; wall-clock
+//! metrics (makespan, overlap, tok/s, tok/$) ride along as ungated
+//! gauges. Fault pins land at version `steps - 2` — the final step —
+//! where `tests/transport_fault.rs` proves a faulted run still matches
+//! the healthy baseline bitwise.
+
+use crate::bench::scenario::{bench_model, FaultAxis, Scenario};
+use crate::bench::summary::{Better, ResultRecord, ResultSet};
+use crate::cost;
+use crate::metrics::SpanKind;
+use crate::rt::{BootstrapKind, SyntheticCompute};
+use crate::session::{Backend, RunSpec, Session};
+use crate::transport::{KillMode, KillSpec, TcpConfig};
+use anyhow::{anyhow, Context, Result};
+use std::time::Duration;
+
+/// Single-region cells run this flat fleet; the join cell adds actor
+/// `FLAT_FLEET` (ids are contiguous), drain/crash/preempt target actor
+/// `FLAT_FLEET - 1`.
+pub const FLAT_FLEET: usize = 3;
+
+/// Actors per region under the `wan-N` presets (`config::wan_preset`).
+const ACTORS_PER_REGION: usize = 2;
+
+/// Emulated accelerator latencies: small enough to keep the smoke suite
+/// fast, large enough that overlap/makespan gauges measure something.
+const TRAIN_DELAY: Duration = Duration::from_millis(4);
+const GEN_DELAY: Duration = Duration::from_millis(3);
+
+/// The version every fault pin fires at: the run's final step, the
+/// strongest determinism point (see `tests/transport_fault.rs`).
+fn fault_pin(steps: u64) -> u64 {
+    steps - 2
+}
+
+/// Translate one scenario cell into a `RunSpec` (kill scripts, when the
+/// fault calls for one, ride inside the `Backend::Tcp` config).
+fn spec_for(sc: &Scenario) -> RunSpec {
+    let mut spec = RunSpec::synthetic()
+        .steps(sc.steps)
+        .sft_steps(0)
+        .group_size(2)
+        .max_new_tokens(6)
+        .lr_rl(1e-2)
+        .segment_bytes(4 << 10)
+        .seed(sc.seed)
+        .deterministic()
+        .pipelined();
+    if sc.regions == 1 {
+        spec = spec.actors(FLAT_FLEET);
+    } else {
+        spec = spec.wan(&format!("wan-{}", sc.regions));
+    }
+    let pin = fault_pin(sc.steps);
+    let mut kills = Vec::new();
+    match sc.fault {
+        FaultAxis::None => {}
+        FaultAxis::Join => {
+            spec = spec.join_at(FLAT_FLEET as u32, pin, BootstrapKind::DeltaChain);
+        }
+        FaultAxis::Drain => {
+            spec = spec.leave_at(FLAT_FLEET as u32 - 1, pin);
+        }
+        FaultAxis::Crash => {
+            spec = spec.wall_leases();
+            kills.push(KillSpec {
+                actor: FLAT_FLEET as u32 - 1,
+                at_version: pin,
+                mode: KillMode::Crash,
+            });
+        }
+        FaultAxis::Preempt => {
+            spec = spec.wall_leases();
+            kills.push(KillSpec {
+                actor: FLAT_FLEET as u32 - 1,
+                at_version: pin,
+                mode: KillMode::Preempt { warn_ms: 0 },
+            });
+        }
+    }
+    let backend = match sc.transport {
+        crate::bench::scenario::TransportAxis::InProc => Backend::InProc,
+        crate::bench::scenario::TransportAxis::Sim => Backend::Sim,
+        crate::bench::scenario::TransportAxis::Tcp => {
+            Backend::Tcp(TcpConfig { kills: std::mem::take(&mut kills), ..TcpConfig::default() })
+        }
+    };
+    spec.transport(backend)
+}
+
+/// Run one cell and fold its report into the harness record.
+pub fn run_scenario(sc: &Scenario) -> Result<ResultRecord> {
+    sc.validate().map_err(|e| anyhow!("invalid scenario: {e}"))?;
+    let model = bench_model(&sc.model).expect("validate() checked the model preset");
+    let comp = SyntheticCompute::new(model.b_train, model.b_gen, model.max_seq)
+        .with_update_divisor(sc.sparsity.update_divisor())
+        .with_delays(TRAIN_DELAY, GEN_DELAY);
+    let plan = spec_for(sc).build().map_err(|e| anyhow!("scenario {}: {e}", sc.key()))?;
+    let report = Session::start_with_compute(&plan, model.layout.clone(), comp)
+        .and_then(Session::join)
+        .with_context(|| format!("scenario {}", sc.key()))?;
+
+    let n_steps = report.steps.len().max(1) as u64;
+    let payload: u64 = report.steps.iter().map(|s| s.payload_bytes).sum();
+    let dense: u64 = report.steps.iter().map(|s| s.dense_bytes).sum();
+    let gen_tokens: u64 = report.steps.iter().map(|s| s.gen_tokens).sum();
+    let overlap =
+        report.timeline.overlap_ratio("trainer", &[SpanKind::Train, SpanKind::Extract]);
+    let tok_per_s = gen_tokens as f64 / report.wall_s.max(1e-9);
+    // Cost gauge: price the cell as the matching cross-cloud deployment
+    // shipping one relay copy per region per step.
+    let actors_per_region = if sc.regions == 1 { FLAT_FLEET } else { ACTORS_PER_REGION };
+    let deployment = cost::wan_deployment(sc.regions, actors_per_region);
+    let tok_per_dollar = deployment.tokens_per_dollar_with_egress(
+        tok_per_s,
+        (payload / n_steps) * sc.regions as u64,
+        report.wall_s.max(1e-9) / n_steps as f64,
+    );
+
+    let mut rec = ResultRecord::new(&sc.key())
+        .axis("model", &sc.model)
+        .axis("regions", &sc.regions.to_string())
+        .axis("transport", sc.transport.name())
+        .axis("fault", sc.fault.name())
+        .axis("sparsity", sc.sparsity.name())
+        .axis("seed", &sc.seed.to_string())
+        .axis("steps", &sc.steps.to_string())
+        // Deterministic, gated: the regression surface.
+        .gate("payload_bytes", payload as f64, Better::Lower)
+        .gate("dense_bytes", dense as f64, Better::Lower)
+        .gate("rho", report.mean_rho(), Better::Lower)
+        .gate("gen_tokens", gen_tokens as f64, Better::Exact)
+        .gate("final_version", report.final_version as f64, Better::Exact)
+        .gate("failovers", report.failovers as f64, Better::Exact)
+        .gate("requeued_prompts", report.requeued_prompts as f64, Better::Exact)
+        .gate("joins", report.joins as f64, Better::Exact)
+        .gate("drains", report.drains as f64, Better::Exact)
+        .gate("preempts", report.preempts as f64, Better::Exact)
+        // Machine-dependent, informational.
+        .gauge("makespan_s", report.wall_s)
+        .gauge("overlap_ratio", overlap)
+        .gauge("tok_per_s", tok_per_s)
+        .gauge("tok_per_dollar", tok_per_dollar);
+    if let Some(last) = report.steps.last() {
+        rec = rec.with_witness(&last.checksum_hex());
+    }
+    Ok(rec)
+}
+
+/// Run every cell of an expanded suite into one [`ResultSet`]. A cell
+/// that fails to run aborts the suite (structural illegality was already
+/// rejected at expansion, so a failure here is a real runtime bug).
+pub fn run_suite(suite: &str, cells: &[Scenario]) -> Result<ResultSet> {
+    let mut set = ResultSet::new(suite);
+    for (i, sc) in cells.iter().enumerate() {
+        println!("[{}/{}] {}", i + 1, cells.len(), sc.key());
+        let rec = run_scenario(sc)?;
+        let payload = rec.metrics.get("payload_bytes").map_or(0.0, |m| m.value);
+        let rho = rec.metrics.get("rho").map_or(0.0, |m| m.value);
+        println!(
+            "        payload {}  rho {:.4}%  witness {}",
+            crate::util::fmt_bytes(payload as u64),
+            rho * 100.0,
+            rec.witness.as_deref().map(|w| &w[..12.min(w.len())]).unwrap_or("-"),
+        );
+        set.push(rec);
+    }
+    Ok(set)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::scenario::{SparsityAxis, TransportAxis};
+
+    fn cell(fault: FaultAxis, transport: TransportAxis) -> Scenario {
+        Scenario {
+            model: "syn-xs".into(),
+            regions: 1,
+            transport,
+            fault,
+            sparsity: SparsityAxis::Default,
+            seed: 0,
+            steps: 3,
+        }
+    }
+
+    #[test]
+    fn one_cell_produces_a_gated_record_with_witness() {
+        let rec = run_scenario(&cell(FaultAxis::None, TransportAxis::InProc)).unwrap();
+        assert_eq!(rec.key, "syn-xs/r1/inproc/none/default/seed0");
+        assert!(rec.metrics["payload_bytes"].gated);
+        assert!(rec.metrics["payload_bytes"].value > 0.0);
+        assert!(!rec.metrics["makespan_s"].gated);
+        let w = rec.witness.as_deref().expect("deterministic run has a witness");
+        assert_eq!(w.len(), 64, "SHA-256 hex");
+        assert_eq!(rec.metrics["final_version"].value, 3.0);
+    }
+
+    #[test]
+    fn join_cell_counts_one_join_and_matches_axes() {
+        let rec = run_scenario(&cell(FaultAxis::Join, TransportAxis::InProc)).unwrap();
+        assert_eq!(rec.metrics["joins"].value, 1.0);
+        assert_eq!(rec.axes["fault"], "join");
+    }
+
+    #[test]
+    fn invalid_cell_is_rejected_before_running() {
+        let sc = cell(FaultAxis::Crash, TransportAxis::InProc);
+        assert!(run_scenario(&sc).is_err(), "crash needs tcp; must fail fast");
+    }
+}

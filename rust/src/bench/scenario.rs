@@ -1,0 +1,593 @@
+//! Declarative scenario matrix for `sparrowrl bench`.
+//!
+//! A [`Scenario`] is one cell of {model preset} × {regions 1–4} ×
+//! {transport} × {fault script} × {sparsity regime} × {seed}; a
+//! [`Suite`] is a list of [`ScenarioBlock`] sub-matrices that expand to
+//! the cell list. Expansion validates every cell up front with a typed
+//! [`ScenarioError`] (mirroring `session::SpecError`) so an illegal
+//! matrix never fails at runtime mid-suite.
+//!
+//! Cross-field legality mirrors the `RunSpec::build` rules (see
+//! `session/spec.rs`): multi-region runs need the relay tree (inproc) or
+//! netsim, never raw Tcp; elastic membership (join/drain) is pinned to a
+//! flat fleet on inproc/tcp; crash/preempt kill a real socket and so need
+//! the Tcp backend.
+
+use crate::delta::ModelLayout;
+use crate::util::jsonl::Json;
+use std::collections::BTreeSet;
+use std::fmt;
+
+/// Transport axis — `Backend` minus the explicit-topology `SimNet`
+/// variant (scenarios derive topology from the region axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TransportAxis {
+    InProc,
+    Sim,
+    Tcp,
+}
+
+impl TransportAxis {
+    pub const ALL: [TransportAxis; 3] = [TransportAxis::InProc, TransportAxis::Sim, TransportAxis::Tcp];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportAxis::InProc => "inproc",
+            TransportAxis::Sim => "sim",
+            TransportAxis::Tcp => "tcp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TransportAxis> {
+        Self::ALL.into_iter().find(|t| t.name() == s)
+    }
+}
+
+/// Fault-script axis: one canonical fault per cell, pinned at the run's
+/// final step version (`steps - 2`) — the strongest determinism point,
+/// where a faulted run must still match the healthy baseline bitwise
+/// (proven by `tests/transport_fault.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultAxis {
+    None,
+    /// Live join (delta-chain bootstrap) of one extra actor.
+    Join,
+    /// Graceful drain of one actor.
+    Drain,
+    /// Socket-slam crash of one actor (lease-driven failover).
+    Crash,
+    /// Spot preemption, warn-then-kill with a zero warning window.
+    Preempt,
+}
+
+impl FaultAxis {
+    pub const ALL: [FaultAxis; 5] =
+        [FaultAxis::None, FaultAxis::Join, FaultAxis::Drain, FaultAxis::Crash, FaultAxis::Preempt];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultAxis::None => "none",
+            FaultAxis::Join => "join",
+            FaultAxis::Drain => "drain",
+            FaultAxis::Crash => "crash",
+            FaultAxis::Preempt => "preempt",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FaultAxis> {
+        Self::ALL.into_iter().find(|f| f.name() == s)
+    }
+
+    /// Join/drain reshape membership (spec-level scripting); crash and
+    /// preempt are transport-level kill injections.
+    pub fn is_elastic(self) -> bool {
+        matches!(self, FaultAxis::Join | FaultAxis::Drain)
+    }
+
+    pub fn is_kill(self) -> bool {
+        matches!(self, FaultAxis::Crash | FaultAxis::Preempt)
+    }
+}
+
+/// Sparsity-regime axis: how many elements each synthetic train step
+/// touches per tensor (`len / divisor`, min 1) — the knob the related
+/// work says behavior shifts along (SparseRL-Sync; "RL Fine-Tunes a
+/// Sparse Subnetwork").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SparsityAxis {
+    /// 1/16 of each tensor per step — dense-ish updates.
+    Dense,
+    /// 1/128 (the historical `SyntheticCompute` default).
+    Default,
+    /// 1/1024 — the stable-subnetwork regime.
+    Sparse,
+}
+
+impl SparsityAxis {
+    pub const ALL: [SparsityAxis; 3] =
+        [SparsityAxis::Dense, SparsityAxis::Default, SparsityAxis::Sparse];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SparsityAxis::Dense => "dense",
+            SparsityAxis::Default => "default",
+            SparsityAxis::Sparse => "sparse",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SparsityAxis> {
+        Self::ALL.into_iter().find(|x| x.name() == s)
+    }
+
+    pub fn update_divisor(self) -> usize {
+        match self {
+            SparsityAxis::Dense => 16,
+            SparsityAxis::Default => 128,
+            SparsityAxis::Sparse => 1024,
+        }
+    }
+}
+
+/// A synthetic bench model preset: layout plus compute batch geometry.
+#[derive(Clone, Debug)]
+pub struct BenchModel {
+    pub name: &'static str,
+    pub layout: ModelLayout,
+    pub b_train: usize,
+    pub b_gen: usize,
+    pub max_seq: usize,
+}
+
+/// The model-preset axis (`syn-xs` < `syn-s` < `syn-m` by parameter
+/// count). Separate from `config::model` presets on purpose: bench
+/// models pin the layouts benchmarks have always used, independent of
+/// the trainable-model catalog.
+pub const BENCH_MODEL_NAMES: [&str; 3] = ["syn-xs", "syn-s", "syn-m"];
+
+pub fn bench_model(name: &str) -> Option<BenchModel> {
+    let (name, vocab, d_model, n_layers, d_ff) = match name {
+        "syn-xs" => ("syn-xs", 256, 64, 2, 128),
+        "syn-s" => ("syn-s", 512, 128, 2, 256),
+        "syn-m" => ("syn-m", 1024, 256, 4, 512),
+        _ => return None,
+    };
+    Some(BenchModel {
+        name,
+        layout: ModelLayout::transformer(name, vocab, d_model, n_layers, d_ff),
+        b_train: 16,
+        b_gen: 8,
+        max_seq: 64,
+    })
+}
+
+/// One fully specified scenario cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    pub model: String,
+    /// 1 = flat 3-actor fleet; 2..=4 = the matching `wan-N` preset
+    /// (2 actors per region, relay-routed).
+    pub regions: usize,
+    pub transport: TransportAxis,
+    pub fault: FaultAxis,
+    pub sparsity: SparsityAxis,
+    pub seed: u64,
+    pub steps: u64,
+}
+
+impl Scenario {
+    /// Canonical identity: the join key `bench compare` matches records
+    /// on, and the `key` field of the emitted [`super::ResultRecord`].
+    pub fn key(&self) -> String {
+        format!(
+            "{}/r{}/{}/{}/{}/seed{}",
+            self.model,
+            self.regions,
+            self.transport.name(),
+            self.fault.name(),
+            self.sparsity.name(),
+            self.seed,
+        )
+    }
+
+    /// Every cross-field legality rule, checked before any cell runs.
+    pub fn validate(&self) -> Result<(), ScenarioError> {
+        if bench_model(&self.model).is_none() {
+            return Err(ScenarioError::UnknownModel(self.model.clone()));
+        }
+        if self.regions == 0 || self.regions > 4 {
+            return Err(ScenarioError::RegionsOutOfRange { regions: self.regions });
+        }
+        if self.steps == 0 {
+            return Err(ScenarioError::ZeroSteps);
+        }
+        if self.regions > 1 && self.transport == TransportAxis::Tcp {
+            return Err(ScenarioError::WanConflictsWithTcp { key: self.key() });
+        }
+        if self.fault != FaultAxis::None {
+            // Fault pins land at version `steps - 2` (the final step), so
+            // the pin must still be a committed version >= 1.
+            if self.steps < 3 {
+                return Err(ScenarioError::TooFewStepsForFault {
+                    key: self.key(),
+                    steps: self.steps,
+                });
+            }
+            if self.regions > 1 {
+                return Err(ScenarioError::WanConflictsWithFault { key: self.key() });
+            }
+        }
+        if self.fault.is_elastic() && self.transport == TransportAxis::Sim {
+            return Err(ScenarioError::SimConflictsWithElastic { key: self.key() });
+        }
+        if self.fault.is_kill() && self.transport != TransportAxis::Tcp {
+            return Err(ScenarioError::FaultNeedsTcp { key: self.key(), fault: self.fault });
+        }
+        Ok(())
+    }
+}
+
+/// One sub-matrix: the cartesian product of its axis lists. Empty axis
+/// lists fall back to the single-default entry, so a block only names
+/// the axes it sweeps.
+#[derive(Clone, Debug)]
+pub struct ScenarioBlock {
+    pub models: Vec<String>,
+    pub regions: Vec<usize>,
+    pub transports: Vec<TransportAxis>,
+    pub faults: Vec<FaultAxis>,
+    pub sparsities: Vec<SparsityAxis>,
+    pub seeds: Vec<u64>,
+    pub steps: u64,
+}
+
+impl Default for ScenarioBlock {
+    fn default() -> ScenarioBlock {
+        ScenarioBlock {
+            models: vec!["syn-xs".into()],
+            regions: vec![1],
+            transports: vec![TransportAxis::InProc],
+            faults: vec![FaultAxis::None],
+            sparsities: vec![SparsityAxis::Default],
+            seeds: vec![0],
+            steps: 4,
+        }
+    }
+}
+
+impl ScenarioBlock {
+    fn cells(&self) -> Vec<Scenario> {
+        let mut out = Vec::new();
+        for model in &self.models {
+            for &regions in &self.regions {
+                for &transport in &self.transports {
+                    for &fault in &self.faults {
+                        for &sparsity in &self.sparsities {
+                            for &seed in &self.seeds {
+                                out.push(Scenario {
+                                    model: model.clone(),
+                                    regions,
+                                    transport,
+                                    fault,
+                                    sparsity,
+                                    seed,
+                                    steps: self.steps,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A named list of scenario blocks — built in (`smoke`, `full`) or
+/// loaded from a JSON file (`bench run --file scenarios.json`).
+#[derive(Clone, Debug)]
+pub struct Suite {
+    pub name: String,
+    pub blocks: Vec<ScenarioBlock>,
+}
+
+pub const SUITE_NAMES: [&str; 2] = ["smoke", "full"];
+
+/// The built-in suites. `smoke` is the CI regression gate: 9 cells in
+/// well under a minute, spanning all three transports, two region
+/// counts, and three fault kinds. `full` adds the larger models, all
+/// four region counts, preemption, and extra seeds.
+pub fn builtin_suite(name: &str) -> Option<Suite> {
+    let d = ScenarioBlock::default;
+    let blocks = match name {
+        "smoke" => vec![
+            // Transport sweep on the flat fleet.
+            ScenarioBlock {
+                transports: vec![TransportAxis::InProc, TransportAxis::Tcp],
+                ..d()
+            },
+            // Elastic membership (join + drain) on inproc.
+            ScenarioBlock { faults: vec![FaultAxis::Join, FaultAxis::Drain], ..d() },
+            // Lease-driven failover over real sockets.
+            ScenarioBlock {
+                transports: vec![TransportAxis::Tcp],
+                faults: vec![FaultAxis::Crash],
+                ..d()
+            },
+            // Two-region relay tree: inproc relays and netsim arrival order.
+            ScenarioBlock {
+                regions: vec![2],
+                transports: vec![TransportAxis::InProc, TransportAxis::Sim],
+                ..d()
+            },
+            // Sparse regime on the bigger small model.
+            ScenarioBlock {
+                models: vec!["syn-s".into()],
+                sparsities: vec![SparsityAxis::Sparse],
+                ..d()
+            },
+            // Seed independence witness on netsim.
+            ScenarioBlock { transports: vec![TransportAxis::Sim], seeds: vec![1], ..d() },
+        ],
+        "full" => vec![
+            // Model × sparsity grid.
+            ScenarioBlock {
+                models: BENCH_MODEL_NAMES.iter().map(|s| s.to_string()).collect(),
+                sparsities: SparsityAxis::ALL.to_vec(),
+                steps: 6,
+                ..d()
+            },
+            // Region scaling 1..=4 on both relay-capable transports.
+            ScenarioBlock {
+                models: vec!["syn-s".into()],
+                regions: vec![1, 2, 3, 4],
+                transports: vec![TransportAxis::InProc, TransportAxis::Sim],
+                steps: 6,
+                ..d()
+            },
+            // Full fault battery over real sockets.
+            ScenarioBlock {
+                models: vec!["syn-s".into()],
+                transports: vec![TransportAxis::Tcp],
+                faults: vec![FaultAxis::None, FaultAxis::Crash, FaultAxis::Preempt],
+                steps: 6,
+                ..d()
+            },
+            // Elastic membership on the mid model.
+            ScenarioBlock {
+                models: vec!["syn-s".into()],
+                faults: vec![FaultAxis::Join, FaultAxis::Drain],
+                steps: 6,
+                ..d()
+            },
+            // Extra seeds (seed 0 already covered by the grid block).
+            ScenarioBlock { seeds: vec![1, 2], steps: 6, ..d() },
+        ],
+        _ => return None,
+    };
+    Some(Suite { name: name.to_string(), blocks })
+}
+
+impl Suite {
+    /// Expand every block to the validated, duplicate-free cell list.
+    pub fn expand(&self) -> Result<Vec<Scenario>, ScenarioError> {
+        let mut cells = Vec::new();
+        let mut seen = BTreeSet::new();
+        for block in &self.blocks {
+            for sc in block.cells() {
+                sc.validate()?;
+                if !seen.insert(sc.key()) {
+                    return Err(ScenarioError::DuplicateKey(sc.key()));
+                }
+                cells.push(sc);
+            }
+        }
+        if cells.is_empty() {
+            return Err(ScenarioError::EmptyMatrix);
+        }
+        Ok(cells)
+    }
+
+    /// Load a custom suite from its JSON form:
+    ///
+    /// ```json
+    /// {"suite": "mine", "blocks": [
+    ///   {"models": ["syn-xs"], "regions": [1, 2],
+    ///    "transports": ["inproc", "sim"], "faults": ["none"],
+    ///    "sparsities": ["default"], "seeds": [0], "steps": 4}
+    /// ]}
+    /// ```
+    ///
+    /// Omitted axes take the block defaults (syn-xs / r1 / inproc /
+    /// none / default / seed 0 / 4 steps).
+    pub fn from_json(s: &str) -> Result<Suite, ScenarioError> {
+        let j = Json::parse(s).map_err(ScenarioError::Parse)?;
+        let name = j
+            .get("suite")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ScenarioError::Parse("missing string \"suite\"".into()))?
+            .to_string();
+        let blocks_json = j
+            .get("blocks")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ScenarioError::Parse("missing \"blocks\" array".into()))?;
+        let mut blocks = Vec::new();
+        for bj in blocks_json {
+            let mut b = ScenarioBlock::default();
+            if let Some(xs) = bj.get("models").and_then(Json::as_arr) {
+                b.models = strings(xs, "models")?;
+            }
+            if let Some(xs) = bj.get("regions").and_then(Json::as_arr) {
+                b.regions = xs
+                    .iter()
+                    .map(|x| x.as_u64().map(|r| r as usize))
+                    .collect::<Option<Vec<_>>>()
+                    .ok_or_else(|| ScenarioError::Parse("\"regions\" must be integers".into()))?;
+            }
+            if let Some(xs) = bj.get("transports").and_then(Json::as_arr) {
+                b.transports = strings(xs, "transports")?
+                    .into_iter()
+                    .map(|s| TransportAxis::parse(&s).ok_or(ScenarioError::UnknownTransport(s)))
+                    .collect::<Result<_, _>>()?;
+            }
+            if let Some(xs) = bj.get("faults").and_then(Json::as_arr) {
+                b.faults = strings(xs, "faults")?
+                    .into_iter()
+                    .map(|s| FaultAxis::parse(&s).ok_or(ScenarioError::UnknownFault(s)))
+                    .collect::<Result<_, _>>()?;
+            }
+            if let Some(xs) = bj.get("sparsities").and_then(Json::as_arr) {
+                b.sparsities = strings(xs, "sparsities")?
+                    .into_iter()
+                    .map(|s| SparsityAxis::parse(&s).ok_or(ScenarioError::UnknownSparsity(s)))
+                    .collect::<Result<_, _>>()?;
+            }
+            if let Some(xs) = bj.get("seeds").and_then(Json::as_arr) {
+                b.seeds = xs
+                    .iter()
+                    .map(Json::as_u64)
+                    .collect::<Option<Vec<_>>>()
+                    .ok_or_else(|| ScenarioError::Parse("\"seeds\" must be integers".into()))?;
+            }
+            if let Some(s) = bj.get("steps").and_then(Json::as_u64) {
+                b.steps = s;
+            }
+            blocks.push(b);
+        }
+        Ok(Suite { name, blocks })
+    }
+}
+
+fn strings(xs: &[Json], field: &str) -> Result<Vec<String>, ScenarioError> {
+    xs.iter()
+        .map(|x| x.as_str().map(str::to_string))
+        .collect::<Option<Vec<_>>>()
+        .ok_or_else(|| ScenarioError::Parse(format!("\"{field}\" must be strings")))
+}
+
+/// A scenario matrix that cannot run — every way a suite is rejected
+/// before its first cell executes (the `SpecError` discipline applied to
+/// the bench surface).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScenarioError {
+    UnknownModel(String),
+    UnknownTransport(String),
+    UnknownFault(String),
+    UnknownSparsity(String),
+    RegionsOutOfRange { regions: usize },
+    ZeroSteps,
+    TooFewStepsForFault { key: String, steps: u64 },
+    /// The sim fleet is fixed at topology-build time; join/drain need a
+    /// live membership plane (inproc or tcp).
+    SimConflictsWithElastic { key: String },
+    /// Crash/preempt slam a real socket; only the Tcp backend has one.
+    FaultNeedsTcp { key: String, fault: FaultAxis },
+    /// Multi-region runs use the relay tree (inproc) or netsim; Tcp
+    /// streams hub→actor directly (mirrors `SpecError` wan×tcp).
+    WanConflictsWithTcp { key: String },
+    /// Fault pins target the flat fleet's fixed actor ids; the wan
+    /// presets own their fleet shape (mirrors `SpecError` wan×elastic).
+    WanConflictsWithFault { key: String },
+    EmptyMatrix,
+    DuplicateKey(String),
+    /// Suite-file JSON that does not parse into blocks.
+    Parse(String),
+}
+
+impl fmt::Display for ScenarioError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScenarioError::UnknownModel(m) => {
+                write!(f, "unknown bench model {m:?} (known: {})", BENCH_MODEL_NAMES.join(", "))
+            }
+            ScenarioError::UnknownTransport(t) => {
+                write!(f, "unknown transport {t:?} (inproc|sim|tcp)")
+            }
+            ScenarioError::UnknownFault(x) => {
+                write!(f, "unknown fault {x:?} (none|join|drain|crash|preempt)")
+            }
+            ScenarioError::UnknownSparsity(x) => {
+                write!(f, "unknown sparsity regime {x:?} (dense|default|sparse)")
+            }
+            ScenarioError::RegionsOutOfRange { regions } => {
+                write!(f, "regions = {regions}, but the wan presets cover 1..=4")
+            }
+            ScenarioError::ZeroSteps => write!(f, "steps must be >= 1"),
+            ScenarioError::TooFewStepsForFault { key, steps } => write!(
+                f,
+                "{key}: fault pins land at version steps-2, so faulted cells need >= 3 \
+                 steps (got {steps})"
+            ),
+            ScenarioError::SimConflictsWithElastic { key } => write!(
+                f,
+                "{key}: the sim fleet is fixed at topology-build time; join/drain need \
+                 inproc or tcp"
+            ),
+            ScenarioError::FaultNeedsTcp { key, fault } => write!(
+                f,
+                "{key}: {} fault injection kills a real socket; use the tcp transport",
+                fault.name()
+            ),
+            ScenarioError::WanConflictsWithTcp { key } => write!(
+                f,
+                "{key}: multi-region cells run the relay tree (inproc) or netsim; tcp \
+                 streams hub→actor directly"
+            ),
+            ScenarioError::WanConflictsWithFault { key } => write!(
+                f,
+                "{key}: fault cells run on the flat single-region fleet (the wan presets \
+                 fix their own fleet shape)"
+            ),
+            ScenarioError::EmptyMatrix => {
+                write!(f, "the suite expands to zero scenario cells")
+            }
+            ScenarioError::DuplicateKey(k) => {
+                write!(f, "duplicate scenario key {k} (blocks overlap)")
+            }
+            ScenarioError::Parse(e) => write!(f, "suite file: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ScenarioError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_are_canonical_and_stable() {
+        let sc = Scenario {
+            model: "syn-xs".into(),
+            regions: 2,
+            transport: TransportAxis::Sim,
+            fault: FaultAxis::None,
+            sparsity: SparsityAxis::Sparse,
+            seed: 7,
+            steps: 4,
+        };
+        assert_eq!(sc.key(), "syn-xs/r2/sim/none/sparse/seed7");
+        assert!(sc.validate().is_ok());
+    }
+
+    #[test]
+    fn builtin_suites_expand_cleanly() {
+        for name in SUITE_NAMES {
+            let suite = builtin_suite(name).unwrap();
+            let cells = suite.expand().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!cells.is_empty());
+        }
+        assert!(builtin_suite("nope").is_none());
+    }
+
+    #[test]
+    fn suite_json_round_trip_with_defaults() {
+        let suite = Suite::from_json(
+            r#"{"suite":"mine","blocks":[{"regions":[1,2],"transports":["inproc","sim"]}]}"#,
+        )
+        .unwrap();
+        assert_eq!(suite.name, "mine");
+        let cells = suite.expand().unwrap();
+        assert_eq!(cells.len(), 4);
+        assert!(cells.iter().all(|c| c.model == "syn-xs" && c.steps == 4));
+    }
+}

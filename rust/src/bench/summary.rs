@@ -1,0 +1,420 @@
+//! Result-record schema for the scenario-matrix harness.
+//!
+//! One `bench run` emits one [`ResultSet`]: a suite name plus one
+//! [`ResultRecord`] per scenario cell. A record is a flat bag of named
+//! [`Metric`]s split into two classes:
+//!
+//! * **gated** — deterministic under the replayed schedule (payload
+//!   bytes, rho, membership counts). `bench compare` diffs these against
+//!   a baseline and fails CI beyond the threshold (or on *any* drift for
+//!   [`Better::Exact`] metrics).
+//! * **gauges** — machine-dependent timings (makespan, tok/s, tok/$).
+//!   Recorded for the perf trajectory, never gated, so a committed
+//!   baseline stays valid across runner hardware.
+//!
+//! The optional `witness` is the final committed policy's SHA-256 hex —
+//! the bit-exactness guarantee as one comparable string per cell.
+//!
+//! Serialization goes through `util::jsonl::Json` (the offline serde
+//! stand-in); non-finite metric values are a typed [`SummaryError`]
+//! rather than a silent JSON `null`, mirroring the `util::bench`
+//! `BenchWriteError` policy.
+
+use crate::util::bench::Bencher;
+use crate::util::jsonl::Json;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// Bumped when the result-record layout changes incompatibly; `compare`
+/// refuses to diff files from a different schema generation.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Regression direction of a gated metric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Better {
+    /// Smaller is better (payload bytes, rho): growth beyond the
+    /// threshold is a regression, shrinkage an improvement.
+    Lower,
+    /// Larger is better (throughput-style counters).
+    Higher,
+    /// Any change at all is a failure (failover/join/drain counts,
+    /// final version): these are schedule invariants, not trends.
+    Exact,
+}
+
+impl Better {
+    pub fn name(self) -> &'static str {
+        match self {
+            Better::Lower => "lower",
+            Better::Higher => "higher",
+            Better::Exact => "exact",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Better> {
+        match s {
+            "lower" => Some(Better::Lower),
+            "higher" => Some(Better::Higher),
+            "exact" => Some(Better::Exact),
+            _ => None,
+        }
+    }
+}
+
+/// One named measurement inside a record.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Metric {
+    pub value: f64,
+    pub better: Better,
+    /// Gated metrics participate in `bench compare`; gauges are
+    /// informational only (timings vary by machine).
+    pub gated: bool,
+}
+
+/// One scenario cell's results, keyed by the scenario's canonical key
+/// (e.g. `syn-xs/r1/tcp/crash/default/seed0`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResultRecord {
+    pub key: String,
+    /// The scenario axes verbatim, for filtering and coverage checks.
+    pub axes: BTreeMap<String, String>,
+    pub metrics: BTreeMap<String, Metric>,
+    /// Final committed policy SHA-256 (hex) — the determinism witness.
+    pub witness: Option<String>,
+}
+
+impl ResultRecord {
+    pub fn new(key: &str) -> ResultRecord {
+        ResultRecord {
+            key: key.to_string(),
+            axes: BTreeMap::new(),
+            metrics: BTreeMap::new(),
+            witness: None,
+        }
+    }
+
+    pub fn axis(mut self, name: &str, value: &str) -> ResultRecord {
+        self.axes.insert(name.to_string(), value.to_string());
+        self
+    }
+
+    /// Record an informational (never gated) metric.
+    pub fn gauge(mut self, name: &str, value: f64) -> ResultRecord {
+        self.metrics
+            .insert(name.to_string(), Metric { value, better: Better::Lower, gated: false });
+        self
+    }
+
+    /// Record a gated metric: `compare` fails on regression past the
+    /// threshold (`Lower`/`Higher`) or on any drift (`Exact`).
+    pub fn gate(mut self, name: &str, value: f64, better: Better) -> ResultRecord {
+        self.metrics.insert(name.to_string(), Metric { value, better, gated: true });
+        self
+    }
+
+    pub fn with_witness(mut self, hex: &str) -> ResultRecord {
+        self.witness = Some(hex.to_string());
+        self
+    }
+
+    fn to_json(&self) -> Json {
+        let mut axes = Json::obj();
+        for (k, v) in &self.axes {
+            axes = axes.set(k, v.as_str());
+        }
+        let mut metrics = Json::obj();
+        for (k, m) in &self.metrics {
+            metrics = metrics.set(
+                k,
+                Json::obj()
+                    .set("v", m.value)
+                    .set("better", m.better.name())
+                    .set("gated", m.gated),
+            );
+        }
+        let mut j = Json::obj().set("key", self.key.as_str()).set("axes", axes).set(
+            "metrics",
+            metrics,
+        );
+        if let Some(w) = &self.witness {
+            j = j.set("witness", w.as_str());
+        }
+        j
+    }
+
+    fn from_json(j: &Json) -> Result<ResultRecord, SummaryError> {
+        let key = j
+            .get("key")
+            .and_then(Json::as_str)
+            .ok_or_else(|| SummaryError::malformed("record without a string \"key\""))?
+            .to_string();
+        let mut rec = ResultRecord::new(&key);
+        if let Some(Json::Obj(m)) = j.get("axes") {
+            for (k, v) in m {
+                let v = v.as_str().ok_or_else(|| {
+                    SummaryError::malformed(format!("{key}: axis {k:?} is not a string"))
+                })?;
+                rec.axes.insert(k.clone(), v.to_string());
+            }
+        }
+        let Some(Json::Obj(m)) = j.get("metrics") else {
+            return Err(SummaryError::malformed(format!("{key}: missing \"metrics\" object")));
+        };
+        for (name, mj) in m {
+            let value = mj.get("v").and_then(Json::as_f64).ok_or_else(|| {
+                SummaryError::malformed(format!("{key}: metric {name:?} without a numeric \"v\""))
+            })?;
+            let better = mj
+                .get("better")
+                .and_then(Json::as_str)
+                .and_then(Better::parse)
+                .ok_or_else(|| {
+                    SummaryError::malformed(format!(
+                        "{key}: metric {name:?} needs \"better\": lower|higher|exact"
+                    ))
+                })?;
+            let gated = mj.get("gated").and_then(Json::as_bool).unwrap_or(false);
+            rec.metrics.insert(name.clone(), Metric { value, better, gated });
+        }
+        if let Some(w) = j.get("witness") {
+            rec.witness = Some(
+                w.as_str()
+                    .ok_or_else(|| {
+                        SummaryError::malformed(format!("{key}: witness is not a string"))
+                    })?
+                    .to_string(),
+            );
+        }
+        Ok(rec)
+    }
+}
+
+/// One `bench run`'s output: every scenario cell's record plus the suite
+/// identity, in scenario order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResultSet {
+    pub suite: String,
+    pub schema: u64,
+    /// A committed placeholder baseline: `compare` treats every NEW cell
+    /// as freshly added and passes, printing a re-baseline notice. This
+    /// is how `bench/baseline_smoke.json` bootstraps before the first
+    /// real CI run is promoted (see bench/README.md).
+    pub placeholder: bool,
+    pub records: Vec<ResultRecord>,
+}
+
+impl ResultSet {
+    pub fn new(suite: &str) -> ResultSet {
+        ResultSet {
+            suite: suite.to_string(),
+            schema: SCHEMA_VERSION,
+            placeholder: false,
+            records: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, rec: ResultRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn get(&self, key: &str) -> Option<&ResultRecord> {
+        self.records.iter().find(|r| r.key == key)
+    }
+
+    /// Lift a `util::bench::Bencher`'s timing cases onto the harness
+    /// schema: one record per case, all timings as (ungated) gauges.
+    /// The legacy `BENCH_*.json` emitters feed their deterministic byte
+    /// counts in as gated records alongside these.
+    pub fn from_bencher(suite: &str, b: &Bencher) -> ResultSet {
+        let mut set = ResultSet::new(suite);
+        for r in b.results() {
+            let mut rec = ResultRecord::new(&format!("{suite}/{}", r.name))
+                .axis("case", &r.name)
+                .gauge("reps", r.reps as f64)
+                .gauge("min_s", r.min.as_secs_f64())
+                .gauge("median_s", r.median.as_secs_f64())
+                .gauge("mean_s", r.mean.as_secs_f64())
+                .gauge("p95_s", r.p95.as_secs_f64());
+            if let Some(t) = r.throughput_gbps().filter(|t| t.is_finite()) {
+                rec = rec.gauge("gb_per_s", t);
+            }
+            set.push(rec);
+        }
+        set
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("schema", self.schema)
+            .set("suite", self.suite.as_str())
+            .set("placeholder", self.placeholder)
+            .set("records", Json::Arr(self.records.iter().map(|r| r.to_json()).collect()))
+    }
+
+    pub fn parse(s: &str) -> Result<ResultSet, SummaryError> {
+        let j = Json::parse(s).map_err(SummaryError::Parse)?;
+        let schema = j
+            .get("schema")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| SummaryError::malformed("missing numeric \"schema\""))?;
+        if schema != SCHEMA_VERSION {
+            return Err(SummaryError::SchemaVersion { found: schema, expected: SCHEMA_VERSION });
+        }
+        let suite = j
+            .get("suite")
+            .and_then(Json::as_str)
+            .ok_or_else(|| SummaryError::malformed("missing string \"suite\""))?;
+        let mut set = ResultSet::new(suite);
+        set.placeholder = j.get("placeholder").and_then(Json::as_bool).unwrap_or(false);
+        let records = j
+            .get("records")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| SummaryError::malformed("missing \"records\" array"))?;
+        for r in records {
+            set.records.push(ResultRecord::from_json(r)?);
+        }
+        Ok(set)
+    }
+
+    pub fn load(path: &Path) -> Result<ResultSet, SummaryError> {
+        let s = std::fs::read_to_string(path)
+            .map_err(|e| SummaryError::Io { path: path.display().to_string(), err: e.to_string() })?;
+        ResultSet::parse(&s)
+    }
+
+    /// Serialize to `path`. Rejects non-finite metric values with a typed
+    /// error *before* touching the file: `Json` would emit `null` for
+    /// NaN/Inf and the file would no longer parse back as a ResultSet.
+    pub fn write(&self, path: &Path) -> Result<(), SummaryError> {
+        for rec in &self.records {
+            for (name, m) in &rec.metrics {
+                if !m.value.is_finite() {
+                    return Err(SummaryError::NonFinite {
+                        key: rec.key.clone(),
+                        metric: name.clone(),
+                    });
+                }
+            }
+        }
+        std::fs::write(path, self.to_json().to_string() + "\n")
+            .map_err(|e| SummaryError::Io { path: path.display().to_string(), err: e.to_string() })
+    }
+}
+
+/// Typed failures of the result-file round trip.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SummaryError {
+    Io { path: String, err: String },
+    /// JSON syntax error (byte offset from `Json::parse`).
+    Parse(String),
+    /// Parsed JSON that is not a well-formed result set.
+    Malformed(String),
+    SchemaVersion { found: u64, expected: u64 },
+    /// A metric value JSON cannot represent losslessly.
+    NonFinite { key: String, metric: String },
+}
+
+impl SummaryError {
+    fn malformed(what: impl Into<String>) -> SummaryError {
+        SummaryError::Malformed(what.into())
+    }
+}
+
+impl fmt::Display for SummaryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SummaryError::Io { path, err } => write!(f, "{path}: {err}"),
+            SummaryError::Parse(e) => write!(f, "invalid JSON: {e}"),
+            SummaryError::Malformed(what) => write!(f, "malformed result set: {what}"),
+            SummaryError::SchemaVersion { found, expected } => write!(
+                f,
+                "result schema v{found} != v{expected}; regenerate with this binary's `bench run`"
+            ),
+            SummaryError::NonFinite { key, metric } => write!(
+                f,
+                "{key}: metric {metric:?} is NaN/Inf, which JSON cannot represent losslessly"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SummaryError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ResultSet {
+        let mut set = ResultSet::new("smoke");
+        set.push(
+            ResultRecord::new("syn-xs/r1/inproc/none/default/seed0")
+                .axis("transport", "inproc")
+                .axis("regions", "1")
+                .gate("payload_bytes", 1234.0, Better::Lower)
+                .gate("failovers", 0.0, Better::Exact)
+                .gauge("makespan_s", 0.25)
+                .with_witness("ab12cd"),
+        );
+        set.push(ResultRecord::new("syn-xs/r1/tcp/crash/default/seed0").gate(
+            "rho",
+            0.015625,
+            Better::Lower,
+        ));
+        set
+    }
+
+    #[test]
+    fn result_set_round_trips_bit_exactly() {
+        let set = sample();
+        let doc = set.to_json().to_string();
+        let back = ResultSet::parse(&doc).unwrap();
+        assert_eq!(back, set);
+        // Gated/gauge split and witness survive the trip.
+        let r = back.get("syn-xs/r1/inproc/none/default/seed0").unwrap();
+        assert!(r.metrics["payload_bytes"].gated);
+        assert!(!r.metrics["makespan_s"].gated);
+        assert_eq!(r.metrics["failovers"].better, Better::Exact);
+        assert_eq!(r.witness.as_deref(), Some("ab12cd"));
+    }
+
+    #[test]
+    fn write_rejects_non_finite_metrics_with_a_typed_error() {
+        let mut set = sample();
+        set.records[0]
+            .metrics
+            .insert("bad".into(), Metric { value: f64::NAN, better: Better::Lower, gated: false });
+        let path = std::env::temp_dir().join(format!("sprw-summary-{}.json", std::process::id()));
+        match set.write(&path) {
+            Err(SummaryError::NonFinite { key, metric }) => {
+                assert_eq!(key, "syn-xs/r1/inproc/none/default/seed0");
+                assert_eq!(metric, "bad");
+            }
+            other => panic!("expected NonFinite, got {other:?}"),
+        }
+        assert!(!path.exists(), "rejected write must not leave a file behind");
+    }
+
+    #[test]
+    fn schema_version_mismatch_is_typed() {
+        let doc = r#"{"schema":99,"suite":"x","placeholder":false,"records":[]}"#;
+        assert_eq!(
+            ResultSet::parse(doc),
+            Err(SummaryError::SchemaVersion { found: 99, expected: SCHEMA_VERSION })
+        );
+    }
+
+    #[test]
+    fn from_bencher_lifts_cases_as_ungated_gauges() {
+        let mut b = Bencher::new(0, 3);
+        b.bench("alpha", || {
+            std::hint::black_box(1 + 1);
+        });
+        let set = ResultSet::from_bencher("bench-x", &b);
+        assert_eq!(set.records.len(), 1);
+        let r = &set.records[0];
+        assert_eq!(r.key, "bench-x/alpha");
+        assert!(r.metrics.values().all(|m| !m.gated));
+        assert!(r.metrics.contains_key("median_s"));
+    }
+}

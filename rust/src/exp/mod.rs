@@ -1,5 +1,10 @@
 //! Experiment harness: one target per table/figure in the paper's §7
 //! (see DESIGN.md §4 for the index). Run via `sparrowrl exp <id>`.
+//!
+//! These targets reproduce the paper's *analytic* tables. Their
+//! regression-gated counterpart is `sparrowrl bench` ([`crate::bench`]):
+//! the scenario-matrix harness that runs real Session-API cells and
+//! diffs the deterministic results against a committed baseline in CI.
 
 pub mod e2e;
 pub mod encoding;

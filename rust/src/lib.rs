@@ -25,6 +25,7 @@
 //! the multi-region distribution-tree design, and the Session API (§2c).
 
 pub mod actor;
+pub mod bench;
 pub mod config;
 pub mod cost;
 pub mod data;

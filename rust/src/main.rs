@@ -4,6 +4,7 @@
 //! sparrowrl exp <id> [--flags]        reproduce a paper table/figure (or 'all')
 //! sparrowrl train [--flags]           run the real RL loop on PJRT artifacts
 //! sparrowrl sim [--flags]             one simulated geo-distributed run
+//! sparrowrl bench run|compare|list    scenario-matrix harness + regression gate
 //! sparrowrl reconstruct [--flags]     rebuild a policy from a durable store
 //! sparrowrl list                      list experiments and models
 //! ```
@@ -27,6 +28,9 @@ fn usage() -> ! {
          [--persist-dir DIR] [--resume]\n  \
          sparrowrl reconstruct --persist-dir DIR [--model sparrow-xs] [--version V] [--compact]\n  \
          sparrowrl sim [--model qwen3-8b] [--system sparrow|full|ms|ideal] [--bench gsm8k|math|deepscaler] [--steps N]\n  \
+         sparrowrl bench run [--suite smoke|full] [--file scenarios.json] [--out FILE]\n  \
+         sparrowrl bench compare OLD NEW [--threshold PCT]\n  \
+         sparrowrl bench list [--suite NAME] [--file scenarios.json]\n  \
          sparrowrl list",
         exp::ALL.join("|")
     );
@@ -43,6 +47,7 @@ fn main() {
         }
         "train" => cmd_train(&args),
         "sim" => cmd_sim(&args),
+        "bench" => cmd_bench(&args),
         "reconstruct" => cmd_reconstruct(&args),
         "list" => {
             println!("experiments: {}", exp::ALL.join(", "));
@@ -50,6 +55,7 @@ fn main() {
             println!("analytic models: {}", config::paper_models().join(", "));
             println!("transports: {}", Backend::NAMES.join(", "));
             println!("wan presets: {}", config::WAN_PRESET_NAMES.join(", "));
+            println!("bench suites: {}", sparrowrl::bench::SUITE_NAMES.join(", "));
             Ok(())
         }
         _ => usage(),
@@ -328,6 +334,76 @@ fn cmd_reconstruct(args: &Args) -> anyhow::Result<()> {
         .map_err(|e| anyhow::anyhow!("reconstructing v{version}: {e}"))?;
     println!("v{version} policy checksum: {}", sparrowrl::util::hex(&policy_witness(&policy)));
     Ok(())
+}
+
+/// `sparrowrl bench`: the declarative scenario-matrix harness.
+///
+/// * `bench run` expands a suite (built-in `smoke`/`full` or a
+///   `--file` JSON matrix), runs every cell through the Session API on
+///   SyntheticCompute, and writes one `ResultSet` file.
+/// * `bench compare OLD NEW` diffs two result files per scenario key
+///   and exits nonzero on regression beyond `--threshold` (percent), on
+///   any drift of an exact-gated metric, or on a changed determinism
+///   witness — the CI regression gate.
+/// * `bench list` prints the expanded cell keys without running them.
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    use sparrowrl::bench::{compare, ResultSet, Suite};
+    fn load_suite(args: &Args) -> anyhow::Result<Suite> {
+        let file = args.str_or("file", "");
+        if !file.is_empty() {
+            let text = std::fs::read_to_string(&file)
+                .map_err(|e| anyhow::anyhow!("reading {file}: {e}"))?;
+            return Suite::from_json(&text).map_err(|e| anyhow::anyhow!("{file}: {e}"));
+        }
+        let name = args.str_or("suite", "smoke");
+        sparrowrl::bench::builtin_suite(&name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown suite {name} (built-in: {}; or pass --file)",
+                sparrowrl::bench::SUITE_NAMES.join(", ")
+            )
+        })
+    }
+    match args.positional.get(1).map(|s| s.as_str()).unwrap_or("") {
+        "run" => {
+            let suite = load_suite(args)?;
+            let cells = suite.expand()?;
+            println!("suite {}: {} scenario cell(s)", suite.name, cells.len());
+            let results = sparrowrl::bench::run_suite(&suite.name, &cells)?;
+            let out = args.str_or("out", &format!("BENCH_{}.json", suite.name));
+            results.write(std::path::Path::new(&out))?;
+            println!("bench results written to {out}");
+            Ok(())
+        }
+        "compare" => {
+            let (Some(old_path), Some(new_path)) =
+                (args.positional.get(2), args.positional.get(3))
+            else {
+                anyhow::bail!("usage: sparrowrl bench compare OLD NEW [--threshold PCT]");
+            };
+            let threshold =
+                args.parse_or("threshold", sparrowrl::bench::DEFAULT_THRESHOLD_PCT);
+            let old = ResultSet::load(std::path::Path::new(old_path))?;
+            let new = ResultSet::load(std::path::Path::new(new_path))?;
+            let report = compare(&old, &new, threshold);
+            print!("{}", report.render());
+            if report.passed() {
+                Ok(())
+            } else {
+                anyhow::bail!(
+                    "bench compare: {} gating failure(s) (threshold ±{threshold}%)",
+                    report.failures(),
+                )
+            }
+        }
+        "list" => {
+            let suite = load_suite(args)?;
+            for sc in suite.expand()? {
+                println!("{}", sc.key());
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown bench subcommand {other:?} (run|compare|list)"),
+    }
 }
 
 fn cmd_sim(args: &Args) -> anyhow::Result<()> {

@@ -91,6 +91,10 @@ pub struct SyntheticCompute {
     pub train_delay: Duration,
     /// Sleep per `generate` call (one generation batch).
     pub gen_delay: Duration,
+    /// Update-sparsity regime: each train step touches `len / update_div`
+    /// elements per tensor (min 1). 128 reproduces the historical
+    /// behavior; the bench harness sweeps 16 (dense) to 1024 (sparse).
+    pub update_div: usize,
 }
 
 impl SyntheticCompute {
@@ -100,6 +104,7 @@ impl SyntheticCompute {
             vocab: 64,
             train_delay: Duration::ZERO,
             gen_delay: Duration::ZERO,
+            update_div: 128,
         }
     }
 
@@ -107,6 +112,15 @@ impl SyntheticCompute {
     pub fn with_delays(mut self, train: Duration, gen: Duration) -> SyntheticCompute {
         self.train_delay = train;
         self.gen_delay = gen;
+        self
+    }
+
+    /// Select the update-sparsity regime: each train step touches
+    /// `len / div` elements per tensor (min 1), so larger divisors give
+    /// sparser deltas. Must be >= 1.
+    pub fn with_update_divisor(mut self, div: usize) -> SyntheticCompute {
+        assert!(div >= 1, "update divisor must be >= 1");
+        self.update_div = div;
         self
     }
 
@@ -156,7 +170,7 @@ impl Compute for SyntheticCompute {
         mix(state.step);
         let mut rng = Rng::new(h);
         for t in state.masters.iter_mut() {
-            let touched = (t.len() / 128).max(1);
+            let touched = (t.len() / self.update_div).max(1);
             for _ in 0..touched {
                 let i = rng.range(0, t.len());
                 t[i] -= lr * (rng.f32() * 2.0 - 1.0);
@@ -219,6 +233,34 @@ mod tests {
         assert_eq!(la, lb);
         assert_eq!(a.to_policy(), b.to_policy(), "same inputs, same weights");
         assert_ne!(a.to_policy(), before, "training changed the policy");
+    }
+
+    #[test]
+    fn update_divisor_controls_touched_fraction() {
+        let (l, _) = setup();
+        let tokens = vec![5i32; 8 * 32];
+        let mask = vec![1.0f32; 8 * 32];
+        let adv = vec![0.5f32; 8];
+        let changed = |div: usize| {
+            let c = SyntheticCompute::new(8, 4, 32).with_update_divisor(div);
+            let mut st = TrainState::init(&l, &mut Rng::new(1));
+            let before = st.to_policy();
+            c.train_step(&mut st, &tokens, &mask, &adv, 1e-2).unwrap();
+            let after = st.to_policy();
+            before
+                .tensors
+                .iter()
+                .zip(&after.tensors)
+                .map(|(a, b)| a.iter().zip(b.iter()).filter(|(x, y)| x != y).count())
+                .sum::<usize>()
+        };
+        let dense = changed(16);
+        let sparse = changed(1024);
+        assert!(
+            dense > sparse,
+            "divisor 16 must touch more elements than 1024 ({dense} vs {sparse})"
+        );
+        assert!(sparse >= 1, "even the sparsest regime touches something");
     }
 
     #[test]

@@ -7,7 +7,39 @@
 //! trajectory is tracked across PRs (e.g. `BENCH_encoding.json`).
 
 use crate::util::jsonl::Json;
+use std::fmt;
 use std::time::{Duration, Instant};
+
+/// Typed failure of the JSON export path. JSON has no NaN/Inf — `Json`
+/// would silently emit `null`, which the harness-side parser
+/// (`bench::summary`) then rejects — so a non-finite derived metric or
+/// throughput is refused up front with the offending field named.
+#[derive(Debug)]
+pub enum BenchWriteError {
+    /// A value JSON cannot represent losslessly (NaN or ±Inf).
+    NonFinite { case: String, field: String },
+    Io(std::io::Error),
+}
+
+impl fmt::Display for BenchWriteError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BenchWriteError::NonFinite { case, field } => write!(
+                f,
+                "bench {case:?}: {field:?} is NaN/Inf, which JSON cannot represent losslessly"
+            ),
+            BenchWriteError::Io(e) => write!(f, "writing bench json: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for BenchWriteError {}
+
+impl From<std::io::Error> for BenchWriteError {
+    fn from(e: std::io::Error) -> BenchWriteError {
+        BenchWriteError::Io(e)
+    }
+}
 
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
@@ -122,6 +154,12 @@ impl Bencher {
         &self.results
     }
 
+    /// Inject an externally measured result (a wall clock the caller
+    /// timed itself, or a synthetic case in tests) into the recorded set.
+    pub fn record(&mut self, r: BenchResult) {
+        self.results.push(r);
+    }
+
     /// Build the JSON document for all recorded results, with optional
     /// derived metrics (e.g. speedup ratios) attached by the bench driver.
     pub fn to_json(&self, bench: &str, derived: &[(&str, f64)]) -> Json {
@@ -139,13 +177,32 @@ impl Bencher {
     }
 
     /// Write all recorded results as a JSON document (the cross-PR perf
-    /// record, e.g. `BENCH_encoding.json`).
+    /// record, e.g. `BENCH_encoding.json`). Rejects non-finite values
+    /// with a typed error *before* touching the file.
     pub fn write_json(
         &self,
         path: &std::path::Path,
         bench: &str,
         derived: &[(&str, f64)],
-    ) -> std::io::Result<()> {
+    ) -> Result<(), BenchWriteError> {
+        for (k, v) in derived {
+            if !v.is_finite() {
+                return Err(BenchWriteError::NonFinite {
+                    case: bench.to_string(),
+                    field: k.to_string(),
+                });
+            }
+        }
+        for r in &self.results {
+            if let Some(t) = r.throughput_gbps() {
+                if !t.is_finite() {
+                    return Err(BenchWriteError::NonFinite {
+                        case: r.name.clone(),
+                        field: "gb_per_s".to_string(),
+                    });
+                }
+            }
+        }
         let doc = self.to_json(bench, derived).to_string();
         std::fs::write(path, doc + "\n")?;
         println!("bench results written to {}", path.display());
@@ -183,6 +240,90 @@ mod tests {
         assert!(doc.contains("\"name\":\"beta\""));
         assert!(doc.contains("\"gb_per_s\""));
         assert!(doc.contains("\"fused_speedup\":1.75"));
+    }
+
+    fn synthetic_result(name: &str, median: Duration, bytes: Option<u64>) -> BenchResult {
+        BenchResult {
+            name: name.to_string(),
+            reps: 1,
+            min: median,
+            median,
+            mean: median,
+            p95: median,
+            bytes_per_iter: bytes,
+        }
+    }
+
+    #[test]
+    fn write_json_rejects_nan_and_inf_derived_metrics() {
+        let mut b = Bencher::new(0, 1);
+        b.bench("x", || {
+            std::hint::black_box(1 + 1);
+        });
+        let path = std::env::temp_dir().join(format!("sprw-bench-nan-{}.json", std::process::id()));
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            match b.write_json(&path, "edge", &[("ok", 1.0), ("bad", bad)]) {
+                Err(BenchWriteError::NonFinite { case, field }) => {
+                    assert_eq!(case, "edge");
+                    assert_eq!(field, "bad");
+                }
+                other => panic!("expected NonFinite for {bad}, got {other:?}"),
+            }
+        }
+        assert!(!path.exists(), "rejected write must not leave a file behind");
+    }
+
+    #[test]
+    fn write_json_rejects_infinite_throughput_from_zero_median() {
+        let mut b = Bencher::new(0, 1);
+        // A zero-duration median with bytes attached makes gb_per_s Inf —
+        // the bug this typed error replaced (it used to serialize as a
+        // silent JSON `null`).
+        b.record(synthetic_result("instant", Duration::ZERO, Some(1024)));
+        let path = std::env::temp_dir().join(format!("sprw-bench-inf-{}.json", std::process::id()));
+        match b.write_json(&path, "edge", &[]) {
+            Err(BenchWriteError::NonFinite { case, field }) => {
+                assert_eq!(case, "instant");
+                assert_eq!(field, "gb_per_s");
+            }
+            other => panic!("expected NonFinite, got {other:?}"),
+        }
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn bench_names_escape_and_round_trip_through_the_parser() {
+        let mut b = Bencher::new(0, 1);
+        let name = "weird \"case\"\n\twith \\backslash and ctrl \u{1}";
+        b.record(synthetic_result(name, Duration::from_micros(10), None));
+        let doc = b.to_json("escape", &[("r\"atio\"", 0.5)]).to_string();
+        let back = Json::parse(&doc).unwrap_or_else(|e| panic!("escaped doc must parse: {e}"));
+        let results = back.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(results[0].get("name").and_then(Json::as_str), Some(name));
+        assert_eq!(back.get("derived").and_then(|d| d.get("r\"atio\"")).and_then(Json::as_f64), Some(0.5));
+    }
+
+    #[test]
+    fn json_doc_nests_result_arrays_losslessly() {
+        let mut b = Bencher::new(0, 1);
+        b.record(synthetic_result("a", Duration::from_micros(5), Some(64)));
+        b.record(synthetic_result("b", Duration::from_micros(7), None));
+        let doc = b.to_json("nest", &[]).to_string();
+        let back = Json::parse(&doc).unwrap();
+        let results = back.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].get("bytes_per_iter").and_then(Json::as_u64), Some(64));
+        assert!(results[1].get("bytes_per_iter").is_none());
+        // Arrays nest arbitrarily through the same writer/parser pair.
+        let nested = Json::obj().set(
+            "grid",
+            Json::Arr(vec![
+                Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)]),
+                Json::Arr(vec![Json::Str("x".into())]),
+            ]),
+        );
+        let round = Json::parse(&nested.to_string()).unwrap();
+        assert_eq!(round, nested);
     }
 
     #[test]

@@ -1,0 +1,370 @@
+//! Scenario-matrix harness acceptance suite (ISSUE 8).
+//!
+//! Covers, in rough order of cost:
+//! 1. The `smoke` suite's static coverage floor (>= 8 cells, >= 2
+//!    transports, >= 2 region counts, >= 1 fault script).
+//! 2. Typed scenario validation, in the `SpecError`-matrix style of
+//!    `tests/session_api.rs`.
+//! 3. Golden `compare` cases from synthetic OLD/NEW result literals.
+//! 4. Deterministic replay: the whole smoke suite run twice agrees on
+//!    every gated (non-timing) field and every checksum witness.
+//! 5. The end-to-end acceptance criterion: results file round trip,
+//!    self-compare passes, an injected 20% payload regression and a
+//!    flipped witness both fail the gate.
+
+use sparrowrl::bench::scenario::{FaultAxis, ScenarioBlock, SparsityAxis, TransportAxis};
+use sparrowrl::bench::{
+    builtin_suite, compare, run_suite, Better, ResultSet, ScenarioError, Suite,
+    DEFAULT_THRESHOLD_PCT,
+};
+use std::collections::BTreeSet;
+
+// ---------------------------------------------------------------- 1. coverage
+
+#[test]
+fn smoke_suite_meets_the_coverage_floor() {
+    let cells = builtin_suite("smoke").unwrap().expand().unwrap();
+    assert!(cells.len() >= 8, "smoke must cover >= 8 cells, has {}", cells.len());
+    let transports: BTreeSet<_> = cells.iter().map(|c| c.transport).collect();
+    let regions: BTreeSet<_> = cells.iter().map(|c| c.regions).collect();
+    let faults: BTreeSet<_> = cells.iter().map(|c| c.fault).collect();
+    assert!(transports.len() >= 2, "smoke spans {} transport(s)", transports.len());
+    assert!(regions.len() >= 2, "smoke spans {} region count(s)", regions.len());
+    assert!(faults.iter().any(|f| *f != FaultAxis::None), "smoke has no fault cell");
+    let keys: BTreeSet<_> = cells.iter().map(|c| c.key()).collect();
+    assert_eq!(keys.len(), cells.len(), "scenario keys must be unique");
+}
+
+#[test]
+fn full_suite_expands_and_is_a_superset_in_spirit() {
+    let smoke = builtin_suite("smoke").unwrap().expand().unwrap();
+    let full = builtin_suite("full").unwrap().expand().unwrap();
+    assert!(full.len() > smoke.len());
+    let regions: BTreeSet<_> = full.iter().map(|c| c.regions).collect();
+    assert_eq!(regions, BTreeSet::from([1, 2, 3, 4]));
+    assert!(full.iter().any(|c| c.fault == FaultAxis::Preempt));
+    assert!(full.iter().any(|c| c.model == "syn-m"));
+}
+
+// ---------------------------------------------- 2. typed scenario validation
+
+fn one_block(blocks: Vec<ScenarioBlock>) -> Suite {
+    Suite { name: "case".into(), blocks }
+}
+
+#[test]
+fn illegal_matrices_are_rejected_with_typed_errors() {
+    let d = ScenarioBlock::default;
+    // (block, predicate over the expected typed error)
+    let cases: Vec<(Vec<ScenarioBlock>, Box<dyn Fn(&ScenarioError) -> bool>)> = vec![
+        (
+            vec![ScenarioBlock { models: vec!["gpt-17t".into()], ..d() }],
+            Box::new(|e| matches!(e, ScenarioError::UnknownModel(m) if m == "gpt-17t")),
+        ),
+        (
+            vec![ScenarioBlock { regions: vec![5], ..d() }],
+            Box::new(|e| matches!(e, ScenarioError::RegionsOutOfRange { regions: 5 })),
+        ),
+        (
+            vec![ScenarioBlock { regions: vec![0], ..d() }],
+            Box::new(|e| matches!(e, ScenarioError::RegionsOutOfRange { regions: 0 })),
+        ),
+        (
+            vec![ScenarioBlock { steps: 0, ..d() }],
+            Box::new(|e| matches!(e, ScenarioError::ZeroSteps)),
+        ),
+        (
+            // Sim × elastic: the sim fleet is fixed at topology-build time.
+            vec![ScenarioBlock {
+                transports: vec![TransportAxis::Sim],
+                faults: vec![FaultAxis::Join],
+                ..d()
+            }],
+            Box::new(|e| matches!(e, ScenarioError::SimConflictsWithElastic { .. })),
+        ),
+        (
+            // Crash without a real socket to kill.
+            vec![ScenarioBlock { faults: vec![FaultAxis::Crash], ..d() }],
+            Box::new(
+                |e| matches!(e, ScenarioError::FaultNeedsTcp { fault: FaultAxis::Crash, .. }),
+            ),
+        ),
+        (
+            vec![ScenarioBlock {
+                regions: vec![2],
+                transports: vec![TransportAxis::Tcp],
+                ..d()
+            }],
+            Box::new(|e| matches!(e, ScenarioError::WanConflictsWithTcp { .. })),
+        ),
+        (
+            vec![ScenarioBlock { regions: vec![2], faults: vec![FaultAxis::Join], ..d() }],
+            Box::new(|e| matches!(e, ScenarioError::WanConflictsWithFault { .. })),
+        ),
+        (
+            // Fault pins land at steps-2, so 2 steps cannot host one.
+            vec![ScenarioBlock { faults: vec![FaultAxis::Drain], steps: 2, ..d() }],
+            Box::new(|e| matches!(e, ScenarioError::TooFewStepsForFault { steps: 2, .. })),
+        ),
+        (vec![], Box::new(|e| matches!(e, ScenarioError::EmptyMatrix))),
+        (
+            // Two identical blocks collide on every key.
+            vec![d(), d()],
+            Box::new(|e| matches!(e, ScenarioError::DuplicateKey(_))),
+        ),
+    ];
+    for (i, (blocks, want)) in cases.into_iter().enumerate() {
+        match one_block(blocks).expand() {
+            Err(got) => assert!(want(&got), "case {i}: wrong error {got:?}"),
+            Ok(cells) => panic!("case {i}: expanded to {} cell(s) instead of failing", cells.len()),
+        }
+    }
+}
+
+#[test]
+fn suite_files_reject_unknown_axis_values_and_bad_json() {
+    assert!(matches!(Suite::from_json("{"), Err(ScenarioError::Parse(_))));
+    assert!(matches!(
+        Suite::from_json(r#"{"blocks":[]}"#),
+        Err(ScenarioError::Parse(_)) // missing "suite"
+    ));
+    let bad_transport =
+        r#"{"suite":"x","blocks":[{"transports":["carrier-pigeon"]}]}"#;
+    assert!(matches!(
+        Suite::from_json(bad_transport),
+        Err(ScenarioError::UnknownTransport(t)) if t == "carrier-pigeon"
+    ));
+    let bad_fault = r#"{"suite":"x","blocks":[{"faults":["meteor"]}]}"#;
+    assert!(matches!(
+        Suite::from_json(bad_fault),
+        Err(ScenarioError::UnknownFault(f)) if f == "meteor"
+    ));
+    let bad_sparsity = r#"{"suite":"x","blocks":[{"sparsities":["soggy"]}]}"#;
+    assert!(matches!(
+        Suite::from_json(bad_sparsity),
+        Err(ScenarioError::UnknownSparsity(s)) if s == "soggy"
+    ));
+}
+
+// ------------------------------------------------- 3. golden compare cases
+
+/// Two-cell baseline: one gated Lower metric + witness per cell, plus a
+/// gated Higher metric and an Exact counter on the first.
+fn golden_old() -> ResultSet {
+    ResultSet::parse(
+        r#"{"schema":1,"suite":"golden","placeholder":false,"records":[
+            {"key":"a/r1/inproc/none/default/seed0","axes":{"transport":"inproc"},
+             "metrics":{"payload_bytes":{"v":1000,"better":"lower","gated":true},
+                        "gen_tokens":{"v":480,"better":"exact","gated":true},
+                        "tokens_per_s":{"v":200,"better":"higher","gated":true},
+                        "makespan_s":{"v":1.5,"better":"lower","gated":false}},
+             "witness":"aaaa"},
+            {"key":"b/r2/sim/none/default/seed0","axes":{"transport":"sim"},
+             "metrics":{"payload_bytes":{"v":2000,"better":"lower","gated":true}},
+             "witness":"bbbb"}
+        ]}"#,
+    )
+    .unwrap()
+}
+
+fn with_payload(set: &ResultSet, key_prefix: &str, value: f64) -> ResultSet {
+    let mut out = set.clone();
+    for rec in &mut out.records {
+        if rec.key.starts_with(key_prefix) {
+            rec.metrics.get_mut("payload_bytes").unwrap().value = value;
+        }
+    }
+    out
+}
+
+#[test]
+fn golden_regression_beyond_threshold_fails_with_the_metric_named() {
+    let old = golden_old();
+    let new = with_payload(&old, "a/", 1300.0); // +30% > 5%
+    let rep = compare(&old, &new, DEFAULT_THRESHOLD_PCT);
+    assert!(!rep.passed());
+    let rendered = rep.render();
+    assert!(rendered.contains("REGRESSED"), "{rendered}");
+    assert!(rendered.contains("payload_bytes"), "{rendered}");
+    assert!(rendered.contains("FAIL"), "{rendered}");
+}
+
+#[test]
+fn golden_improvement_and_within_noise_both_pass() {
+    let old = golden_old();
+    let improved = with_payload(&old, "a/", 600.0); // -40%
+    let rep = compare(&old, &improved, DEFAULT_THRESHOLD_PCT);
+    assert!(rep.passed(), "{}", rep.render());
+    assert!(rep.render().contains("improved"), "{}", rep.render());
+    let noise = with_payload(&old, "a/", 1030.0); // +3% < 5%
+    let rep = compare(&old, &noise, DEFAULT_THRESHOLD_PCT);
+    assert!(rep.passed());
+    assert!(!rep.render().contains("REGRESSED"));
+}
+
+#[test]
+fn golden_higher_is_better_metric_regresses_downward() {
+    let old = golden_old();
+    let mut new = old.clone();
+    new.records[0].metrics.get_mut("tokens_per_s").unwrap().value = 100.0; // -50%
+    assert!(!compare(&old, &new, DEFAULT_THRESHOLD_PCT).passed());
+    new.records[0].metrics.get_mut("tokens_per_s").unwrap().value = 400.0; // +100%
+    assert!(compare(&old, &new, DEFAULT_THRESHOLD_PCT).passed());
+}
+
+#[test]
+fn golden_exact_metric_fails_on_any_drift_and_gauges_never_gate() {
+    let old = golden_old();
+    let mut new = old.clone();
+    new.records[0].metrics.get_mut("gen_tokens").unwrap().value = 481.0;
+    let rep = compare(&old, &new, 1000.0); // threshold is irrelevant for Exact
+    assert!(!rep.passed());
+    assert!(rep.render().contains("gen_tokens"));
+    // An ungated gauge may move arbitrarily.
+    let mut new = old.clone();
+    new.records[0].metrics.get_mut("makespan_s").unwrap().value = 9000.0;
+    assert!(compare(&old, &new, DEFAULT_THRESHOLD_PCT).passed());
+}
+
+#[test]
+fn golden_removed_key_fails_and_added_key_passes() {
+    let old = golden_old();
+    let mut removed = old.clone();
+    removed.records.pop();
+    let rep = compare(&old, &removed, DEFAULT_THRESHOLD_PCT);
+    assert!(!rep.passed());
+    assert!(rep.render().contains("MISSING"), "{}", rep.render());
+    let mut added = old.clone();
+    added.push(
+        sparrowrl::bench::ResultRecord::new("c/r1/tcp/none/default/seed0").gate(
+            "payload_bytes",
+            10.0,
+            Better::Lower,
+        ),
+    );
+    let rep = compare(&old, &added, DEFAULT_THRESHOLD_PCT);
+    assert!(rep.passed(), "{}", rep.render());
+    assert!(rep.render().contains("added"), "{}", rep.render());
+}
+
+#[test]
+fn golden_witness_mismatch_fails_regardless_of_threshold() {
+    let old = golden_old();
+    let mut new = old.clone();
+    new.records[1].witness = Some("flip".into());
+    let rep = compare(&old, &new, 1e9);
+    assert!(!rep.passed());
+    assert!(rep.render().contains("witness"), "{}", rep.render());
+}
+
+#[test]
+fn golden_suite_mismatch_fails_unless_placeholder() {
+    let old = golden_old();
+    let mut new = old.clone();
+    new.suite = "other".into();
+    assert!(!compare(&old, &new, DEFAULT_THRESHOLD_PCT).passed());
+    let mut placeholder = ResultSet::new("smoke");
+    placeholder.placeholder = true;
+    let rep = compare(&placeholder, &golden_old(), DEFAULT_THRESHOLD_PCT);
+    assert!(rep.passed(), "placeholder baseline must pass: {}", rep.render());
+    assert!(rep.render().contains("placeholder"));
+}
+
+// ------------------------------------- 4 + 5. replay determinism + the gate
+
+/// One smoke-suite execution. Expensive (runs every cell through the
+/// Session API), so the replay and acceptance assertions share it.
+fn run_smoke() -> ResultSet {
+    let cells = builtin_suite("smoke").unwrap().expand().unwrap();
+    run_suite("smoke", &cells).expect("smoke suite runs clean")
+}
+
+#[test]
+fn smoke_replay_is_deterministic_and_the_gate_accepts_itself() {
+    let first = run_smoke();
+    let second = run_smoke();
+
+    // -- satellite 1: replay agrees on every non-timing field ------------
+    assert_eq!(first.records.len(), second.records.len());
+    for (a, b) in first.records.iter().zip(&second.records) {
+        assert_eq!(a.key, b.key);
+        assert_eq!(a.witness, b.witness, "{}: checksum witness must replay", a.key);
+        assert!(a.witness.is_some(), "{}: deterministic cell must emit a witness", a.key);
+        for (name, ma) in a.metrics.iter().filter(|(_, m)| m.gated) {
+            let mb = &b.metrics[name];
+            assert_eq!(
+                ma.value.to_bits(),
+                mb.value.to_bits(),
+                "{}: gated metric {name} drifted across replays ({} vs {})",
+                a.key,
+                ma.value,
+                mb.value
+            );
+        }
+    }
+    // Replay-vs-replay through the real gate: timings differ, gate passes.
+    let rep = compare(&first, &second, DEFAULT_THRESHOLD_PCT);
+    assert!(rep.passed(), "{}", rep.render());
+
+    // -- acceptance: emitted file covers the floor and round-trips -------
+    let dir = std::env::temp_dir().join(format!("sprw-bench-harness-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BENCH_smoke.json");
+    first.write(&path).unwrap();
+    let loaded = ResultSet::load(&path).unwrap();
+    assert_eq!(loaded, first, "result file must round-trip bit-exactly");
+    std::fs::remove_dir_all(&dir).ok();
+    assert!(loaded.records.len() >= 8);
+    let transports: BTreeSet<_> =
+        loaded.records.iter().filter_map(|r| r.axes.get("transport").cloned()).collect();
+    let regions: BTreeSet<_> =
+        loaded.records.iter().filter_map(|r| r.axes.get("regions").cloned()).collect();
+    assert!(transports.len() >= 2 && regions.len() >= 2);
+    assert!(loaded.records.iter().any(|r| r.axes.get("fault").map_or(false, |f| f != "none")));
+
+    // Self-compare exits clean (exit code 0 in the CLI).
+    assert!(compare(&loaded, &loaded, DEFAULT_THRESHOLD_PCT).passed());
+
+    // Injected 20% payload regression on one cell -> nonzero exit.
+    let mut worse = loaded.clone();
+    let m = worse.records[0].metrics.get_mut("payload_bytes").unwrap();
+    m.value *= 1.2;
+    let rep = compare(&loaded, &worse, DEFAULT_THRESHOLD_PCT);
+    assert!(!rep.passed(), "a 20% payload regression must fail the gate");
+    assert!(rep.render().contains("payload_bytes"));
+
+    // Flipped checksum witness -> nonzero exit.
+    let mut flipped = loaded.clone();
+    let w = flipped.records[1].witness.as_mut().unwrap();
+    let flipped_char = if w.starts_with('0') { "1" } else { "0" };
+    w.replace_range(0..1, flipped_char);
+    assert!(
+        !compare(&loaded, &flipped, DEFAULT_THRESHOLD_PCT).passed(),
+        "a flipped determinism witness must fail the gate"
+    );
+}
+
+#[test]
+fn sparsity_axis_orders_payload_bytes() {
+    // dense (div 16) must ship more bytes than sparse (div 1024) on the
+    // same cell — the knob the scenario axis turns is real.
+    use sparrowrl::bench::run_scenario;
+    use sparrowrl::bench::Scenario;
+    let cell = |sparsity| Scenario {
+        model: "syn-xs".into(),
+        regions: 1,
+        transport: TransportAxis::InProc,
+        fault: FaultAxis::None,
+        sparsity,
+        seed: 0,
+        steps: 3,
+    };
+    let dense = run_scenario(&cell(SparsityAxis::Dense)).unwrap();
+    let sparse = run_scenario(&cell(SparsityAxis::Sparse)).unwrap();
+    assert!(
+        dense.metrics["payload_bytes"].value > sparse.metrics["payload_bytes"].value,
+        "dense regime must ship more payload ({} vs {})",
+        dense.metrics["payload_bytes"].value,
+        sparse.metrics["payload_bytes"].value
+    );
+}
