@@ -1,0 +1,63 @@
+//! Daemon quickstart — the curl-free CI smoke.
+//!
+//! Spawns `sparrowrld` in-process on an ephemeral port, submits a tiny
+//! deterministic syn-xs run over real loopback HTTP, polls it to
+//! completion, prints the final checksum, and exits 0. Any failure
+//! (submission rejected, run failed, timeout) exits nonzero.
+//!
+//! ```text
+//! cargo run --release --example daemon_quickstart
+//! ```
+
+use sparrowrl::daemon::{http_get, http_post, Daemon, DaemonConfig};
+use sparrowrl::util::json::Json;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let handle = Daemon::spawn(DaemonConfig {
+        addr: "127.0.0.1:0".to_string(),
+        ..DaemonConfig::default()
+    })?;
+    let addr = handle.addr();
+    println!("sparrowrld on http://{addr}");
+
+    let spec = "{\"model\":\"syn-xs\",\"steps\":3,\"sft_steps\":1,\"actors\":2,\
+                \"group_size\":2,\"max_new_tokens\":5,\"seed\":42}";
+    let resp = http_post(addr, "/runs", spec)?;
+    anyhow::ensure!(resp.status == 201, "submission rejected: {} {}", resp.status, resp.body);
+    let id = Json::parse(&resp.body)
+        .map_err(|e| anyhow::anyhow!("bad submit body: {e}"))?
+        .get("id")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("submit body has no id"))?
+        .to_string();
+    println!("submitted run {id}");
+
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let checksum = loop {
+        anyhow::ensure!(Instant::now() < deadline, "run {id} did not finish in 60s");
+        let snap = http_get(addr, &format!("/runs/{id}"))?;
+        anyhow::ensure!(snap.status == 200, "snapshot failed: {}", snap.status);
+        let json = Json::parse(&snap.body).map_err(|e| anyhow::anyhow!("bad snapshot: {e}"))?;
+        match json.get("status").and_then(Json::as_str) {
+            Some("finished") => {
+                break json
+                    .get("final_checksum")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("finished without a checksum"))?
+                    .to_string()
+            }
+            Some("failed") | Some("aborted") => {
+                anyhow::bail!("run {id} ended abnormally: {}", snap.body)
+            }
+            _ => std::thread::sleep(Duration::from_millis(25)),
+        }
+    };
+    println!("run {id} finished; final policy checksum {checksum}");
+
+    let health = http_get(addr, "/healthz")?;
+    anyhow::ensure!(health.status == 200, "daemon unhealthy after the run");
+    handle.shutdown();
+    println!("daemon smoke OK");
+    Ok(())
+}

@@ -1,0 +1,244 @@
+//! Threshold alerting over the live analytics stream.
+//!
+//! Each run carries one [`AlertEngine`] holding the daemon-wide
+//! [`AlertRules`]. The registry drain thread evaluates it after every
+//! folded step; fired alerts land in the run's SSE stream (as `alert`
+//! events) *and* in the daemon-wide list behind `GET /alerts`.
+//!
+//! Threshold rules are **latched**: a run that sits below the overlap
+//! floor for 50 steps produces one alert, not 50 — the alert marks the
+//! transition into the bad regime, the live gauges on `GET /runs/{id}`
+//! tell you whether it is still there. Failover alerts are per-event
+//! (each lost actor is its own incident).
+
+use super::analytics::Analytics;
+use crate::rt::FailReason;
+use crate::util::json::Json;
+use std::collections::BTreeSet;
+
+/// Steps to observe before threshold rules arm — EMAs over the first
+/// step or two are all transient.
+const WARMUP_STEPS: u64 = 2;
+
+/// Daemon-wide alert thresholds (`None` disables a rule). Configured
+/// once at daemon start (`serve --alert-*`); every run is measured
+/// against the same bars.
+#[derive(Clone, Debug, Default)]
+pub struct AlertRules {
+    /// Fire when a run's overlap ratio drops below this floor — the
+    /// bandwidth barrier is showing (sync time no longer hidden).
+    pub overlap_floor: Option<f64>,
+    /// Fire when projected tokens/$ drops below this floor — the run is
+    /// burning commodity-fleet economics.
+    pub tokens_per_dollar_floor: Option<f64>,
+    /// Fire when the smoothed delta payload per step exceeds this many
+    /// bytes — sparsity collapsed, deltas are going dense.
+    pub payload_ceiling_bytes: Option<u64>,
+}
+
+impl AlertRules {
+    pub fn any_enabled(&self) -> bool {
+        self.overlap_floor.is_some()
+            || self.tokens_per_dollar_floor.is_some()
+            || self.payload_ceiling_bytes.is_some()
+    }
+}
+
+/// One fired alert, as stored globally and rendered into SSE frames.
+#[derive(Clone, Debug)]
+pub struct Alert {
+    pub run_id: String,
+    /// Stable rule tag: `overlap_floor`, `tokens_per_dollar_floor`,
+    /// `payload_ceiling`, or `failover`.
+    pub rule: &'static str,
+    pub message: String,
+    /// The run step at which the rule fired.
+    pub step: u64,
+    pub value: f64,
+    pub threshold: f64,
+}
+
+impl Alert {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("run", self.run_id.as_str())
+            .set("rule", self.rule)
+            .set("message", self.message.as_str())
+            .set("step", self.step)
+            .set("value", self.value)
+            .set("threshold", self.threshold)
+    }
+}
+
+/// Per-run evaluator: the rules plus which threshold rules already
+/// latched for this run.
+pub(crate) struct AlertEngine {
+    rules: AlertRules,
+    fired: BTreeSet<&'static str>,
+}
+
+impl AlertEngine {
+    pub(crate) fn new(rules: AlertRules) -> AlertEngine {
+        AlertEngine { rules, fired: BTreeSet::new() }
+    }
+
+    /// Evaluate the threshold rules against the current gauges; returns
+    /// only alerts newly fired by this evaluation.
+    pub(crate) fn evaluate(&mut self, run_id: &str, a: &Analytics) -> Vec<Alert> {
+        let mut out = Vec::new();
+        if a.steps < WARMUP_STEPS {
+            return out;
+        }
+        if let Some(floor) = self.rules.overlap_floor {
+            let v = a.overlap();
+            if v < floor && self.fired.insert("overlap_floor") {
+                out.push(Alert {
+                    run_id: run_id.to_string(),
+                    rule: "overlap_floor",
+                    message: format!(
+                        "overlap ratio {v:.3} fell below the {floor:.3} floor: delta sync is no longer hidden inside rollout"
+                    ),
+                    step: a.steps,
+                    value: v,
+                    threshold: floor,
+                });
+            }
+        }
+        if let Some(floor) = self.rules.tokens_per_dollar_floor {
+            let v = a.tokens_per_dollar();
+            if v < floor && self.fired.insert("tokens_per_dollar_floor") {
+                out.push(Alert {
+                    run_id: run_id.to_string(),
+                    rule: "tokens_per_dollar_floor",
+                    message: format!(
+                        "projected {v:.0} tokens/$ fell below the {floor:.0} floor under the commodity WAN cost model"
+                    ),
+                    step: a.steps,
+                    value: v,
+                    threshold: floor,
+                });
+            }
+        }
+        if let Some(ceiling) = self.rules.payload_ceiling_bytes {
+            let v = a.payload_per_step();
+            if v > ceiling as f64 && self.fired.insert("payload_ceiling") {
+                out.push(Alert {
+                    run_id: run_id.to_string(),
+                    rule: "payload_ceiling",
+                    message: format!(
+                        "delta payload {} per step exceeds the {} ceiling: update sparsity collapsed",
+                        crate::util::fmt_bytes(v as u64),
+                        crate::util::fmt_bytes(ceiling)
+                    ),
+                    step: a.steps,
+                    value: v,
+                    threshold: ceiling as f64,
+                });
+            }
+        }
+        out
+    }
+
+    /// Failovers always alert, once per event (never latched): each is a
+    /// distinct membership incident the operator should see.
+    pub(crate) fn failover(
+        &mut self,
+        run_id: &str,
+        actor: u32,
+        requeued: u64,
+        reason: FailReason,
+        step: u64,
+    ) -> Alert {
+        Alert {
+            run_id: run_id.to_string(),
+            rule: "failover",
+            message: format!(
+                "actor {actor} lost ({reason}); {requeued} leased prompts re-issued to survivors"
+            ),
+            step,
+            value: requeued as f64,
+            threshold: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt::StepLog;
+    use crate::session::Event;
+
+    fn analytics_with_steps(n: u64, rollout_ms: f64) -> Analytics {
+        let mut a = Analytics::new(3, 1);
+        for i in 1..=n {
+            a.on_event(&Event::StepCompleted(StepLog {
+                step: i,
+                loss: 1.0,
+                mean_reward: 0.5,
+                rho: 0.02,
+                payload_bytes: 50_000,
+                dense_bytes: 2_000_000,
+                gen_tokens: 64,
+                extract_ms: 2.0,
+                train_ms: 6.0,
+                rollout_ms,
+                policy_checksum: [0u8; 32],
+            }));
+        }
+        a
+    }
+
+    #[test]
+    fn overlap_floor_fires_once_and_latches() {
+        let rules = AlertRules { overlap_floor: Some(0.9), ..AlertRules::default() };
+        let mut engine = AlertEngine::new(rules);
+        // rollout 3ms vs 8ms sync → overlap 0.375, below the 0.9 floor.
+        let a = analytics_with_steps(3, 3.0);
+        let first = engine.evaluate("r1", &a);
+        assert_eq!(first.len(), 1);
+        assert_eq!(first[0].rule, "overlap_floor");
+        assert_eq!(first[0].run_id, "r1");
+        // Same bad regime on the next step: latched, no repeat.
+        assert!(engine.evaluate("r1", &a).is_empty());
+    }
+
+    #[test]
+    fn threshold_rules_hold_fire_during_warmup() {
+        let rules = AlertRules { overlap_floor: Some(0.9), ..AlertRules::default() };
+        let mut engine = AlertEngine::new(rules);
+        let a = analytics_with_steps(1, 3.0);
+        assert!(engine.evaluate("r1", &a).is_empty());
+    }
+
+    #[test]
+    fn payload_ceiling_fires_when_deltas_go_dense() {
+        let rules =
+            AlertRules { payload_ceiling_bytes: Some(10_000), ..AlertRules::default() };
+        let mut engine = AlertEngine::new(rules);
+        let a = analytics_with_steps(3, 12.0); // 50 KB/step > 10 KB ceiling
+        let fired = engine.evaluate("r1", &a);
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].rule, "payload_ceiling");
+        assert!(fired[0].message.contains("ceiling"));
+    }
+
+    #[test]
+    fn quiet_run_with_no_rules_never_alerts() {
+        let mut engine = AlertEngine::new(AlertRules::default());
+        let a = analytics_with_steps(5, 3.0);
+        assert!(engine.evaluate("r1", &a).is_empty());
+        assert!(!AlertRules::default().any_enabled());
+    }
+
+    #[test]
+    fn failover_alerts_are_per_event() {
+        let mut engine = AlertEngine::new(AlertRules::default());
+        let a1 = engine.failover("r2", 1, 4, crate::rt::FailReason::Crash, 3);
+        let a2 = engine.failover("r2", 2, 0, crate::rt::FailReason::Stall, 4);
+        assert_eq!(a1.rule, "failover");
+        assert!(a1.message.contains("crash"));
+        assert!(a2.message.contains("stall"));
+        let j = a1.to_json();
+        assert_eq!(j.get("rule").and_then(|v| v.as_str()), Some("failover"));
+    }
+}

@@ -1,0 +1,246 @@
+//! Per-run live analytics: the registry's drain thread folds every
+//! [`Event`] through one [`Analytics`] so `GET /runs/{id}` can answer
+//! with current overlap / payload / throughput / economics figures
+//! without touching the session thread.
+//!
+//! All smoothed gauges are [`util::Ema`]s; the dollar figures reuse the
+//! exact [`cost`] model the CLI's `exp wan` table is built from, so a
+//! daemon snapshot and the paper-table tooling can never disagree about
+//! what a byte of egress costs.
+
+use crate::cost;
+use crate::metrics::SpanKind;
+use crate::session::Event;
+use crate::util::json::Json;
+use crate::util::Ema;
+use std::time::Instant;
+
+/// EMA smoothing for the per-step gauges (≈ last three steps dominate).
+const BETA: f64 = 0.7;
+
+/// Steady-state analytics for one run, updated event-by-event.
+pub struct Analytics {
+    started: Instant,
+    last_step_at: Option<Instant>,
+    /// RL steps folded so far (not the same as the step counter inside a
+    /// resumed run — this counts what *this* daemon observed).
+    pub steps: u64,
+    /// Last policy version the trainer committed.
+    pub last_version: u64,
+    total_payload: u64,
+    total_dense: u64,
+    total_tokens: u64,
+    failovers: u64,
+    payload_ema: Ema,
+    step_s_ema: Ema,
+    rho_ema: Ema,
+    overlap_ema: Ema,
+    n_actors: usize,
+    regions: usize,
+    /// Authoritative figures once the run finished (from the
+    /// `RunReport`'s timeline); they replace the live proxies.
+    final_overlap: Option<f64>,
+    final_wall_s: Option<f64>,
+}
+
+impl Analytics {
+    pub fn new(n_actors: usize, regions: usize) -> Analytics {
+        Analytics {
+            started: Instant::now(),
+            last_step_at: None,
+            steps: 0,
+            last_version: 0,
+            total_payload: 0,
+            total_dense: 0,
+            total_tokens: 0,
+            failovers: 0,
+            payload_ema: Ema::new(BETA),
+            step_s_ema: Ema::new(BETA),
+            rho_ema: Ema::new(BETA),
+            overlap_ema: Ema::new(BETA),
+            n_actors: n_actors.max(1),
+            regions: regions.max(1),
+            final_overlap: None,
+            final_wall_s: None,
+        }
+    }
+
+    /// Fold one session event (called from the registry drain thread,
+    /// under the run's log lock).
+    pub fn on_event(&mut self, ev: &Event) {
+        match ev {
+            Event::StepCompleted(log) => {
+                let now = Instant::now();
+                if let Some(prev) = self.last_step_at {
+                    self.step_s_ema.observe(now.duration_since(prev).as_secs_f64());
+                }
+                self.last_step_at = Some(now);
+                self.steps += 1;
+                self.total_payload += log.payload_bytes;
+                self.total_dense += log.dense_bytes;
+                self.total_tokens += log.gen_tokens;
+                self.payload_ema.observe(log.payload_bytes as f64);
+                self.rho_ema.observe(log.rho);
+                // Live overlap proxy: the trainer-side sync work this
+                // step (train + extract) counts as hidden up to the
+                // concurrent rollout window — the same definition
+                // `Timeline::overlap_ratio` applies to the real spans,
+                // evaluated per step so it is available mid-run.
+                let sync_ms = log.train_ms + log.extract_ms;
+                if sync_ms > 0.0 {
+                    self.overlap_ema.observe((log.rollout_ms.min(sync_ms)) / sync_ms);
+                }
+            }
+            Event::Committed { version, .. } => self.last_version = *version,
+            Event::Failover { .. } => self.failovers += 1,
+            Event::Finished(report) => {
+                self.final_overlap = Some(
+                    report
+                        .timeline
+                        .overlap_ratio("trainer", &[SpanKind::Train, SpanKind::Extract]),
+                );
+                self.final_wall_s = Some(report.wall_s);
+            }
+            _ => {}
+        }
+    }
+
+    /// Overlap ratio in [0, 1]: the timeline's authoritative figure once
+    /// finished, the per-step EMA proxy while live.
+    pub fn overlap(&self) -> f64 {
+        self.final_overlap.unwrap_or_else(|| self.overlap_ema.get_or(1.0))
+    }
+
+    /// Smoothed delta payload per RL step, bytes.
+    pub fn payload_per_step(&self) -> f64 {
+        self.payload_ema.get_or(0.0)
+    }
+
+    /// Smoothed delta wire rate, bits per second of wall time.
+    pub fn delta_bps(&self) -> f64 {
+        let step_s = self.step_s_ema.get_or(0.0);
+        if step_s <= 0.0 {
+            return 0.0;
+        }
+        self.payload_ema.get_or(0.0) * 8.0 / step_s
+    }
+
+    /// Generated-token throughput over the whole observation window.
+    pub fn tokens_per_s(&self) -> f64 {
+        let wall = self.final_wall_s.unwrap_or_else(|| self.started.elapsed().as_secs_f64());
+        if wall <= 0.0 {
+            return 0.0;
+        }
+        self.total_tokens as f64 / wall
+    }
+
+    /// Tokens per dollar under the commodity WAN cost model, charging
+    /// GPU-hours plus one delta copy of egress per region per step —
+    /// identical accounting to `cost::Deployment` in the `exp wan` table.
+    pub fn tokens_per_dollar(&self) -> f64 {
+        let dep = cost::wan_deployment(self.regions, self.n_actors.div_ceil(self.regions));
+        let egress_per_step = (self.payload_ema.get_or(0.0) * self.regions as f64) as u64;
+        let step_s = self.step_s_ema.get_or(1.0).max(1e-6);
+        dep.tokens_per_dollar_with_egress(self.tokens_per_s(), egress_per_step, step_s)
+    }
+
+    /// The JSON gauge block embedded in `GET /runs/{id}` responses.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("steps", self.steps)
+            .set("last_version", self.last_version)
+            .set("overlap", finite(self.overlap()))
+            .set("payload_per_step_bytes", finite(self.payload_per_step()))
+            .set("delta_bps", finite(self.delta_bps()))
+            .set("rho", finite(self.rho_ema.get_or(0.0)))
+            .set("step_s", finite(self.step_s_ema.get_or(0.0)))
+            .set("tokens_per_s", finite(self.tokens_per_s()))
+            .set("tokens_per_dollar", finite(self.tokens_per_dollar()))
+            .set("total_payload_bytes", self.total_payload)
+            .set("total_dense_bytes", self.total_dense)
+            .set("total_gen_tokens", self.total_tokens)
+            .set("failovers", self.failovers)
+    }
+}
+
+/// The JSON layer has no NaN/Inf; clamp pathological gauges to 0.
+fn finite(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt::StepLog;
+
+    fn step(step: u64, payload: u64, tokens: u64) -> Event {
+        Event::StepCompleted(StepLog {
+            step,
+            loss: 1.0,
+            mean_reward: 0.5,
+            rho: 0.02,
+            payload_bytes: payload,
+            dense_bytes: payload * 40,
+            gen_tokens: tokens,
+            extract_ms: 2.0,
+            train_ms: 6.0,
+            rollout_ms: 12.0,
+            policy_checksum: [0u8; 32],
+        })
+    }
+
+    #[test]
+    fn folds_steps_into_finite_gauges() {
+        let mut a = Analytics::new(3, 1);
+        for i in 1..=4 {
+            a.on_event(&step(i, 10_000, 64));
+            a.on_event(&Event::Committed { version: i, checksum: [0u8; 32] });
+        }
+        assert_eq!(a.steps, 4);
+        assert_eq!(a.last_version, 4);
+        // rollout (12ms) fully covers sync (8ms) → proxy saturates at 1.
+        assert!((a.overlap() - 1.0).abs() < 1e-9, "overlap {}", a.overlap());
+        assert!((a.payload_per_step() - 10_000.0).abs() < 1.0);
+        assert!(a.rho_ema.get_or(0.0) > 0.0);
+        assert!(a.tokens_per_dollar().is_finite());
+    }
+
+    #[test]
+    fn overlap_proxy_reflects_exposed_sync_time() {
+        let mut a = Analytics::new(3, 1);
+        // rollout window (3ms) hides only 3 of 8 sync ms.
+        a.on_event(&Event::StepCompleted(StepLog {
+            rollout_ms: 3.0,
+            ..match step(1, 1_000, 8) {
+                Event::StepCompleted(l) => l,
+                _ => unreachable!(),
+            }
+        }));
+        assert!((a.overlap() - 3.0 / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_snapshot_has_the_gauge_keys() {
+        let mut a = Analytics::new(2, 2);
+        a.on_event(&step(1, 5_000, 32));
+        let j = a.to_json();
+        for key in [
+            "steps",
+            "overlap",
+            "payload_per_step_bytes",
+            "delta_bps",
+            "tokens_per_s",
+            "tokens_per_dollar",
+            "total_payload_bytes",
+        ] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        // Round-trips through the shared JSON writer/parser.
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("steps").and_then(Json::as_u64), Some(1));
+    }
+}

@@ -1,0 +1,493 @@
+//! Minimal HTTP/1.1 framing over `std::net` — the daemon's wire layer
+//! and its test client, with zero dependencies.
+//!
+//! Server side: [`read_request`] parses one request with the same
+//! hostile-input rules as `rt::net` — every length is validated against
+//! hard caps *before* any allocation ([`MAX_HEAD_BYTES`],
+//! [`MAX_BODY_BYTES`]), parse failures are typed [`HttpError`]s mapped
+//! to 4xx responses (never panics, never unbounded buffering), and the
+//! caller is expected to arm socket read timeouts so a stalled peer
+//! cannot wedge a connection thread. One request per connection
+//! (`Connection: close`) keeps the state machine trivial.
+//!
+//! Client side: [`http_get`] / [`http_post`] and the [`SseClient`]
+//! server-sent-events reader are the "curl-free" helpers the loopback
+//! test suite and the CI smoke drive the daemon with.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::fmt;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// Cap on the request line + headers. A control-plane request head is a
+/// few hundred bytes; a peer streaming an unterminated head is cut off
+/// here instead of growing the buffer forever.
+pub const MAX_HEAD_BYTES: usize = 16 << 10;
+
+/// Cap on a request body (a `RunSpec` JSON is well under 1 KiB). The
+/// `Content-Length` value is checked against this *before* the body
+/// buffer is allocated — a hostile length cannot drive a huge reserve.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// Server-side socket read timeout: a peer that stops mid-request is
+/// dropped instead of pinning a connection thread.
+pub const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// One parsed request. `path` is the target without the query string
+/// (`query` keeps it, undecoded); `body` is fully read.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: Option<String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn body_str(&self) -> Result<&str, HttpError> {
+        std::str::from_utf8(&self.body)
+            .map_err(|_| HttpError::BadRequest("body is not valid UTF-8".into()))
+    }
+}
+
+/// Typed request-parse failure, mapped to a 4xx by the server loop.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Malformed request line / headers / body framing → 400.
+    BadRequest(String),
+    /// Head grew past [`MAX_HEAD_BYTES`] → 431.
+    HeadTooLarge,
+    /// Declared `Content-Length` past [`MAX_BODY_BYTES`] → 413.
+    BodyTooLarge(usize),
+    /// Socket error or timeout mid-request: nothing to answer.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for HttpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HttpError::BadRequest(m) => write!(f, "bad request: {m}"),
+            HttpError::HeadTooLarge => {
+                write!(f, "request head exceeds {MAX_HEAD_BYTES} bytes")
+            }
+            HttpError::BodyTooLarge(n) => {
+                write!(f, "request body of {n} bytes exceeds {MAX_BODY_BYTES}")
+            }
+            HttpError::Io(e) => write!(f, "socket error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+/// Read and parse one HTTP/1.1 request. Length caps are enforced before
+/// allocation; the stream should already carry a read timeout.
+pub fn read_request<R: Read>(stream: &mut R) -> Result<Request, HttpError> {
+    // Accumulate the head in bounded chunks, scanning for CRLFCRLF.
+    // Bytes past the terminator (the body prefix) stay in `buf`.
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() >= MAX_HEAD_BYTES {
+            return Err(HttpError::HeadTooLarge);
+        }
+        let mut chunk = [0u8; 1024];
+        let n = stream.read(&mut chunk).map_err(HttpError::Io)?;
+        if n == 0 {
+            return Err(HttpError::BadRequest("connection closed mid-head".into()));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| HttpError::BadRequest("head is not valid UTF-8".into()))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+    {
+        (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => (m, t, v),
+        _ => {
+            return Err(HttpError::BadRequest(format!(
+                "malformed request line {request_line:?}"
+            )))
+        }
+    };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(HttpError::BadRequest(format!("unsupported version {version:?}")));
+    }
+    let mut content_length: usize = 0;
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::BadRequest(format!("malformed header {line:?}")));
+        };
+        if name.trim().eq_ignore_ascii_case("content-length") {
+            content_length = value
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| HttpError::BadRequest(format!("bad content-length {value:?}")))?;
+        }
+    }
+    // Validate the declared length against the cap BEFORE allocating —
+    // the same count-vs-allocation rule as `rt::net::Msg` decoding.
+    if content_length > MAX_BODY_BYTES {
+        return Err(HttpError::BodyTooLarge(content_length));
+    }
+    let mut body = buf[head_end + 4..].to_vec();
+    if body.len() > content_length {
+        return Err(HttpError::BadRequest("body longer than content-length".into()));
+    }
+    let already = body.len();
+    body.resize(content_length, 0);
+    stream.read_exact(&mut body[already..]).map_err(HttpError::Io)?;
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target.to_string(), None),
+    };
+    Ok(Request { method: method.to_string(), path, query, body })
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// One response; [`write_response`] frames it with `Connection: close`.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: impl Into<String>) -> Response {
+        Response { status, content_type: "application/json", body: body.into().into_bytes() }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response { status, content_type: "text/plain", body: body.into().into_bytes() }
+    }
+}
+
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+pub fn write_response<W: Write>(w: &mut W, r: &Response) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        r.status,
+        reason(r.status),
+        r.content_type,
+        r.body.len()
+    )?;
+    w.write_all(&r.body)?;
+    w.flush()
+}
+
+/// Begin a server-sent-event response; the caller then writes
+/// `event:`/`data:`/`id:` frames until the stream ends.
+pub fn write_sse_head<W: Write>(w: &mut W) -> std::io::Result<()> {
+    w.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n",
+    )?;
+    w.flush()
+}
+
+// ---------------------------------------------------------------------
+// Client helpers (tests, examples, CI smoke — no curl required)
+// ---------------------------------------------------------------------
+
+/// A parsed client-side response.
+#[derive(Clone, Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub content_type: String,
+    pub body: String,
+}
+
+fn client_request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Result<HttpResponse> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+    stream.set_nodelay(true)?;
+    let body = body.unwrap_or("");
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    read_client_response(&mut BufReader::new(stream))
+}
+
+fn read_client_response<R: BufRead>(r: &mut R) -> Result<HttpResponse> {
+    let mut status_line = String::new();
+    r.read_line(&mut status_line).context("read status line")?;
+    let status: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("malformed status line {status_line:?}"))?;
+    let mut content_type = String::new();
+    let mut content_length: Option<usize> = None;
+    loop {
+        let mut line = String::new();
+        r.read_line(&mut line).context("read header")?;
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-type") {
+                content_type = value.trim().to_string();
+            } else if name.eq_ignore_ascii_case("content-length") {
+                content_length = Some(value.trim().parse().context("bad content-length")?);
+            }
+        }
+    }
+    let mut body = Vec::new();
+    match content_length {
+        Some(n) => {
+            if n > MAX_BODY_BYTES {
+                bail!("response body of {n} bytes exceeds the client cap");
+            }
+            body.resize(n, 0);
+            r.read_exact(&mut body).context("read body")?;
+        }
+        None => {
+            r.read_to_end(&mut body).context("read body to close")?;
+        }
+    }
+    Ok(HttpResponse {
+        status,
+        content_type,
+        body: String::from_utf8(body).context("response body not UTF-8")?,
+    })
+}
+
+/// Blocking GET against a daemon.
+pub fn http_get(addr: SocketAddr, path: &str) -> Result<HttpResponse> {
+    client_request(addr, "GET", path, None)
+}
+
+/// Blocking POST with a JSON (or empty) body.
+pub fn http_post(addr: SocketAddr, path: &str, body: &str) -> Result<HttpResponse> {
+    client_request(addr, "POST", path, Some(body))
+}
+
+/// One server-sent event as the client sees it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SseEvent {
+    pub event: String,
+    pub data: String,
+    pub id: Option<u64>,
+}
+
+/// Incremental SSE reader over a live daemon connection.
+pub struct SseClient {
+    reader: BufReader<TcpStream>,
+}
+
+impl SseClient {
+    /// GET `path` and check the stream handshake (200 + event-stream).
+    pub fn connect(addr: SocketAddr, path: &str) -> Result<SseClient> {
+        let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+        stream.set_nodelay(true)?;
+        write!(stream, "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")?;
+        stream.flush()?;
+        let mut reader = BufReader::new(stream);
+        let mut status_line = String::new();
+        reader.read_line(&mut status_line)?;
+        if !status_line.contains("200") {
+            bail!("SSE handshake failed: {}", status_line.trim());
+        }
+        let mut saw_event_stream = false;
+        loop {
+            let mut line = String::new();
+            reader.read_line(&mut line)?;
+            let line = line.trim_end();
+            if line.is_empty() {
+                break;
+            }
+            if line.to_ascii_lowercase().starts_with("content-type")
+                && line.contains("text/event-stream")
+            {
+                saw_event_stream = true;
+            }
+        }
+        if !saw_event_stream {
+            bail!("SSE handshake: response is not text/event-stream");
+        }
+        Ok(SseClient { reader })
+    }
+
+    /// The next event, or `None` once the server closed the stream.
+    /// Comment lines (`: ...`) are skipped; multiple `data:` lines join
+    /// with newlines per the SSE spec.
+    pub fn next_event(&mut self) -> Result<Option<SseEvent>> {
+        let mut event = String::new();
+        let mut data: Vec<String> = Vec::new();
+        let mut id = None;
+        loop {
+            let mut line = String::new();
+            let n = self.reader.read_line(&mut line).context("read SSE line")?;
+            if n == 0 {
+                return Ok(None); // clean end of stream
+            }
+            let line = line.trim_end_matches(['\r', '\n']);
+            if line.is_empty() {
+                if event.is_empty() && data.is_empty() {
+                    continue; // stray separator
+                }
+                return Ok(Some(SseEvent {
+                    event: if event.is_empty() { "message".into() } else { event },
+                    data: data.join("\n"),
+                    id,
+                }));
+            }
+            if let Some(rest) = line.strip_prefix("event:") {
+                event = rest.trim().to_string();
+            } else if let Some(rest) = line.strip_prefix("data:") {
+                data.push(rest.trim_start().to_string());
+            } else if let Some(rest) = line.strip_prefix("id:") {
+                id = rest.trim().parse::<u64>().ok();
+            }
+            // Lines starting with ':' are comments; anything else is
+            // ignored per the SSE spec.
+        }
+    }
+
+    /// Drain until an event with name `wanted` arrives; errors if the
+    /// stream ends first. `seen` collects everything along the way.
+    pub fn wait_for(&mut self, wanted: &str, seen: &mut Vec<SseEvent>) -> Result<SseEvent> {
+        while let Some(ev) = self.next_event()? {
+            seen.push(ev.clone());
+            if ev.event == wanted {
+                return Ok(ev);
+            }
+        }
+        bail!("SSE stream ended before an {wanted:?} event")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<Request, HttpError> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()))
+    }
+
+    #[test]
+    fn parses_request_with_body_and_query() {
+        let req = parse(
+            "POST /runs?verbose=1 HTTP/1.1\r\nHost: x\r\nContent-Length: 11\r\n\r\n{\"steps\":3}",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/runs");
+        assert_eq!(req.query.as_deref(), Some("verbose=1"));
+        assert_eq!(req.body_str().unwrap(), "{\"steps\":3}");
+    }
+
+    #[test]
+    fn parses_bodyless_get() {
+        let req = parse("GET /runs HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_request_lines() {
+        for raw in [
+            "\r\n\r\n",
+            "GET\r\n\r\n",
+            "GET /x\r\n\r\n",
+            "GET /x HTTP/1.1 extra\r\n\r\n",
+            "GET /x SPDY/99\r\n\r\n",
+        ] {
+            assert!(matches!(parse(raw), Err(HttpError::BadRequest(_))), "{raw:?}");
+        }
+    }
+
+    #[test]
+    fn hostile_content_length_rejected_before_allocation() {
+        // Claims 4 GiB; the typed error must come from the cap check,
+        // not from an attempted allocation or a read timeout.
+        let raw = format!(
+            "POST /runs HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            4usize << 30
+        );
+        assert!(matches!(parse(&raw), Err(HttpError::BodyTooLarge(_))));
+        // Non-numeric and negative lengths are malformed, not defaulted.
+        assert!(matches!(
+            parse("POST /runs HTTP/1.1\r\nContent-Length: nope\r\n\r\n"),
+            Err(HttpError::BadRequest(_))
+        ));
+        assert!(matches!(
+            parse("POST /runs HTTP/1.1\r\nContent-Length: -5\r\n\r\n"),
+            Err(HttpError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn unterminated_head_is_cut_at_the_cap() {
+        // A head that never sends CRLFCRLF stops growing at MAX_HEAD_BYTES.
+        let mut raw = String::from("GET / HTTP/1.1\r\n");
+        while raw.len() <= MAX_HEAD_BYTES {
+            raw.push_str("X-Pad: aaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaa\r\n");
+        }
+        assert!(matches!(parse(&raw), Err(HttpError::HeadTooLarge)));
+    }
+
+    #[test]
+    fn truncated_body_errors_instead_of_hanging() {
+        let raw = "POST /runs HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort";
+        assert!(matches!(parse(raw), Err(HttpError::Io(_))));
+    }
+
+    #[test]
+    fn response_frames_with_length_and_close() {
+        let mut out = Vec::new();
+        write_response(&mut out, &Response::json(201, "{\"id\":\"r1\"}")).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 201 Created\r\n"), "{s}");
+        assert!(s.contains("Content-Length: 11\r\n"));
+        assert!(s.contains("Connection: close\r\n"));
+        assert!(s.ends_with("{\"id\":\"r1\"}"));
+    }
+
+    #[test]
+    fn client_parses_response_with_content_length() {
+        let raw = "HTTP/1.1 422 Unprocessable Entity\r\nContent-Type: application/json\r\nContent-Length: 2\r\n\r\n{}";
+        let resp = read_client_response(&mut Cursor::new(raw.as_bytes())).unwrap();
+        assert_eq!(resp.status, 422);
+        assert_eq!(resp.content_type, "application/json");
+        assert_eq!(resp.body, "{}");
+    }
+}

@@ -1,0 +1,57 @@
+//! `sparrowrld`: the multi-session control-plane daemon.
+//!
+//! One long-running process hosts **many** concurrent RL training
+//! sessions over one shared synthetic actor pool, exposing a small
+//! HTTP/1.1 + JSON surface (hand-rolled over `std::net` — zero new
+//! dependencies, same hostile-input discipline as `rt::net`):
+//!
+//! * `POST /runs` — submit a run spec (JSON); illegal specs come back
+//!   as 422s carrying the *typed* [`SpecError`](crate::session::SpecError)
+//!   variant name.
+//! * `GET /runs`, `GET /runs/{id}` — table rows / full snapshot with
+//!   live analytics (overlap, payload/step, delta bps, tokens/$ under
+//!   the [`cost`](crate::cost) model).
+//! * `POST /runs/{id}/abort` — cooperative abort, idempotent.
+//! * `GET /runs/{id}/events` — the session's typed [`Event`]
+//!   (crate::session::Event) stream as server-sent events: full replay
+//!   from the bounded frame log, then a live tail until terminal.
+//! * `GET /alerts` — daemon-wide threshold alerts ([`AlertRules`]).
+//!
+//! Cross-session arbitration: a submitted run declares its actor need;
+//! the FIFO scheduler in [`state`] starts it only when the shared pool
+//! has the slots and the session cap has room — submissions past
+//! capacity **queue, never oversubscribe** (see the module docs in
+//! [`state`] and docs/ARCHITECTURE.md §2f).
+//!
+//! In-process embedding (what the loopback tests and the CI smoke do):
+//!
+//! ```no_run
+//! use sparrowrl::daemon::{Daemon, DaemonConfig, http_get, http_post};
+//!
+//! let handle = Daemon::spawn(DaemonConfig {
+//!     addr: "127.0.0.1:0".into(), // ephemeral port
+//!     ..DaemonConfig::default()
+//! })
+//! .unwrap();
+//! let addr = handle.addr();
+//! let resp = http_post(addr, "/runs", "{\"steps\": 3, \"actors\": 2}").unwrap();
+//! assert_eq!(resp.status, 201);
+//! let list = http_get(addr, "/runs").unwrap();
+//! assert_eq!(list.status, 200);
+//! handle.shutdown();
+//! ```
+
+pub mod alerts;
+pub mod analytics;
+pub mod http;
+pub mod registry;
+pub mod routes;
+pub mod server;
+pub mod state;
+
+pub use alerts::{Alert, AlertRules};
+pub use analytics::Analytics;
+pub use http::{http_get, http_post, HttpResponse, SseClient, SseEvent};
+pub use registry::{RunEntry, RunMeta, RunPhase, SseFrame};
+pub use server::{Daemon, DaemonHandle};
+pub use state::{DaemonConfig, DaemonState, SubmitError};

@@ -1,0 +1,556 @@
+//! The daemon's run table: one [`RunEntry`] per submitted run, each
+//! owning its [`Session`] through a dedicated **drain thread**.
+//!
+//! Threading model (see docs/ARCHITECTURE.md §2f):
+//!
+//! * The session runtime thread emits [`Event`]s into its channel, as
+//!   always — the daemon never touches it directly.
+//! * One drain thread per running session loops `session.recv()` and
+//!   folds every event, under the run's log lock, into three sinks at
+//!   once: the bounded SSE frame log (what `GET /runs/{id}/events`
+//!   replays and tails), the live [`Analytics`], and the [`AlertEngine`].
+//! * HTTP connection threads only ever *read* the log under the same
+//!   lock (snapshots) or wait on its condvar (SSE tails). They never
+//!   block on the session.
+//!
+//! Lock order: the daemon-wide state lock may be taken **before** a run
+//! log lock, never after. The drain thread therefore collects global
+//! alerts and the terminal notification while holding the run lock, but
+//! delivers them to [`DaemonState`] only after releasing it.
+
+use super::alerts::{Alert, AlertEngine, AlertRules};
+use super::analytics::Analytics;
+use crate::bench::scenario::{bench_model, BenchModel};
+use crate::rt::SyntheticCompute;
+use crate::session::{Event, RunPlan, Session, SessionProbe, ABORT_MSG};
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Emulated compute latencies for daemon-hosted synthetic runs — the
+/// same figures the bench harness pins (`bench::runner`), so per-step
+/// wall time and overlap gauges are comparable across surfaces.
+pub const TRAIN_DELAY: Duration = Duration::from_millis(4);
+pub const GEN_DELAY: Duration = Duration::from_millis(3);
+
+/// Cap on retained SSE frames per run. A tail that falls further behind
+/// than this sees a `gap` comment and resumes from the oldest retained
+/// frame — bounded memory beats unbounded replay.
+pub const MAX_FRAMES: usize = 65_536;
+
+/// Where a run is in the daemon's lifecycle. `Queued` precedes any
+/// session existing (admission control held it back); the terminal
+/// states mirror [`SessionStatus`](crate::session::SessionStatus).
+#[derive(Clone, Debug, PartialEq)]
+pub enum RunPhase {
+    Queued,
+    Running,
+    Finished,
+    Aborted,
+    Failed(String),
+}
+
+impl RunPhase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RunPhase::Queued => "queued",
+            RunPhase::Running => "running",
+            RunPhase::Finished => "finished",
+            RunPhase::Aborted => "aborted",
+            RunPhase::Failed(_) => "failed",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, RunPhase::Finished | RunPhase::Aborted | RunPhase::Failed(_))
+    }
+}
+
+/// Immutable submission facts (safe to read without the log lock).
+#[derive(Clone, Debug)]
+pub struct RunMeta {
+    pub id: String,
+    pub model: String,
+    pub steps: u64,
+    pub seed: u64,
+    pub n_actors: usize,
+    pub regions: usize,
+    pub transport: String,
+    pub mode: &'static str,
+}
+
+/// One rendered SSE frame: `id: seq` / `event: <name>` / `data: <json>`.
+#[derive(Clone, Debug)]
+pub struct SseFrame {
+    pub seq: u64,
+    pub event: &'static str,
+    pub data: String,
+}
+
+/// Mutable per-run state, guarded by [`RunShared::log`].
+pub(crate) struct RunLog {
+    pub phase: RunPhase,
+    /// The plan a queued run will start from; taken by the scheduler.
+    pub pending: Option<(RunPlan, BenchModel)>,
+    /// Probe into the live session (None while queued / after terminal
+    /// bookkeeping no longer needs it).
+    pub probe: Option<SessionProbe>,
+    pub analytics: Analytics,
+    pub alert_engine: AlertEngine,
+    /// This run's fired alerts (the global list lives in `DaemonState`).
+    pub alerts: Vec<Alert>,
+    /// Hex SHA-256 of the final committed policy, once finished.
+    pub final_checksum: Option<String>,
+    frames: VecDeque<SseFrame>,
+    next_seq: u64,
+}
+
+impl RunLog {
+    fn push_frame(&mut self, event: &'static str, data: Json) {
+        if self.frames.len() >= MAX_FRAMES {
+            self.frames.pop_front();
+        }
+        self.frames.push_back(SseFrame {
+            seq: self.next_seq,
+            event,
+            data: data.to_string(),
+        });
+        self.next_seq += 1;
+    }
+
+    /// Frames with `seq >= from`; `gap` reports whether older frames
+    /// were already evicted (the subscriber missed some).
+    pub(crate) fn frames_from(&self, from: u64) -> (Vec<SseFrame>, bool) {
+        let oldest = self.frames.front().map(|f| f.seq).unwrap_or(self.next_seq);
+        let gap = from < oldest;
+        (self.frames.iter().filter(|f| f.seq >= from).cloned().collect(), gap)
+    }
+
+    fn status_json(&self, meta: &RunMeta) -> Json {
+        let mut j = Json::obj()
+            .set("run", meta.id.as_str())
+            .set("status", self.phase.name());
+        if let RunPhase::Failed(reason) = &self.phase {
+            j = j.set("reason", reason.as_str());
+        }
+        if let Some(sum) = &self.final_checksum {
+            j = j.set("final_checksum", sum.as_str());
+        }
+        j
+    }
+}
+
+/// The shared half of a run: its guarded log plus the condvar SSE
+/// subscribers park on.
+pub(crate) struct RunShared {
+    pub log: Mutex<RunLog>,
+    pub cv: Condvar,
+}
+
+impl RunShared {
+    pub(crate) fn lock(&self) -> MutexGuard<'_, RunLog> {
+        self.log.lock().expect("run log poisoned")
+    }
+
+    pub(crate) fn notify(&self) {
+        self.cv.notify_all();
+    }
+}
+
+/// One run in the table: immutable meta + shared mutable log.
+#[derive(Clone)]
+pub struct RunEntry {
+    pub meta: Arc<RunMeta>,
+    pub(crate) shared: Arc<RunShared>,
+}
+
+impl RunEntry {
+    /// Admit a new run in `Queued` phase, holding its plan until the
+    /// scheduler grants actor-pool slots.
+    pub(crate) fn queued(
+        meta: RunMeta,
+        plan: RunPlan,
+        model: BenchModel,
+        rules: AlertRules,
+    ) -> RunEntry {
+        let analytics = Analytics::new(meta.n_actors, meta.regions);
+        let meta = Arc::new(meta);
+        let mut log = RunLog {
+            phase: RunPhase::Queued,
+            pending: Some((plan, model)),
+            probe: None,
+            analytics,
+            alert_engine: AlertEngine::new(rules),
+            alerts: Vec::new(),
+            final_checksum: None,
+            frames: VecDeque::new(),
+            next_seq: 0,
+        };
+        log.push_frame("status", log.status_json(&meta));
+        RunEntry {
+            meta,
+            shared: Arc::new(RunShared { log: Mutex::new(log), cv: Condvar::new() }),
+        }
+    }
+
+    /// Full JSON snapshot for `GET /runs/{id}` (and list rows).
+    pub fn snapshot(&self) -> Json {
+        let log = self.shared.lock();
+        let mut j = Json::obj()
+            .set("id", self.meta.id.as_str())
+            .set("model", self.meta.model.as_str())
+            .set("status", log.phase.name())
+            .set("steps_requested", self.meta.steps)
+            .set("seed", self.meta.seed)
+            .set("actors", self.meta.n_actors)
+            .set("regions", self.meta.regions)
+            .set("transport", self.meta.transport.as_str())
+            .set("mode", self.meta.mode)
+            .set("alerts", log.alerts.len())
+            .set("analytics", log.analytics.to_json());
+        if let RunPhase::Failed(reason) = &log.phase {
+            j = j.set("reason", reason.as_str());
+        }
+        if let Some(sum) = &log.final_checksum {
+            j = j.set("final_checksum", sum.as_str());
+        }
+        j
+    }
+
+    /// Compact row for `GET /runs`.
+    pub fn row(&self) -> Json {
+        let log = self.shared.lock();
+        Json::obj()
+            .set("id", self.meta.id.as_str())
+            .set("model", self.meta.model.as_str())
+            .set("status", log.phase.name())
+            .set("step", log.analytics.steps)
+            .set("actors", self.meta.n_actors)
+    }
+
+    /// Current phase (brief lock).
+    pub fn phase(&self) -> RunPhase {
+        self.shared.lock().phase.clone()
+    }
+
+    /// Abort a run: a queued run terminates immediately (its slots were
+    /// never granted); a running one gets the cooperative cancel via its
+    /// probe and terminates when the drain thread observes it. Returns
+    /// false if the run was already terminal.
+    pub(crate) fn request_abort(&self) -> bool {
+        let mut log = self.shared.lock();
+        match log.phase {
+            RunPhase::Queued => {
+                log.pending = None;
+                log.phase = RunPhase::Aborted;
+                let frame = log.status_json(&self.meta);
+                log.push_frame("status", frame);
+                drop(log);
+                self.shared.notify();
+                true
+            }
+            RunPhase::Running => {
+                if let Some(probe) = &log.probe {
+                    probe.abort();
+                }
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Transition `Queued -> Running`: start the session on the daemon's
+    /// synthetic compute and hand it to a drain thread. Called by the
+    /// scheduler with the pool slots already reserved. Returns the drain
+    /// thread handle, or the startup error (the run is then `Failed`).
+    pub(crate) fn start(
+        &self,
+        on_alert: impl Fn(Alert) + Send + 'static,
+        on_terminal: impl FnOnce(&str) + Send + 'static,
+    ) -> Result<std::thread::JoinHandle<()>> {
+        let mut log = self.shared.lock();
+        let (plan, model) = log
+            .pending
+            .take()
+            .ok_or_else(|| anyhow!("run {} has no pending plan", self.meta.id))?;
+        let comp = SyntheticCompute::new(model.b_train, model.b_gen, model.max_seq)
+            .with_delays(TRAIN_DELAY, GEN_DELAY);
+        let session = match Session::start_with_compute(&plan, model.layout.clone(), comp)
+            .with_context(|| format!("start session for run {}", self.meta.id))
+        {
+            Ok(s) => s,
+            Err(e) => {
+                log.phase = RunPhase::Failed(format!("{e:#}"));
+                let frame = log.status_json(&self.meta);
+                log.push_frame("status", frame);
+                drop(log);
+                self.shared.notify();
+                return Err(e);
+            }
+        };
+        log.probe = Some(session.probe());
+        log.phase = RunPhase::Running;
+        let frame = log.status_json(&self.meta);
+        log.push_frame("status", frame);
+        drop(log);
+        self.shared.notify();
+
+        let entry = self.clone();
+        std::thread::Builder::new()
+            .name(format!("sparrowrld-drain-{}", self.meta.id))
+            .spawn(move || {
+                drain(entry, session, on_alert, on_terminal);
+            })
+            .map_err(|e| anyhow!("spawn drain thread: {e}"))
+    }
+
+    /// The model preset a daemon run may use. Daemon-hosted runs are
+    /// synthetic (the control plane has no PJRT artifacts), so the
+    /// catalog is the bench-model axis.
+    pub fn resolve_model(name: &str) -> Option<BenchModel> {
+        bench_model(name)
+    }
+}
+
+/// The drain loop: fold every session event into the run log, then
+/// record the terminal state and notify the scheduler.
+fn drain(
+    entry: RunEntry,
+    mut session: Session,
+    on_alert: impl Fn(Alert),
+    on_terminal: impl FnOnce(&str),
+) {
+    while let Some(ev) = session.recv() {
+        let fired = {
+            let mut log = entry.shared.lock();
+            fold_event(&entry, &mut log, &ev)
+        };
+        entry.shared.notify();
+        // Global delivery happens with the run lock released (lock
+        // order: daemon state before run log, never the reverse).
+        for alert in fired {
+            on_alert(alert);
+        }
+    }
+    // Channel closed: the runtime returned. join() yields the report or
+    // the typed abort/failure error.
+    let terminal = match session.join() {
+        Ok(report) => {
+            let checksum = report.steps.last().map(|s| s.checksum_hex());
+            let mut log = entry.shared.lock();
+            log.final_checksum = checksum;
+            RunPhase::Finished.apply(&entry, &mut log);
+            RunPhase::Finished
+        }
+        Err(e) => {
+            let rendered = format!("{e:#}");
+            let phase = if rendered.contains(ABORT_MSG) {
+                RunPhase::Aborted
+            } else {
+                RunPhase::Failed(rendered)
+            };
+            let mut log = entry.shared.lock();
+            phase.clone().apply(&entry, &mut log);
+            phase
+        }
+    };
+    entry.shared.notify();
+    debug_assert!(terminal.is_terminal());
+    on_terminal(&entry.meta.id);
+}
+
+impl RunPhase {
+    /// Set the terminal phase and emit its `status` frame (caller holds
+    /// the log lock and notifies after releasing it).
+    fn apply(self, entry: &RunEntry, log: &mut RunLog) {
+        log.phase = self;
+        log.probe = None;
+        let frame = log.status_json(&entry.meta);
+        log.push_frame("status", frame);
+    }
+}
+
+/// Fold one event: SSE frame + analytics + alert evaluation. Returns
+/// alerts to deliver globally (after the lock is released).
+fn fold_event(entry: &RunEntry, log: &mut RunLog, ev: &Event) -> Vec<Alert> {
+    log.analytics.on_event(ev);
+    if let Some((name, data)) = frame_for(ev) {
+        log.push_frame(name, data);
+    }
+    let mut fired = Vec::new();
+    match ev {
+        Event::StepCompleted(_) => {
+            fired = log.alert_engine.evaluate(&entry.meta.id, &log.analytics);
+        }
+        Event::Failover { actor, requeued, reason } => {
+            fired.push(log.alert_engine.failover(
+                &entry.meta.id,
+                *actor,
+                *requeued,
+                *reason,
+                log.analytics.steps,
+            ));
+        }
+        _ => {}
+    }
+    for alert in &fired {
+        log.push_frame("alert", alert.to_json());
+        log.alerts.push(alert.clone());
+    }
+    fired
+}
+
+/// Map a session event to its SSE rendering (`None` = not streamed;
+/// `Finished` is represented by the terminal `status` frame instead of
+/// duplicating the whole report).
+fn frame_for(ev: &Event) -> Option<(&'static str, Json)> {
+    Some(match ev {
+        Event::SftStep { step, loss } => (
+            "sft_step",
+            Json::obj().set("step", *step).set("loss", *loss as f64),
+        ),
+        Event::StepCompleted(log) => (
+            "step",
+            Json::obj()
+                .set("step", log.step)
+                .set("loss", log.loss as f64)
+                .set("reward", log.mean_reward as f64)
+                .set("rho", log.rho)
+                .set("payload_bytes", log.payload_bytes)
+                .set("dense_bytes", log.dense_bytes)
+                .set("gen_tokens", log.gen_tokens)
+                .set("checksum", log.checksum_hex()),
+        ),
+        Event::DeltaStreamed { version, payload_bytes, stripes } => (
+            "delta",
+            Json::obj()
+                .set("version", *version)
+                .set("payload_bytes", *payload_bytes)
+                .set("stripes", *stripes),
+        ),
+        Event::Committed { version, checksum } => (
+            "commit",
+            Json::obj()
+                .set("version", *version)
+                .set("checksum", crate::util::hex(checksum)),
+        ),
+        Event::Joined { actor, version, bootstrap, bytes } => (
+            "join",
+            Json::obj()
+                .set("actor", *actor)
+                .set("version", *version)
+                .set("bootstrap", bootstrap.name())
+                .set("bytes", *bytes),
+        ),
+        Event::Draining { actor, requeued } => (
+            "drain",
+            Json::obj().set("actor", *actor).set("requeued", *requeued),
+        ),
+        Event::Preempted { actor } => ("preempt", Json::obj().set("actor", *actor)),
+        Event::Failover { actor, requeued, reason } => (
+            "failover",
+            Json::obj()
+                .set("actor", *actor)
+                .set("requeued", *requeued)
+                .set("reason", reason.to_string()),
+        ),
+        Event::Autoscale { version, decision } => (
+            "autoscale",
+            Json::obj()
+                .set("version", *version)
+                .set("decision", decision.name())
+                .set("marginal_tpd", decision.marginal_tpd()),
+        ),
+        Event::Finished(_) => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> RunMeta {
+        RunMeta {
+            id: "r1".into(),
+            model: "syn-xs".into(),
+            steps: 3,
+            seed: 7,
+            n_actors: 2,
+            regions: 1,
+            transport: "inproc".into(),
+            mode: "pipelined",
+        }
+    }
+
+    fn queued_entry() -> RunEntry {
+        let model = bench_model("syn-xs").unwrap();
+        let plan = crate::session::RunSpec::synthetic()
+            .actors(2)
+            .steps(3)
+            .deterministic()
+            .build()
+            .unwrap();
+        RunEntry::queued(meta(), plan, model, AlertRules::default())
+    }
+
+    #[test]
+    fn queued_entry_starts_with_a_status_frame() {
+        let entry = queued_entry();
+        assert_eq!(entry.phase(), RunPhase::Queued);
+        let log = entry.shared.lock();
+        let (frames, gap) = log.frames_from(0);
+        assert!(!gap);
+        assert_eq!(frames.len(), 1);
+        assert_eq!(frames[0].event, "status");
+        assert!(frames[0].data.contains("\"queued\""));
+    }
+
+    #[test]
+    fn aborting_a_queued_run_terminates_it_without_a_session() {
+        let entry = queued_entry();
+        assert!(entry.request_abort());
+        assert_eq!(entry.phase(), RunPhase::Aborted);
+        assert!(entry.shared.lock().pending.is_none());
+        // A second abort is a no-op on a terminal run.
+        assert!(!entry.request_abort());
+    }
+
+    #[test]
+    fn frame_log_evicts_but_reports_the_gap() {
+        let entry = queued_entry();
+        {
+            let mut log = entry.shared.lock();
+            for i in 0..(MAX_FRAMES + 10) {
+                log.push_frame("step", Json::obj().set("i", i));
+            }
+        }
+        let log = entry.shared.lock();
+        let (from_zero, gap) = log.frames_from(0);
+        assert!(gap, "evicted history must be reported as a gap");
+        assert_eq!(from_zero.len(), MAX_FRAMES);
+        let newest = from_zero.last().unwrap().seq;
+        let (tail, gap2) = log.frames_from(newest);
+        assert!(!gap2);
+        assert_eq!(tail.len(), 1);
+    }
+
+    #[test]
+    fn frame_mapping_covers_the_event_taxonomy() {
+        let (name, data) = frame_for(&Event::Committed { version: 3, checksum: [7u8; 32] })
+            .unwrap();
+        assert_eq!(name, "commit");
+        assert!(data.to_string().contains("0707"));
+        let (name, _) = frame_for(&Event::Preempted { actor: 2 }).unwrap();
+        assert_eq!(name, "preempt");
+        let (name, data) = frame_for(&Event::Failover {
+            actor: 1,
+            requeued: 4,
+            reason: crate::rt::FailReason::Crash,
+        })
+        .unwrap();
+        assert_eq!(name, "failover");
+        assert!(data.to_string().contains("crash"));
+    }
+}

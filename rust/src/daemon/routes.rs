@@ -1,0 +1,385 @@
+//! Route dispatch for the control plane.
+//!
+//! | Route                        | Purpose                                     |
+//! |------------------------------|---------------------------------------------|
+//! | `GET  /`                     | daemon identity + pool occupancy            |
+//! | `GET  /healthz`              | liveness probe (`ok`)                       |
+//! | `POST /runs`                 | submit a RunSpec JSON → `201 {"id":...}`    |
+//! | `GET  /runs`                 | all runs, compact rows                      |
+//! | `GET  /runs/{id}`            | full snapshot (status, analytics, checksum) |
+//! | `POST /runs/{id}/abort`      | cooperative abort (idempotent)              |
+//! | `GET  /runs/{id}/events`     | SSE: replay + live tail of the event stream |
+//! | `GET  /alerts`               | daemon-wide fired alerts                    |
+//!
+//! Error contract: malformed JSON / unknown fields → 400 with
+//! `{"error":{"kind":"Parse",...}}`; a spec that parses but fails the
+//! builder's legality checks → 422 carrying the *typed*
+//! [`SpecError`](crate::session::SpecError) variant name as `kind`, so
+//! clients can branch without string-matching prose.
+
+use super::http::{self, Request, Response};
+use super::registry::RunEntry;
+use super::state::{DaemonState, SubmitError};
+use crate::bench::scenario::{bench_model, BenchModel};
+use crate::session::{Backend, RunPlan, RunSpec, SpecError};
+use crate::util::json::Json;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// How long an SSE subscriber parks between condvar wakeups before
+/// re-checking the daemon shutdown flag.
+const SSE_POLL: Duration = Duration::from_millis(250);
+
+/// Dispatch one parsed request. SSE responses stream directly to the
+/// socket; everything else returns a framed [`Response`].
+pub(crate) fn handle(state: &Arc<DaemonState>, req: &Request, stream: &mut TcpStream) {
+    let resp = match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/") => index(state),
+        ("GET", "/healthz") => Response::text(200, "ok\n"),
+        ("POST", "/runs") => submit(state, req),
+        ("GET", "/runs") => Response::json(200, state.list_json().to_string()),
+        ("GET", "/alerts") => Response::json(200, state.alerts_json().to_string()),
+        (method, path) => match run_subroute(path) {
+            Some((id, tail)) => match (method, tail) {
+                ("GET", "") => match state.find(id) {
+                    Some(entry) => Response::json(200, entry.snapshot().to_string()),
+                    None => not_found(id),
+                },
+                ("POST", "/abort") => match state.find(id) {
+                    Some(entry) => {
+                        entry.request_abort();
+                        Response::json(200, entry.snapshot().to_string())
+                    }
+                    None => not_found(id),
+                },
+                ("GET", "/events") => match state.find(id) {
+                    Some(entry) => return stream_events(state, &entry, stream),
+                    None => not_found(id),
+                },
+                (_, "") | (_, "/abort") | (_, "/events") => method_not_allowed(),
+                _ => Response::json(404, error_body("NotFound", "no such route")),
+            },
+            None => match (method, path) {
+                // Known paths with the wrong verb get a 405, not a 404.
+                ("POST", "/") | ("POST", "/healthz") | ("POST", "/alerts") => {
+                    method_not_allowed()
+                }
+                ("PUT" | "DELETE" | "PATCH" | "HEAD", _) => method_not_allowed(),
+                _ => Response::json(404, error_body("NotFound", "no such route")),
+            },
+        },
+    };
+    let _ = http::write_response(stream, &resp);
+}
+
+/// Split `/runs/{id}` and `/runs/{id}/...` into `(id, tail)`.
+fn run_subroute(path: &str) -> Option<(&str, &str)> {
+    let rest = path.strip_prefix("/runs/")?;
+    let (id, tail) = match rest.find('/') {
+        Some(pos) => (&rest[..pos], &rest[pos..]),
+        None => (rest, ""),
+    };
+    if id.is_empty() {
+        return None;
+    }
+    Some((id, tail))
+}
+
+fn index(state: &Arc<DaemonState>) -> Response {
+    let body = Json::obj()
+        .set("daemon", "sparrowrld")
+        .set("version", env!("CARGO_PKG_VERSION"))
+        .set("pool", state.pool_json())
+        .set(
+            "routes",
+            vec![
+                "GET /healthz",
+                "POST /runs",
+                "GET /runs",
+                "GET /runs/{id}",
+                "POST /runs/{id}/abort",
+                "GET /runs/{id}/events",
+                "GET /alerts",
+            ],
+        );
+    Response::json(200, body.to_string())
+}
+
+fn not_found(id: &str) -> Response {
+    Response::json(404, error_body("UnknownRun", &format!("no run {id:?}")))
+}
+
+fn method_not_allowed() -> Response {
+    Response::json(405, error_body("MethodNotAllowed", "wrong verb for this route"))
+}
+
+pub(crate) fn error_body(kind: &str, message: &str) -> String {
+    Json::obj()
+        .set("error", Json::obj().set("kind", kind).set("message", message))
+        .to_string()
+}
+
+/// `POST /runs`: parse → build → admit.
+fn submit(state: &Arc<DaemonState>, req: &Request) -> Response {
+    let body = match req.body_str() {
+        Ok(s) => s,
+        Err(e) => return Response::json(400, error_body("Parse", &e.to_string())),
+    };
+    let (plan, model, transport, seed) = match parse_run_spec(body) {
+        Ok(parts) => parts,
+        Err(SubmitReject::Parse(msg)) => return Response::json(400, error_body("Parse", &msg)),
+        Err(SubmitReject::Spec(err)) => {
+            return Response::json(422, error_body(err.name(), &err.to_string()))
+        }
+    };
+    match state.submit(plan, model, transport, seed) {
+        Ok(entry) => Response::json(
+            201,
+            Json::obj()
+                .set("id", entry.meta.id.as_str())
+                .set("status", entry.phase().name())
+                .to_string(),
+        ),
+        Err(err @ SubmitError::ExceedsActorPool { .. }) => {
+            Response::json(422, error_body(err.kind(), &err.message()))
+        }
+        Err(err @ SubmitError::TableFull { .. }) => {
+            Response::json(503, error_body(err.kind(), &err.message()))
+        }
+    }
+}
+
+enum SubmitReject {
+    /// Body is not the JSON shape we accept → 400.
+    Parse(String),
+    /// Shape is fine; the combination is illegal → 422 with the typed
+    /// `SpecError` variant name.
+    Spec(SpecError),
+}
+
+/// Accepted submission fields (all optional except none):
+/// `model` (bench preset, default `syn-xs`), `steps`, `sft_steps`,
+/// `actors`, `group_size`, `max_new_tokens`, `segment_bytes`, `seed`,
+/// `lease_sweep_ms`, `lr_rl`, `lr_sft`, `temperature`, `mode`
+/// (`pipelined`/`sequential`), `transport` (`inproc`/`sim`/`tcp`),
+/// `wan` (preset name), `deterministic` (default **true** — daemon runs
+/// are replayable unless asked otherwise), `autoscale`.
+fn parse_run_spec(body: &str) -> Result<(RunPlan, BenchModel, String, u64), SubmitReject> {
+    let json = Json::parse(body).map_err(SubmitReject::Parse)?;
+    let Json::Obj(fields) = &json else {
+        return Err(SubmitReject::Parse("run spec must be a JSON object".into()));
+    };
+
+    let mut spec = RunSpec::synthetic();
+    let mut model_name = "syn-xs".to_string();
+    let mut transport_name = "inproc".to_string();
+    let mut seed = 0u64;
+    let mut deterministic = true;
+
+    for (key, value) in fields {
+        match key.as_str() {
+            "model" => model_name = str_field(value, key)?,
+            "steps" => spec = spec.steps(u64_field(value, key)?),
+            "sft_steps" => spec = spec.sft_steps(u64_field(value, key)?),
+            "actors" => spec = spec.actors(u64_field(value, key)? as usize),
+            "group_size" => spec = spec.group_size(u64_field(value, key)? as usize),
+            "max_new_tokens" => spec = spec.max_new_tokens(u64_field(value, key)? as usize),
+            "segment_bytes" => spec = spec.segment_bytes(u64_field(value, key)? as usize),
+            "seed" => seed = u64_field(value, key)?,
+            "lease_sweep_ms" => spec = spec.lease_sweep_ms(u64_field(value, key)?),
+            "lr_rl" => spec = spec.lr_rl(f64_field(value, key)? as f32),
+            "lr_sft" => spec = spec.lr_sft(f64_field(value, key)? as f32),
+            "temperature" => spec = spec.temperature(f64_field(value, key)? as f32),
+            "wan" => spec = spec.wan(&str_field(value, key)?),
+            "deterministic" => deterministic = bool_field(value, key)?,
+            "autoscale" => {
+                if bool_field(value, key)? {
+                    spec = spec.autoscale();
+                }
+            }
+            "mode" => match str_field(value, key)?.as_str() {
+                "pipelined" => spec = spec.pipelined(),
+                "sequential" => spec = spec.sequential(),
+                other => {
+                    return Err(SubmitReject::Parse(format!(
+                        "mode must be \"pipelined\" or \"sequential\", got {other:?}"
+                    )))
+                }
+            },
+            "transport" => {
+                transport_name = str_field(value, key)?;
+                match Backend::parse(&transport_name) {
+                    Some(backend) => spec = spec.transport(backend),
+                    None => {
+                        return Err(SubmitReject::Parse(format!(
+                            "unknown transport {transport_name:?} (one of {:?})",
+                            Backend::NAMES
+                        )))
+                    }
+                }
+            }
+            other => {
+                return Err(SubmitReject::Parse(format!(
+                    "unknown field {other:?} in run spec"
+                )))
+            }
+        }
+    }
+
+    // The daemon's model catalog is the bench-preset axis; an unknown
+    // name is the same typed error the builder would raise.
+    let Some(model) = bench_model(&model_name) else {
+        return Err(SubmitReject::Spec(SpecError::UnknownModel(model_name)));
+    };
+    spec = spec.seed(seed);
+    if deterministic {
+        spec = spec.deterministic();
+    }
+    let plan = spec.build().map_err(SubmitReject::Spec)?;
+    Ok((plan, model, transport_name, seed))
+}
+
+fn str_field(v: &Json, key: &str) -> Result<String, SubmitReject> {
+    v.as_str()
+        .map(str::to_string)
+        .ok_or_else(|| SubmitReject::Parse(format!("field {key:?} must be a string")))
+}
+
+fn u64_field(v: &Json, key: &str) -> Result<u64, SubmitReject> {
+    v.as_u64()
+        .ok_or_else(|| SubmitReject::Parse(format!("field {key:?} must be a non-negative integer")))
+}
+
+fn f64_field(v: &Json, key: &str) -> Result<f64, SubmitReject> {
+    v.as_f64()
+        .ok_or_else(|| SubmitReject::Parse(format!("field {key:?} must be a number")))
+}
+
+fn bool_field(v: &Json, key: &str) -> Result<bool, SubmitReject> {
+    v.as_bool()
+        .ok_or_else(|| SubmitReject::Parse(format!("field {key:?} must be a boolean")))
+}
+
+/// `GET /runs/{id}/events`: replay the retained frame log from seq 0,
+/// then tail live frames until the run is terminal (or the daemon shuts
+/// down / the client disconnects).
+fn stream_events(state: &Arc<DaemonState>, entry: &RunEntry, stream: &mut TcpStream) {
+    if http::write_sse_head(stream).is_err() {
+        return;
+    }
+    let mut next_seq = 0u64;
+    loop {
+        // Collect under the run lock; write with it released.
+        let (frames, gap, terminal) = {
+            let mut log = entry.shared.lock();
+            loop {
+                let (frames, gap) = log.frames_from(next_seq);
+                let terminal = log.phase.is_terminal();
+                if !frames.is_empty() || terminal || state.is_shutdown() {
+                    break (frames, gap, terminal || state.is_shutdown());
+                }
+                let (guard, _timeout) = entry
+                    .shared
+                    .cv
+                    .wait_timeout(log, SSE_POLL)
+                    .expect("run log poisoned");
+                log = guard;
+            }
+        };
+        if gap && write!(stream, ": log truncated, resuming from oldest retained frame\n\n").is_err()
+        {
+            return;
+        }
+        for frame in &frames {
+            next_seq = frame.seq + 1;
+            if write!(
+                stream,
+                "id: {}\nevent: {}\ndata: {}\n\n",
+                frame.seq, frame.event, frame.data
+            )
+            .is_err()
+            {
+                return; // subscriber hung up
+            }
+        }
+        let _ = stream.flush();
+        if terminal && frames.is_empty() {
+            return; // everything replayed and the run is done
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_subroute_splits_ids_and_tails() {
+        assert_eq!(run_subroute("/runs/r1"), Some(("r1", "")));
+        assert_eq!(run_subroute("/runs/r1/abort"), Some(("r1", "/abort")));
+        assert_eq!(run_subroute("/runs/r1/events"), Some(("r1", "/events")));
+        assert_eq!(run_subroute("/runs/"), None);
+        assert_eq!(run_subroute("/alerts"), None);
+    }
+
+    #[test]
+    fn parse_defaults_are_deterministic_syn_xs() {
+        let (plan, model, transport, seed) = parse_run_spec("{\"steps\": 3}").unwrap();
+        assert_eq!(model.name, "syn-xs");
+        assert_eq!(transport, "inproc");
+        assert_eq!(seed, 0);
+        assert_eq!(plan.config().steps, 3);
+        assert!(plan.config().deterministic);
+    }
+
+    #[test]
+    fn parse_rejects_unknown_fields_and_bad_types() {
+        match parse_run_spec("{\"stepz\": 3}") {
+            Err(SubmitReject::Parse(msg)) => assert!(msg.contains("stepz"), "{msg}"),
+            _ => panic!("unknown field must be a parse reject"),
+        }
+        match parse_run_spec("{\"steps\": \"three\"}") {
+            Err(SubmitReject::Parse(msg)) => assert!(msg.contains("steps"), "{msg}"),
+            _ => panic!("bad type must be a parse reject"),
+        }
+        match parse_run_spec("not json at all") {
+            Err(SubmitReject::Parse(_)) => {}
+            _ => panic!("non-JSON must be a parse reject"),
+        }
+        match parse_run_spec("[1,2,3]") {
+            Err(SubmitReject::Parse(msg)) => assert!(msg.contains("object"), "{msg}"),
+            _ => panic!("non-object must be a parse reject"),
+        }
+    }
+
+    #[test]
+    fn illegal_spec_combinations_surface_the_typed_error() {
+        // actors=0 trips the builder's ZeroActors check.
+        match parse_run_spec("{\"actors\": 0}") {
+            Err(SubmitReject::Spec(err)) => assert_eq!(err.name(), "ZeroActors"),
+            _ => panic!("expected a typed SpecError"),
+        }
+        // wan + explicit actors is the builder's conflict check.
+        match parse_run_spec("{\"wan\": \"wan-2\", \"actors\": 3}") {
+            Err(SubmitReject::Spec(err)) => {
+                assert_eq!(err.name(), "ActorsConflictWithWan")
+            }
+            _ => panic!("expected a typed SpecError"),
+        }
+        // Unknown model rides the same typed channel.
+        match parse_run_spec("{\"model\": \"syn-xxl\"}") {
+            Err(SubmitReject::Spec(err)) => assert_eq!(err.name(), "UnknownModel"),
+            _ => panic!("expected a typed SpecError"),
+        }
+    }
+
+    #[test]
+    fn error_bodies_are_parseable_json() {
+        let body = error_body("ZeroActors", "a run needs at least one actor");
+        let json = Json::parse(&body).unwrap();
+        let err = json.get("error").unwrap();
+        assert_eq!(err.get("kind").and_then(Json::as_str), Some("ZeroActors"));
+    }
+}

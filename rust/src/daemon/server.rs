@@ -1,0 +1,151 @@
+//! The accept loop: one `std::net::TcpListener`, one thread per
+//! connection (bounded by [`DaemonConfig::max_connections`]), one
+//! request per connection.
+//!
+//! A control plane sees a handful of requests per second; thread-per-
+//! connection with hard caps is simpler to audit than an event loop and
+//! fails closed — every socket carries [`http::READ_TIMEOUT`], every
+//! parse failure maps to a 4xx, and the connection count cap turns an
+//! accept flood into 503s instead of thread exhaustion.
+
+use super::http::{self, HttpError, Response};
+use super::routes;
+use super::state::{DaemonConfig, DaemonState};
+use anyhow::{Context, Result};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// The daemon's front door: [`Daemon::spawn`] binds, starts the accept
+/// thread, and returns a [`DaemonHandle`].
+pub struct Daemon;
+
+impl Daemon {
+    /// Bind `cfg.addr` (port 0 = ephemeral) and start serving. The
+    /// returned handle owns the daemon; dropping it shuts everything
+    /// down (abort all runs, join all threads).
+    pub fn spawn(cfg: DaemonConfig) -> Result<DaemonHandle> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("bind control plane on {}", cfg.addr))?;
+        let addr = listener.local_addr().context("resolve bound address")?;
+        let state = Arc::new(DaemonState::new(cfg));
+        let accept_state = state.clone();
+        let conns = Arc::new(AtomicUsize::new(0));
+        let accept = std::thread::Builder::new()
+            .name("sparrowrld-accept".to_string())
+            .spawn(move || accept_loop(listener, accept_state, conns))
+            .context("spawn accept thread")?;
+        Ok(DaemonHandle { addr, state, accept: Some(accept) })
+    }
+}
+
+/// A running daemon. [`DaemonHandle::shutdown`] (or drop) stops the
+/// accept loop, aborts every hosted session, and joins all threads.
+pub struct DaemonHandle {
+    addr: SocketAddr,
+    state: Arc<DaemonState>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl DaemonHandle {
+    /// The actually-bound address (resolves ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Shared state, for in-process inspection (tests, the CLI's status
+    /// printout).
+    pub fn state(&self) -> &Arc<DaemonState> {
+        &self.state
+    }
+
+    /// Block forever serving (the `sparrowrl serve` foreground path).
+    pub fn wait(mut self) {
+        if let Some(accept) = self.accept.take() {
+            let _ = accept.join();
+        }
+    }
+
+    /// Orderly stop: refuse new work, unblock the accept loop, abort
+    /// all sessions, join all daemon threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.state.shutdown_all();
+        // `accept()` has no timeout; a throwaway self-connection makes
+        // the loop observe the shutdown flag and exit.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(accept) = self.accept.take() {
+            let _ = accept.join();
+        }
+    }
+}
+
+impl Drop for DaemonHandle {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.shutdown_inner();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<DaemonState>, conns: Arc<AtomicUsize>) {
+    for stream in listener.incoming() {
+        if state.is_shutdown() {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        // Connection cap: fail closed with a 503 instead of spawning
+        // unboundedly under an accept flood.
+        if conns.load(Ordering::Relaxed) >= state.cfg.max_connections {
+            let mut stream = stream;
+            let _ = http::write_response(
+                &mut stream,
+                &Response::json(
+                    503,
+                    routes::error_body("Busy", "connection limit reached; retry"),
+                ),
+            );
+            continue;
+        }
+        conns.fetch_add(1, Ordering::Relaxed);
+        let state = state.clone();
+        let conns = conns.clone();
+        let spawned = std::thread::Builder::new()
+            .name("sparrowrld-conn".to_string())
+            .spawn(move || {
+                handle_connection(&state, stream);
+                conns.fetch_sub(1, Ordering::Relaxed);
+            });
+        if spawned.is_err() {
+            conns.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+fn handle_connection(state: &Arc<DaemonState>, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(http::READ_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    match http::read_request(&mut stream) {
+        Ok(req) => routes::handle(state, &req, &mut stream),
+        Err(e) => {
+            let resp = match &e {
+                HttpError::BadRequest(_) => {
+                    Response::json(400, routes::error_body("Parse", &e.to_string()))
+                }
+                HttpError::HeadTooLarge => {
+                    Response::json(431, routes::error_body("HeadTooLarge", &e.to_string()))
+                }
+                HttpError::BodyTooLarge(_) => {
+                    Response::json(413, routes::error_body("BodyTooLarge", &e.to_string()))
+                }
+                // Socket died mid-request: nobody left to answer.
+                HttpError::Io(_) => return,
+            };
+            let _ = http::write_response(&mut stream, &resp);
+        }
+    }
+}

@@ -17,7 +17,9 @@
 //!
 //! The public entry point is the [`session`] module: a validated
 //! [`session::RunSpec`] builder plus a live [`session::Session`] handle
-//! with typed event streaming.
+//! with typed event streaming. The [`daemon`] module (`sparrowrl serve`)
+//! hosts many such sessions behind an HTTP/JSON control plane with
+//! cross-session actor-pool arbitration.
 //!
 //! See DESIGN.md for the system inventory and the paper-experiment index,
 //! and docs/ARCHITECTURE.md for the subsystem map (delta pipeline →
@@ -28,6 +30,7 @@ pub mod actor;
 pub mod bench;
 pub mod config;
 pub mod cost;
+pub mod daemon;
 pub mod data;
 pub mod delta;
 pub mod exp;

@@ -3,8 +3,9 @@
 //! ```text
 //! sparrowrl exp <id> [--flags]        reproduce a paper table/figure (or 'all')
 //! sparrowrl train [--flags]           run the real RL loop on PJRT artifacts
+//! sparrowrl serve [--flags]           multi-session control-plane daemon (sparrowrld)
 //! sparrowrl sim [--flags]             one simulated geo-distributed run
-//! sparrowrl bench run|compare|list    scenario-matrix harness + regression gate
+//! sparrowrl bench run|compare|list|promote  scenario harness + regression gate
 //! sparrowrl reconstruct [--flags]     rebuild a policy from a durable store
 //! sparrowrl list                      list experiments and models
 //! ```
@@ -27,10 +28,13 @@ fn usage() -> ! {
          [--fault-script join:A@V[:snapshot],leave:A@V,crash:A@V,stall:A@V,preempt:A@V[:warn=MS],...] [--autoscale] [--lease-sweep-ms MS]\n    \
          [--persist-dir DIR] [--resume]\n  \
          sparrowrl reconstruct --persist-dir DIR [--model sparrow-xs] [--version V] [--compact]\n  \
+         sparrowrl serve [--addr HOST:PORT] [--max-sessions N] [--actor-pool N]\n    \
+         [--alert-overlap-floor X] [--alert-tpd-floor X] [--alert-payload-ceiling BYTES]\n  \
          sparrowrl sim [--model qwen3-8b] [--system sparrow|full|ms|ideal] [--bench gsm8k|math|deepscaler] [--steps N]\n  \
          sparrowrl bench run [--suite smoke|full] [--file scenarios.json] [--out FILE]\n  \
          sparrowrl bench compare OLD NEW [--threshold PCT]\n  \
          sparrowrl bench list [--suite NAME] [--file scenarios.json]\n  \
+         sparrowrl bench promote ARTIFACT [--baseline PATH]\n  \
          sparrowrl list",
         exp::ALL.join("|")
     );
@@ -46,6 +50,7 @@ fn main() {
             exp::run(&id, &args)
         }
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "sim" => cmd_sim(&args),
         "bench" => cmd_bench(&args),
         "reconstruct" => cmd_reconstruct(&args),
@@ -287,6 +292,54 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `sparrowrl serve`: run the `sparrowrld` control-plane daemon in the
+/// foreground — many concurrent sessions over one shared synthetic
+/// actor pool, driven over HTTP/JSON (see `daemon` module docs and
+/// docs/ARCHITECTURE.md §2f). Ctrl-C to stop; in-flight runs are
+/// aborted cooperatively on shutdown.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use sparrowrl::daemon::{AlertRules, Daemon, DaemonConfig};
+    let defaults = DaemonConfig::default();
+    let rules = AlertRules {
+        overlap_floor: args.get("alert-overlap-floor").map(|s| s.parse()).transpose()?,
+        tokens_per_dollar_floor: args.get("alert-tpd-floor").map(|s| s.parse()).transpose()?,
+        payload_ceiling_bytes: args
+            .get("alert-payload-ceiling")
+            .map(|s| s.parse())
+            .transpose()?,
+    };
+    let cfg = DaemonConfig {
+        addr: args.str_or("addr", &defaults.addr),
+        max_sessions: args.parse_or("max-sessions", defaults.max_sessions),
+        actor_pool: args.parse_or("actor-pool", defaults.actor_pool),
+        rules,
+        ..defaults
+    };
+    let max_sessions = cfg.max_sessions;
+    let actor_pool = cfg.actor_pool;
+    let handle = Daemon::spawn(cfg)?;
+    println!(
+        "sparrowrld listening on http://{} ({} session slots, {} shared actor slots)",
+        handle.addr(),
+        max_sessions,
+        actor_pool,
+    );
+    println!("routes:");
+    for route in [
+        "POST /runs               submit a run spec (JSON)",
+        "GET  /runs               list runs",
+        "GET  /runs/{id}          run snapshot + live analytics",
+        "POST /runs/{id}/abort    cooperative abort",
+        "GET  /runs/{id}/events   SSE event stream (replay + tail)",
+        "GET  /alerts             daemon-wide threshold alerts",
+        "GET  /healthz            liveness probe",
+    ] {
+        println!("  {route}");
+    }
+    handle.wait();
+    Ok(())
+}
+
 /// Offline recovery tooling over a durable store: verify the journal and
 /// object chain, optionally fold the delta chain into one compacted
 /// object (`--compact`, witness-verified before publication), and print
@@ -402,7 +455,35 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             }
             Ok(())
         }
-        other => anyhow::bail!("unknown bench subcommand {other:?} (run|compare|list)"),
+        // Promote a green CI artifact (`BENCH_smoke.json`) to be the
+        // committed baseline, replacing the bootstrap placeholder. The
+        // artifact is validated (schema, non-placeholder, non-empty)
+        // before anything is overwritten.
+        "promote" => {
+            let Some(artifact) = args.positional.get(2) else {
+                anyhow::bail!("usage: sparrowrl bench promote ARTIFACT [--baseline PATH]");
+            };
+            let baseline = args.str_or("baseline", "../bench/baseline_smoke.json");
+            let set = ResultSet::load(std::path::Path::new(artifact))?;
+            if set.placeholder {
+                anyhow::bail!(
+                    "{artifact} is itself a placeholder; promote a real CI artifact instead"
+                );
+            }
+            if set.records.is_empty() {
+                anyhow::bail!("{artifact} holds no scenario records; refusing to promote");
+            }
+            set.write(std::path::Path::new(&baseline))?;
+            println!(
+                "promoted {artifact} -> {baseline} (suite {}, {} record(s))",
+                set.suite,
+                set.records.len(),
+            );
+            Ok(())
+        }
+        other => {
+            anyhow::bail!("unknown bench subcommand {other:?} (run|compare|list|promote)")
+        }
     }
 }
 

@@ -15,12 +15,115 @@ use crate::runtime::Engines;
 use anyhow::{anyhow, bail, Context, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, TryRecvError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 /// The message `abort()` makes the runtime fail with; surfaced through
 /// [`Session::join`]'s error.
 pub const ABORT_MSG: &str = "session aborted by caller";
+
+/// Non-blocking snapshot of where a session is, without consuming its
+/// event stream or blocking on `join()`. The runtime thread itself keeps
+/// this current (progress as events flow through the sink, the terminal
+/// state the instant the executor returns), so a poller — e.g. the
+/// `daemon` registry — can watch many sessions cheaply.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SessionStatus {
+    /// The run is live: `step` RL steps closed so far, `version` is the
+    /// last policy version the trainer committed.
+    Running { step: u64, version: u64 },
+    /// The executor returned successfully (the terminal
+    /// [`Event::Finished`] may not have been consumed yet).
+    Finished,
+    /// The executor stopped at a cancellation point after
+    /// [`Session::abort`].
+    Aborted,
+    /// The executor failed; `reason` is the rendered error chain.
+    Failed { reason: String },
+}
+
+impl SessionStatus {
+    /// Stable lowercase tag (`running` / `finished` / `aborted` /
+    /// `failed`) — what the daemon's JSON snapshots carry.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SessionStatus::Running { .. } => "running",
+            SessionStatus::Finished => "finished",
+            SessionStatus::Aborted => "aborted",
+            SessionStatus::Failed { .. } => "failed",
+        }
+    }
+
+    /// Terminal-state probe: true for `Finished`, `Aborted`, `Failed`.
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, SessionStatus::Running { .. })
+    }
+}
+
+/// Shared between the runtime thread (writer) and any pollers (readers).
+#[derive(Debug)]
+pub(crate) struct StatusCell(Mutex<SessionStatus>);
+
+impl StatusCell {
+    fn new() -> StatusCell {
+        StatusCell(Mutex::new(SessionStatus::Running { step: 0, version: 0 }))
+    }
+
+    fn get(&self) -> SessionStatus {
+        self.0.lock().expect("status cell poisoned").clone()
+    }
+
+    /// Track live progress from the event flow (called by the runtime
+    /// thread's sink before each event is forwarded).
+    fn observe(&self, ev: &Event) {
+        let mut s = self.0.lock().expect("status cell poisoned");
+        if let SessionStatus::Running { step, version } = &mut *s {
+            match ev {
+                Event::StepCompleted(log) => *step = log.step,
+                Event::Committed { version: v, .. } => *version = *v,
+                _ => {}
+            }
+        }
+    }
+
+    /// Record the terminal state the moment the executor returns.
+    fn finish(&self, result: &Result<super::events::RunTail>) {
+        let mut s = self.0.lock().expect("status cell poisoned");
+        *s = match result {
+            Ok(_) => SessionStatus::Finished,
+            Err(e) if format!("{e:#}").contains(ABORT_MSG) => SessionStatus::Aborted,
+            Err(e) => SessionStatus::Failed { reason: format!("{e:#}") },
+        };
+    }
+}
+
+/// A detachable, cloneable view of a running [`Session`]: poll
+/// [`SessionProbe::status`] / [`SessionProbe::is_finished`] and request a
+/// cooperative [`SessionProbe::abort`] from another thread while the
+/// session handle itself (and its event stream) is owned elsewhere —
+/// the seam the `daemon` registry's per-run drain threads hang off.
+#[derive(Clone, Debug)]
+pub struct SessionProbe {
+    status: Arc<StatusCell>,
+    cancel: Arc<AtomicBool>,
+}
+
+impl SessionProbe {
+    /// Non-blocking status snapshot (see [`SessionStatus`]).
+    pub fn status(&self) -> SessionStatus {
+        self.status.get()
+    }
+
+    /// True once the executor returned (success, abort, or failure).
+    pub fn is_finished(&self) -> bool {
+        self.status.get().is_terminal()
+    }
+
+    /// Same cooperative cancellation as [`Session::abort`].
+    pub fn abort(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+}
 
 /// A running SparrowRL training session.
 ///
@@ -33,6 +136,7 @@ pub const ABORT_MSG: &str = "session aborted by caller";
 pub struct Session {
     rx: Receiver<Event>,
     cancel: Arc<AtomicBool>,
+    status: Arc<StatusCell>,
     thread: Option<JoinHandle<Result<super::events::RunTail>>>,
     asm: Option<ReportAssembler>,
     finished: Option<RunReport>,
@@ -74,25 +178,50 @@ impl Session {
         let (tx, rx) = channel();
         let cancel = Arc::new(AtomicBool::new(false));
         let cancel_flag = cancel.clone();
+        let status = Arc::new(StatusCell::new());
+        let status_cell = status.clone();
         let thread = std::thread::Builder::new()
             .name("sparrowrl-session".to_string())
             .spawn(move || {
                 let mut sink = |ev: Event| {
+                    status_cell.observe(&ev);
                     // A dropped handle only means nobody is listening;
                     // the run itself is cancelled via the abort flag.
                     let _ = tx.send(ev);
                 };
-                run_observed(&cfg, &layout, &comp, mode, &mut sink, &cancel_flag)
+                let result = run_observed(&cfg, &layout, &comp, mode, &mut sink, &cancel_flag);
+                status_cell.finish(&result);
+                result
             })
             .map_err(|e| anyhow!("spawn session thread: {e}"))?;
         Ok(Session {
             rx,
             cancel,
+            status,
             thread: Some(thread),
             asm: Some(ReportAssembler::default()),
             finished: None,
             error: None,
         })
+    }
+
+    /// Non-blocking status snapshot: live progress while the executor
+    /// runs, the terminal state the instant it returns — without
+    /// consuming the event stream or blocking on [`Session::join`].
+    pub fn status(&self) -> SessionStatus {
+        self.status.get()
+    }
+
+    /// True once the executor returned (success, abort, or failure); the
+    /// registry-style poll that replaces watching for `Event::Finished`.
+    pub fn is_finished(&self) -> bool {
+        self.status.get().is_terminal()
+    }
+
+    /// A cloneable probe (status + abort) that outlives handing the
+    /// session itself to another thread.
+    pub fn probe(&self) -> SessionProbe {
+        SessionProbe { status: self.status.clone(), cancel: self.cancel.clone() }
     }
 
     /// Blocking: the next event, or `None` once the stream is exhausted

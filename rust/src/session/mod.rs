@@ -54,5 +54,5 @@ mod spec;
 
 pub use events::Event;
 pub(crate) use events::{ReportAssembler, RunTail};
-pub use handle::{Session, ABORT_MSG};
+pub use handle::{Session, SessionProbe, SessionStatus, ABORT_MSG};
 pub use spec::{Backend, RunPlan, RunSpec, SpecError, SpecNote};

@@ -132,6 +132,39 @@ pub enum SpecError {
     ResumeConflictsWithElastic,
 }
 
+impl SpecError {
+    /// The variant's stable name (`"ZeroActors"`, `"TcpConflictsWithWan"`,
+    /// ...) — the machine-readable tag the daemon's 422 bodies carry so
+    /// remote submitters can match on the typed error, not its prose.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpecError::UnknownModel(_) => "UnknownModel",
+            SpecError::AnalyticOnlyModel(_) => "AnalyticOnlyModel",
+            SpecError::UnknownWanPreset(_) => "UnknownWanPreset",
+            SpecError::ActorsConflictWithWan { .. } => "ActorsConflictWithWan",
+            SpecError::SequentialConflict { .. } => "SequentialConflict",
+            SpecError::TcpConflictsWithWan => "TcpConflictsWithWan",
+            SpecError::TcpConflictsWithDistribution => "TcpConflictsWithDistribution",
+            SpecError::SimConflictsWithDistribution => "SimConflictsWithDistribution",
+            SpecError::SimNetConflictsWithWan => "SimNetConflictsWithWan",
+            SpecError::SimTopologyMismatch { .. } => "SimTopologyMismatch",
+            SpecError::DistributionMismatch { .. } => "DistributionMismatch",
+            SpecError::DistributionConflictsWithWan => "DistributionConflictsWithWan",
+            SpecError::ElasticConflictsWithSim => "ElasticConflictsWithSim",
+            SpecError::ElasticConflictsWithRelayTree => "ElasticConflictsWithRelayTree",
+            SpecError::ElasticJoinerIds { .. } => "ElasticJoinerIds",
+            SpecError::ElasticVersionOutOfRange { .. } => "ElasticVersionOutOfRange",
+            SpecError::ZeroActors => "ZeroActors",
+            SpecError::ZeroGroupSize => "ZeroGroupSize",
+            SpecError::ZeroSegmentBytes => "ZeroSegmentBytes",
+            SpecError::ZeroSweepInterval => "ZeroSweepInterval",
+            SpecError::ResumeNeedsPersistDir => "ResumeNeedsPersistDir",
+            SpecError::ResumeRequiresDeterministic => "ResumeRequiresDeterministic",
+            SpecError::ResumeConflictsWithElastic => "ResumeConflictsWithElastic",
+        }
+    }
+}
+
 impl fmt::Display for SpecError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {

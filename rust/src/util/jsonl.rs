@@ -8,6 +8,34 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// Escape `s` into `out` as the *interior* of a JSON string literal (no
+/// surrounding quotes): `"` and `\` are backslash-escaped, control
+/// characters become `\n`/`\t`/`\r` or `\u00XX`. This is the one place
+/// JSON string escaping lives — [`Json`]'s emitter, the bench exporter,
+/// and the daemon's hand-framed SSE `data:` lines all route through it.
+pub fn escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// Convenience form of [`escape_into`]: a fresh escaped string.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    escape_into(&mut out, s);
+    out
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
     Null,
@@ -57,19 +85,7 @@ impl Json {
             }
             Json::Str(s) => {
                 out.push('"');
-                for c in s.chars() {
-                    match c {
-                        '"' => out.push_str("\\\""),
-                        '\\' => out.push_str("\\\\"),
-                        '\n' => out.push_str("\\n"),
-                        '\t' => out.push_str("\\t"),
-                        '\r' => out.push_str("\\r"),
-                        c if (c as u32) < 0x20 => {
-                            let _ = write!(out, "\\u{:04x}", c as u32);
-                        }
-                        c => out.push(c),
-                    }
-                }
+                escape_into(out, s);
                 out.push('"');
             }
             Json::Arr(xs) => {
@@ -405,6 +421,23 @@ mod tests {
     fn string_escaping() {
         let j = Json::Str("a\"b\\c\nd".into());
         assert_eq!(j.to_string(), r#""a\"b\\c\nd""#);
+    }
+
+    #[test]
+    fn escape_helper_covers_quotes_backslashes_and_controls() {
+        // The factored helper is what Json::Str emission and the daemon's
+        // response bodies share; pin its exact output.
+        assert_eq!(escape("plain"), "plain");
+        assert_eq!(escape("q\"b\\"), "q\\\"b\\\\");
+        assert_eq!(escape("a\nb\tc\r"), "a\\nb\\tc\\r");
+        assert_eq!(escape("\u{1}\u{1f}"), "\\u0001\\u001f");
+        assert_eq!(escape("snow\u{2603}man"), "snow\u{2603}man");
+        // Round trip through the parser: a hand-framed string built from
+        // escape() parses back to the original.
+        for s in ["", "x", "a\"b\\c\nd\u{2}", "ctrl\u{0}end"] {
+            let doc = format!("\"{}\"", escape(s));
+            assert_eq!(Json::parse(&doc).unwrap().as_str(), Some(s), "{s:?}");
+        }
     }
 
     #[test]

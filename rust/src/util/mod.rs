@@ -12,6 +12,12 @@ pub mod jsonl;
 pub mod prop;
 pub mod rng;
 
+/// `util::json` is the JSON value/escape module (`jsonl` by its
+/// historical name — it grew out of the `.jsonl` trace writer): the
+/// builder/parser [`jsonl::Json`] plus the single shared string-escape
+/// helper [`jsonl::escape_into`].
+pub use self::jsonl as json;
+
 pub use bf16::Bf16;
 pub use ema::Ema;
 pub use rng::Rng;

@@ -1,0 +1,313 @@
+//! Control-plane daemon acceptance suite, over real loopback HTTP:
+//!
+//! (a) the daemon hosts two *concurrent* deterministic sessions and
+//!     streams both to completion over SSE — and each run's final policy
+//!     checksum is **bitwise identical** to the same spec run directly
+//!     through the `Session` API (multiplexing changes nothing);
+//! (b) `POST /runs/{id}/abort` tears a live run down promptly;
+//! (c) malformed submissions come back as typed errors — 400 for shape,
+//!     422 carrying the `SpecError` variant name for illegal specs;
+//! (d) admission control: a third run past the session cap is queued
+//!     (not rejected, not oversubscribed) and runs when a slot frees;
+//! (e) hostile input: oversized bodies, unknown routes, wrong verbs.
+
+use sparrowrl::bench::scenario::bench_model;
+use sparrowrl::daemon::{
+    http_get, http_post, AlertRules, Daemon, DaemonConfig, DaemonHandle, SseClient,
+};
+use sparrowrl::rt::SyntheticCompute;
+use sparrowrl::session::{RunSpec, Session};
+use sparrowrl::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+fn daemon(max_sessions: usize, actor_pool: usize) -> DaemonHandle {
+    Daemon::spawn(DaemonConfig {
+        addr: "127.0.0.1:0".to_string(), // ephemeral port per test
+        max_sessions,
+        actor_pool,
+        rules: AlertRules::default(),
+        ..DaemonConfig::default()
+    })
+    .expect("spawn daemon")
+}
+
+/// A submission body matching [`direct_checksum`]'s spec exactly.
+fn spec_json(seed: u64, steps: u64) -> String {
+    format!(
+        "{{\"model\":\"syn-xs\",\"steps\":{steps},\"sft_steps\":1,\"actors\":2,\
+         \"group_size\":2,\"max_new_tokens\":5,\"seed\":{seed}}}"
+    )
+}
+
+/// The same run executed directly through the `Session` API on the same
+/// synthetic compute the daemon provisions — the bitwise ground truth.
+fn direct_checksum(seed: u64, steps: u64) -> String {
+    let plan = RunSpec::synthetic()
+        .actors(2)
+        .steps(steps)
+        .sft_steps(1)
+        .group_size(2)
+        .max_new_tokens(5)
+        .seed(seed)
+        .deterministic()
+        .build()
+        .expect("legal spec");
+    let model = bench_model("syn-xs").expect("bench preset");
+    let comp = SyntheticCompute::new(model.b_train, model.b_gen, model.max_seq)
+        .with_delays(Duration::from_millis(4), Duration::from_millis(3));
+    let report = Session::start_with_compute(&plan, model.layout.clone(), comp)
+        .expect("start session")
+        .join()
+        .expect("run succeeds");
+    report.steps.last().expect("has steps").checksum_hex()
+}
+
+fn submit(addr: SocketAddr, body: &str) -> (u16, Json) {
+    let resp = http_post(addr, "/runs", body).expect("POST /runs");
+    let json = Json::parse(&resp.body).unwrap_or(Json::Null);
+    (resp.status, json)
+}
+
+fn run_status(addr: SocketAddr, id: &str) -> Json {
+    let resp = http_get(addr, &format!("/runs/{id}")).expect("GET /runs/{id}");
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    Json::parse(&resp.body).expect("snapshot is JSON")
+}
+
+fn wait_until<F: FnMut() -> bool>(what: &str, timeout: Duration, mut done: F) {
+    let start = Instant::now();
+    while !done() {
+        assert!(start.elapsed() < timeout, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+// ---------------------------------------------------------------------
+// (a) concurrent multiplexed runs == direct Session runs, bit for bit
+// ---------------------------------------------------------------------
+
+#[test]
+fn two_concurrent_runs_stream_to_completion_with_direct_session_checksums() {
+    let handle = daemon(4, 16);
+    let addr = handle.addr();
+
+    let (st1, body1) = submit(addr, &spec_json(11, 4));
+    let (st2, body2) = submit(addr, &spec_json(22, 4));
+    assert_eq!(st1, 201, "{body1:?}");
+    assert_eq!(st2, 201, "{body2:?}");
+    let id1 = body1.get("id").and_then(Json::as_str).expect("id").to_string();
+    let id2 = body2.get("id").and_then(Json::as_str).expect("id").to_string();
+    assert_ne!(id1, id2);
+
+    // Tail both SSE streams to the end. The stream replays from seq 0
+    // (both submissions already happened), so nothing is missed; the
+    // server closes each stream after the terminal status frame.
+    let mut checksums = Vec::new();
+    for id in [&id1, &id2] {
+        let mut sse = SseClient::connect(addr, &format!("/runs/{id}/events")).expect("SSE");
+        let mut events = Vec::new();
+        while let Some(ev) = sse.next_event().expect("SSE read") {
+            events.push(ev);
+        }
+        // Event taxonomy: per-step `step`, per-version `delta`+`commit`,
+        // lifecycle `status` frames, with monotonically increasing ids.
+        for kind in ["status", "step", "delta", "commit"] {
+            assert!(events.iter().any(|e| e.event == kind), "run {id}: no {kind} event");
+        }
+        let ids: Vec<u64> = events.iter().filter_map(|e| e.id).collect();
+        assert!(ids.windows(2).all(|w| w[0] < w[1]), "SSE seq not monotonic: {ids:?}");
+        let last = events.last().expect("events");
+        assert_eq!(last.event, "status");
+        let data = Json::parse(&last.data).expect("status data");
+        assert_eq!(data.get("status").and_then(Json::as_str), Some("finished"));
+        let sum = data
+            .get("final_checksum")
+            .and_then(Json::as_str)
+            .expect("terminal status carries the checksum")
+            .to_string();
+        checksums.push(sum);
+    }
+
+    // The multiplexed runs committed exactly what direct sessions do.
+    assert_eq!(checksums[0], direct_checksum(11, 4));
+    assert_eq!(checksums[1], direct_checksum(22, 4));
+    // Different seeds diverge — no cross-session state bleed.
+    assert_ne!(checksums[0], checksums[1]);
+
+    // The snapshot agrees with the stream.
+    let snap = run_status(addr, &id1);
+    assert_eq!(snap.get("status").and_then(Json::as_str), Some("finished"));
+    assert_eq!(
+        snap.get("final_checksum").and_then(Json::as_str),
+        Some(checksums[0].as_str())
+    );
+    let analytics = snap.get("analytics").expect("analytics block");
+    assert_eq!(analytics.get("steps").and_then(Json::as_u64), Some(4));
+    assert!(analytics.get("tokens_per_dollar").and_then(Json::as_f64).is_some());
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// (b) abort mid-run
+// ---------------------------------------------------------------------
+
+#[test]
+fn abort_lands_promptly_and_is_idempotent() {
+    let handle = daemon(2, 8);
+    let addr = handle.addr();
+    // ~7ms emulated compute per step: would run for half a minute.
+    let (status, body) = submit(addr, &spec_json(7, 5000));
+    assert_eq!(status, 201);
+    let id = body.get("id").and_then(Json::as_str).expect("id").to_string();
+
+    wait_until("run to start", Duration::from_secs(10), || {
+        run_status(addr, &id).get("status").and_then(Json::as_str) == Some("running")
+    });
+    let aborted_at = Instant::now();
+    let resp = http_post(addr, &format!("/runs/{id}/abort"), "").expect("abort");
+    assert_eq!(resp.status, 200);
+    wait_until("abort to land", Duration::from_secs(5), || {
+        run_status(addr, &id).get("status").and_then(Json::as_str) == Some("aborted")
+    });
+    assert!(aborted_at.elapsed() < Duration::from_secs(5));
+    // Idempotent: aborting a terminal run is a 200 no-op.
+    let again = http_post(addr, &format!("/runs/{id}/abort"), "").expect("abort again");
+    assert_eq!(again.status, 200);
+    assert_eq!(
+        run_status(addr, &id).get("status").and_then(Json::as_str),
+        Some("aborted")
+    );
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// (c) typed submission errors
+// ---------------------------------------------------------------------
+
+#[test]
+fn illegal_specs_return_typed_422s_and_malformed_json_400s() {
+    let handle = daemon(2, 8);
+    let addr = handle.addr();
+    let kind_of = |body: &str| {
+        Json::parse(body)
+            .ok()
+            .and_then(|j| j.get("error")?.get("kind")?.as_str().map(str::to_string))
+    };
+
+    // Illegal spec → 422 with the typed SpecError variant name.
+    let resp = http_post(addr, "/runs", "{\"actors\": 0}").expect("post");
+    assert_eq!(resp.status, 422, "{}", resp.body);
+    assert_eq!(kind_of(&resp.body).as_deref(), Some("ZeroActors"));
+
+    let resp = http_post(addr, "/runs", "{\"wan\": \"wan-2\", \"actors\": 3}").expect("post");
+    assert_eq!(resp.status, 422);
+    assert_eq!(kind_of(&resp.body).as_deref(), Some("ActorsConflictWithWan"));
+
+    let resp = http_post(addr, "/runs", "{\"model\": \"syn-xxl\"}").expect("post");
+    assert_eq!(resp.status, 422);
+    assert_eq!(kind_of(&resp.body).as_deref(), Some("UnknownModel"));
+
+    // A run that can never fit the pool is a typed daemon-level 422.
+    let resp = http_post(addr, "/runs", "{\"actors\": 9}").expect("post");
+    assert_eq!(resp.status, 422);
+    assert_eq!(kind_of(&resp.body).as_deref(), Some("ExceedsActorPool"));
+
+    // Shape problems are 400s.
+    for bad in ["not json", "[1,2]", "{\"stepz\": 3}", "{\"steps\": \"three\"}"] {
+        let resp = http_post(addr, "/runs", bad).expect("post");
+        assert_eq!(resp.status, 400, "body {bad:?} -> {}", resp.body);
+        assert_eq!(kind_of(&resp.body).as_deref(), Some("Parse"), "{bad:?}");
+    }
+    // Nothing was admitted.
+    let list = http_get(addr, "/runs").expect("list");
+    assert_eq!(
+        Json::parse(&list.body).unwrap().get("runs").and_then(Json::as_arr).map(<[Json]>::len),
+        Some(0)
+    );
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// (d) admission: queue past the cap, never oversubscribe
+// ---------------------------------------------------------------------
+
+#[test]
+fn third_run_past_the_session_cap_queues_then_completes() {
+    let handle = daemon(2, 4); // 2 session slots, pool of 4 (2 runs x 2 actors)
+    let addr = handle.addr();
+    let (s1, b1) = submit(addr, &spec_json(1, 40));
+    let (s2, b2) = submit(addr, &spec_json(2, 40));
+    let (s3, b3) = submit(addr, &spec_json(3, 4));
+    assert_eq!((s1, s2, s3), (201, 201, 201));
+    // The first two took both session slots (and the whole pool); the
+    // third must be admitted as queued — not rejected, not started.
+    assert_eq!(b3.get("status").and_then(Json::as_str), Some("queued"));
+    let id3 = b3.get("id").and_then(Json::as_str).expect("id").to_string();
+
+    // While anything is live, the shared pool is never oversubscribed.
+    let all_ids: Vec<String> = [&b1, &b2, &b3]
+        .iter()
+        .map(|b| b.get("id").and_then(Json::as_str).unwrap().to_string())
+        .collect();
+    wait_until("all runs to finish", Duration::from_secs(60), || {
+        let idx = http_get(addr, "/").expect("index");
+        let pool = Json::parse(&idx.body).unwrap();
+        let pool = pool.get("pool").expect("pool block");
+        let used = pool.get("actors_in_use").and_then(Json::as_u64).unwrap();
+        let running = pool.get("running").and_then(Json::as_u64).unwrap();
+        assert!(used <= 4, "pool oversubscribed: {used} slots in use");
+        assert!(running <= 2, "session cap breached: {running} running");
+        all_ids.iter().all(|id| {
+            run_status(addr, id).get("status").and_then(Json::as_str) == Some("finished")
+        })
+    });
+    // The queued run produced the same bits it would have produced alone.
+    let snap = run_status(addr, &id3);
+    assert_eq!(
+        snap.get("final_checksum").and_then(Json::as_str),
+        Some(direct_checksum(3, 4).as_str())
+    );
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// (e) hostile input on the wire
+// ---------------------------------------------------------------------
+
+#[test]
+fn hostile_requests_get_bounded_typed_rejections() {
+    let handle = daemon(2, 8);
+    let addr = handle.addr();
+
+    // Unknown route / unknown run / wrong verb.
+    assert_eq!(http_get(addr, "/nope").expect("404").status, 404);
+    assert_eq!(http_get(addr, "/runs/r999").expect("404").status, 404);
+    assert_eq!(http_post(addr, "/runs/r999/abort", "").expect("404").status, 404);
+    assert_eq!(http_post(addr, "/healthz", "").expect("405").status, 405);
+    assert_eq!(http_post(addr, "/runs/r1/events", "").expect("405").status, 405);
+
+    // A hostile Content-Length is rejected from the header alone —
+    // before any body bytes exist to read, and before any allocation.
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    write!(stream, "POST /runs HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n").expect("send");
+    stream.flush().expect("flush");
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp).expect("read 413");
+    assert!(resp.starts_with("HTTP/1.1 413"), "{resp}");
+
+    // Garbage framing gets a 400, not a hang or a panic.
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    write!(stream, "EXPLODE\r\n\r\n").expect("send");
+    stream.flush().expect("flush");
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp).expect("read 400");
+    assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+
+    // The daemon is still healthy afterwards.
+    let health = http_get(addr, "/healthz").expect("healthz");
+    assert_eq!(health.status, 200);
+    assert_eq!(health.body, "ok\n");
+    handle.shutdown();
+}

@@ -13,7 +13,7 @@
 use sparrowrl::delta::ModelLayout;
 use sparrowrl::netsim::Link;
 use sparrowrl::rt::{run_with_compute, DistributionSpec, ExecMode, SyntheticCompute};
-use sparrowrl::session::{Backend, Event, RunSpec, Session, SpecError, SpecNote};
+use sparrowrl::session::{Backend, Event, RunSpec, Session, SessionStatus, SpecError, SpecNote};
 use sparrowrl::transport::{SimNetConfig, TcpConfig};
 use std::time::{Duration, Instant};
 
@@ -331,6 +331,48 @@ fn dropping_an_unjoined_session_aborts_and_reaps_the_run() {
         // Drop without join(): Drop must cancel and reap the thread.
     }
     assert!(t0.elapsed() < Duration::from_secs(60), "drop did not reap the session");
+}
+
+// ---------------------------------------------------------------------
+// (c') non-blocking status probes
+// ---------------------------------------------------------------------
+
+#[test]
+fn status_probe_tracks_progress_and_terminal_states_without_consuming_events() {
+    // Success path: status() moves Running{..} -> Finished while the
+    // event stream is untouched (the probe must not consume it).
+    let plan = base_spec(3, 9).pipelined().build().unwrap();
+    let session = Session::start_with_compute(&plan, layout(), comp()).unwrap();
+    let probe = session.probe();
+    assert!(matches!(session.status(), SessionStatus::Running { .. } | SessionStatus::Finished));
+    let t0 = Instant::now();
+    while !probe.is_finished() {
+        assert!(t0.elapsed() < Duration::from_secs(60), "run never reached terminal status");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(session.status(), SessionStatus::Finished);
+    assert_eq!(probe.status().name(), "finished");
+    // The stream was not consumed by polling: the full report (with all
+    // 3 steps) still comes out of join().
+    let report = session.join().unwrap();
+    assert_eq!(report.steps.len(), 3);
+
+    // Abort path: a probe-issued abort lands as SessionStatus::Aborted.
+    let plan = base_spec(500, 9).pipelined().build().unwrap();
+    let slow = comp().with_delays(Duration::from_millis(5), Duration::from_millis(5));
+    let mut session = Session::start_with_compute(&plan, layout(), slow).unwrap();
+    assert!(session.recv().is_some());
+    let probe = session.probe();
+    assert!(!probe.is_finished());
+    probe.abort();
+    let t0 = Instant::now();
+    while !session.is_finished() {
+        assert!(t0.elapsed() < Duration::from_secs(60), "abort never landed in status()");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(session.status(), SessionStatus::Aborted);
+    assert!(session.status().is_terminal());
+    session.join().expect_err("aborted run has no report");
 }
 
 // ---------------------------------------------------------------------
