@@ -1,0 +1,150 @@
+//! Model-registry benches (PR 10), three tiers:
+//!
+//! 1. Dedup ratio: N fine-tunes published off one shared SFT base —
+//!    logical bytes (every model's base + fold, counted per model) vs
+//!    physical bytes in the content-addressed pool. The base must be
+//!    stored exactly once no matter how many runs publish it.
+//! 2. Swap payload: the composed hot-swap delta between two published
+//!    fine-tunes vs the dense snapshot a registry-less retarget would
+//!    ship — the paper's bandwidth argument applied to serving.
+//! 3. Swap makespan: wall clock of composing + applying the swap delta
+//!    (the actor-visible retarget latency, network excluded).
+//!
+//! Emits `BENCH_registry.json`. Set `BENCH_QUICK=1` for a quick run.
+
+use sparrowrl::bench::{Better, ResultRecord, ResultSet};
+use sparrowrl::delta::{apply_delta, policy_witness, DurableStore, ModelLayout, ModelRegistry};
+use sparrowrl::rt::{ExecMode, RunReport, SyntheticCompute};
+use sparrowrl::session::{RunSpec, Session};
+use sparrowrl::util::bench::Bencher;
+
+fn layout() -> ModelLayout {
+    ModelLayout::transformer("syn-registry-bench", 512, 128, 2, 256)
+}
+
+/// Every fine-tune shares the seed + SFT config (identical base policy)
+/// and differs in RL step count (distinct chains).
+fn spec(steps: u64) -> RunSpec {
+    RunSpec::synthetic()
+        .actors(2)
+        .steps(steps)
+        .sft_steps(2)
+        .group_size(2)
+        .max_new_tokens(6)
+        .lr_rl(1e-2)
+        .segment_bytes(4 << 10)
+        .seed(67)
+        .deterministic()
+}
+
+fn run(spec: RunSpec) -> RunReport {
+    let plan = spec.mode(ExecMode::Sequential).build().expect("valid spec");
+    Session::start_with_compute(&plan, layout(), SyntheticCompute::new(16, 8, 64))
+        .expect("start session")
+        .join()
+        .expect("session run")
+}
+
+fn dir_size(dir: &std::path::Path) -> u64 {
+    std::fs::read_dir(dir)
+        .map(|rd| rd.filter_map(|e| e.ok()).filter_map(|e| e.metadata().ok()).map(|m| m.len()).sum())
+        .unwrap_or(0)
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let n_models: u64 = if quick { 3 } else { 5 };
+    let mut b = Bencher::new(1, if quick { 2 } else { 3 });
+    let mut derived: Vec<(String, f64, Better)> = Vec::new();
+    let scratch =
+        std::env::temp_dir().join(format!("sprw-bench-registry-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&scratch);
+    std::fs::create_dir_all(&scratch).expect("scratch dir");
+    let reg_dir = scratch.join("registry");
+    let l = layout();
+
+    // -- 1. publish N fine-tunes off one base, measure dedup -------------
+    for i in 0..n_models {
+        let run_dir = scratch.join(format!("run{i}"));
+        run(spec(2 + i).persist_dir(&run_dir).publish_to(&reg_dir, &format!("ft-{i}")));
+    }
+    let reg = ModelRegistry::open(&reg_dir).unwrap_or_else(|e| panic!("open registry: {e}"));
+    assert_eq!(reg.models().len(), n_models as usize);
+    let base_objects = reg.bases().len();
+    // Logical bytes: what N independent single-run stores would hold for
+    // base + folded artifact; physical: the shared pool on disk.
+    let logical: u64 = reg
+        .models()
+        .values()
+        .map(|m| {
+            reg.bases()[&m.base].bytes + m.versions.iter().map(|v| v.payload_bytes).sum::<u64>()
+        })
+        .sum();
+    let physical = dir_size(&reg_dir.join("objects"));
+    let dedup_ratio = logical as f64 / physical.max(1) as f64;
+    println!(
+        "dedup: {n_models} fine-tunes, {base_objects} base object(s), logical {} -> pool {} \
+         ({dedup_ratio:.2}x)",
+        sparrowrl::util::fmt_bytes(logical),
+        sparrowrl::util::fmt_bytes(physical),
+    );
+    assert_eq!(base_objects, 1, "N fine-tunes off one base must store the base once");
+    derived.push(("base_objects_stored".into(), base_objects as f64, Better::Exact));
+    derived.push(("registry_pool_bytes".into(), physical as f64, Better::Lower));
+    derived.push(("dedup_ratio".into(), dedup_ratio, Better::Higher));
+
+    // -- 2. swap payload vs dense snapshot -------------------------------
+    let (src, tgt) = (("ft-0", 2u64), (format!("ft-{}", n_models - 1), n_models + 1));
+    let composed = reg
+        .compose_swap(&l, (src.0, src.1), (&tgt.0, tgt.1))
+        .unwrap_or_else(|e| panic!("compose swap: {e}"));
+    let payload = sparrowrl::delta::encode_delta(&composed).len() as u64;
+    let snapshot = l.total_params() * 2;
+    assert!(payload < snapshot, "swap payload {payload} must beat dense snapshot {snapshot}");
+    println!(
+        "swap {}@v{} -> {}@v{}: payload {} vs dense snapshot {} ({:.1}x smaller)",
+        src.0,
+        src.1,
+        tgt.0,
+        tgt.1,
+        sparrowrl::util::fmt_bytes(payload),
+        sparrowrl::util::fmt_bytes(snapshot),
+        snapshot as f64 / payload.max(1) as f64,
+    );
+    derived.push(("swap_payload_bytes".into(), payload as f64, Better::Lower));
+    derived.push(("dense_snapshot_bytes".into(), snapshot as f64, Better::Lower));
+    derived
+        .push(("swap_reduction".into(), snapshot as f64 / payload.max(1) as f64, Better::Higher));
+
+    // -- 3. swap makespan (compose + apply, witness-checked) -------------
+    let store = DurableStore::open(&scratch.join("run0")).expect("recover source run");
+    let actor_policy = store.reconstruct(&l, src.1).expect("reconstruct source");
+    let want = reg.witness(&tgt.0, tgt.1).expect("target witness");
+    let swap_s = b
+        .bench("swap compose + apply", || {
+            let d = reg
+                .compose_swap(&l, (src.0, src.1), (&tgt.0, tgt.1))
+                .unwrap_or_else(|e| panic!("compose swap: {e}"));
+            let mut p = actor_policy.clone();
+            apply_delta(&mut p, &d);
+            assert_eq!(policy_witness(&p), want, "swap diverged from published witness");
+            std::hint::black_box(p);
+        })
+        .median
+        .as_secs_f64();
+    println!("swap makespan (compose + apply): {:.1} ms", swap_s * 1e3);
+    derived.push(("swap_makespan_s".into(), swap_s, Better::Lower));
+
+    let _ = std::fs::remove_dir_all(&scratch);
+    // Harness-schema emit: byte counts and object counts are
+    // deterministic (gated); timings are machine-dependent gauges.
+    let mut set = ResultSet::from_bencher("bench-registry", &b);
+    let mut rec = ResultRecord::new("bench-registry/derived");
+    for (k, v, better) in &derived {
+        rec = if k.ends_with("_s") { rec.gauge(k, *v) } else { rec.gate(k, *v, *better) };
+    }
+    set.push(rec);
+    let out = std::path::Path::new("BENCH_registry.json");
+    set.write(out).expect("write bench json");
+    println!("bench results written to {}", out.display());
+}

@@ -87,7 +87,7 @@ struct RetainedVersion {
 /// makes the reconstruction bit-exact for *both* apply modes — bf16
 /// addition rounds, so `round(round(a + v) - v)` need not equal `a`, but
 /// re-assigning the captured `a` always does.
-fn invert_delta(params: &ParamSet, delta: &SparseDelta) -> SparseDelta {
+pub(crate) fn invert_delta(params: &ParamSet, delta: &SparseDelta) -> SparseDelta {
     let tensors = delta
         .tensors
         .iter()

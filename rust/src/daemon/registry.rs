@@ -456,6 +456,14 @@ fn frame_for(ev: &Event) -> Option<(&'static str, Json)> {
                 .set("requeued", *requeued)
                 .set("reason", reason.to_string()),
         ),
+        Event::Swapped { actor, model, version, bytes } => (
+            "swap",
+            Json::obj()
+                .set("actor", *actor)
+                .set("model", model.as_str())
+                .set("version", *version)
+                .set("bytes", *bytes),
+        ),
         Event::Autoscale { version, decision } => (
             "autoscale",
             Json::obj()

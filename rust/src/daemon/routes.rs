@@ -9,18 +9,26 @@
 //! | `GET  /runs/{id}`            | full snapshot (status, analytics, checksum) |
 //! | `POST /runs/{id}/abort`      | cooperative abort (idempotent)              |
 //! | `GET  /runs/{id}/events`     | SSE: replay + live tail of the event stream |
+//! | `POST /runs/{id}/swap`       | script a hot-swap onto a *queued* run       |
+//! | `GET  /models`               | model-registry listing                      |
+//! | `POST /models`               | publish a durable run into the registry     |
 //! | `GET  /alerts`               | daemon-wide fired alerts                    |
 //!
 //! Error contract: malformed JSON / unknown fields → 400 with
 //! `{"error":{"kind":"Parse",...}}`; a spec that parses but fails the
 //! builder's legality checks → 422 carrying the *typed*
 //! [`SpecError`](crate::session::SpecError) variant name as `kind`, so
-//! clients can branch without string-matching prose.
+//! clients can branch without string-matching prose. Registry routes
+//! carry the typed [`RecoveryError`](crate::delta::RecoveryError)
+//! taxonomy the same way: unknown model/version → 404, a daemon started
+//! without `--registry` (or a registry/run-dir mixup, or a manifest
+//! conflict) → 409.
 
 use super::http::{self, Request, Response};
-use super::registry::RunEntry;
+use super::registry::{RunEntry, RunPhase};
 use super::state::{DaemonState, SubmitError};
 use crate::bench::scenario::{bench_model, BenchModel};
+use crate::delta::{expect_run_dir, DurableStore, ModelRegistry, RecoveryError};
 use crate::session::{Backend, RunPlan, RunSpec, SpecError};
 use crate::util::json::Json;
 use std::io::Write;
@@ -40,6 +48,8 @@ pub(crate) fn handle(state: &Arc<DaemonState>, req: &Request, stream: &mut TcpSt
         ("GET", "/healthz") => Response::text(200, "ok\n"),
         ("POST", "/runs") => submit(state, req),
         ("GET", "/runs") => Response::json(200, state.list_json().to_string()),
+        ("GET", "/models") => list_models(state),
+        ("POST", "/models") => publish_model(state, req),
         ("GET", "/alerts") => Response::json(200, state.alerts_json().to_string()),
         (method, path) => match run_subroute(path) {
             Some((id, tail)) => match (method, tail) {
@@ -58,7 +68,11 @@ pub(crate) fn handle(state: &Arc<DaemonState>, req: &Request, stream: &mut TcpSt
                     Some(entry) => return stream_events(state, &entry, stream),
                     None => not_found(id),
                 },
-                (_, "") | (_, "/abort") | (_, "/events") => method_not_allowed(),
+                ("POST", "/swap") => match state.find(id) {
+                    Some(entry) => swap_run(state, &entry, req),
+                    None => not_found(id),
+                },
+                (_, "") | (_, "/abort") | (_, "/events") | (_, "/swap") => method_not_allowed(),
                 _ => Response::json(404, error_body("NotFound", "no such route")),
             },
             None => match (method, path) {
@@ -101,6 +115,9 @@ fn index(state: &Arc<DaemonState>) -> Response {
                 "GET /runs/{id}",
                 "POST /runs/{id}/abort",
                 "GET /runs/{id}/events",
+                "POST /runs/{id}/swap",
+                "GET /models",
+                "POST /models",
                 "GET /alerts",
             ],
         );
@@ -119,6 +136,173 @@ pub(crate) fn error_body(kind: &str, message: &str) -> String {
     Json::obj()
         .set("error", Json::obj().set("kind", kind).set("message", message))
         .to_string()
+}
+
+/// Map the registry's typed error taxonomy onto the HTTP contract:
+/// unknown names/versions are 404s, structural conflicts (wrong kind of
+/// directory, manifest contradictions, base mismatches) are 409s, and
+/// anything else (I/O, corrupt objects) is a 500.
+fn registry_error(err: &RecoveryError) -> Response {
+    let (status, kind) = match err {
+        RecoveryError::UnknownModel { .. } => (404, "UnknownModel"),
+        RecoveryError::UnknownModelVersion { .. } => (404, "UnknownModelVersion"),
+        RecoveryError::NotARegistry { .. } => (409, "NotARegistry"),
+        RecoveryError::NotARun { .. } => (409, "NotARun"),
+        RecoveryError::RegistryConflict { .. } => (409, "RegistryConflict"),
+        RecoveryError::BaseMismatch { .. } => (409, "BaseMismatch"),
+        _ => (500, "Registry"),
+    };
+    Response::json(status, error_body(kind, &err.to_string()))
+}
+
+/// The registry the daemon was started with, or the 409 every registry
+/// route returns without one.
+fn open_registry(state: &Arc<DaemonState>) -> Result<ModelRegistry, Response> {
+    let Some(dir) = &state.cfg.registry else {
+        return Err(Response::json(
+            409,
+            error_body("NoRegistry", "daemon was started without --registry DIR"),
+        ));
+    };
+    ModelRegistry::open(dir).map_err(|e| registry_error(&e))
+}
+
+/// `GET /models`: the registry namespace (models, versions, shared
+/// bases) as JSON.
+fn list_models(state: &Arc<DaemonState>) -> Response {
+    match open_registry(state) {
+        Ok(reg) => Response::json(200, reg.to_json().to_string()),
+        Err(resp) => resp,
+    }
+}
+
+/// `POST /models`: publish a durable run directory into the registry.
+/// Body: `{"run_dir": "...", "name": "...", "model": "syn-xs",
+/// "version": N?}` — `model` names the bench layout preset the run was
+/// trained with (the registry stores only its fingerprint).
+fn publish_model(state: &Arc<DaemonState>, req: &Request) -> Response {
+    let mut reg = match open_registry(state) {
+        Ok(reg) => reg,
+        Err(resp) => return resp,
+    };
+    let body = match req.body_str() {
+        Ok(s) => s,
+        Err(e) => return Response::json(400, error_body("Parse", &e.to_string())),
+    };
+    let json = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return Response::json(400, error_body("Parse", &e)),
+    };
+    let Some(run_dir) = json.get("run_dir").and_then(Json::as_str).map(str::to_string) else {
+        return Response::json(400, error_body("Parse", "field \"run_dir\" must be a string"));
+    };
+    let Some(name) = json.get("name").and_then(Json::as_str).map(str::to_string) else {
+        return Response::json(400, error_body("Parse", "field \"name\" must be a string"));
+    };
+    let model_name = json
+        .get("model")
+        .and_then(Json::as_str)
+        .unwrap_or("syn-xs")
+        .to_string();
+    let version = json.get("version").and_then(Json::as_u64);
+    let Some(model) = bench_model(&model_name) else {
+        return Response::json(
+            422,
+            error_body("UnknownModel", &format!("unknown bench model {model_name:?}")),
+        );
+    };
+    if let Err(e) = expect_run_dir(std::path::Path::new(&run_dir)) {
+        return registry_error(&e);
+    }
+    let store = match DurableStore::open(&run_dir) {
+        Ok(s) => s,
+        Err(e) => return registry_error(&e),
+    };
+    match reg.publish(&store, &model.layout, &name, version) {
+        Ok(report) => Response::json(
+            201,
+            Json::obj()
+                .set("model", report.model.as_str())
+                .set("version", report.version)
+                .set("object", report.object.as_str())
+                .set("payload_bytes", report.payload_bytes)
+                .set("base", report.base.as_str())
+                .set("base_was_new", report.base_was_new)
+                .set("object_was_new", report.object_was_new)
+                .to_string(),
+        ),
+        Err(e) => registry_error(&e),
+    }
+}
+
+/// `POST /runs/{id}/swap`: amend a **queued** run's plan with a scripted
+/// hot-swap. Body: `{"actor": N, "model": "...", "version": N}`. The
+/// target must already be published; a running or terminal run is a 409
+/// (`NotQueued`) — daemon swaps are scripted at admission, executed by
+/// the runtime's swap epilogue.
+fn swap_run(state: &Arc<DaemonState>, entry: &RunEntry, req: &Request) -> Response {
+    let reg = match open_registry(state) {
+        Ok(reg) => reg,
+        Err(resp) => return resp,
+    };
+    let reg_dir = state.cfg.registry.as_ref().expect("open_registry checked");
+    let body = match req.body_str() {
+        Ok(s) => s,
+        Err(e) => return Response::json(400, error_body("Parse", &e.to_string())),
+    };
+    let json = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return Response::json(400, error_body("Parse", &e)),
+    };
+    let Some(actor) = json.get("actor").and_then(Json::as_u64) else {
+        return Response::json(
+            400,
+            error_body("Parse", "field \"actor\" must be a non-negative integer"),
+        );
+    };
+    let Some(model) = json.get("model").and_then(Json::as_str).map(str::to_string) else {
+        return Response::json(400, error_body("Parse", "field \"model\" must be a string"));
+    };
+    let Some(version) = json.get("version").and_then(Json::as_u64) else {
+        return Response::json(
+            400,
+            error_body("Parse", "field \"version\" must be a non-negative integer"),
+        );
+    };
+    // Validate the target against the registry before touching the run —
+    // an unknown fine-tune is a 404 regardless of run phase.
+    if let Err(e) = reg.version_ref(&model, version) {
+        return registry_error(&e);
+    }
+    let mut log = entry.shared.lock();
+    if log.phase != RunPhase::Queued {
+        return Response::json(
+            409,
+            error_body(
+                "NotQueued",
+                &format!(
+                    "run {} is {}; swaps are scripted onto queued runs only",
+                    entry.meta.id,
+                    log.phase.name()
+                ),
+            ),
+        );
+    }
+    let Some((plan, _)) = log.pending.as_mut() else {
+        return Response::json(409, error_body("NotQueued", "run has no pending plan"));
+    };
+    match plan.add_swap(reg_dir, actor as u32, &model, version) {
+        Ok(()) => Response::json(
+            200,
+            Json::obj()
+                .set("run", entry.meta.id.as_str())
+                .set("actor", actor)
+                .set("model", model.as_str())
+                .set("version", version)
+                .to_string(),
+        ),
+        Err(err) => Response::json(422, error_body(err.name(), &err.to_string())),
+    }
 }
 
 /// `POST /runs`: parse → build → admit.

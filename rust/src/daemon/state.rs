@@ -48,6 +48,9 @@ pub struct DaemonConfig {
     pub max_connections: usize,
     /// Alert thresholds applied to every hosted run.
     pub rules: AlertRules,
+    /// Model registry directory served under `/models` and consulted by
+    /// `POST /runs/{id}/swap`. `None` disables both (409 `no_registry`).
+    pub registry: Option<std::path::PathBuf>,
 }
 
 impl Default for DaemonConfig {
@@ -59,6 +62,7 @@ impl Default for DaemonConfig {
             max_runs: 256,
             max_connections: 64,
             rules: AlertRules::default(),
+            registry: None,
         }
     }
 }

@@ -41,11 +41,16 @@ pub mod encode;
 pub mod extract;
 pub mod layout;
 pub mod naive;
+pub mod registry;
 pub mod store;
 pub mod stream;
 pub mod varint;
 
 pub use checkpoint::{CheckpointStore, DeltaCheckpoint};
+pub use registry::{
+    expect_run_dir, swap_delta, GcStats, ModelManifest, ModelRegistry, PublishReport, SwapPin,
+    VersionRef,
+};
 pub use store::{
     merge_chain, policy_witness, CompactStats, DurableStore, JournalRecord, MergeError,
     RecoveryError, ResumePoint, SeedRecord,

@@ -1,0 +1,959 @@
+//! Multi-run model registry: N fine-tunes stored as compacted delta
+//! chains off one shared, content-addressed base object — the serving
+//! side of the paper's lossless-sparse-delta trick (ROADMAP item 4, the
+//! gagansuie/sparse workload: many adapters, one base, O(rho) bytes per
+//! model instead of O(N) dense snapshots).
+//!
+//! Layout under a registry directory:
+//!
+//! ```text
+//! registry_dir/
+//!   registry.json            layout marker: {"schema": 1}
+//!   objects/<sha256>.sprw    shared content-addressed pool — base policy
+//!                            snapshots AND folded delta artifacts; one
+//!                            byte-identical object is stored exactly once
+//!                            no matter how many models reference it
+//!   bases/<sha256>           base ref: {"model_fp", "bytes"}
+//!   models/<name>/model.json per-model manifest: base sha + one entry per
+//!                            published version {version, object, witness,
+//!                            payload_bytes}
+//! ```
+//!
+//! Publishing a run folds its durable chain `D_1..D_w` through
+//! [`merge_chain`] into one artifact, verifies the fold reproduces the
+//! run's journaled witness, and writes everything content-addressed —
+//! so cross-run deduplication (N runs off one base, or two determinism
+//! replicas of the same run) falls out of the addressing for free.
+//!
+//! The **hot-swap composition**: to retarget an actor holding fine-tune
+//! A@v onto B@w without shipping a dense snapshot, ship
+//! `merge_chain([invert(chain_A vs base), chain_B])` — an Assign-mode
+//! delta over `support(A) ∪ support(B)` that resets A-only slots to base
+//! values and writes B's values everywhere it touched. Applied to the
+//! exact bits of A@v it yields the exact bits of B@w ([`swap_delta`],
+//! property-tested in `tests/registry_swap.rs`). The runtime drives it
+//! through the ordinary Seg/Commit staging machinery
+//! (`rt::pipeline::run_swap_script_*`).
+//!
+//! GC: objects are collected only when no model manifest references them
+//! AND no in-flight swap pin ([`SwapPin`]) holds them — the same counted
+//! pin idiom [`CheckpointStore::pin_chain`] uses for pending bootstraps,
+//! so a concurrent `gc` can never reclaim a base or version a swap
+//! composition is still reading.
+//!
+//! [`CheckpointStore::pin_chain`]: crate::delta::CheckpointStore::pin_chain
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use sha2::{Digest, Sha256};
+
+use crate::actor::invert_delta;
+use crate::delta::store::parse_hash;
+use crate::delta::{
+    apply_delta, merge_chain, policy_witness, DeltaCheckpoint, DurableStore, MergeError,
+    ModelLayout, ParamSet, RecoveryError, SparseDelta,
+};
+use crate::util::jsonl::Json;
+use crate::util::hex;
+
+/// Compose the sparse delta that moves a policy holding fine-tune
+/// `from` (applied over `base`) onto fine-tune `to` (over the same
+/// `base`), without materializing either dense policy on the wire.
+///
+/// `from` and `to` must be Assign-mode deltas off the same base version
+/// of the same model. The result spans `from.version -> to.version` and
+/// its support is `support(from) ∪ support(to)`: slots only `from`
+/// touched are reset to their base values, slots `to` touched get `to`'s
+/// values (last-writer-wins). Applying it to the exact bits of
+/// `base + from` yields the exact bits of `base + to` — bit-exact
+/// because every write is a re-assignment of captured bf16 bits, never
+/// arithmetic.
+pub fn swap_delta(
+    base: &ParamSet,
+    from: &SparseDelta,
+    to: &SparseDelta,
+) -> Result<SparseDelta, MergeError> {
+    if from.model_fp != to.model_fp {
+        return Err(MergeError::ModelMismatch);
+    }
+    if from.base_version != to.base_version {
+        return Err(MergeError::NonContiguous {
+            expected: from.base_version,
+            found: to.base_version,
+        });
+    }
+    // invert(from) spans from.version -> base; chaining `to` back out of
+    // the base satisfies merge_chain's contiguity check naturally.
+    let inv = invert_delta(base, from);
+    merge_chain(&[inv, to.clone()])
+}
+
+/// One published version of a model: the folded-chain object plus the
+/// journaled witness it must reconstruct to.
+#[derive(Debug, Clone)]
+pub struct VersionRef {
+    /// Version (in the source run's numbering) this object folds up to.
+    pub version: u64,
+    /// Content address of the folded delta artifact.
+    pub object: String,
+    /// SHA-256 policy witness of the reconstructed policy at `version`.
+    pub witness: [u8; 32],
+    /// Encoded bytes of the folded artifact.
+    pub payload_bytes: u64,
+}
+
+/// One model's manifest: which base it fine-tunes and the versions
+/// published for it.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    /// Model name (the `models/<name>/` directory).
+    pub name: String,
+    /// Layout fingerprint shared by every version.
+    pub model_fp: u64,
+    /// Content address of the shared base policy snapshot.
+    pub base: String,
+    /// Published versions, ascending.
+    pub versions: Vec<VersionRef>,
+}
+
+/// Base-object bookkeeping (`bases/<sha>` ref files).
+#[derive(Debug, Clone)]
+pub struct BaseRef {
+    /// Layout fingerprint of the snapshot.
+    pub model_fp: u64,
+    /// Dense snapshot bytes (2 per parameter).
+    pub bytes: u64,
+}
+
+/// What [`ModelRegistry::publish`] did.
+#[derive(Debug, Clone)]
+pub struct PublishReport {
+    /// Model name published under.
+    pub model: String,
+    /// Version published.
+    pub version: u64,
+    /// Content address of the folded chain artifact.
+    pub object: String,
+    /// Encoded bytes of the folded artifact.
+    pub payload_bytes: u64,
+    /// Content address of the (shared) base object.
+    pub base: String,
+    /// Dense bytes of the base snapshot.
+    pub base_bytes: u64,
+    /// `false` when the base object already existed (cross-run dedup hit).
+    pub base_was_new: bool,
+    /// `false` when the folded object already existed (identical chain
+    /// already published — e.g. a determinism replica).
+    pub object_was_new: bool,
+}
+
+/// What [`ModelRegistry::gc`] swept.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GcStats {
+    /// Objects examined in the pool.
+    pub scanned: usize,
+    /// Unreferenced, unpinned objects removed.
+    pub collected: usize,
+    /// Bytes those objects held.
+    pub collected_bytes: u64,
+    /// Objects kept **only** because a swap pin holds them.
+    pub retained_pinned: usize,
+}
+
+/// Counted object pins shared between a registry and its outstanding
+/// [`SwapPin`] guards (object id -> pin count).
+type PinMap = Arc<Mutex<BTreeMap<String, usize>>>;
+
+/// RAII guard over the objects a swap-delta composition reads (source
+/// object, target object, shared base). While any guard is alive,
+/// [`ModelRegistry::gc`] keeps those objects even if every manifest
+/// referencing them is unpublished mid-swap — the registry mirror of the
+/// pending-bootstrap chain pin. Dropping the guard releases the pins.
+pub struct SwapPin {
+    pins: PinMap,
+    ids: Vec<String>,
+}
+
+impl Drop for SwapPin {
+    fn drop(&mut self) {
+        let mut pins = self.pins.lock().expect("registry pin map poisoned");
+        for id in &self.ids {
+            if let Some(count) = pins.get_mut(id) {
+                *count -= 1;
+                if *count == 0 {
+                    pins.remove(id);
+                }
+            }
+        }
+    }
+}
+
+/// Multi-run namespace over content-addressed objects. See the module
+/// docs for layout and invariants.
+pub struct ModelRegistry {
+    root: PathBuf,
+    models: BTreeMap<String, ModelManifest>,
+    bases: BTreeMap<String, BaseRef>,
+    pins: PinMap,
+}
+
+/// A registry directory must never be confused with a single-run
+/// [`DurableStore`] persist dir: both hold an `objects/` pool, but a run
+/// dir has a `journal.jsonl` and a registry has a `registry.json`
+/// marker. Returns [`RecoveryError::NotARun`] when `dir` is a registry.
+pub fn expect_run_dir(dir: &Path) -> Result<(), RecoveryError> {
+    if dir.join("registry.json").exists() {
+        return Err(RecoveryError::NotARun { path: dir.to_path_buf() });
+    }
+    Ok(())
+}
+
+fn valid_model_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 128
+        && name
+            .bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b == b'-' || b == b'_' || b == b'.')
+        && !name.starts_with('.')
+}
+
+impl ModelRegistry {
+    /// Open (creating if absent) a registry directory. A directory
+    /// already holding a single-run durable store is rejected with
+    /// [`RecoveryError::NotARegistry`] instead of being silently
+    /// converted; a fresh/empty directory is initialized with the
+    /// `registry.json` marker.
+    pub fn open(root: impl Into<PathBuf>) -> Result<ModelRegistry, RecoveryError> {
+        let root = root.into();
+        let marker = root.join("registry.json");
+        if !marker.exists() {
+            if root.join("journal.jsonl").exists() {
+                return Err(RecoveryError::NotARegistry { path: root });
+            }
+            fs::create_dir_all(&root)?;
+            write_atomic(&root, &marker, Json::obj().set("schema", 1u64).to_string().as_bytes())?;
+        }
+        fs::create_dir_all(root.join("objects"))?;
+        fs::create_dir_all(root.join("bases"))?;
+        fs::create_dir_all(root.join("models"))?;
+        let mut reg = ModelRegistry {
+            root,
+            models: BTreeMap::new(),
+            bases: BTreeMap::new(),
+            pins: Arc::new(Mutex::new(BTreeMap::new())),
+        };
+        reg.load_bases()?;
+        reg.load_models()?;
+        Ok(reg)
+    }
+
+    /// Directory this registry lives under.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// All published models, by name.
+    pub fn models(&self) -> &BTreeMap<String, ModelManifest> {
+        &self.models
+    }
+
+    /// All recorded bases, by content address.
+    pub fn bases(&self) -> &BTreeMap<String, BaseRef> {
+        &self.bases
+    }
+
+    /// Manifest of `name`, or [`RecoveryError::UnknownModel`].
+    pub fn model(&self, name: &str) -> Result<&ModelManifest, RecoveryError> {
+        self.models
+            .get(name)
+            .ok_or_else(|| RecoveryError::UnknownModel { model: name.to_string() })
+    }
+
+    /// The published `version` of `name`, or a typed unknown-model /
+    /// unknown-version error.
+    pub fn version_ref(&self, name: &str, version: u64) -> Result<&VersionRef, RecoveryError> {
+        self.model(name)?
+            .versions
+            .iter()
+            .find(|v| v.version == version)
+            .ok_or_else(|| RecoveryError::UnknownModelVersion {
+                model: name.to_string(),
+                version,
+            })
+    }
+
+    /// Journaled policy witness of `name@version`.
+    pub fn witness(&self, name: &str, version: u64) -> Result<[u8; 32], RecoveryError> {
+        Ok(self.version_ref(name, version)?.witness)
+    }
+
+    /// Locate which published `(model, version)` a live policy witness
+    /// corresponds to — how the runtime identifies the fine-tune an
+    /// actor currently holds before composing a swap away from it.
+    pub fn locate(&self, witness: &[u8; 32]) -> Option<(String, u64)> {
+        for (name, m) in &self.models {
+            for v in &m.versions {
+                if &v.witness == witness {
+                    return Some((name.clone(), v.version));
+                }
+            }
+        }
+        None
+    }
+
+    // ------------------------------------------------------------------
+    // Object pool
+    // ------------------------------------------------------------------
+
+    fn object_path(&self, id: &str) -> PathBuf {
+        self.root.join("objects").join(format!("{id}.sprw"))
+    }
+
+    /// Content-addressed write (tmp + fsync + rename). Returns the id
+    /// and whether the object was actually new — `false` is the dedup
+    /// hit the registry exists for.
+    fn put_object(&self, bytes: &[u8]) -> Result<(String, bool), RecoveryError> {
+        let id = hex(&Sha256::digest(bytes));
+        let path = self.object_path(&id);
+        if path.exists() {
+            return Ok((id, false));
+        }
+        let tmp = self.root.join("objects").join(format!(".{id}.tmp"));
+        write_atomic_at(&tmp, &path, bytes)?;
+        Ok((id, true))
+    }
+
+    /// Read and content-verify an object from the pool.
+    fn read_object(&self, id: &str, referenced_by: u64) -> Result<Vec<u8>, RecoveryError> {
+        let path = self.object_path(id);
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Err(RecoveryError::MissingObject {
+                    version: referenced_by,
+                    id: id.to_string(),
+                })
+            }
+            Err(e) => return Err(e.into()),
+        };
+        if hex(&Sha256::digest(&bytes)) != id {
+            return Err(RecoveryError::ObjectHashMismatch {
+                version: referenced_by,
+                id: id.to_string(),
+            });
+        }
+        Ok(bytes)
+    }
+
+    // ------------------------------------------------------------------
+    // Manifest persistence
+    // ------------------------------------------------------------------
+
+    fn load_bases(&mut self) -> Result<(), RecoveryError> {
+        for entry in fs::read_dir(self.root.join("bases"))? {
+            let path = entry?.path();
+            let name = path.file_name().and_then(|s| s.to_str()).unwrap_or("").to_string();
+            if name.starts_with('.') || parse_hash(&name).is_none() {
+                continue;
+            }
+            let raw = fs::read_to_string(&path)?;
+            let j = Json::parse(raw.trim()).map_err(|reason| RecoveryError::CorruptManifest {
+                version: 0,
+                reason: format!("base ref {name}: {reason}"),
+            })?;
+            let corrupt = |what: &str| RecoveryError::CorruptManifest {
+                version: 0,
+                reason: format!("base ref {name}: missing {what}"),
+            };
+            let model_fp = j
+                .get("model_fp")
+                .and_then(Json::as_str)
+                .and_then(parse_u64_hex)
+                .ok_or_else(|| corrupt("model_fp"))?;
+            let bytes = j.get("bytes").and_then(Json::as_u64).ok_or_else(|| corrupt("bytes"))?;
+            self.bases.insert(name, BaseRef { model_fp, bytes });
+        }
+        Ok(())
+    }
+
+    fn load_models(&mut self) -> Result<(), RecoveryError> {
+        for entry in fs::read_dir(self.root.join("models"))? {
+            let dir = entry?.path();
+            if !dir.is_dir() {
+                continue;
+            }
+            let name = dir.file_name().and_then(|s| s.to_str()).unwrap_or("").to_string();
+            if !valid_model_name(&name) {
+                continue;
+            }
+            let raw = fs::read_to_string(dir.join("model.json"))?;
+            let manifest = manifest_from_json(&name, raw.trim())?;
+            self.models.insert(name, manifest);
+        }
+        Ok(())
+    }
+
+    fn write_manifest(&self, m: &ModelManifest) -> Result<(), RecoveryError> {
+        let dir = self.root.join("models").join(&m.name);
+        fs::create_dir_all(&dir)?;
+        let versions: Vec<Json> = m
+            .versions
+            .iter()
+            .map(|v| {
+                Json::obj()
+                    .set("version", v.version)
+                    .set("object", v.object.as_str())
+                    .set("witness", hex(&v.witness))
+                    .set("payload_bytes", v.payload_bytes)
+            })
+            .collect();
+        let j = Json::obj()
+            .set("schema", 1u64)
+            .set("model_fp", format!("{:016x}", m.model_fp))
+            .set("base", m.base.as_str())
+            .set("versions", Json::Arr(versions));
+        write_atomic(&dir, &dir.join("model.json"), j.to_string().as_bytes())
+    }
+
+    // ------------------------------------------------------------------
+    // Publish / unpublish
+    // ------------------------------------------------------------------
+
+    /// Publish `store`'s chain (folded up to `version`, defaulting to the
+    /// last journaled commit) under `name`. The base snapshot and the
+    /// folded artifact land in the shared pool content-addressed, so N
+    /// fine-tunes off one base store that base exactly once. The fold is
+    /// verified against the run's journaled witness before any manifest
+    /// is written. Re-publishing identical bytes is idempotent;
+    /// contradicting what the registry already records is a typed
+    /// [`RecoveryError::RegistryConflict`].
+    pub fn publish(
+        &mut self,
+        store: &DurableStore,
+        layout: &ModelLayout,
+        name: &str,
+        version: Option<u64>,
+    ) -> Result<PublishReport, RecoveryError> {
+        if !valid_model_name(name) {
+            return Err(RecoveryError::RegistryConflict {
+                model: name.to_string(),
+                reason: "model names are [A-Za-z0-9._-]+ (and must not start with '.')".into(),
+            });
+        }
+        let last = store
+            .last_version()
+            .ok_or(RecoveryError::UnknownVersion { version: 0 })?;
+        let w = version.unwrap_or(last);
+        if w == 0 || w > last {
+            return Err(RecoveryError::UnknownVersion { version: w });
+        }
+        let base_policy = store.base_policy(layout)?;
+        let base_bytes = base_policy.to_snapshot_bytes();
+
+        // Fold D_1..D_w and verify against the journaled witness before
+        // anything becomes visible.
+        let mut chain = Vec::with_capacity(w as usize);
+        for v in 1..=w {
+            let ckpt = store.delta(v)?;
+            chain.push(ckpt.open().map_err(|error| RecoveryError::CorruptArtifact {
+                path: store.root().join("objects"),
+                error,
+            })?);
+        }
+        let folded = merge_chain(&chain)?;
+        let witness = store.witness(w)?;
+        let mut check = base_policy.clone();
+        apply_delta(&mut check, &folded);
+        if policy_witness(&check) != witness {
+            return Err(RecoveryError::WitnessMismatch { version: w });
+        }
+        let artifact = DeltaCheckpoint::seal(&folded);
+
+        let (base_id, base_was_new) = self.put_object(&base_bytes)?;
+        let (object_id, object_was_new) = self.put_object(&artifact.bytes)?;
+        let fp = layout.fingerprint();
+
+        // Base ref bookkeeping (idempotent).
+        if !self.bases.contains_key(&base_id) {
+            let j = Json::obj()
+                .set("model_fp", format!("{fp:016x}"))
+                .set("bytes", base_bytes.len() as u64);
+            let dir = self.root.join("bases");
+            write_atomic(&dir, &dir.join(&base_id), j.to_string().as_bytes())?;
+            self.bases
+                .insert(base_id.clone(), BaseRef { model_fp: fp, bytes: base_bytes.len() as u64 });
+        }
+
+        // Model manifest: create or extend, rejecting contradictions.
+        let mut manifest = match self.models.get(name) {
+            Some(m) => {
+                if m.model_fp != fp {
+                    return Err(RecoveryError::RegistryConflict {
+                        model: name.to_string(),
+                        reason: format!(
+                            "published model_fp {:016x} != run's {fp:016x}",
+                            m.model_fp
+                        ),
+                    });
+                }
+                if m.base != base_id {
+                    return Err(RecoveryError::RegistryConflict {
+                        model: name.to_string(),
+                        reason: "run's base snapshot differs from the model's published base"
+                            .into(),
+                    });
+                }
+                m.clone()
+            }
+            None => ModelManifest {
+                name: name.to_string(),
+                model_fp: fp,
+                base: base_id.clone(),
+                versions: Vec::new(),
+            },
+        };
+        match manifest.versions.iter().find(|v| v.version == w) {
+            Some(existing) if existing.object == object_id => {
+                // Idempotent re-publish (e.g. a determinism replica).
+            }
+            Some(_) => {
+                return Err(RecoveryError::RegistryConflict {
+                    model: name.to_string(),
+                    reason: format!("v{w} already published with different bytes"),
+                })
+            }
+            None => {
+                manifest.versions.push(VersionRef {
+                    version: w,
+                    object: object_id.clone(),
+                    witness,
+                    payload_bytes: artifact.bytes.len() as u64,
+                });
+                manifest.versions.sort_by_key(|v| v.version);
+                self.write_manifest(&manifest)?;
+            }
+        }
+        self.models.insert(name.to_string(), manifest);
+        Ok(PublishReport {
+            model: name.to_string(),
+            version: w,
+            object: object_id,
+            payload_bytes: artifact.bytes.len() as u64,
+            base: base_id,
+            base_bytes: base_bytes.len() as u64,
+            base_was_new,
+            object_was_new,
+        })
+    }
+
+    /// Remove `name` from the namespace. Its objects stay in the pool
+    /// until [`ModelRegistry::gc`] finds them unreferenced and unpinned.
+    pub fn unpublish(&mut self, name: &str) -> Result<(), RecoveryError> {
+        if self.models.remove(name).is_none() {
+            return Err(RecoveryError::UnknownModel { model: name.to_string() });
+        }
+        let dir = self.root.join("models").join(name);
+        fs::remove_dir_all(&dir)?;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Reads / reconstruction
+    // ------------------------------------------------------------------
+
+    /// Decode `name`'s shared base into a [`ParamSet`], verifying the
+    /// caller's layout matches the published fingerprint.
+    pub fn base_params(
+        &self,
+        name: &str,
+        layout: &ModelLayout,
+    ) -> Result<ParamSet, RecoveryError> {
+        let m = self.model(name)?;
+        if m.model_fp != layout.fingerprint() {
+            return Err(RecoveryError::BaseMismatch {
+                model: name.to_string(),
+                reason: format!(
+                    "layout fingerprint {:016x} != published {:016x}",
+                    layout.fingerprint(),
+                    m.model_fp
+                ),
+            });
+        }
+        let bytes = self.read_object(&m.base, 0)?;
+        ParamSet::from_snapshot_bytes(layout, &bytes)
+            .map_err(|reason| RecoveryError::CorruptManifest { version: 0, reason })
+    }
+
+    /// Decode the folded delta published as `name@version` (base -> w).
+    pub fn folded(&self, name: &str, version: u64) -> Result<SparseDelta, RecoveryError> {
+        let vref = self.version_ref(name, version)?.clone();
+        let bytes = self.read_object(&vref.object, version)?;
+        let ckpt = DeltaCheckpoint::from_bytes(bytes).map_err(|error| {
+            RecoveryError::CorruptArtifact { path: self.object_path(&vref.object), error }
+        })?;
+        ckpt.open().map_err(|error| RecoveryError::CorruptArtifact {
+            path: self.object_path(&vref.object),
+            error,
+        })
+    }
+
+    /// Materialize `name@version` (base + folded chain), verified
+    /// against the published witness — the registry's answer to
+    /// [`DurableStore::reconstruct`].
+    pub fn reconstruct(
+        &self,
+        layout: &ModelLayout,
+        name: &str,
+        version: u64,
+    ) -> Result<ParamSet, RecoveryError> {
+        let mut policy = self.base_params(name, layout)?;
+        let delta = self.folded(name, version)?;
+        apply_delta(&mut policy, &delta);
+        if policy_witness(&policy) != self.version_ref(name, version)?.witness {
+            return Err(RecoveryError::WitnessMismatch { version });
+        }
+        Ok(policy)
+    }
+
+    /// Compose the hot-swap delta `source@sv -> target@tv` from
+    /// published artifacts. Both fine-tunes must share one base object
+    /// (the composition is undefined otherwise — typed
+    /// [`RecoveryError::BaseMismatch`]). Returns the composed delta
+    /// still in registry numbering (`sv -> tv`); the runtime renumbers
+    /// it onto the live actor's version line before shipping.
+    pub fn compose_swap(
+        &self,
+        layout: &ModelLayout,
+        source: (&str, u64),
+        target: (&str, u64),
+    ) -> Result<SparseDelta, RecoveryError> {
+        let (s_name, sv) = source;
+        let (t_name, tv) = target;
+        let s_base = &self.model(s_name)?.base;
+        let t_base = &self.model(t_name)?.base;
+        if s_base != t_base {
+            return Err(RecoveryError::BaseMismatch {
+                model: t_name.to_string(),
+                reason: format!("{s_name:?} and {t_name:?} fine-tune different base objects"),
+            });
+        }
+        let base = self.base_params(t_name, layout)?;
+        let from = self.folded(s_name, sv)?;
+        let to = self.folded(t_name, tv)?;
+        swap_delta(&base, &from, &to).map_err(RecoveryError::Compaction)
+    }
+
+    // ------------------------------------------------------------------
+    // Pins + GC
+    // ------------------------------------------------------------------
+
+    /// Pin every object a swap composition `source -> target` reads (both
+    /// folded artifacts plus the shared base) against [`ModelRegistry::gc`]
+    /// until the returned guard drops. Counted: overlapping swaps over
+    /// the same objects are safe.
+    pub fn pin_swap(
+        &self,
+        source: (&str, u64),
+        target: (&str, u64),
+    ) -> Result<SwapPin, RecoveryError> {
+        let mut ids = vec![self.model(target.0)?.base.clone()];
+        ids.push(self.version_ref(source.0, source.1)?.object.clone());
+        ids.push(self.version_ref(target.0, target.1)?.object.clone());
+        ids.sort();
+        ids.dedup();
+        let mut pins = self.pins.lock().expect("registry pin map poisoned");
+        for id in &ids {
+            *pins.entry(id.clone()).or_insert(0) += 1;
+        }
+        drop(pins);
+        Ok(SwapPin { pins: Arc::clone(&self.pins), ids })
+    }
+
+    /// Object ids currently held by swap pins (diagnostics/tests).
+    pub fn pinned(&self) -> BTreeSet<String> {
+        self.pins.lock().expect("registry pin map poisoned").keys().cloned().collect()
+    }
+
+    /// Sweep the object pool: an object survives iff some model manifest
+    /// references it (as base or version artifact) **or** an outstanding
+    /// [`SwapPin`] holds it. Base refs whose object became collectible
+    /// are removed with it. Never touches manifests.
+    pub fn gc(&mut self) -> Result<GcStats, RecoveryError> {
+        let mut live: BTreeSet<String> = BTreeSet::new();
+        for m in self.models.values() {
+            live.insert(m.base.clone());
+            for v in &m.versions {
+                live.insert(v.object.clone());
+            }
+        }
+        let pinned: BTreeSet<String> =
+            self.pins.lock().expect("registry pin map poisoned").keys().cloned().collect();
+        let mut stats = GcStats::default();
+        for entry in fs::read_dir(self.root.join("objects"))? {
+            let path = entry?.path();
+            let name = path.file_name().and_then(|s| s.to_str()).unwrap_or("").to_string();
+            let Some(id) = name.strip_suffix(".sprw") else { continue };
+            if id.starts_with('.') {
+                continue;
+            }
+            stats.scanned += 1;
+            if live.contains(id) {
+                continue;
+            }
+            if pinned.contains(id) {
+                stats.retained_pinned += 1;
+                continue;
+            }
+            let bytes = fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+            fs::remove_file(&path)?;
+            if self.bases.remove(id).is_some() {
+                match fs::remove_file(self.root.join("bases").join(id)) {
+                    Ok(()) => {}
+                    Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                    Err(e) => return Err(e.into()),
+                }
+            }
+            stats.collected += 1;
+            stats.collected_bytes += bytes;
+        }
+        Ok(stats)
+    }
+
+    /// JSON rendering of the whole namespace (daemon `GET /models`, CLI
+    /// `registry list`).
+    pub fn to_json(&self) -> Json {
+        let models: Vec<Json> = self
+            .models
+            .values()
+            .map(|m| {
+                let versions: Vec<Json> = m
+                    .versions
+                    .iter()
+                    .map(|v| {
+                        Json::obj()
+                            .set("version", v.version)
+                            .set("object", v.object.as_str())
+                            .set("witness", hex(&v.witness))
+                            .set("payload_bytes", v.payload_bytes)
+                    })
+                    .collect();
+                Json::obj()
+                    .set("name", m.name.as_str())
+                    .set("model_fp", format!("{:016x}", m.model_fp))
+                    .set("base", m.base.as_str())
+                    .set("versions", Json::Arr(versions))
+            })
+            .collect();
+        Json::obj()
+            .set("registry", self.root.display().to_string())
+            .set("models", Json::Arr(models))
+    }
+}
+
+fn manifest_from_json(name: &str, raw: &str) -> Result<ModelManifest, RecoveryError> {
+    let corrupt = |reason: String| RecoveryError::CorruptManifest { version: 0, reason };
+    let j = Json::parse(raw)
+        .map_err(|reason| corrupt(format!("model {name}: {reason}")))?;
+    let model_fp = j
+        .get("model_fp")
+        .and_then(Json::as_str)
+        .and_then(parse_u64_hex)
+        .ok_or_else(|| corrupt(format!("model {name}: missing model_fp")))?;
+    let base = j
+        .get("base")
+        .and_then(Json::as_str)
+        .ok_or_else(|| corrupt(format!("model {name}: missing base")))?
+        .to_string();
+    let versions_json = j
+        .get("versions")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| corrupt(format!("model {name}: missing versions")))?;
+    let mut versions = Vec::with_capacity(versions_json.len());
+    for v in versions_json {
+        let version = v
+            .get("version")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| corrupt(format!("model {name}: version entry missing version")))?;
+        let object = v
+            .get("object")
+            .and_then(Json::as_str)
+            .ok_or_else(|| corrupt(format!("model {name}: v{version} missing object")))?
+            .to_string();
+        let witness = v
+            .get("witness")
+            .and_then(Json::as_str)
+            .and_then(parse_hash)
+            .ok_or_else(|| corrupt(format!("model {name}: v{version} missing witness")))?;
+        let payload_bytes = v
+            .get("payload_bytes")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| corrupt(format!("model {name}: v{version} missing payload_bytes")))?;
+        versions.push(VersionRef { version, object, witness, payload_bytes });
+    }
+    versions.sort_by_key(|v| v.version);
+    Ok(ModelManifest { name: name.to_string(), model_fp, base, versions })
+}
+
+fn parse_u64_hex(s: &str) -> Option<u64> {
+    if s.is_empty() || s.len() > 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+/// tmp + fsync + rename in `dir`, hiding the tmp behind a dot.
+fn write_atomic(dir: &Path, dest: &Path, bytes: &[u8]) -> Result<(), RecoveryError> {
+    let tmp = dir.join(format!(
+        ".{}.tmp",
+        dest.file_name().and_then(|s| s.to_str()).unwrap_or("reg")
+    ));
+    write_atomic_at(&tmp, dest, bytes)
+}
+
+fn write_atomic_at(tmp: &Path, dest: &Path, bytes: &[u8]) -> Result<(), RecoveryError> {
+    {
+        let mut f = fs::File::create(tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    fs::rename(tmp, dest)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::{ApplyMode, TensorDelta};
+    use crate::util::{Bf16, Rng};
+
+    fn layout() -> ModelLayout {
+        ModelLayout::transformer("reg-test", 64, 16, 2, 32)
+    }
+
+    fn random_delta(
+        l: &ModelLayout,
+        rng: &mut Rng,
+        density: f64,
+        version: u64,
+        base_version: u64,
+    ) -> SparseDelta {
+        let tensors = l
+            .tensors
+            .iter()
+            .enumerate()
+            .map(|(ti, t)| {
+                let n = t.numel() as usize;
+                let k = ((n as f64 * density).ceil() as usize).clamp(1, n);
+                let mut idx: Vec<u64> = Vec::with_capacity(k);
+                while idx.len() < k {
+                    let i = rng.range(0, n) as u64;
+                    if !idx.contains(&i) {
+                        idx.push(i);
+                    }
+                }
+                idx.sort_unstable();
+                let vals = idx.iter().map(|_| Bf16::from_f32(rng.normal() as f32)).collect();
+                TensorDelta { tensor: ti as u32, idx, vals }
+            })
+            .collect();
+        SparseDelta {
+            version,
+            base_version,
+            model_fp: l.fingerprint(),
+            mode: ApplyMode::Assign,
+            tensors,
+        }
+    }
+
+    #[test]
+    fn swap_delta_is_bit_exact_over_density_range() {
+        let l = layout();
+        let mut rng = Rng::new(0xD00D);
+        for &density in &[0.001, 0.01, 0.1, 0.5] {
+            let base = ParamSet::random(&l, 0.02, &mut rng);
+            let fa = random_delta(&l, &mut rng, density, 3, 0);
+            let fb = random_delta(&l, &mut rng, density / 2.0, 5, 0);
+            let mut pa = base.clone();
+            apply_delta(&mut pa, &fa);
+            let mut pb = base.clone();
+            apply_delta(&mut pb, &fb);
+            let d = swap_delta(&base, &fa, &fb).unwrap();
+            assert_eq!(d.base_version, 3);
+            assert_eq!(d.version, 5);
+            let mut swapped = pa.clone();
+            apply_delta(&mut swapped, &d);
+            assert_eq!(
+                policy_witness(&swapped),
+                policy_witness(&pb),
+                "swap at density {density} not bit-exact"
+            );
+        }
+    }
+
+    #[test]
+    fn swap_delta_rejects_mismatched_bases() {
+        let l = layout();
+        let mut rng = Rng::new(7);
+        let base = ParamSet::random(&l, 0.02, &mut rng);
+        let fa = random_delta(&l, &mut rng, 0.01, 3, 0);
+        let mut fb = random_delta(&l, &mut rng, 0.01, 5, 1);
+        assert!(matches!(
+            swap_delta(&base, &fa, &fb),
+            Err(MergeError::NonContiguous { .. })
+        ));
+        fb.base_version = 0;
+        fb.model_fp ^= 1;
+        assert!(matches!(swap_delta(&base, &fa, &fb), Err(MergeError::ModelMismatch)));
+    }
+
+    fn test_dir(name: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("sprw-registry-{}-{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn open_rejects_a_run_dir_and_run_check_rejects_a_registry() {
+        let dir = test_dir("layouts");
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join("journal.jsonl"), b"{}\n").unwrap();
+        assert!(matches!(
+            ModelRegistry::open(&dir),
+            Err(RecoveryError::NotARegistry { .. })
+        ));
+        let reg_dir = test_dir("fresh");
+        let reg = ModelRegistry::open(&reg_dir).unwrap();
+        assert!(reg.models().is_empty());
+        assert!(matches!(
+            expect_run_dir(&reg_dir),
+            Err(RecoveryError::NotARun { .. })
+        ));
+        fs::remove_dir_all(&dir).unwrap();
+        fs::remove_dir_all(&reg_dir).unwrap();
+    }
+
+    #[test]
+    fn unknown_lookups_are_typed() {
+        let dir = test_dir("unknown");
+        let reg = ModelRegistry::open(&dir).unwrap();
+        assert!(matches!(
+            reg.model("ghost"),
+            Err(RecoveryError::UnknownModel { .. })
+        ));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn model_names_are_validated() {
+        assert!(valid_model_name("ft-a.v2_x"));
+        assert!(!valid_model_name(""));
+        assert!(!valid_model_name("../escape"));
+        assert!(!valid_model_name(".hidden"));
+        assert!(!valid_model_name("a/b"));
+    }
+}

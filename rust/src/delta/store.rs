@@ -133,6 +133,48 @@ pub enum RecoveryError {
         /// Version decoded from the artifact header.
         header_version: u64,
     },
+    /// A directory holding a single-run [`DurableStore`] layout (or
+    /// nothing at all) was opened as a multi-run model registry.
+    NotARegistry {
+        /// The offending directory.
+        path: PathBuf,
+    },
+    /// A directory holding a multi-run registry layout was opened as a
+    /// single-run [`DurableStore`] persist dir.
+    NotARun {
+        /// The offending directory.
+        path: PathBuf,
+    },
+    /// The registry has no model published under this name.
+    UnknownModel {
+        /// The requested model name.
+        model: String,
+    },
+    /// The registry's model exists but has no such published version.
+    UnknownModelVersion {
+        /// The model whose version was requested.
+        model: String,
+        /// The requested version.
+        version: u64,
+    },
+    /// A registry operation crossed base objects or model fingerprints:
+    /// the named model's shared base does not match the caller's (a swap
+    /// composition is only defined between fine-tunes off one base).
+    BaseMismatch {
+        /// The model whose base disagreed.
+        model: String,
+        /// Human-readable detail (which identity field disagreed).
+        reason: String,
+    },
+    /// Publishing would contradict what the registry already records for
+    /// this model (different base, fingerprint, or conflicting bytes for
+    /// an already-published version).
+    RegistryConflict {
+        /// The model being published.
+        model: String,
+        /// Human-readable detail.
+        reason: String,
+    },
 }
 
 impl std::fmt::Display for RecoveryError {
@@ -179,6 +221,34 @@ impl std::fmt::Display for RecoveryError {
                     "artifact {} claims v{filename_version} by filename but v{header_version} by header",
                     path.display()
                 )
+            }
+            RecoveryError::NotARegistry { path } => {
+                write!(
+                    f,
+                    "{} is not a model registry (it holds a single-run durable store; \
+                     point `registry` commands at a registry directory)",
+                    path.display()
+                )
+            }
+            RecoveryError::NotARun { path } => {
+                write!(
+                    f,
+                    "{} is not a single-run persist dir (it holds a model registry; \
+                     use `reconstruct --model NAME` for registry reconstruction)",
+                    path.display()
+                )
+            }
+            RecoveryError::UnknownModel { model } => {
+                write!(f, "registry has no model named {model:?}")
+            }
+            RecoveryError::UnknownModelVersion { model, version } => {
+                write!(f, "model {model:?} has no published version v{version}")
+            }
+            RecoveryError::BaseMismatch { model, reason } => {
+                write!(f, "model {model:?} base mismatch: {reason}")
+            }
+            RecoveryError::RegistryConflict { model, reason } => {
+                write!(f, "publishing {model:?} conflicts with the registry: {reason}")
             }
         }
     }
@@ -485,7 +555,7 @@ impl JournalRecord {
     }
 }
 
-fn parse_hash(s: &str) -> Option<[u8; 32]> {
+pub(crate) fn parse_hash(s: &str) -> Option<[u8; 32]> {
     if s.len() != 64 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
         return None;
     }

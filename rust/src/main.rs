@@ -6,7 +6,8 @@
 //! sparrowrl serve [--flags]           multi-session control-plane daemon (sparrowrld)
 //! sparrowrl sim [--flags]             one simulated geo-distributed run
 //! sparrowrl bench run|compare|list|promote  scenario harness + regression gate
-//! sparrowrl reconstruct [--flags]     rebuild a policy from a durable store
+//! sparrowrl reconstruct [--flags]     rebuild a policy from a durable store or registry
+//! sparrowrl registry list|publish|gc  multi-run model registry over shared base objects
 //! sparrowrl list                      list experiments and models
 //! ```
 
@@ -28,7 +29,11 @@ fn usage() -> ! {
          [--fault-script join:A@V[:snapshot],leave:A@V,crash:A@V,stall:A@V,preempt:A@V[:warn=MS],...] [--autoscale] [--lease-sweep-ms MS]\n    \
          [--persist-dir DIR] [--resume]\n  \
          sparrowrl reconstruct --persist-dir DIR [--model sparrow-xs] [--version V] [--compact]\n  \
-         sparrowrl serve [--addr HOST:PORT] [--max-sessions N] [--actor-pool N]\n    \
+         sparrowrl reconstruct --registry DIR --model NAME [--version V] [--layout sparrow-xs]\n  \
+         sparrowrl registry list --registry DIR\n  \
+         sparrowrl registry publish --registry DIR --persist-dir RUN [--name NAME] [--model sparrow-xs] [--version V]\n  \
+         sparrowrl registry gc --registry DIR\n  \
+         sparrowrl serve [--addr HOST:PORT] [--max-sessions N] [--actor-pool N] [--registry DIR]\n    \
          [--alert-overlap-floor X] [--alert-tpd-floor X] [--alert-payload-ceiling BYTES]\n  \
          sparrowrl sim [--model qwen3-8b] [--system sparrow|full|ms|ideal] [--bench gsm8k|math|deepscaler] [--steps N]\n  \
          sparrowrl bench run [--suite smoke|full] [--file scenarios.json] [--out FILE]\n  \
@@ -54,6 +59,7 @@ fn main() {
         "sim" => cmd_sim(&args),
         "bench" => cmd_bench(&args),
         "reconstruct" => cmd_reconstruct(&args),
+        "registry" => cmd_registry(&args),
         "list" => {
             println!("experiments: {}", exp::ALL.join(", "));
             println!("runnable models: {}", config::runnable_models().join(", "));
@@ -237,6 +243,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             Some(Event::Preempted { actor }) => {
                 eprintln!("actor {actor} received a spot-preemption warning; draining")
             }
+            Some(Event::Swapped { actor, model, version, bytes }) => {
+                println!(
+                    "actor {actor} hot-swapped to {model}@v{version} ({} on the wire)",
+                    sparrowrl::util::fmt_bytes(bytes),
+                )
+            }
             Some(Event::Autoscale { version, decision }) => {
                 println!(
                     "autoscale @v{version}: {} (marginal {:.0} tok/$, reserve line {:.0})",
@@ -286,6 +298,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             report.joins, report.drains, report.preempts,
         );
     }
+    if report.swaps > 0 {
+        println!("hot-swaps: {} actor(s) retargeted onto published fine-tunes", report.swaps);
+    }
     if args.flag("gantt") {
         print!("{}", report.timeline.ascii_gantt(100));
     }
@@ -308,11 +323,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             .map(|s| s.parse())
             .transpose()?,
     };
+    let registry = {
+        let dir = args.str_or("registry", "");
+        (!dir.is_empty()).then(|| std::path::PathBuf::from(dir))
+    };
     let cfg = DaemonConfig {
         addr: args.str_or("addr", &defaults.addr),
         max_sessions: args.parse_or("max-sessions", defaults.max_sessions),
         actor_pool: args.parse_or("actor-pool", defaults.actor_pool),
         rules,
+        registry,
         ..defaults
     };
     let max_sessions = cfg.max_sessions;
@@ -331,6 +351,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "GET  /runs/{id}          run snapshot + live analytics",
         "POST /runs/{id}/abort    cooperative abort",
         "GET  /runs/{id}/events   SSE event stream (replay + tail)",
+        "POST /runs/{id}/swap     script a hot-swap onto a queued run",
+        "GET  /models             model registry listing",
+        "POST /models             publish a durable run into the registry",
         "GET  /alerts             daemon-wide threshold alerts",
         "GET  /healthz            liveness probe",
     ] {
@@ -348,11 +371,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 /// `final policy checksum` line and the journaled witness — the
 /// end-to-end durability proof.
 fn cmd_reconstruct(args: &Args) -> anyhow::Result<()> {
-    use sparrowrl::delta::{policy_witness, DurableStore, JournalRecord};
+    use sparrowrl::delta::{expect_run_dir, policy_witness, DurableStore, JournalRecord};
+    // Registry mode: rebuild a *published* fine-tune (base snapshot +
+    // one folded delta) instead of replaying a run dir's chain.
+    let reg_dir = args.str_or("registry", "");
+    if !reg_dir.is_empty() {
+        return reconstruct_from_registry(args, &reg_dir);
+    }
     let dir = args.str_or("persist-dir", "");
     if dir.is_empty() {
-        anyhow::bail!("reconstruct needs --persist-dir DIR");
+        anyhow::bail!("reconstruct needs --persist-dir DIR (or --registry DIR --model NAME)");
     }
+    // A registry dir also has an objects/ pool; refuse it with the typed
+    // error instead of a confusing journal failure downstream.
+    expect_run_dir(std::path::Path::new(&dir))
+        .map_err(|e| anyhow::anyhow!("reconstruct at {dir}: {e}"))?;
     let mut store =
         DurableStore::open(&dir).map_err(|e| anyhow::anyhow!("durable store at {dir}: {e}"))?;
     let model = args.str_or("model", "sparrow-xs");
@@ -387,6 +420,141 @@ fn cmd_reconstruct(args: &Args) -> anyhow::Result<()> {
         .map_err(|e| anyhow::anyhow!("reconstructing v{version}: {e}"))?;
     println!("v{version} policy checksum: {}", sparrowrl::util::hex(&policy_witness(&policy)));
     Ok(())
+}
+
+/// `reconstruct --registry DIR --model NAME`: rebuild a published
+/// fine-tune from the registry (shared base + its folded delta) and
+/// print the witness-verified checksum. `--layout` names the bench
+/// layout preset (the registry stores only its fingerprint).
+fn reconstruct_from_registry(args: &Args, reg_dir: &str) -> anyhow::Result<()> {
+    use sparrowrl::delta::{policy_witness, ModelRegistry};
+    let name = args.str_or("model", "");
+    if name.is_empty() {
+        anyhow::bail!("reconstruct --registry needs --model NAME (a published model)");
+    }
+    let layout_name = args.str_or("layout", "sparrow-xs");
+    let spec = config::model(&layout_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown layout preset {layout_name}"))?;
+    let reg = ModelRegistry::open(reg_dir)
+        .map_err(|e| anyhow::anyhow!("model registry at {reg_dir}: {e}"))?;
+    let manifest = reg
+        .model(&name)
+        .map_err(|e| anyhow::anyhow!("model registry at {reg_dir}: {e}"))?;
+    let version = match args.get("version") {
+        Some(v) => v.parse::<u64>()?,
+        None => manifest
+            .versions
+            .last()
+            .map(|v| v.version)
+            .ok_or_else(|| anyhow::anyhow!("model {name} has no published versions"))?,
+    };
+    let policy = reg
+        .reconstruct(&spec.layout, &name, version)
+        .map_err(|e| anyhow::anyhow!("reconstructing {name}@v{version}: {e}"))?;
+    println!(
+        "{name}@v{version} policy checksum: {}",
+        sparrowrl::util::hex(&policy_witness(&policy))
+    );
+    Ok(())
+}
+
+/// `sparrowrl registry`: the multi-run model registry. `list` shows the
+/// namespace (models, versions, shared bases), `publish` folds a durable
+/// run's chain into one compacted delta off the shared base, and `gc`
+/// sweeps unreferenced objects (bases and versions still referenced by a
+/// manifest or pinned by an in-flight swap survive).
+fn cmd_registry(args: &Args) -> anyhow::Result<()> {
+    use sparrowrl::delta::{expect_run_dir, DurableStore, ModelRegistry};
+    let dir = args.str_or("registry", "");
+    if dir.is_empty() {
+        anyhow::bail!("registry commands need --registry DIR");
+    }
+    let open = || {
+        ModelRegistry::open(&dir).map_err(|e| anyhow::anyhow!("model registry at {dir}: {e}"))
+    };
+    match args.positional.get(1).map(|s| s.as_str()).unwrap_or("") {
+        "list" => {
+            let reg = open()?;
+            if reg.models().is_empty() {
+                println!("registry {dir}: no published models");
+                return Ok(());
+            }
+            for (sha, base) in reg.bases() {
+                println!(
+                    "base {} ({}, layout fp {:016x})",
+                    &sha[..12.min(sha.len())],
+                    sparrowrl::util::fmt_bytes(base.bytes),
+                    base.model_fp,
+                );
+            }
+            for manifest in reg.models().values() {
+                println!(
+                    "model {} (base {}):",
+                    manifest.name,
+                    &manifest.base[..12.min(manifest.base.len())],
+                );
+                for vref in &manifest.versions {
+                    println!(
+                        "  v{} object {} ({}) witness {}",
+                        vref.version,
+                        &vref.object[..12.min(vref.object.len())],
+                        sparrowrl::util::fmt_bytes(vref.payload_bytes),
+                        &sparrowrl::util::hex(&vref.witness)[..16],
+                    );
+                }
+            }
+            Ok(())
+        }
+        "publish" => {
+            let run = args.str_or("persist-dir", "");
+            if run.is_empty() {
+                anyhow::bail!("registry publish needs --persist-dir RUN (the durable run to fold)");
+            }
+            expect_run_dir(std::path::Path::new(&run))
+                .map_err(|e| anyhow::anyhow!("registry publish from {run}: {e}"))?;
+            let store = DurableStore::open(&run)
+                .map_err(|e| anyhow::anyhow!("durable store at {run}: {e}"))?;
+            let name = args.str_or("name", "");
+            if name.is_empty() {
+                anyhow::bail!("registry publish needs --name NAME");
+            }
+            let layout_name = args.str_or("model", "sparrow-xs");
+            let spec = config::model(&layout_name)
+                .ok_or_else(|| anyhow::anyhow!("unknown model {layout_name}"))?;
+            let version = args.get("version").map(|v| v.parse::<u64>()).transpose()?;
+            let mut reg = open()?;
+            let report = reg
+                .publish(&store, &spec.layout, &name, version)
+                .map_err(|e| anyhow::anyhow!("publishing {run} as {name}: {e}"))?;
+            println!(
+                "published {}@v{}: folded delta {} ({}, {}), base {} ({}, {})",
+                report.model,
+                report.version,
+                &report.object[..12.min(report.object.len())],
+                sparrowrl::util::fmt_bytes(report.payload_bytes),
+                if report.object_was_new { "new" } else { "deduplicated" },
+                &report.base[..12.min(report.base.len())],
+                sparrowrl::util::fmt_bytes(report.base_bytes),
+                if report.base_was_new { "new" } else { "shared" },
+            );
+            Ok(())
+        }
+        "gc" => {
+            let mut reg = open()?;
+            let stats = reg
+                .gc()
+                .map_err(|e| anyhow::anyhow!("registry gc at {dir}: {e}"))?;
+            println!(
+                "gc: scanned {} object(s), collected {} ({}), {} pinned object(s) retained",
+                stats.scanned,
+                stats.collected,
+                sparrowrl::util::fmt_bytes(stats.collected_bytes),
+                stats.retained_pinned,
+            );
+            Ok(())
+        }
+        other => anyhow::bail!("unknown registry subcommand {other:?} (list|publish|gc)"),
+    }
 }
 
 /// `sparrowrl bench`: the declarative scenario-matrix harness.

@@ -152,6 +152,20 @@ impl ElasticSpec {
     }
 }
 
+/// A scripted hot-swap: in the run epilogue (after the final training
+/// commit, with every actor idle at the final version boundary), the hub
+/// retargets `actor` onto the published fine-tune `model@version` by
+/// shipping the composed registry swap delta through the ordinary
+/// Seg/Commit staging machinery. The actor's post-swap checksum must
+/// equal the registry's published witness for `model@version` — the same
+/// bit-exactness bar a fresh bootstrap of that model meets.
+#[derive(Clone, Debug)]
+pub struct SwapSpec {
+    pub actor: u32,
+    pub model: String,
+    pub version: u64,
+}
+
 /// Configuration for a local end-to-end run.
 #[derive(Clone, Debug)]
 pub struct LocalRunConfig {
@@ -212,6 +226,16 @@ pub struct LocalRunConfig {
     /// script; the resumed run's committed-checksum trace is bitwise
     /// identical to an uninterrupted run's.
     pub resume: bool,
+    /// Root of a [`crate::delta::ModelRegistry`] this run reads published
+    /// fine-tunes from (hot-swaps) and/or publishes into. Required when
+    /// `swaps` is non-empty.
+    pub registry_dir: Option<std::path::PathBuf>,
+    /// Scripted epilogue hot-swaps ([`SwapSpec`]), at most one per actor.
+    pub swaps: Vec<SwapSpec>,
+    /// Publish the finished run's folded chain into `registry_dir` under
+    /// this model name (requires `persist_dir` — publishing folds the
+    /// durable journal, not in-memory state).
+    pub publish: Option<String>,
 }
 
 impl LocalRunConfig {
@@ -239,6 +263,9 @@ impl LocalRunConfig {
             elastic: ElasticSpec::default(),
             persist_dir: None,
             resume: false,
+            registry_dir: None,
+            swaps: Vec::new(),
+            publish: None,
         }
     }
 }
@@ -314,6 +341,9 @@ pub struct RunReport {
     pub drains: u64,
     /// Spot preemptions whose warning reached the hub before the kill.
     pub preempts: u64,
+    /// Actors retargeted onto a different published fine-tune in the run
+    /// epilogue (registry hot-swap, witness-verified).
+    pub swaps: u64,
 }
 
 impl RunReport {

@@ -28,6 +28,6 @@ pub mod pipeline;
 pub use compute::{Compute, ComputeShape, SyntheticCompute};
 pub use local::{
     evaluate, run_local, run_local_mode, BootstrapKind, ElasticSpec, FailReason, JoinSpec,
-    LeaveSpec, LocalRunConfig, RunReport, StepLog, TransportKind,
+    LeaveSpec, LocalRunConfig, RunReport, StepLog, SwapSpec, TransportKind,
 };
 pub use pipeline::{policy_checksum, run_with_compute, DistributionSpec, ExecMode};

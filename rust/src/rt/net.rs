@@ -86,6 +86,14 @@ pub enum Msg {
     /// Hub provisions a dormant spare: the deterministic stand-in for
     /// "a new spot instance came up". The spare answers with `Join`.
     Invite { actor: u32 },
+    /// Hot-swap annotation: the composed registry delta that follows (as
+    /// ordinary `Seg`* + `Commit`) retargets this actor onto the
+    /// published fine-tune `model@version` instead of advancing the
+    /// current run's policy. Purely informational on the actor side —
+    /// staging, integrity, and activation witness all ride the existing
+    /// machinery; the hub checks the `Activated` hash against the
+    /// registry's published witness for `model@version`.
+    Swap { model: String, version: u64 },
 }
 
 const TAG_HELLO: u8 = 1;
@@ -100,6 +108,7 @@ const TAG_SNAPSHOT: u8 = 9;
 const TAG_DRAIN: u8 = 10;
 const TAG_DRAINING: u8 = 11;
 const TAG_INVITE: u8 = 12;
+const TAG_SWAP: u8 = 13;
 
 impl Msg {
     /// Serialize to a length-prefixed frame: len u32 | tag u8 | body.
@@ -171,6 +180,12 @@ impl Msg {
             Msg::Invite { actor } => {
                 body.extend_from_slice(&actor.to_le_bytes());
                 TAG_INVITE
+            }
+            Msg::Swap { model, version } => {
+                body.extend_from_slice(&version.to_le_bytes());
+                body.extend_from_slice(&(model.len() as u32).to_le_bytes());
+                body.extend_from_slice(model.as_bytes());
+                TAG_SWAP
             }
         };
         let mut out = Vec::with_capacity(5 + body.len());
@@ -285,6 +300,19 @@ impl Msg {
                 }
                 Msg::Invite { actor: rd_u32(body, 0)? }
             }
+            TAG_SWAP => {
+                let version = rd_u64(body, 0)?;
+                let n = rd_u32(body, 8)? as usize;
+                // Length-bound the name so a truncated frame can never
+                // parse as a shorter valid Swap (same rule as Snapshot).
+                if body.len() != 12usize.checked_add(n).context("swap name overflow")? {
+                    bail!("swap frame length mismatch ({n} name bytes, {} bytes)", body.len());
+                }
+                let model = std::str::from_utf8(&body[12..])
+                    .context("swap model name not utf-8")?
+                    .to_string();
+                Msg::Swap { model, version }
+            }
             other => bail!("unknown tag {other}"),
         })
     }
@@ -388,6 +416,7 @@ mod tests {
             Msg::Drain { grace_ms: 1500 },
             Msg::Draining { actor: 4 },
             Msg::Invite { actor: 5 },
+            Msg::Swap { model: "ft-math.v2".to_string(), version: 8 },
         ]
     }
 
@@ -452,7 +481,7 @@ mod tests {
     #[test]
     fn unknown_and_empty_tags_rejected() {
         assert!(Msg::from_tagged(&[]).is_err(), "empty frame");
-        for tag in [0u8, 13, 99, 255] {
+        for tag in [0u8, 14, 99, 255] {
             assert!(Msg::from_tagged(&[tag]).is_err(), "tag {tag}");
             assert!(Msg::from_tagged(&[tag, 1, 2, 3]).is_err(), "tag {tag} with body");
         }

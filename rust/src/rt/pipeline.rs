@@ -47,7 +47,7 @@ use crate::cost::{reserved_line, Autoscaler, Deployment};
 use crate::data::{pack_batch, Task};
 use crate::delta::{
     merge_chain, CheckpointStore, DeltaCheckpoint, DurableStore, JournalRecord, ModelLayout,
-    ParamSet, ResumePoint, SeedRecord, SparseDelta,
+    ModelRegistry, ParamSet, ResumePoint, SeedRecord, SparseDelta, SwapPin,
 };
 use crate::ledger::{Clock, JobLedger, Reject};
 use crate::metrics::{SpanKind, Timeline};
@@ -929,6 +929,149 @@ fn seq_stream_and_commit<C: Compute>(
     Ok(())
 }
 
+/// One scripted hot-swap, composed and sealed for the wire: the actor it
+/// targets, the published fine-tune it lands on (registry numbering),
+/// the renumbered checkpoint the staging machinery applies, and the
+/// registry witness the swapped actor must echo. Holds the GC pin for
+/// every registry object the composition read — dropped only after the
+/// swap is acknowledged, so a concurrent `registry gc` cannot collect a
+/// version the composition still depends on.
+struct PreparedSwap {
+    actor: u32,
+    model: String,
+    /// Target version in *registry* numbering (what `Event::Swapped` and
+    /// the witness check use; the wire rides `ckpt.version`).
+    version: u64,
+    ckpt: DeltaCheckpoint,
+    witness: [u8; 32],
+    _pin: SwapPin,
+}
+
+/// Registry-publish epilogue, shared by both executors. Runs after the
+/// final training commit and *before* any scripted swap, so a run that
+/// publishes itself and immediately swaps away (A/B rotation on one
+/// fleet) finds its own chain in the registry. Folds the durable chain
+/// into one compacted delta off the shared base and records it under
+/// `cfg.publish`; content addressing makes a bit-identical republish (or
+/// a second fine-tune off the same base) dedup to existing objects.
+fn run_registry_publish<C: Compute>(hub: &Hub<C>) -> Result<()> {
+    let Some(name) = &hub.cfg.publish else { return Ok(()) };
+    let reg_dir = hub
+        .cfg
+        .registry_dir
+        .as_ref()
+        .ok_or_else(|| anyhow!("publish needs a registry dir (RunSpec::publish_to)"))?;
+    let store = hub
+        .durable
+        .as_ref()
+        .ok_or_else(|| anyhow!("publish needs a durable run (RunSpec::persist)"))?;
+    let mut reg = ModelRegistry::open(reg_dir)
+        .map_err(|e| anyhow!("model registry at {}: {e}", reg_dir.display()))?;
+    reg.publish(store, hub.layout, name, None)
+        .map_err(|e| anyhow!("publishing run as model {name:?}: {e}"))?;
+    Ok(())
+}
+
+/// Compose every scripted swap against the registry. The source is
+/// located by the hub's *final* policy witness — the run must have been
+/// published (this run via `publish`, or an earlier bit-identical run),
+/// otherwise there is no chain to invert and we fail with the witness in
+/// hand. Each composed delta `compose(invert(chain_src), chain_tgt)` is
+/// renumbered onto the live version line (`base_version = V`,
+/// `version = V+1`) and re-sealed, so actors apply it through the
+/// ordinary `Seg`/`Commit` staging path with no new code on their side.
+fn prepare_swaps<C: Compute>(hub: &Hub<C>) -> Result<Vec<PreparedSwap>> {
+    if hub.cfg.swaps.is_empty() {
+        return Ok(Vec::new());
+    }
+    let reg_dir = hub
+        .cfg
+        .registry_dir
+        .as_ref()
+        .ok_or_else(|| anyhow!("scripted swaps need a registry dir (RunSpec::registry)"))?;
+    let reg = ModelRegistry::open(reg_dir)
+        .map_err(|e| anyhow!("model registry at {}: {e}", reg_dir.display()))?;
+    let here = policy_checksum(&hub.policy);
+    let (src_model, src_version) = reg.locate(&here).ok_or_else(|| {
+        anyhow!(
+            "hot-swap: the run's final policy (witness {}) matches no published model \
+             version in {}; publish this configuration first",
+            crate::util::hex(&here),
+            reg_dir.display()
+        )
+    })?;
+    let wire_v = hub.version + 1;
+    let mut out = Vec::with_capacity(hub.cfg.swaps.len());
+    for spec in &hub.cfg.swaps {
+        let witness = reg
+            .witness(&spec.model, spec.version)
+            .map_err(|e| anyhow!("hot-swap target {}@v{}: {e}", spec.model, spec.version))?;
+        let pin = reg
+            .pin_swap((&src_model, src_version), (&spec.model, spec.version))
+            .map_err(|e| anyhow!("pinning swap objects: {e}"))?;
+        let mut delta = reg
+            .compose_swap(hub.layout, (&src_model, src_version), (&spec.model, spec.version))
+            .map_err(|e| {
+                anyhow!(
+                    "composing swap {}@v{} -> {}@v{}: {e}",
+                    src_model,
+                    src_version,
+                    spec.model,
+                    spec.version
+                )
+            })?;
+        // Registry numbering (src_version -> spec.version) becomes live
+        // numbering: the actor sits at V, the swap commits as V+1.
+        delta.base_version = hub.version;
+        delta.version = wire_v;
+        out.push(PreparedSwap {
+            actor: spec.actor,
+            model: spec.model.clone(),
+            version: spec.version,
+            ckpt: DeltaCheckpoint::seal(&delta),
+            witness,
+            _pin: pin,
+        });
+    }
+    Ok(out)
+}
+
+/// Sequential executor's swap epilogue: stage + commit each composed
+/// swap delta directly on the in-process actor and verify the swapped
+/// policy against the registry witness before announcing it.
+fn run_swap_script_sequential<C: Compute>(
+    hub: &mut Hub<C>,
+    actors: &mut [PolicyState],
+) -> Result<()> {
+    for swap in prepare_swaps(hub)? {
+        let a = swap.actor as usize;
+        let wire_v = swap.ckpt.version;
+        for seg in split_into_segments(wire_v, &swap.ckpt.bytes, hub.cfg.segment_bytes) {
+            actors[a]
+                .on_segment(seg)
+                .map_err(|e| anyhow!("actor {a} swap staging: {e}"))?;
+        }
+        match actors[a].request_commit(wire_v) {
+            CommitResult::Applied => {}
+            other => bail!("actor {a} swap commit failed: {other:?}"),
+        }
+        if policy_checksum(actors[a].params()) != swap.witness {
+            bail!(
+                "actor {a} swap to {}@v{} diverged from the registry witness",
+                swap.model,
+                swap.version
+            );
+        }
+        hub.emit(SessionEvent::Swapped {
+            actor: swap.actor,
+            model: swap.model,
+            version: swap.version,
+            bytes: swap.ckpt.payload_bytes(),
+        });
+    }
+    Ok(())
+}
+
 /// Phase-sequential executor over the shared one-step-off schedule.
 fn run_sequential<C: Compute>(hub: &mut Hub<C>) -> Result<()> {
     // Fresh runs start every actor at v0; a resumed run starts them at
@@ -972,6 +1115,8 @@ fn run_sequential<C: Compute>(hub: &mut Hub<C>) -> Result<()> {
     if let Some((prev_step, prev)) = pending.take() {
         seq_stream_and_commit(hub, &mut actors, prev_step, &prev)?;
     }
+    run_registry_publish(hub)?;
+    run_swap_script_sequential(hub, &mut actors)?;
     Ok(())
 }
 
@@ -1014,8 +1159,9 @@ fn worker_drain(
             // A mid-batch Bye only happens while the hub is tearing down;
             // the disconnect surfaces at the next blocking recv. The hub
             // grants Drain only to an idle actor, so one cannot arrive
-            // mid-batch; tolerate it the same way.
-            Ok(Some(Msg::Bye)) | Ok(Some(Msg::Drain { .. })) => {}
+            // mid-batch; tolerate it the same way. Swap is a pure
+            // annotation — its delta rides the Seg/Commit arms above.
+            Ok(Some(Msg::Bye)) | Ok(Some(Msg::Drain { .. })) | Ok(Some(Msg::Swap { .. })) => {}
             Ok(Some(other)) => return Err(format!("actor {actor}: unexpected {other:?}")),
             Ok(None) | Err(Closed) => break,
         }
@@ -1181,6 +1327,14 @@ fn actor_loop<C: Compute>(
                 }
                 Ok(Msg::Commit { version }) => {
                     commit_and_ack(&mut state, actor, version, ep)?;
+                    None
+                }
+                Ok(Msg::Swap { .. }) => {
+                    // Hot-swap annotation: the composed swap delta itself
+                    // arrives as ordinary Seg/Commit traffic right behind
+                    // this marker — nothing to do here; the staging
+                    // machinery retargets us exactly as a training commit
+                    // would.
                     None
                 }
                 Ok(Msg::Drain { .. }) => {
@@ -1527,6 +1681,91 @@ fn transport_hub_loop<C: Compute>(hub: &mut Hub<C>, ep: &mut dyn HubEndpoint) ->
         let committing = Some((hub.version, hub.now_s()));
         let mut slots: Vec<Slot> = Vec::new();
         collect_step(hub, ep, &mut mem, &mut slots, committing, prev_step)?;
+    }
+    run_registry_publish(hub)?;
+    run_swap_script_pipelined(hub, ep, &mem)?;
+    Ok(())
+}
+
+/// Pipelined executor's swap epilogue: ship each composed swap delta to
+/// its (still-live) target actor over the transport — a `Swap`
+/// annotation, then ordinary `Seg`/`Commit` traffic — and block for the
+/// `Activated` ack, whose hash must equal the registry's published
+/// witness for the target fine-tune. The actor runs no swap-specific
+/// code: per-actor control FIFO plus the staging machinery give the same
+/// park/apply semantics a training commit gets.
+fn run_swap_script_pipelined<C: Compute>(
+    hub: &mut Hub<C>,
+    ep: &mut dyn HubEndpoint,
+    mem: &Membership,
+) -> Result<()> {
+    let poll = hub.poll_interval();
+    for swap in prepare_swaps(hub)? {
+        let target = swap.actor;
+        ensure!(
+            mem.alive.contains(&target),
+            "hot-swap targets actor {target}, which is no longer in the fleet"
+        );
+        let wire_v = swap.ckpt.version;
+        ep.send(target, Msg::Swap { model: swap.model.clone(), version: swap.version })
+            .map_err(|_| anyhow!("actor {target} link down announcing swap"))?;
+        for seg in split_into_segments(wire_v, &swap.ckpt.bytes, hub.cfg.segment_bytes) {
+            ep.send(target, Msg::Seg(seg))
+                .map_err(|_| anyhow!("actor {target} link down streaming swap delta"))?;
+        }
+        ep.send(target, Msg::Commit { version: wire_v })
+            .map_err(|_| anyhow!("actor {target} link down committing swap"))?;
+        let deadline = Instant::now() + ACK_TIMEOUT;
+        loop {
+            hub.check_cancel()?;
+            match ep.poll(poll) {
+                Polled::Event(Event::Msg {
+                    actor,
+                    msg: Msg::Activated { actor: aa, version, hash },
+                }) => {
+                    ensure!(aa == actor, "ack from actor {actor} claims actor {aa}");
+                    if actor != target {
+                        continue; // stale ack from a failed-over actor
+                    }
+                    ensure!(
+                        version == wire_v,
+                        "actor {actor} acked v{version} during swap, expected v{wire_v}"
+                    );
+                    // Bit-exactness across the swap: the retargeted
+                    // actor's policy must equal a fresh bootstrap of the
+                    // target fine-tune.
+                    ensure!(
+                        hash == swap.witness,
+                        "actor {actor} swap to {}@v{} diverged from the registry witness",
+                        swap.model,
+                        swap.version
+                    );
+                    break;
+                }
+                Polled::Event(Event::Msg { actor, msg: Msg::Bye }) => {
+                    ensure!(actor != target, "actor {actor} left mid-swap");
+                }
+                Polled::Event(Event::Msg { actor, msg }) => {
+                    bail!("actor {actor} sent {msg:?} during swap epilogue")
+                }
+                Polled::Event(Event::Down { actor, reason }) => {
+                    ensure!(actor != target, "swap target actor {actor} died: {reason}");
+                }
+                Polled::TimedOut => {
+                    ensure!(
+                        Instant::now() < deadline,
+                        "actor {target} never acknowledged swap v{wire_v}"
+                    );
+                }
+                Polled::Closed => bail!("transport closed during swap epilogue"),
+            }
+        }
+        hub.emit(SessionEvent::Swapped {
+            actor: target,
+            model: swap.model,
+            version: swap.version,
+            bytes: swap.ckpt.payload_bytes(),
+        });
     }
     Ok(())
 }

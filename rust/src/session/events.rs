@@ -49,6 +49,12 @@ pub enum Event {
     /// The cost-model autoscaler evaluated the fleet at a step boundary
     /// and emitted a typed decision (advisory; see `cost::Autoscaler`).
     Autoscale { version: u64, decision: ScaleDecision },
+    /// A run-epilogue hot-swap retargeted `actor` onto the published
+    /// fine-tune `model@version` (registry numbering) by shipping the
+    /// composed swap delta (`bytes` on the wire) through the ordinary
+    /// staging machinery; the actor's post-swap checksum matched the
+    /// registry's published witness.
+    Swapped { actor: u32, model: String, version: u64, bytes: u64 },
     /// The run completed; the report was assembled from this very event
     /// stream (by the crate-internal `ReportAssembler`).
     Finished(RunReport),
@@ -76,6 +82,7 @@ pub(crate) struct ReportAssembler {
     joins: u64,
     drains: u64,
     preempts: u64,
+    swaps: u64,
 }
 
 impl ReportAssembler {
@@ -93,6 +100,7 @@ impl ReportAssembler {
                 self.requeued += *requeued;
             }
             Event::Preempted { .. } => self.preempts += 1,
+            Event::Swapped { .. } => self.swaps += 1,
             Event::DeltaStreamed { .. }
             | Event::Committed { .. }
             | Event::Autoscale { .. }
@@ -112,6 +120,7 @@ impl ReportAssembler {
             joins: self.joins,
             drains: self.drains,
             preempts: self.preempts,
+            swaps: self.swaps,
         }
     }
 }

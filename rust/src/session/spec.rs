@@ -16,7 +16,7 @@ use crate::ledger::LeasePolicy;
 use crate::netsim::Link;
 use crate::rt::{
     BootstrapKind, DistributionSpec, ElasticSpec, ExecMode, JoinSpec, LeaveSpec, LocalRunConfig,
-    TransportKind,
+    SwapSpec, TransportKind,
 };
 use crate::trainer::Algorithm;
 use crate::transport::{DistributionPlan, SimNetConfig, TcpConfig};
@@ -130,6 +130,17 @@ pub enum SpecError {
     /// A resumed run cannot re-run a membership script relative to a
     /// recovered version history.
     ResumeConflictsWithElastic,
+    /// `publish_to(..)` folds the durable journal; without
+    /// `persist_dir(..)` there is nothing to publish.
+    PublishNeedsPersistDir,
+    /// `swap_to(..)` reads published fine-tunes; it needs `registry(..)`
+    /// (or `publish_to(..)`, which sets the registry too).
+    SwapNeedsRegistry,
+    /// A scripted swap names an actor outside the day-one fleet.
+    SwapActorOutOfRange { actor: u32, n_actors: usize },
+    /// Two scripted swaps target the same actor; an epilogue swap is
+    /// at most one retarget per actor.
+    DuplicateSwapActor { actor: u32 },
 }
 
 impl SpecError {
@@ -161,6 +172,10 @@ impl SpecError {
             SpecError::ResumeNeedsPersistDir => "ResumeNeedsPersistDir",
             SpecError::ResumeRequiresDeterministic => "ResumeRequiresDeterministic",
             SpecError::ResumeConflictsWithElastic => "ResumeConflictsWithElastic",
+            SpecError::PublishNeedsPersistDir => "PublishNeedsPersistDir",
+            SpecError::SwapNeedsRegistry => "SwapNeedsRegistry",
+            SpecError::SwapActorOutOfRange { .. } => "SwapActorOutOfRange",
+            SpecError::DuplicateSwapActor { .. } => "DuplicateSwapActor",
         }
     }
 }
@@ -247,6 +262,25 @@ impl fmt::Display for SpecError {
                 "resume() cannot be combined with join_at(..)/leave_at(..); restart the \
                  membership script in a fresh run instead"
             ),
+            SpecError::PublishNeedsPersistDir => write!(
+                f,
+                "publish_to(..) folds the durable journal; add persist_dir(..) so there is \
+                 a chain to publish"
+            ),
+            SpecError::SwapNeedsRegistry => write!(
+                f,
+                "swap_to(..) reads published fine-tunes; add registry(..) to name the model \
+                 registry"
+            ),
+            SpecError::SwapActorOutOfRange { actor, n_actors } => write!(
+                f,
+                "swap_to(..) names actor {actor} but the fleet runs actors 0..{n_actors}"
+            ),
+            SpecError::DuplicateSwapActor { actor } => write!(
+                f,
+                "actor {actor} is named by more than one swap_to(..); an epilogue swap is at \
+                 most one retarget per actor"
+            ),
         }
     }
 }
@@ -315,6 +349,9 @@ pub struct RunSpec {
     elastic: ElasticSpec,
     persist_dir: Option<std::path::PathBuf>,
     resume: bool,
+    registry_dir: Option<std::path::PathBuf>,
+    swaps: Vec<SwapSpec>,
+    publish: Option<String>,
 }
 
 impl RunSpec {
@@ -345,6 +382,9 @@ impl RunSpec {
             elastic: ElasticSpec::default(),
             persist_dir: None,
             resume: false,
+            registry_dir: None,
+            swaps: Vec::new(),
+            publish: None,
         }
     }
 
@@ -549,6 +589,37 @@ impl RunSpec {
         self
     }
 
+    /// Name the [`crate::delta::ModelRegistry`] directory this run reads
+    /// published fine-tunes from (required by [`RunSpec::swap_to`];
+    /// implied by [`RunSpec::publish_to`]).
+    pub fn registry(mut self, dir: impl Into<std::path::PathBuf>) -> RunSpec {
+        self.registry_dir = Some(dir.into());
+        self
+    }
+
+    /// Publish the finished run into the registry at `dir` under model
+    /// `name`: the durable chain is folded through `merge_chain`,
+    /// verified against the journaled witness, and stored
+    /// content-addressed off the run's base object — so N runs sharing a
+    /// base store that base exactly once. Requires
+    /// [`RunSpec::persist_dir`].
+    pub fn publish_to(mut self, dir: impl Into<std::path::PathBuf>, name: &str) -> RunSpec {
+        self.registry_dir = Some(dir.into());
+        self.publish = Some(name.to_string());
+        self
+    }
+
+    /// Script an epilogue hot-swap: after the final training commit,
+    /// retarget `actor` onto the published fine-tune `model@version` by
+    /// shipping only the composed registry swap delta (bit-exact —
+    /// the actor's post-swap checksum must equal the registry's
+    /// published witness). Requires [`RunSpec::registry`]; at most one
+    /// swap per actor.
+    pub fn swap_to(mut self, actor: u32, model: &str, version: u64) -> RunSpec {
+        self.swaps.push(SwapSpec { actor, model: model.to_string(), version });
+        self
+    }
+
     /// Validate every cross-field rule and freeze the configuration.
     /// Illegal combinations return a typed [`SpecError`]; legal
     /// auto-coercions are recorded as [`SpecNote`]s on the plan.
@@ -586,6 +657,14 @@ impl RunSpec {
             if !self.elastic.joins.is_empty() || !self.elastic.leaves.is_empty() {
                 return Err(SpecError::ResumeConflictsWithElastic);
             }
+        }
+
+        // -- registry: publish / hot-swaps --------------------------------
+        if self.publish.is_some() && self.persist_dir.is_none() {
+            return Err(SpecError::PublishNeedsPersistDir);
+        }
+        if !self.swaps.is_empty() && self.registry_dir.is_none() {
+            return Err(SpecError::SwapNeedsRegistry);
         }
 
         // -- WAN preset → fleet size --------------------------------------
@@ -750,6 +829,22 @@ impl RunSpec {
             }
         }
 
+        // Swaps target the day-one fleet (the epilogue runs after any
+        // scripted joins, but joiner-targeted swaps would tie the swap
+        // script to the membership script's success — keep them apart).
+        {
+            let mut seen: Vec<u32> = Vec::new();
+            for s in &self.swaps {
+                if (s.actor as usize) >= n_actors {
+                    return Err(SpecError::SwapActorOutOfRange { actor: s.actor, n_actors });
+                }
+                if seen.contains(&s.actor) {
+                    return Err(SpecError::DuplicateSwapActor { actor: s.actor });
+                }
+                seen.push(s.actor);
+            }
+        }
+
         let cfg = LocalRunConfig {
             model: self.model,
             algorithm: self.algorithm,
@@ -773,6 +868,9 @@ impl RunSpec {
             elastic: self.elastic,
             persist_dir: self.persist_dir,
             resume: self.resume,
+            registry_dir: self.registry_dir,
+            swaps: self.swaps,
+            publish: self.publish,
         };
         Ok(RunPlan { cfg, mode, notes, synthetic: self.synthetic })
     }
@@ -803,5 +901,28 @@ impl RunPlan {
     /// Auto-coercions `build()` performed, for surfacing to users.
     pub fn notes(&self) -> &[SpecNote] {
         &self.notes
+    }
+
+    /// Amend a not-yet-started plan with an epilogue hot-swap (the
+    /// daemon's `POST /runs/{id}/swap` on a queued run). Applies the
+    /// same rules `build()` enforces on [`RunSpec::swap_to`]: the
+    /// registry is recorded, the actor must be in the day-one fleet,
+    /// and at most one swap may target it.
+    pub fn add_swap(
+        &mut self,
+        registry: &std::path::Path,
+        actor: u32,
+        model: &str,
+        version: u64,
+    ) -> Result<(), SpecError> {
+        if (actor as usize) >= self.cfg.n_actors {
+            return Err(SpecError::SwapActorOutOfRange { actor, n_actors: self.cfg.n_actors });
+        }
+        if self.cfg.swaps.iter().any(|s| s.actor == actor) {
+            return Err(SpecError::DuplicateSwapActor { actor });
+        }
+        self.cfg.registry_dir = Some(registry.to_path_buf());
+        self.cfg.swaps.push(SwapSpec { actor, model: model.to_string(), version });
+        Ok(())
     }
 }

@@ -1,0 +1,530 @@
+//! Model-registry + hot-swap acceptance suite:
+//!
+//! (a) the swap composition `compose(invert(chain_A), chain_B)` applied
+//!     to a live policy holding A@v is **bitwise identical** to a fresh
+//!     reconstruction of B@w, property-tested over random chain pairs at
+//!     densities from 0.01% to 50%;
+//! (b) N fine-tunes published off one shared SFT base store that base
+//!     exactly once (content-addressed dedup by object count);
+//! (c) a live run hot-swaps an actor onto a published fine-tune through
+//!     both executors, shipping fewer bytes than a dense snapshot, with
+//!     the post-swap checksum verified against the published witness;
+//! (d) `gc` never collects objects a pinned in-flight swap still reads,
+//!     even across threads, and collects them once the pin drops;
+//! (e) registry/run directory confusion and unknown names/versions are
+//!     typed errors, publish is idempotent and contradictions conflict;
+//! (f) the daemon serves the registry over HTTP with the 404/409/422
+//!     error contract.
+//!
+//! Runs on the synthetic compute backend with the `syn-xs` bench layout
+//! (so daemon `POST /models` can name the same preset); all state lives
+//! under per-test temp directories.
+
+use sparrowrl::bench::scenario::bench_model;
+use sparrowrl::daemon::{http_get, http_post, AlertRules, Daemon, DaemonConfig, DaemonHandle};
+use sparrowrl::delta::{
+    apply_delta, expect_run_dir, merge_chain, policy_witness, swap_delta, ApplyMode, DurableStore,
+    ModelLayout, ModelRegistry, ParamSet, RecoveryError, SparseDelta, TensorDelta,
+};
+use sparrowrl::rt::{ExecMode, RunReport, SyntheticCompute};
+use sparrowrl::session::{Event, RunSpec, Session, SpecError};
+use sparrowrl::util::json::Json;
+use sparrowrl::util::{prop, Bf16, Rng};
+use std::fs;
+use std::path::PathBuf;
+
+fn layout() -> ModelLayout {
+    bench_model("syn-xs").expect("bench preset").layout
+}
+
+/// Unique per test (and per process) so parallel test binaries never
+/// collide; removed up front so reruns start clean.
+fn test_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sprw-regswap-{}-{name}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// All fixture runs share one seed + SFT configuration, so their
+/// post-SFT genesis policies — the registry bases — are bit-identical.
+fn spec(steps: u64) -> RunSpec {
+    RunSpec::synthetic()
+        .actors(2)
+        .steps(steps)
+        .sft_steps(2)
+        .group_size(2)
+        .max_new_tokens(5)
+        .lr_rl(1e-2) // large enough that every step flips bf16 bits
+        .segment_bytes(256)
+        .seed(71)
+        .deterministic()
+}
+
+fn run(spec: RunSpec, mode: ExecMode) -> RunReport {
+    let plan = spec.mode(mode).build().expect("valid spec");
+    Session::start_with_compute(&plan, layout(), SyntheticCompute::new(16, 8, 64))
+        .expect("start session")
+        .join()
+        .unwrap_or_else(|e| panic!("run failed: {e:#}"))
+}
+
+/// Run a spec that must fail; returns the rendered error chain.
+fn run_err(spec: RunSpec, mode: ExecMode) -> String {
+    let plan = spec.mode(mode).build().expect("valid spec");
+    match Session::start_with_compute(&plan, layout(), SyntheticCompute::new(16, 8, 64)) {
+        Ok(s) => match s.join() {
+            Ok(r) => panic!("run unexpectedly succeeded at v{}", r.final_version),
+            Err(e) => format!("{e:#}"),
+        },
+        Err(e) => format!("{e:#}"),
+    }
+}
+
+/// Run a spec collecting the full event stream alongside the report.
+fn run_with_events(spec: RunSpec, mode: ExecMode) -> (RunReport, Vec<Event>) {
+    let plan = spec.mode(mode).build().expect("valid spec");
+    let mut sess = Session::start_with_compute(&plan, layout(), SyntheticCompute::new(16, 8, 64))
+        .expect("start session");
+    let mut events = Vec::new();
+    while let Some(ev) = sess.recv() {
+        events.push(ev);
+    }
+    let report = sess.join().unwrap_or_else(|e| panic!("run failed: {e:#}"));
+    (report, events)
+}
+
+struct Fixture {
+    reg: PathBuf,
+    dir_a: PathBuf,
+    dir_b: PathBuf,
+    a: RunReport,
+    b: RunReport,
+}
+
+/// Train two fine-tunes off one shared SFT base and publish both:
+/// `ft-a` = 3 RL steps, `ft-b` = 5 RL steps, identical seed/SFT config.
+fn seed_registry(tag: &str) -> Fixture {
+    let reg = test_dir(&format!("{tag}-registry"));
+    let dir_a = test_dir(&format!("{tag}-run-a"));
+    let dir_b = test_dir(&format!("{tag}-run-b"));
+    let a = run(spec(3).persist_dir(&dir_a).publish_to(&reg, "ft-a"), ExecMode::Sequential);
+    let b = run(spec(5).persist_dir(&dir_b).publish_to(&reg, "ft-b"), ExecMode::Sequential);
+    Fixture { reg, dir_a, dir_b, a, b }
+}
+
+impl Drop for Fixture {
+    fn drop(&mut self) {
+        for d in [&self.reg, &self.dir_a, &self.dir_b] {
+            let _ = fs::remove_dir_all(d);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// (a) swap composition == fresh reconstruct, over random chain pairs
+// ---------------------------------------------------------------------
+
+/// One random Assign-mode delta v-1 -> v at roughly `density` nonzeros
+/// per tensor (not every tensor appears in every delta, like real
+/// extracts).
+fn random_delta(rng: &mut Rng, v: u64, tensors: u32, numel: u64, density: f64) -> SparseDelta {
+    let mut td = Vec::new();
+    for t in 0..tensors {
+        if rng.below(4) == 0 {
+            continue;
+        }
+        let k = ((numel as f64 * density) as usize).min(numel as usize);
+        let idx = prop::sparse_indices(rng, numel, k);
+        let vals = idx.iter().map(|_| Bf16(rng.next_u64() as u16)).collect();
+        td.push(TensorDelta { tensor: t, idx, vals });
+    }
+    SparseDelta { version: v, base_version: v - 1, model_fp: 0xF00D, mode: ApplyMode::Assign, tensors: td }
+}
+
+#[test]
+fn swap_composition_matches_fresh_reconstruct() {
+    // Densities from 0.01% to 50%, random chain lengths for both
+    // fine-tunes: retargeting a policy that replayed chain A via the
+    // composed swap delta must reproduce the exact bits of replaying
+    // chain B from the shared base.
+    let densities = [0.0001, 0.001, 0.01, 0.1, 0.5];
+    prop::check("registry swap composition is bit-exact", 40, |rng| {
+        let tensors = rng.range(1, 5) as u32;
+        let numel = rng.range(256, 8192) as u64;
+        let len_a = rng.range(1, 7) as u64;
+        let len_b = rng.range(1, 7) as u64;
+        let da = densities[rng.range(0, densities.len())];
+        let db = densities[rng.range(0, densities.len())];
+        let base = ParamSet {
+            tensors: (0..tensors)
+                .map(|_| (0..numel).map(|_| Bf16(rng.next_u64() as u16)).collect())
+                .collect(),
+        };
+        let chain_a: Vec<SparseDelta> =
+            (1..=len_a).map(|v| random_delta(rng, v, tensors, numel, da)).collect();
+        let chain_b: Vec<SparseDelta> =
+            (1..=len_b).map(|v| random_delta(rng, v, tensors, numel, db)).collect();
+        let fa = merge_chain(&chain_a).expect("chain A folds");
+        let fb = merge_chain(&chain_b).expect("chain B folds");
+
+        let mut fresh = base.clone();
+        apply_delta(&mut fresh, &fb);
+        let mut actor = base.clone();
+        apply_delta(&mut actor, &fa);
+
+        let d = swap_delta(&base, &fa, &fb).expect("swap composes");
+        assert_eq!(d.base_version, len_a, "swap spans source version");
+        assert_eq!(d.version, len_b, "swap spans target version");
+        apply_delta(&mut actor, &d);
+        assert_eq!(
+            policy_witness(&actor),
+            policy_witness(&fresh),
+            "swap not bit-exact (len {len_a}x{len_b}, densities {da}/{db})"
+        );
+    });
+}
+
+// ---------------------------------------------------------------------
+// (b) cross-run dedup: one base object, witnesses match the live runs
+// ---------------------------------------------------------------------
+
+#[test]
+fn n_fine_tunes_share_one_base_object() {
+    let fx = seed_registry("dedup");
+    let reg = ModelRegistry::open(&fx.reg).expect("open registry");
+    let ma = reg.model("ft-a").expect("ft-a published");
+    let mb = reg.model("ft-b").expect("ft-b published");
+    assert_eq!(ma.base, mb.base, "same SFT config must dedup to one shared base object");
+
+    // The pool holds exactly base + two folded artifacts, nothing else.
+    let objects: Vec<String> = fs::read_dir(fx.reg.join("objects"))
+        .expect("objects dir")
+        .map(|e| e.unwrap().file_name().into_string().unwrap())
+        .filter(|n| !n.starts_with('.'))
+        .collect();
+    assert_eq!(objects.len(), 3, "base stored once across 2 fine-tunes: {objects:?}");
+
+    // Published witnesses are the live runs' final committed checksums.
+    assert_eq!(
+        reg.witness("ft-a", 3).unwrap(),
+        fx.a.steps.last().unwrap().policy_checksum,
+        "ft-a witness"
+    );
+    assert_eq!(
+        reg.witness("ft-b", 5).unwrap(),
+        fx.b.steps.last().unwrap().policy_checksum,
+        "ft-b witness"
+    );
+    // Reconstruction reproduces (and internally verifies) the witness.
+    let policy = reg.reconstruct(&layout(), "ft-b", 5).expect("reconstruct ft-b@5");
+    assert_eq!(policy_witness(&policy), reg.witness("ft-b", 5).unwrap());
+
+    // Unknown lookups are typed, not stringly.
+    assert!(matches!(reg.witness("ghost", 1), Err(RecoveryError::UnknownModel { .. })));
+    assert!(matches!(reg.witness("ft-a", 99), Err(RecoveryError::UnknownModelVersion { .. })));
+}
+
+// ---------------------------------------------------------------------
+// (e) publish: idempotent republish, typed conflicts
+// ---------------------------------------------------------------------
+
+#[test]
+fn republish_is_idempotent_and_contradictions_conflict() {
+    let fx = seed_registry("conflict");
+    let mut reg = ModelRegistry::open(&fx.reg).expect("open registry");
+    let store_a = DurableStore::open(&fx.dir_a).expect("recover run A");
+
+    // Identical republish: nothing new, no error.
+    let rep = reg.publish(&store_a, &layout(), "ft-a", None).expect("idempotent republish");
+    assert_eq!(rep.version, 3);
+    assert!(!rep.base_was_new, "base must dedup");
+    assert!(!rep.object_was_new, "identical fold must dedup");
+
+    // A determinism replica published under a new name shares both
+    // objects with the original.
+    let rep = reg.publish(&store_a, &layout(), "ft-a-replica", None).expect("replica publish");
+    assert!(!rep.base_was_new && !rep.object_was_new, "replica stores zero new bytes");
+
+    // Same version, different bytes: a run off the same base with a
+    // different RL learning rate contradicts ft-a@3.
+    let dir_c = test_dir("conflict-run-c");
+    run(spec(3).lr_rl(5e-3).persist_dir(&dir_c), ExecMode::Sequential);
+    let store_c = DurableStore::open(&dir_c).expect("recover run C");
+    match reg.publish(&store_c, &layout(), "ft-a", None) {
+        Err(RecoveryError::RegistryConflict { model, .. }) => assert_eq!(model, "ft-a"),
+        Err(other) => panic!("expected RegistryConflict, got {other}"),
+        Ok(r) => panic!("contradicting publish must fail, got {r:?}"),
+    }
+    let _ = fs::remove_dir_all(&dir_c);
+
+    // Hostile model names never reach the filesystem.
+    match reg.publish(&store_a, &layout(), "../escape", None) {
+        Err(RecoveryError::RegistryConflict { .. }) => {}
+        Err(other) => panic!("expected RegistryConflict, got {other}"),
+        Ok(r) => panic!("path-traversal name must fail, got {r:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// (c) live hot-swap, both executors
+// ---------------------------------------------------------------------
+
+#[test]
+fn hot_swap_retargets_a_live_actor_bit_exactly() {
+    let fx = seed_registry("swap");
+    let dense_bytes = layout().total_params() * 2;
+    for mode in [ExecMode::Sequential, ExecMode::Pipelined] {
+        // Same config as run A, so the run's final policy IS ft-a@3 and
+        // `locate` finds the swap source; actor 0 is then retargeted to
+        // ft-b@5 via the composed delta. The runtime fails the run if
+        // the post-swap checksum differs from the published witness, so
+        // a surfaced Swapped event implies bit-exactness.
+        let (report, events) =
+            run_with_events(spec(3).registry(&fx.reg).swap_to(0, "ft-b", 5), mode);
+        assert_eq!(report.swaps, 1, "{mode:?}: one actor retargeted");
+        let (actor, model, version, bytes) = events
+            .iter()
+            .find_map(|e| match e {
+                Event::Swapped { actor, model, version, bytes } => {
+                    Some((*actor, model.clone(), *version, *bytes))
+                }
+                _ => None,
+            })
+            .unwrap_or_else(|| panic!("{mode:?}: no Swapped event"));
+        assert_eq!((actor, model.as_str(), version), (0, "ft-b", 5), "{mode:?}");
+        assert!(bytes > 0, "{mode:?}: swap ships a real payload");
+        assert!(
+            bytes < dense_bytes,
+            "{mode:?}: swap payload {bytes} must beat the dense snapshot {dense_bytes}"
+        );
+    }
+}
+
+#[test]
+fn hot_swap_of_an_unpublished_policy_is_a_typed_failure() {
+    // A valid-but-empty registry: the run's final policy matches no
+    // published model, so the swap epilogue must fail actionably.
+    let reg_dir = test_dir("unpub-registry");
+    ModelRegistry::open(&reg_dir).expect("init registry");
+    let err = run_err(spec(3).registry(&reg_dir).swap_to(0, "ft-b", 5), ExecMode::Sequential);
+    assert!(err.contains("publish this configuration first"), "unhelpful error: {err}");
+    let _ = fs::remove_dir_all(&reg_dir);
+
+    // Published source, unknown target: the typed registry error
+    // surfaces through the run failure.
+    let fx = seed_registry("unpub-target");
+    let err = run_err(spec(3).registry(&fx.reg).swap_to(0, "ghost", 1), ExecMode::Sequential);
+    assert!(err.contains("ghost"), "unhelpful error: {err}");
+}
+
+#[test]
+fn swap_spec_guards_reject_unsound_combinations() {
+    assert_eq!(
+        spec(3).swap_to(0, "m", 1).build().unwrap_err(),
+        SpecError::SwapNeedsRegistry
+    );
+    assert_eq!(
+        spec(3).registry("/tmp/never-used").swap_to(9, "m", 1).build().unwrap_err(),
+        SpecError::SwapActorOutOfRange { actor: 9, n_actors: 2 }
+    );
+    assert_eq!(
+        spec(3)
+            .registry("/tmp/never-used")
+            .swap_to(0, "m", 1)
+            .swap_to(0, "m2", 2)
+            .build()
+            .unwrap_err(),
+        SpecError::DuplicateSwapActor { actor: 0 }
+    );
+}
+
+// ---------------------------------------------------------------------
+// (d) gc vs in-flight swap pins, across threads
+// ---------------------------------------------------------------------
+
+#[test]
+fn gc_never_collects_objects_a_pinned_swap_still_reads() {
+    let fx = seed_registry("gc");
+    let mut reg = ModelRegistry::open(&fx.reg).expect("open registry");
+    let src_obj = reg.model("ft-a").unwrap().versions[0].object.clone();
+    let src_path = fx.reg.join("objects").join(format!("{src_obj}.sprw"));
+
+    // An in-flight swap pins base + both folded artifacts...
+    let pin = reg.pin_swap(("ft-a", 3), ("ft-b", 5)).expect("pin swap objects");
+    assert_eq!(reg.pinned().len(), 3, "base + source fold + target fold");
+    let composed =
+        reg.compose_swap(&layout(), ("ft-a", 3), ("ft-b", 5)).expect("compose swap");
+    // ...then the source model is unpublished mid-swap, and gc runs on
+    // another thread while the pin is still held on this one.
+    reg.unpublish("ft-a").expect("unpublish source");
+    let sweeper = std::thread::spawn(move || {
+        let stats = reg.gc().expect("gc with pins held");
+        (reg, stats)
+    });
+    let (mut reg, stats) = sweeper.join().expect("gc thread");
+    assert_eq!(stats.collected, 0, "nothing may be collected mid-swap: {stats:?}");
+    assert_eq!(stats.retained_pinned, 1, "the orphaned source fold survives on its pin");
+    assert!(src_path.exists(), "pinned object file must survive gc");
+
+    // The composed delta still lands bit-exactly on a policy holding
+    // ft-a@3 (reconstructed from the source run's durable store).
+    let store_a = DurableStore::open(&fx.dir_a).expect("recover run A");
+    let mut actor = store_a.reconstruct(&layout(), 3).expect("reconstruct A@3");
+    apply_delta(&mut actor, &composed);
+    assert_eq!(
+        policy_witness(&actor),
+        reg.witness("ft-b", 5).unwrap(),
+        "pinned swap composition stays bit-exact after unpublish + gc"
+    );
+
+    // Dropping the pin releases the object to the next sweep.
+    drop(pin);
+    let stats = reg.gc().expect("gc after pin release");
+    assert_eq!(stats.collected, 1, "{stats:?}");
+    assert_eq!(stats.retained_pinned, 0, "{stats:?}");
+    assert!(!src_path.exists(), "unpinned orphan must be collected");
+    // ft-b and the shared base remain fully servable.
+    let policy = reg.reconstruct(&layout(), "ft-b", 5).expect("ft-b survives gc");
+    assert_eq!(policy_witness(&policy), reg.witness("ft-b", 5).unwrap());
+}
+
+// ---------------------------------------------------------------------
+// (e) directory-kind confusion is typed at the boundary
+// ---------------------------------------------------------------------
+
+#[test]
+fn registry_and_run_dirs_are_mutually_typed() {
+    let dir = test_dir("dirs-run");
+    run(spec(2).persist_dir(&dir), ExecMode::Sequential);
+    // A durable run dir is not a registry...
+    match ModelRegistry::open(&dir) {
+        Err(RecoveryError::NotARegistry { path }) => assert_eq!(path, dir),
+        Err(other) => panic!("expected NotARegistry, got {other}"),
+        Ok(_) => panic!("a run dir must not open as a registry"),
+    }
+    // ...but it is a run dir; a registry is the opposite.
+    expect_run_dir(&dir).expect("run dir passes the run check");
+    let reg_dir = test_dir("dirs-reg");
+    ModelRegistry::open(&reg_dir).expect("init registry");
+    assert!(matches!(expect_run_dir(&reg_dir), Err(RecoveryError::NotARun { .. })));
+    let _ = fs::remove_dir_all(&dir);
+    let _ = fs::remove_dir_all(&reg_dir);
+}
+
+// ---------------------------------------------------------------------
+// (f) daemon HTTP surface
+// ---------------------------------------------------------------------
+
+fn daemon_with(registry: Option<PathBuf>, max_sessions: usize, actor_pool: usize) -> DaemonHandle {
+    Daemon::spawn(DaemonConfig {
+        addr: "127.0.0.1:0".to_string(), // ephemeral port per test
+        max_sessions,
+        actor_pool,
+        rules: AlertRules::default(),
+        registry,
+        ..DaemonConfig::default()
+    })
+    .expect("spawn daemon")
+}
+
+fn spec_json(seed: u64, steps: u64) -> String {
+    format!(
+        "{{\"model\":\"syn-xs\",\"steps\":{steps},\"sft_steps\":1,\"actors\":2,\
+         \"group_size\":2,\"max_new_tokens\":5,\"seed\":{seed}}}"
+    )
+}
+
+#[test]
+fn daemon_without_a_registry_answers_409() {
+    let handle = daemon_with(None, 2, 8);
+    let addr = handle.addr();
+    let resp = http_get(addr, "/models").expect("GET /models");
+    assert_eq!(resp.status, 409, "{}", resp.body);
+    assert!(resp.body.contains("NoRegistry"), "{}", resp.body);
+    let resp = http_post(addr, "/models", "{}").expect("POST /models");
+    assert_eq!(resp.status, 409, "{}", resp.body);
+    assert!(resp.body.contains("NoRegistry"), "{}", resp.body);
+    handle.shutdown();
+}
+
+#[test]
+fn daemon_serves_models_and_swaps_with_typed_errors() {
+    let fx = seed_registry("daemon");
+    let handle = daemon_with(Some(fx.reg.clone()), 1, 8);
+    let addr = handle.addr();
+
+    // GET /models: the published namespace.
+    let resp = http_get(addr, "/models").expect("GET /models");
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let j = Json::parse(&resp.body).expect("models JSON");
+    let models = j.get("models").and_then(Json::as_arr).expect("models array");
+    let names: Vec<&str> =
+        models.iter().filter_map(|m| m.get("name").and_then(Json::as_str)).collect();
+    assert_eq!(names, ["ft-a", "ft-b"], "{}", resp.body);
+
+    // POST /models: publishing the same run dir under a new name dedups
+    // every byte against the pool.
+    let body = format!(
+        "{{\"run_dir\":{:?},\"name\":\"ft-a2\",\"model\":\"syn-xs\"}}",
+        fx.dir_a.display().to_string()
+    );
+    let resp = http_post(addr, "/models", &body).expect("POST /models");
+    assert_eq!(resp.status, 201, "{}", resp.body);
+    let j = Json::parse(&resp.body).expect("publish JSON");
+    assert_eq!(j.get("base_was_new").and_then(Json::as_bool), Some(false), "{}", resp.body);
+    assert_eq!(j.get("object_was_new").and_then(Json::as_bool), Some(false), "{}", resp.body);
+
+    // POST /models with the registry itself as run_dir: typed 409.
+    let body = format!(
+        "{{\"run_dir\":{:?},\"name\":\"bad\",\"model\":\"syn-xs\"}}",
+        fx.reg.display().to_string()
+    );
+    let resp = http_post(addr, "/models", &body).expect("POST /models");
+    assert_eq!(resp.status, 409, "{}", resp.body);
+    assert!(resp.body.contains("NotARun"), "{}", resp.body);
+
+    // Occupy the single session slot, then queue a second run to amend.
+    let resp = http_post(addr, "/runs", &spec_json(1, 60)).expect("submit long run");
+    assert_eq!(resp.status, 201, "{}", resp.body);
+    let long_id = Json::parse(&resp.body)
+        .ok()
+        .and_then(|j| j.get("id").and_then(Json::as_str).map(str::to_string))
+        .expect("long run id");
+    let resp = http_post(addr, "/runs", &spec_json(2, 2)).expect("submit queued run");
+    assert_eq!(resp.status, 201, "{}", resp.body);
+    let queued_id = Json::parse(&resp.body)
+        .ok()
+        .and_then(|j| j.get("id").and_then(Json::as_str).map(str::to_string))
+        .expect("queued run id");
+
+    let swap = |id: &str, body: &str| {
+        http_post(addr, &format!("/runs/{id}/swap"), body).expect("POST swap")
+    };
+    // Unknown fine-tune / version: 404 regardless of run phase.
+    let resp = swap(&queued_id, "{\"actor\":0,\"model\":\"ghost\",\"version\":1}");
+    assert_eq!(resp.status, 404, "{}", resp.body);
+    assert!(resp.body.contains("UnknownModel"), "{}", resp.body);
+    let resp = swap(&queued_id, "{\"actor\":0,\"model\":\"ft-b\",\"version\":99}");
+    assert_eq!(resp.status, 404, "{}", resp.body);
+    assert!(resp.body.contains("UnknownModelVersion"), "{}", resp.body);
+    // Legal amendment of a queued run: 200.
+    let resp = swap(&queued_id, "{\"actor\":0,\"model\":\"ft-b\",\"version\":5}");
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    // Plan rules still apply: 422 carrying the SpecError name.
+    let resp = swap(&queued_id, "{\"actor\":0,\"model\":\"ft-a\",\"version\":3}");
+    assert_eq!(resp.status, 422, "{}", resp.body);
+    assert!(resp.body.contains("DuplicateSwapActor"), "{}", resp.body);
+    let resp = swap(&queued_id, "{\"actor\":9,\"model\":\"ft-b\",\"version\":5}");
+    assert_eq!(resp.status, 422, "{}", resp.body);
+    assert!(resp.body.contains("SwapActorOutOfRange"), "{}", resp.body);
+
+    // A no-longer-queued run refuses amendment: abort it, then 409.
+    let resp = http_post(addr, &format!("/runs/{queued_id}/abort"), "").expect("abort queued");
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let resp = swap(&queued_id, "{\"actor\":1,\"model\":\"ft-b\",\"version\":5}");
+    assert_eq!(resp.status, 409, "{}", resp.body);
+    assert!(resp.body.contains("NotQueued"), "{}", resp.body);
+
+    let _ = http_post(addr, &format!("/runs/{long_id}/abort"), "");
+    handle.shutdown();
+}
